@@ -1,0 +1,43 @@
+//! Compare all six freezing methods on the real engine (small config):
+//! throughput, κ, freeze ratio, and final loss side by side.
+//!
+//!     make artifacts && cargo run --release --example freeze_comparison
+
+use timelyfreeze::engine::{train, EngineConfig};
+use timelyfreeze::freeze::PhaseConfig;
+use timelyfreeze::types::FreezeMethod;
+use timelyfreeze::util::table::Table;
+
+fn main() {
+    let dir = std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    let mut t = Table::new(
+        "real-engine comparison (8 blocks / 4 stages / 1F1B / 48 steps)",
+        &["Method", "tok/s", "steady tok/s", "κ", "Frz %", "final loss"],
+    );
+    for method in FreezeMethod::all() {
+        let mut cfg = EngineConfig::quick_defaults(dir.clone());
+        cfg.steps = 48;
+        cfg.phases = PhaseConfig::new(6, 14, 24);
+        cfg.method = method;
+        cfg.check_interval = 4;
+        match train(&cfg) {
+            Ok(r) => t.row(vec![
+                method.name().to_string(),
+                format!("{:.0}", r.throughput),
+                format!("{:.0}", r.steady_throughput),
+                format!("{:.3}", r.kappa()),
+                format!("{:.1}", r.freeze_ratio),
+                format!("{:.3}", r.final_loss),
+            ]),
+            Err(e) => t.row(vec![
+                method.name().to_string(),
+                format!("error: {e}"),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+            ]),
+        }
+    }
+    println!("{}", t.render());
+}

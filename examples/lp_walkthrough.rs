@@ -1,0 +1,61 @@
+//! Figure 2 walkthrough: the paper's method-overview example — monitor
+//! upper/lower execution bounds, build the DAG, solve the LP, and show
+//! the batch time dropping to ≈70% with an average expected freeze
+//! ratio around 0.6.
+//!
+//!     cargo run --release --example lp_walkthrough
+
+use timelyfreeze::graph::pipeline::PipelineDag;
+use timelyfreeze::lp::{solve_freeze_lp, FreezeLpInput, DEFAULT_LAMBDA};
+use timelyfreeze::schedule::Schedule;
+use timelyfreeze::types::{ActionKind, ScheduleKind};
+use timelyfreeze::util::table::Table;
+
+fn main() {
+    // The white-box setting of Figure 2: a small GPipe pipeline whose
+    // backward actions dominate the critical path.
+    let schedule = Schedule::build(ScheduleKind::GPipe, 4, 4, 1);
+    let pdag = PipelineDag::from_schedule(&schedule);
+
+    // "Monitoring" produced these bounds: backward is 2× forward and
+    // ~70% of it is parameter-gradient work.
+    let w_max = pdag.weights(|a| match a.kind {
+        ActionKind::Forward => 1.0,
+        _ => 2.0,
+    });
+    let w_min = pdag.weights(|a| match a.kind {
+        ActionKind::Forward => 1.0,
+        _ => 0.6,
+    });
+
+    println!("Phase II — Freeze Ratio Formulation (§3.2)\n");
+    let sol = solve_freeze_lp(&FreezeLpInput {
+        pdag: &pdag,
+        w_min: &w_min,
+        w_max: &w_max,
+        r_max: 0.8,
+        lambda: DEFAULT_LAMBDA,
+    })
+    .unwrap();
+
+    let mut t = Table::new(
+        "expected freeze ratios r* per backward action",
+        &["Action", "r*", "w (opt)", "[w_min, w_max]"],
+    );
+    for id in pdag.action_nodes() {
+        let a = pdag.node_action(id).unwrap();
+        if a.kind.freezable() {
+            t.row(vec![
+                a.to_string(),
+                format!("{:.2}", sol.ratios[id]),
+                format!("{:.2}", sol.w[id]),
+                format!("[{:.1}, {:.1}]", w_min[id], w_max[id]),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("batch execution time: {:.2} → {:.2} ({:.0}% of original)",
+        sol.p_d_max, sol.batch_time, 100.0 * sol.kappa());
+    println!("average expected freeze ratio: {:.2}", sol.mean_freezable_ratio(&pdag));
+    assert!(sol.kappa() < 0.85, "the Figure 2 setting must show a clear win");
+}

@@ -1,0 +1,113 @@
+//! End-to-end validation (DESIGN.md §2, last row): train a transformer on
+//! the real three-layer stack — Rust coordinator (L3) driving AOT-lowered
+//! JAX artifacts (L2) containing Pallas kernels (L1) over PJRT — on a
+//! synthetic tiny corpus, with TimelyFreeze's full phase machine
+//! (warm-up → monitoring → LP → progressive freezing) and real wall-clock
+//! freezing gains. Logs the loss curve and writes it to bench_out/.
+//!
+//!     make artifacts && cargo run --release --example train_e2e
+//!     # ~100M-parameter variant (rebuild artifacts first):
+//!     #   make artifacts D_MODEL=768 D_FF=3072 VOCAB=8192
+//!     #   cargo run --release --example train_e2e -- --large
+//!
+//! Flags: --steps N, --method NAME, --baseline (also run No-Freezing for
+//! a paired comparison), --large (12 blocks — combine with the wider
+//! artifact build above for ~126M params).
+
+use timelyfreeze::engine::{train, EngineConfig};
+use timelyfreeze::freeze::PhaseConfig;
+use timelyfreeze::metrics::Recorder;
+use timelyfreeze::types::FreezeMethod;
+use timelyfreeze::util::json::Json;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |name: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+    let large = args.iter().any(|a| a == "--large");
+    let with_baseline = args.iter().any(|a| a == "--baseline");
+
+    let dir = std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    let mut cfg = EngineConfig::quick_defaults(dir);
+    cfg.blocks = if large { 12 } else { 8 };
+    cfg.stages = 4;
+    cfg.microbatches = 4;
+    cfg.steps = get("--steps").and_then(|s| s.parse().ok()).unwrap_or(if large { 60 } else { 300 });
+    cfg.method = get("--method")
+        .and_then(|m| FreezeMethod::parse(&m))
+        .unwrap_or(FreezeMethod::TimelyFreeze);
+    // Paper-shaped phases scaled to the run length.
+    let s = cfg.steps;
+    cfg.phases = PhaseConfig::new((s / 10).max(3), (s / 5).max(6), (s * 3 / 10).max(9));
+    cfg.corpus_cycle = 16;
+
+    let manifest = timelyfreeze::runtime::Manifest::load(&cfg.artifacts_dir)
+        .expect("run `make artifacts` first");
+    let c = &manifest.config;
+    let block = c
+        .matrix_shapes
+        .values()
+        .map(|&(a, b)| a * b)
+        .sum::<usize>()
+        + 2 * c.d_model;
+    let total = c.vocab * c.d_model * 2 + cfg.blocks * block;
+    println!(
+        "model: d={} ff={} vocab={} × {} blocks → {:.1}M params | {} stages, {} microbatches, {} steps, {}",
+        c.d_model, c.d_ff, c.vocab, cfg.blocks,
+        total as f64 / 1e6, cfg.stages, cfg.microbatches, cfg.steps, cfg.method.name()
+    );
+
+    let mut rec = Recorder::default_dir();
+    let mut run = |method: FreezeMethod| {
+        let mut c2 = cfg.clone();
+        c2.method = method;
+        println!("\n=== {} ===", method.name());
+        let t0 = std::time::Instant::now();
+        let report = train(&c2).expect("training failed");
+        let wall = t0.elapsed().as_secs_f64();
+        for p in &report.loss_curve {
+            if p.step == 1 || p.step % (cfg.steps / 20).max(1) == 0 {
+                println!(
+                    "  step {:>5}  loss {:>7.4}  afr {:>5.2}  step {:>7.0} ms",
+                    p.step, p.loss, p.mean_afr, p.step_time * 1e3
+                );
+            }
+            rec.push(
+                &format!("e2e_loss_{}", method.name().replace([' ', '+'], "_")),
+                Json::obj(vec![
+                    ("step", Json::num(p.step as f64)),
+                    ("loss", Json::num(p.loss)),
+                    ("afr", Json::num(p.mean_afr)),
+                    ("step_time", Json::num(p.step_time)),
+                ]),
+            );
+        }
+        println!(
+            "  wall {:.1}s | throughput {:.0} tok/s (steady {:.0}) | κ = {:.3} | freeze ratio {:.1}% | loss {:.3} → {:.3}",
+            wall,
+            report.throughput,
+            report.steady_throughput,
+            report.kappa(),
+            report.freeze_ratio,
+            report.initial_loss,
+            report.final_loss
+        );
+        report
+    };
+
+    let ours = run(cfg.method);
+    if with_baseline {
+        let base = run(FreezeMethod::NoFreezing);
+        println!(
+            "\nthroughput gain vs No-Freezing: {:+.1}% (steady {:+.1}%) | Δfinal-loss {:+.4}",
+            100.0 * (ours.throughput / base.throughput - 1.0),
+            100.0 * (ours.steady_throughput / base.steady_throughput - 1.0),
+            ours.final_loss - base.final_loss
+        );
+    }
+    rec.flush().unwrap();
+    println!("\nloss curves recorded under bench_out/.");
+}

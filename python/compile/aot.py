@@ -1,0 +1,113 @@
+"""AOT pipeline: lower every artifact of ``model.py`` to HLO **text** and
+write a manifest the Rust runtime consumes.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from ``make artifacts``):
+    cd python && python -m compile.aot --out-dir ../artifacts \
+        [--d-model 256 --n-heads 8 --d-ff 1024 --vocab 4096 \
+         --seq 128 --microbatch 1]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import (
+    ARTIFACT_BUILDERS,
+    MASKED_NAMES,
+    PARAM_NAMES,
+    ModelConfig,
+    example_inputs,
+)
+
+
+def to_hlo_text(fn, example_args):
+    """Lower a function to XLA HLO text via StableHLO (return_tuple=True:
+    the Rust side unwraps with ``to_tuple``)."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def describe(arrays):
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)}
+        for a in arrays
+    ]
+
+
+def build_all(cfg: ModelConfig, out_dir: str, kinds=None):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "config": {
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len,
+            "microbatch": cfg.microbatch,
+            "param_names": list(PARAM_NAMES),
+            "masked_names": list(MASKED_NAMES),
+            "mask_shapes": {n: list(cfg.mask_shape(n)) for n in MASKED_NAMES},
+            "matrix_shapes": {n: list(cfg.matrix_shape(n)) for n in MASKED_NAMES},
+        },
+        "artifacts": {},
+    }
+    for kind, builder in ARTIFACT_BUILDERS.items():
+        if kinds and kind not in kinds:
+            continue
+        fn = builder(cfg)
+        args = example_inputs(cfg, kind)
+        text = to_hlo_text(fn, args)
+        fname = f"{kind}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *args)
+        outs = outs if isinstance(outs, (tuple, list)) else (outs,)
+        manifest["artifacts"][kind] = {
+            "file": fname,
+            "inputs": describe(args),
+            "outputs": describe(list(outs)),
+        }
+        print(f"  lowered {kind:16} ({len(text) / 1024:.0f} KiB)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {out_dir}/manifest.json")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--n-heads", type=int, default=8)
+    ap.add_argument("--d-ff", type=int, default=1024)
+    ap.add_argument("--vocab", type=int, default=4096)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--only", nargs="*", help="subset of artifact kinds")
+    args = ap.parse_args()
+    cfg = ModelConfig(
+        d_model=args.d_model,
+        n_heads=args.n_heads,
+        d_ff=args.d_ff,
+        vocab=args.vocab,
+        seq_len=args.seq,
+        microbatch=args.microbatch,
+    )
+    print(f"AOT-lowering artifacts for {cfg} → {args.out_dir}")
+    build_all(cfg, args.out_dir, kinds=args.only)
+
+
+if __name__ == "__main__":
+    main()

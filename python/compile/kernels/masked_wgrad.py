@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: block-masked weight gradient — the paper's freezing
+mechanism expressed at kernel level.
+
+``dW = xᵀ @ g`` computed tile-by-tile over a (d_in/B_i, d_out/B_o) grid;
+a per-tile freeze mask gates the MXU work: frozen tiles write zeros and
+skip the GEMM via ``pl.when``. On a real TPU the skipped tiles save both
+MXU cycles and the HBM→VMEM streaming of their x/g columns; under
+``interpret=True`` (mandatory on CPU-PJRT, see attention.py) the saving
+is structural only — wall-clock freezing gains on the CPU path come from
+the Rust engine skipping whole wgrad artifact calls per layer.
+
+VMEM per grid step (f32): T·B_i (x tile) + T·B_o (g tile) + B_i·B_o
+(out). At T = 4096 chunks this exceeds VMEM, so the token axis would be
+chunked on real hardware; the e2e configs here keep T ≤ 2048 which fits
+(< 4 MiB).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wgrad_kernel(mask_ref, x_ref, g_ref, o_ref):
+    frozen = mask_ref[0, 0] != 0.0
+
+    @pl.when(jnp.logical_not(frozen))
+    def _compute():
+        x = x_ref[...]  # (tokens, block_in)
+        g = g_ref[...]  # (tokens, block_out)
+        o_ref[...] = (x.T @ g).astype(o_ref.dtype)
+
+    @pl.when(frozen)
+    def _skip():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+def pick_block(dim, preferred=128):
+    """Largest divisor of ``dim`` that is ≤ preferred (MXU-aligned when
+    the dim allows)."""
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def masked_wgrad(x, g, mask, *, block_in=None, block_out=None):
+    """Masked weight gradient.
+
+    Args:
+        x: (tokens, d_in) layer-input activations.
+        g: (tokens, d_out) output gradient.
+        mask: (d_in // block_in, d_out // block_out) float32; nonzero
+            entries mark *frozen* tiles (gradient forced to zero).
+
+    Returns:
+        (d_in, d_out) gradient with frozen tiles zeroed.
+    """
+    tokens, d_in = x.shape
+    tokens_g, d_out = g.shape
+    assert tokens == tokens_g, f"token mismatch {tokens} vs {tokens_g}"
+    block_in = block_in or pick_block(d_in)
+    block_out = block_out or pick_block(d_out)
+    assert d_in % block_in == 0 and d_out % block_out == 0
+    gi, go = d_in // block_in, d_out // block_out
+    assert mask.shape == (gi, go), f"mask shape {mask.shape} != ({gi}, {go})"
+
+    return pl.pallas_call(
+        functools.partial(_wgrad_kernel),
+        grid=(gi, go),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((tokens, block_in), lambda i, j: (0, i)),
+            pl.BlockSpec((tokens, block_out), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_in, block_out), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d_in, d_out), x.dtype),
+        interpret=True,
+    )(mask, x, g)

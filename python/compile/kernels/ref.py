@@ -1,0 +1,53 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the kernel tests (and hypothesis sweeps)
+compare against; they are also used by the L2 model tests to validate the
+full block forward/backward against plain autodiff.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, causal=True):
+    """Plain softmax attention.
+
+    Args:
+        q, k, v: (heads, seq, head_dim) arrays.
+        causal: apply a lower-triangular mask.
+
+    Returns:
+        (heads, seq, head_dim) attention output.
+    """
+    _, s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask[None, :, :], scores, jnp.asarray(-1e30, q.dtype))
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v)
+
+
+def ref_masked_wgrad(x, g, mask, block_in, block_out):
+    """Block-masked weight gradient: dW = xᵀ @ g with frozen tiles zeroed.
+
+    Args:
+        x: (tokens, d_in) activations.
+        g: (tokens, d_out) output gradients.
+        mask: (d_in // block_in, d_out // block_out); nonzero = frozen.
+        block_in, block_out: tile sizes.
+
+    Returns:
+        (d_in, d_out) masked gradient.
+    """
+    dw = x.T @ g
+    keep = (mask == 0).astype(dw.dtype)
+    expanded = jnp.kron(keep, jnp.ones((block_in, block_out), dtype=dw.dtype))
+    return dw * expanded
+
+
+def ref_rms_norm(x, scale, eps=1e-6):
+    """RMSNorm oracle: x / rms(x) * scale."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * scale

@@ -1,0 +1,324 @@
+"""L2: LLaMA-style transformer decomposed into per-layer AOT artifacts.
+
+The model is expressed as *reusable layer kinds* — every transformer
+block shares one shape, so three HLO artifacts (``block_fwd``,
+``block_dgrad``, ``block_bwd``/``block_wgrad``) serve every layer of
+every pipeline stage, plus embedding and head/loss artifacts. This is
+the decomposition the paper's Figure 3 relies on: the backward splits
+into the activation-gradient part (B — ``block_dgrad``, irreducible
+under freezing) and the parameter-gradient part (W — ``block_wgrad``,
+what freezing removes).
+
+Freezing reaches the kernels through ``dense``: a ``custom_vjp`` matmul
+whose backward routes dW through the L1 ``masked_wgrad`` Pallas kernel
+with a per-tile freeze mask supplied *at run time* by the Rust
+coordinator. Forward attention goes through the L1 ``flash_attention``
+kernel.
+
+Everything here is build-time only: ``aot.py`` lowers these functions to
+HLO text once; Python never runs on the training path.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import attention
+from compile.kernels.masked_wgrad import masked_wgrad, pick_block
+
+# Canonical flattened parameter order of a block — the contract with the
+# Rust runtime (recorded in the AOT manifest).
+PARAM_NAMES = ("wq", "wk", "wv", "wo", "w1", "w2", "w3", "norm1", "norm2")
+# The dense matrices that take freeze masks, in signature order.
+MASKED_NAMES = ("wq", "wk", "wv", "wo", "w1", "w2", "w3")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Shape of one transformer block (shared across all layers)."""
+
+    d_model: int = 256
+    n_heads: int = 8
+    d_ff: int = 1024
+    vocab: int = 4096
+    seq_len: int = 128
+    microbatch: int = 1
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def tokens(self):
+        return self.microbatch * self.seq_len
+
+    def mask_shape(self, name):
+        """Freeze-mask tile grid of one dense matrix."""
+        din, dout = self.matrix_shape(name)
+        return (din // pick_block(din), dout // pick_block(dout))
+
+    def matrix_shape(self, name):
+        d, f = self.d_model, self.d_ff
+        return {
+            "wq": (d, d),
+            "wk": (d, d),
+            "wv": (d, d),
+            "wo": (d, d),
+            "w1": (d, f),
+            "w2": (f, d),
+            "w3": (d, f),
+        }[name]
+
+
+# --------------------------------------------------------------------------
+# Masked dense layer (custom VJP → L1 masked_wgrad kernel)
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def dense(x, w, mask):
+    """``x @ w`` whose weight gradient is tile-masked by ``mask``.
+
+    x: (..., d_in); w: (d_in, d_out); mask: tile grid (see
+    ``ModelConfig.mask_shape``), nonzero = frozen.
+    """
+    return x @ w
+
+
+def _dense_fwd(x, w, mask):
+    return x @ w, (x, w, mask)
+
+
+def _dense_bwd(res, g):
+    x, w, mask = res
+    gx = g @ w.T
+    x2 = x.reshape(-1, x.shape[-1])
+    g2 = g.reshape(-1, g.shape[-1])
+    gw = masked_wgrad(x2, g2, mask)
+    return gx, gw, jnp.zeros_like(mask)
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+# --------------------------------------------------------------------------
+# Block primitives
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-6):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * scale
+
+
+def rope(x, positions):
+    """Rotary position embedding over the last axis (pairs convention)."""
+    *_, seq, d = x.shape
+    assert d % 2 == 0
+    half = d // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def block_fwd(params, masks, x, cfg: ModelConfig):
+    """One pre-norm LLaMA block: attention + SwiGLU, residual wired.
+
+    params: tuple in ``PARAM_NAMES`` order.
+    masks: tuple in ``MASKED_NAMES`` order (forward ignores their values —
+    they only steer the backward's masked wgrad).
+    x: (microbatch, seq, d_model).
+    """
+    wq, wk, wv, wo, w1, w2, w3, n1, n2 = params
+    mq, mk, mv, mo, m1, m2, m3 = masks
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    # --- attention ---
+    hidden = rms_norm(x, n1)
+    q = dense(hidden, wq, mq)
+    k = dense(hidden, wk, mk)
+    v = dense(hidden, wv, mv)
+
+    def split(t):
+        return t.reshape(b, s, h, hd).transpose(0, 2, 1, 3)  # (b, h, s, hd)
+
+    positions = jnp.arange(s)
+    q = rope(split(q), positions)
+    k = rope(split(k), positions)
+    v = split(v)
+    # Fold batch into heads for the flash kernel.
+    fold = lambda t: t.reshape(b * h, s, hd)
+    attn = attention(fold(q), fold(k), fold(v))
+    attn = attn.reshape(b, h, s, hd).transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + dense(attn, wo, mo)
+
+    # --- SwiGLU MLP ---
+    hidden = rms_norm(x, n2)
+    ff = silu(dense(hidden, w1, m1)) * dense(hidden, w3, m3)
+    return x + dense(ff, w2, m2)
+
+
+def ones_masks(cfg: ModelConfig, frozen=False):
+    """All-tiles mask tuple (0 = live, 1 = frozen)."""
+    fill = 1.0 if frozen else 0.0
+    return tuple(
+        jnp.full(cfg.mask_shape(name), fill, dtype=jnp.float32) for name in MASKED_NAMES
+    )
+
+
+# --------------------------------------------------------------------------
+# Artifact entry points (flat signatures — the Rust runtime contract)
+# --------------------------------------------------------------------------
+
+
+def artifact_block_fwd(cfg: ModelConfig):
+    def fn(*args):
+        params, x = args[:9], args[9]
+        return (block_fwd(params, ones_masks(cfg), x, cfg),)
+
+    return fn
+
+
+def artifact_block_dgrad(cfg: ModelConfig):
+    """gx only — the Zero-Bubble "B" unit. JAX dead-code-eliminates the
+    parameter-gradient computations, so this artifact is genuinely
+    cheaper than the full backward."""
+
+    def fn(*args):
+        params, x, gy = args[:9], args[9], args[10]
+        _, vjp = jax.vjp(lambda xx: block_fwd(params, ones_masks(cfg), xx, cfg), x)
+        return (vjp(gy)[0],)
+
+    return fn
+
+
+def artifact_block_wgrad(cfg: ModelConfig):
+    """Parameter gradients only — the Zero-Bubble "W" unit, with runtime
+    freeze masks routed to the masked_wgrad kernel."""
+
+    def fn(*args):
+        params, masks, x, gy = args[:9], args[9:16], args[16], args[17]
+        _, vjp = jax.vjp(lambda p: block_fwd(p, masks, x, cfg), params)
+        return tuple(vjp(gy)[0])
+
+    return fn
+
+
+def artifact_block_bwd(cfg: ModelConfig):
+    """Combined backward: (gx, param grads) in one pass — used by
+    GPipe/1F1B-style combined-backward schedules."""
+
+    def fn(*args):
+        params, masks, x, gy = args[:9], args[9:16], args[16], args[17]
+        _, vjp = jax.vjp(
+            lambda p, xx: block_fwd(p, masks, xx, cfg), params, x
+        )
+        gparams, gx = vjp(gy)
+        return (gx,) + tuple(gparams)
+
+    return fn
+
+
+def artifact_embed_fwd(cfg: ModelConfig):
+    def fn(emb, tokens):
+        return (emb[tokens],)
+
+    return fn
+
+
+def artifact_embed_wgrad(cfg: ModelConfig):
+    def fn(tokens, gx):
+        gemb = jnp.zeros((cfg.vocab, cfg.d_model), dtype=gx.dtype)
+        return (gemb.at[tokens].add(gx),)
+
+    return fn
+
+
+def _ce_loss(w_head, x, targets):
+    logits = x @ w_head  # (b, s, vocab)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def artifact_head_loss_grad(cfg: ModelConfig):
+    """Loss + gradients w.r.t. (x, w_head) in one artifact — the last
+    pipeline stage's fused head+loss backward."""
+
+    def fn(w_head, x, targets):
+        loss, (gw, gx) = jax.value_and_grad(_ce_loss, argnums=(0, 1))(
+            w_head, x, targets
+        )
+        return loss, gx, gw
+
+    return fn
+
+
+def artifact_head_loss_eval(cfg: ModelConfig):
+    def fn(w_head, x, targets):
+        return (_ce_loss(w_head, x, targets),)
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization (used by tests and by the Rust engine's
+# deterministic init — both sides generate identical trees from the seed)
+# --------------------------------------------------------------------------
+
+
+def init_block_params(cfg: ModelConfig, key):
+    keys = jax.random.split(key, 7)
+    shapes = [cfg.matrix_shape(n) for n in MASKED_NAMES]
+    mats = [
+        jax.random.normal(k, s, jnp.float32) * (s[0] ** -0.5)
+        for k, s in zip(keys, shapes)
+    ]
+    norms = [jnp.ones((cfg.d_model,), jnp.float32)] * 2
+    return tuple(mats) + tuple(norms)
+
+
+def example_inputs(cfg: ModelConfig, kind, key=None):
+    """Example (shape-defining) inputs of each artifact kind."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    params = init_block_params(cfg, key)
+    x = jnp.zeros((cfg.microbatch, cfg.seq_len, cfg.d_model), jnp.float32)
+    gy = x
+    masks = ones_masks(cfg)
+    emb = jnp.zeros((cfg.vocab, cfg.d_model), jnp.float32)
+    tokens = jnp.zeros((cfg.microbatch, cfg.seq_len), jnp.int32)
+    if kind == "block_fwd":
+        return (*params, x)
+    if kind == "block_dgrad":
+        return (*params, x, gy)
+    if kind in ("block_wgrad", "block_bwd"):
+        return (*params, *masks, x, gy)
+    if kind == "embed_fwd":
+        return (emb, tokens)
+    if kind == "embed_wgrad":
+        return (tokens, x)
+    if kind in ("head_loss_grad", "head_loss_eval"):
+        w_head = jnp.zeros((cfg.d_model, cfg.vocab), jnp.float32)
+        return (w_head, x, tokens)
+    raise ValueError(f"unknown artifact kind {kind}")
+
+
+ARTIFACT_BUILDERS = {
+    "block_fwd": artifact_block_fwd,
+    "block_dgrad": artifact_block_dgrad,
+    "block_wgrad": artifact_block_wgrad,
+    "block_bwd": artifact_block_bwd,
+    "embed_fwd": artifact_embed_fwd,
+    "embed_wgrad": artifact_embed_wgrad,
+    "head_loss_grad": artifact_head_loss_grad,
+    "head_loss_eval": artifact_head_loss_eval,
+}

@@ -1,0 +1,187 @@
+"""L2 model correctness: the per-layer artifact functions versus plain
+jnp autodiff of a reference block (no Pallas, no custom VJPs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import compile.model as M
+from compile.kernels.ref import ref_attention
+from compile.model import (
+    MASKED_NAMES,
+    PARAM_NAMES,
+    ModelConfig,
+    example_inputs,
+    init_block_params,
+    ones_masks,
+)
+
+CFG = ModelConfig(d_model=64, n_heads=4, d_ff=128, vocab=256, seq_len=32, microbatch=2)
+
+
+def rand(seed, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) * scale
+
+
+@pytest.fixture(scope="module")
+def block_data():
+    params = init_block_params(CFG, jax.random.PRNGKey(1))
+    x = rand(2, (2, 32, 64))
+    gy = rand(3, (2, 32, 64))
+    return params, x, gy
+
+
+def ref_block(params, x, cfg=CFG):
+    """Reference block: identical math, plain jnp ops only."""
+    wq, wk, wv, wo, w1, w2, w3, n1, n2 = params
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    hidden = M.rms_norm(x, n1)
+    q, k, v = hidden @ wq, hidden @ wk, hidden @ wv
+    split = lambda t: t.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    pos = jnp.arange(s)
+    q, k, v = M.rope(split(q), pos), M.rope(split(k), pos), split(v)
+    fold = lambda t: t.reshape(b * h, s, hd)
+    attn = ref_attention(fold(q), fold(k), fold(v), causal=True)
+    attn = attn.reshape(b, h, s, hd).transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + attn @ wo
+    hidden = M.rms_norm(x, n2)
+    ff = M.silu(hidden @ w1) * (hidden @ w3)
+    return x + ff @ w2
+
+
+class TestBlockForward:
+    def test_matches_reference(self, block_data):
+        params, x, _ = block_data
+        y = M.artifact_block_fwd(CFG)(*params, x)[0]
+        np.testing.assert_allclose(y, ref_block(params, x), rtol=2e-5, atol=2e-5)
+
+    def test_residual_identity_at_zero_weights(self):
+        zero = tuple(
+            jnp.zeros(CFG.matrix_shape(n), jnp.float32) for n in MASKED_NAMES
+        ) + (jnp.ones((64,)),) * 2
+        x = rand(5, (2, 32, 64))
+        y = M.artifact_block_fwd(CFG)(*zero, x)[0]
+        np.testing.assert_allclose(y, x, atol=1e-6)
+
+
+class TestBlockBackward:
+    def test_combined_bwd_matches_autodiff(self, block_data):
+        params, x, gy = block_data
+        out = M.artifact_block_bwd(CFG)(*params, *ones_masks(CFG), x, gy)
+        gx, gparams = out[0], out[1:]
+
+        def scal(p, xx):
+            return jnp.vdot(ref_block(p, xx), gy)
+
+        gp_ref, gx_ref = jax.grad(scal, argnums=(0, 1))(params, x)
+        np.testing.assert_allclose(gx, gx_ref, rtol=1e-4, atol=1e-4)
+        for name, a, b in zip(PARAM_NAMES, gparams, gp_ref):
+            np.testing.assert_allclose(
+                a, b, rtol=1e-4, atol=1e-4, err_msg=f"grad {name}"
+            )
+
+    def test_dgrad_matches_combined(self, block_data):
+        params, x, gy = block_data
+        gx1 = M.artifact_block_dgrad(CFG)(*params, x, gy)[0]
+        gx2 = M.artifact_block_bwd(CFG)(*params, *ones_masks(CFG), x, gy)[0]
+        np.testing.assert_allclose(gx1, gx2, rtol=1e-6)
+
+    def test_wgrad_matches_combined(self, block_data):
+        params, x, gy = block_data
+        w1 = M.artifact_block_wgrad(CFG)(*params, *ones_masks(CFG), x, gy)
+        full = M.artifact_block_bwd(CFG)(*params, *ones_masks(CFG), x, gy)[1:]
+        for name, a, b in zip(PARAM_NAMES, w1, full):
+            np.testing.assert_allclose(a, b, rtol=1e-6, err_msg=name)
+
+    def test_fully_frozen_masks_zero_matrix_grads(self, block_data):
+        params, x, gy = block_data
+        grads = M.artifact_block_wgrad(CFG)(
+            *params, *ones_masks(CFG, frozen=True), x, gy
+        )
+        for name, g in zip(PARAM_NAMES, grads):
+            if name in MASKED_NAMES:
+                assert float(jnp.abs(g).max()) == 0.0, name
+            else:
+                # Norm scales are not tile-masked.
+                assert float(jnp.abs(g).max()) > 0.0, name
+
+    def test_per_matrix_mask_zeroes_only_masked_matrix(self, block_data):
+        params, x, gy = block_data
+        masks = list(ones_masks(CFG))
+        # Freeze all tiles of wq only (at this block size the tile grid
+        # is 1×1, i.e. whole-matrix granularity; sub-matrix tiles are
+        # covered by test_kernels.TestMaskedWgrad).
+        masks[0] = jnp.ones(CFG.mask_shape("wq"), jnp.float32)
+        grads = M.artifact_block_wgrad(CFG)(*params, *masks, x, gy)
+        gwq, gwk = grads[0], grads[1]
+        assert float(jnp.abs(gwq).max()) == 0.0
+        assert float(jnp.abs(gwk).max()) > 0.0
+
+    def test_frozen_mask_does_not_change_gx(self, block_data):
+        params, x, gy = block_data
+        gx_live = M.artifact_block_bwd(CFG)(*params, *ones_masks(CFG), x, gy)[0]
+        gx_frozen = M.artifact_block_bwd(CFG)(
+            *params, *ones_masks(CFG, frozen=True), x, gy
+        )[0]
+        np.testing.assert_allclose(gx_live, gx_frozen, rtol=1e-6)
+
+
+class TestEmbedAndHead:
+    def test_embed_roundtrip(self):
+        emb = rand(7, (256, 64))
+        tokens = jax.random.randint(jax.random.PRNGKey(8), (2, 32), 0, 256)
+        x = M.artifact_embed_fwd(CFG)(emb, tokens)[0]
+        assert x.shape == (2, 32, 64)
+        np.testing.assert_allclose(x[0, 0], emb[tokens[0, 0]])
+
+    def test_embed_wgrad_is_scatter_add(self):
+        tokens = jnp.zeros((2, 32), jnp.int32)  # all token 0
+        gx = jnp.ones((2, 32, 64), jnp.float32)
+        g = M.artifact_embed_wgrad(CFG)(tokens, gx)[0]
+        np.testing.assert_allclose(g[0], jnp.full((64,), 64.0))
+        assert float(jnp.abs(g[1:]).max()) == 0.0
+
+    def test_head_loss_uniform_logits(self):
+        w = jnp.zeros((64, 256), jnp.float32)
+        x = rand(9, (2, 32, 64))
+        t = jax.random.randint(jax.random.PRNGKey(10), (2, 32), 0, 256)
+        loss = M.artifact_head_loss_eval(CFG)(w, x, t)[0]
+        np.testing.assert_allclose(loss, jnp.log(256.0), rtol=1e-5)
+
+    def test_head_grad_matches_autodiff(self):
+        w = rand(11, (64, 256), 0.05)
+        x = rand(12, (2, 32, 64))
+        t = jax.random.randint(jax.random.PRNGKey(13), (2, 32), 0, 256)
+        loss, gx, gw = M.artifact_head_loss_grad(CFG)(w, x, t)
+        loss2, (gw2, gx2) = jax.value_and_grad(M._ce_loss, argnums=(0, 1))(w, x, t)
+        np.testing.assert_allclose(loss, loss2)
+        np.testing.assert_allclose(gx, gx2, rtol=1e-6)
+        np.testing.assert_allclose(gw, gw2, rtol=1e-6)
+
+
+class TestExampleInputs:
+    def test_all_kinds_have_examples(self):
+        for kind in M.ARTIFACT_BUILDERS:
+            args = example_inputs(CFG, kind)
+            assert len(args) > 0, kind
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError):
+            example_inputs(CFG, "nope")
+
+
+class TestRope:
+    def test_rope_preserves_norm(self):
+        x = rand(20, (1, 2, 16, 32))
+        pos = jnp.arange(16)
+        y = M.rope(x, pos)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1), rtol=1e-5
+        )
+
+    def test_rope_position_zero_is_identity(self):
+        x = rand(21, (1, 1, 4, 8))
+        y = M.rope(x, jnp.zeros((4,), jnp.int32))
+        np.testing.assert_allclose(y, x, rtol=1e-6)

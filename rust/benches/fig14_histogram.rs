@@ -1,0 +1,41 @@
+//! Figure 14 (Appendix H): per-parameter freeze-ratio histograms on the
+//! last rank, per method — TimelyFreeze near-uniform, APF bimodal,
+//! AutoFreeze layer-skewed.
+use timelyfreeze::bench_support::tables::apply_quick;
+use timelyfreeze::config::ExperimentConfig;
+use timelyfreeze::sim;
+use timelyfreeze::types::{FreezeMethod, ScheduleKind};
+use timelyfreeze::viz::hist;
+
+fn main() {
+    for method in [
+        FreezeMethod::TimelyFreeze,
+        FreezeMethod::Apf,
+        FreezeMethod::AutoFreeze,
+        FreezeMethod::TimelyApf,
+        FreezeMethod::TimelyAuto,
+    ] {
+        let mut cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+        apply_quick(&mut cfg);
+        cfg.schedule = ScheduleKind::OneFOneB;
+        cfg.method = method;
+        let r = sim::run(&cfg);
+        let layout = sim::build_layout(&cfg, timelyfreeze::partition::PartitionMethod::Parameter);
+        // Rank 3 = last stage's units.
+        let last_stage = cfg.stages() - 1;
+        let vals: Vec<f64> = layout
+            .units_of_stage(last_stage)
+            .iter()
+            .map(|&u| r.unit_freeze_freq[u])
+            .collect();
+        print!("{}", hist::histogram(&vals, 10, 50, &format!("{} (rank 3)", method.name())));
+        let s = hist::spread(&vals);
+        println!(
+            "   mean {:.3}  stddev {:.3}  always-frozen {:.0}%  never {:.0}%\n",
+            s.mean,
+            s.stddev,
+            100.0 * s.saturated,
+            100.0 * s.untouched
+        );
+    }
+}

@@ -1,0 +1,37 @@
+//! Figure 15 (Appendix I): backward computation time vs effective freeze
+//! ratio per pipeline stage, with linear fits `t = slope·r + intercept` —
+//! validating the LP's linear-interpolation model (eq. 4).
+use timelyfreeze::bench_support::tables::apply_quick;
+use timelyfreeze::config::ExperimentConfig;
+use timelyfreeze::monitor::{TimingMonitor, TimingSample};
+use timelyfreeze::sim;
+use timelyfreeze::types::{Action, FreezeMethod, ScheduleKind};
+
+fn main() {
+    let mut cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+    apply_quick(&mut cfg);
+    cfg.schedule = ScheduleKind::OneFOneB;
+    cfg.method = FreezeMethod::TimelyFreeze;
+    let r = sim::run(&cfg);
+    let mut mon = TimingMonitor::new();
+    mon.record_all(r.backward_samples.iter().map(|s| TimingSample {
+        action: Action::b(s.mb, s.stage),
+        afr: s.afr,
+        duration: s.time,
+    }));
+    println!("Figure 15 — backward time vs freeze ratio ({} samples)", mon.len());
+    for (stage, fit) in mon.backward_regression(cfg.stages()).iter().enumerate() {
+        match fit {
+            Some(f) => {
+                println!(
+                    "  stage {stage}: t = {:+.2}·r + {:.2}  (ms: {:+.2}·r + {:.2})  R² = {:.4}",
+                    f.slope, f.intercept, f.slope * 1e3, f.intercept * 1e3, f.r2
+                );
+                assert!(f.slope < 0.0, "backward time must decrease with freezing");
+                assert!(f.r2 > 0.9, "stage {stage}: fit not linear enough (R²={})", f.r2);
+            }
+            None => println!("  stage {stage}: insufficient samples"),
+        }
+    }
+    println!("linear model confirmed: freezing removes wgrad time proportionally (Fig. 3)");
+}

@@ -1,0 +1,48 @@
+//! Figure 4: freeze ratio and training throughput across training steps —
+//! the progressive ramp from T_m to T_f and the corresponding throughput
+//! climb.
+use timelyfreeze::bench_support::tables::apply_quick;
+use timelyfreeze::config::ExperimentConfig;
+use timelyfreeze::metrics::Recorder;
+use timelyfreeze::sim;
+use timelyfreeze::types::{FreezeMethod, ScheduleKind};
+use timelyfreeze::util::json::Json;
+
+fn main() {
+    let mut cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+    apply_quick(&mut cfg);
+    cfg.schedule = ScheduleKind::OneFOneB;
+    cfg.method = FreezeMethod::TimelyFreeze;
+    let r = sim::run(&cfg);
+    println!(
+        "Figure 4 — {} · 1F1B · TimelyFreeze (T_w={} T_m={} T_f={})",
+        cfg.model.name, cfg.phases.t_warmup, cfg.phases.t_monitor, cfg.phases.t_freeze
+    );
+    println!("{:>8} {:>12} {:>16}", "step", "freeze ratio", "tokens/s");
+    let mut rec = Recorder::default_dir();
+    for p in &r.trajectory {
+        println!("{:>8} {:>12.3} {:>16.0}", p.step, p.mean_afr, p.throughput);
+        rec.push(
+            "fig4_trajectory",
+            Json::obj(vec![
+                ("step", Json::num(p.step as f64)),
+                ("freeze_ratio", Json::num(p.mean_afr)),
+                ("throughput", Json::num(p.throughput)),
+            ]),
+        );
+    }
+    // The figure's qualitative claims, asserted:
+    let before: Vec<&sim::TrajPoint> =
+        r.trajectory.iter().filter(|p| p.step <= cfg.phases.t_warmup).collect();
+    let after: Vec<&sim::TrajPoint> =
+        r.trajectory.iter().filter(|p| p.step > cfg.phases.t_freeze).collect();
+    if let (Some(b), Some(a)) = (before.last(), after.last()) {
+        assert!(a.mean_afr > b.mean_afr, "ramp must raise the freeze ratio");
+        assert!(a.throughput > b.throughput, "throughput must climb with it");
+        println!(
+            "\nthroughput {} → {} tokens/s as freeze ratio {:.2} → {:.2}",
+            b.throughput as u64, a.throughput as u64, b.mean_afr, a.mean_afr
+        );
+    }
+    rec.flush().unwrap();
+}

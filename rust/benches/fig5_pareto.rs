@@ -1,0 +1,52 @@
+//! Figure 5: accuracy–throughput trade-off (Pareto frontier) for
+//! LLaMA-1B/8B/13B under all four schedules and six methods.
+use timelyfreeze::bench_support::tables::apply_quick;
+use timelyfreeze::config::ExperimentConfig;
+use timelyfreeze::metrics::Recorder;
+use timelyfreeze::sim;
+use timelyfreeze::types::{FreezeMethod, ScheduleKind};
+use timelyfreeze::util::json::Json;
+
+fn main() {
+    let mut rec = Recorder::default_dir();
+    for preset in ["llama-1b", "llama-8b", "llama-13b"] {
+        for schedule in ScheduleKind::all() {
+            println!("\n== {} — {} ==", preset, schedule.name());
+            println!("{:>26} {:>12} {:>10}  pareto?", "method", "tokens/s", "acc");
+            let mut points = Vec::new();
+            for method in FreezeMethod::all() {
+                let mut cfg = ExperimentConfig::paper_preset(preset).unwrap();
+                apply_quick(&mut cfg);
+                cfg.schedule = schedule;
+                cfg.method = method;
+                let r = sim::run(&cfg);
+                points.push((method, r.throughput, r.accuracy));
+            }
+            for &(m, t, a) in &points {
+                // On the frontier iff no other point dominates it.
+                let dominated = points
+                    .iter()
+                    .any(|&(m2, t2, a2)| m2 != m && t2 >= t && a2 >= a && (t2 > t || a2 > a));
+                println!(
+                    "{:>26} {:>12.0} {:>10.2}  {}",
+                    m.name(),
+                    t,
+                    a,
+                    if dominated { "" } else { "frontier" }
+                );
+                rec.push(
+                    "fig5_pareto",
+                    Json::obj(vec![
+                        ("model", Json::str(preset)),
+                        ("schedule", Json::str(schedule.name())),
+                        ("method", Json::str(m.name())),
+                        ("throughput", Json::num(t)),
+                        ("accuracy", Json::num(a)),
+                        ("frontier", Json::Bool(!dominated)),
+                    ]),
+                );
+            }
+        }
+    }
+    rec.flush().unwrap();
+}

@@ -1,0 +1,71 @@
+//! Figure 6: freezing-controller sensitivity on LLaMA-1B / 1F1B —
+//! r_max for TimelyFreeze, T_APF for APF, P_Auto for AutoFreeze.
+use timelyfreeze::bench_support::tables::apply_quick;
+use timelyfreeze::config::ExperimentConfig;
+use timelyfreeze::metrics::Recorder;
+use timelyfreeze::sim;
+use timelyfreeze::types::{FreezeMethod, ScheduleKind};
+use timelyfreeze::util::json::Json;
+
+fn run(cfg: &ExperimentConfig) -> (f64, f64, f64) {
+    let r = sim::run(cfg);
+    (r.throughput, r.accuracy, r.freeze_ratio)
+}
+
+fn main() {
+    let base = {
+        let mut c = ExperimentConfig::paper_preset("llama-1b").unwrap();
+        apply_quick(&mut c);
+        c.schedule = ScheduleKind::OneFOneB;
+        c
+    };
+    let mut rec = Recorder::default_dir();
+    let mut record = |controller: &str, value: f64, t: f64, a: f64, fr: f64| {
+        println!("{controller:>14} = {value:<8} → {t:>8.0} tok/s  acc {a:>6.2}  frz {fr:>6.2}%");
+        rec.push(
+            "fig6_sensitivity",
+            Json::obj(vec![
+                ("controller", Json::str(controller)),
+                ("value", Json::num(value)),
+                ("throughput", Json::num(t)),
+                ("accuracy", Json::num(a)),
+                ("freeze_ratio", Json::num(fr)),
+            ]),
+        );
+    };
+
+    println!("— TimelyFreeze r_max sweep —");
+    let mut prev_thpt = 0.0;
+    let mut monotone = true;
+    for r_max in [0.2, 0.35, 0.5, 0.65, 0.8, 0.9] {
+        let mut cfg = base.clone();
+        cfg.method = FreezeMethod::TimelyFreeze;
+        cfg.r_max = r_max;
+        let (t, a, fr) = run(&cfg);
+        if t + 1e-9 < prev_thpt {
+            monotone = false;
+        }
+        prev_thpt = t;
+        record("r_max", r_max, t, a, fr);
+    }
+    println!("  throughput monotone in r_max: {monotone}");
+
+    println!("— APF T_APF sweep —");
+    for t_apf in [0.05, 0.15, 0.3, 0.45, 0.6] {
+        let mut cfg = base.clone();
+        cfg.method = FreezeMethod::Apf;
+        cfg.apf.threshold = t_apf;
+        let (t, a, fr) = run(&cfg);
+        record("T_APF", t_apf, t, a, fr);
+    }
+
+    println!("— AutoFreeze P_Auto sweep —");
+    for p in [20.0, 40.0, 60.0, 80.0, 95.0] {
+        let mut cfg = base.clone();
+        cfg.method = FreezeMethod::AutoFreeze;
+        cfg.auto.percentile = p;
+        let (t, a, fr) = run(&cfg);
+        record("P_Auto", p, t, a, fr);
+    }
+    rec.flush().unwrap();
+}

@@ -1,0 +1,54 @@
+//! Figures 7–13 (Appendix F): pipeline-execution Gantt charts for the
+//! four schedules × four methods at 4 GPUs (8B), 6 GPUs (1B, M=6), and
+//! 8 GPUs (GPipe), with the batch-time reductions the captions quote.
+//! SVGs land in bench_out/.
+use timelyfreeze::bench_support::tables::apply_quick;
+use timelyfreeze::config::ExperimentConfig;
+use timelyfreeze::sim;
+use timelyfreeze::types::{FreezeMethod, ScheduleKind};
+use timelyfreeze::viz;
+
+fn render(figure: &str, preset: &str, schedule: ScheduleKind, ranks: usize, mb: usize) {
+    println!("\n===== {figure}: {preset} · {} · {ranks} GPUs × {mb} microbatches =====", schedule.name());
+    let out_dir = concat!(env!("CARGO_MANIFEST_DIR"), "/bench_out");
+    std::fs::create_dir_all(out_dir).ok();
+    let methods = [
+        FreezeMethod::NoFreezing,
+        FreezeMethod::AutoFreeze,
+        FreezeMethod::Apf,
+        FreezeMethod::TimelyFreeze,
+    ];
+    let mut base_time = None;
+    for method in methods {
+        let mut cfg = ExperimentConfig::paper_preset(preset).unwrap();
+        apply_quick(&mut cfg);
+        cfg.schedule = schedule;
+        cfg.method = method;
+        cfg.ranks = ranks;
+        cfg.microbatches = mb;
+        let r = sim::run(&cfg);
+        let bt = base_time.get_or_insert(r.batch_time_nofreeze);
+        println!("\n--- {} (batch {:.3}s, −{:.2}% vs baseline) ---",
+            method.name(), r.batch_time_final, 100.0 * (1.0 - r.batch_time_final / *bt));
+        print!("{}", viz::ascii(&r.gantt_final, ranks, 110));
+        let slug = format!(
+            "{figure}_{}_{}", schedule.name().replace(' ', ""), method.name().replace([' ', '+'], "")
+        );
+        let svg = viz::svg(&r.gantt_final, ranks, &format!("{preset} {} {}", schedule.name(), method.name()));
+        std::fs::write(format!("{out_dir}/{slug}.svg"), svg).unwrap();
+    }
+}
+
+fn main() {
+    // Figures 7–10: 4 GPUs, 8 microbatches, LLaMA-8B.
+    render("fig7", "llama-8b", ScheduleKind::GPipe, 4, 8);
+    render("fig8", "llama-8b", ScheduleKind::OneFOneB, 4, 8);
+    render("fig9", "llama-8b", ScheduleKind::Interleaved1F1B, 4, 8);
+    render("fig10", "llama-8b", ScheduleKind::ZeroBubbleV, 4, 8);
+    // Figures 11–12: 6 GPUs, 6 microbatches, LLaMA-1B.
+    render("fig11", "llama-1b", ScheduleKind::GPipe, 6, 6);
+    render("fig12", "llama-1b", ScheduleKind::OneFOneB, 6, 6);
+    // Figure 13: 8 GPUs GPipe.
+    render("fig13", "llama-1b", ScheduleKind::GPipe, 8, 8);
+    println!("\nSVGs written to bench_out/");
+}

@@ -1,0 +1,76 @@
+//! Micro-benchmarks for the §Perf pass: LP solve, DAG longest-path,
+//! schedule construction, and simulator step rate.
+use timelyfreeze::bench_support::{bench_auto, header};
+use timelyfreeze::config::ExperimentConfig;
+use timelyfreeze::graph::pipeline::PipelineDag;
+use timelyfreeze::lp::{solve_freeze_lp, FreezeLpInput};
+use timelyfreeze::schedule::Schedule;
+use timelyfreeze::sim;
+use timelyfreeze::types::{FreezeMethod, ScheduleKind};
+
+fn main() {
+    println!("{}", header());
+    // Schedule + DAG construction.
+    for kind in ScheduleKind::all() {
+        let r = bench_auto(&format!("schedule_build/{}", kind.name()), 0.3, || {
+            let s = Schedule::build(kind, 4, 8, Schedule::default_chunks(kind));
+            std::hint::black_box(s.action_count());
+        });
+        println!("{}", r.report());
+    }
+    let s = Schedule::build(ScheduleKind::ZeroBubbleV, 4, 8, 2);
+    let r = bench_auto("pipeline_dag_build/zbv_4x8", 0.3, || {
+        let g = PipelineDag::from_schedule(&s);
+        std::hint::black_box(g.len());
+    });
+    println!("{}", r.report());
+
+    let g = PipelineDag::from_schedule(&s);
+    let w = g.weights(|_| 1.0);
+    let r = bench_auto("longest_path/zbv_4x8", 0.3, || {
+        std::hint::black_box(g.batch_time(&w));
+    });
+    println!("{}", r.report());
+
+    // LP solve at several scales.
+    for (ranks, m, kind) in [
+        (4usize, 8usize, ScheduleKind::OneFOneB),
+        (4, 8, ScheduleKind::ZeroBubbleV),
+        (8, 16, ScheduleKind::OneFOneB),
+    ] {
+        let sched = Schedule::build(kind, ranks, m, Schedule::default_chunks(kind));
+        let pdag = PipelineDag::from_schedule(&sched);
+        let w_max = pdag.weights(|a| if a.kind.freezable() { 2.0 } else { 1.0 });
+        let w_min = pdag.weights(|a| if a.kind.freezable() { 0.9 } else { 1.0 });
+        let r = bench_auto(
+            &format!("lp_solve/{}_{ranks}x{m} ({} nodes)", kind.name(), pdag.len()),
+            1.0,
+            || {
+                let sol = solve_freeze_lp(&FreezeLpInput {
+                    pdag: &pdag,
+                    w_min: &w_min,
+                    w_max: &w_max,
+                    r_max: 0.8,
+                    lambda: 1e-4,
+                })
+                .unwrap();
+                std::hint::black_box(sol.batch_time);
+            },
+        );
+        println!("{}", r.report());
+    }
+
+    // Simulator step rate (steps/sec over a short run).
+    let mut cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+    cfg.steps = 100;
+    cfg.phases = timelyfreeze::freeze::PhaseConfig::new(8, 26, 40);
+    cfg.method = FreezeMethod::TimelyFreeze;
+    let r = bench_auto("sim_run/llama1b_100steps", 2.0, || {
+        std::hint::black_box(sim::run(&cfg).throughput);
+    });
+    println!("{}", r.report());
+    println!(
+        "sim rate ≈ {:.0} steps/s",
+        100.0 / r.mean_s
+    );
+}

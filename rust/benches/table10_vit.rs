@@ -1,0 +1,19 @@
+//! Table 10 (Appendix G.2): ViT-L/32 fine-tuning on 8×RTX3090 under
+//! GPipe and 1F1B.
+use timelyfreeze::partition::PartitionMethod;
+use timelyfreeze::types::{FreezeMethod, ScheduleKind};
+
+fn main() {
+    timelyfreeze::bench_support::tables::run_vision_table(
+        "vit-l32",
+        "table10_vit",
+        &[PartitionMethod::Parameter],
+        &[ScheduleKind::GPipe, ScheduleKind::OneFOneB],
+        &[
+            FreezeMethod::NoFreezing,
+            FreezeMethod::Apf,
+            FreezeMethod::AutoFreeze,
+            FreezeMethod::TimelyFreeze,
+        ],
+    );
+}

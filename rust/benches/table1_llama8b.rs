@@ -1,0 +1,6 @@
+//! Table 1: LLaMA-3-8B across GPipe / 1F1B / Interleaved 1F1B / ZBV for
+//! all six freezing methods — Avg. Acc.(Δ), Frz. Ratio, Throughput(Δ), MFU.
+//! Set TF_BENCH_QUICK=1 for a short smoke run.
+fn main() {
+    timelyfreeze::bench_support::tables::run_llm_table("llama-8b", "table1_llama8b");
+}

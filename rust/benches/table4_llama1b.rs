@@ -1,0 +1,4 @@
+//! Table 4 (Appendix E.2): LLaMA-3.2-1B grid on 4×A6000.
+fn main() {
+    timelyfreeze::bench_support::tables::run_llm_table("llama-1b", "table4_llama1b");
+}

@@ -1,0 +1,4 @@
+//! Table 5 (Appendix E.2): LLaMA-2-13B grid on 4×H200.
+fn main() {
+    timelyfreeze::bench_support::tables::run_llm_table("llama-13b", "table5_llama13b");
+}

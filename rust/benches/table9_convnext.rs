@@ -1,0 +1,20 @@
+//! Table 9 (Appendix G.1): ConvNeXt-V2-L under memory/parameter/time
+//! partitioning heuristics × {GPipe, 1F1B} × {No-Freezing, APF,
+//! AutoFreeze, TimelyFreeze} — Top-1(Δ), Train Time(Δ), Freeze Ratio.
+use timelyfreeze::partition::PartitionMethod;
+use timelyfreeze::types::{FreezeMethod, ScheduleKind};
+
+fn main() {
+    timelyfreeze::bench_support::tables::run_vision_table(
+        "convnextv2-l",
+        "table9_convnext",
+        &PartitionMethod::all(),
+        &[ScheduleKind::GPipe, ScheduleKind::OneFOneB],
+        &[
+            FreezeMethod::NoFreezing,
+            FreezeMethod::Apf,
+            FreezeMethod::AutoFreeze,
+            FreezeMethod::TimelyFreeze,
+        ],
+    );
+}

@@ -1,0 +1,122 @@
+//! Minimal benchmark harness (criterion is unavailable in the offline
+//! image): warmup + timed iterations with mean/stddev/percentiles, plus
+//! helpers shared by the table/figure benches.
+
+use crate::util::stats;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10} {:>12} {:>12} {:>12}",
+            self.name,
+            format!("n={}", self.iters),
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&samples),
+        stddev_s: stats::stddev(&samples),
+        p50_s: stats::percentile(&samples, 50.0),
+        p95_s: stats::percentile(&samples, 95.0),
+    }
+}
+
+/// Adaptive: pick an iteration count so the bench takes ≈ `budget_s`.
+pub fn bench_auto<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / once) as usize).clamp(3, 10_000);
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+/// Header matching [`BenchResult::report`].
+pub fn header() -> String {
+    format!(
+        "{:<40} {:>10} {:>12} {:>12} {:>12}",
+        "benchmark", "iters", "mean", "p50", "p95"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let mut acc = 0u64;
+        let r = bench("spin", 2, 20, || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(acc > 0);
+        assert_eq!(r.iters, 20);
+        assert!(r.mean_s > 0.0);
+        assert!(r.p95_s >= r.p50_s);
+    }
+
+    #[test]
+    fn auto_scales_iterations() {
+        let r = bench_auto("noop", 0.02, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.5e-9), "2.5ns");
+        assert_eq!(fmt_time(1.5e-5), "15.00µs");
+        assert_eq!(fmt_time(2.5e-3), "2.50ms");
+        assert_eq!(fmt_time(1.5), "1.500s");
+    }
+
+    #[test]
+    fn report_aligns_with_header() {
+        let r = bench("x", 0, 3, || {});
+        assert_eq!(header().split_whitespace().count(), 5);
+        assert!(r.report().contains("n=3"));
+    }
+}
+pub mod tables;

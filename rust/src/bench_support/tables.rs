@@ -1,0 +1,164 @@
+//! Shared harness for the paper-table benches (Tables 1, 4, 5, 9, 10):
+//! runs the full schedule × method grid for a preset and prints rows in
+//! the paper's format, recording JSON for regeneration.
+
+use crate::config::ExperimentConfig;
+use crate::metrics::{result_row, Recorder};
+use crate::partition::PartitionMethod;
+use crate::sim::{self, SimResult};
+use crate::types::{FreezeMethod, ScheduleKind};
+use crate::util::table::Table;
+
+/// Honour `TF_BENCH_QUICK=1` by shrinking the run (CI-speed smoke).
+pub fn apply_quick(cfg: &mut ExperimentConfig) {
+    if std::env::var("TF_BENCH_QUICK").as_deref() == Ok("1") {
+        let scale = cfg.steps / 200;
+        if scale > 1 {
+            cfg.steps /= scale;
+            let p = cfg.phases;
+            cfg.phases = crate::freeze::PhaseConfig::new(
+                (p.t_warmup / scale).max(2),
+                (p.t_monitor / scale).max(4),
+                (p.t_freeze / scale).max(6),
+            );
+        }
+    }
+}
+
+/// Run one (schedule × method) grid for a preset and emit the table.
+pub fn run_llm_table(preset: &str, experiment_id: &str) {
+    let base = ExperimentConfig::paper_preset(preset).expect("preset");
+    let mut recorder = Recorder::default_dir();
+    println!(
+        "{experiment_id}: {} — {} steps, r_max {}, 4×{}",
+        base.model.name, base.steps, base.r_max, base.gpu.name
+    );
+    println!(
+        "(pretrained avg acc {:.2}; paper no-freezing acc {:.2})\n",
+        base.model.pretrained_acc, base.model.finetuned_acc
+    );
+    for schedule in ScheduleKind::all() {
+        let mut t = Table::new(
+            &format!("{} — {}", base.model.name, schedule.name()),
+            &["Freeze Method", "Avg. Acc. (Δ)", "Frz. Ratio", "Throughput (Δ%)", "MFU"],
+        );
+        let mut baseline: Option<SimResult> = None;
+        for method in FreezeMethod::all() {
+            let mut cfg = base.clone();
+            apply_quick(&mut cfg);
+            cfg.schedule = schedule;
+            cfg.method = method;
+            let r = sim::run(&cfg);
+            let b = baseline.get_or_insert_with(|| r.clone());
+            let acc_delta = r.acc_delta(b);
+            let thpt_delta = r.throughput_delta_pct(b);
+            t.row(vec![
+                method.name().to_string(),
+                format!("{:.2} ({:+.2})", r.accuracy, acc_delta),
+                format!("{:.2}", r.freeze_ratio),
+                format!("{:.0} ({:+.2})", r.throughput, thpt_delta),
+                format!("{:.2}", r.mfu),
+            ]);
+            recorder.push(
+                experiment_id,
+                result_row(
+                    schedule.name(),
+                    method.name(),
+                    r.accuracy,
+                    acc_delta,
+                    r.freeze_ratio,
+                    r.throughput,
+                    thpt_delta,
+                    r.mfu,
+                ),
+            );
+        }
+        println!("{}", t.render());
+    }
+    match recorder.flush() {
+        Ok(paths) => println!("recorded → {:?}", paths),
+        Err(e) => eprintln!("recorder error: {e}"),
+    }
+}
+
+/// Vision-table harness (Tables 9/10): partition heuristics × schedules,
+/// reporting Top-1(Δ), train time(Δ%), freeze ratio.
+pub fn run_vision_table(
+    preset: &str,
+    experiment_id: &str,
+    partitions: &[PartitionMethod],
+    schedules: &[ScheduleKind],
+    methods: &[FreezeMethod],
+) {
+    let base = ExperimentConfig::paper_preset(preset).expect("preset");
+    let mut recorder = Recorder::default_dir();
+    println!(
+        "{experiment_id}: {} — {} steps on {}×{}",
+        base.model.name, base.steps, base.ranks, base.gpu.name
+    );
+    for &partition in partitions {
+        for &schedule in schedules {
+            let mut t = Table::new(
+                &format!(
+                    "{} — {} partitioning — {}",
+                    base.model.name,
+                    partition.name(),
+                    schedule.name()
+                ),
+                &["Freeze Method", "Top1 Acc. (Δ)", "Train Time (Δ%↓)", "Freeze Ratio"],
+            );
+            let mut baseline: Option<(SimResult, f64)> = None;
+            for &method in methods {
+                let mut cfg = base.clone();
+                apply_quick(&mut cfg);
+                cfg.schedule = schedule;
+                cfg.method = method;
+                let r = sim::run_with_partition(&cfg, partition);
+                let train_time =
+                    cfg.tokens_per_step() as f64 * cfg.steps as f64 / r.throughput;
+                let (b, bt) = baseline.get_or_insert_with(|| (r.clone(), train_time));
+                let acc_delta = r.acc_delta(b);
+                let time_delta = 100.0 * (1.0 - train_time / *bt);
+                t.row(vec![
+                    method.name().to_string(),
+                    format!("{:.2} ({:+.2})", r.accuracy, acc_delta),
+                    format!("{:.0} ({:.2})", train_time, time_delta),
+                    format!("{:.2}", r.freeze_ratio),
+                ]);
+                recorder.push(
+                    experiment_id,
+                    crate::util::json::Json::obj(vec![
+                        ("partition", crate::util::json::Json::str(partition.name())),
+                        ("schedule", crate::util::json::Json::str(schedule.name())),
+                        ("method", crate::util::json::Json::str(method.name())),
+                        ("accuracy", crate::util::json::Json::num(r.accuracy)),
+                        ("acc_delta", crate::util::json::Json::num(acc_delta)),
+                        ("train_time_s", crate::util::json::Json::num(train_time)),
+                        ("time_delta_pct", crate::util::json::Json::num(time_delta)),
+                        ("freeze_ratio", crate::util::json::Json::num(r.freeze_ratio)),
+                    ]),
+                );
+            }
+            println!("{}", t.render());
+        }
+    }
+    match recorder.flush() {
+        Ok(paths) => println!("recorded → {:?}", paths),
+        Err(e) => eprintln!("recorder error: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_env_shrinks_runs() {
+        let mut cfg = ExperimentConfig::paper_preset("llama-8b").unwrap();
+        std::env::set_var("TF_BENCH_QUICK", "1");
+        apply_quick(&mut cfg);
+        std::env::remove_var("TF_BENCH_QUICK");
+        assert!(cfg.steps <= 200);
+        assert!(cfg.phases.t_freeze < cfg.steps);
+    }
+}

@@ -1,0 +1,218 @@
+//! Parameter storage for the real pipeline engine: per-stage model
+//! parameters in the flat tensor order the AOT artifacts expect
+//! (`PARAM_NAMES` in python/compile/model.py, recorded in the manifest).
+
+use crate::runtime::{HostTensor, ManifestConfig};
+use crate::util::rng::Rng;
+
+/// One transformer block's parameters, in manifest `param_names` order:
+/// wq, wk, wv, wo, w1, w2, w3, norm1, norm2.
+#[derive(Clone, Debug)]
+pub struct BlockParams {
+    pub tensors: Vec<HostTensor>,
+}
+
+impl BlockParams {
+    pub fn init(cfg: &ManifestConfig, rng: &mut Rng) -> BlockParams {
+        let mut tensors = Vec::with_capacity(cfg.param_names.len());
+        for name in &cfg.param_names {
+            let t = if let Some(&(din, dout)) = cfg.matrix_shapes.get(name) {
+                let scale = (din as f32).powf(-0.5);
+                let data: Vec<f32> =
+                    (0..din * dout).map(|_| rng.normal() as f32 * scale).collect();
+                HostTensor::f32(vec![din, dout], data)
+            } else {
+                // Norm scales initialize to ones.
+                HostTensor::full(&[cfg.d_model], 1.0)
+            };
+            tensors.push(t);
+        }
+        BlockParams { tensors }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+}
+
+/// Global layer numbering: 0 = embedding, 1..=blocks, blocks+1 = head.
+#[derive(Clone, Debug)]
+pub struct LayerMap {
+    pub blocks: usize,
+    pub stages: usize,
+}
+
+impl LayerMap {
+    pub fn new(blocks: usize, stages: usize) -> LayerMap {
+        assert!(blocks >= stages, "need at least one block per stage");
+        LayerMap { blocks, stages }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.blocks + 2
+    }
+
+    /// Stage of a global layer id (embed pinned to stage 0, head to the
+    /// last stage, blocks split evenly).
+    pub fn stage_of_layer(&self, layer: usize) -> usize {
+        if layer == 0 {
+            0
+        } else if layer == self.blocks + 1 {
+            self.stages - 1
+        } else {
+            ((layer - 1) * self.stages / self.blocks).min(self.stages - 1)
+        }
+    }
+
+    /// Global block-layer ids owned by a stage (excluding embed/head).
+    pub fn blocks_of_stage(&self, stage: usize) -> Vec<usize> {
+        (1..=self.blocks).filter(|&l| self.stage_of_layer(l) == stage).collect()
+    }
+
+    pub fn layer_stage_vec(&self) -> Vec<usize> {
+        (0..self.num_layers()).map(|l| self.stage_of_layer(l)).collect()
+    }
+}
+
+/// All parameters owned by one stage.
+pub struct StageParams {
+    /// Embedding table (stage 0 only).
+    pub embed: Option<HostTensor>,
+    /// Transformer blocks, in model order.
+    pub blocks: Vec<BlockParams>,
+    /// Head projection (last stage only).
+    pub head: Option<HostTensor>,
+}
+
+impl StageParams {
+    /// Deterministic init shared with no one — each stage initializes its
+    /// own layers from per-layer derived streams, so any partition of the
+    /// same model yields identical weights.
+    pub fn init(
+        cfg: &ManifestConfig,
+        map: &LayerMap,
+        stage: usize,
+        seed: u64,
+    ) -> StageParams {
+        let base = Rng::seed_from_u64(seed);
+        let embed = (stage == 0).then(|| {
+            let mut rng = base.derive(0xE4B, 0);
+            let data: Vec<f32> = (0..cfg.vocab * cfg.d_model)
+                .map(|_| rng.normal() as f32 * 0.02)
+                .collect();
+            HostTensor::f32(vec![cfg.vocab, cfg.d_model], data)
+        });
+        let blocks = map
+            .blocks_of_stage(stage)
+            .into_iter()
+            .map(|layer| {
+                let mut rng = base.derive(0xB10C, layer as u64);
+                BlockParams::init(cfg, &mut rng)
+            })
+            .collect();
+        let head = (stage == map.stages - 1).then(|| {
+            let mut rng = base.derive(0x4EAD, 0);
+            let scale = (cfg.d_model as f32).powf(-0.5);
+            let data: Vec<f32> = (0..cfg.d_model * cfg.vocab)
+                .map(|_| rng.normal() as f32 * scale)
+                .collect();
+            HostTensor::f32(vec![cfg.d_model, cfg.vocab], data)
+        });
+        StageParams { embed, blocks, head }
+    }
+
+    /// Flat tensor list in optimizer order:
+    /// [embed?] ++ blocks×param_names ++ [head?].
+    pub fn tensor_sizes(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        if let Some(e) = &self.embed {
+            out.push(e.len());
+        }
+        for b in &self.blocks {
+            out.extend(b.tensors.iter().map(|t| t.len()));
+        }
+        if let Some(h) = &self.head {
+            out.push(h.len());
+        }
+        out
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tensor_sizes().iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn tiny_cfg() -> ManifestConfig {
+        let names: Vec<String> =
+            ["wq", "wk", "wv", "wo", "w1", "w2", "w3", "norm1", "norm2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let mut matrix_shapes = BTreeMap::new();
+        for n in ["wq", "wk", "wv", "wo"] {
+            matrix_shapes.insert(n.to_string(), (16, 16));
+        }
+        matrix_shapes.insert("w1".into(), (16, 32));
+        matrix_shapes.insert("w2".into(), (32, 16));
+        matrix_shapes.insert("w3".into(), (16, 32));
+        ManifestConfig {
+            d_model: 16,
+            n_heads: 2,
+            d_ff: 32,
+            vocab: 64,
+            seq_len: 8,
+            microbatch: 1,
+            param_names: names.clone(),
+            masked_names: names[..7].to_vec(),
+            mask_shapes: BTreeMap::new(),
+            matrix_shapes,
+        }
+    }
+
+    #[test]
+    fn layer_map_partitions() {
+        let m = LayerMap::new(8, 4);
+        assert_eq!(m.stage_of_layer(0), 0); // embed
+        assert_eq!(m.stage_of_layer(9), 3); // head
+        assert_eq!(m.blocks_of_stage(0), vec![1, 2]);
+        assert_eq!(m.blocks_of_stage(3), vec![7, 8]);
+        assert_eq!(m.layer_stage_vec().len(), 10);
+    }
+
+    #[test]
+    fn stage_params_ownership() {
+        let cfg = tiny_cfg();
+        let map = LayerMap::new(4, 2);
+        let s0 = StageParams::init(&cfg, &map, 0, 1);
+        let s1 = StageParams::init(&cfg, &map, 1, 1);
+        assert!(s0.embed.is_some() && s0.head.is_none());
+        assert!(s1.embed.is_none() && s1.head.is_some());
+        assert_eq!(s0.blocks.len(), 2);
+        assert_eq!(s1.blocks.len(), 2);
+    }
+
+    #[test]
+    fn init_is_partition_invariant() {
+        // The same global block gets identical weights regardless of how
+        // many stages the model is cut into.
+        let cfg = tiny_cfg();
+        let a = StageParams::init(&cfg, &LayerMap::new(4, 2), 1, 7);
+        let b = StageParams::init(&cfg, &LayerMap::new(4, 4), 2, 7);
+        // Stage 1 of 2 owns blocks {3,4}; stage 2 of 4 owns block {3}.
+        assert_eq!(a.blocks[0].tensors[0], b.blocks[0].tensors[0]);
+    }
+
+    #[test]
+    fn block_param_count() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::seed_from_u64(0);
+        let b = BlockParams::init(&cfg, &mut rng);
+        // 4×(16·16) + 2×(16·32) + (32·16) + 2×16
+        assert_eq!(b.param_count(), 4 * 256 + 2 * 512 + 512 + 32);
+    }
+}

@@ -1,0 +1,457 @@
+//! Stage worker: one OS thread per pipeline rank, owning its model
+//! slice, optimizer state, PJRT runtime, and the rank's slice of the
+//! schedule. Executes forward/backward actions in schedule order,
+//! exchanging activations/gradients over channels (the inter-GPU links
+//! of the paper's testbed), timing each action for the monitor, and
+//! skipping per-layer wgrad work according to the controller's AFRs —
+//! the real, wall-clock realization of Figure 3.
+
+use crate::engine::params::{LayerMap, StageParams};
+use crate::freeze::UnitDelta;
+use crate::runtime::{HostTensor, Manifest, StageRuntime};
+use crate::train::data::BigramCorpus;
+use crate::train::optimizer::{Optimizer, OptimizerKind, UpdateStats};
+use crate::types::{Action, ActionKind};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+/// Per-step command from the coordinator.
+#[derive(Clone, Debug)]
+pub struct StepCmd {
+    pub t: usize,
+    pub lr: f64,
+    /// AFR per action on this rank (missing ⇒ 0).
+    pub afr: BTreeMap<Action, f64>,
+    /// Drain update statistics this step (stability check).
+    pub collect_deltas: bool,
+}
+
+#[derive(Debug)]
+pub enum WorkerCmd {
+    Step(StepCmd),
+    Shutdown,
+}
+
+/// Per-step report back to the coordinator.
+#[derive(Clone, Debug, Default)]
+pub struct StepReport {
+    pub stage: usize,
+    /// Measured compute duration per action (blocking waits excluded —
+    /// w_i is execution time; start times come from dependencies).
+    pub timings: Vec<(Action, f64)>,
+    /// Mean loss over microbatches (last stage only).
+    pub loss: Option<f64>,
+    /// (global layer id, cumulative update stats) when requested.
+    pub deltas: Vec<(usize, UnitDelta)>,
+    /// Param-weighted frozen fraction this step on this stage.
+    pub frozen_fraction: f64,
+}
+
+pub struct WorkerEnv {
+    pub stage: usize,
+    pub map: LayerMap,
+    pub manifest: Manifest,
+    pub schedule_order: Vec<Action>,
+    pub microbatches: usize,
+    pub optimizer: OptimizerKind,
+    pub seed: u64,
+    /// Cycle length of the tiny corpus (0 = fresh data every step).
+    pub corpus_cycle: usize,
+    pub cmd_rx: Receiver<WorkerCmd>,
+    pub report_tx: Sender<StepReport>,
+    pub fwd_rx: Option<Receiver<HostTensor>>,
+    pub fwd_tx: Option<Sender<HostTensor>>,
+    pub bwd_rx: Option<Receiver<HostTensor>>,
+    pub bwd_tx: Option<Sender<HostTensor>>,
+}
+
+struct MbState {
+    tokens: Option<Vec<i32>>,
+    /// Input activation of each local block, in model order.
+    block_inputs: Vec<HostTensor>,
+    /// Final hidden state (last stage, for the head).
+    final_h: Option<HostTensor>,
+}
+
+/// Accumulated per-layer update statistics between stability checks.
+#[derive(Default, Clone, Copy)]
+struct LayerDelta {
+    signed: f64,
+    abs: f64,
+    sq: f64,
+}
+
+pub fn run_worker(env: WorkerEnv) -> Result<()> {
+    let stage = env.stage;
+    let is_first = stage == 0;
+    let is_last = stage == env.map.stages - 1;
+    let cfg = env.manifest.config.clone();
+
+    // Artifact kinds this stage needs.
+    let mut kinds = vec!["block_fwd", "block_bwd", "block_dgrad"];
+    if is_first {
+        kinds.push("embed_fwd");
+        kinds.push("embed_wgrad");
+    }
+    if is_last {
+        kinds.push("head_loss_grad");
+    }
+    let rt = StageRuntime::load(&env.manifest, Some(&kinds))
+        .with_context(|| format!("stage {stage}: loading runtime"))?;
+
+    let mut params = StageParams::init(&cfg, &env.map, stage, env.seed);
+    let local_blocks = env.map.blocks_of_stage(stage);
+    let sizes = params.tensor_sizes();
+    let mut optimizer = Optimizer::new(env.optimizer, &sizes);
+    let corpus = BigramCorpus::new(cfg.vocab, env.seed);
+
+    // Zero ("live") freeze-mask tensors for block_bwd, in masked_names
+    // order, shaped per the manifest.
+    let zero_masks: Vec<HostTensor> = cfg
+        .masked_names
+        .iter()
+        .map(|n| {
+            let (a, b) = cfg.mask_shapes[n];
+            HostTensor::zeros(&[a, b])
+        })
+        .collect();
+
+    // Gradient accumulators aligned with optimizer tensor order.
+    let mut grads: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![0.0; n]).collect();
+    // How many microbatches contributed an (unfrozen) gradient per layer.
+    let num_layers = env.map.num_layers();
+    let mut layer_contrib = vec![0usize; num_layers];
+    let mut layer_deltas = vec![LayerDelta::default(); num_layers];
+    let layer_params: Vec<usize> = layer_param_counts(&params, &local_blocks, num_layers);
+    let freeze_rng = Rng::seed_from_u64(env.seed ^ 0xF0F0_F0F0);
+
+    loop {
+        let cmd = env.cmd_rx.recv().map_err(|_| anyhow!("coordinator gone"))?;
+        let StepCmd { t, lr, afr, collect_deltas } = match cmd {
+            WorkerCmd::Shutdown => return Ok(()),
+            WorkerCmd::Step(c) => c,
+        };
+
+        // Tiny-corpus epochs: cycle through a fixed window of batches.
+        let data_step = if env.corpus_cycle > 0 { 1 + (t - 1) % env.corpus_cycle } else { t };
+        let mut mb_states: Vec<Option<MbState>> = (0..env.microbatches).map(|_| None).collect();
+        let mut timings = Vec::with_capacity(env.schedule_order.len());
+        let mut loss_sum = 0.0f64;
+        let mut loss_count = 0usize;
+        for g in grads.iter_mut() {
+            g.iter_mut().for_each(|x| *x = 0.0);
+        }
+        layer_contrib.iter_mut().for_each(|c| *c = 0);
+        let mut frozen_weighted = 0.0f64;
+        let mut frozen_events = 0usize;
+
+        // Per-layer freeze decision for (t, mb, layer): uniform random
+        // selection (§3.3) from a stream every rank can reconstruct.
+        let frozen_for = |mb: usize, layer: usize, ratio: f64| -> bool {
+            if ratio <= 0.0 {
+                return false;
+            }
+            if ratio >= 1.0 {
+                return true;
+            }
+            let mut r = freeze_rng
+                .derive((t * 131 + mb) as u64, layer as u64);
+            r.bernoulli(ratio)
+        };
+
+        for &action in &env.schedule_order {
+            let mb = action.mb;
+            match action.kind {
+                ActionKind::Forward => {
+                    // Receive input *before* starting the stopwatch.
+                    let (tokens, mut x) = if is_first {
+                        let (inp, _) = corpus.batch(
+                            env.seed,
+                            data_step,
+                            mb,
+                            cfg.microbatch,
+                            cfg.seq_len,
+                        );
+                        (Some(inp), None)
+                    } else {
+                        let rx = env.fwd_rx.as_ref().expect("fwd_rx");
+                        (None, Some(rx.recv().map_err(|_| anyhow!("fwd channel closed"))?))
+                    };
+                    let start = Instant::now();
+                    if is_first {
+                        let tok = HostTensor::i32(
+                            vec![cfg.microbatch, cfg.seq_len],
+                            tokens.clone().unwrap(),
+                        );
+                        let emb = params.embed.as_ref().unwrap().clone();
+                        x = Some(
+                            rt.execute("embed_fwd", &[emb, tok])?.remove(0),
+                        );
+                    }
+                    let mut x = x.unwrap();
+                    let mut block_inputs = Vec::with_capacity(local_blocks.len());
+                    for b in &params.blocks {
+                        block_inputs.push(x.clone());
+                        let mut inputs: Vec<HostTensor> = b.tensors.clone();
+                        inputs.push(x);
+                        x = rt.execute("block_fwd", &inputs)?.remove(0);
+                    }
+                    timings.push((action, start.elapsed().as_secs_f64()));
+                    let final_h = if is_last {
+                        Some(x)
+                    } else {
+                        env.fwd_tx.as_ref().expect("fwd_tx").send(x).ok();
+                        None
+                    };
+                    // Targets are generated at backward time on the last
+                    // stage from the same deterministic stream.
+                    mb_states[mb] = Some(MbState { tokens, block_inputs, final_h });
+                }
+                ActionKind::Backward => {
+                    let state = mb_states[mb]
+                        .take()
+                        .ok_or_else(|| anyhow!("backward before forward for mb {mb}"))?;
+                    let ratio = afr.get(&action).copied().unwrap_or(0.0);
+                    // Receive upstream gradient before timing.
+                    let incoming = if is_last {
+                        None
+                    } else {
+                        let rx = env.bwd_rx.as_ref().expect("bwd_rx");
+                        Some(rx.recv().map_err(|_| anyhow!("bwd channel closed"))?)
+                    };
+                    let start = Instant::now();
+
+                    let mut gy = if is_last {
+                        // Head + loss (fused artifact). The head layer's
+                        // own freezing just drops its gradient.
+                        let (_, tgt) = corpus.batch(
+                            env.seed,
+                            data_step,
+                            mb,
+                            cfg.microbatch,
+                            cfg.seq_len,
+                        );
+                        let targets =
+                            HostTensor::i32(vec![cfg.microbatch, cfg.seq_len], tgt);
+                        let whead = params.head.as_ref().unwrap().clone();
+                        let mut out = rt.execute(
+                            "head_loss_grad",
+                            &[whead, state.final_h.clone().unwrap(), targets],
+                        )?;
+                        let loss = out[0].as_f32()?[0] as f64;
+                        loss_sum += loss;
+                        loss_count += 1;
+                        let gx = out.remove(1);
+                        let gw = out.remove(1);
+                        let head_layer = env.map.num_layers() - 1;
+                        let head_frozen = frozen_for(mb, head_layer, ratio);
+                        track_freeze(
+                            &mut frozen_weighted,
+                            &mut frozen_events,
+                            head_frozen,
+                            layer_params[head_layer],
+                        );
+                        if !head_frozen {
+                            let idx = grads.len() - 1;
+                            axpy(&mut grads[idx], gw.as_f32()?);
+                            layer_contrib[head_layer] += 1;
+                        }
+                        gx
+                    } else {
+                        incoming.unwrap()
+                    };
+
+                    // Blocks in reverse model order.
+                    for (local_idx, &layer) in local_blocks.iter().enumerate().rev() {
+                        let frozen = frozen_for(mb, layer, ratio);
+                        track_freeze(
+                            &mut frozen_weighted,
+                            &mut frozen_events,
+                            frozen,
+                            layer_params[layer],
+                        );
+                        let b = &params.blocks[local_idx];
+                        let x_in = state.block_inputs[local_idx].clone();
+                        if frozen {
+                            // Figure 3: dgrad only — the wgrad share of
+                            // this layer's backward is genuinely skipped.
+                            let mut inputs: Vec<HostTensor> = b.tensors.clone();
+                            inputs.push(x_in);
+                            inputs.push(gy);
+                            gy = rt.execute("block_dgrad", &inputs)?.remove(0);
+                        } else {
+                            let mut inputs: Vec<HostTensor> = b.tensors.clone();
+                            inputs.extend(zero_masks.iter().cloned());
+                            inputs.push(x_in);
+                            inputs.push(gy);
+                            let mut out = rt.execute("block_bwd", &inputs)?;
+                            gy = out.remove(0);
+                            let base = tensor_base(&params, local_idx);
+                            for (k, g) in out.iter().enumerate() {
+                                axpy(&mut grads[base + k], g.as_f32()?);
+                            }
+                            layer_contrib[layer] += 1;
+                        }
+                    }
+
+                    // Embedding wgrad (stage 0).
+                    if is_first {
+                        let emb_frozen = frozen_for(mb, 0, ratio);
+                        track_freeze(
+                            &mut frozen_weighted,
+                            &mut frozen_events,
+                            emb_frozen,
+                            layer_params[0],
+                        );
+                        if !emb_frozen {
+                            let tok = HostTensor::i32(
+                                vec![cfg.microbatch, cfg.seq_len],
+                                state.tokens.clone().unwrap(),
+                            );
+                            let gemb =
+                                rt.execute("embed_wgrad", &[tok, gy.clone()])?.remove(0);
+                            axpy(&mut grads[0], gemb.as_f32()?);
+                            layer_contrib[0] += 1;
+                        }
+                    }
+                    timings.push((action, start.elapsed().as_secs_f64()));
+                    if !is_first {
+                        env.bwd_tx.as_ref().expect("bwd_tx").send(gy).ok();
+                    }
+                }
+                // The real engine runs combined-backward schedules
+                // (GPipe / 1F1B); ZBV's split units are simulator-only.
+                ActionKind::BackwardDgrad | ActionKind::BackwardWgrad => {
+                    return Err(anyhow!("engine does not execute split-backward schedules"));
+                }
+            }
+        }
+
+        // ---- optimizer step (update rule eq. 20: mean of masked
+        // microbatch gradients; layers with zero contributions skip) ----
+        let inv_m = 1.0 / env.microbatches as f32;
+        apply_updates(
+            &mut params,
+            &local_blocks,
+            &mut optimizer,
+            &mut grads,
+            lr,
+            inv_m,
+            &layer_contrib,
+            &mut layer_deltas,
+        );
+
+        let deltas = if collect_deltas {
+            let mut out = Vec::new();
+            for (layer, d) in layer_deltas.iter_mut().enumerate() {
+                if layer_params[layer] > 0 {
+                    out.push((
+                        layer,
+                        UnitDelta { l2: d.sq.sqrt(), signed: d.signed, abs: d.abs },
+                    ));
+                    *d = LayerDelta::default();
+                }
+            }
+            out
+        } else {
+            Vec::new()
+        };
+
+        env.report_tx
+            .send(StepReport {
+                stage,
+                timings,
+                loss: (loss_count > 0).then(|| loss_sum / loss_count as f64),
+                deltas,
+                frozen_fraction: if frozen_events == 0 {
+                    0.0
+                } else {
+                    frozen_weighted / frozen_events as f64
+                },
+            })
+            .ok();
+    }
+}
+
+fn axpy(acc: &mut [f32], g: &[f32]) {
+    debug_assert_eq!(acc.len(), g.len());
+    for (a, &b) in acc.iter_mut().zip(g) {
+        *a += b;
+    }
+}
+
+fn track_freeze(weighted: &mut f64, events: &mut usize, frozen: bool, params: usize) {
+    if frozen {
+        *weighted += params as f64;
+    }
+    *events += params;
+}
+
+/// Optimizer tensor index where local block `local_idx`'s tensors start.
+fn tensor_base(params: &StageParams, local_idx: usize) -> usize {
+    let embed_off = params.embed.is_some() as usize;
+    embed_off + local_idx * params.blocks[0].tensors.len()
+}
+
+/// Parameter count per global layer on this stage (0 elsewhere).
+fn layer_param_counts(
+    params: &StageParams,
+    local_blocks: &[usize],
+    num_layers: usize,
+) -> Vec<usize> {
+    let mut out = vec![0usize; num_layers];
+    if let Some(e) = &params.embed {
+        out[0] = e.len();
+    }
+    for (i, &layer) in local_blocks.iter().enumerate() {
+        out[layer] = params.blocks[i].param_count();
+    }
+    if let Some(h) = &params.head {
+        out[num_layers - 1] = h.len();
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn apply_updates(
+    params: &mut StageParams,
+    local_blocks: &[usize],
+    optimizer: &mut Optimizer,
+    grads: &mut [Vec<f32>],
+    lr: f64,
+    inv_m: f32,
+    layer_contrib: &[usize],
+    layer_deltas: &mut [LayerDelta],
+) {
+    let num_layers = layer_deltas.len();
+    let mut idx = 0usize;
+    let mut do_tensor = |tensor: &mut HostTensor,
+                         layer: usize,
+                         optimizer: &mut Optimizer,
+                         grads: &mut [Vec<f32>],
+                         idx: &mut usize| {
+        let frozen = layer_contrib[layer] == 0;
+        let g = &mut grads[*idx];
+        g.iter_mut().for_each(|x| *x *= inv_m);
+        let stats: UpdateStats =
+            optimizer.step(*idx, tensor.as_f32_mut().unwrap(), g, lr, frozen);
+        layer_deltas[layer].signed += stats.signed;
+        layer_deltas[layer].abs += stats.abs;
+        layer_deltas[layer].sq += stats.sq;
+        *idx += 1;
+    };
+    if let Some(e) = params.embed.as_mut() {
+        do_tensor(e, 0, optimizer, grads, &mut idx);
+    }
+    for (i, &layer) in local_blocks.iter().enumerate() {
+        for t in params.blocks[i].tensors.iter_mut() {
+            do_tensor(t, layer, optimizer, grads, &mut idx);
+        }
+    }
+    if let Some(h) = params.head.as_mut() {
+        do_tensor(h, num_layers - 1, optimizer, grads, &mut idx);
+    }
+}

@@ -1,0 +1,261 @@
+//! APF baseline (Chen et al. 2023, §2.3): freezes parameters whose
+//! updates oscillate without a clear trend, measured by the *effective
+//! perturbation score*
+//!
+//!   Score_K = |E_K| / E_K^abs,
+//!   E_K     = α E_{K−1} + (1−α) Δ_K,
+//!   E_K^abs = α E_{K−1}^abs + (1−α) |Δ_K|          (eq. 2)
+//!
+//! at periodic stability checks, where Δ_K is the cumulative parameter
+//! update since the previous check. Units whose score falls below T_APF
+//! are frozen. APF is pipeline-unaware: its freeze decisions ignore
+//! schedule structure, which is exactly the over-freezing failure mode
+//! Figure 1(b) illustrates.
+
+use crate::freeze::layout::ModelLayout;
+use crate::freeze::{Controller, FreezePlan, PhaseConfig, UnitDelta};
+use crate::types::{Action, ActionKind, FreezeMethod};
+
+#[derive(Clone, Debug)]
+pub struct ApfConfig {
+    /// Freezing threshold T_APF (Table 3: 1e-4 … 1e-2 depending on task).
+    pub threshold: f64,
+    /// EMA factor α of eq. 2.
+    pub alpha: f64,
+    /// Steps between stability checks.
+    pub check_interval: usize,
+}
+
+impl Default for ApfConfig {
+    fn default() -> Self {
+        ApfConfig { threshold: 0.3, alpha: 0.5, check_interval: 10 }
+    }
+}
+
+pub struct Apf {
+    cfg: ApfConfig,
+    layout: ModelLayout,
+    phases: PhaseConfig,
+    /// E_K and E_K^abs per unit.
+    e: Vec<f64>,
+    e_abs: Vec<f64>,
+    /// Latest scores (1.0 = trending, 0.0 = oscillating/stable).
+    score: Vec<f64>,
+    /// Current frozen mask.
+    frozen: Vec<bool>,
+    /// Number of stability checks performed.
+    checks: usize,
+    last_check_step: usize,
+    /// Cached per-stage frozen fractions.
+    stage_frac: Vec<f64>,
+    /// Actions of one batch, used to emit per-action AFRs.
+    actions: Vec<Action>,
+}
+
+impl Apf {
+    pub fn new(cfg: ApfConfig, layout: ModelLayout, phases: PhaseConfig) -> Apf {
+        let n = layout.num_units();
+        let stages = layout.num_stages;
+        Apf {
+            cfg,
+            layout,
+            phases,
+            e: vec![0.0; n],
+            e_abs: vec![0.0; n],
+            score: vec![1.0; n],
+            frozen: vec![false; n],
+            checks: 0,
+            last_check_step: 0,
+            stage_frac: vec![0.0; stages],
+            actions: Vec::new(),
+        }
+    }
+
+    /// Let the environment declare the batch's actions once so plans can
+    /// enumerate backward actions. (Factory wiring calls this lazily via
+    /// `ensure_actions`.)
+    pub fn set_actions(&mut self, actions: Vec<Action>) {
+        self.actions = actions;
+    }
+
+    fn stability_check(&mut self) {
+        self.checks += 1;
+        for u in 0..self.layout.num_units() {
+            self.score[u] = if self.e_abs[u] > 0.0 {
+                (self.e[u].abs() / self.e_abs[u]).clamp(0.0, 1.0)
+            } else {
+                // Never updated (or fully cancelled): treat as stable.
+                0.0
+            };
+            self.frozen[u] = self.score[u] < self.cfg.threshold;
+        }
+        for s in 0..self.layout.num_stages {
+            self.stage_frac[s] = self.layout.frozen_fraction_of_stage(&self.frozen, s);
+        }
+    }
+
+    /// Continuous freeze priority for the hybrid variants (Appendix C.2):
+    /// units already in APF's mask first, then by descending stability.
+    pub fn priorities(&self) -> Vec<f64> {
+        (0..self.layout.num_units())
+            .map(|u| {
+                let base = if self.frozen[u] { 10.0 } else { 0.0 };
+                base + (1.0 - self.score[u])
+            })
+            .collect()
+    }
+
+    pub fn frozen_mask(&self) -> &[bool] {
+        &self.frozen
+    }
+
+    pub fn scores(&self) -> &[f64] {
+        &self.score
+    }
+}
+
+impl Controller for Apf {
+    fn method(&self) -> FreezeMethod {
+        FreezeMethod::Apf
+    }
+
+    fn plan(&mut self, t: usize) -> FreezePlan {
+        if t <= self.phases.t_warmup || self.checks == 0 {
+            return FreezePlan::none();
+        }
+        let mut plan = FreezePlan::none();
+        for a in &self.actions {
+            if a.kind.freezable() {
+                let frac = self.stage_frac[a.stage.min(self.layout.num_stages - 1)];
+                if frac > 0.0 {
+                    plan.afr.insert(*a, frac);
+                }
+            }
+        }
+        plan.priority = Some(
+            (0..self.layout.num_units())
+                .map(|u| if self.frozen[u] { 1.0 } else { 0.0 })
+                .collect(),
+        );
+        plan
+    }
+
+    fn observe_updates(&mut self, t: usize, deltas: &[UnitDelta]) {
+        assert_eq!(deltas.len(), self.layout.num_units());
+        if t <= self.phases.t_warmup {
+            return;
+        }
+        // eq. 2 EMA update with the window-cumulative Δ_K.
+        let a = self.cfg.alpha;
+        for (u, d) in deltas.iter().enumerate() {
+            self.e[u] = a * self.e[u] + (1.0 - a) * d.signed;
+            self.e_abs[u] = a * self.e_abs[u] + (1.0 - a) * d.abs;
+        }
+        if t - self.last_check_step >= self.cfg.check_interval || self.last_check_step == 0 {
+            self.last_check_step = t;
+            self.stability_check();
+        }
+    }
+}
+
+/// Helper for environments: enumerate freezable backward actions for a
+/// schedule once, to hand to metric-driven controllers.
+pub fn backward_actions(schedule: &crate::schedule::Schedule) -> Vec<Action> {
+    schedule
+        .all_actions()
+        .into_iter()
+        .filter(|a| matches!(a.kind, ActionKind::Backward | ActionKind::BackwardWgrad))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+    use crate::types::ScheduleKind;
+
+    fn make() -> Apf {
+        let layout = ModelLayout::uniform(4, 2, 100, 2);
+        let mut apf = Apf::new(
+            ApfConfig { threshold: 0.3, alpha: 0.9, check_interval: 1 },
+            layout,
+            PhaseConfig::new(5, 10, 20),
+        );
+        let s = Schedule::build(ScheduleKind::GPipe, 2, 2, 1);
+        apf.set_actions(s.all_actions());
+        apf
+    }
+
+    fn deltas(signed: &[f64]) -> Vec<UnitDelta> {
+        signed
+            .iter()
+            .map(|&s| UnitDelta { l2: s.abs(), signed: s, abs: s.abs() })
+            .collect()
+    }
+
+    #[test]
+    fn oscillating_units_freeze_trending_units_do_not() {
+        let mut apf = make();
+        // Units 0..4: oscillate ±1; units 4..8: steady drift +1.
+        for t in 6..=30 {
+            let sign = if t % 2 == 0 { 1.0 } else { -1.0 };
+            let d: Vec<f64> = (0..8).map(|u| if u < 4 { sign } else { 1.0 }).collect();
+            apf.observe_updates(t, &deltas(&d));
+        }
+        let mask = apf.frozen_mask();
+        assert!(mask[..4].iter().all(|&b| b), "oscillating units should freeze: {mask:?}");
+        assert!(mask[4..].iter().all(|&b| !b), "trending units must stay live: {mask:?}");
+    }
+
+    #[test]
+    fn plan_reports_stage_fractions() {
+        let mut apf = make();
+        for t in 6..=30 {
+            let sign = if t % 2 == 0 { 1.0 } else { -1.0 };
+            let d: Vec<f64> = (0..8).map(|u| if u < 4 { sign } else { 1.0 }).collect();
+            apf.observe_updates(t, &deltas(&d));
+        }
+        let plan = apf.plan(31);
+        // Units 0..4 = layers 0..2 = stage 0 fully frozen; stage 1 live.
+        let b0 = Action::b(0, 0);
+        let b1 = Action::b(0, 1);
+        assert!((plan.ratio_of(&b0) - 1.0).abs() < 1e-9);
+        assert_eq!(plan.ratio_of(&b1), 0.0);
+    }
+
+    #[test]
+    fn silent_before_first_check_and_during_warmup() {
+        let mut apf = make();
+        assert!(apf.plan(3).afr.is_empty());
+        // Updates during warm-up are ignored.
+        apf.observe_updates(3, &deltas(&[0.0; 8]));
+        assert!(apf.plan(6).afr.is_empty());
+    }
+
+    #[test]
+    fn frozen_units_stay_frozen() {
+        let mut apf = make();
+        for t in 6..=20 {
+            let sign = if t % 2 == 0 { 1.0 } else { -1.0 };
+            apf.observe_updates(t, &deltas(&[sign; 8]));
+        }
+        assert!(apf.frozen_mask().iter().all(|&b| b));
+        // Frozen ⇒ zero future updates ⇒ scores stay below threshold.
+        for t in 21..=40 {
+            apf.observe_updates(t, &deltas(&[0.0; 8]));
+        }
+        assert!(apf.frozen_mask().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn priorities_rank_frozen_first() {
+        let mut apf = make();
+        for t in 6..=20 {
+            let sign = if t % 2 == 0 { 1.0 } else { -1.0 };
+            let d: Vec<f64> = (0..8).map(|u| if u < 4 { sign } else { 1.0 }).collect();
+            apf.observe_updates(t, &deltas(&d));
+        }
+        let pri = apf.priorities();
+        assert!(pri[0] > pri[5]);
+    }
+}

@@ -1,0 +1,281 @@
+//! AutoFreeze baseline (Liu et al. 2021, §2.3): monotonic prefix freezing
+//! driven by the per-layer *gradient-norm change*
+//!
+//!   Score_K = | ‖Δ_{K−1}‖ − ‖Δ_K‖ | / ‖Δ_{K−1}‖            (eq. 1)
+//!
+//! where Δ_K is the layer's cumulative parameter update since the
+//! previous stability check. A layer freezes when (i) every preceding
+//! layer is already frozen and (ii) its score lies in the lower
+//! P_Auto-th percentile among all layers. Once frozen, a layer stays
+//! frozen (the prefix only grows).
+
+use crate::freeze::layout::ModelLayout;
+use crate::freeze::{Controller, FreezePlan, PhaseConfig, UnitDelta};
+use crate::types::{Action, FreezeMethod};
+use crate::util::stats::percentile;
+
+#[derive(Clone, Debug)]
+pub struct AutoFreezeConfig {
+    /// Percentile P_Auto (Table 3 uses 80%).
+    pub percentile: f64,
+    /// Steps between stability checks.
+    pub check_interval: usize,
+}
+
+impl Default for AutoFreezeConfig {
+    fn default() -> Self {
+        AutoFreezeConfig { percentile: 80.0, check_interval: 10 }
+    }
+}
+
+pub struct AutoFreeze {
+    cfg: AutoFreezeConfig,
+    layout: ModelLayout,
+    phases: PhaseConfig,
+    /// ‖Δ_{K−1}‖ per layer from the previous check.
+    prev_norms: Option<Vec<f64>>,
+    /// Scores from the latest check.
+    scores: Vec<f64>,
+    /// Frozen prefix length (layers 0..prefix are frozen).
+    prefix: usize,
+    checks: usize,
+    last_check_step: usize,
+    stage_frac: Vec<f64>,
+    actions: Vec<Action>,
+    /// Window accumulator of per-unit signed updates (for layer norms).
+    acc_signed: Vec<f64>,
+}
+
+impl AutoFreeze {
+    pub fn new(cfg: AutoFreezeConfig, layout: ModelLayout, phases: PhaseConfig) -> AutoFreeze {
+        let layers = layout.num_layers();
+        let units = layout.num_units();
+        let stages = layout.num_stages;
+        AutoFreeze {
+            cfg,
+            layout,
+            phases,
+            prev_norms: None,
+            scores: vec![f64::INFINITY; layers],
+            prefix: 0,
+            checks: 0,
+            last_check_step: 0,
+            stage_frac: vec![0.0; stages],
+            actions: Vec::new(),
+            acc_signed: vec![0.0; units],
+        }
+    }
+
+    pub fn set_actions(&mut self, actions: Vec<Action>) {
+        self.actions = actions;
+    }
+
+    pub fn frozen_prefix(&self) -> usize {
+        self.prefix
+    }
+
+    pub fn layer_scores(&self) -> &[f64] {
+        &self.scores
+    }
+
+    /// Layer norms ‖Δ_K‖ from the window accumulator: the L2 norm of the
+    /// vector of per-unit cumulative signed updates (exact for
+    /// per-parameter units).
+    fn layer_norms(&self) -> Vec<f64> {
+        let mut sq = vec![0.0f64; self.layout.num_layers()];
+        for u in 0..self.layout.num_units() {
+            sq[self.layout.unit_layer[u]] += self.acc_signed[u] * self.acc_signed[u];
+        }
+        sq.into_iter().map(f64::sqrt).collect()
+    }
+
+    fn stability_check(&mut self) {
+        let norms = self.layer_norms();
+        self.acc_signed.iter_mut().for_each(|x| *x = 0.0);
+        let Some(prev) = self.prev_norms.replace(norms.clone()) else {
+            // First check only primes ‖Δ_{K−1}‖.
+            self.checks += 1;
+            return;
+        };
+        self.checks += 1;
+        let layers = self.layout.num_layers();
+        for l in 0..layers {
+            self.scores[l] = if prev[l] > 0.0 {
+                (prev[l] - norms[l]).abs() / prev[l]
+            } else if norms[l] > 0.0 {
+                f64::INFINITY
+            } else {
+                0.0 // frozen layer: unchanged, trivially stable
+            };
+        }
+        // Percentile threshold over *all* layers' scores (eq. 1 rule ii),
+        // with infinities clipped for percentile computation.
+        let finite: Vec<f64> =
+            self.scores.iter().map(|&s| if s.is_finite() { s } else { 1e9 }).collect();
+        let thresh = percentile(&finite, self.cfg.percentile);
+        // Rule (i): extend the frozen prefix while layers qualify.
+        while self.prefix < layers && self.scores[self.prefix] <= thresh {
+            self.prefix += 1;
+        }
+        // Cache stage fractions from the prefix mask.
+        let mask = self.frozen_mask();
+        for s in 0..self.layout.num_stages {
+            self.stage_frac[s] = self.layout.frozen_fraction_of_stage(&mask, s);
+        }
+    }
+
+    pub fn frozen_mask(&self) -> Vec<bool> {
+        (0..self.layout.num_units())
+            .map(|u| self.layout.unit_layer[u] < self.prefix)
+            .collect()
+    }
+
+    /// Hybrid priority (Appendix C.2): frozen prefix first, then layers
+    /// by measured stability (small norm-change score), falling back to
+    /// front-first order before the first scored check.
+    pub fn priorities(&self) -> Vec<f64> {
+        let layers = self.layout.num_layers().max(1) as f64;
+        (0..self.layout.num_units())
+            .map(|u| {
+                let l = self.layout.unit_layer[u];
+                let base = if l < self.prefix { 10.0 } else { 0.0 };
+                let s = self.scores[l];
+                let stability = if s.is_finite() {
+                    1.0 / (1.0 + s)
+                } else {
+                    (layers - l as f64) / layers
+                };
+                base + stability
+            })
+            .collect()
+    }
+}
+
+impl Controller for AutoFreeze {
+    fn method(&self) -> FreezeMethod {
+        FreezeMethod::AutoFreeze
+    }
+
+    fn plan(&mut self, t: usize) -> FreezePlan {
+        if t <= self.phases.t_warmup || self.prefix == 0 {
+            return FreezePlan::none();
+        }
+        let mut plan = FreezePlan::none();
+        for a in &self.actions {
+            if a.kind.freezable() {
+                let frac = self.stage_frac[a.stage.min(self.layout.num_stages - 1)];
+                if frac > 0.0 {
+                    plan.afr.insert(*a, frac);
+                }
+            }
+        }
+        let mask = self.frozen_mask();
+        plan.priority =
+            Some(mask.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect());
+        plan
+    }
+
+    fn observe_updates(&mut self, t: usize, deltas: &[UnitDelta]) {
+        assert_eq!(deltas.len(), self.layout.num_units());
+        if t <= self.phases.t_warmup {
+            return;
+        }
+        for (acc, d) in self.acc_signed.iter_mut().zip(deltas) {
+            *acc += d.signed;
+        }
+        if t - self.last_check_step >= self.cfg.check_interval || self.last_check_step == 0 {
+            self.last_check_step = t;
+            self.stability_check();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+    use crate::types::ScheduleKind;
+
+    fn make(pct: f64) -> AutoFreeze {
+        let layout = ModelLayout::uniform(4, 1, 100, 2);
+        let mut af = AutoFreeze::new(
+            AutoFreezeConfig { percentile: pct, check_interval: 1 },
+            layout,
+            PhaseConfig::new(5, 10, 20),
+        );
+        let s = Schedule::build(ScheduleKind::GPipe, 2, 2, 1);
+        af.set_actions(s.all_actions());
+        af
+    }
+
+    /// Front layers converge (small norm change), back layers keep
+    /// moving (large change): the frozen prefix should cover the front.
+    #[test]
+    fn freezes_converged_prefix() {
+        let mut af = make(50.0);
+        for t in 6..=30 {
+            // Layer l's update norm: front layers constant (stable),
+            // back layers growing each window (unstable).
+            let d: Vec<UnitDelta> = (0..4)
+                .map(|l| {
+                    let mag = if l < 2 { 1.0 } else { 1.0 + 0.5 * t as f64 };
+                    UnitDelta { l2: mag, signed: mag, abs: mag }
+                })
+                .collect();
+            af.observe_updates(t, &d);
+        }
+        assert!(af.frozen_prefix() >= 2, "prefix {} < 2", af.frozen_prefix());
+        assert!(af.frozen_prefix() < 4, "over-froze the moving tail");
+    }
+
+    #[test]
+    fn prefix_is_monotone() {
+        let mut af = make(80.0);
+        let mut prev = 0;
+        for t in 6..=40 {
+            let d: Vec<UnitDelta> = (0..4)
+                .map(|l| {
+                    let mag = 1.0 + 0.2 * (t as f64) * (l as f64);
+                    UnitDelta { l2: mag, signed: mag, abs: mag }
+                })
+                .collect();
+            af.observe_updates(t, &d);
+            assert!(af.frozen_prefix() >= prev, "prefix shrank");
+            prev = af.frozen_prefix();
+        }
+    }
+
+    #[test]
+    fn plan_empty_until_first_freeze() {
+        let mut af = make(80.0);
+        assert!(af.plan(12).afr.is_empty());
+    }
+
+    #[test]
+    fn plan_reflects_prefix_fractions() {
+        let mut af = make(95.0);
+        for t in 6..=30 {
+            let d: Vec<UnitDelta> = (0..4)
+                .map(|l| {
+                    // Only layer 0 is stable.
+                    let mag = if l == 0 { 1.0 } else { (t as f64) * (l as f64 + 1.0) };
+                    UnitDelta { l2: mag, signed: mag, abs: mag }
+                })
+                .collect();
+            af.observe_updates(t, &d);
+        }
+        let prefix = af.frozen_prefix();
+        assert!(prefix >= 1);
+        let plan = af.plan(31);
+        // Stage 0 hosts layers 0..2 → frozen fraction = prefix/2 capped.
+        let expect = (prefix.min(2) as f64) / 2.0;
+        assert!((plan.ratio_of(&Action::b(0, 0)) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hybrid_priorities_prefer_front() {
+        let af = make(80.0);
+        let pri = af.priorities();
+        assert!(pri[0] > pri[3], "front layers must outrank back layers");
+    }
+}

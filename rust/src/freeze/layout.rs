@@ -1,0 +1,185 @@
+//! Model layout: the bookkeeping map between parameter *units*, model
+//! layers, and pipeline stages that every controller consumes.
+//!
+//! * A **layer** is a schedulable model block (transformer block,
+//!   embedding, head, ConvNeXt stage slice, …).
+//! * A **unit** is the granularity of freeze bookkeeping inside a layer:
+//!   per-parameter (APF's original design), per-tensor block (real
+//!   engine), or the layer itself (paper-scale simulator).
+//! * A **stage** (virtual pipeline stage) owns a contiguous range of
+//!   layers, assigned by a partitioning heuristic (`crate::partition`).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelLayout {
+    /// Parameter count per unit.
+    pub unit_params: Vec<u64>,
+    /// Layer owning each unit.
+    pub unit_layer: Vec<usize>,
+    /// Stage owning each layer.
+    pub layer_stage: Vec<usize>,
+    /// Total number of virtual stages.
+    pub num_stages: usize,
+}
+
+impl ModelLayout {
+    /// Validate internal consistency; panics on malformed layouts (these
+    /// are constructed by code, not user input).
+    pub fn new(
+        unit_params: Vec<u64>,
+        unit_layer: Vec<usize>,
+        layer_stage: Vec<usize>,
+        num_stages: usize,
+    ) -> ModelLayout {
+        assert_eq!(unit_params.len(), unit_layer.len(), "unit arrays disagree");
+        assert!(!unit_params.is_empty(), "layout needs at least one unit");
+        let num_layers = layer_stage.len();
+        for &l in &unit_layer {
+            assert!(l < num_layers, "unit references layer {l} ≥ {num_layers}");
+        }
+        for &s in &layer_stage {
+            assert!(s < num_stages, "layer references stage {s} ≥ {num_stages}");
+        }
+        ModelLayout { unit_params, unit_layer, layer_stage, num_stages }
+    }
+
+    /// Uniform layout: `layers` layers of `units_per_layer` equal units of
+    /// `params_per_unit` parameters, layers split evenly over stages.
+    pub fn uniform(
+        layers: usize,
+        units_per_layer: usize,
+        params_per_unit: u64,
+        num_stages: usize,
+    ) -> ModelLayout {
+        assert!(layers >= num_stages, "fewer layers than stages");
+        let layer_stage: Vec<usize> =
+            (0..layers).map(|l| l * num_stages / layers).collect();
+        let mut unit_params = Vec::new();
+        let mut unit_layer = Vec::new();
+        for l in 0..layers {
+            for _ in 0..units_per_layer {
+                unit_params.push(params_per_unit);
+                unit_layer.push(l);
+            }
+        }
+        ModelLayout::new(unit_params, unit_layer, layer_stage, num_stages)
+    }
+
+    pub fn num_units(&self) -> usize {
+        self.unit_params.len()
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layer_stage.len()
+    }
+
+    /// Stage of a unit (through its layer).
+    pub fn unit_stage(&self, unit: usize) -> usize {
+        self.layer_stage[self.unit_layer[unit]]
+    }
+
+    /// Total parameters in the model.
+    pub fn total_params(&self) -> u64 {
+        self.unit_params.iter().sum()
+    }
+
+    /// Units belonging to a stage.
+    pub fn units_of_stage(&self, stage: usize) -> Vec<usize> {
+        (0..self.num_units()).filter(|&u| self.unit_stage(u) == stage).collect()
+    }
+
+    /// Layers belonging to a stage (ascending).
+    pub fn layers_of_stage(&self, stage: usize) -> Vec<usize> {
+        (0..self.num_layers()).filter(|&l| self.layer_stage[l] == stage).collect()
+    }
+
+    /// Parameter count per stage.
+    pub fn params_of_stage(&self, stage: usize) -> u64 {
+        (0..self.num_units())
+            .filter(|&u| self.unit_stage(u) == stage)
+            .map(|u| self.unit_params[u])
+            .sum()
+    }
+
+    /// Parameter count of one layer.
+    pub fn params_of_layer(&self, layer: usize) -> u64 {
+        (0..self.num_units())
+            .filter(|&u| self.unit_layer[u] == layer)
+            .map(|u| self.unit_params[u])
+            .sum()
+    }
+
+    /// Fraction of the model's parameters covered by a frozen-unit mask.
+    pub fn frozen_fraction(&self, mask: &[bool]) -> f64 {
+        assert_eq!(mask.len(), self.num_units());
+        let frozen: u64 = (0..self.num_units())
+            .filter(|&u| mask[u])
+            .map(|u| self.unit_params[u])
+            .sum();
+        frozen as f64 / self.total_params().max(1) as f64
+    }
+
+    /// Fraction frozen within one stage.
+    pub fn frozen_fraction_of_stage(&self, mask: &[bool], stage: usize) -> f64 {
+        let total = self.params_of_stage(stage);
+        if total == 0 {
+            return 0.0;
+        }
+        let frozen: u64 = self
+            .units_of_stage(stage)
+            .iter()
+            .filter(|&&u| mask[u])
+            .map(|&u| self.unit_params[u])
+            .sum();
+        frozen as f64 / total as f64
+    }
+
+    /// Re-assign layers to stages (used by partition heuristics).
+    pub fn with_layer_stage(&self, layer_stage: Vec<usize>, num_stages: usize) -> ModelLayout {
+        ModelLayout::new(self.unit_params.clone(), self.unit_layer.clone(), layer_stage, num_stages)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_layout_partitions_evenly() {
+        let l = ModelLayout::uniform(8, 2, 100, 4);
+        assert_eq!(l.num_units(), 16);
+        assert_eq!(l.num_layers(), 8);
+        assert_eq!(l.total_params(), 1600);
+        for s in 0..4 {
+            assert_eq!(l.layers_of_stage(s).len(), 2);
+            assert_eq!(l.params_of_stage(s), 400);
+        }
+    }
+
+    #[test]
+    fn unit_stage_mapping() {
+        let l = ModelLayout::uniform(4, 1, 10, 2);
+        assert_eq!(l.unit_stage(0), 0);
+        assert_eq!(l.unit_stage(3), 1);
+    }
+
+    #[test]
+    fn frozen_fraction_weighted_by_params() {
+        let l = ModelLayout::new(vec![100, 300], vec![0, 1], vec![0, 0], 1);
+        assert_eq!(l.frozen_fraction(&[true, false]), 0.25);
+        assert_eq!(l.frozen_fraction(&[false, true]), 0.75);
+        assert_eq!(l.frozen_fraction_of_stage(&[true, true], 0), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_inconsistent_arrays() {
+        ModelLayout::new(vec![1, 2], vec![0], vec![0], 1);
+    }
+
+    #[test]
+    fn params_of_layer() {
+        let l = ModelLayout::new(vec![10, 20, 30], vec![0, 0, 1], vec![0, 1], 2);
+        assert_eq!(l.params_of_layer(0), 30);
+        assert_eq!(l.params_of_layer(1), 30);
+    }
+}

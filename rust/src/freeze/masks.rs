@@ -1,0 +1,165 @@
+//! Frozen-unit selection: converts an action's actual freeze ratio into a
+//! concrete unit mask for one stage.
+//!
+//! Two modes, matching the paper:
+//! * **Uniform random** (§3.3): each unit of the stage is frozen
+//!   independently with probability AFR, so `E[|I_i|] = AFR · N_s`
+//!   (Algorithm 1 line 18). The RNG stream is derived from
+//!   `(step, stage)` so every rank reconstructs identical masks without
+//!   communication.
+//! * **Priority-driven** (hybrids, Appendix C.2 / baselines): units are
+//!   sorted by descending priority (most stable first) and frozen
+//!   greedily until the stage's frozen-parameter fraction reaches AFR.
+
+use crate::freeze::layout::ModelLayout;
+use crate::util::rng::Rng;
+
+/// Compute the frozen-unit mask (over *all* units; entries outside the
+/// stage stay `false`) for one stage at the given ratio.
+pub fn select_frozen_units(
+    layout: &ModelLayout,
+    stage: usize,
+    ratio: f64,
+    priority: Option<&[f64]>,
+    rng: &mut Rng,
+) -> Vec<bool> {
+    let mut mask = vec![false; layout.num_units()];
+    if ratio <= 0.0 {
+        return mask;
+    }
+    let units = layout.units_of_stage(stage);
+    if units.is_empty() {
+        return mask;
+    }
+    match priority {
+        None => {
+            // Bernoulli(AFR) per unit — exact expectation, unbiased.
+            for &u in &units {
+                if rng.bernoulli(ratio.min(1.0)) {
+                    mask[u] = true;
+                }
+            }
+        }
+        Some(pri) => {
+            assert_eq!(pri.len(), layout.num_units(), "priority length mismatch");
+            // Greedy: highest priority first; stop when the frozen
+            // parameter mass reaches ratio · N_s.
+            let mut sorted = units.clone();
+            sorted.sort_by(|&a, &b| {
+                pri[b].partial_cmp(&pri[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+            });
+            let total: u64 = units.iter().map(|&u| layout.unit_params[u]).sum();
+            let budget = (ratio.min(1.0) * total as f64).round() as u64;
+            let mut frozen = 0u64;
+            for &u in &sorted {
+                if frozen >= budget {
+                    break;
+                }
+                mask[u] = true;
+                frozen += layout.unit_params[u];
+            }
+        }
+    }
+    mask
+}
+
+/// Merge per-stage masks into one model-wide mask (logical OR).
+pub fn merge_masks(masks: &[Vec<bool>]) -> Vec<bool> {
+    let n = masks.first().map(|m| m.len()).unwrap_or(0);
+    let mut out = vec![false; n];
+    for m in masks {
+        assert_eq!(m.len(), n);
+        for (o, &b) in out.iter_mut().zip(m) {
+            *o |= b;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> ModelLayout {
+        // 2 stages × 2 layers × 4 units of 100 params.
+        ModelLayout::uniform(4, 4, 100, 2)
+    }
+
+    #[test]
+    fn zero_ratio_freezes_nothing() {
+        let l = layout();
+        let mut rng = Rng::seed_from_u64(1);
+        let m = select_frozen_units(&l, 0, 0.0, None, &mut rng);
+        assert!(m.iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn random_selection_expectation() {
+        let l = layout();
+        let ratio = 0.6;
+        let trials = 2000;
+        let mut frozen = 0usize;
+        let base = Rng::seed_from_u64(7);
+        for t in 0..trials {
+            let mut rng = base.derive(t as u64, 0);
+            let m = select_frozen_units(&l, 0, ratio, None, &mut rng);
+            frozen += m.iter().filter(|&&b| b).count();
+        }
+        let per_trial = frozen as f64 / trials as f64;
+        // Stage 0 has 8 units → expect 4.8 frozen per trial.
+        assert!((per_trial - 4.8).abs() < 0.15, "E[|I|]={per_trial}");
+    }
+
+    #[test]
+    fn random_selection_stays_in_stage() {
+        let l = layout();
+        let mut rng = Rng::seed_from_u64(3);
+        let m = select_frozen_units(&l, 1, 1.0, None, &mut rng);
+        for u in 0..l.num_units() {
+            if l.unit_stage(u) == 1 {
+                assert!(m[u]);
+            } else {
+                assert!(!m[u]);
+            }
+        }
+    }
+
+    #[test]
+    fn priority_selection_takes_top_units() {
+        let l = layout();
+        // Priorities: unit index (later units more stable).
+        let pri: Vec<f64> = (0..l.num_units()).map(|u| u as f64).collect();
+        let mut rng = Rng::seed_from_u64(5);
+        let m = select_frozen_units(&l, 0, 0.5, Some(&pri), &mut rng);
+        // Stage 0 units are 0..8; budget = 4 units (equal sizes); the
+        // top-priority ones are 7,6,5,4.
+        let frozen: Vec<usize> = (0..8).filter(|&u| m[u]).collect();
+        assert_eq!(frozen, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn priority_respects_param_mass() {
+        // Unequal unit sizes: one giant unit uses the whole budget.
+        let l = ModelLayout::new(vec![900, 50, 50], vec![0, 0, 0], vec![0], 1);
+        let pri = vec![3.0, 2.0, 1.0];
+        let mut rng = Rng::seed_from_u64(5);
+        let m = select_frozen_units(&l, 0, 0.9, Some(&pri), &mut rng);
+        assert_eq!(m, vec![true, false, false]);
+    }
+
+    #[test]
+    fn deterministic_given_same_stream() {
+        let l = layout();
+        let base = Rng::seed_from_u64(42);
+        let m1 = select_frozen_units(&l, 0, 0.5, None, &mut base.derive(9, 0));
+        let m2 = select_frozen_units(&l, 0, 0.5, None, &mut base.derive(9, 0));
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn merge_masks_or() {
+        let a = vec![true, false, false];
+        let b = vec![false, false, true];
+        assert_eq!(merge_masks(&[a, b]), vec![true, false, true]);
+    }
+}

@@ -1,0 +1,216 @@
+//! Freezing controllers: TimelyFreeze (§3), the APF and AutoFreeze
+//! baselines (§2.3), the hybrid variants (§4.1 / Appendix C.2), and the
+//! no-freezing reference.
+//!
+//! ## The controller contract
+//!
+//! Controllers are driven by an *environment* — either the real pipeline
+//! engine (`crate::engine`) or the discrete-event simulator
+//! (`crate::sim`). Per training step `t` the environment:
+//!
+//! 1. calls [`Controller::plan`] to obtain a [`FreezePlan`] — per-action
+//!    actual freeze ratios (AFR, eq. 9) plus an optional per-unit
+//!    priority for metric-driven selection;
+//! 2. executes the step, shrinking freezable action durations by their
+//!    AFR and masking optimizer updates of the frozen units;
+//! 3. reports measured action durations via [`Controller::record_time`]
+//!    (Alg. 1 line 5) and, at stability-check steps, per-unit update
+//!    statistics via [`Controller::observe_updates`].
+//!
+//! A *unit* is the granularity of parameter bookkeeping: individual
+//! parameters in APF's original formulation; per-tensor blocks in the
+//! real engine (exact for uniform-random selection, memory-bounded for
+//! metric selection); per-layer groups in the paper-scale simulator.
+
+pub mod apf;
+pub mod autofreeze;
+pub mod hybrid;
+pub mod layout;
+pub mod masks;
+pub mod none;
+pub mod timely;
+
+pub use apf::{Apf, ApfConfig};
+pub use autofreeze::{AutoFreeze, AutoFreezeConfig};
+pub use hybrid::Hybrid;
+pub use layout::ModelLayout;
+pub use masks::select_frozen_units;
+pub use none::NoFreezing;
+pub use timely::{TimelyFreeze, TimelyFreezeConfig};
+
+use crate::types::{Action, FreezeMethod};
+use std::collections::BTreeMap;
+
+/// Phase boundaries {T_w, T_m, T_f} (Table 3 row "Phase Boundaries").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PhaseConfig {
+    /// Last step of the warm-up phase (aligned with LR warm-up, §3.1).
+    pub t_warmup: usize,
+    /// Last step of the monitoring phase.
+    pub t_monitor: usize,
+    /// Last step of the progressive-freezing ramp.
+    pub t_freeze: usize,
+}
+
+impl PhaseConfig {
+    pub fn new(t_warmup: usize, t_monitor: usize, t_freeze: usize) -> Self {
+        assert!(t_warmup < t_monitor, "T_w must precede T_m");
+        assert!(t_monitor < t_freeze, "T_m must precede T_f");
+        PhaseConfig { t_warmup, t_monitor, t_freeze }
+    }
+
+    /// Midpoint of the monitoring window: the boundary between
+    /// upper-bound (no freezing) and lower-bound (full freezing)
+    /// monitoring (§3.1).
+    pub fn monitor_mid(&self) -> usize {
+        self.t_warmup + (self.t_monitor - self.t_warmup) / 2
+    }
+}
+
+/// Per-unit cumulative-update statistics since the previous stability
+/// check, as produced by the environment.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UnitDelta {
+    /// ‖Δ‖₂ of the unit's cumulative update (AutoFreeze, eq. 1).
+    pub l2: f64,
+    /// Signed representative update Σδ (APF's E recurrence, eq. 2).
+    pub signed: f64,
+    /// Σ|δ| (APF's E^abs recurrence).
+    pub abs: f64,
+}
+
+/// The controller's decision for one training step.
+#[derive(Clone, Debug, Default)]
+pub struct FreezePlan {
+    /// Actual freeze ratio per freezable action (missing ⇒ 0). The
+    /// environment shrinks the action's duration by this ratio and
+    /// freezes the corresponding fraction of the stage's parameters.
+    pub afr: BTreeMap<Action, f64>,
+    /// Optional per-unit freeze priority (higher = freeze first). `None`
+    /// means uniform random selection (§3.3).
+    pub priority: Option<Vec<f64>>,
+}
+
+impl FreezePlan {
+    pub fn none() -> FreezePlan {
+        FreezePlan::default()
+    }
+
+    pub fn ratio_of(&self, a: &Action) -> f64 {
+        self.afr.get(a).copied().unwrap_or(0.0)
+    }
+
+    /// Mean AFR over the supplied actions' freezable subset (0 if empty).
+    pub fn mean_ratio(&self, actions: &[Action]) -> f64 {
+        let freezable: Vec<&Action> = actions.iter().filter(|a| a.kind.freezable()).collect();
+        if freezable.is_empty() {
+            return 0.0;
+        }
+        freezable.iter().map(|a| self.ratio_of(a)).sum::<f64>() / freezable.len() as f64
+    }
+}
+
+/// Common interface of all freezing methods.
+pub trait Controller: Send {
+    fn method(&self) -> FreezeMethod;
+
+    /// Produce the freeze plan for step `t` (1-based, matching the
+    /// paper's `t ∈ {1..T_total}`).
+    fn plan(&mut self, t: usize) -> FreezePlan;
+
+    /// Record a measured action duration for step `t` (monitoring).
+    /// Controllers that do not monitor may ignore this.
+    fn record_time(&mut self, _t: usize, _action: Action, _duration: f64) {}
+
+    /// Feed per-unit cumulative-update statistics at a stability check.
+    fn observe_updates(&mut self, _t: usize, _deltas: &[UnitDelta]) {}
+
+    /// Expected freeze ratios r* once computed (TimelyFreeze family);
+    /// `None` for metric-only baselines.
+    fn expected_ratios(&self) -> Option<&BTreeMap<Action, f64>> {
+        None
+    }
+}
+
+/// Construct a controller by method with shared inputs. `schedule` is
+/// needed by the TimelyFreeze family; baselines use `layout` + their own
+/// config.
+#[derive(Clone, Debug)]
+pub struct ControllerFactory {
+    pub phases: PhaseConfig,
+    pub r_max: f64,
+    pub lambda: f64,
+    pub apf: ApfConfig,
+    pub auto: AutoFreezeConfig,
+}
+
+impl ControllerFactory {
+    pub fn build(
+        &self,
+        method: FreezeMethod,
+        schedule: &crate::schedule::Schedule,
+        layout: &ModelLayout,
+    ) -> Box<dyn Controller> {
+        let timely_cfg = TimelyFreezeConfig {
+            phases: self.phases,
+            r_max: self.r_max,
+            lambda: self.lambda,
+        };
+        match method {
+            FreezeMethod::NoFreezing => Box::new(NoFreezing::new()),
+            FreezeMethod::Apf => {
+                let mut apf = Apf::new(self.apf.clone(), layout.clone(), self.phases);
+                apf.set_actions(schedule.all_actions());
+                Box::new(apf)
+            }
+            FreezeMethod::AutoFreeze => {
+                let mut auto = AutoFreeze::new(self.auto.clone(), layout.clone(), self.phases);
+                auto.set_actions(schedule.all_actions());
+                Box::new(auto)
+            }
+            FreezeMethod::TimelyFreeze => {
+                Box::new(TimelyFreeze::new(timely_cfg, schedule, layout.clone()))
+            }
+            FreezeMethod::TimelyApf => Box::new(Hybrid::with_apf(
+                TimelyFreeze::new(timely_cfg, schedule, layout.clone()),
+                self.apf.clone(),
+                layout.clone(),
+            )),
+            FreezeMethod::TimelyAuto => Box::new(Hybrid::with_autofreeze(
+                TimelyFreeze::new(timely_cfg, schedule, layout.clone()),
+                self.auto.clone(),
+                layout.clone(),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_config_midpoint() {
+        let p = PhaseConfig::new(60, 100, 200);
+        assert_eq!(p.monitor_mid(), 80);
+        let p = PhaseConfig::new(160, 200, 250);
+        assert_eq!(p.monitor_mid(), 180);
+    }
+
+    #[test]
+    #[should_panic]
+    fn phase_config_validates_order() {
+        PhaseConfig::new(100, 100, 200);
+    }
+
+    #[test]
+    fn plan_mean_ratio() {
+        let mut plan = FreezePlan::none();
+        plan.afr.insert(Action::b(0, 0), 0.5);
+        plan.afr.insert(Action::b(1, 0), 0.7);
+        let actions =
+            vec![Action::f(0, 0), Action::b(0, 0), Action::b(1, 0), Action::b(2, 0)];
+        // Forward excluded; b(2,0) counts as 0.
+        assert!((plan.mean_ratio(&actions) - 0.4).abs() < 1e-12);
+    }
+}

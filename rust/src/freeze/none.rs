@@ -1,0 +1,37 @@
+//! The no-freezing reference: every table's baseline row.
+
+use crate::freeze::{Controller, FreezePlan};
+use crate::types::FreezeMethod;
+
+#[derive(Default)]
+pub struct NoFreezing;
+
+impl NoFreezing {
+    pub fn new() -> NoFreezing {
+        NoFreezing
+    }
+}
+
+impl Controller for NoFreezing {
+    fn method(&self) -> FreezeMethod {
+        FreezeMethod::NoFreezing
+    }
+
+    fn plan(&mut self, _t: usize) -> FreezePlan {
+        FreezePlan::none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_empty() {
+        let mut c = NoFreezing::new();
+        for t in [1, 100, 10_000] {
+            assert!(c.plan(t).afr.is_empty());
+        }
+        assert_eq!(c.method(), FreezeMethod::NoFreezing);
+    }
+}

@@ -1,0 +1,345 @@
+//! The TimelyFreeze controller (§3, Algorithm 1): warm-up → two-part
+//! monitoring (upper-bound, then lower-bound) → LP solve at t = T_m →
+//! progressive freezing toward the expected ratios r*.
+
+use crate::freeze::layout::ModelLayout;
+use crate::freeze::{Controller, FreezePlan, PhaseConfig};
+use crate::graph::pipeline::{Node, PipelineDag};
+use crate::lp::{solve_freeze_lp, FreezeLpInput, FreezeSolution};
+use crate::schedule::Schedule;
+use crate::types::{Action, FreezeMethod};
+use crate::util::stats::Accum;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Copy, Debug)]
+pub struct TimelyFreezeConfig {
+    pub phases: PhaseConfig,
+    /// User-specified maximum average freeze ratio per stage (§3.2.2).
+    pub r_max: f64,
+    /// LP tie-breaker weight λ ≪ 1 (eq. 6).
+    pub lambda: f64,
+}
+
+/// Which monitoring window a step belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Warmup,
+    MonitorUpper,
+    MonitorLower,
+    Freezing,
+}
+
+pub struct TimelyFreeze {
+    cfg: TimelyFreezeConfig,
+    pdag: PipelineDag,
+    /// All freezable actions of one batch (constant across steps).
+    freezable: Vec<Action>,
+    /// Timing samples: (no-freezing window, full-freezing window).
+    upper: BTreeMap<Action, Accum>,
+    lower: BTreeMap<Action, Accum>,
+    /// r* per action, computed once at the end of monitoring.
+    expected: Option<BTreeMap<Action, f64>>,
+    /// Full LP solution kept for reporting (κ, P_d*, envelopes).
+    solution: Option<FreezeSolution>,
+    #[allow(dead_code)]
+    layout: ModelLayout,
+}
+
+impl TimelyFreeze {
+    pub fn new(cfg: TimelyFreezeConfig, schedule: &Schedule, layout: ModelLayout) -> TimelyFreeze {
+        let pdag = PipelineDag::from_schedule(schedule);
+        let freezable = schedule
+            .all_actions()
+            .into_iter()
+            .filter(|a| a.kind.freezable())
+            .collect();
+        TimelyFreeze {
+            cfg,
+            pdag,
+            freezable,
+            upper: BTreeMap::new(),
+            lower: BTreeMap::new(),
+            expected: None,
+            solution: None,
+            layout,
+        }
+    }
+
+    pub fn phase(&self, t: usize) -> Phase {
+        let p = &self.cfg.phases;
+        if t <= p.t_warmup {
+            Phase::Warmup
+        } else if t <= p.monitor_mid() {
+            Phase::MonitorUpper
+        } else if t <= p.t_monitor {
+            Phase::MonitorLower
+        } else {
+            Phase::Freezing
+        }
+    }
+
+    /// The LP solution (available once t > T_m and `plan` has run).
+    pub fn solution(&self) -> Option<&FreezeSolution> {
+        self.solution.as_ref()
+    }
+
+    pub fn pdag(&self) -> &PipelineDag {
+        &self.pdag
+    }
+
+    /// Progressive ramp (eq. 9):
+    /// `AFR_{i,t} = min(r_i, r_i · (t − T_m)/(T_f − T_m))`.
+    fn ramp(&self, t: usize, r: f64) -> f64 {
+        let p = &self.cfg.phases;
+        let frac = (t - p.t_monitor) as f64 / (p.t_freeze - p.t_monitor) as f64;
+        (r * frac).min(r)
+    }
+
+    /// Solve the LP from the recorded bounds (Alg. 1 lines 12–14). The
+    /// environment has effectively all-gathered timings by routing every
+    /// stage's `record_time` into this controller.
+    fn solve(&mut self) {
+        let n = self.pdag.len();
+        let mut w_min = vec![0.0f64; n];
+        let mut w_max = vec![0.0f64; n];
+        for (id, node) in self.pdag.dag.nodes.iter().enumerate() {
+            let Node::Act(a) = node else { continue };
+            let up = self.upper.get(a).map(|acc| acc.mean());
+            let lo = self.lower.get(a).map(|acc| acc.mean());
+            if a.kind.freezable() {
+                // Backward: upper window gives w_max, lower gives w_min.
+                let hi = up.or(lo).unwrap_or(0.0);
+                let mut lo_v = lo.or(up).unwrap_or(0.0);
+                // Measurement noise can invert near-equal bounds; clamp.
+                if lo_v > hi {
+                    lo_v = hi;
+                }
+                w_max[id] = hi;
+                w_min[id] = lo_v;
+            } else {
+                // Forward (and dgrad) durations are freeze-invariant:
+                // pool both windows (w_min = w_max, eq. after Fig. 3).
+                let mut acc = Accum::new();
+                if let Some(u) = self.upper.get(a) {
+                    if u.n > 0 {
+                        acc.push(u.mean());
+                    }
+                }
+                if let Some(l) = self.lower.get(a) {
+                    if l.n > 0 {
+                        acc.push(l.mean());
+                    }
+                }
+                let v = acc.mean();
+                w_min[id] = v;
+                w_max[id] = v;
+            }
+        }
+        let input = FreezeLpInput {
+            pdag: &self.pdag,
+            w_min: &w_min,
+            w_max: &w_max,
+            r_max: self.cfg.r_max,
+            lambda: self.cfg.lambda,
+        };
+        match solve_freeze_lp(&input) {
+            Ok(sol) => {
+                let mut expected = BTreeMap::new();
+                for (id, node) in self.pdag.dag.nodes.iter().enumerate() {
+                    if let Node::Act(a) = node {
+                        if a.kind.freezable() {
+                            expected.insert(*a, sol.ratios[id]);
+                        }
+                    }
+                }
+                self.expected = Some(expected);
+                self.solution = Some(sol);
+            }
+            Err(e) => {
+                // Fail safe: freeze nothing rather than crash training.
+                eprintln!("timelyfreeze: LP failed ({e}); disabling freezing");
+                self.expected = Some(BTreeMap::new());
+            }
+        }
+    }
+}
+
+impl Controller for TimelyFreeze {
+    fn method(&self) -> FreezeMethod {
+        FreezeMethod::TimelyFreeze
+    }
+
+    fn plan(&mut self, t: usize) -> FreezePlan {
+        match self.phase(t) {
+            Phase::Warmup | Phase::MonitorUpper => FreezePlan::none(),
+            Phase::MonitorLower => {
+                // Lower-bound monitoring: freeze everything (Alg. 1 l.10).
+                let mut plan = FreezePlan::none();
+                for a in &self.freezable {
+                    plan.afr.insert(*a, 1.0);
+                }
+                plan
+            }
+            Phase::Freezing => {
+                if self.expected.is_none() {
+                    self.solve();
+                }
+                let mut plan = FreezePlan::none();
+                let expected = self.expected.as_ref().unwrap();
+                for (a, &r) in expected {
+                    let afr = self.ramp(t, r);
+                    if afr > 0.0 {
+                        plan.afr.insert(*a, afr);
+                    }
+                }
+                plan
+            }
+        }
+    }
+
+    fn record_time(&mut self, t: usize, action: Action, duration: f64) {
+        match self.phase(t) {
+            Phase::MonitorUpper => {
+                self.upper.entry(action).or_insert_with(Accum::new).push(duration);
+            }
+            Phase::MonitorLower => {
+                self.lower.entry(action).or_insert_with(Accum::new).push(duration);
+            }
+            _ => {}
+        }
+    }
+
+    fn expected_ratios(&self) -> Option<&BTreeMap<Action, f64>> {
+        self.expected.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{ActionKind, ScheduleKind};
+
+    fn make(r_max: f64) -> (TimelyFreeze, Schedule) {
+        let schedule = Schedule::build(ScheduleKind::OneFOneB, 4, 8, 1);
+        let layout = ModelLayout::uniform(8, 4, 1000, 4);
+        let cfg = TimelyFreezeConfig {
+            phases: PhaseConfig::new(10, 30, 50),
+            r_max,
+            lambda: 1e-4,
+        };
+        (TimelyFreeze::new(cfg, &schedule, layout), schedule)
+    }
+
+    /// Drive warm-up + monitoring with synthetic timings: forward 1 ms,
+    /// backward 2 ms unfrozen / 0.8 ms frozen.
+    fn drive_monitoring(tf: &mut TimelyFreeze, schedule: &Schedule) {
+        for t in 1..=30 {
+            let plan = tf.plan(t);
+            for a in schedule.all_actions() {
+                let dur = match a.kind {
+                    ActionKind::Forward => 1.0,
+                    _ => {
+                        let afr = plan.ratio_of(&a);
+                        2.0 - afr * 1.2
+                    }
+                };
+                tf.record_time(t, a, dur);
+            }
+        }
+    }
+
+    #[test]
+    fn phases_progress() {
+        let (tf, _) = make(0.8);
+        assert_eq!(tf.phase(5), Phase::Warmup);
+        assert_eq!(tf.phase(10), Phase::Warmup);
+        assert_eq!(tf.phase(11), Phase::MonitorUpper);
+        assert_eq!(tf.phase(20), Phase::MonitorUpper);
+        assert_eq!(tf.phase(21), Phase::MonitorLower);
+        assert_eq!(tf.phase(30), Phase::MonitorLower);
+        assert_eq!(tf.phase(31), Phase::Freezing);
+    }
+
+    #[test]
+    fn no_freezing_during_warmup_and_upper() {
+        let (mut tf, _) = make(0.8);
+        assert!(tf.plan(1).afr.is_empty());
+        assert!(tf.plan(15).afr.is_empty());
+    }
+
+    #[test]
+    fn full_freezing_during_lower_monitoring() {
+        let (mut tf, schedule) = make(0.8);
+        let plan = tf.plan(25);
+        let backwards = schedule
+            .all_actions()
+            .into_iter()
+            .filter(|a| a.kind.freezable())
+            .count();
+        assert_eq!(plan.afr.len(), backwards);
+        assert!(plan.afr.values().all(|&r| r == 1.0));
+    }
+
+    #[test]
+    fn progressive_ramp_reaches_expected() {
+        let (mut tf, schedule) = make(0.8);
+        drive_monitoring(&mut tf, &schedule);
+        // Right after T_m the ramp is shallow…
+        let early = tf.plan(31);
+        let expected = tf.expected_ratios().unwrap().clone();
+        let some_action = *expected
+            .iter()
+            .find(|(_, &r)| r > 0.1)
+            .expect("LP should freeze something")
+            .0;
+        let r_star = expected[&some_action];
+        let afr_early = early.ratio_of(&some_action);
+        assert!(afr_early < r_star, "ramp should start below r*");
+        assert!(
+            (afr_early - r_star * (31.0 - 30.0) / 20.0).abs() < 1e-9,
+            "eq. 9 violated"
+        );
+        // …and saturates at r* for t > T_f.
+        let (mut tf2, schedule2) = make(0.8);
+        drive_monitoring(&mut tf2, &schedule2);
+        let late = tf2.plan(100);
+        assert!((late.ratio_of(&some_action) - r_star).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lp_speedup_realized() {
+        let (mut tf, schedule) = make(0.8);
+        drive_monitoring(&mut tf, &schedule);
+        tf.plan(31);
+        let sol = tf.solution().unwrap();
+        assert!(sol.batch_time < sol.p_d_max - 1e-9, "no speedup found");
+        assert!(sol.kappa() < 1.0);
+    }
+
+    #[test]
+    fn budget_respected_in_expected_ratios() {
+        let r_max = 0.5;
+        let (mut tf, schedule) = make(r_max);
+        drive_monitoring(&mut tf, &schedule);
+        tf.plan(31);
+        let expected = tf.expected_ratios().unwrap();
+        // Per-stage mean of r* within budget.
+        for s in 0..4 {
+            let rs: Vec<f64> = expected
+                .iter()
+                .filter(|(a, _)| a.stage == s)
+                .map(|(_, &r)| r)
+                .collect();
+            let mean = rs.iter().sum::<f64>() / rs.len() as f64;
+            assert!(mean <= r_max + 1e-6, "stage {s} over budget: {mean}");
+        }
+    }
+
+    #[test]
+    fn rmax_zero_freezes_nothing() {
+        let (mut tf, schedule) = make(0.0);
+        drive_monitoring(&mut tf, &schedule);
+        let plan = tf.plan(60);
+        assert!(plan.afr.values().all(|&r| r < 1e-9));
+    }
+}

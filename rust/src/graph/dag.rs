@@ -1,0 +1,291 @@
+//! Generic directed acyclic graph with the operations the paper's
+//! formulation needs: topological sorting, longest-path start times
+//! (eq. 5), and critical-path extraction.
+//!
+//! Node payloads are generic; the pipeline-specific structure lives in
+//! [`crate::graph::pipeline`].
+
+/// Dense-id DAG. Node ids are `usize` handles into `nodes`.
+#[derive(Clone, Debug)]
+pub struct Dag<T> {
+    pub nodes: Vec<T>,
+    /// Outgoing adjacency: `succs[i]` = nodes j with edge i → j.
+    pub succs: Vec<Vec<usize>>,
+    /// Incoming adjacency.
+    pub preds: Vec<Vec<usize>>,
+}
+
+impl<T> Default for Dag<T> {
+    fn default() -> Self {
+        Dag { nodes: Vec::new(), succs: Vec::new(), preds: Vec::new() }
+    }
+}
+
+impl<T> Dag<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn add_node(&mut self, payload: T) -> usize {
+        self.nodes.push(payload);
+        self.succs.push(Vec::new());
+        self.preds.push(Vec::new());
+        self.nodes.len() - 1
+    }
+
+    /// Add edge u → v. Duplicate edges are ignored (the pipeline edge
+    /// rules can produce the same dependency from several rules).
+    pub fn add_edge(&mut self, u: usize, v: usize) {
+        assert!(u < self.len() && v < self.len(), "edge endpoints out of range");
+        assert_ne!(u, v, "self-loop");
+        if !self.succs[u].contains(&v) {
+            self.succs[u].push(v);
+            self.preds[v].push(u);
+        }
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.succs.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.succs[u].contains(&v)
+    }
+
+    /// Kahn topological sort. `None` if the graph contains a cycle.
+    pub fn topo_order(&self) -> Option<Vec<usize>> {
+        let n = self.len();
+        let mut indeg: Vec<usize> = self.preds.iter().map(|p| p.len()).collect();
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            order.push(u);
+            for &v in &self.succs[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        if order.len() == n {
+            Some(order)
+        } else {
+            None
+        }
+    }
+
+    pub fn is_acyclic(&self) -> bool {
+        self.topo_order().is_some()
+    }
+
+    /// Longest-path start times (eq. 5):
+    /// `P_i = max over preds j of (P_j + w_j)`, with `P = 0` for sources.
+    ///
+    /// Returns `None` on a cycle. Weights are node durations.
+    pub fn start_times(&self, weights: &[f64]) -> Option<Vec<f64>> {
+        assert_eq!(weights.len(), self.len());
+        let order = self.topo_order()?;
+        let mut p = vec![0.0f64; self.len()];
+        for &u in &order {
+            for &v in &self.succs[u] {
+                let cand = p[u] + weights[u];
+                if cand > p[v] {
+                    p[v] = cand;
+                }
+            }
+        }
+        Some(p)
+    }
+
+    /// Makespan: max over nodes of `P_i + w_i`.
+    pub fn makespan(&self, weights: &[f64]) -> Option<f64> {
+        let p = self.start_times(weights)?;
+        Some(
+            p.iter()
+                .zip(weights)
+                .map(|(pi, wi)| pi + wi)
+                .fold(0.0f64, f64::max),
+        )
+    }
+
+    /// One critical path (node ids, source → sink) realizing the makespan.
+    pub fn critical_path(&self, weights: &[f64]) -> Option<Vec<usize>> {
+        let p = self.start_times(weights)?;
+        // Find sink with max finish.
+        let mut end = 0usize;
+        let mut best = f64::NEG_INFINITY;
+        for i in 0..self.len() {
+            let f = p[i] + weights[i];
+            if f > best {
+                best = f;
+                end = i;
+            }
+        }
+        // Walk back through predecessors whose finish equals our start.
+        let mut path = vec![end];
+        let mut cur = end;
+        const EPS: f64 = 1e-9;
+        while !self.preds[cur].is_empty() {
+            let mut next = None;
+            for &j in &self.preds[cur] {
+                if (p[j] + weights[j] - p[cur]).abs() <= EPS * (1.0 + p[cur].abs()) {
+                    next = Some(j);
+                    break;
+                }
+            }
+            match next {
+                Some(j) => {
+                    path.push(j);
+                    cur = j;
+                }
+                // Start of the path: our start is 0 or determined by a
+                // predecessor chain with slack (can happen only at P=0).
+                None => break,
+            }
+        }
+        path.reverse();
+        Some(path)
+    }
+
+    /// Reachability from `u` (BFS over successors).
+    pub fn reachable_from(&self, u: usize) -> Vec<bool> {
+        let mut seen = vec![false; self.len()];
+        let mut stack = vec![u];
+        seen[u] = true;
+        while let Some(x) = stack.pop() {
+            for &v in &self.succs[x] {
+                if !seen[v] {
+                    seen[v] = true;
+                    stack.push(v);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Verify that `order` is a linear extension of this DAG: every edge
+    /// u → v has u before v. Used by the schedule property tests.
+    pub fn respects_order(&self, order: &[usize]) -> bool {
+        if order.len() != self.len() {
+            return false;
+        }
+        let mut pos = vec![usize::MAX; self.len()];
+        for (i, &u) in order.iter().enumerate() {
+            if u >= self.len() || pos[u] != usize::MAX {
+                return false;
+            }
+            pos[u] = i;
+        }
+        for u in 0..self.len() {
+            for &v in &self.succs[u] {
+                if pos[u] >= pos[v] {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Dag<&'static str> {
+        // a → b → d, a → c → d
+        let mut g = Dag::new();
+        let a = g.add_node("a");
+        let b = g.add_node("b");
+        let c = g.add_node("c");
+        let d = g.add_node("d");
+        g.add_edge(a, b);
+        g.add_edge(a, c);
+        g.add_edge(b, d);
+        g.add_edge(c, d);
+        g
+    }
+
+    #[test]
+    fn topo_sort_diamond() {
+        let g = diamond();
+        let order = g.topo_order().unwrap();
+        assert!(g.respects_order(&order));
+        assert_eq!(order[0], 0);
+        assert_eq!(order[3], 3);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Dag::new();
+        let a = g.add_node(());
+        let b = g.add_node(());
+        g.add_edge(a, b);
+        g.add_edge(b, a);
+        assert!(!g.is_acyclic());
+        assert!(g.start_times(&[1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn longest_path_takes_slow_branch() {
+        let g = diamond();
+        // b is slow (5), c is fast (1).
+        let w = [1.0, 5.0, 1.0, 2.0];
+        let p = g.start_times(&w).unwrap();
+        assert_eq!(p[0], 0.0);
+        assert_eq!(p[1], 1.0);
+        assert_eq!(p[2], 1.0);
+        assert_eq!(p[3], 6.0); // via b
+        assert_eq!(g.makespan(&w).unwrap(), 8.0);
+    }
+
+    #[test]
+    fn critical_path_via_slow_branch() {
+        let g = diamond();
+        let w = [1.0, 5.0, 1.0, 2.0];
+        let cp = g.critical_path(&w).unwrap();
+        assert_eq!(cp, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn duplicate_edges_ignored() {
+        let mut g = Dag::new();
+        let a = g.add_node(());
+        let b = g.add_node(());
+        g.add_edge(a, b);
+        g.add_edge(a, b);
+        assert_eq!(g.edge_count(), 1);
+    }
+
+    #[test]
+    fn respects_order_rejects_violations() {
+        let g = diamond();
+        assert!(!g.respects_order(&[3, 2, 1, 0]));
+        assert!(!g.respects_order(&[0, 1, 2])); // wrong length
+        assert!(!g.respects_order(&[0, 0, 1, 2])); // duplicate
+    }
+
+    #[test]
+    fn reachability() {
+        let g = diamond();
+        let r = g.reachable_from(1);
+        assert_eq!(r, vec![false, true, false, true]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g: Dag<()> = Dag::new();
+        assert!(g.is_acyclic());
+        assert_eq!(g.makespan(&[]), Some(0.0));
+    }
+}

@@ -1,0 +1,8 @@
+//! Graph layer: a generic DAG (topological sort, longest path, critical
+//! path) and the pipeline-schedule DAG of §3.2.1 built on top of it.
+
+pub mod dag;
+pub mod pipeline;
+
+pub use dag::Dag;
+pub use pipeline::{structural_edges, Node, PipelineDag};

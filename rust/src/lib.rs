@@ -1,0 +1,39 @@
+//! # TimelyFreeze
+//!
+//! A from-scratch reproduction of *"TimelyFreeze: Adaptive Parameter
+//! Freezing Mechanism for Pipeline Parallelism"* (Cho et al., 2026) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the pipeline-parallel coordinator: the
+//!   four schedules, the pipeline DAG, the LP-based freeze-ratio
+//!   optimizer, the TimelyFreeze / APF / AutoFreeze controllers, the real
+//!   multi-threaded PJRT execution engine, and the discrete-event
+//!   simulator that regenerates the paper's evaluation.
+//! * **Layer 2 (python/compile/model.py)** — a LLaMA-style model lowered
+//!   once to per-layer HLO artifacts (fwd / dgrad / wgrad).
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the
+//!   compute hot-spots (flash attention; block-masked wgrad).
+//!
+//! Python never runs at training time: `make artifacts` AOT-compiles
+//! everything to `artifacts/*.hlo.txt`, which `runtime` loads via PJRT.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod config;
+pub mod freeze;
+pub mod graph;
+pub mod lp;
+pub mod metrics;
+pub mod monitor;
+pub mod partition;
+pub mod schedule;
+pub mod sim;
+pub mod types;
+pub mod util;
+pub mod viz;
+
+pub mod bench_support;
+pub mod engine;
+pub mod runtime;
+pub mod train;

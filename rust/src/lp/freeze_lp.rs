@@ -1,0 +1,471 @@
+//! The TimelyFreeze linear program (§3.2.2): given the pipeline DAG and
+//! per-action execution-time bounds [w_min, w_max] from the monitoring
+//! phase, compute node durations w (hence expected freeze ratios r*) that
+//! minimize batch time P_d, with minimal-freezing tie-breaking and the
+//! per-stage budget r_max.
+//!
+//!   min  P_d − λ Σ_i δ_i w_i                               (eq. 6)
+//!   s.t. P_j ≥ P_i + w_i            ∀ (i→j) ∈ E            [1]
+//!        w_min_i ≤ w_i ≤ w_max_i    ∀ i                    [2]
+//!        P_s = 0, w_s = 0                                  [3]
+//!        Σ_{i∈V_s} δ_i (w_max_i − w_i) ≤ r_max |V_s|  ∀ s  [4]
+//!
+//! with δ_i = 1 / (w_max_i − w_min_i) for freezable nodes (0 otherwise),
+//! so that r_i = δ_i (w_max_i − w_i) is the linearized freeze ratio
+//! (eq. 4).
+
+use crate::graph::pipeline::{Node, PipelineDag};
+use crate::lp::simplex::{self, Cmp, LpProblem, LpStatus, INF};
+
+/// Default tie-breaker weight. The paper only requires λ ≪ 1 so that
+/// minimizing P_d always dominates; we scale it against the number of
+/// freezable nodes so that the tie-break term's full range stays below
+/// one time unit (≪ any realistic P_d).
+pub const DEFAULT_LAMBDA: f64 = 1e-4;
+
+#[derive(Clone, Debug)]
+pub struct FreezeLpInput<'a> {
+    pub pdag: &'a PipelineDag,
+    /// Per-node minimum duration (all parameters frozen). Forward nodes
+    /// must have `w_min == w_max`.
+    pub w_min: &'a [f64],
+    /// Per-node maximum duration (no freezing).
+    pub w_max: &'a [f64],
+    /// User budget: maximum average freeze ratio per stage (§3.2.2).
+    pub r_max: f64,
+    /// Tie-breaker weight λ ≪ 1.
+    pub lambda: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct FreezeSolution {
+    /// Expected freeze ratio per node (0 for forwards and source/dest).
+    pub ratios: Vec<f64>,
+    /// Chosen duration per node.
+    pub w: Vec<f64>,
+    /// Start time per node under the chosen durations (recomputed by
+    /// longest path so slack nodes get earliest-start semantics).
+    pub start_times: Vec<f64>,
+    /// Optimized batch time `P_d*`.
+    pub batch_time: f64,
+    /// Makespan envelopes (eq. 46): no freezing / full freezing.
+    pub p_d_max: f64,
+    pub p_d_min: f64,
+    /// Simplex iterations (for the perf log).
+    pub iterations: usize,
+}
+
+impl FreezeSolution {
+    /// Average expected freeze ratio over freezable nodes — the white-box
+    /// number quoted in Figure 2 ("average expected freeze ratio of 60%").
+    pub fn mean_freezable_ratio(&self, pdag: &PipelineDag) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for (id, node) in pdag.dag.nodes.iter().enumerate() {
+            if let Node::Act(a) = node {
+                if a.kind.freezable() {
+                    sum += self.ratios[id];
+                    n += 1;
+                }
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Time-reduction factor κ = τ_ours / τ_base (eq. 50, observable
+    /// form): optimized batch time over the no-freezing envelope.
+    pub fn kappa(&self) -> f64 {
+        if self.p_d_max <= 0.0 {
+            1.0
+        } else {
+            self.batch_time / self.p_d_max
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum FreezeLpError {
+    #[error("w_min/w_max length {got} does not match DAG size {want}")]
+    BadLength { got: usize, want: usize },
+    #[error("node {node}: invalid bounds w_min={w_min} w_max={w_max}")]
+    BadBounds { node: usize, w_min: f64, w_max: f64 },
+    #[error("r_max must be in [0,1], got {0}")]
+    BadRmax(f64),
+    #[error("LP terminated with status {0:?}")]
+    Solver(LpStatus),
+}
+
+/// Build and solve the freeze LP. Always feasible by construction
+/// (w = w_max satisfies every constraint), so `Err(Solver(_))` indicates
+/// numerically hostile inputs rather than modelling infeasibility.
+pub fn solve_freeze_lp(input: &FreezeLpInput) -> Result<FreezeSolution, FreezeLpError> {
+    let pdag = input.pdag;
+    let n = pdag.len();
+    if input.w_min.len() != n || input.w_max.len() != n {
+        return Err(FreezeLpError::BadLength { got: input.w_min.len(), want: n });
+    }
+    if !(0.0..=1.0).contains(&input.r_max) {
+        return Err(FreezeLpError::BadRmax(input.r_max));
+    }
+    for i in 0..n {
+        let (lo, hi) = (input.w_min[i], input.w_max[i]);
+        if !(lo.is_finite() && hi.is_finite()) || lo < 0.0 || hi < lo {
+            return Err(FreezeLpError::BadBounds { node: i, w_min: lo, w_max: hi });
+        }
+    }
+
+    // δ_i (reciprocal execution-time range; 0 where unfreezable).
+    let delta: Vec<f64> = (0..n)
+        .map(|i| {
+            let range = input.w_max[i] - input.w_min[i];
+            if range > 0.0 {
+                1.0 / range
+            } else {
+                0.0
+            }
+        })
+        .collect();
+
+    // Tie-break scaling: λ/|freezable| keeps the secondary term ≤ λ·w̄.
+    let freezable: Vec<usize> = (0..n).filter(|&i| delta[i] > 0.0).collect();
+    let lam = if freezable.is_empty() {
+        0.0
+    } else {
+        let mean_range: f64 = freezable
+            .iter()
+            .map(|&i| input.w_max[i] - input.w_min[i])
+            .sum::<f64>()
+            / freezable.len() as f64;
+        input.lambda * mean_range / freezable.len() as f64
+    };
+
+    let mut lp = LpProblem::new();
+    // Variable layout: P_0..P_{n-1}, then w_i for *freezable* nodes only
+    // — fixed-duration nodes (forwards, dgrad) enter the precedence rows
+    // as constants, roughly halving the column count and, empirically,
+    // cutting simplex time ~4× on ZBV-sized DAGs (EXPERIMENTS.md §Perf).
+    let mut p_var = Vec::with_capacity(n);
+    for i in 0..n {
+        let cost = if i == pdag.dest { 1.0 } else { 0.0 };
+        // [3]: P_source fixed at 0.
+        let (lo, hi) = if i == pdag.source { (0.0, 0.0) } else { (0.0, INF) };
+        p_var.push(lp.add_var(cost, lo, hi));
+    }
+    let mut w_var: Vec<Option<usize>> = Vec::with_capacity(n);
+    for i in 0..n {
+        if delta[i] > 0.0 {
+            // Secondary objective: −λ δ_i w_i (maximize durations ⇔
+            // minimize freezing) — tie-breaker only.
+            let cost = -lam * delta[i];
+            w_var.push(Some(lp.add_var(cost, input.w_min[i], input.w_max[i])));
+        } else {
+            w_var.push(None);
+        }
+    }
+
+    // [1] precedence: P_j − P_i − w_i ≥ 0 (w_i constant when fixed).
+    for u in 0..n {
+        for &v in &pdag.dag.succs[u] {
+            match w_var[u] {
+                Some(wu) => lp.add_row(
+                    vec![(p_var[v], 1.0), (p_var[u], -1.0), (wu, -1.0)],
+                    Cmp::Ge,
+                    0.0,
+                ),
+                None => lp.add_row(
+                    vec![(p_var[v], 1.0), (p_var[u], -1.0)],
+                    Cmp::Ge,
+                    input.w_max[u],
+                ),
+            }
+        }
+    }
+
+    // [4] stage budget: Σ δ_i w_i ≥ Σ δ_i w_max_i − r_max |V_s|.
+    for set in pdag.freezable_by_stage() {
+        if set.is_empty() {
+            continue;
+        }
+        let rhs: f64 =
+            set.iter().map(|&i| delta[i] * input.w_max[i]).sum::<f64>()
+                - input.r_max * set.len() as f64;
+        let coeffs: Vec<(usize, f64)> =
+            set.iter().filter_map(|&i| w_var[i].map(|wi| (wi, delta[i]))).collect();
+        lp.add_row(coeffs, Cmp::Ge, rhs);
+    }
+
+    let sol = simplex::solve(&lp);
+    if sol.status != LpStatus::Optimal {
+        return Err(FreezeLpError::Solver(sol.status));
+    }
+
+    let w: Vec<f64> = (0..n)
+        .map(|i| match w_var[i] {
+            Some(wi) => sol.x[wi].clamp(input.w_min[i], input.w_max[i]),
+            None => input.w_max[i],
+        })
+        .collect();
+    let ratios: Vec<f64> = (0..n)
+        .map(|i| (delta[i] * (input.w_max[i] - w[i])).clamp(0.0, 1.0))
+        .collect();
+    // Earliest start times under chosen durations (eq. 5) — the LP's P_i
+    // may carry slack on non-critical nodes.
+    let start_times = pdag.start_times(&w);
+    let batch_time = start_times[pdag.dest];
+    let p_d_max = pdag.batch_time(input.w_max);
+    let p_d_min = pdag.batch_time(input.w_min);
+
+    Ok(FreezeSolution {
+        ratios,
+        w,
+        start_times,
+        batch_time,
+        p_d_max,
+        p_d_min,
+        iterations: sol.iterations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+    use crate::types::{ActionKind, ScheduleKind};
+
+    /// Build a small DAG plus bound vectors: forward = 1.0 fixed;
+    /// backward ∈ [dgrad_frac·2.0, 2.0].
+    fn setup(
+        kind: ScheduleKind,
+        ranks: usize,
+        m: usize,
+        dgrad_frac: f64,
+    ) -> (PipelineDag, Vec<f64>, Vec<f64>) {
+        let s = Schedule::build(kind, ranks, m, Schedule::default_chunks(kind));
+        let g = PipelineDag::from_schedule(&s);
+        let mut w_min = vec![0.0; g.len()];
+        let mut w_max = vec![0.0; g.len()];
+        for (id, node) in g.dag.nodes.iter().enumerate() {
+            if let crate::graph::pipeline::Node::Act(a) = node {
+                match a.kind {
+                    ActionKind::Forward => {
+                        w_min[id] = 1.0;
+                        w_max[id] = 1.0;
+                    }
+                    ActionKind::Backward => {
+                        w_max[id] = 2.0;
+                        w_min[id] = 2.0 * dgrad_frac;
+                    }
+                    ActionKind::BackwardDgrad => {
+                        w_min[id] = 1.0;
+                        w_max[id] = 1.0;
+                    }
+                    ActionKind::BackwardWgrad => {
+                        w_max[id] = 1.0;
+                        w_min[id] = 0.0;
+                    }
+                }
+            }
+        }
+        (g, w_min, w_max)
+    }
+
+    fn solve(g: &PipelineDag, w_min: &[f64], w_max: &[f64], r_max: f64) -> FreezeSolution {
+        solve_freeze_lp(&FreezeLpInput {
+            pdag: g,
+            w_min,
+            w_max,
+            r_max,
+            lambda: DEFAULT_LAMBDA,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn rmax_zero_recovers_baseline() {
+        let (g, w_min, w_max) = setup(ScheduleKind::GPipe, 4, 4, 0.5);
+        let sol = solve(&g, &w_min, &w_max, 0.0);
+        assert!((sol.batch_time - sol.p_d_max).abs() < 1e-6);
+        assert!(sol.ratios.iter().all(|&r| r < 1e-7));
+    }
+
+    #[test]
+    fn rmax_one_reaches_full_freeze_envelope() {
+        let (g, w_min, w_max) = setup(ScheduleKind::GPipe, 4, 4, 0.5);
+        let sol = solve(&g, &w_min, &w_max, 1.0);
+        assert!(
+            (sol.batch_time - sol.p_d_min).abs() < 1e-6,
+            "batch {} vs envelope {}",
+            sol.batch_time,
+            sol.p_d_min
+        );
+    }
+
+    #[test]
+    fn batch_time_monotone_in_rmax() {
+        let (g, w_min, w_max) = setup(ScheduleKind::OneFOneB, 4, 8, 0.4);
+        let mut prev = f64::INFINITY;
+        for rmax in [0.0, 0.2, 0.4, 0.6, 0.8, 1.0] {
+            let sol = solve(&g, &w_min, &w_max, rmax);
+            assert!(
+                sol.batch_time <= prev + 1e-7,
+                "P_d not monotone at r_max={rmax}: {} > {prev}",
+                sol.batch_time
+            );
+            prev = sol.batch_time;
+        }
+    }
+
+    #[test]
+    fn stage_budget_respected() {
+        let (g, w_min, w_max) = setup(ScheduleKind::OneFOneB, 4, 8, 0.4);
+        let r_max = 0.5;
+        let sol = solve(&g, &w_min, &w_max, r_max);
+        for (s, set) in g.freezable_by_stage().iter().enumerate() {
+            let avg: f64 =
+                set.iter().map(|&i| sol.ratios[i]).sum::<f64>() / set.len() as f64;
+            assert!(avg <= r_max + 1e-6, "stage {s} over budget: {avg}");
+        }
+    }
+
+    #[test]
+    fn ratios_within_unit_interval_and_forward_zero() {
+        let (g, w_min, w_max) = setup(ScheduleKind::ZeroBubbleV, 4, 8, 0.5);
+        let sol = solve(&g, &w_min, &w_max, 0.8);
+        for (id, node) in g.dag.nodes.iter().enumerate() {
+            assert!((0.0..=1.0 + 1e-9).contains(&sol.ratios[id]));
+            if let crate::graph::pipeline::Node::Act(a) = node {
+                if !a.kind.freezable() {
+                    assert_eq!(sol.ratios[id], 0.0, "unfreezable node {a} got frozen");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tie_breaker_avoids_ineffective_freezing() {
+        // The Figure 1(b) scenario: freezing off the critical path buys
+        // no time, so the tie-breaker must keep those ratios at ~0.
+        // Construct GPipe where stage 3 dominates: its backward is the
+        // bottleneck; early stages idle anyway.
+        let s = Schedule::build(ScheduleKind::GPipe, 4, 4, 1);
+        let g = PipelineDag::from_schedule(&s);
+        let mut w_min = vec![0.0; g.len()];
+        let mut w_max = vec![0.0; g.len()];
+        for (id, node) in g.dag.nodes.iter().enumerate() {
+            if let crate::graph::pipeline::Node::Act(a) = node {
+                match a.kind {
+                    ActionKind::Forward => {
+                        w_min[id] = 1.0;
+                        w_max[id] = 1.0;
+                    }
+                    _ => {
+                        // Stage 3 backward is 4× heavier.
+                        let hi = if a.stage == 3 { 8.0 } else { 2.0 };
+                        w_max[id] = hi;
+                        w_min[id] = 0.3 * hi;
+                    }
+                }
+            }
+        }
+        let sol = solve(&g, &w_min, &w_max, 0.8);
+        // Bottleneck stage should be frozen aggressively…
+        let by_stage = g.freezable_by_stage();
+        let avg = |s: usize| {
+            by_stage[s].iter().map(|&i| sol.ratios[i]).sum::<f64>() / by_stage[s].len() as f64
+        };
+        assert!(avg(3) > 0.5, "bottleneck stage under-frozen: {}", avg(3));
+        // …and the total freezing must stay *below* the max budget
+        // everywhere (no gratuitous freezing off the critical path).
+        let total: f64 = (0..4).map(avg).sum::<f64>() / 4.0;
+        assert!(total < 0.8 - 1e-6, "tie-breaker failed: average ratio {total}");
+        // Speedup achieved.
+        assert!(sol.batch_time < sol.p_d_max - 1e-6);
+    }
+
+    #[test]
+    fn matches_brute_force_on_tiny_instance() {
+        // 2 stages × 2 microbatches GPipe; grid-search durations on a
+        // 6-point lattice per backward node and compare achievable P_d
+        // under the stage budget. The LP must be at least as good as the
+        // best lattice point and no better than the continuous envelope.
+        let (g, w_min, w_max) = setup(ScheduleKind::GPipe, 2, 2, 0.5);
+        let r_max = 0.5;
+        let sol = solve(&g, &w_min, &w_max, r_max);
+        let freezable: Vec<usize> = (0..g.len())
+            .filter(|&i| w_max[i] > w_min[i])
+            .collect();
+        assert_eq!(freezable.len(), 4);
+        let grid = 6usize;
+        let mut best = f64::INFINITY;
+        let mut idx = vec![0usize; freezable.len()];
+        loop {
+            let mut w = w_max.clone();
+            for (k, &node) in freezable.iter().enumerate() {
+                let t = idx[k] as f64 / (grid - 1) as f64;
+                w[node] = w_min[node] + t * (w_max[node] - w_min[node]);
+            }
+            // Budget check per stage.
+            let mut ok = true;
+            for set in g.freezable_by_stage() {
+                if set.is_empty() {
+                    continue;
+                }
+                let avg: f64 = set
+                    .iter()
+                    .map(|&i| (w_max[i] - w[i]) / (w_max[i] - w_min[i]))
+                    .sum::<f64>()
+                    / set.len() as f64;
+                if avg > r_max + 1e-9 {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                best = best.min(g.batch_time(&w));
+            }
+            // Advance lattice counter.
+            let mut k = 0;
+            loop {
+                if k == idx.len() {
+                    break;
+                }
+                idx[k] += 1;
+                if idx[k] < grid {
+                    break;
+                }
+                idx[k] = 0;
+                k += 1;
+            }
+            if k == idx.len() {
+                break;
+            }
+        }
+        assert!(
+            sol.batch_time <= best + 1e-6,
+            "LP {} worse than lattice {best}",
+            sol.batch_time
+        );
+    }
+
+    #[test]
+    fn kappa_and_mean_ratio_reported() {
+        let (g, w_min, w_max) = setup(ScheduleKind::OneFOneB, 4, 8, 0.4);
+        let sol = solve(&g, &w_min, &w_max, 0.8);
+        assert!(sol.kappa() > 0.0 && sol.kappa() <= 1.0);
+        let mean = sol.mean_freezable_ratio(&g);
+        assert!((0.0..=0.8 + 1e-6).contains(&mean));
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let (g, w_min, w_max) = setup(ScheduleKind::GPipe, 2, 2, 0.5);
+        let bad = FreezeLpInput { pdag: &g, w_min: &w_min[1..], w_max: &w_max, r_max: 0.5, lambda: 1e-4 };
+        assert!(matches!(solve_freeze_lp(&bad), Err(FreezeLpError::BadLength { .. })));
+        let bad2 = FreezeLpInput { pdag: &g, w_min: &w_min, w_max: &w_max, r_max: 1.5, lambda: 1e-4 };
+        assert!(matches!(solve_freeze_lp(&bad2), Err(FreezeLpError::BadRmax(_))));
+    }
+}

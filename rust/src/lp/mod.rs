@@ -1,0 +1,8 @@
+//! Linear programming layer: a from-scratch bounded-variable simplex
+//! solver and the TimelyFreeze freeze-ratio formulation built on it.
+
+pub mod freeze_lp;
+pub mod simplex;
+
+pub use freeze_lp::{solve_freeze_lp, FreezeLpError, FreezeLpInput, FreezeSolution, DEFAULT_LAMBDA};
+pub use simplex::{solve, Cmp, LpProblem, LpRow, LpSolution, LpStatus, INF};

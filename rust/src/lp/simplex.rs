@@ -1,0 +1,759 @@
+//! From-scratch linear-programming solver: two-phase primal simplex with
+//! **bounded variables** (l ≤ x ≤ u handled implicitly, not as rows).
+//!
+//! The paper solves its freeze-ratio LP with "standard linear programming
+//! solvers" (§3.2.2, citing Karmarkar's interior-point method for the
+//! polynomial-time claim). No solver crate exists in the offline image,
+//! so this module implements the classic bounded-variable simplex — exact
+//! on the paper's problem sizes (|V| ≈ 2·M·S + 2 nodes → a few hundred
+//! variables and constraints), and fast enough to re-solve per batch if a
+//! schedule were elastic (see benches/lp_micro.rs).
+//!
+//! Method: rows are converted to equalities with slack variables; phase 1
+//! minimizes the sum of artificial variables from an identity basis;
+//! phase 2 minimizes the true objective. Nonbasic variables rest at a
+//! finite bound; the ratio test accounts for basic variables hitting
+//! either bound and for bound flips of the entering variable. Bland's
+//! rule kicks in after a stall to guarantee termination.
+
+pub const INF: f64 = f64::INFINITY;
+
+/// Comparison operator of a row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// One sparse constraint row: `Σ coeffs · x  cmp  rhs`.
+#[derive(Clone, Debug)]
+pub struct LpRow {
+    pub coeffs: Vec<(usize, f64)>,
+    pub cmp: Cmp,
+    pub rhs: f64,
+}
+
+/// `min cᵀx  s.t.  rows,  lower ≤ x ≤ upper`.
+#[derive(Clone, Debug, Default)]
+pub struct LpProblem {
+    pub c: Vec<f64>,
+    pub lower: Vec<f64>,
+    pub upper: Vec<f64>,
+    pub rows: Vec<LpRow>,
+}
+
+impl LpProblem {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a variable, returning its index.
+    pub fn add_var(&mut self, cost: f64, lower: f64, upper: f64) -> usize {
+        assert!(lower <= upper, "lower {lower} > upper {upper}");
+        self.c.push(cost);
+        self.lower.push(lower);
+        self.upper.push(upper);
+        self.c.len() - 1
+    }
+
+    pub fn add_row(&mut self, coeffs: Vec<(usize, f64)>, cmp: Cmp, rhs: f64) {
+        for &(j, _) in &coeffs {
+            assert!(j < self.c.len(), "row references unknown variable {j}");
+        }
+        self.rows.push(LpRow { coeffs, cmp, rhs });
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.c.len()
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Check a candidate point against all rows and bounds.
+    pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
+        if x.len() != self.num_vars() {
+            return false;
+        }
+        for j in 0..x.len() {
+            if x[j] < self.lower[j] - tol || x[j] > self.upper[j] + tol {
+                return false;
+            }
+        }
+        for row in &self.rows {
+            let lhs: f64 = row.coeffs.iter().map(|&(j, a)| a * x[j]).sum();
+            let ok = match row.cmp {
+                Cmp::Le => lhs <= row.rhs + tol,
+                Cmp::Ge => lhs >= row.rhs - tol,
+                Cmp::Eq => (lhs - row.rhs).abs() <= tol,
+            };
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+
+    pub fn objective(&self, x: &[f64]) -> f64 {
+        self.c.iter().zip(x).map(|(c, x)| c * x).sum()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LpStatus {
+    Optimal,
+    Infeasible,
+    Unbounded,
+    IterationLimit,
+}
+
+#[derive(Clone, Debug)]
+pub struct LpSolution {
+    pub status: LpStatus,
+    /// Values of the structural variables.
+    pub x: Vec<f64>,
+    pub objective: f64,
+    pub iterations: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum VarState {
+    Basic(usize),
+    AtLower,
+    AtUpper,
+}
+
+const FEAS_TOL: f64 = 1e-9;
+const OPT_TOL: f64 = 1e-9;
+const PIVOT_TOL: f64 = 1e-10;
+
+struct Tableau {
+    /// Dense rows of B⁻¹·A, m × ntot.
+    a: Vec<Vec<f64>>,
+    /// Current values of basic variables (in bound-shifted space: actual
+    /// values, with nonbasics at their bounds).
+    xb: Vec<f64>,
+    /// Reduced-cost row d_j = c_j − c_Bᵀ B⁻¹ A_j (phase-dependent c).
+    d: Vec<f64>,
+    /// Basis: row → var.
+    basis: Vec<usize>,
+    state: Vec<VarState>,
+    lower: Vec<f64>,
+    upper: Vec<f64>,
+    /// Current nonbasic resting value of each variable.
+    xval: Vec<f64>,
+    m: usize,
+    ntot: usize,
+    iterations: usize,
+}
+
+impl Tableau {
+    fn value(&self, j: usize) -> f64 {
+        match self.state[j] {
+            VarState::Basic(r) => self.xb[r],
+            _ => self.xval[j],
+        }
+    }
+
+    /// One simplex phase: minimize the cost vector already loaded in `d`.
+    /// `col_limit` bounds the columns touched by pivot updates (phase 2
+    /// passes the structural+slack count: artificial columns are pinned
+    /// to zero and never read again, so updating them is wasted work).
+    /// Returns Ok(()) at optimality, Err(Unbounded) otherwise.
+    fn optimize(&mut self, max_iter: usize, fixed: &[bool], col_limit: usize) -> Result<(), LpStatus> {
+        let mut stall = 0usize;
+        for _ in 0..max_iter {
+            self.iterations += 1;
+            let bland = stall > 2 * (self.m + self.ntot);
+            // --- pricing: pick entering variable ---
+            // score = rate of objective decrease per unit step (> 0 ⇒
+            // improving). AtLower moves up (rate −d_j), AtUpper moves
+            // down (rate +d_j); free nonbasics (l = −∞, u = +∞, resting
+            // at 0 with AtLower state) may move either way.
+            let mut enter: Option<(usize, f64, f64)> = None; // (var, dir, score)
+            for j in 0..col_limit {
+                if fixed[j] || self.lower[j] == self.upper[j] {
+                    continue;
+                }
+                let cand: Option<(f64, f64)> = match self.state[j] {
+                    VarState::Basic(_) => None,
+                    VarState::AtLower => {
+                        let free = self.lower[j] == -INF && self.upper[j] == INF;
+                        if self.d[j] < -OPT_TOL {
+                            Some((1.0, -self.d[j]))
+                        } else if free && self.d[j] > OPT_TOL {
+                            Some((-1.0, self.d[j]))
+                        } else {
+                            None
+                        }
+                    }
+                    VarState::AtUpper => {
+                        if self.d[j] > OPT_TOL {
+                            Some((-1.0, self.d[j]))
+                        } else {
+                            None
+                        }
+                    }
+                };
+                if let Some((dir, score)) = cand {
+                    if bland {
+                        enter = Some((j, dir, score));
+                        break;
+                    }
+                    if enter.map_or(true, |(_, _, s)| score > s) {
+                        enter = Some((j, dir, score));
+                    }
+                }
+            }
+            let Some((j, dir, _)) = enter else {
+                return Ok(()); // optimal
+            };
+
+            // --- ratio test ---
+            // x_j moves by dir·t; basic i moves by −a[i][j]·dir·t.
+            let own_range = self.upper[j] - self.lower[j]; // may be INF
+            let mut t_star = own_range;
+            let mut leave: Option<(usize, VarState)> = None; // (row, bound hit)
+            for i in 0..self.m {
+                let rate = self.a[i][j] * dir; // x_b[i] decreases at `rate`
+                let bi = self.basis[i];
+                if rate > PIVOT_TOL {
+                    if self.lower[bi] > -INF {
+                        let t = (self.xb[i] - self.lower[bi]) / rate;
+                        if t < t_star - FEAS_TOL
+                            || (bland && t <= t_star + FEAS_TOL && leave.is_none())
+                        {
+                            t_star = t.max(0.0);
+                            leave = Some((i, VarState::AtLower));
+                        }
+                    }
+                } else if rate < -PIVOT_TOL && self.upper[bi] < INF {
+                    let t = (self.upper[bi] - self.xb[i]) / (-rate);
+                    if t < t_star - FEAS_TOL || (bland && t <= t_star + FEAS_TOL && leave.is_none())
+                    {
+                        t_star = t.max(0.0);
+                        leave = Some((i, VarState::AtUpper));
+                    }
+                }
+            }
+
+            if t_star == INF {
+                return Err(LpStatus::Unbounded);
+            }
+
+            // --- apply step ---
+            // Degenerate steps make no objective progress; count them and
+            // fall back to Bland's rule to guarantee termination.
+            if t_star <= FEAS_TOL {
+                stall += 1;
+            } else {
+                stall = 0;
+            }
+
+            match leave {
+                None => {
+                    // Bound flip: entering variable crosses to its other
+                    // bound; basics shift, basis unchanged.
+                    let delta = dir * t_star;
+                    for i in 0..self.m {
+                        self.xb[i] -= self.a[i][j] * delta;
+                    }
+                    self.xval[j] += delta;
+                    self.state[j] = if dir > 0.0 { VarState::AtUpper } else { VarState::AtLower };
+                }
+                Some((r, bound_hit)) => {
+                    // Update basic values for the step, then pivot.
+                    let delta = dir * t_star;
+                    for i in 0..self.m {
+                        self.xb[i] -= self.a[i][j] * delta;
+                    }
+                    let entering_value = self.xval[j] + delta;
+                    let leaving = self.basis[r];
+                    // Snap the leaving variable exactly onto its bound.
+                    let leave_val = match bound_hit {
+                        VarState::AtLower => self.lower[leaving],
+                        VarState::AtUpper => self.upper[leaving],
+                        VarState::Basic(_) => unreachable!(),
+                    };
+                    self.xval[leaving] = leave_val;
+                    self.state[leaving] = bound_hit;
+
+                    // Pivot row r on column j.
+                    let piv = self.a[r][j];
+                    debug_assert!(piv.abs() > PIVOT_TOL, "tiny pivot {piv}");
+                    let inv = 1.0 / piv;
+                    for col in 0..col_limit {
+                        self.a[r][col] *= inv;
+                    }
+                    for i in 0..self.m {
+                        if i != r {
+                            let f = self.a[i][j];
+                            if f != 0.0 {
+                                for col in 0..col_limit {
+                                    self.a[i][col] -= f * self.a[r][col];
+                                }
+                                self.a[i][j] = 0.0; // exact zero
+                            }
+                        }
+                    }
+                    // Reduced-cost row update.
+                    let f = self.d[j];
+                    if f != 0.0 {
+                        for col in 0..col_limit {
+                            self.d[col] -= f * self.a[r][col];
+                        }
+                        self.d[j] = 0.0;
+                    }
+                    self.basis[r] = j;
+                    self.state[j] = VarState::Basic(r);
+                    self.xb[r] = entering_value;
+                }
+            }
+        }
+        Err(LpStatus::IterationLimit)
+    }
+}
+
+/// Solve an [`LpProblem`]. Deterministic; exact up to f64 tolerance.
+pub fn solve(p: &LpProblem) -> LpSolution {
+    let n = p.num_vars();
+    let m = p.num_rows();
+    if m == 0 {
+        // Bound-only problem: each variable sits at whichever finite
+        // bound minimizes its cost term.
+        let mut x = vec![0.0; n];
+        for j in 0..n {
+            x[j] = trivially_best(p.c[j], p.lower[j], p.upper[j]);
+        }
+        let feasible = x.iter().all(|v| v.is_finite());
+        return LpSolution {
+            status: if feasible { LpStatus::Optimal } else { LpStatus::Unbounded },
+            objective: p.objective(&x),
+            x,
+            iterations: 0,
+        };
+    }
+
+    // Layout: [structural 0..n | slack n..n+ns | artificial ...]
+    let mut lower = p.lower.clone();
+    let mut upper = p.upper.clone();
+    let mut cols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n]; // col → (row, coef)
+    for (i, row) in p.rows.iter().enumerate() {
+        for &(j, a) in &row.coeffs {
+            if a != 0.0 {
+                cols[j].push((i, a));
+            }
+        }
+    }
+    let mut slack_of_row: Vec<Option<usize>> = vec![None; m];
+    for (i, row) in p.rows.iter().enumerate() {
+        match row.cmp {
+            Cmp::Le => {
+                let j = lower.len();
+                lower.push(0.0);
+                upper.push(INF);
+                cols.push(vec![(i, 1.0)]);
+                slack_of_row[i] = Some(j);
+            }
+            Cmp::Ge => {
+                let j = lower.len();
+                lower.push(0.0);
+                upper.push(INF);
+                cols.push(vec![(i, -1.0)]);
+                slack_of_row[i] = Some(j);
+            }
+            Cmp::Eq => {}
+        }
+    }
+    let n_struct_slack = lower.len();
+    // Artificials: one per row (identity basis).
+    for _ in 0..m {
+        lower.push(0.0);
+        upper.push(INF);
+    }
+    let ntot = lower.len();
+
+    // Initial nonbasic values: finite bound nearest zero; 0 for free vars.
+    let mut xval = vec![0.0; ntot];
+    for j in 0..n_struct_slack {
+        xval[j] = initial_rest(lower[j], upper[j]);
+    }
+
+    // Dense tableau rows; artificial columns get ±1 to make residuals
+    // nonnegative.
+    let mut a = vec![vec![0.0f64; ntot]; m];
+    for (j, col) in cols.iter().enumerate() {
+        for &(i, v) in col {
+            a[i][j] = v;
+        }
+    }
+    let mut xb = vec![0.0f64; m];
+    for i in 0..m {
+        let mut resid = p.rows[i].rhs;
+        for j in 0..n_struct_slack {
+            resid -= a[i][j] * xval[j];
+        }
+        // Keep the basis an identity: if the residual is negative, negate
+        // the whole row (coefficients and rhs) so the artificial enters
+        // with +1 and a nonnegative value.
+        if resid < 0.0 {
+            for v in a[i].iter_mut() {
+                *v = -*v;
+            }
+            resid = -resid;
+            // rhs negation is implicit: xb stores the shifted residual.
+        }
+        let art = n_struct_slack + i;
+        a[i][art] = 1.0;
+        xb[i] = resid;
+    }
+
+    let mut state = vec![VarState::AtLower; ntot];
+    for j in 0..n_struct_slack {
+        state[j] = if xval[j] == upper[j] && upper[j].is_finite() && lower[j] != upper[j] {
+            VarState::AtUpper
+        } else {
+            VarState::AtLower
+        };
+    }
+    let mut basis = Vec::with_capacity(m);
+    for i in 0..m {
+        let art = n_struct_slack + i;
+        basis.push(art);
+        state[art] = VarState::Basic(i);
+    }
+
+    // Phase-1 reduced costs: c = e on artificials ⇒ d_j = −Σ_i a[i][j]
+    // for nonbasic j (c_B = 1 on all rows), d on artificials = 0.
+    let mut d = vec![0.0f64; ntot];
+    for j in 0..n_struct_slack {
+        let mut s = 0.0;
+        for i in 0..m {
+            s += a[i][j];
+        }
+        d[j] = -s;
+    }
+
+    let mut t = Tableau {
+        a,
+        xb,
+        d,
+        basis,
+        state,
+        lower: lower.clone(),
+        upper: upper.clone(),
+        xval,
+        m,
+        ntot,
+        iterations: 0,
+    };
+
+    let max_iter = 50 * (m + ntot) + 1000;
+    let fixed_none = vec![false; ntot];
+    // Phase 1 (artificials active: full column range).
+    match t.optimize(max_iter, &fixed_none, ntot) {
+        Ok(()) => {}
+        Err(LpStatus::Unbounded) => {
+            // Phase-1 objective is bounded below by 0; unbounded is a bug.
+            unreachable!("phase-1 cannot be unbounded");
+        }
+        Err(s) => return failed(s, n, t.iterations),
+    }
+    let phase1_obj: f64 = (0..m)
+        .filter(|&i| t.basis[i] >= n_struct_slack)
+        .map(|i| t.xb[i])
+        .sum();
+    if phase1_obj > 1e-6 {
+        return failed(LpStatus::Infeasible, n, t.iterations);
+    }
+
+    // Pin artificials to zero so they can never re-enter; drive basic
+    // artificials out where possible.
+    let mut fixed = vec![false; ntot];
+    for jart in n_struct_slack..ntot {
+        t.lower[jart] = 0.0;
+        t.upper[jart] = 0.0;
+        fixed[jart] = true;
+    }
+    for r in 0..m {
+        let b = t.basis[r];
+        if b >= n_struct_slack {
+            // Degenerate basic artificial (value ~0). Pivot in any
+            // structural/slack column with a usable entry.
+            let mut found = None;
+            for j in 0..n_struct_slack {
+                if !matches!(t.state[j], VarState::Basic(_)) && t.a[r][j].abs() > 1e-7 {
+                    found = Some(j);
+                    break;
+                }
+            }
+            if let Some(j) = found {
+                // Manual degenerate pivot (step 0).
+                let piv = t.a[r][j];
+                let inv = 1.0 / piv;
+                for col in 0..t.ntot {
+                    t.a[r][col] *= inv;
+                }
+                for i in 0..t.m {
+                    if i != r {
+                        let f = t.a[i][j];
+                        if f != 0.0 {
+                            for col in 0..t.ntot {
+                                t.a[i][col] -= f * t.a[r][col];
+                            }
+                            t.a[i][j] = 0.0;
+                        }
+                    }
+                }
+                let entering_value = t.xval[j];
+                t.state[b] = VarState::AtLower;
+                t.xval[b] = 0.0;
+                t.basis[r] = j;
+                t.state[j] = VarState::Basic(r);
+                t.xb[r] = entering_value; // ≈ old xb[r] = 0 shifted basis
+            }
+            // else: redundant row; artificial stays basic at 0 forever
+            // (bounds [0,0] keep it there).
+        }
+    }
+
+    // Phase-2 reduced costs from the real objective.
+    let mut c2 = vec![0.0f64; ntot];
+    c2[..n].copy_from_slice(&p.c);
+    // d_j = c_j − c_Bᵀ B⁻¹ A_j; B⁻¹A is the current tableau.
+    let cb: Vec<f64> = t.basis.iter().map(|&b| c2[b]).collect();
+    for j in 0..ntot {
+        if matches!(t.state[j], VarState::Basic(_)) {
+            t.d[j] = 0.0;
+            continue;
+        }
+        let mut z = 0.0;
+        for i in 0..m {
+            if cb[i] != 0.0 {
+                z += cb[i] * t.a[i][j];
+            }
+        }
+        t.d[j] = c2[j] - z;
+    }
+
+    // Phase 2: artificial columns are fixed at zero and never re-enter;
+    // exclude them from pivot updates entirely.
+    let status = match t.optimize(max_iter, &fixed, n_struct_slack) {
+        Ok(()) => LpStatus::Optimal,
+        Err(s) => s,
+    };
+    // Extract structural solution.
+    let mut x = vec![0.0; n];
+    for j in 0..n {
+        x[j] = t.value(j);
+    }
+    LpSolution { status, objective: p.objective(&x), x, iterations: t.iterations }
+}
+
+fn failed(status: LpStatus, n: usize, iterations: usize) -> LpSolution {
+    LpSolution { status, x: vec![f64::NAN; n], objective: f64::NAN, iterations }
+}
+
+fn initial_rest(l: f64, u: f64) -> f64 {
+    if l > -INF && u < INF {
+        if l.abs() <= u.abs() {
+            l
+        } else {
+            u
+        }
+    } else if l > -INF {
+        l
+    } else if u < INF {
+        u
+    } else {
+        0.0
+    }
+}
+
+fn trivially_best(c: f64, l: f64, u: f64) -> f64 {
+    if c > 0.0 {
+        l
+    } else if c < 0.0 {
+        u
+    } else if l > -INF {
+        l
+    } else if u < INF {
+        u
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_opt(sol: &LpSolution, obj: f64, tol: f64) {
+        assert_eq!(sol.status, LpStatus::Optimal, "{sol:?}");
+        assert!(
+            (sol.objective - obj).abs() <= tol,
+            "objective {} != expected {obj}",
+            sol.objective
+        );
+    }
+
+    #[test]
+    fn textbook_max_problem() {
+        // max 3x + 5y s.t. x ≤ 4, 2y ≤ 12, 3x + 2y ≤ 18, x,y ≥ 0
+        // ⇒ min −3x −5y; optimum (2, 6), obj −36.
+        let mut p = LpProblem::new();
+        let x = p.add_var(-3.0, 0.0, INF);
+        let y = p.add_var(-5.0, 0.0, INF);
+        p.add_row(vec![(x, 1.0)], Cmp::Le, 4.0);
+        p.add_row(vec![(y, 2.0)], Cmp::Le, 12.0);
+        p.add_row(vec![(x, 3.0), (y, 2.0)], Cmp::Le, 18.0);
+        let sol = solve(&p);
+        assert_opt(&sol, -36.0, 1e-7);
+        assert!((sol.x[0] - 2.0).abs() < 1e-7);
+        assert!((sol.x[1] - 6.0).abs() < 1e-7);
+        assert!(p.is_feasible(&sol.x, 1e-7));
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // min x + y s.t. x + y = 10, x − y = 2, x,y ≥ 0 → (6,4), obj 10.
+        let mut p = LpProblem::new();
+        let x = p.add_var(1.0, 0.0, INF);
+        let y = p.add_var(1.0, 0.0, INF);
+        p.add_row(vec![(x, 1.0), (y, 1.0)], Cmp::Eq, 10.0);
+        p.add_row(vec![(x, 1.0), (y, -1.0)], Cmp::Eq, 2.0);
+        let sol = solve(&p);
+        assert_opt(&sol, 10.0, 1e-7);
+        assert!((sol.x[0] - 6.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn ge_constraints_and_bounds() {
+        // min 2x + 3y s.t. x + y ≥ 5, x ≤ 3, y ≤ 4, x,y ≥ 0.
+        // Cheapest: x = 3 (cost 2), y = 2 → obj 12.
+        let mut p = LpProblem::new();
+        let x = p.add_var(2.0, 0.0, 3.0);
+        let y = p.add_var(3.0, 0.0, 4.0);
+        p.add_row(vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 5.0);
+        let sol = solve(&p);
+        assert_opt(&sol, 12.0, 1e-7);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut p = LpProblem::new();
+        let x = p.add_var(1.0, 0.0, 1.0);
+        p.add_row(vec![(x, 1.0)], Cmp::Ge, 2.0);
+        assert_eq!(solve(&p).status, LpStatus::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut p = LpProblem::new();
+        let x = p.add_var(-1.0, 0.0, INF);
+        p.add_row(vec![(x, 1.0)], Cmp::Ge, 0.0);
+        assert_eq!(solve(&p).status, LpStatus::Unbounded);
+    }
+
+    #[test]
+    fn bound_only_problem() {
+        let mut p = LpProblem::new();
+        p.add_var(1.0, -2.0, 5.0); // min → lower
+        p.add_var(-1.0, -2.0, 5.0); // min → upper
+        let sol = solve(&p);
+        assert_opt(&sol, -7.0, 1e-12);
+        assert_eq!(sol.x, vec![-2.0, 5.0]);
+    }
+
+    #[test]
+    fn negative_rhs_rows() {
+        // min x s.t. −x ≤ −3 (i.e. x ≥ 3).
+        let mut p = LpProblem::new();
+        let x = p.add_var(1.0, 0.0, INF);
+        p.add_row(vec![(x, -1.0)], Cmp::Le, -3.0);
+        let sol = solve(&p);
+        assert_opt(&sol, 3.0, 1e-7);
+    }
+
+    #[test]
+    fn free_variable() {
+        // min |shift|-style: min y s.t. y ≥ x − 4, y ≥ 4 − x, x free.
+        // Optimum x = 4, y = 0.
+        let mut p = LpProblem::new();
+        let x = p.add_var(0.0, -INF, INF);
+        let y = p.add_var(1.0, -INF, INF);
+        p.add_row(vec![(y, 1.0), (x, -1.0)], Cmp::Ge, -4.0);
+        p.add_row(vec![(y, 1.0), (x, 1.0)], Cmp::Ge, 4.0);
+        let sol = solve(&p);
+        assert_opt(&sol, 0.0, 1e-7);
+        assert!((sol.x[0] - 4.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn degenerate_vertex() {
+        // Multiple constraints meet at the optimum — exercises degenerate
+        // pivots. min −x − y s.t. x + y ≤ 1, x ≤ 1, y ≤ 1, x + 2y ≤ 2.
+        let mut p = LpProblem::new();
+        let x = p.add_var(-1.0, 0.0, INF);
+        let y = p.add_var(-1.0, 0.0, INF);
+        p.add_row(vec![(x, 1.0), (y, 1.0)], Cmp::Le, 1.0);
+        p.add_row(vec![(x, 1.0)], Cmp::Le, 1.0);
+        p.add_row(vec![(y, 1.0)], Cmp::Le, 1.0);
+        p.add_row(vec![(x, 1.0), (y, 2.0)], Cmp::Le, 2.0);
+        let sol = solve(&p);
+        assert_opt(&sol, -1.0, 1e-7);
+    }
+
+    #[test]
+    fn redundant_equalities() {
+        // x + y = 2 stated twice — phase 1 leaves a basic artificial on a
+        // redundant row.
+        let mut p = LpProblem::new();
+        let x = p.add_var(1.0, 0.0, INF);
+        let y = p.add_var(2.0, 0.0, INF);
+        p.add_row(vec![(x, 1.0), (y, 1.0)], Cmp::Eq, 2.0);
+        p.add_row(vec![(x, 2.0), (y, 2.0)], Cmp::Eq, 4.0);
+        let sol = solve(&p);
+        assert_opt(&sol, 2.0, 1e-7);
+        assert!((sol.x[0] - 2.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn random_lps_feasible_and_not_worse_than_samples() {
+        // Property: on random feasible LPs, the solver's solution is
+        // feasible and no random feasible point beats it.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(2024);
+        for case in 0..30 {
+            let nv = 2 + (case % 4);
+            let mut p = LpProblem::new();
+            for _ in 0..nv {
+                let c = rng.range_f64(-2.0, 2.0);
+                p.add_var(c, 0.0, rng.range_f64(1.0, 5.0));
+            }
+            // Rows of the form Σ a_j x_j ≤ b with b large enough that
+            // x = 0 is feasible (b ≥ 0).
+            for _ in 0..nv {
+                let coeffs: Vec<(usize, f64)> =
+                    (0..nv).map(|j| (j, rng.range_f64(-1.0, 2.0))).collect();
+                p.add_row(coeffs, Cmp::Le, rng.range_f64(0.5, 6.0));
+            }
+            let sol = solve(&p);
+            assert_eq!(sol.status, LpStatus::Optimal, "case {case}");
+            assert!(p.is_feasible(&sol.x, 1e-6), "case {case}: {:?}", sol.x);
+            // Random feasible points never beat the reported optimum.
+            for _ in 0..200 {
+                let cand: Vec<f64> =
+                    (0..nv).map(|j| rng.range_f64(0.0, p.upper[j])).collect();
+                if p.is_feasible(&cand, 1e-9) {
+                    assert!(
+                        p.objective(&cand) >= sol.objective - 1e-6,
+                        "case {case}: sampled point beats 'optimum'"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,348 @@
+//! `tfreeze` — the TimelyFreeze launcher.
+//!
+//! Subcommands:
+//!   simulate   run one paper-scale experiment in the discrete-event
+//!              simulator and print its result row
+//!   table      run a full table grid (4 schedules × 6 methods)
+//!   train      train end-to-end on the real PJRT pipeline engine
+//!   gantt      render a pipeline execution as ASCII (and optionally SVG)
+//!   lp         LP walkthrough on measured bounds (Figure 2 example)
+//!   schedules  print per-rank schedule orders
+//!
+//! Run `tfreeze help` for flags.
+
+use timelyfreeze::bench_support;
+use timelyfreeze::config::ExperimentConfig;
+use timelyfreeze::engine::{self, EngineConfig};
+use timelyfreeze::freeze::PhaseConfig;
+use timelyfreeze::lp;
+use timelyfreeze::sim;
+use timelyfreeze::types::{FreezeMethod, ScheduleKind};
+use timelyfreeze::util::cli::{render_help, Args, FlagSpec};
+use timelyfreeze::util::table::Table;
+use timelyfreeze::viz;
+
+fn flag_specs() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "preset", takes_value: true, help: "model preset: llama-1b|llama-8b|llama-13b|vit-l32|convnextv2-l" },
+        FlagSpec { name: "schedule", takes_value: true, help: "gpipe|1f1b|interleaved|zbv" },
+        FlagSpec { name: "method", takes_value: true, help: "none|apf|autofreeze|timely|timely+apf|timely+auto" },
+        FlagSpec { name: "steps", takes_value: true, help: "training steps" },
+        FlagSpec { name: "r-max", takes_value: true, help: "max average freeze ratio per stage" },
+        FlagSpec { name: "seed", takes_value: true, help: "random seed" },
+        FlagSpec { name: "ranks", takes_value: true, help: "pipeline ranks (GPUs)" },
+        FlagSpec { name: "microbatches", takes_value: true, help: "microbatches per step" },
+        FlagSpec { name: "artifacts", takes_value: true, help: "artifacts directory (train)" },
+        FlagSpec { name: "blocks", takes_value: true, help: "transformer blocks (train)" },
+        FlagSpec { name: "stages", takes_value: true, help: "pipeline stages (train)" },
+        FlagSpec { name: "lr", takes_value: true, help: "base learning rate (train)" },
+        FlagSpec { name: "warmup", takes_value: true, help: "phase boundary T_w" },
+        FlagSpec { name: "monitor", takes_value: true, help: "phase boundary T_m" },
+        FlagSpec { name: "freeze", takes_value: true, help: "phase boundary T_f" },
+        FlagSpec { name: "svg", takes_value: true, help: "write SVG gantt to this path" },
+        FlagSpec { name: "config", takes_value: true, help: "TOML config overriding the preset" },
+        FlagSpec { name: "steady", takes_value: false, help: "report post-T_f steady throughput" },
+        FlagSpec { name: "help", takes_value: false, help: "show help" },
+    ]
+}
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let specs = flag_specs();
+    let args = match Args::parse(&raw, &specs) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    if args.flag_bool("help") || cmd == "help" {
+        println!("{}", render_help("tfreeze", "TimelyFreeze pipeline-parallel trainer", &specs));
+        println!("subcommands: simulate | table | train | gantt | lp | schedules");
+        return;
+    }
+    let result = match cmd.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "table" => cmd_table(&args),
+        "train" => cmd_train(&args),
+        "gantt" => cmd_gantt(&args),
+        "lp" => cmd_lp(&args),
+        "schedules" => cmd_schedules(&args),
+        other => Err(format!("unknown subcommand '{other}' (try `tfreeze help`)")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn build_sim_config(args: &Args) -> Result<ExperimentConfig, String> {
+    let preset = args.flag_or("preset", "llama-1b");
+    let mut cfg = ExperimentConfig::paper_preset(&preset)
+        .ok_or_else(|| format!("unknown preset '{preset}'"))?;
+    if let Some(path) = args.flag("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        let doc = timelyfreeze::util::toml::TomlDoc::parse(&text).map_err(|e| e.to_string())?;
+        cfg.apply_toml(&doc)?;
+    }
+    if let Some(s) = args.flag("schedule") {
+        cfg.schedule = ScheduleKind::parse(s).ok_or_else(|| format!("bad schedule '{s}'"))?;
+    }
+    if let Some(m) = args.flag("method") {
+        cfg.method = FreezeMethod::parse(m).ok_or_else(|| format!("bad method '{m}'"))?;
+    }
+    if let Some(v) = args.flag_usize("steps")? {
+        cfg.steps = v;
+    }
+    if let Some(v) = args.flag_f64("r-max")? {
+        cfg.r_max = v;
+    }
+    if let Some(v) = args.flag_u64("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.flag_usize("ranks")? {
+        cfg.ranks = v;
+    }
+    if let Some(v) = args.flag_usize("microbatches")? {
+        cfg.microbatches = v;
+    }
+    let (mut w, mut m, mut f) =
+        (cfg.phases.t_warmup, cfg.phases.t_monitor, cfg.phases.t_freeze);
+    if let Some(v) = args.flag_usize("warmup")? {
+        w = v;
+    }
+    if let Some(v) = args.flag_usize("monitor")? {
+        m = v;
+    }
+    if let Some(v) = args.flag_usize("freeze")? {
+        f = v;
+    }
+    if w >= m || m >= f {
+        return Err(format!("phase boundaries must satisfy {w} < {m} < {f}"));
+    }
+    cfg.phases = PhaseConfig::new(w, m, f);
+    Ok(cfg)
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    let cfg = build_sim_config(args)?;
+    let r = sim::run(&cfg);
+    println!(
+        "{} · {} · {} — {} steps",
+        cfg.model.name,
+        cfg.schedule.name(),
+        cfg.method.name(),
+        cfg.steps
+    );
+    let thpt = if args.flag_bool("steady") { r.steady_throughput } else { r.throughput };
+    println!("  throughput      {:>10.0} tokens/s", thpt);
+    println!("  MFU             {:>10.2} %", r.mfu);
+    println!("  freeze ratio    {:>10.2} %", r.freeze_ratio);
+    println!("  accuracy proxy  {:>10.2}", r.accuracy);
+    println!(
+        "  batch time      {:>10.4} s (no-freeze {:.4} s)",
+        r.batch_time_final, r.batch_time_nofreeze
+    );
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<(), String> {
+    let base = build_sim_config(args)?;
+    for schedule in ScheduleKind::all() {
+        let mut t = Table::new(
+            &format!("{} — {}", base.model.name, schedule.name()),
+            &["Method", "Avg. Acc. (Δ)", "Frz. Ratio", "Throughput (Δ%)", "MFU"],
+        );
+        let mut baseline: Option<sim::SimResult> = None;
+        for method in FreezeMethod::all() {
+            let mut cfg = base.clone();
+            cfg.schedule = schedule;
+            cfg.method = method;
+            let r = sim::run(&cfg);
+            let b = baseline.get_or_insert_with(|| r.clone());
+            t.row(vec![
+                method.name().to_string(),
+                format!("{:.2} ({:+.2})", r.accuracy, r.acc_delta(b)),
+                format!("{:.2}", r.freeze_ratio),
+                format!("{:.0} ({:+.2})", r.throughput, r.throughput_delta_pct(b)),
+                format!("{:.2}", r.mfu),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let artifacts = args.flag_or(
+        "artifacts",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
+    );
+    let mut cfg = EngineConfig::quick_defaults(artifacts.into());
+    if let Some(v) = args.flag_usize("blocks")? {
+        cfg.blocks = v;
+    }
+    if let Some(v) = args.flag_usize("stages")? {
+        cfg.stages = v;
+    }
+    if let Some(v) = args.flag_usize("microbatches")? {
+        cfg.microbatches = v;
+    }
+    if let Some(v) = args.flag_usize("steps")? {
+        cfg.steps = v;
+    }
+    if let Some(m) = args.flag("method") {
+        cfg.method = FreezeMethod::parse(m).ok_or_else(|| format!("bad method '{m}'"))?;
+    }
+    if let Some(s) = args.flag("schedule") {
+        cfg.schedule = ScheduleKind::parse(s).ok_or_else(|| format!("bad schedule '{s}'"))?;
+    }
+    if let Some(v) = args.flag_f64("r-max")? {
+        cfg.r_max = v;
+    }
+    if let Some(v) = args.flag_f64("lr")? {
+        cfg.base_lr = v;
+    }
+    if let Some(v) = args.flag_u64("seed")? {
+        cfg.seed = v;
+    }
+    let (mut w, mut m, mut f) =
+        (cfg.phases.t_warmup, cfg.phases.t_monitor, cfg.phases.t_freeze);
+    if let Some(v) = args.flag_usize("warmup")? {
+        w = v;
+    }
+    if let Some(v) = args.flag_usize("monitor")? {
+        m = v;
+    }
+    if let Some(v) = args.flag_usize("freeze")? {
+        f = v;
+    }
+    cfg.phases = PhaseConfig::new(w, m, f);
+    println!(
+        "training: {} blocks over {} stages, {} microbatches, {} ({}), {} steps",
+        cfg.blocks,
+        cfg.stages,
+        cfg.microbatches,
+        cfg.schedule.name(),
+        cfg.method.name(),
+        cfg.steps
+    );
+    let t0 = std::time::Instant::now();
+    let report = engine::train(&cfg).map_err(|e| format!("{e:#}"))?;
+    for p in &report.loss_curve {
+        if p.step % 10 == 0 || p.step == 1 || p.step == cfg.steps {
+            println!(
+                "  step {:>5}  loss {:>8.4}  afr {:>5.2}  {:>8}/step",
+                p.step,
+                p.loss,
+                p.mean_afr,
+                bench_support::fmt_time(p.step_time)
+            );
+        }
+    }
+    println!(
+        "done in {:.1}s — throughput {:.0} tok/s (steady {:.0}), κ = {:.3}, freeze ratio {:.1}%",
+        t0.elapsed().as_secs_f64(),
+        report.throughput,
+        report.steady_throughput,
+        report.kappa(),
+        report.freeze_ratio
+    );
+    Ok(())
+}
+
+fn cmd_gantt(args: &Args) -> Result<(), String> {
+    let mut cfg = build_sim_config(args)?;
+    if args.flag("steps").is_none() {
+        cfg.steps = cfg.phases.t_freeze + 30;
+    }
+    let r = sim::run(&cfg);
+    println!("— no freezing —");
+    print!("{}", viz::ascii(&r.gantt_nofreeze, cfg.ranks, 100));
+    println!("— {} (final step) —", cfg.method.name());
+    print!("{}", viz::ascii(&r.gantt_final, cfg.ranks, 100));
+    println!(
+        "batch time reduction: {:.2}%",
+        100.0 * (1.0 - r.batch_time_final / r.batch_time_nofreeze)
+    );
+    if let Some(path) = args.flag("svg") {
+        let svg = viz::svg(
+            &r.gantt_final,
+            cfg.ranks,
+            &format!("{} · {} · {}", cfg.model.name, cfg.schedule.name(), cfg.method.name()),
+        );
+        std::fs::write(path, svg).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_lp(args: &Args) -> Result<(), String> {
+    use timelyfreeze::graph::pipeline::PipelineDag;
+    use timelyfreeze::schedule::Schedule;
+    let cfg = build_sim_config(args)?;
+    let schedule =
+        Schedule::build(cfg.schedule, cfg.ranks, cfg.microbatches, cfg.effective_chunks());
+    let pdag = PipelineDag::from_schedule(&schedule);
+    let layout = sim::build_layout(&cfg, timelyfreeze::partition::PartitionMethod::Parameter);
+    let cost = sim::CostModel::new(
+        &cfg.model,
+        &cfg.gpu,
+        &layout.layer_stage,
+        cfg.stages(),
+        cfg.microbatch_size,
+        cfg.seq_len,
+    );
+    let w_min = pdag.weights(|a| cost.bounds(a).0);
+    let w_max = pdag.weights(|a| cost.bounds(a).1);
+    let sol = lp::solve_freeze_lp(&lp::FreezeLpInput {
+        pdag: &pdag,
+        w_min: &w_min,
+        w_max: &w_max,
+        r_max: cfg.r_max,
+        lambda: cfg.lambda,
+    })
+    .map_err(|e| e.to_string())?;
+    println!(
+        "LP over {} nodes / {} edges ({} iterations)",
+        pdag.len(),
+        pdag.dag.edge_count(),
+        sol.iterations
+    );
+    println!("  P_d (no freezing)   {:.4} s", sol.p_d_max);
+    println!("  P_d (full freezing) {:.4} s", sol.p_d_min);
+    println!("  P_d* (optimized)    {:.4} s  → κ = {:.3}", sol.batch_time, sol.kappa());
+    println!("  mean expected freeze ratio: {:.3}", sol.mean_freezable_ratio(&pdag));
+    let mut t = Table::new("per-stage expected freeze ratios", &["Stage", "mean r*"]);
+    for (s, set) in pdag.freezable_by_stage().iter().enumerate() {
+        if set.is_empty() {
+            continue;
+        }
+        let mean: f64 = set.iter().map(|&i| sol.ratios[i]).sum::<f64>() / set.len() as f64;
+        t.row(vec![format!("{s}"), format!("{mean:.3}")]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_schedules(args: &Args) -> Result<(), String> {
+    use timelyfreeze::schedule::Schedule;
+    let ranks = args.flag_usize("ranks")?.unwrap_or(4);
+    let microbatches = args.flag_usize("microbatches")?.unwrap_or(8);
+    for kind in ScheduleKind::all() {
+        if let Some(s) = args.flag("schedule") {
+            if ScheduleKind::parse(s) != Some(kind) {
+                continue;
+            }
+        }
+        let sched = Schedule::build(kind, ranks, microbatches, Schedule::default_chunks(kind));
+        println!("== {} ({ranks} ranks × {microbatches} microbatches) ==", kind.name());
+        for (rank, order) in sched.orders.iter().enumerate() {
+            let line: Vec<String> = order.iter().map(|a| a.to_string()).collect();
+            println!("  rank {rank}: {}", line.join(" "));
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! Evaluation metrics (§4.2) and experiment-result recording.
+//!
+//! * throughput — tokens/s (language) or samples/s (vision);
+//! * MFU — model-FLOPs utilization with nominal 6·P FLOPs/token;
+//! * average freeze ratio — 𝔼_{t,i,j}[𝕀] over steps × parameters;
+//! * time-to-accuracy bookkeeping (κ and p̄_eff of Appendix D).
+//!
+//! Results are written as JSON rows under `bench_out/` so figures can be
+//! regenerated without re-running experiments.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Tokens/s from total tokens and elapsed seconds.
+pub fn throughput(tokens: u64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return 0.0;
+    }
+    tokens as f64 / seconds
+}
+
+/// MFU percent with the 6·P FLOPs/token convention.
+pub fn mfu_pct(throughput_tps: f64, total_params: f64, ranks: usize, peak_flops: f64) -> f64 {
+    if peak_flops <= 0.0 || ranks == 0 {
+        return 0.0;
+    }
+    100.0 * throughput_tps * 6.0 * total_params / (ranks as f64 * peak_flops)
+}
+
+/// Running average freeze ratio (param-weighted frozen fraction/step).
+#[derive(Clone, Debug, Default)]
+pub struct FreezeRatioMeter {
+    sum: f64,
+    steps: u64,
+}
+
+impl FreezeRatioMeter {
+    pub fn push(&mut self, frozen_fraction: f64) {
+        self.sum += frozen_fraction.clamp(0.0, 1.0);
+        self.steps += 1;
+    }
+
+    /// Percent, averaged over all recorded steps.
+    pub fn pct(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            100.0 * self.sum / self.steps as f64
+        }
+    }
+}
+
+/// Time-to-accuracy ratio (eq. 13): κ / p̄_eff.
+pub fn tta_ratio(kappa: f64, p_eff: f64) -> f64 {
+    if p_eff <= 0.0 {
+        f64::INFINITY
+    } else {
+        kappa / p_eff
+    }
+}
+
+/// Append-only experiment recorder: one JSON object per row, one file
+/// per experiment id, under `bench_out/`.
+pub struct Recorder {
+    dir: PathBuf,
+    rows: BTreeMap<String, Vec<Json>>,
+}
+
+impl Recorder {
+    pub fn new<P: AsRef<Path>>(dir: P) -> Recorder {
+        Recorder { dir: dir.as_ref().to_path_buf(), rows: BTreeMap::new() }
+    }
+
+    /// Standard location: `<repo>/bench_out`.
+    pub fn default_dir() -> Recorder {
+        Recorder::new(concat!(env!("CARGO_MANIFEST_DIR"), "/bench_out"))
+    }
+
+    pub fn push(&mut self, experiment: &str, row: Json) {
+        self.rows.entry(experiment.to_string()).or_default().push(row);
+    }
+
+    /// Write all experiments to disk; returns written paths.
+    pub fn flush(&mut self) -> std::io::Result<Vec<PathBuf>> {
+        std::fs::create_dir_all(&self.dir)?;
+        let mut written = Vec::new();
+        for (name, rows) in &self.rows {
+            let path = self.dir.join(format!("{name}.json"));
+            let mut f = std::fs::File::create(&path)?;
+            let doc = Json::Arr(rows.clone());
+            f.write_all(doc.to_pretty().as_bytes())?;
+            f.write_all(b"\n")?;
+            written.push(path);
+        }
+        Ok(written)
+    }
+}
+
+/// Build a standard result row shared by the table benches.
+#[allow(clippy::too_many_arguments)]
+pub fn result_row(
+    schedule: &str,
+    method: &str,
+    accuracy: f64,
+    acc_delta: f64,
+    freeze_ratio: f64,
+    throughput_v: f64,
+    throughput_delta_pct: f64,
+    mfu: f64,
+) -> Json {
+    Json::obj(vec![
+        ("schedule", Json::str(schedule)),
+        ("method", Json::str(method)),
+        ("accuracy", Json::num(accuracy)),
+        ("acc_delta", Json::num(acc_delta)),
+        ("freeze_ratio", Json::num(freeze_ratio)),
+        ("throughput", Json::num(throughput_v)),
+        ("throughput_delta_pct", Json::num(throughput_delta_pct)),
+        ("mfu", Json::num(mfu)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_and_mfu() {
+        assert_eq!(throughput(1000, 2.0), 500.0);
+        assert_eq!(throughput(1000, 0.0), 0.0);
+        // 5737 tok/s · 6 · 8.83e9 / (4 · 2.93e14) ≈ 25.9%.
+        let m = mfu_pct(5737.0, 8.83e9, 4, 2.93e14);
+        assert!((m - 25.93).abs() < 0.1, "{m}");
+    }
+
+    #[test]
+    fn freeze_meter_averages() {
+        let mut m = FreezeRatioMeter::default();
+        m.push(0.0);
+        m.push(0.5);
+        m.push(1.0);
+        assert!((m.pct() - 50.0).abs() < 1e-9);
+        assert_eq!(FreezeRatioMeter::default().pct(), 0.0);
+    }
+
+    #[test]
+    fn tta_improvement_condition() {
+        // κ < p̄_eff ⇒ ratio < 1 (Theorem D.15).
+        assert!(tta_ratio(0.7, 0.9) < 1.0);
+        assert!(tta_ratio(0.9, 0.7) > 1.0);
+        assert!(tta_ratio(0.5, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn recorder_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("tf-rec-{}", std::process::id()));
+        let mut r = Recorder::new(&dir);
+        r.push("table1", result_row("GPipe", "TimelyFreeze", 54.79, 0.17, 35.6, 7821.0, 36.3, 35.7));
+        r.push("table1", result_row("GPipe", "APF", 54.65, 0.02, 28.9, 7293.0, 27.1, 33.2));
+        let paths = r.flush().unwrap();
+        assert_eq!(paths.len(), 1);
+        let text = std::fs::read_to_string(&paths[0]).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 2);
+        assert_eq!(
+            parsed.as_arr().unwrap()[0].get("method").unwrap().as_str(),
+            Some("TimelyFreeze")
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,146 @@
+//! Timing monitor utilities: per-action duration records and the
+//! backward-time-vs-freeze-ratio regression of Appendix I (Figure 15).
+//!
+//! The freeze controllers keep their own monitoring state (Alg. 1); this
+//! module serves *reporting*: benches and the engine use it to summarize
+//! measured action durations and verify the linear backward-time model
+//! (`t = slope·r + intercept`) that the LP's eq. 4 interpolation relies
+//! on.
+
+use crate::types::{Action, ActionKind};
+use crate::util::stats::{linear_fit, Accum, LinFit};
+use std::collections::BTreeMap;
+
+/// One timing observation.
+#[derive(Clone, Copy, Debug)]
+pub struct TimingSample {
+    pub action: Action,
+    /// Actual freeze ratio in effect when measured.
+    pub afr: f64,
+    pub duration: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TimingMonitor {
+    /// All samples, grouped per action.
+    per_action: BTreeMap<Action, Vec<(f64, f64)>>,
+}
+
+impl TimingMonitor {
+    pub fn new() -> TimingMonitor {
+        TimingMonitor::default()
+    }
+
+    pub fn record(&mut self, sample: TimingSample) {
+        self.per_action
+            .entry(sample.action)
+            .or_default()
+            .push((sample.afr, sample.duration));
+    }
+
+    pub fn record_all<I: IntoIterator<Item = TimingSample>>(&mut self, it: I) {
+        for s in it {
+            self.record(s);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.per_action.values().map(|v| v.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.per_action.is_empty()
+    }
+
+    /// Mean duration of an action at ratios close to `afr` (± tol).
+    pub fn mean_at(&self, action: Action, afr: f64, tol: f64) -> Option<f64> {
+        let samples = self.per_action.get(&action)?;
+        let mut acc = Accum::new();
+        for &(r, d) in samples {
+            if (r - afr).abs() <= tol {
+                acc.push(d);
+            }
+        }
+        (acc.n > 0).then(|| acc.mean())
+    }
+
+    /// Figure 15: per-stage linear fit of backward duration vs AFR,
+    /// pooling all backward actions of the stage.
+    pub fn backward_regression(&self, stages: usize) -> Vec<Option<LinFit>> {
+        let mut xs: Vec<Vec<f64>> = vec![Vec::new(); stages];
+        let mut ys: Vec<Vec<f64>> = vec![Vec::new(); stages];
+        for (a, samples) in &self.per_action {
+            if !a.kind.freezable() || a.stage >= stages {
+                continue;
+            }
+            for &(r, d) in samples {
+                xs[a.stage].push(r);
+                ys[a.stage].push(d);
+            }
+        }
+        (0..stages).map(|s| linear_fit(&xs[s], &ys[s])).collect()
+    }
+
+    /// Upper/lower duration bounds per action from samples at AFR 0 / 1
+    /// — the monitoring-phase estimate of eq. 3's [w_min, w_max].
+    pub fn bounds(&self, action: Action) -> Option<(f64, f64)> {
+        let hi = self.mean_at(action, 0.0, 0.01)?;
+        let lo = match action.kind {
+            ActionKind::Forward | ActionKind::BackwardDgrad => hi,
+            _ => self.mean_at(action, 1.0, 0.01).unwrap_or(hi),
+        };
+        Some((lo.min(hi), hi))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seed_monitor() -> TimingMonitor {
+        let mut m = TimingMonitor::new();
+        // Stage 0 backward: t = -50·r + 70 (Figure 15(a) shape).
+        for i in 0..=10 {
+            let r = i as f64 / 10.0;
+            m.record(TimingSample { action: Action::b(0, 0), afr: r, duration: 70.0 - 50.0 * r });
+            m.record(TimingSample { action: Action::b(1, 0), afr: r, duration: 70.0 - 50.0 * r });
+        }
+        // Forwards unaffected.
+        m.record(TimingSample { action: Action::f(0, 0), afr: 0.0, duration: 30.0 });
+        m
+    }
+
+    #[test]
+    fn regression_recovers_line() {
+        let m = seed_monitor();
+        let fits = m.backward_regression(1);
+        let fit = fits[0].unwrap();
+        assert!((fit.slope + 50.0).abs() < 1e-9);
+        assert!((fit.intercept - 70.0).abs() < 1e-9);
+        assert!(fit.r2 > 0.999);
+    }
+
+    #[test]
+    fn bounds_from_endpoint_samples() {
+        let m = seed_monitor();
+        let (lo, hi) = m.bounds(Action::b(0, 0)).unwrap();
+        assert!((hi - 70.0).abs() < 1e-9);
+        assert!((lo - 20.0).abs() < 1e-9);
+        let (flo, fhi) = m.bounds(Action::f(0, 0)).unwrap();
+        assert_eq!(flo, fhi);
+    }
+
+    #[test]
+    fn mean_at_filters_by_ratio() {
+        let m = seed_monitor();
+        assert!((m.mean_at(Action::b(0, 0), 0.5, 0.01).unwrap() - 45.0).abs() < 1e-9);
+        assert!(m.mean_at(Action::b(0, 3), 0.5, 0.01).is_none());
+    }
+
+    #[test]
+    fn empty_monitor() {
+        let m = TimingMonitor::new();
+        assert!(m.is_empty());
+        assert!(m.backward_regression(2).iter().all(|f| f.is_none()));
+    }
+}

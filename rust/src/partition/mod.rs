@@ -1,0 +1,241 @@
+//! Model-partitioning heuristics (Appendix G.1): assign contiguous layer
+//! ranges to pipeline stages balancing **memory**, **parameter count**,
+//! or **measured time**.
+//!
+//! All three reduce to the classic *linear partition* problem — split a
+//! sequence of layer weights into S contiguous chunks minimizing the
+//! maximum chunk weight — solved exactly by dynamic programming.
+
+/// Exact linear partition: split `weights` into `k` contiguous chunks
+/// minimizing the maximum chunk sum. Returns the stage of each layer
+/// (non-decreasing, all stages in 0..k used when `len ≥ k`).
+pub fn balanced_partition(weights: &[f64], k: usize) -> Vec<usize> {
+    let n = weights.len();
+    assert!(k >= 1, "need at least one stage");
+    assert!(n >= k, "fewer layers ({n}) than stages ({k})");
+    assert!(weights.iter().all(|w| *w >= 0.0), "negative layer weight");
+
+    // prefix[i] = Σ weights[..i]
+    let mut prefix = vec![0.0f64; n + 1];
+    for i in 0..n {
+        prefix[i + 1] = prefix[i] + weights[i];
+    }
+    let seg = |a: usize, b: usize| prefix[b] - prefix[a]; // weights[a..b]
+
+    // dp[j][i] = minimal max-chunk over the first i layers in j chunks.
+    // To force every stage non-empty, dp over i ≥ j.
+    let inf = f64::INFINITY;
+    let mut dp = vec![vec![inf; n + 1]; k + 1];
+    let mut cut = vec![vec![0usize; n + 1]; k + 1];
+    dp[0][0] = 0.0;
+    for j in 1..=k {
+        for i in j..=n {
+            // Last chunk = layers p..i (non-empty ⇒ p ≥ j−1).
+            for p in (j - 1)..i {
+                if dp[j - 1][p] == inf {
+                    continue;
+                }
+                let cand = dp[j - 1][p].max(seg(p, i));
+                if cand < dp[j][i] {
+                    dp[j][i] = cand;
+                    cut[j][i] = p;
+                }
+            }
+        }
+    }
+
+    // Recover cut points.
+    let mut bounds = vec![n];
+    let mut i = n;
+    for j in (1..=k).rev() {
+        i = cut[j][i];
+        bounds.push(i);
+    }
+    bounds.reverse(); // [0, c1, c2, …, n]
+    debug_assert_eq!(bounds[0], 0);
+
+    let mut stage_of_layer = vec![0usize; n];
+    for s in 0..k {
+        for l in bounds[s]..bounds[s + 1] {
+            stage_of_layer[l] = s;
+        }
+    }
+    stage_of_layer
+}
+
+/// The three heuristics of Appendix G.1 as weight selectors over a layer
+/// profile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PartitionMethod {
+    /// Balance peak activation + parameter memory (OOM avoidance).
+    Memory,
+    /// Balance raw parameter counts (profiling-free default).
+    Parameter,
+    /// Balance measured per-layer forward+backward latency (throughput).
+    Time,
+}
+
+impl PartitionMethod {
+    pub fn name(self) -> &'static str {
+        match self {
+            PartitionMethod::Memory => "Memory",
+            PartitionMethod::Parameter => "Parameter",
+            PartitionMethod::Time => "Time",
+        }
+    }
+
+    pub fn all() -> [PartitionMethod; 3] {
+        [PartitionMethod::Memory, PartitionMethod::Parameter, PartitionMethod::Time]
+    }
+}
+
+/// Per-layer profile used by the heuristics.
+#[derive(Clone, Debug)]
+pub struct LayerProfile {
+    /// Parameter count per layer.
+    pub params: Vec<f64>,
+    /// Peak memory per layer (activations + params), bytes.
+    pub memory: Vec<f64>,
+    /// Measured forward+backward time per layer.
+    pub time: Vec<f64>,
+}
+
+impl LayerProfile {
+    pub fn partition(&self, method: PartitionMethod, stages: usize) -> Vec<usize> {
+        let weights = match method {
+            PartitionMethod::Memory => &self.memory,
+            PartitionMethod::Parameter => &self.params,
+            PartitionMethod::Time => &self.time,
+        };
+        balanced_partition(weights, stages)
+    }
+
+    /// Max-stage/mean-stage imbalance of a partition under a weight kind.
+    pub fn imbalance(&self, stage_of_layer: &[usize], method: PartitionMethod) -> f64 {
+        let weights = match method {
+            PartitionMethod::Memory => &self.memory,
+            PartitionMethod::Parameter => &self.params,
+            PartitionMethod::Time => &self.time,
+        };
+        let stages = stage_of_layer.iter().copied().max().unwrap_or(0) + 1;
+        let mut sums = vec![0.0f64; stages];
+        for (l, &s) in stage_of_layer.iter().enumerate() {
+            sums[s] += weights[l];
+        }
+        let mean = sums.iter().sum::<f64>() / stages as f64;
+        let max = sums.iter().copied().fold(0.0f64, f64::max);
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_weights_split_evenly() {
+        let p = balanced_partition(&[1.0; 8], 4);
+        assert_eq!(p, vec![0, 0, 1, 1, 2, 2, 3, 3]);
+    }
+
+    #[test]
+    fn heavy_tail_isolated() {
+        // ConvNeXt-like skew: deep layers much heavier.
+        let w = [1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 10.0, 10.0];
+        let p = balanced_partition(&w, 4);
+        // The two heavy layers must land in separate stages.
+        assert_ne!(p[6], p[7]);
+        // Max chunk weight is optimal (10).
+        let mut sums = [0.0; 4];
+        for (l, &s) in p.iter().enumerate() {
+            sums[s] += w[l];
+        }
+        assert!(sums.iter().copied().fold(0.0f64, f64::max) <= 10.0 + 1e-9);
+    }
+
+    #[test]
+    fn partition_is_contiguous_and_complete() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(11);
+        for _ in 0..50 {
+            let n = 4 + (rng.next_below(20) as usize);
+            let k = 1 + (rng.next_below(4) as usize).min(n - 1);
+            let w: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 5.0)).collect();
+            let p = balanced_partition(&w, k);
+            assert_eq!(p.len(), n);
+            // Non-decreasing and covering 0..k.
+            for pair in p.windows(2) {
+                assert!(pair[1] == pair[0] || pair[1] == pair[0] + 1);
+            }
+            assert_eq!(p[0], 0);
+            assert_eq!(*p.last().unwrap(), k - 1);
+        }
+    }
+
+    #[test]
+    fn dp_is_optimal_vs_brute_force() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(5);
+        for _ in 0..20 {
+            let n = 6;
+            let k = 3;
+            let w: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 4.0)).collect();
+            let p = balanced_partition(&w, k);
+            let mut sums = vec![0.0; k];
+            for (l, &s) in p.iter().enumerate() {
+                sums[s] += w[l];
+            }
+            let dp_max = sums.iter().copied().fold(0.0f64, f64::max);
+            // Brute force all cut pairs (c1 < c2).
+            let mut best = f64::INFINITY;
+            for c1 in 1..n - 1 {
+                for c2 in c1 + 1..n {
+                    let s1: f64 = w[..c1].iter().sum();
+                    let s2: f64 = w[c1..c2].iter().sum();
+                    let s3: f64 = w[c2..].iter().sum();
+                    best = best.min(s1.max(s2).max(s3));
+                }
+            }
+            assert!((dp_max - best).abs() < 1e-9, "dp {dp_max} vs brute {best}");
+        }
+    }
+
+    #[test]
+    fn heuristics_pick_their_weight_vector() {
+        let profile = LayerProfile {
+            params: vec![1.0, 1.0, 1.0, 9.0],
+            memory: vec![9.0, 1.0, 1.0, 1.0],
+            time: vec![1.0, 9.0, 1.0, 1.0],
+        };
+        let by_param = profile.partition(PartitionMethod::Parameter, 2);
+        assert_eq!(by_param, vec![0, 0, 0, 1]); // isolate heavy-param tail
+        let by_mem = profile.partition(PartitionMethod::Memory, 2);
+        assert_eq!(by_mem, vec![0, 1, 1, 1]); // isolate heavy-memory head
+        let by_time = profile.partition(PartitionMethod::Time, 2);
+        assert_eq!(by_time[1], 0); // heavy-time layer stays in stage 0…
+        assert_eq!(by_time, vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        let profile = LayerProfile {
+            params: vec![1.0, 1.0, 1.0, 1.0],
+            memory: vec![1.0; 4],
+            time: vec![1.0; 4],
+        };
+        let even = vec![0, 0, 1, 1];
+        assert!((profile.imbalance(&even, PartitionMethod::Parameter) - 1.0).abs() < 1e-12);
+        let skew = vec![0, 0, 0, 1];
+        assert!(profile.imbalance(&skew, PartitionMethod::Parameter) > 1.4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_few_layers_panics() {
+        balanced_partition(&[1.0], 2);
+    }
+}

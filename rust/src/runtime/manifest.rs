@@ -1,0 +1,201 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime — artifact files, input/output tensor specs, and the
+//! model configuration they were lowered for.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model configuration recorded by the AOT pipeline.
+#[derive(Clone, Debug)]
+pub struct ManifestConfig {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub microbatch: usize,
+    pub param_names: Vec<String>,
+    pub masked_names: Vec<String>,
+    pub mask_shapes: BTreeMap<String, (usize, usize)>,
+    pub matrix_shapes: BTreeMap<String, (usize, usize)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ManifestConfig,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of tensor specs"))?
+        .iter()
+        .map(|t| {
+            let shape = t
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| anyhow!("missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = t
+                .get("dtype")
+                .and_then(|d| d.as_str())
+                .ok_or_else(|| anyhow!("missing dtype"))?
+                .to_string();
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+fn shape_pairs(v: &Json) -> Result<BTreeMap<String, (usize, usize)>> {
+    let mut out = BTreeMap::new();
+    for (name, shape) in v.as_obj().ok_or_else(|| anyhow!("expected object"))? {
+        let arr = shape.as_arr().ok_or_else(|| anyhow!("bad shape for {name}"))?;
+        if arr.len() != 2 {
+            bail!("shape for {name} must be 2-d");
+        }
+        out.insert(
+            name.clone(),
+            (
+                arr[0].as_usize().ok_or_else(|| anyhow!("bad dim"))?,
+                arr[1].as_usize().ok_or_else(|| anyhow!("bad dim"))?,
+            ),
+        );
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let json = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let cfg = json.get("config").ok_or_else(|| anyhow!("missing config"))?;
+        let get_usize = |k: &str| -> Result<usize> {
+            cfg.get(k).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("config.{k} missing"))
+        };
+        let strings = |k: &str| -> Result<Vec<String>> {
+            Ok(cfg
+                .get(k)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("config.{k} missing"))?
+                .iter()
+                .filter_map(|s| s.as_str().map(str::to_string))
+                .collect())
+        };
+        let config = ManifestConfig {
+            d_model: get_usize("d_model")?,
+            n_heads: get_usize("n_heads")?,
+            d_ff: get_usize("d_ff")?,
+            vocab: get_usize("vocab")?,
+            seq_len: get_usize("seq_len")?,
+            microbatch: get_usize("microbatch")?,
+            param_names: strings("param_names")?,
+            masked_names: strings("masked_names")?,
+            mask_shapes: shape_pairs(
+                cfg.get("mask_shapes").ok_or_else(|| anyhow!("mask_shapes missing"))?,
+            )?,
+            matrix_shapes: shape_pairs(
+                cfg.get("matrix_shapes").ok_or_else(|| anyhow!("matrix_shapes missing"))?,
+            )?,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in json
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("missing artifacts"))?
+        {
+            let file = spec
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("artifact {name}: missing file"))?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: dir.join(file),
+                    inputs: specs(spec.get("inputs").ok_or_else(|| anyhow!("inputs"))?)?,
+                    outputs: specs(spec.get("outputs").ok_or_else(|| anyhow!("outputs"))?)?,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), config, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.config.d_model > 0);
+        assert!(m.artifacts.contains_key("block_fwd"));
+        let spec = m.artifact("block_fwd").unwrap();
+        assert!(spec.file.exists());
+        // block_fwd: 9 params + x.
+        assert_eq!(spec.inputs.len(), 10);
+        assert_eq!(spec.outputs.len(), 1);
+        assert!(m.artifact("nonexistent").is_err());
+    }
+
+    #[test]
+    fn parses_minimal_synthetic_manifest() {
+        let dir = std::env::temp_dir().join(format!("tf-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "config": {"d_model": 8, "n_heads": 2, "d_ff": 16, "vocab": 32,
+                         "seq_len": 4, "microbatch": 1,
+                         "param_names": ["wq"], "masked_names": ["wq"],
+                         "mask_shapes": {"wq": [1, 1]},
+                         "matrix_shapes": {"wq": [8, 8]}},
+              "artifacts": {"x": {"file": "x.hlo.txt",
+                "inputs": [{"shape": [8, 8], "dtype": "float32"}],
+                "outputs": [{"shape": [8], "dtype": "float32"}]}}
+            }"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.mask_shapes["wq"], (1, 1));
+        assert_eq!(m.artifact("x").unwrap().inputs[0].shape, vec![8, 8]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

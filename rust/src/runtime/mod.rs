@@ -1,0 +1,11 @@
+//! PJRT runtime layer: manifest parsing, host tensors, and per-thread
+//! artifact execution. This is the only module that touches the `xla`
+//! crate; everything above it works with [`HostTensor`]s.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::StageRuntime;
+pub use manifest::{ArtifactSpec, Manifest, ManifestConfig, TensorSpec};
+pub use tensor::{HostTensor, TensorData};

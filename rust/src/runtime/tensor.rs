@@ -1,0 +1,141 @@
+//! Host-side tensors: the data that crosses stage-worker channels.
+//!
+//! PJRT `Literal`s wrap raw pointers and are not `Send`, so inter-stage
+//! "communication" (the paper's NVLink/PCIe transfers) moves plain host
+//! buffers; each stage worker converts to/from `Literal` at its own PJRT
+//! client boundary.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        HostTensor::f32(shape.to_vec(), vec![0.0; shape.iter().product()])
+    }
+
+    pub fn full(shape: &[usize], value: f32) -> HostTensor {
+        HostTensor::f32(shape.to_vec(), vec![value; shape.iter().product()])
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self.data {
+            TensorData::F32(_) => "float32",
+            TensorData::I32(_) => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// L2 norm (f32 tensors).
+    pub fn l2(&self) -> f64 {
+        match &self.data {
+            TensorData::F32(v) => v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt(),
+            TensorData::I32(_) => 0.0,
+        }
+    }
+
+    /// Convert to a PJRT literal (on the calling thread's client).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v.as_slice()).reshape(&dims)?,
+            TensorData::I32(v) => xla::Literal::vec1(v.as_slice()).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    /// Read a literal back into host memory. `shape`/`dtype` come from
+    /// the artifact manifest (literal shape introspection in the xla
+    /// crate is limited).
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize], dtype: &str) -> Result<HostTensor> {
+        match dtype {
+            "float32" => Ok(HostTensor::f32(shape.to_vec(), lit.to_vec::<f32>()?)),
+            "int32" => Ok(HostTensor::i32(shape.to_vec(), lit.to_vec::<i32>()?)),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = HostTensor::f32(vec![2, 3], vec![1.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), "float32");
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        let i = HostTensor::i32(vec![4], vec![1, 2, 3, 4]);
+        assert_eq!(i.dtype(), "int32");
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn l2_norm() {
+        let t = HostTensor::f32(vec![2], vec![3.0, 4.0]);
+        assert!((t.l2() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zeros_and_full() {
+        let z = HostTensor::zeros(&[2, 2]);
+        assert_eq!(z.as_f32().unwrap(), &[0.0; 4]);
+        let f = HostTensor::full(&[3], 2.5);
+        assert_eq!(f.as_f32().unwrap(), &[2.5; 3]);
+    }
+}

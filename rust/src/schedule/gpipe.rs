@@ -1,0 +1,76 @@
+//! GPipe schedule (Huang et al. 2019): all forward microbatches first,
+//! then all backwards. Appendix B rule 4 notes the GPipe-specific
+//! constraint `v_(f,M,s) → v_(b,1,s)` — encoded here by the per-rank
+//! order, from which the DAG builder derives the rule-4 edges.
+
+use super::{chunkmajor_rank_of_stage, Schedule};
+use crate::types::{Action, ScheduleKind};
+
+pub fn build(ranks: usize, microbatches: usize) -> Schedule {
+    let stages = ranks;
+    let mut orders = Vec::with_capacity(ranks);
+    for rank in 0..ranks {
+        let mut order = Vec::with_capacity(2 * microbatches);
+        for m in 0..microbatches {
+            order.push(Action::f(m, rank));
+        }
+        // Backward in microbatch order (Appendix B rule 2 requires
+        // (b,m,s) → (b,m+1,s), i.e. ascending microbatch order).
+        for m in 0..microbatches {
+            order.push(Action::b(m, rank));
+        }
+        orders.push(order);
+    }
+    Schedule {
+        kind: ScheduleKind::GPipe,
+        ranks,
+        chunks: 1,
+        stages,
+        microbatches,
+        rank_of_stage: chunkmajor_rank_of_stage(ranks, 1),
+        orders,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::ActionKind;
+
+    #[test]
+    fn forwards_before_backwards_on_every_rank() {
+        let s = build(4, 8);
+        for order in &s.orders {
+            let first_b = order.iter().position(|a| a.kind == ActionKind::Backward).unwrap();
+            let last_f = order
+                .iter()
+                .rposition(|a| a.kind == ActionKind::Forward)
+                .unwrap();
+            assert!(last_f < first_b, "GPipe must finish all forwards first");
+        }
+    }
+
+    #[test]
+    fn microbatch_order_ascending() {
+        let s = build(2, 4);
+        let fwd_mbs: Vec<usize> = s.orders[0]
+            .iter()
+            .filter(|a| a.kind == ActionKind::Forward)
+            .map(|a| a.mb)
+            .collect();
+        assert_eq!(fwd_mbs, vec![0, 1, 2, 3]);
+        let bwd_mbs: Vec<usize> = s.orders[0]
+            .iter()
+            .filter(|a| a.kind == ActionKind::Backward)
+            .map(|a| a.mb)
+            .collect();
+        assert_eq!(bwd_mbs, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn single_rank_single_microbatch() {
+        let s = build(1, 1);
+        assert_eq!(s.orders[0], vec![Action::f(0, 0), Action::b(0, 0)]);
+        s.validate().unwrap();
+    }
+}

@@ -1,0 +1,149 @@
+//! Interleaved 1F1B (Narayanan et al. 2021, Megatron-LM): each rank hosts
+//! `V` model chunks ("micro-stages"), shrinking the pipeline bubble by a
+//! factor of V at the cost of more communication.
+//!
+//! For `M % ranks == 0` we reproduce Megatron's closed-form unit order
+//! (`get_model_chunk_id`); otherwise we fall back to the greedy list
+//! scheduler with 1F1B priority, which yields a legal interleaved order
+//! for any (ranks, M, V).
+
+use super::{chunkmajor_rank_of_stage, list_sched, Schedule};
+use crate::types::{Action, ScheduleKind};
+
+pub fn build(ranks: usize, microbatches: usize, chunks: usize) -> Schedule {
+    let stages = ranks * chunks;
+    let rank_of_stage = chunkmajor_rank_of_stage(ranks, chunks);
+    let orders = if microbatches % ranks == 0 && ranks > 1 {
+        megatron_orders(ranks, microbatches, chunks)
+    } else {
+        fallback_orders(ranks, microbatches, chunks, &rank_of_stage)
+    };
+    Schedule {
+        kind: ScheduleKind::Interleaved1F1B,
+        ranks,
+        chunks,
+        stages,
+        microbatches,
+        rank_of_stage,
+        orders,
+    }
+}
+
+/// Megatron's interleaved unit mapping. A "unit" is one (chunk,
+/// microbatch) forward or backward on a rank; every rank executes
+/// `M · V` forward units and the same number of backward units.
+fn unit_to_action(i: usize, ranks: usize, chunks: usize, forward: bool, rank: usize) -> Action {
+    let group = ranks * chunks;
+    let in_group = i % group;
+    let mut chunk = in_group / ranks;
+    if !forward {
+        chunk = chunks - 1 - chunk;
+    }
+    let mb = (i / group) * ranks + (in_group % ranks);
+    let stage = chunk * ranks + rank;
+    if forward {
+        Action::f(mb, stage)
+    } else {
+        Action::b(mb, stage)
+    }
+}
+
+fn megatron_orders(ranks: usize, m: usize, chunks: usize) -> Vec<Vec<Action>> {
+    let total = m * chunks;
+    let mut orders = Vec::with_capacity(ranks);
+    for rank in 0..ranks {
+        // Megatron warm-up depth.
+        let warmup = if m == ranks {
+            total
+        } else {
+            ((ranks - rank - 1) * 2 + (chunks - 1) * ranks).min(total)
+        };
+        let mut order = Vec::with_capacity(2 * total);
+        for i in 0..warmup {
+            order.push(unit_to_action(i, ranks, chunks, true, rank));
+        }
+        for k in 0..total {
+            if warmup + k < total {
+                order.push(unit_to_action(warmup + k, ranks, chunks, true, rank));
+            }
+            order.push(unit_to_action(k, ranks, chunks, false, rank));
+        }
+        orders.push(order);
+    }
+    orders
+}
+
+fn fallback_orders(
+    ranks: usize,
+    m: usize,
+    chunks: usize,
+    rank_of_stage: &[usize],
+) -> Vec<Vec<Action>> {
+    let stages = ranks * chunks;
+    let mut actions = Vec::with_capacity(2 * stages * m);
+    for mb in 0..m {
+        for s in 0..stages {
+            actions.push(Action::f(mb, s));
+            actions.push(Action::b(mb, s));
+        }
+    }
+    list_sched::list_schedule(
+        &actions,
+        stages,
+        m,
+        rank_of_stage,
+        ranks,
+        &list_sched::Priority::one_f_one_b(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::ActionKind;
+
+    #[test]
+    fn megatron_unit_mapping_r2_v2() {
+        // R=2, V=2: forward units on rank 0 →
+        // (c0,m0) (c0,m1) (c1,m0) (c1,m1) (c0,m2) …
+        let a0 = unit_to_action(0, 2, 2, true, 0);
+        assert_eq!((a0.mb, a0.stage), (0, 0));
+        let a2 = unit_to_action(2, 2, 2, true, 0);
+        assert_eq!((a2.mb, a2.stage), (0, 2)); // chunk 1 → stage 2
+        let a4 = unit_to_action(4, 2, 2, true, 0);
+        assert_eq!((a4.mb, a4.stage), (2, 0));
+        // Backward reverses chunks.
+        let b0 = unit_to_action(0, 2, 2, false, 0);
+        assert_eq!((b0.mb, b0.stage), (0, 2));
+    }
+
+    #[test]
+    fn covers_all_actions_paper_config() {
+        // Paper main config: 4 ranks, 8 microbatches, 2 chunks.
+        let s = build(4, 8, 2);
+        s.validate().unwrap();
+        assert_eq!(s.stages, 8);
+        assert_eq!(s.action_count(), 2 * 8 * 8);
+    }
+
+    #[test]
+    fn fallback_covers_non_divisible() {
+        let s = build(4, 6, 2);
+        s.validate().unwrap();
+        assert_eq!(s.action_count(), 2 * 8 * 6);
+    }
+
+    #[test]
+    fn warmup_shallower_on_later_ranks() {
+        let s = build(4, 8, 2);
+        // Count leading forwards per rank: later ranks start backward
+        // sooner.
+        let lead = |r: usize| {
+            s.orders[r]
+                .iter()
+                .take_while(|a| a.kind == ActionKind::Forward)
+                .count()
+        };
+        assert!(lead(0) > lead(3));
+    }
+}

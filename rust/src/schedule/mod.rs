@@ -1,0 +1,198 @@
+//! Pipeline schedules (§2.1, §4.2): GPipe, 1F1B, Interleaved 1F1B, and
+//! Zero-Bubble V (ZBV).
+//!
+//! A [`Schedule`] is the ground truth the rest of the system consumes:
+//! * `orders[rank]` — the exact per-rank execution order of actions
+//!   (Appendix B rule 4: same-rank actions respect this order);
+//! * `rank_of_stage` — virtual-stage → GPU-rank placement (Interleaved and
+//!   ZBV place multiple model chunks per rank);
+//! * structural dependencies are *not* stored here — they are derived by
+//!   [`crate::graph::pipeline`] from rules 1–3 of Appendix B.
+//!
+//! All builders are deterministic and panic-free for `ranks ≥ 1`,
+//! `microbatches ≥ 1`.
+
+mod gpipe;
+mod interleaved;
+mod list_sched;
+mod one_f_one_b;
+mod zbv;
+
+pub use list_sched::{list_schedule, Priority};
+
+use crate::types::{Action, ActionKind, ScheduleKind};
+
+/// A fully-instantiated pipeline schedule for one batch.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub kind: ScheduleKind,
+    /// Number of physical GPU ranks.
+    pub ranks: usize,
+    /// Model chunks hosted per rank (1 for GPipe/1F1B, ≥2 otherwise).
+    pub chunks: usize,
+    /// Total virtual stages = `ranks * chunks`.
+    pub stages: usize,
+    pub microbatches: usize,
+    /// Virtual stage → rank placement.
+    pub rank_of_stage: Vec<usize>,
+    /// Per-rank execution order (Appendix B rule 4).
+    pub orders: Vec<Vec<Action>>,
+}
+
+impl Schedule {
+    /// Build the schedule `kind` for `ranks` GPUs and `microbatches`
+    /// microbatches. `chunks` is honoured by Interleaved 1F1B (ZBV is
+    /// fixed at 2 chunks by its V shape; GPipe/1F1B at 1).
+    pub fn build(kind: ScheduleKind, ranks: usize, microbatches: usize, chunks: usize) -> Schedule {
+        assert!(ranks >= 1, "need at least one rank");
+        assert!(microbatches >= 1, "need at least one microbatch");
+        match kind {
+            ScheduleKind::GPipe => gpipe::build(ranks, microbatches),
+            ScheduleKind::OneFOneB => one_f_one_b::build(ranks, microbatches),
+            ScheduleKind::Interleaved1F1B => {
+                interleaved::build(ranks, microbatches, chunks.max(2))
+            }
+            ScheduleKind::ZeroBubbleV => zbv::build(ranks, microbatches),
+        }
+    }
+
+    /// Default chunk count used in the paper's experiments.
+    pub fn default_chunks(kind: ScheduleKind) -> usize {
+        match kind {
+            ScheduleKind::GPipe | ScheduleKind::OneFOneB => 1,
+            ScheduleKind::Interleaved1F1B | ScheduleKind::ZeroBubbleV => 2,
+        }
+    }
+
+    /// All actions across all ranks (order: rank-major, schedule order).
+    pub fn all_actions(&self) -> Vec<Action> {
+        self.orders.iter().flatten().copied().collect()
+    }
+
+    /// Total number of action nodes in the pipeline DAG (excluding
+    /// source/destination).
+    pub fn action_count(&self) -> usize {
+        self.orders.iter().map(|o| o.len()).sum()
+    }
+
+    /// Expected number of forward actions (one per stage per microbatch).
+    pub fn expected_forward_count(&self) -> usize {
+        self.stages * self.microbatches
+    }
+
+    /// Sanity checks shared by all builders; called from tests and from
+    /// `debug_assert!` in the DAG builder.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rank_of_stage.len() != self.stages {
+            return Err("rank_of_stage length mismatch".into());
+        }
+        if self.orders.len() != self.ranks {
+            return Err("orders length mismatch".into());
+        }
+        if self.stages != self.ranks * self.chunks {
+            return Err("stages != ranks*chunks".into());
+        }
+        // Every action appears exactly once, on the rank that owns its
+        // stage; forward/backward coverage is complete.
+        let mut seen = std::collections::BTreeSet::new();
+        let mut fwd = 0usize;
+        let mut bwd_units = 0usize; // Backward or BackwardDgrad
+        for (rank, order) in self.orders.iter().enumerate() {
+            for a in order {
+                if a.stage >= self.stages || a.mb >= self.microbatches {
+                    return Err(format!("action {a} out of range"));
+                }
+                if self.rank_of_stage[a.stage] != rank {
+                    return Err(format!(
+                        "action {a} scheduled on rank {rank} but stage {} lives on rank {}",
+                        a.stage, self.rank_of_stage[a.stage]
+                    ));
+                }
+                if !seen.insert(*a) {
+                    return Err(format!("duplicate action {a}"));
+                }
+                match a.kind {
+                    ActionKind::Forward => fwd += 1,
+                    ActionKind::Backward | ActionKind::BackwardDgrad => bwd_units += 1,
+                    ActionKind::BackwardWgrad => {}
+                }
+            }
+        }
+        let expect = self.stages * self.microbatches;
+        if fwd != expect {
+            return Err(format!("forward count {fwd} != {expect}"));
+        }
+        if bwd_units != expect {
+            return Err(format!("backward count {bwd_units} != {expect}"));
+        }
+        Ok(())
+    }
+}
+
+/// Helper shared by builders: stage placement for `chunks` model chunks
+/// per rank, chunk-major (`stage = chunk*ranks + rank`), i.e. forward
+/// traverses ranks 0..R for chunk 0, then 0..R again for chunk 1, …
+pub(crate) fn chunkmajor_rank_of_stage(ranks: usize, chunks: usize) -> Vec<usize> {
+    (0..ranks * chunks).map(|s| s % ranks).collect()
+}
+
+/// Stage placement for ZBV's V shape: rank r hosts virtual stages `r`
+/// (descending leg) and `2R−1−r` (ascending leg), so forward goes
+/// 0→1→…→R−1 (down the ranks) then R→…→2R−1 back up: rank of stage s is
+/// `s` for s < R and `2R−1−s` for s ≥ R.
+pub(crate) fn vshape_rank_of_stage(ranks: usize) -> Vec<usize> {
+    (0..2 * ranks)
+        .map(|s| if s < ranks { s } else { 2 * ranks - 1 - s })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_schedules_validate_across_sizes() {
+        for kind in ScheduleKind::all() {
+            for ranks in [1, 2, 4, 6, 8] {
+                for m in [1, 2, 4, 8, 12] {
+                    let s = Schedule::build(kind, ranks, m, Schedule::default_chunks(kind));
+                    s.validate().unwrap_or_else(|e| {
+                        panic!("{} ranks={ranks} m={m}: {e}", kind.name())
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunkmajor_placement() {
+        assert_eq!(chunkmajor_rank_of_stage(4, 2), vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn vshape_placement() {
+        assert_eq!(vshape_rank_of_stage(4), vec![0, 1, 2, 3, 3, 2, 1, 0]);
+        assert_eq!(vshape_rank_of_stage(1), vec![0, 0]);
+    }
+
+    #[test]
+    fn zbv_emits_split_backward() {
+        let s = Schedule::build(ScheduleKind::ZeroBubbleV, 4, 8, 2);
+        let has_w = s
+            .all_actions()
+            .iter()
+            .any(|a| a.kind == ActionKind::BackwardWgrad);
+        let has_bd = s
+            .all_actions()
+            .iter()
+            .any(|a| a.kind == ActionKind::BackwardDgrad);
+        assert!(has_w && has_bd);
+        // W count equals B count equals stage*mb.
+        let w = s
+            .all_actions()
+            .iter()
+            .filter(|a| a.kind == ActionKind::BackwardWgrad)
+            .count();
+        assert_eq!(w, s.stages * s.microbatches);
+    }
+}

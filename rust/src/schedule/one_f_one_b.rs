@@ -1,0 +1,105 @@
+//! 1F1B schedule (PipeDream-Flush / DAPPLE; Narayanan et al. 2019, Fan et
+//! al. 2021): each rank runs a warm-up of forwards, then alternates one
+//! forward with one backward, then drains the remaining backwards. This
+//! bounds in-flight activations at `S − rank` microbatches.
+
+use super::{chunkmajor_rank_of_stage, Schedule};
+use crate::types::{Action, ScheduleKind};
+
+pub fn build(ranks: usize, microbatches: usize) -> Schedule {
+    let stages = ranks;
+    let m = microbatches;
+    let mut orders = Vec::with_capacity(ranks);
+    for rank in 0..ranks {
+        // Standard 1F1B warm-up depth: the last rank starts steady-state
+        // immediately; rank r runs (S − 1 − r) forwards first.
+        let warmup = (ranks - 1 - rank).min(m);
+        let mut order = Vec::with_capacity(2 * m);
+        for i in 0..warmup {
+            order.push(Action::f(i, rank));
+        }
+        // Steady state: F(warmup + k) then B(k) while forwards remain.
+        for k in 0..m {
+            if warmup + k < m {
+                order.push(Action::f(warmup + k, rank));
+            }
+            order.push(Action::b(k, rank));
+        }
+        orders.push(order);
+    }
+    Schedule {
+        kind: ScheduleKind::OneFOneB,
+        ranks,
+        chunks: 1,
+        stages,
+        microbatches: m,
+        rank_of_stage: chunkmajor_rank_of_stage(ranks, 1),
+        orders,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::ActionKind;
+
+    /// Canonical 4-rank, 8-microbatch 1F1B pattern (Figure 8 of the
+    /// paper): rank 3 strictly alternates F B F B …, rank 0 has 3 warmup
+    /// forwards and 3 drain backwards.
+    #[test]
+    fn canonical_4x8_pattern() {
+        let s = build(4, 8);
+        let kinds = |r: usize| -> String {
+            s.orders[r].iter().map(|a| a.kind.label()).collect()
+        };
+        assert_eq!(kinds(3), "FBFBFBFBFBFBFBFB");
+        assert_eq!(kinds(0), "FFFFBFBFBFBFBBBB");
+    }
+
+    #[test]
+    fn in_flight_activation_bound() {
+        // At any prefix of a rank's order, (#F − #B) ≤ S − rank.
+        let ranks = 6;
+        let s = build(ranks, 12);
+        for (rank, order) in s.orders.iter().enumerate() {
+            let mut live: i64 = 0;
+            for a in order {
+                match a.kind {
+                    ActionKind::Forward => live += 1,
+                    ActionKind::Backward => live -= 1,
+                    _ => {}
+                }
+                assert!(
+                    live <= (ranks - rank) as i64,
+                    "rank {rank} exceeds activation bound: {live}"
+                );
+                assert!(live >= 0, "backward before its forward on rank {rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_mb_order_ascending() {
+        let s = build(4, 8);
+        for order in &s.orders {
+            let bw: Vec<usize> = order
+                .iter()
+                .filter(|a| a.kind == ActionKind::Backward)
+                .map(|a| a.mb)
+                .collect();
+            let mut sorted = bw.clone();
+            sorted.sort_unstable();
+            assert_eq!(bw, sorted);
+        }
+    }
+
+    #[test]
+    fn fewer_microbatches_than_ranks() {
+        // Degenerate but legal: M < S. Warm-up saturates at M.
+        let s = build(8, 2);
+        s.validate().unwrap();
+        for order in &s.orders {
+            assert_eq!(order.len(), 4);
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Convergence simulator — the accuracy-proxy substrate (DESIGN.md §6).
+//!
+//! The paper evaluates accuracy by fine-tuning LLaMA/ViT models on real
+//! datasets, which this testbed cannot run. Appendix D shows the paper's
+//! own model of how freezing affects convergence: masked SGD whose
+//! effective descent scales with the updated gradient energy (Lemma D.11).
+//! We therefore *measure* convergence of each freezing method by running
+//! exactly that process: masked SGD (update rule eq. 20) on a synthetic
+//! layer-structured objective whose curvature profile encodes the two
+//! empirical phenomena the baselines exploit — front layers converging
+//! earlier (AutoFreeze's premise) and late layers stabilizing early due
+//! to residual paths (APF/SmartFrz's premise).
+//!
+//! The resulting optimality gap maps to an accuracy delta through one
+//! calibration shared by *all* methods (the no-freezing run reproduces
+//! the paper's no-freezing accuracy by construction), so the per-method
+//! orderings are measured, not fitted.
+
+use crate::freeze::UnitDelta;
+use crate::util::rng::Rng;
+
+/// Quadratic-plus-noise objective over `units × dims` parameters:
+/// `F(θ) = ½ Σ_u Σ_d h_u θ_{u,d}²`, stochastic gradients
+/// `g = ∇F + σ ξ`.
+pub struct ConvergenceSim {
+    /// Parameters, flattened [unit][dim].
+    theta: Vec<f64>,
+    /// Per-unit curvature.
+    h: Vec<f64>,
+    pub units: usize,
+    pub dims: usize,
+    /// Gradient noise scale.
+    pub sigma: f64,
+    /// Learning rate.
+    pub eta: f64,
+    rng: Rng,
+    /// Window accumulator of per-parameter updates (for UnitDelta).
+    cum: Vec<f64>,
+    initial_loss: f64,
+}
+
+/// Curvature profile over layers: front layers fast (factor on exp decay
+/// from the front), late layers partially stabilized (decay from the
+/// back), middle slowest — mirroring Li et al.'s observation that
+/// convergence is non-monotone in depth.
+pub fn layer_curvature(num_layers: usize) -> Vec<f64> {
+    let l = num_layers.max(1) as f64;
+    (0..num_layers)
+        .map(|i| {
+            let x = i as f64;
+            let front = 2.0 * (-4.0 * x / l).exp();
+            let back = 0.8 * (-4.0 * (l - 1.0 - x) / l).exp();
+            0.25 + front + back
+        })
+        .collect()
+}
+
+impl ConvergenceSim {
+    /// `unit_layer` maps units to layers; curvature is layer-shared.
+    pub fn new(unit_layer: &[usize], num_layers: usize, dims: usize, eta: f64, seed: u64) -> Self {
+        let units = unit_layer.len();
+        let curv = layer_curvature(num_layers);
+        let h: Vec<f64> = unit_layer.iter().map(|&l| curv[l]).collect();
+        let mut rng = Rng::seed_from_u64(seed ^ 0xC0FFEE);
+        let theta: Vec<f64> = (0..units * dims).map(|_| rng.normal()).collect();
+        let mut sim = ConvergenceSim {
+            theta,
+            h,
+            units,
+            dims,
+            sigma: 0.08,
+            eta,
+            rng,
+            cum: vec![0.0; units * dims],
+            initial_loss: 0.0,
+        };
+        sim.initial_loss = sim.loss();
+        sim
+    }
+
+    pub fn loss(&self) -> f64 {
+        let mut f = 0.0;
+        for u in 0..self.units {
+            let h = self.h[u];
+            for d in 0..self.dims {
+                let t = self.theta[u * self.dims + d];
+                f += 0.5 * h * t * t;
+            }
+        }
+        f / (self.units * self.dims) as f64
+    }
+
+    pub fn initial_loss(&self) -> f64 {
+        self.initial_loss
+    }
+
+    /// One optimizer step: average of `microbatches` masked stochastic
+    /// gradients (update rule eq. 20). `masks[m][u] = true` freezes unit
+    /// u in microbatch m.
+    pub fn step(&mut self, masks: &[Vec<bool>]) {
+        let m = masks.len().max(1);
+        let inv_m = 1.0 / m as f64;
+        let mut delta = vec![0.0f64; self.theta.len()];
+        for mask in masks {
+            assert_eq!(mask.len(), self.units);
+            for u in 0..self.units {
+                if mask[u] {
+                    continue; // frozen: U = 0
+                }
+                let h = self.h[u];
+                for d in 0..self.dims {
+                    let i = u * self.dims + d;
+                    let g = h * self.theta[i] + self.sigma * self.rng.normal();
+                    delta[i] += inv_m * g;
+                }
+            }
+        }
+        for i in 0..self.theta.len() {
+            let upd = -self.eta * delta[i];
+            self.theta[i] += upd;
+            self.cum[i] += upd;
+        }
+    }
+
+    /// Drain the window accumulator into per-unit [`UnitDelta`]s —
+    /// cumulative updates since the previous call (the controllers'
+    /// stability-check input).
+    pub fn take_deltas(&mut self) -> Vec<UnitDelta> {
+        let mut out = Vec::with_capacity(self.units);
+        for u in 0..self.units {
+            let mut signed = 0.0;
+            let mut abs = 0.0;
+            let mut sq = 0.0;
+            for d in 0..self.dims {
+                let c = self.cum[u * self.dims + d];
+                signed += c;
+                abs += c.abs();
+                sq += c * c;
+            }
+            out.push(UnitDelta { l2: sq.sqrt(), signed, abs });
+        }
+        self.cum.iter_mut().for_each(|c| *c = 0.0);
+        out
+    }
+
+    /// Normalized log-progress toward the noise floor relative to a
+    /// reference run: 1.0 = matched the reference's convergence.
+    pub fn log_progress(&self, reference_final: f64) -> f64 {
+        let li = self.initial_loss.max(1e-12);
+        let lf = self.loss().max(1e-12);
+        let lref = reference_final.max(1e-12);
+        let denom = (li / lref).ln();
+        if denom <= 0.0 {
+            1.0
+        } else {
+            ((li / lf).ln() / denom).clamp(0.0, 1.25)
+        }
+    }
+}
+
+/// Map measured convergence progress to the paper's accuracy scale with
+/// a saturating response: benchmark accuracy is insensitive to the last
+/// stretch of loss descent (fine-tuning's diminishing-returns regime —
+/// the reason the paper's moderate freezing costs ≈0 accuracy while
+/// severe over-freezing, e.g. APF on ViT, collapses it).
+pub fn progress_to_accuracy(
+    pretrained: f64,
+    finetuned_no_freeze: f64,
+    progress: f64,
+    eval_noise: f64,
+    rng: &mut Rng,
+) -> f64 {
+    let gain = finetuned_no_freeze - pretrained;
+    // Full accuracy once ≥85% of the reference log-progress is reached;
+    // roughly linear decay below the knee.
+    let sat = (progress / 0.85).clamp(0.0, 1.0);
+    pretrained + gain * sat + eval_noise * rng.normal()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit_layer(layers: usize, per: usize) -> Vec<usize> {
+        (0..layers * per).map(|u| u / per).collect()
+    }
+
+    #[test]
+    fn curvature_is_nonmonotone() {
+        let c = layer_curvature(16);
+        // Front fastest, middle slowest, back in between.
+        let mid = c[8];
+        assert!(c[0] > mid);
+        assert!(c[15] > mid);
+        assert!(c[0] > c[15], "front should lead");
+    }
+
+    #[test]
+    fn unmasked_sgd_converges() {
+        let ul = unit_layer(8, 2);
+        let mut sim = ConvergenceSim::new(&ul, 8, 16, 0.3, 1);
+        let l0 = sim.loss();
+        let masks = vec![vec![false; 16]; 4];
+        for _ in 0..300 {
+            sim.step(&masks);
+        }
+        assert!(sim.loss() < 0.1 * l0, "no convergence: {} → {}", l0, sim.loss());
+    }
+
+    #[test]
+    fn full_freezing_stops_progress() {
+        let ul = unit_layer(4, 2);
+        let mut sim = ConvergenceSim::new(&ul, 4, 8, 0.3, 2);
+        let l0 = sim.loss();
+        let masks = vec![vec![true; 8]; 4];
+        for _ in 0..100 {
+            sim.step(&masks);
+        }
+        assert!((sim.loss() - l0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heavier_freezing_converges_less() {
+        let ul = unit_layer(8, 4);
+        let run = |ratio: f64, seed: u64| {
+            let mut sim = ConvergenceSim::new(&ul, 8, 16, 0.02, seed);
+            let mut rng = Rng::seed_from_u64(seed);
+            for _ in 0..400 {
+                let masks: Vec<Vec<bool>> = (0..4)
+                    .map(|_| (0..32).map(|_| rng.bernoulli(ratio)).collect())
+                    .collect();
+                sim.step(&masks);
+            }
+            sim.loss()
+        };
+        let light = run(0.2, 7);
+        let heavy = run(0.9, 7);
+        assert!(heavy > light * 1.5, "light {light} vs heavy {heavy}");
+    }
+
+    #[test]
+    fn deltas_reflect_updates_and_reset() {
+        let ul = unit_layer(2, 1);
+        let mut sim = ConvergenceSim::new(&ul, 2, 4, 0.3, 3);
+        sim.step(&[vec![false, true]]);
+        let d = sim.take_deltas();
+        assert!(d[0].abs > 0.0, "updated unit must report deltas");
+        assert_eq!(d[1].abs, 0.0, "frozen unit must report zero");
+        // Window drained.
+        let d2 = sim.take_deltas();
+        assert_eq!(d2[0].abs, 0.0);
+    }
+
+    #[test]
+    fn log_progress_bounds() {
+        let ul = unit_layer(4, 2);
+        let mut sim = ConvergenceSim::new(&ul, 4, 8, 0.3, 4);
+        let masks = vec![vec![false; 8]; 2];
+        for _ in 0..200 {
+            sim.step(&masks);
+        }
+        let p = sim.log_progress(sim.loss());
+        assert!((p - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_mapping_reproduces_baseline() {
+        let mut rng = Rng::seed_from_u64(5);
+        let acc = progress_to_accuracy(50.81, 54.63, 1.0, 0.0, &mut rng);
+        assert!((acc - 54.63).abs() < 1e-12);
+        let worse = progress_to_accuracy(50.81, 54.63, 0.8, 0.0, &mut rng);
+        assert!(worse < acc);
+    }
+}

@@ -1,0 +1,201 @@
+//! Analytic cost model: per-action execution-time bounds [w_min, w_max]
+//! for a model × GPU × partition, feeding the discrete-event simulator.
+//!
+//! The decomposition follows Figure 3: forward time is freeze-invariant;
+//! backward time splits into the activation-gradient part ("B",
+//! irreducible) and the parameter-gradient part ("W", scaling with
+//! 1 − freeze-ratio). Inter-stage communication (activation / gradient
+//! tensors over PCIe or NVLink) is charged to the receiving action.
+
+use crate::config::{GpuPreset, ModelPreset};
+use crate::types::{Action, ActionKind};
+
+/// Per-virtual-stage FLOP totals for one microbatch.
+#[derive(Clone, Debug)]
+pub struct StageCosts {
+    pub fwd: Vec<f64>,
+    pub dgrad: Vec<f64>,
+    pub wgrad: Vec<f64>,
+}
+
+/// Cost model for one experiment configuration.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub stages: usize,
+    /// Seconds per action kind per stage (bounds).
+    fwd: Vec<f64>,
+    dgrad: Vec<f64>,
+    wgrad: Vec<f64>,
+    /// Communication seconds charged per boundary crossing.
+    comm: f64,
+    overhead: f64,
+}
+
+impl CostModel {
+    /// Build from a model preset, a GPU preset, and a layer→virtual-stage
+    /// assignment (`layer_stage[l] ∈ 0..stages`).
+    pub fn new(
+        model: &ModelPreset,
+        gpu: &GpuPreset,
+        layer_stage: &[usize],
+        stages: usize,
+        microbatch_size: usize,
+        seq_len: usize,
+    ) -> CostModel {
+        assert_eq!(layer_stage.len(), model.num_layers());
+        let tokens = (microbatch_size * seq_len) as f64;
+        let mut fwd_flops = vec![0.0f64; stages];
+        let mut dgrad_flops = vec![0.0f64; stages];
+        let mut wgrad_flops = vec![0.0f64; stages];
+        for (l, &s) in layer_stage.iter().enumerate() {
+            fwd_flops[s] += model.layer_fwd_flops(l, tokens, seq_len);
+            dgrad_flops[s] += model.layer_dgrad_flops(l, tokens, seq_len);
+            wgrad_flops[s] += model.layer_wgrad_flops(l, tokens);
+        }
+        let c = gpu.compute_rate * model.compute_efficiency;
+        let comm = model.boundary_bytes(microbatch_size, seq_len) / gpu.link_bandwidth;
+        CostModel {
+            stages,
+            fwd: fwd_flops.iter().map(|f| f / c).collect(),
+            dgrad: dgrad_flops.iter().map(|f| f / c).collect(),
+            wgrad: wgrad_flops.iter().map(|f| f / c).collect(),
+            comm,
+            overhead: gpu.overhead,
+        }
+    }
+
+    /// Duration bounds (w_min, w_max) of an action — eq. 3 with Figure 3's
+    /// decomposition.
+    pub fn bounds(&self, a: Action) -> (f64, f64) {
+        let s = a.stage;
+        assert!(s < self.stages, "stage {s} out of range");
+        match a.kind {
+            ActionKind::Forward => {
+                let w = self.fwd[s] + self.overhead + self.comm;
+                (w, w)
+            }
+            ActionKind::Backward => {
+                let lo = self.dgrad[s] + self.overhead + self.comm;
+                (lo, lo + self.wgrad[s])
+            }
+            ActionKind::BackwardDgrad => {
+                let w = self.dgrad[s] + self.overhead + self.comm;
+                (w, w)
+            }
+            ActionKind::BackwardWgrad => {
+                let lo = self.overhead;
+                (lo, lo + self.wgrad[s])
+            }
+        }
+    }
+
+    /// Duration at a given actual freeze ratio (linear interpolation —
+    /// eq. 4 inverted, verified empirically in Appendix I / Figure 15).
+    pub fn duration(&self, a: Action, afr: f64) -> f64 {
+        let (lo, hi) = self.bounds(a);
+        hi - afr.clamp(0.0, 1.0) * (hi - lo)
+    }
+
+    /// Total *nominal* model FLOPs per token (2 fwd + 4 bwd per param) —
+    /// the MFU numerator convention.
+    pub fn nominal_flops_per_token(model: &ModelPreset) -> f64 {
+        6.0 * model.total_params()
+    }
+
+    /// Per-layer forward+backward seconds (used by the time-based
+    /// partition heuristic).
+    pub fn layer_times(
+        model: &ModelPreset,
+        gpu: &GpuPreset,
+        microbatch_size: usize,
+        seq_len: usize,
+    ) -> Vec<f64> {
+        let tokens = (microbatch_size * seq_len) as f64;
+        (0..model.num_layers())
+            .map(|l| {
+                (model.layer_fwd_flops(l, tokens, seq_len)
+                    + model.layer_dgrad_flops(l, tokens, seq_len)
+                    + model.layer_wgrad_flops(l, tokens))
+                    / (gpu.compute_rate * model.compute_efficiency)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::partition::balanced_partition;
+
+    fn model_8b() -> (ModelPreset, GpuPreset, CostModel) {
+        let cfg = ExperimentConfig::paper_preset("llama-8b").unwrap();
+        let layer_stage = balanced_partition(&cfg.model.layer_params(), 4);
+        let cm = CostModel::new(&cfg.model, &cfg.gpu, &layer_stage, 4, cfg.microbatch_size, cfg.seq_len);
+        (cfg.model, cfg.gpu, cm)
+    }
+
+    #[test]
+    fn forward_bounds_are_fixed() {
+        let (_, _, cm) = model_8b();
+        let (lo, hi) = cm.bounds(Action::f(0, 1));
+        assert_eq!(lo, hi);
+        assert!(lo > 0.0);
+    }
+
+    #[test]
+    fn backward_bounds_straddle_wgrad() {
+        let (_, _, cm) = model_8b();
+        let (lo, hi) = cm.bounds(Action::b(0, 1));
+        assert!(hi > lo, "wgrad must be freezable");
+        // Full freeze removes roughly half the backward (dgrad ≈ fwd,
+        // wgrad ≈ slightly less than fwd).
+        let ratio = lo / hi;
+        assert!((0.35..0.75).contains(&ratio), "dgrad share {ratio}");
+    }
+
+    #[test]
+    fn duration_interpolates_linearly() {
+        let (_, _, cm) = model_8b();
+        let a = Action::b(0, 2);
+        let (lo, hi) = cm.bounds(a);
+        assert_eq!(cm.duration(a, 0.0), hi);
+        assert_eq!(cm.duration(a, 1.0), lo);
+        let mid = cm.duration(a, 0.5);
+        assert!((mid - (lo + hi) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wgrad_action_nearly_free_when_frozen() {
+        let (_, _, cm) = model_8b();
+        let (lo, hi) = cm.bounds(Action::bw(0, 0));
+        assert!(lo < hi * 0.05, "frozen W should be ≈ overhead only");
+    }
+
+    #[test]
+    fn step_time_in_plausible_range_for_8b() {
+        // Sanity: GPipe batch time for 8B on 4×H200 should be O(seconds)
+        // (paper: 65536 tokens / 5737 tok/s ≈ 11 s per step).
+        use crate::graph::pipeline::PipelineDag;
+        use crate::schedule::Schedule;
+        use crate::types::ScheduleKind;
+        let (_, _, cm) = model_8b();
+        let s = Schedule::build(ScheduleKind::GPipe, 4, 8, 1);
+        let g = PipelineDag::from_schedule(&s);
+        let w = g.weights(|a| cm.bounds(a).1);
+        let t = g.batch_time(&w);
+        assert!((2.0..40.0).contains(&t), "step time {t}s implausible");
+    }
+
+    #[test]
+    fn layer_times_positive_and_sized() {
+        let cfg = ExperimentConfig::paper_preset("convnextv2-l").unwrap();
+        let times = CostModel::layer_times(&cfg.model, &cfg.gpu, cfg.microbatch_size, cfg.seq_len);
+        assert_eq!(times.len(), cfg.model.num_layers());
+        assert!(times.iter().all(|&t| t > 0.0));
+        // ConvNeXt skew shows up in time too.
+        let max = times.iter().cloned().fold(0.0f64, f64::max);
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 10.0);
+    }
+}

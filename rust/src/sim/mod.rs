@@ -1,0 +1,14 @@
+//! Discrete-event evaluation substrate: the analytic GPU cost model, the
+//! convergence (accuracy-proxy) simulator, and the experiment runner that
+//! regenerates the paper's tables and figures at LLaMA-1B/8B/13B and
+//! vision-model scale (see DESIGN.md §3 for the substitution rationale).
+
+pub mod convergence;
+pub mod cost;
+pub mod runner;
+
+pub use convergence::{layer_curvature, progress_to_accuracy, ConvergenceSim};
+pub use cost::CostModel;
+pub use runner::{
+    build_layout, run, run_with_partition, BackwardSample, GanttBlock, SimResult, TrajPoint,
+};

@@ -1,0 +1,495 @@
+//! Discrete-event experiment runner: couples the real schedules, the real
+//! pipeline DAG, the real controllers and LP, the analytic cost model,
+//! and the convergence simulator into one paper-scale training run.
+//!
+//! Every per-step quantity the paper reports is produced here:
+//! throughput (tokens/s), MFU, average freeze ratio, accuracy proxy, the
+//! freeze-ratio/throughput trajectory (Figure 4), per-action timings
+//! (Figure 15), and Gantt data (Figures 7–13).
+
+use crate::config::ExperimentConfig;
+use crate::freeze::{select_frozen_units, ControllerFactory, ModelLayout};
+use crate::graph::pipeline::{Node, PipelineDag};
+use crate::partition::{balanced_partition, PartitionMethod};
+use crate::schedule::Schedule;
+use crate::sim::convergence::{progress_to_accuracy, ConvergenceSim};
+use crate::sim::cost::CostModel;
+use crate::types::{Action, FreezeMethod};
+use crate::util::rng::Rng;
+
+/// One block of a Gantt chart (Figures 7–13).
+#[derive(Clone, Debug)]
+pub struct GanttBlock {
+    pub action: Action,
+    pub rank: usize,
+    pub start: f64,
+    pub duration: f64,
+    pub afr: f64,
+}
+
+/// Trajectory sample (Figure 4).
+#[derive(Clone, Copy, Debug)]
+pub struct TrajPoint {
+    pub step: usize,
+    pub mean_afr: f64,
+    pub step_time: f64,
+    pub throughput: f64,
+}
+
+/// Timing sample for the Appendix I regression (Figure 15).
+#[derive(Clone, Copy, Debug)]
+pub struct BackwardSample {
+    pub stage: usize,
+    pub mb: usize,
+    pub afr: f64,
+    pub time: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub method: FreezeMethod,
+    pub schedule: crate::types::ScheduleKind,
+    /// Full-run tokens/s.
+    pub throughput: f64,
+    /// Post-ramp (t > T_f) tokens/s.
+    pub steady_throughput: f64,
+    /// MFU, percent.
+    pub mfu: f64,
+    /// Average freeze ratio over steps × parameters, percent.
+    pub freeze_ratio: f64,
+    /// Accuracy proxy on the paper's benchmark-average scale.
+    pub accuracy: f64,
+    pub final_loss: f64,
+    /// Normalized convergence progress (1.0 = no-freezing reference).
+    pub progress: f64,
+    /// Batch time of a no-freezing step and of the final steady step.
+    pub batch_time_nofreeze: f64,
+    pub batch_time_final: f64,
+    pub trajectory: Vec<TrajPoint>,
+    pub gantt_nofreeze: Vec<GanttBlock>,
+    pub gantt_final: Vec<GanttBlock>,
+    pub backward_samples: Vec<BackwardSample>,
+    /// Mean per-unit frozen frequency (Figure 14 histogram input).
+    pub unit_freeze_freq: Vec<f64>,
+}
+
+impl SimResult {
+    pub fn throughput_delta_pct(&self, baseline: &SimResult) -> f64 {
+        100.0 * (self.throughput - baseline.throughput) / baseline.throughput
+    }
+
+    pub fn acc_delta(&self, baseline: &SimResult) -> f64 {
+        self.accuracy - baseline.accuracy
+    }
+}
+
+/// Units per layer used for freeze bookkeeping in the simulator. Each
+/// unit carries a single synthetic parameter in the convergence sim, so
+/// APF's per-parameter score semantics are exact at unit granularity.
+const UNITS_PER_LAYER: usize = 16;
+/// Synthetic parameter dimensions per unit in the convergence sim.
+const CONV_DIMS: usize = 1;
+
+/// Build the simulator's model layout for a config: every model layer
+/// subdivides into [`UNITS_PER_LAYER`] equal units; layers are placed on
+/// virtual stages by the chosen partition heuristic.
+pub fn build_layout(cfg: &ExperimentConfig, partition: PartitionMethod) -> ModelLayout {
+    let stages = cfg.stages();
+    let lp = cfg.model.layer_params();
+    let weights: Vec<f64> = match partition {
+        PartitionMethod::Parameter => lp.to_vec(),
+        PartitionMethod::Memory => {
+            // Activation-dominated memory: activations scale with layer
+            // width (≈ tokens · d); parameters add their own footprint.
+            let times = lp.to_vec();
+            times
+                .iter()
+                .map(|&p| p + (cfg.microbatch_size * cfg.seq_len * cfg.model.d_model) as f64)
+                .collect()
+        }
+        PartitionMethod::Time => {
+            CostModel::layer_times(&cfg.model, &cfg.gpu, cfg.microbatch_size, cfg.seq_len)
+        }
+    };
+    let layer_stage = balanced_partition(&weights, stages);
+    let mut unit_params = Vec::new();
+    let mut unit_layer = Vec::new();
+    for (l, &p) in lp.iter().enumerate() {
+        for _ in 0..UNITS_PER_LAYER {
+            unit_params.push((p / UNITS_PER_LAYER as f64).max(1.0) as u64);
+            unit_layer.push(l);
+        }
+    }
+    ModelLayout::new(unit_params, unit_layer, layer_stage, stages)
+}
+
+/// Run one full experiment.
+pub fn run(cfg: &ExperimentConfig) -> SimResult {
+    run_with_partition(cfg, PartitionMethod::Parameter)
+}
+
+pub fn run_with_partition(cfg: &ExperimentConfig, partition: PartitionMethod) -> SimResult {
+    let schedule = Schedule::build(
+        cfg.schedule,
+        cfg.ranks,
+        cfg.microbatches,
+        cfg.effective_chunks(),
+    );
+    let pdag = PipelineDag::from_schedule(&schedule);
+    let layout = build_layout(cfg, partition);
+    let cost = CostModel::new(
+        &cfg.model,
+        &cfg.gpu,
+        &layout.layer_stage,
+        cfg.stages(),
+        cfg.microbatch_size,
+        cfg.seq_len,
+    );
+    let factory = ControllerFactory {
+        phases: cfg.phases,
+        r_max: cfg.r_max,
+        lambda: cfg.lambda,
+        apf: cfg.apf.clone(),
+        auto: cfg.auto.clone(),
+    };
+    let mut controller = factory.build(cfg.method, &schedule, &layout);
+
+    // Learning rate scaled so the slowest layer reaches the noise floor
+    // at ~60% of training (language) — fine-tuning's diminishing-returns
+    // regime, where the paper's post-T_f freezing costs little accuracy.
+    // Vision fine-tuning (pretrained backbone + fresh head) converges
+    // much faster relative to its long schedules (Table 3: 17.5k–20k
+    // steps with freezing from ~12%), so its rate is 3× higher; without
+    // this, *every* method (including no-freezing-equivalent ratios)
+    // would lose double-digit accuracy, contradicting Table 9/10.
+    let eta = match cfg.model.family {
+        crate::config::ModelFamily::Llama => 20.0,
+        _ => 60.0,
+    } / cfg.steps as f64;
+    let mut conv =
+        ConvergenceSim::new(&layout.unit_layer, layout.num_layers(), CONV_DIMS, eta, cfg.seed);
+    // No-freezing reference for convergence calibration (same seed and
+    // objective; masks all-false).
+    let reference_final = if cfg.method == FreezeMethod::NoFreezing {
+        None
+    } else {
+        let mut shadow = ConvergenceSim::new(
+            &layout.unit_layer,
+            layout.num_layers(),
+            CONV_DIMS,
+            eta,
+            cfg.seed,
+        );
+        let empty = vec![vec![false; layout.num_units()]; cfg.microbatches];
+        for _ in 0..cfg.steps {
+            shadow.step(&empty);
+        }
+        Some(shadow.loss())
+    };
+
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x51_73);
+    let check_interval = match cfg.method {
+        FreezeMethod::Apf | FreezeMethod::TimelyApf => cfg.apf.check_interval,
+        FreezeMethod::AutoFreeze | FreezeMethod::TimelyAuto => cfg.auto.check_interval,
+        _ => usize::MAX,
+    };
+
+    // Precompute node → action and the freezable actions per microbatch.
+    let node_actions: Vec<Option<Action>> =
+        pdag.dag.nodes.iter().map(|n| n.action()).collect();
+    let freezable_actions: Vec<Action> = schedule
+        .all_actions()
+        .into_iter()
+        .filter(|a| a.kind.freezable())
+        .collect();
+    let total_params = layout.total_params() as f64;
+
+    let mut total_time = 0.0f64;
+    let mut steady_time = 0.0f64;
+    let mut steady_steps = 0usize;
+    let mut freeze_ratio_sum = 0.0f64;
+    let mut trajectory = Vec::new();
+    let mut backward_samples = Vec::new();
+    let mut unit_freeze_counts = vec![0.0f64; layout.num_units()];
+    let mut mask_events = 0usize;
+    let mut weights = vec![0.0f64; pdag.len()];
+    let mut last_weights = vec![0.0f64; pdag.len()];
+    let mut last_plan_ratios: Vec<f64> = vec![0.0; pdag.len()];
+    let tokens_per_step = cfg.tokens_per_step() as f64;
+
+    for t in 1..=cfg.steps {
+        let plan = controller.plan(t);
+
+        // ---- timing: sample per-node durations under the plan ----
+        for (id, act) in node_actions.iter().enumerate() {
+            weights[id] = match act {
+                None => 0.0,
+                Some(a) => {
+                    let afr = plan.ratio_of(a);
+                    let noise = 1.0 + cfg.timing_noise * rng.normal();
+                    cost.duration(*a, afr) * noise.max(0.5)
+                }
+            };
+        }
+        let step_time = pdag.batch_time(&weights);
+        total_time += step_time;
+        if t > cfg.phases.t_freeze {
+            steady_time += step_time;
+            steady_steps += 1;
+        }
+
+        // ---- feed monitors ----
+        for (id, act) in node_actions.iter().enumerate() {
+            if let Some(a) = act {
+                controller.record_time(t, *a, weights[id]);
+                if a.kind.freezable() && t % 7 == 0 {
+                    backward_samples.push(BackwardSample {
+                        stage: a.stage,
+                        mb: a.mb,
+                        afr: plan.ratio_of(a),
+                        time: weights[id],
+                    });
+                }
+            }
+        }
+
+        // ---- convergence: per-microbatch masks (update rule eq. 20) ----
+        let mut masks: Vec<Vec<bool>> = Vec::with_capacity(cfg.microbatches);
+        for m in 0..cfg.microbatches {
+            let mut mask = vec![false; layout.num_units()];
+            for a in &freezable_actions {
+                if a.mb != m {
+                    continue;
+                }
+                let afr = plan.ratio_of(a);
+                if afr <= 0.0 {
+                    continue;
+                }
+                let mut sel_rng = Rng::seed_from_u64(cfg.seed)
+                    .derive(t as u64, (m * cfg.stages() + a.stage) as u64);
+                let sel = select_frozen_units(
+                    &layout,
+                    a.stage,
+                    afr,
+                    plan.priority.as_deref(),
+                    &mut sel_rng,
+                );
+                for (u, &f) in sel.iter().enumerate() {
+                    mask[u] |= f;
+                }
+            }
+            for (u, &f) in mask.iter().enumerate() {
+                if f {
+                    unit_freeze_counts[u] += 1.0;
+                }
+            }
+            mask_events += 1;
+            masks.push(mask);
+        }
+        conv.step(&masks);
+        if check_interval != usize::MAX && t % check_interval == 0 {
+            let deltas = conv.take_deltas();
+            controller.observe_updates(t, &deltas);
+        }
+
+        // ---- metrics ----
+        // Param-weighted frozen fraction this step (the paper's
+        // E_{t,i,j}[I] estimator): mean over microbatch masks.
+        let step_frozen: f64 = masks
+            .iter()
+            .map(|m| {
+                (0..layout.num_units())
+                    .filter(|&u| m[u])
+                    .map(|u| layout.unit_params[u] as f64)
+                    .sum::<f64>()
+            })
+            .sum::<f64>()
+            / (cfg.microbatches as f64 * total_params);
+        freeze_ratio_sum += step_frozen;
+
+        let mean_afr = plan.mean_ratio(&freezable_actions);
+        if t % (cfg.steps / 200).max(1) == 0 || t == cfg.steps {
+            trajectory.push(TrajPoint {
+                step: t,
+                mean_afr,
+                step_time,
+                throughput: tokens_per_step / step_time,
+            });
+        }
+        if t == cfg.steps {
+            last_weights.copy_from_slice(&weights);
+            for (id, act) in node_actions.iter().enumerate() {
+                last_plan_ratios[id] = act.map(|a| plan.ratio_of(&a)).unwrap_or(0.0);
+            }
+        }
+    }
+
+    // ---- Gantt charts ----
+    let w_nofreeze = pdag.weights(|a| cost.duration(a, 0.0));
+    let gantt_nofreeze = gantt(&pdag, &w_nofreeze, &vec![0.0; pdag.len()]);
+    let gantt_final = gantt(&pdag, &last_weights, &last_plan_ratios);
+    let batch_time_nofreeze = pdag.batch_time(&w_nofreeze);
+    let batch_time_final = pdag.batch_time(&last_weights);
+
+    // ---- accuracy proxy ----
+    let progress = match reference_final {
+        None => 1.0,
+        Some(rf) => conv.log_progress(rf),
+    };
+    let mut acc_rng = Rng::seed_from_u64(cfg.seed ^ 0xACC);
+    let accuracy = progress_to_accuracy(
+        cfg.model.pretrained_acc,
+        cfg.model.finetuned_acc,
+        progress,
+        0.12,
+        &mut acc_rng,
+    );
+
+    let throughput = tokens_per_step * cfg.steps as f64 / total_time;
+    let steady_throughput = if steady_steps > 0 {
+        tokens_per_step * steady_steps as f64 / steady_time
+    } else {
+        throughput
+    };
+    let mfu = 100.0 * throughput * CostModel::nominal_flops_per_token(&cfg.model)
+        / (cfg.ranks as f64 * cfg.gpu.mfu_peak);
+
+    let unit_freeze_freq: Vec<f64> = unit_freeze_counts
+        .iter()
+        .map(|&c| c / (mask_events.max(1) as f64 / cfg.microbatches.max(1) as f64))
+        .map(|f| f / cfg.microbatches as f64)
+        .collect();
+
+    SimResult {
+        method: cfg.method,
+        schedule: cfg.schedule,
+        throughput,
+        steady_throughput,
+        mfu,
+        freeze_ratio: 100.0 * freeze_ratio_sum / cfg.steps as f64,
+        accuracy,
+        final_loss: conv.loss(),
+        progress,
+        batch_time_nofreeze,
+        batch_time_final,
+        trajectory,
+        gantt_nofreeze,
+        gantt_final,
+        backward_samples,
+        unit_freeze_freq,
+    }
+}
+
+/// Compute Gantt blocks (per-action start/duration/rank) for one step's
+/// node weights.
+fn gantt(pdag: &PipelineDag, weights: &[f64], ratios: &[f64]) -> Vec<GanttBlock> {
+    let starts = pdag.start_times(weights);
+    let mut blocks = Vec::new();
+    for (id, node) in pdag.dag.nodes.iter().enumerate() {
+        if let Node::Act(a) = node {
+            blocks.push(GanttBlock {
+                action: *a,
+                rank: pdag.rank_of_node[id],
+                start: starts[id],
+                duration: weights[id],
+                afr: ratios[id],
+            });
+        }
+    }
+    blocks.sort_by(|x, y| {
+        x.rank.cmp(&y.rank).then(x.start.partial_cmp(&y.start).unwrap())
+    });
+    blocks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::ScheduleKind;
+
+    fn quick_cfg(method: FreezeMethod, schedule: ScheduleKind) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+        cfg.method = method;
+        cfg.schedule = schedule;
+        cfg.steps = 120;
+        cfg.phases = crate::freeze::PhaseConfig::new(10, 30, 50);
+        cfg.apf.check_interval = 5;
+        cfg.auto.check_interval = 5;
+        cfg
+    }
+
+    #[test]
+    fn no_freezing_baseline_sane() {
+        let cfg = quick_cfg(FreezeMethod::NoFreezing, ScheduleKind::GPipe);
+        let r = run(&cfg);
+        assert!(r.throughput > 0.0);
+        assert!(r.freeze_ratio < 1e-9);
+        assert_eq!(r.progress, 1.0);
+        assert!((r.accuracy - cfg.model.finetuned_acc).abs() < 0.5);
+        assert!(r.mfu > 1.0 && r.mfu < 100.0, "mfu {}", r.mfu);
+    }
+
+    #[test]
+    fn timelyfreeze_beats_baseline_throughput() {
+        let base = run(&quick_cfg(FreezeMethod::NoFreezing, ScheduleKind::OneFOneB));
+        let ours = run(&quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB));
+        assert!(
+            ours.steady_throughput > base.steady_throughput * 1.05,
+            "timely {} vs base {}",
+            ours.steady_throughput,
+            base.steady_throughput
+        );
+        assert!(ours.freeze_ratio > 5.0, "freeze ratio {}", ours.freeze_ratio);
+        // Accuracy within ~1 point of baseline in this smoke test.
+        assert!(ours.acc_delta(&base).abs() < 1.5);
+    }
+
+    #[test]
+    fn gantt_blocks_cover_all_actions_without_rank_overlap() {
+        let cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::GPipe);
+        let r = run(&cfg);
+        assert_eq!(r.gantt_final.len(), 2 * 4 * cfg.microbatches);
+        // No two blocks on one rank overlap.
+        for rank in 0..4 {
+            let mut blocks: Vec<&GanttBlock> =
+                r.gantt_final.iter().filter(|b| b.rank == rank).collect();
+            blocks.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+            for pair in blocks.windows(2) {
+                assert!(
+                    pair[0].start + pair[0].duration <= pair[1].start + 1e-9,
+                    "overlap on rank {rank}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trajectory_shows_ramp() {
+        let cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+        let r = run(&cfg);
+        let early_afr = r.trajectory.iter().find(|p| p.step <= 30).map(|p| p.mean_afr);
+        let late = r.trajectory.last().unwrap();
+        assert!(late.mean_afr > 0.05, "no freezing at end");
+        if let Some(e) = early_afr {
+            assert!(late.mean_afr >= e);
+        }
+    }
+
+    #[test]
+    fn all_methods_run_all_schedules_smoke() {
+        for schedule in [ScheduleKind::GPipe, ScheduleKind::ZeroBubbleV] {
+            for method in FreezeMethod::all() {
+                let mut cfg = quick_cfg(method, schedule);
+                cfg.steps = 60;
+                cfg.phases = crate::freeze::PhaseConfig::new(5, 15, 25);
+                let r = run(&cfg);
+                assert!(
+                    r.throughput.is_finite() && r.throughput > 0.0,
+                    "{} {}",
+                    method.name(),
+                    schedule.name()
+                );
+            }
+        }
+    }
+}

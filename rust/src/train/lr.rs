@@ -1,0 +1,69 @@
+//! Learning-rate schedule: linear warm-up + cosine annealing (Table 3's
+//! "Cosine Annealing" row). The warm-up length is the same `T_w` the
+//! freeze controller aligns to (§3.1).
+
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub base_lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    /// Floor as a fraction of base_lr.
+    pub min_ratio: f64,
+}
+
+impl LrSchedule {
+    pub fn cosine(base_lr: f64, warmup_steps: usize, total_steps: usize) -> LrSchedule {
+        assert!(total_steps > warmup_steps, "total must exceed warmup");
+        LrSchedule { base_lr, warmup_steps, total_steps, min_ratio: 0.1 }
+    }
+
+    /// LR at step `t` (1-based).
+    pub fn at(&self, t: usize) -> f64 {
+        if self.warmup_steps > 0 && t <= self.warmup_steps {
+            return self.base_lr * t as f64 / self.warmup_steps as f64;
+        }
+        let progress = (t - self.warmup_steps) as f64
+            / (self.total_steps - self.warmup_steps).max(1) as f64;
+        let progress = progress.clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * progress).cos());
+        self.base_lr * (self.min_ratio + (1.0 - self.min_ratio) * cos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::cosine(1.0, 10, 100);
+        assert!((s.at(1) - 0.1).abs() < 1e-12);
+        assert!((s.at(5) - 0.5).abs() < 1e-12);
+        assert!((s.at(10) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = LrSchedule::cosine(1.0, 10, 100);
+        assert!((s.at(100) - 0.1).abs() < 1e-9);
+        // Midpoint ≈ (0.1 + 1)/2.
+        assert!((s.at(55) - 0.55).abs() < 0.01);
+    }
+
+    #[test]
+    fn monotone_after_warmup() {
+        let s = LrSchedule::cosine(3e-4, 20, 200);
+        let mut prev = f64::INFINITY;
+        for t in 21..=200 {
+            let lr = s.at(t);
+            assert!(lr <= prev + 1e-15);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn beyond_total_clamps() {
+        let s = LrSchedule::cosine(1.0, 10, 100);
+        assert_eq!(s.at(500), s.at(100));
+    }
+}

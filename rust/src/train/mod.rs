@@ -1,0 +1,10 @@
+//! Training substrate for the real engine: masked optimizers, the cosine
+//! LR schedule, and the deterministic synthetic corpus.
+
+pub mod data;
+pub mod lr;
+pub mod optimizer;
+
+pub use data::BigramCorpus;
+pub use lr::LrSchedule;
+pub use optimizer::{Optimizer, OptimizerKind, UpdateStats};

@@ -1,0 +1,208 @@
+//! Core identifiers shared across the whole stack: actions, nodes, and
+//! schedule-level naming, following the paper's notation (§3.2.1 and
+//! Appendix A).
+//!
+//! An *action* is a unit of microbatch execution at a pipeline stage:
+//! `v_(a, m, s)` with `a ∈ {f, b}` in the paper. We additionally model the
+//! Zero-Bubble decomposition (Qi et al. 2023) that the paper's Figure 3
+//! leans on: the backward pass splits into the activation-gradient part
+//! ("B", irreducible under freezing) and the parameter-gradient part ("W",
+//! the part freezing removes). For GPipe / 1F1B / Interleaved-1F1B a
+//! single `Backward` node carries both; for ZBV the schedule emits
+//! separate `BackwardDgrad` and `BackwardWgrad` nodes.
+
+/// Kind of pipeline action.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ActionKind {
+    /// Forward computation — unaffected by freezing (`w_min == w_max`).
+    Forward,
+    /// Combined backward (dgrad + wgrad). Freezing shrinks the wgrad
+    /// share, so `w_min` = dgrad-only time.
+    Backward,
+    /// Zero-Bubble "B": gradient w.r.t. input activations only.
+    BackwardDgrad,
+    /// Zero-Bubble "W": gradient w.r.t. parameters; fully removable under
+    /// freezing (`w_min ≈ 0`).
+    BackwardWgrad,
+}
+
+impl ActionKind {
+    /// Whether this action's duration responds to parameter freezing.
+    pub fn freezable(self) -> bool {
+        matches!(self, ActionKind::Backward | ActionKind::BackwardWgrad)
+    }
+
+    /// Short label used by the Gantt renderer.
+    pub fn label(self) -> &'static str {
+        match self {
+            ActionKind::Forward => "F",
+            ActionKind::Backward => "B",
+            ActionKind::BackwardDgrad => "b",
+            ActionKind::BackwardWgrad => "W",
+        }
+    }
+}
+
+/// One pipeline action `v_(a, m, s)`.
+///
+/// `stage` indexes *virtual* stages: for Interleaved-1F1B and ZBV a single
+/// GPU rank hosts multiple model chunks; `stage` identifies the chunk and
+/// the schedule maps stages to ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Action {
+    pub kind: ActionKind,
+    /// Microbatch index, 0-based (`m ∈ {1..M}` in the paper).
+    pub mb: usize,
+    /// Virtual stage index, 0-based (`s ∈ {1..S}` in the paper).
+    pub stage: usize,
+}
+
+impl Action {
+    pub fn f(mb: usize, stage: usize) -> Action {
+        Action { kind: ActionKind::Forward, mb, stage }
+    }
+
+    pub fn b(mb: usize, stage: usize) -> Action {
+        Action { kind: ActionKind::Backward, mb, stage }
+    }
+
+    pub fn bd(mb: usize, stage: usize) -> Action {
+        Action { kind: ActionKind::BackwardDgrad, mb, stage }
+    }
+
+    pub fn bw(mb: usize, stage: usize) -> Action {
+        Action { kind: ActionKind::BackwardWgrad, mb, stage }
+    }
+}
+
+impl std::fmt::Display for Action {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}({},{})", self.kind.label(), self.mb, self.stage)
+    }
+}
+
+/// The four pipeline schedules evaluated in the paper (§4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ScheduleKind {
+    GPipe,
+    OneFOneB,
+    Interleaved1F1B,
+    /// Zero-Bubble V-shaped (ZBV), with the B/W backward split.
+    ZeroBubbleV,
+}
+
+impl ScheduleKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ScheduleKind::GPipe => "GPipe",
+            ScheduleKind::OneFOneB => "1F1B",
+            ScheduleKind::Interleaved1F1B => "Interleaved 1F1B",
+            ScheduleKind::ZeroBubbleV => "ZBV",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ScheduleKind> {
+        match s.to_ascii_lowercase().replace(['-', '_', ' '], "").as_str() {
+            "gpipe" => Some(ScheduleKind::GPipe),
+            "1f1b" | "onefoneb" => Some(ScheduleKind::OneFOneB),
+            "interleaved" | "interleaved1f1b" => Some(ScheduleKind::Interleaved1F1B),
+            "zbv" | "zerobubble" | "zerobubblev" => Some(ScheduleKind::ZeroBubbleV),
+        _ => None,
+        }
+    }
+
+    pub fn all() -> [ScheduleKind; 4] {
+        [
+            ScheduleKind::GPipe,
+            ScheduleKind::OneFOneB,
+            ScheduleKind::Interleaved1F1B,
+            ScheduleKind::ZeroBubbleV,
+        ]
+    }
+}
+
+/// The freezing methods compared throughout the evaluation (Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FreezeMethod {
+    NoFreezing,
+    Apf,
+    AutoFreeze,
+    TimelyFreeze,
+    TimelyApf,
+    TimelyAuto,
+}
+
+impl FreezeMethod {
+    pub fn name(self) -> &'static str {
+        match self {
+            FreezeMethod::NoFreezing => "No Freezing",
+            FreezeMethod::Apf => "APF",
+            FreezeMethod::AutoFreeze => "AutoFreeze",
+            FreezeMethod::TimelyFreeze => "TimelyFreeze",
+            FreezeMethod::TimelyApf => "TimelyFreeze+APF",
+            FreezeMethod::TimelyAuto => "TimelyFreeze+AutoFreeze",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FreezeMethod> {
+        match s.to_ascii_lowercase().replace(['-', '_', ' ', '+'], "").as_str() {
+            "none" | "nofreezing" | "nofreeze" => Some(FreezeMethod::NoFreezing),
+            "apf" => Some(FreezeMethod::Apf),
+            "autofreeze" | "auto" => Some(FreezeMethod::AutoFreeze),
+            "timely" | "timelyfreeze" => Some(FreezeMethod::TimelyFreeze),
+            "timelyapf" | "timelyfreezeapf" => Some(FreezeMethod::TimelyApf),
+            "timelyauto" | "timelyfreezeauto" | "timelyfreezeautofreeze" => {
+                Some(FreezeMethod::TimelyAuto)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [FreezeMethod; 6] {
+        [
+            FreezeMethod::NoFreezing,
+            FreezeMethod::Apf,
+            FreezeMethod::AutoFreeze,
+            FreezeMethod::TimelyFreeze,
+            FreezeMethod::TimelyApf,
+            FreezeMethod::TimelyAuto,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn freezable_kinds() {
+        assert!(!ActionKind::Forward.freezable());
+        assert!(ActionKind::Backward.freezable());
+        assert!(!ActionKind::BackwardDgrad.freezable());
+        assert!(ActionKind::BackwardWgrad.freezable());
+    }
+
+    #[test]
+    fn schedule_parsing() {
+        assert_eq!(ScheduleKind::parse("gpipe"), Some(ScheduleKind::GPipe));
+        assert_eq!(ScheduleKind::parse("1F1B"), Some(ScheduleKind::OneFOneB));
+        assert_eq!(ScheduleKind::parse("Interleaved 1F1B"), Some(ScheduleKind::Interleaved1F1B));
+        assert_eq!(ScheduleKind::parse("zbv"), Some(ScheduleKind::ZeroBubbleV));
+        assert_eq!(ScheduleKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!(FreezeMethod::parse("TimelyFreeze+APF"), Some(FreezeMethod::TimelyApf));
+        assert_eq!(FreezeMethod::parse("no freezing"), Some(FreezeMethod::NoFreezing));
+        for m in FreezeMethod::all() {
+            assert_eq!(FreezeMethod::parse(m.name()), Some(m));
+        }
+    }
+
+    #[test]
+    fn action_display() {
+        assert_eq!(Action::f(2, 1).to_string(), "F(2,1)");
+        assert_eq!(Action::bw(0, 3).to_string(), "W(0,3)");
+    }
+}

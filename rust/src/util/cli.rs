@@ -1,0 +1,179 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Supports the launcher's needs: a subcommand followed by `--flag value`,
+//! `--flag=value`, boolean `--flag`, and positional arguments. Unknown
+//! flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+/// Declarative flag spec used for validation + help text.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `known` lists accepted flags.
+    pub fn parse(raw: &[String], known: &[FlagSpec]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = known
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}"))?;
+                let value = if spec.takes_value {
+                    match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("flag --{name} expects a value"))?
+                        }
+                    }
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{name} does not take a value"));
+                    }
+                    "true".to_string()
+                };
+                out.flags.insert(name, value);
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true" | "1" | "yes"))
+    }
+
+    pub fn flag_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("flag --{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn flag_u64(&self, name: &str) -> Result<Option<u64>, String> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| format!("flag --{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| format!("flag --{name}: expected number, got '{v}'")),
+        }
+    }
+}
+
+/// Render a help block for a subcommand.
+pub fn render_help(cmd: &str, about: &str, flags: &[FlagSpec]) -> String {
+    let mut out = format!("{cmd} — {about}\n\nFlags:\n");
+    for f in flags {
+        let value = if f.takes_value { " <value>" } else { "" };
+        out.push_str(&format!("  --{}{:<14} {}\n", f.name, value, f.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "steps", takes_value: true, help: "steps" },
+            FlagSpec { name: "verbose", takes_value: false, help: "verbose" },
+            FlagSpec { name: "lr", takes_value: true, help: "learning rate" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positional() {
+        let a = Args::parse(&sv(&["train", "--steps", "100", "--verbose", "cfg.toml"]), &specs())
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.flag_usize("steps").unwrap(), Some(100));
+        assert!(a.flag_bool("verbose"));
+        assert_eq!(a.positional, vec!["cfg.toml"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&sv(&["x", "--lr=0.5"]), &specs()).unwrap();
+        assert_eq!(a.flag_f64("lr").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(Args::parse(&sv(&["x", "--nope"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&sv(&["x", "--steps"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn bool_flag_with_value_rejected() {
+        assert!(Args::parse(&sv(&["x", "--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn bad_numeric_value() {
+        let a = Args::parse(&sv(&["x", "--steps", "abc"]), &specs()).unwrap();
+        assert!(a.flag_usize("steps").is_err());
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = render_help("train", "train a model", &specs());
+        assert!(h.contains("--steps"));
+        assert!(h.contains("learning rate"));
+    }
+}

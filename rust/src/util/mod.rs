@@ -1,0 +1,9 @@
+//! Foundational utilities implemented from scratch for the offline build:
+//! RNG, statistics, JSON, a TOML subset, CLI parsing, and table rendering.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod toml;

@@ -1,0 +1,267 @@
+//! Small statistics toolkit used by the timing monitor (§3.1), the
+//! backward-time regression of Appendix I (Figure 15), and the benchmark
+//! harness.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance; 0.0 for fewer than 2 samples.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Percentile via linear interpolation on the sorted sample, `q ∈ [0,100]`.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = q.clamp(0.0, 100.0) / 100.0;
+    let pos = q * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        let frac = pos - lo as f64;
+        s[lo] * (1.0 - frac) + s[hi] * frac
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Ordinary least squares fit `y ≈ slope·x + intercept`.
+///
+/// This is exactly the fit shown in Figure 15 ("t = −51.95 r + 68.79"):
+/// backward time as a linear function of the effective freeze ratio.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinFit {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Coefficient of determination.
+    pub r2: f64,
+}
+
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> Option<LinFit> {
+    let n = xs.len();
+    if n < 2 || n != ys.len() {
+        return None;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        sxx += dx * dx;
+        sxy += dx * dy;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 {
+        return None;
+    }
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    Some(LinFit { slope, intercept, r2 })
+}
+
+/// Exponential moving average, the primitive behind APF's effective
+/// perturbation score (eq. 2): `E_K = α·E_{K−1} + (1−α)·x`.
+#[derive(Clone, Copy, Debug)]
+pub struct Ema {
+    pub alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha), "alpha must be in [0,1]");
+        Ema { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            // The paper initializes E_0 = 0, so the first update is
+            // (1-α)·x rather than x.
+            None => (1.0 - self.alpha) * x,
+            Some(prev) => self.alpha * prev + (1.0 - self.alpha) * x,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn value(&self) -> f64 {
+        self.value.unwrap_or(0.0)
+    }
+
+    pub fn is_initialized(&self) -> bool {
+        self.value.is_some()
+    }
+}
+
+/// Online mean/min/max accumulator for streaming timing samples.
+#[derive(Clone, Debug, Default)]
+pub struct Accum {
+    pub n: u64,
+    pub sum: f64,
+    pub sum_sq: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Accum {
+    pub fn new() -> Self {
+        Accum { n: 0, sum: 0.0, sum_sq: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.sum_sq += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sum_sq / self.n as f64 - m * m).max(0.0)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Relative change `|a − b| / |a|`, guarded against a = 0 — the form used
+/// by AutoFreeze's gradient-norm-change score (eq. 1).
+pub fn rel_change(a: f64, b: f64) -> f64 {
+    if a == 0.0 {
+        if b == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (a - b).abs() / a.abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_variance() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert!((stddev(&xs) - 1.25f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_slices_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn exact_linear_fit() {
+        // Figure 15 shape: t = -51.95 r + 68.79
+        let xs: Vec<f64> = (0..20).map(|i| i as f64 / 19.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|r| -51.95 * r + 68.79).collect();
+        let fit = linear_fit(&xs, &ys).unwrap();
+        assert!((fit.slope + 51.95).abs() < 1e-9);
+        assert!((fit.intercept - 68.79).abs() < 1e-9);
+        assert!((fit.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_fit_r2_below_one() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [0.0, 1.1, 1.9, 3.2];
+        let fit = linear_fit(&xs, &ys).unwrap();
+        assert!(fit.r2 < 1.0 && fit.r2 > 0.97);
+    }
+
+    #[test]
+    fn degenerate_fit_is_none() {
+        assert!(linear_fit(&[1.0, 1.0], &[2.0, 3.0]).is_none());
+        assert!(linear_fit(&[1.0], &[2.0]).is_none());
+    }
+
+    #[test]
+    fn ema_matches_recurrence() {
+        let mut e = Ema::new(0.9);
+        // E_0 = 0 ⇒ E_1 = 0.1·x
+        assert!((e.update(10.0) - 1.0).abs() < 1e-12);
+        // E_2 = 0.9·1.0 + 0.1·20.0 = 2.9
+        assert!((e.update(20.0) - 2.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accum_tracks_min_max_mean() {
+        let mut a = Accum::new();
+        for x in [3.0, 1.0, 2.0] {
+            a.push(x);
+        }
+        assert_eq!(a.min, 1.0);
+        assert_eq!(a.max, 3.0);
+        assert_eq!(a.mean(), 2.0);
+        assert_eq!(a.n, 3);
+    }
+
+    #[test]
+    fn rel_change_cases() {
+        assert_eq!(rel_change(2.0, 1.0), 0.5);
+        assert_eq!(rel_change(0.0, 0.0), 0.0);
+        assert_eq!(rel_change(0.0, 1.0), f64::INFINITY);
+    }
+}

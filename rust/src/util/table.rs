@@ -1,0 +1,112 @@
+//! Plain-text table rendering for the benchmark harness — every bench
+//! prints rows in the same layout as the paper's tables.
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                let cell = cells.get(i).map(|s| s.as_str()).unwrap_or("");
+                let pad = widths[i] - cell.chars().count();
+                line.push_str(&format!(" {}{} ", cell, " ".repeat(pad)));
+                if i + 1 < ncol {
+                    line.push('|');
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format helpers matching the paper's cell styles.
+pub fn fmt_delta(value: f64, delta: f64, decimals: usize) -> String {
+    format!("{value:.decimals$} ({delta:+.decimals$})")
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.2}", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["Method", "Throughput"]);
+        t.row(vec!["No Freezing".into(), "5737".into()]);
+        t.row(vec!["TimelyFreeze".into(), "7821".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        let lines: Vec<&str> = s.lines().collect();
+        // Header + sep + 2 rows (+ title)
+        assert_eq!(lines.len(), 5);
+        // All data lines equal width.
+        assert_eq!(lines[1].len(), lines[3].len().max(lines[1].len()).min(lines[1].len()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn delta_formatting() {
+        assert_eq!(fmt_delta(54.79, 0.17, 2), "54.79 (+0.17)");
+        assert_eq!(fmt_delta(7821.0, -36.33, 2), "7821.00 (-36.33)");
+        assert_eq!(fmt_pct(0.3564), "35.64");
+    }
+}

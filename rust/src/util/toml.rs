@@ -1,0 +1,295 @@
+//! Minimal TOML-subset parser for the config system (no serde/toml crates
+//! in the offline image).
+//!
+//! Supported subset — everything our config files need:
+//!   * `[section]` and `[section.sub]` headers
+//!   * `key = value` with value ∈ {string, integer, float, bool, array of
+//!     scalars}
+//!   * `#` comments, blank lines
+//!
+//! Values land in a flat map keyed `section.sub.key`, which the typed
+//! config layer (`crate::config`) consumes.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Flat document: `section.key → value`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err(lineno, "empty section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err(lineno, "expected key = value"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let val = parse_value(line[eq + 1..].trim(), lineno)?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(full, val);
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(|v| v.as_str())
+    }
+
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(|v| v.as_i64())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        self.get_i64(key).and_then(|x| usize::try_from(x).ok())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|v| v.as_f64())
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(|v| v.as_bool())
+    }
+
+    /// All keys under a `prefix.` (without the prefix stripped).
+    pub fn keys_under(&self, prefix: &str) -> Vec<&str> {
+        let p = format!("{prefix}.");
+        self.entries.keys().filter(|k| k.starts_with(&p)).map(|k| k.as_str()).collect()
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> TomlError {
+    TomlError { line: lineno + 1, msg: msg.to_string() }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue, TomlError> {
+    if s.is_empty() {
+        return Err(err(lineno, "missing value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.find('"').ok_or_else(|| err(lineno, "unterminated string"))?;
+        if !rest[end + 1..].trim().is_empty() {
+            return Err(err(lineno, "trailing characters after string"));
+        }
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or_else(|| err(lineno, "unterminated array"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim(), lineno)?);
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    // Number: int if it parses as i64 and has no '.', 'e'.
+    let looks_float = s.contains('.') || s.contains('e') || s.contains('E');
+    if !looks_float {
+        if let Ok(x) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(x));
+        }
+    }
+    if let Ok(x) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(x));
+    }
+    Err(err(lineno, &format!("cannot parse value '{s}'")))
+}
+
+/// Split on commas that are not inside quotes (arrays of scalars only, so
+/// no nested brackets to worry about beyond rejecting them upstream).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = TomlDoc::parse(
+            r#"
+            # top comment
+            name = "llama-1b"
+            [model]
+            d_model = 2048
+            rope = true
+            lr = 5.0e-6
+            [pipeline.stage]
+            count = 4
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("llama-1b"));
+        assert_eq!(doc.get_i64("model.d_model"), Some(2048));
+        assert_eq!(doc.get_bool("model.rope"), Some(true));
+        assert_eq!(doc.get_f64("model.lr"), Some(5.0e-6));
+        assert_eq!(doc.get_usize("pipeline.stage.count"), Some(4));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = TomlDoc::parse("xs = [1, 2, 3]\nys = [\"a\", \"b,c\"]\nempty = []").unwrap();
+        let xs = doc.get("xs").unwrap().as_arr().unwrap();
+        assert_eq!(xs.iter().map(|v| v.as_i64().unwrap()).collect::<Vec<_>>(), vec![1, 2, 3]);
+        let ys = doc.get("ys").unwrap().as_arr().unwrap();
+        assert_eq!(ys[1].as_str(), Some("b,c"));
+        assert_eq!(doc.get("empty").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn comments_respect_strings() {
+        let doc = TomlDoc::parse("k = \"a#b\" # real comment").unwrap();
+        assert_eq!(doc.get_str("k"), Some("a#b"));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = TomlDoc::parse("a = 3\nb = 3.0\nc = 1_000").unwrap();
+        assert_eq!(doc.get("a"), Some(&TomlValue::Int(3)));
+        assert_eq!(doc.get("b"), Some(&TomlValue::Float(3.0)));
+        assert_eq!(doc.get_i64("c"), Some(1000));
+        // Int is readable as f64 too.
+        assert_eq!(doc.get_f64("a"), Some(3.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"x").is_err());
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = TomlDoc::parse("[a]\nx = 1\ny = 2\n[ab]\nz = 3").unwrap();
+        let keys = doc.keys_under("a");
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+}

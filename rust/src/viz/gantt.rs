@@ -1,0 +1,171 @@
+//! Gantt-chart rendering of pipeline schedules (Figures 1, 7–13): ASCII
+//! for terminals and SVG for documents. Forward blocks render blue,
+//! backward green, wgrad ("W") dark green, idle gaps as gray — matching
+//! the paper's color language.
+
+use crate::sim::runner::GanttBlock;
+use crate::types::ActionKind;
+use std::fmt::Write as _;
+
+/// ASCII Gantt: one row per rank, `width` character columns spanning the
+/// batch. Each block prints its kind letter (F/B/b/W); idle = '·'.
+pub fn ascii(blocks: &[GanttBlock], ranks: usize, width: usize) -> String {
+    let end = blocks
+        .iter()
+        .map(|b| b.start + b.duration)
+        .fold(0.0f64, f64::max);
+    if end <= 0.0 {
+        return String::new();
+    }
+    let col = |t: f64| ((t / end) * width as f64).floor() as usize;
+    let mut rows = vec![vec!['·'; width]; ranks];
+    for b in blocks {
+        let c0 = col(b.start).min(width - 1);
+        let c1 = col(b.start + b.duration).clamp(c0 + 1, width);
+        let ch = b.action.kind.label().chars().next().unwrap();
+        for c in c0..c1 {
+            rows[b.rank][c] = ch;
+        }
+    }
+    let mut out = String::new();
+    for (r, row) in rows.iter().enumerate() {
+        let line: String = row.iter().collect();
+        let _ = writeln!(out, "GPU {r} |{line}|");
+    }
+    let _ = writeln!(out, "batch time: {:.3}", end);
+    out
+}
+
+fn color(kind: ActionKind, afr: f64) -> String {
+    match kind {
+        ActionKind::Forward => "#4e79c4".to_string(),
+        ActionKind::BackwardDgrad => "#66c2a5".to_string(),
+        ActionKind::Backward | ActionKind::BackwardWgrad => {
+            // Freezing lightens the green toward white.
+            let base = (0x5a, 0xa0, 0x54);
+            let mix = |c: u8| -> u8 {
+                let c = c as f64;
+                (c + (255.0 - c) * (afr * 0.6)) as u8
+            };
+            format!("#{:02x}{:02x}{:02x}", mix(base.0), mix(base.1), mix(base.2))
+        }
+    }
+}
+
+/// SVG Gantt with per-block freeze-ratio shading and a time axis.
+pub fn svg(blocks: &[GanttBlock], ranks: usize, title: &str) -> String {
+    let end = blocks
+        .iter()
+        .map(|b| b.start + b.duration)
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    let width = 1000.0;
+    let row_h = 28.0;
+    let label_w = 60.0;
+    let height = ranks as f64 * row_h + 50.0;
+    let x = |t: f64| label_w + t / end * (width - label_w - 10.0);
+
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{width}" height="{height}" font-family="sans-serif" font-size="11">"#
+    );
+    let _ = write!(s, r#"<text x="{label_w}" y="14" font-size="13">{title}</text>"#);
+    for r in 0..ranks {
+        let y = 24.0 + r as f64 * row_h;
+        let _ = write!(
+            s,
+            r##"<text x="4" y="{:.1}">GPU {r}</text><rect x="{label_w}" y="{y}" width="{:.1}" height="{:.1}" fill="#eeeeee"/>"##,
+            y + row_h * 0.65,
+            width - label_w - 10.0,
+            row_h - 4.0
+        );
+    }
+    for b in blocks {
+        let y = 24.0 + b.rank as f64 * row_h;
+        let bx = x(b.start);
+        let bw = (x(b.start + b.duration) - bx).max(0.5);
+        let fill = color(b.action.kind, b.afr);
+        let _ = write!(
+            s,
+            r##"<rect x="{bx:.2}" y="{y:.1}" width="{bw:.2}" height="{:.1}" fill="{fill}" stroke="#333" stroke-width="0.4"><title>{} start={:.4} dur={:.4} afr={:.2}</title></rect>"##,
+            row_h - 4.0,
+            b.action,
+            b.start,
+            b.duration,
+            b.afr
+        );
+        if bw > 14.0 {
+            let _ = write!(
+                s,
+                r##"<text x="{:.2}" y="{:.1}" font-size="9" fill="#fff">{}{}</text>"##,
+                bx + 2.0,
+                y + row_h * 0.6,
+                b.action.kind.label(),
+                b.action.mb
+            );
+        }
+    }
+    let _ = write!(
+        s,
+        r##"<text x="{label_w}" y="{:.1}" fill="#555">batch time = {end:.4}</text>"##,
+        height - 8.0
+    );
+    s.push_str("</svg>");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Action;
+
+    fn blocks() -> Vec<GanttBlock> {
+        vec![
+            GanttBlock { action: Action::f(0, 0), rank: 0, start: 0.0, duration: 1.0, afr: 0.0 },
+            GanttBlock { action: Action::f(0, 1), rank: 1, start: 1.0, duration: 1.0, afr: 0.0 },
+            GanttBlock { action: Action::b(0, 1), rank: 1, start: 2.0, duration: 2.0, afr: 0.5 },
+            GanttBlock { action: Action::b(0, 0), rank: 0, start: 4.0, duration: 2.0, afr: 0.5 },
+        ]
+    }
+
+    #[test]
+    fn ascii_renders_rows_and_blocks() {
+        let out = ascii(&blocks(), 2, 60);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("GPU 0"));
+        assert!(lines[0].contains('F'));
+        assert!(lines[0].contains('B'));
+        assert!(lines[2].contains("batch time: 6.000"));
+    }
+
+    #[test]
+    fn ascii_idle_gaps_visible() {
+        let out = ascii(&blocks(), 2, 60);
+        // Rank 0 idles between its F (0..1) and B (4..6).
+        let row0 = out.lines().next().unwrap();
+        assert!(row0.contains('·'));
+    }
+
+    #[test]
+    fn svg_well_formed_and_complete() {
+        let s = svg(&blocks(), 2, "demo");
+        assert!(s.starts_with("<svg"));
+        assert!(s.ends_with("</svg>"));
+        assert_eq!(s.matches("<rect").count(), 2 + 4); // 2 lanes + 4 blocks
+        assert!(s.contains("demo"));
+    }
+
+    #[test]
+    fn frozen_blocks_render_lighter() {
+        let live = color(ActionKind::Backward, 0.0);
+        let frozen = color(ActionKind::Backward, 1.0);
+        assert_ne!(live, frozen);
+    }
+
+    #[test]
+    fn empty_input_safe() {
+        assert_eq!(ascii(&[], 2, 40), "");
+    }
+}

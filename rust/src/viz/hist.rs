@@ -1,0 +1,91 @@
+//! ASCII histograms for the per-parameter freeze-ratio distributions of
+//! Figure 14 (Appendix H).
+
+use std::fmt::Write as _;
+
+/// Render a histogram of `values` in [0, 1] with `bins` buckets.
+pub fn histogram(values: &[f64], bins: usize, width: usize, title: &str) -> String {
+    assert!(bins >= 1);
+    let mut counts = vec![0usize; bins];
+    for &v in values {
+        let b = ((v.clamp(0.0, 1.0)) * bins as f64) as usize;
+        counts[b.min(bins - 1)] += 1;
+    }
+    let max = counts.iter().copied().max().unwrap_or(0).max(1);
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} (n={}) ==", values.len());
+    for (i, &c) in counts.iter().enumerate() {
+        let lo = i as f64 / bins as f64;
+        let hi = (i + 1) as f64 / bins as f64;
+        let bar = "#".repeat(c * width / max);
+        let _ = writeln!(out, "[{lo:.2},{hi:.2}) {c:>7} |{bar}");
+    }
+    out
+}
+
+/// Distribution summary used alongside Figure 14: how uniform vs skewed
+/// the per-unit freeze frequencies are.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FreezeSpread {
+    pub mean: f64,
+    pub stddev: f64,
+    /// Fraction of units frozen (ratio > 0.99) ~always.
+    pub saturated: f64,
+    /// Fraction of units never frozen (ratio < 0.01).
+    pub untouched: f64,
+}
+
+pub fn spread(values: &[f64]) -> FreezeSpread {
+    if values.is_empty() {
+        return FreezeSpread { mean: 0.0, stddev: 0.0, saturated: 0.0, untouched: 1.0 };
+    }
+    let mean = crate::util::stats::mean(values);
+    let stddev = crate::util::stats::stddev(values);
+    let n = values.len() as f64;
+    FreezeSpread {
+        mean,
+        stddev,
+        saturated: values.iter().filter(|&&v| v > 0.99).count() as f64 / n,
+        untouched: values.iter().filter(|&&v| v < 0.01).count() as f64 / n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_bars() {
+        let vals = vec![0.05, 0.05, 0.95, 0.5];
+        let h = histogram(&vals, 10, 20, "demo");
+        assert!(h.contains("== demo (n=4) =="));
+        assert_eq!(h.lines().count(), 11);
+        // First bucket has 2 entries → the longest bar.
+        let first = h.lines().nth(1).unwrap();
+        assert!(first.contains("2 |"));
+    }
+
+    #[test]
+    fn spread_detects_uniform_vs_skewed() {
+        // TimelyFreeze-like: nearly uniform mid ratios.
+        let uniform: Vec<f64> = (0..100).map(|_| 0.5).collect();
+        let s = spread(&uniform);
+        assert!(s.stddev < 1e-9);
+        assert_eq!(s.saturated, 0.0);
+        // APF-like: bimodal (frozen forever or never).
+        let bimodal: Vec<f64> =
+            (0..100).map(|i| if i < 40 { 1.0 } else { 0.0 }).collect();
+        let s2 = spread(&bimodal);
+        assert!(s2.stddev > 0.4);
+        assert!((s2.saturated - 0.4).abs() < 1e-9);
+        assert!((s2.untouched - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_values() {
+        let s = spread(&[]);
+        assert_eq!(s.untouched, 1.0);
+        let h = histogram(&[], 4, 10, "empty");
+        assert!(h.contains("n=0"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Visualization: Gantt charts of pipeline executions (Figures 1, 7–13)
+//! and freeze-ratio histograms (Figure 14).
+
+pub mod gantt;
+pub mod hist;
+
+pub use gantt::{ascii, svg};
+pub use hist::{histogram, spread, FreezeSpread};

@@ -1,0 +1,217 @@
+//! Property-based integration tests over the coordinator's core
+//! invariants: schedule legality, DAG structure, LP optimality bounds,
+//! and controller budget compliance — randomized across sizes, seeds,
+//! and cost profiles (see DESIGN.md S28; the prop framework is
+//! in-repo since proptest is unavailable offline).
+
+mod prop;
+
+use prop::{check, usize_in};
+use timelyfreeze::freeze::{
+    select_frozen_units, Controller, ModelLayout, PhaseConfig, TimelyFreeze, TimelyFreezeConfig,
+};
+use timelyfreeze::graph::pipeline::{Node, PipelineDag};
+use timelyfreeze::lp::{solve_freeze_lp, FreezeLpInput};
+use timelyfreeze::schedule::Schedule;
+use timelyfreeze::types::{ActionKind, ScheduleKind};
+use timelyfreeze::util::rng::Rng;
+
+fn random_schedule(rng: &mut Rng) -> Schedule {
+    let kind = ScheduleKind::all()[rng.next_below(4) as usize];
+    let ranks = usize_in(rng, 1, 6);
+    let m = usize_in(rng, 1, 10);
+    Schedule::build(kind, ranks, m, Schedule::default_chunks(kind))
+}
+
+/// Every randomly-shaped schedule validates and yields an acyclic DAG
+/// whose source reaches every node.
+#[test]
+fn prop_schedules_are_legal_and_dags_acyclic() {
+    check("schedule/dag legality", 60, |rng| {
+        let s = random_schedule(rng);
+        s.validate().map_err(|e| format!("{}: {e}", s.kind.name()))?;
+        let g = PipelineDag::from_schedule(&s);
+        if !g.dag.is_acyclic() {
+            return Err(format!("{} produced a cycle", s.kind.name()));
+        }
+        let reach = g.dag.reachable_from(g.source);
+        if !reach.iter().all(|&r| r) {
+            return Err("source does not reach all nodes".into());
+        }
+        Ok(())
+    });
+}
+
+/// Per-rank schedule orders are linear extensions of the structural DAG
+/// (rule 4 must never contradict rules 1–3).
+#[test]
+fn prop_orders_extend_structural_dependencies() {
+    check("orders are linear extensions", 40, |rng| {
+        let s = random_schedule(rng);
+        let g = PipelineDag::from_schedule(&s);
+        // For each rank, positions in its own order must be increasing
+        // along every structural edge within the rank.
+        for (rank, order) in s.orders.iter().enumerate() {
+            let pos = |a| order.iter().position(|x| *x == a);
+            for (u, v) in
+                timelyfreeze::graph::pipeline::structural_edges(order, s.stages, s.microbatches)
+            {
+                if let (Some(pu), Some(pv)) = (pos(u), pos(v)) {
+                    if pu >= pv {
+                        return Err(format!(
+                            "rank {rank}: {u} scheduled at {pu} but dependent {v} at {pv}"
+                        ));
+                    }
+                }
+            }
+        }
+        drop(g);
+        Ok(())
+    });
+}
+
+/// LP invariants on random cost profiles: optimum within envelopes,
+/// ratios in [0,1], stage budgets honoured, and monotone in r_max.
+#[test]
+fn prop_lp_respects_envelopes_budget_and_monotonicity() {
+    check("freeze LP invariants", 25, |rng| {
+        let s = random_schedule(rng);
+        let g = PipelineDag::from_schedule(&s);
+        let mut w_min = vec![0.0; g.len()];
+        let mut w_max = vec![0.0; g.len()];
+        for (id, node) in g.dag.nodes.iter().enumerate() {
+            if let Node::Act(a) = node {
+                let base = rng.range_f64(0.5, 3.0);
+                match a.kind {
+                    ActionKind::Forward | ActionKind::BackwardDgrad => {
+                        w_min[id] = base;
+                        w_max[id] = base;
+                    }
+                    ActionKind::Backward => {
+                        w_max[id] = base * rng.range_f64(1.5, 3.0);
+                        w_min[id] = base;
+                    }
+                    ActionKind::BackwardWgrad => {
+                        w_max[id] = base;
+                        w_min[id] = base * rng.range_f64(0.0, 0.2);
+                    }
+                }
+            }
+        }
+        let mut prev = f64::INFINITY;
+        for r_max in [0.0, 0.5, 1.0] {
+            let sol = solve_freeze_lp(&FreezeLpInput {
+                pdag: &g,
+                w_min: &w_min,
+                w_max: &w_max,
+                r_max,
+                lambda: 1e-4,
+            })
+            .map_err(|e| e.to_string())?;
+            if sol.batch_time > sol.p_d_max + 1e-6 || sol.batch_time < sol.p_d_min - 1e-6 {
+                return Err(format!(
+                    "P_d* {} outside [{}, {}]",
+                    sol.batch_time, sol.p_d_min, sol.p_d_max
+                ));
+            }
+            if sol.batch_time > prev + 1e-6 {
+                return Err(format!("not monotone in r_max at {r_max}"));
+            }
+            prev = sol.batch_time;
+            for (id, &r) in sol.ratios.iter().enumerate() {
+                if !(0.0..=1.0 + 1e-9).contains(&r) {
+                    return Err(format!("ratio out of range at node {id}: {r}"));
+                }
+            }
+            for (stage, set) in g.freezable_by_stage().iter().enumerate() {
+                if set.is_empty() {
+                    continue;
+                }
+                let mean: f64 =
+                    set.iter().map(|&i| sol.ratios[i]).sum::<f64>() / set.len() as f64;
+                if mean > r_max + 1e-6 {
+                    return Err(format!("stage {stage} over budget: {mean} > {r_max}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Uniform random selection hits its expectation: E[frozen params] ≈
+/// AFR · N_s across random layouts and ratios.
+#[test]
+fn prop_random_selection_unbiased() {
+    check("mask expectation", 20, |rng| {
+        let layers = usize_in(rng, 2, 10);
+        let stages = usize_in(rng, 1, layers.min(4));
+        let units_per_layer = usize_in(rng, 1, 6);
+        let layout = ModelLayout::uniform(layers, units_per_layer, 64, stages);
+        let stage = rng.next_below(stages as u64) as usize;
+        let ratio = rng.range_f64(0.1, 0.9);
+        let trials = 600;
+        let mut frozen_params = 0u64;
+        for tr in 0..trials {
+            let mut r = Rng::seed_from_u64(7).derive(tr, 0);
+            let mask = select_frozen_units(&layout, stage, ratio, None, &mut r);
+            frozen_params += (0..layout.num_units())
+                .filter(|&u| mask[u])
+                .map(|u| layout.unit_params[u])
+                .sum::<u64>();
+        }
+        let expect = ratio * layout.params_of_stage(stage) as f64;
+        let got = frozen_params as f64 / trials as f64;
+        let tol = 0.15 * expect + 1.0;
+        if (got - expect).abs() > tol {
+            return Err(format!("E[frozen]={got:.1}, expected {expect:.1}"));
+        }
+        Ok(())
+    });
+}
+
+/// The TimelyFreeze controller's AFR never exceeds r* and never appears
+/// outside the freezing phase, for random monitored costs.
+#[test]
+fn prop_controller_phases_and_ramp_bounds() {
+    check("controller ramp bounds", 15, |rng| {
+        let ranks = usize_in(rng, 2, 4);
+        let m = usize_in(rng, 2, 6);
+        let schedule = Schedule::build(ScheduleKind::OneFOneB, ranks, m, 1);
+        let layout = ModelLayout::uniform(ranks * 2, 2, 100, ranks);
+        let phases = PhaseConfig::new(4, 10, 20);
+        let mut tf = TimelyFreeze::new(
+            TimelyFreezeConfig { phases, r_max: rng.range_f64(0.2, 0.9), lambda: 1e-4 },
+            &schedule,
+            layout,
+        );
+        let fwd = rng.range_f64(0.5, 2.0);
+        let bwd = fwd * rng.range_f64(1.5, 3.0);
+        let dgrad = fwd * rng.range_f64(0.8, 1.2);
+        for t in 1..=30 {
+            let plan = tf.plan(t);
+            if t <= 4 && !plan.afr.is_empty() {
+                return Err("froze during warm-up".into());
+            }
+            for a in schedule.all_actions() {
+                let dur = match a.kind {
+                    ActionKind::Forward => fwd,
+                    _ => {
+                        let afr = plan.ratio_of(&a);
+                        bwd - afr * (bwd - dgrad)
+                    }
+                };
+                tf.record_time(t, a, dur);
+            }
+            if t > 10 {
+                let expected = tf.expected_ratios().unwrap();
+                for (a, &r) in &plan.afr {
+                    let rstar = expected.get(a).copied().unwrap_or(0.0);
+                    if r > rstar + 1e-9 {
+                        return Err(format!("AFR {r} exceeds r* {rstar} for {a}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,22 @@
+//! Minimal property-testing framework (proptest is unavailable in the
+//! offline image): deterministic random-case generation with failure
+//! reporting of the seed that produced the counterexample.
+
+use timelyfreeze::util::rng::Rng;
+
+/// Run `cases` random trials of `property`; on failure, panic with the
+/// case index and derived seed so the exact case can be replayed.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, cases: usize, mut property: F) {
+    let base = Rng::seed_from_u64(0xC0DE_CAFE);
+    for case in 0..cases {
+        let mut rng = base.derive(case as u64, 0);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property '{name}' failed at case {case}: {msg}");
+        }
+    }
+}
+
+/// Random subsize in [lo, hi].
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.next_below((hi - lo + 1) as u64) as usize
+}
