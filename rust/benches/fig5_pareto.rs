@@ -1,5 +1,8 @@
 //! Figure 5: accuracy–throughput trade-off (Pareto frontier) for
-//! LLaMA-1B/8B/13B under all four schedules and six methods.
+//! LLaMA-1B/8B/13B under all four schedules and six methods. The full
+//! model × schedule × method grid fans out across worker threads (every
+//! cell is an independent seeded run); printing stays in grid order.
+use timelyfreeze::bench_support::parallel::map_parallel;
 use timelyfreeze::bench_support::tables::apply_quick;
 use timelyfreeze::config::ExperimentConfig;
 use timelyfreeze::metrics::Recorder;
@@ -8,20 +11,32 @@ use timelyfreeze::types::{FreezeMethod, ScheduleKind};
 use timelyfreeze::util::json::Json;
 
 fn main() {
+    let presets = ["llama-1b", "llama-8b", "llama-13b"];
+    let grid: Vec<(&str, ScheduleKind, FreezeMethod)> = presets
+        .iter()
+        .flat_map(|&p| {
+            ScheduleKind::all()
+                .into_iter()
+                .flat_map(move |s| FreezeMethod::all().into_iter().map(move |m| (p, s, m)))
+        })
+        .collect();
+    let runs: Vec<(FreezeMethod, f64, f64)> = map_parallel(&grid, |&(preset, schedule, method)| {
+        let mut cfg = ExperimentConfig::paper_preset(preset).unwrap();
+        apply_quick(&mut cfg);
+        cfg.schedule = schedule;
+        cfg.method = method;
+        let r = sim::run(&cfg);
+        (method, r.throughput, r.accuracy)
+    });
+
     let mut rec = Recorder::default_dir();
-    for preset in ["llama-1b", "llama-8b", "llama-13b"] {
+    let mut runs = runs.into_iter();
+    for preset in presets {
         for schedule in ScheduleKind::all() {
             println!("\n== {} — {} ==", preset, schedule.name());
             println!("{:>26} {:>12} {:>10}  pareto?", "method", "tokens/s", "acc");
-            let mut points = Vec::new();
-            for method in FreezeMethod::all() {
-                let mut cfg = ExperimentConfig::paper_preset(preset).unwrap();
-                apply_quick(&mut cfg);
-                cfg.schedule = schedule;
-                cfg.method = method;
-                let r = sim::run(&cfg);
-                points.push((method, r.throughput, r.accuracy));
-            }
+            let points: Vec<(FreezeMethod, f64, f64)> =
+                FreezeMethod::all().iter().map(|_| runs.next().unwrap()).collect();
             for &(m, t, a) in &points {
                 // On the frontier iff no other point dominates it.
                 let dominated = points

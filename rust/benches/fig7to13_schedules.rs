@@ -1,10 +1,13 @@
 //! Figures 7–13 (Appendix F): pipeline-execution Gantt charts for the
 //! four schedules × four methods at 4 GPUs (8B), 6 GPUs (1B, M=6), and
 //! 8 GPUs (GPipe), with the batch-time reductions the captions quote.
-//! SVGs land in bench_out/.
+//! The four method runs of each figure execute on worker threads;
+//! rendering stays sequential so the output is unchanged. SVGs land in
+//! bench_out/.
+use timelyfreeze::bench_support::parallel::map_parallel;
 use timelyfreeze::bench_support::tables::apply_quick;
 use timelyfreeze::config::ExperimentConfig;
-use timelyfreeze::sim;
+use timelyfreeze::sim::{self, SimResult};
 use timelyfreeze::types::{FreezeMethod, ScheduleKind};
 use timelyfreeze::viz;
 
@@ -18,15 +21,17 @@ fn render(figure: &str, preset: &str, schedule: ScheduleKind, ranks: usize, mb: 
         FreezeMethod::Apf,
         FreezeMethod::TimelyFreeze,
     ];
-    let mut base_time = None;
-    for method in methods {
+    let results: Vec<SimResult> = map_parallel(&methods, |&method| {
         let mut cfg = ExperimentConfig::paper_preset(preset).unwrap();
         apply_quick(&mut cfg);
         cfg.schedule = schedule;
         cfg.method = method;
         cfg.ranks = ranks;
         cfg.microbatches = mb;
-        let r = sim::run(&cfg);
+        sim::run(&cfg)
+    });
+    let mut base_time = None;
+    for (method, r) in methods.iter().zip(&results) {
         let bt = base_time.get_or_insert(r.batch_time_nofreeze);
         println!("\n--- {} (batch {:.3}s, −{:.2}% vs baseline) ---",
             method.name(), r.batch_time_final, 100.0 * (1.0 - r.batch_time_final / *bt));

@@ -1,38 +1,51 @@
-//! Micro-benchmarks for the §Perf pass: LP solve, DAG longest-path,
-//! schedule construction, and simulator step rate.
-use timelyfreeze::bench_support::{bench_auto, header};
+//! Micro-benchmarks for the §Perf pass: LP solve (cold + warm-started),
+//! DAG longest-path (CSR evaluator vs the dense seed path), schedule
+//! construction, and simulator step rate.
+//!
+//! Set `TF_BENCH_JSON=<path>` to also record the results as a
+//! `BENCH_*.json` trajectory point for `scripts/perf_gate.sh`.
+use timelyfreeze::bench_support::{bench_auto, header, write_json_if_requested, BenchResult};
 use timelyfreeze::config::ExperimentConfig;
 use timelyfreeze::graph::pipeline::PipelineDag;
-use timelyfreeze::lp::{solve_freeze_lp, FreezeLpInput};
+use timelyfreeze::lp::{solve_freeze_lp, FreezeLpInput, FreezeLpSolver};
 use timelyfreeze::schedule::Schedule;
 use timelyfreeze::sim;
 use timelyfreeze::types::{FreezeMethod, ScheduleKind};
 
 fn main() {
+    let mut all: Vec<BenchResult> = Vec::new();
+    let mut record = |r: BenchResult| {
+        println!("{}", r.report());
+        all.push(r);
+    };
     println!("{}", header());
+
     // Schedule + DAG construction.
     for kind in ScheduleKind::all() {
-        let r = bench_auto(&format!("schedule_build/{}", kind.name()), 0.3, || {
+        record(bench_auto(&format!("schedule_build/{}", kind.name()), 0.3, || {
             let s = Schedule::build(kind, 4, 8, Schedule::default_chunks(kind));
             std::hint::black_box(s.action_count());
-        });
-        println!("{}", r.report());
+        }));
     }
     let s = Schedule::build(ScheduleKind::ZeroBubbleV, 4, 8, 2);
-    let r = bench_auto("pipeline_dag_build/zbv_4x8", 0.3, || {
+    record(bench_auto("pipeline_dag_build/zbv_4x8", 0.3, || {
         let g = PipelineDag::from_schedule(&s);
         std::hint::black_box(g.len());
-    });
-    println!("{}", r.report());
+    }));
 
+    // Longest path: the CSR evaluator hot path vs the dense seed path
+    // (per-call Kahn sort over nested-Vec adjacency).
     let g = PipelineDag::from_schedule(&s);
     let w = g.weights(|_| 1.0);
-    let r = bench_auto("longest_path/zbv_4x8", 0.3, || {
-        std::hint::black_box(g.batch_time(&w));
-    });
-    println!("{}", r.report());
+    let mut evaluator = g.evaluator();
+    record(bench_auto("longest_path/zbv_4x8", 0.3, || {
+        std::hint::black_box(evaluator.batch_time(&w));
+    }));
+    record(bench_auto("longest_path_dense/zbv_4x8", 0.3, || {
+        std::hint::black_box(g.batch_time_dense(&w));
+    }));
 
-    // LP solve at several scales.
+    // LP solve at several scales (cold: full two-phase simplex).
     for (ranks, m, kind) in [
         (4usize, 8usize, ScheduleKind::OneFOneB),
         (4, 8, ScheduleKind::ZeroBubbleV),
@@ -42,7 +55,7 @@ fn main() {
         let pdag = PipelineDag::from_schedule(&sched);
         let w_max = pdag.weights(|a| if a.kind.freezable() { 2.0 } else { 1.0 });
         let w_min = pdag.weights(|a| if a.kind.freezable() { 0.9 } else { 1.0 });
-        let r = bench_auto(
+        record(bench_auto(
             &format!("lp_solve/{}_{ranks}x{m} ({} nodes)", kind.name(), pdag.len()),
             1.0,
             || {
@@ -56,8 +69,44 @@ fn main() {
                 .unwrap();
                 std::hint::black_box(sol.batch_time);
             },
-        );
-        println!("{}", r.report());
+        ));
+    }
+
+    // Warm-started re-solve: the per-check-interval controller pattern —
+    // same DAG, slightly perturbed bounds, previous basis reused.
+    {
+        let sched = Schedule::build(ScheduleKind::OneFOneB, 8, 16, 1);
+        let pdag = PipelineDag::from_schedule(&sched);
+        let w_max = pdag.weights(|a| if a.kind.freezable() { 2.0 } else { 1.0 });
+        let w_min = pdag.weights(|a| if a.kind.freezable() { 0.9 } else { 1.0 });
+        let mut solver = FreezeLpSolver::new();
+        let mut round = 0u64;
+        // Prime the basis with one cold solve outside the timed loop.
+        solver
+            .solve(&FreezeLpInput {
+                pdag: &pdag,
+                w_min: &w_min,
+                w_max: &w_max,
+                r_max: 0.8,
+                lambda: 1e-4,
+            })
+            .unwrap();
+        record(bench_auto("lp_resolve_warm/1f1b_8x16", 1.0, || {
+            // Nudge the budget each round so the re-solve is not a pure
+            // no-op, like a controller tracking drifting measurements.
+            round += 1;
+            let r_max = 0.8 - 0.001 * (round % 8) as f64;
+            let sol = solver
+                .solve(&FreezeLpInput {
+                    pdag: &pdag,
+                    w_min: &w_min,
+                    w_max: &w_max,
+                    r_max,
+                    lambda: 1e-4,
+                })
+                .unwrap();
+            std::hint::black_box(sol.batch_time);
+        }));
     }
 
     // Simulator step rate (steps/sec over a short run).
@@ -68,9 +117,9 @@ fn main() {
     let r = bench_auto("sim_run/llama1b_100steps", 2.0, || {
         std::hint::black_box(sim::run(&cfg).throughput);
     });
-    println!("{}", r.report());
-    println!(
-        "sim rate ≈ {:.0} steps/s",
-        100.0 / r.mean_s
-    );
+    let sim_mean = r.mean_s;
+    record(r);
+    println!("sim rate ≈ {:.0} steps/s", 100.0 / sim_mean);
+
+    write_json_if_requested("perf_micro", &all);
 }

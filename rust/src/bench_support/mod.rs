@@ -78,6 +78,37 @@ pub fn header() -> String {
     )
 }
 
+/// Serialize bench results as JSON (the `BENCH_*.json` trajectory files
+/// consumed by `scripts/perf_gate.sh`). Written when `TF_BENCH_JSON`
+/// names a target path; silent no-op otherwise.
+pub fn write_json_if_requested(bench: &str, results: &[BenchResult]) {
+    let Ok(path) = std::env::var("TF_BENCH_JSON") else {
+        return;
+    };
+    if path.is_empty() {
+        return;
+    }
+    use crate::util::json::Json;
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(&r.name)),
+                ("iters", Json::num(r.iters as f64)),
+                ("mean_s", Json::num(r.mean_s)),
+                ("stddev_s", Json::num(r.stddev_s)),
+                ("p50_s", Json::num(r.p50_s)),
+                ("p95_s", Json::num(r.p95_s)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![("bench", Json::str(bench)), ("results", Json::Arr(rows))]);
+    match std::fs::write(&path, doc.to_pretty()) {
+        Ok(()) => println!("bench json → {path}"),
+        Err(e) => eprintln!("bench json write failed ({path}): {e}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,4 +150,5 @@ mod tests {
         assert!(r.report().contains("n=3"));
     }
 }
+pub mod parallel;
 pub mod tables;

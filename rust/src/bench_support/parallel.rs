@@ -1,0 +1,122 @@
+//! Threaded experiment-grid driver. Every experiment `run()` is
+//! independent and deterministically seeded, so the fig/table benches
+//! fan their (method × schedule × scale) grids across scoped worker
+//! threads and then print in the original order — identical output,
+//! wall-clock divided by the core count.
+//!
+//! Work distribution is a shared atomic cursor over the item list
+//! (work-stealing-lite): long-running cells (e.g. full TimelyFreeze
+//! runs) don't leave a statically-assigned worker idle.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker-thread count: `TF_BENCH_THREADS` if set (values `0`/`1`
+/// disable threading), else the machine's available parallelism, capped
+/// by the item count.
+pub fn worker_count(items: usize) -> usize {
+    let override_threads =
+        std::env::var("TF_BENCH_THREADS").ok().and_then(|v| v.parse::<usize>().ok());
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    resolve_worker_count(override_threads, hw, items)
+}
+
+/// Pure policy behind [`worker_count`], split out so tests don't have
+/// to mutate process environment variables (concurrent `setenv` +
+/// `getenv` across libtest threads is undefined behavior on glibc).
+fn resolve_worker_count(override_threads: Option<usize>, hw: usize, items: usize) -> usize {
+    override_threads.unwrap_or(hw).max(1).min(items.max(1))
+}
+
+/// Map `f` over `items` on scoped worker threads, preserving order.
+/// Falls back to a plain sequential map when only one worker is
+/// available (or `TF_BENCH_THREADS=1`), so output and behaviour are
+/// byte-identical either way — each cell must be independently seeded.
+pub fn map_parallel<I, T, F>(items: &[I], f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(&I) -> T + Sync,
+{
+    let workers = worker_count(items.len());
+    if workers <= 1 || items.len() <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let result = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .unwrap()
+                .expect("worker panicked before filling its slot")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_results() {
+        let items: Vec<usize> = (0..64).collect();
+        let out = map_parallel(&items, |&i| i * i);
+        assert_eq!(out, items.iter().map(|&i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_item_runs_inline() {
+        let out = map_parallel(&[41usize], |&i| i + 1);
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<usize> = map_parallel(&[] as &[usize], |&i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn worker_count_policy() {
+        // Explicit override wins; 0 and 1 both disable threading.
+        assert_eq!(resolve_worker_count(Some(1), 16, 100), 1);
+        assert_eq!(resolve_worker_count(Some(0), 16, 100), 1);
+        assert_eq!(resolve_worker_count(Some(4), 16, 100), 4);
+        // No override: hardware parallelism, capped by item count.
+        assert_eq!(resolve_worker_count(None, 8, 100), 8);
+        assert_eq!(resolve_worker_count(None, 8, 3), 3);
+        assert_eq!(resolve_worker_count(None, 8, 0), 1);
+        // The live wrapper never returns more workers than items.
+        assert_eq!(worker_count(1), 1);
+        assert!(worker_count(100) >= 1);
+    }
+
+    #[test]
+    fn heavier_cells_do_not_starve_workers() {
+        // Uneven work: the atomic cursor hands out remaining items to
+        // whichever worker frees up first; all results still arrive.
+        let items: Vec<u64> = (0..32).map(|i| (i % 7) * 50).collect();
+        let out = map_parallel(&items, |&spin| {
+            let mut acc = 0u64;
+            for k in 0..spin * 1000 {
+                acc = acc.wrapping_add(k);
+            }
+            std::hint::black_box(acc);
+            spin
+        });
+        assert_eq!(out, items);
+    }
+}

@@ -1,7 +1,13 @@
 //! Shared harness for the paper-table benches (Tables 1, 4, 5, 9, 10):
 //! runs the full schedule × method grid for a preset and prints rows in
 //! the paper's format, recording JSON for regeneration.
+//!
+//! Grid cells are independent seeded runs, so they execute on the
+//! threaded driver ([`crate::bench_support::parallel`]); printing and
+//! recording stay in grid order, making the output identical to a
+//! sequential run.
 
+use crate::bench_support::parallel::map_parallel;
 use crate::config::ExperimentConfig;
 use crate::metrics::{result_row, Recorder};
 use crate::partition::PartitionMethod;
@@ -37,6 +43,20 @@ pub fn run_llm_table(preset: &str, experiment_id: &str) {
         "(pretrained avg acc {:.2}; paper no-freezing acc {:.2})\n",
         base.model.pretrained_acc, base.model.finetuned_acc
     );
+    // Fan the full schedule × method grid across worker threads; each
+    // cell is an independent seeded run.
+    let grid: Vec<(ScheduleKind, FreezeMethod)> = ScheduleKind::all()
+        .into_iter()
+        .flat_map(|s| FreezeMethod::all().into_iter().map(move |m| (s, m)))
+        .collect();
+    let results: Vec<SimResult> = map_parallel(&grid, |&(schedule, method)| {
+        let mut cfg = base.clone();
+        apply_quick(&mut cfg);
+        cfg.schedule = schedule;
+        cfg.method = method;
+        sim::run(&cfg)
+    });
+    let mut results = results.into_iter();
     for schedule in ScheduleKind::all() {
         let mut t = Table::new(
             &format!("{} — {}", base.model.name, schedule.name()),
@@ -44,11 +64,7 @@ pub fn run_llm_table(preset: &str, experiment_id: &str) {
         );
         let mut baseline: Option<SimResult> = None;
         for method in FreezeMethod::all() {
-            let mut cfg = base.clone();
-            apply_quick(&mut cfg);
-            cfg.schedule = schedule;
-            cfg.method = method;
-            let r = sim::run(&cfg);
+            let r = results.next().expect("grid result");
             let b = baseline.get_or_insert_with(|| r.clone());
             let acc_delta = r.acc_delta(b);
             let thpt_delta = r.throughput_delta_pct(b);
@@ -96,6 +112,24 @@ pub fn run_vision_table(
         "{experiment_id}: {} — {} steps on {}×{}",
         base.model.name, base.steps, base.ranks, base.gpu.name
     );
+    let grid: Vec<(PartitionMethod, ScheduleKind, FreezeMethod)> = partitions
+        .iter()
+        .flat_map(|&p| {
+            schedules
+                .iter()
+                .flat_map(move |&s| methods.iter().map(move |&m| (p, s, m)))
+        })
+        .collect();
+    let results: Vec<(SimResult, f64)> = map_parallel(&grid, |&(partition, schedule, method)| {
+        let mut cfg = base.clone();
+        apply_quick(&mut cfg);
+        cfg.schedule = schedule;
+        cfg.method = method;
+        let r = sim::run_with_partition(&cfg, partition);
+        let train_time = cfg.tokens_per_step() as f64 * cfg.steps as f64 / r.throughput;
+        (r, train_time)
+    });
+    let mut results = results.into_iter();
     for &partition in partitions {
         for &schedule in schedules {
             let mut t = Table::new(
@@ -109,13 +143,7 @@ pub fn run_vision_table(
             );
             let mut baseline: Option<(SimResult, f64)> = None;
             for &method in methods {
-                let mut cfg = base.clone();
-                apply_quick(&mut cfg);
-                cfg.schedule = schedule;
-                cfg.method = method;
-                let r = sim::run_with_partition(&cfg, partition);
-                let train_time =
-                    cfg.tokens_per_step() as f64 * cfg.steps as f64 / r.throughput;
+                let (r, train_time) = results.next().expect("grid result");
                 let (b, bt) = baseline.get_or_insert_with(|| (r.clone(), train_time));
                 let acc_delta = r.acc_delta(b);
                 let time_delta = 100.0 * (1.0 - train_time / *bt);

@@ -23,25 +23,47 @@ pub fn select_frozen_units(
     priority: Option<&[f64]>,
     rng: &mut Rng,
 ) -> Vec<bool> {
-    let mut mask = vec![false; layout.num_units()];
+    let mut mask = Vec::new();
+    select_frozen_units_into(layout, stage, ratio, priority, rng, &mut mask);
+    mask
+}
+
+/// Allocation-free variant of [`select_frozen_units`] for per-step hot
+/// loops: writes the mask into a caller-owned buffer (resized to the
+/// unit count, cleared first). Identical RNG draw order, so masks match
+/// the allocating variant bit-for-bit.
+pub fn select_frozen_units_into(
+    layout: &ModelLayout,
+    stage: usize,
+    ratio: f64,
+    priority: Option<&[f64]>,
+    rng: &mut Rng,
+    mask: &mut Vec<bool>,
+) {
+    let n = layout.num_units();
+    mask.clear();
+    mask.resize(n, false);
     if ratio <= 0.0 {
-        return mask;
-    }
-    let units = layout.units_of_stage(stage);
-    if units.is_empty() {
-        return mask;
+        return;
     }
     match priority {
         None => {
             // Bernoulli(AFR) per unit — exact expectation, unbiased.
-            for &u in &units {
-                if rng.bernoulli(ratio.min(1.0)) {
+            // Units scanned in ascending order (the same order
+            // `units_of_stage` yields) so the RNG stream is unchanged.
+            let p = ratio.min(1.0);
+            for u in 0..n {
+                if layout.unit_stage(u) == stage && rng.bernoulli(p) {
                     mask[u] = true;
                 }
             }
         }
         Some(pri) => {
-            assert_eq!(pri.len(), layout.num_units(), "priority length mismatch");
+            assert_eq!(pri.len(), n, "priority length mismatch");
+            let units = layout.units_of_stage(stage);
+            if units.is_empty() {
+                return;
+            }
             // Greedy: highest priority first; stop when the frozen
             // parameter mass reaches ratio · N_s.
             let mut sorted = units.clone();
@@ -60,7 +82,6 @@ pub fn select_frozen_units(
             }
         }
     }
-    mask
 }
 
 /// Merge per-stage masks into one model-wide mask (logical OR).
@@ -154,6 +175,25 @@ mod tests {
         let m1 = select_frozen_units(&l, 0, 0.5, None, &mut base.derive(9, 0));
         let m2 = select_frozen_units(&l, 0, 0.5, None, &mut base.derive(9, 0));
         assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_variant() {
+        let l = layout();
+        let base = Rng::seed_from_u64(4242);
+        for stage in 0..2 {
+            for &ratio in &[0.0, 0.3, 0.7, 1.0] {
+                let a = select_frozen_units(&l, stage, ratio, None, &mut base.derive(1, 2));
+                let mut b = vec![true; 3]; // wrong size + dirty: must reset
+                select_frozen_units_into(&l, stage, ratio, None, &mut base.derive(1, 2), &mut b);
+                assert_eq!(a, b, "stage {stage} ratio {ratio}");
+            }
+        }
+        let pri: Vec<f64> = (0..l.num_units()).map(|u| u as f64).collect();
+        let a = select_frozen_units(&l, 0, 0.5, Some(&pri), &mut base.derive(3, 4));
+        let mut b = Vec::new();
+        select_frozen_units_into(&l, 0, 0.5, Some(&pri), &mut base.derive(3, 4), &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

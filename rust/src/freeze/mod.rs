@@ -34,7 +34,7 @@ pub use apf::{Apf, ApfConfig};
 pub use autofreeze::{AutoFreeze, AutoFreezeConfig};
 pub use hybrid::Hybrid;
 pub use layout::ModelLayout;
-pub use masks::select_frozen_units;
+pub use masks::{select_frozen_units, select_frozen_units_into};
 pub use none::NoFreezing;
 pub use timely::{TimelyFreeze, TimelyFreezeConfig};
 

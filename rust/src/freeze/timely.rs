@@ -5,7 +5,7 @@
 use crate::freeze::layout::ModelLayout;
 use crate::freeze::{Controller, FreezePlan, PhaseConfig};
 use crate::graph::pipeline::{Node, PipelineDag};
-use crate::lp::{solve_freeze_lp, FreezeLpInput, FreezeSolution};
+use crate::lp::{FreezeLpInput, FreezeLpSolver, FreezeSolution};
 use crate::schedule::Schedule;
 use crate::types::{Action, FreezeMethod};
 use crate::util::stats::Accum;
@@ -41,6 +41,10 @@ pub struct TimelyFreeze {
     expected: Option<BTreeMap<Action, f64>>,
     /// Full LP solution kept for reporting (κ, P_d*, envelopes).
     solution: Option<FreezeSolution>,
+    /// LP solver with the previous optimal basis cached: re-plans over
+    /// the same DAG (refreshed bounds, new r_max) warm-start in a
+    /// handful of pivots.
+    solver: FreezeLpSolver,
     #[allow(dead_code)]
     layout: ModelLayout,
 }
@@ -61,6 +65,7 @@ impl TimelyFreeze {
             lower: BTreeMap::new(),
             expected: None,
             solution: None,
+            solver: FreezeLpSolver::new(),
             layout,
         }
     }
@@ -81,6 +86,14 @@ impl TimelyFreeze {
     /// The LP solution (available once t > T_m and `plan` has run).
     pub fn solution(&self) -> Option<&FreezeSolution> {
         self.solution.as_ref()
+    }
+
+    /// Re-plan from the current monitoring state: re-solves the LP
+    /// warm-started from the previous optimal basis (a handful of pivots
+    /// instead of a full two-phase solve), refreshing `r*`. For elastic
+    /// controllers re-planning per check-interval.
+    pub fn replan(&mut self) {
+        self.solve();
     }
 
     pub fn pdag(&self) -> &PipelineDag {
@@ -142,7 +155,7 @@ impl TimelyFreeze {
             r_max: self.cfg.r_max,
             lambda: self.cfg.lambda,
         };
-        match solve_freeze_lp(&input) {
+        match self.solver.solve(&input) {
             Ok(sol) => {
                 let mut expected = BTreeMap::new();
                 for (id, node) in self.pdag.dag.nodes.iter().enumerate() {
@@ -332,6 +345,28 @@ mod tests {
                 .collect();
             let mean = rs.iter().sum::<f64>() / rs.len() as f64;
             assert!(mean <= r_max + 1e-6, "stage {s} over budget: {mean}");
+        }
+    }
+
+    #[test]
+    fn replan_warm_start_preserves_solution() {
+        let (mut tf, schedule) = make(0.8);
+        drive_monitoring(&mut tf, &schedule);
+        tf.plan(31);
+        let first = tf.solution().unwrap().clone();
+        // Same monitoring state → the warm re-solve lands on the same
+        // optimum in (almost) no pivots.
+        tf.replan();
+        let second = tf.solution().unwrap();
+        assert!((first.batch_time - second.batch_time).abs() < 1e-9);
+        assert!(
+            second.iterations * 10 <= first.iterations.max(10),
+            "replan took {} iterations vs first solve {}",
+            second.iterations,
+            first.iterations
+        );
+        for (a, b) in first.ratios.iter().zip(&second.ratios) {
+            assert!((a - b).abs() < 1e-6);
         }
     }
 

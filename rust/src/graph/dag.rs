@@ -2,6 +2,14 @@
 //! formulation needs: topological sorting, longest-path start times
 //! (eq. 5), and critical-path extraction.
 //!
+//! Two representations live here:
+//!
+//! * [`Dag`] — the mutable nested-`Vec` builder, also the reference
+//!   implementation the equivalence tests compare against;
+//! * [`Csr`] + [`Evaluator`] — the frozen compressed-sparse-row form
+//!   with a topo order computed once at build time, whose forward sweep
+//!   is the per-step hot path (no Kahn re-run, no allocation).
+//!
 //! Node payloads are generic; the pipeline-specific structure lives in
 //! [`crate::graph::pipeline`].
 
@@ -41,17 +49,34 @@ impl<T> Dag<T> {
         self.nodes.len() - 1
     }
 
-    /// Add edge u → v. Duplicate edges are ignored (the pipeline edge
-    /// rules can produce the same dependency from several rules).
+    /// Add edge u → v in O(1). The pipeline edge rules can produce the
+    /// same dependency from several rules; duplicates are tolerated here
+    /// and removed by [`Dag::dedup_edges`] once construction finishes —
+    /// a per-insert `contains` scan made building dense-degree DAGs
+    /// O(V·E).
     pub fn add_edge(&mut self, u: usize, v: usize) {
         assert!(u < self.len() && v < self.len(), "edge endpoints out of range");
         assert_ne!(u, v, "self-loop");
-        if !self.succs[u].contains(&v) {
-            self.succs[u].push(v);
-            self.preds[v].push(u);
+        self.succs[u].push(v);
+        self.preds[v].push(u);
+    }
+
+    /// Finalize construction: sort each adjacency list and drop duplicate
+    /// edges (O(E log E) once, instead of O(degree) per insert).
+    pub fn dedup_edges(&mut self) {
+        for l in self.succs.iter_mut() {
+            l.sort_unstable();
+            l.dedup();
+        }
+        for l in self.preds.iter_mut() {
+            l.sort_unstable();
+            l.dedup();
         }
     }
 
+    /// Stored edge count. Exact once [`Dag::dedup_edges`] has run;
+    /// during construction duplicates inserted by overlapping rules are
+    /// still counted.
     pub fn edge_count(&self) -> usize {
         self.succs.iter().map(|s| s.len()).sum()
     }
@@ -198,6 +223,145 @@ impl<T> Dag<T> {
     }
 }
 
+/// Frozen compressed-sparse-row successor lists with the topological
+/// order cached at build time. This is the hot-path representation: the
+/// builder's nested `Vec`s cost a pointer chase per node and a full Kahn
+/// pass per longest-path query; `Csr` pays for both exactly once.
+#[derive(Clone, Debug, Default)]
+pub struct Csr {
+    /// `succ_off[i]..succ_off[i+1]` indexes `succ_adj` for node i.
+    succ_off: Vec<u32>,
+    succ_adj: Vec<u32>,
+    /// One topological order, sources first.
+    topo: Vec<u32>,
+}
+
+impl Csr {
+    /// Freeze a built DAG. `None` if the graph contains a cycle. Call
+    /// [`Dag::dedup_edges`] first if construction may have produced
+    /// duplicate edges (duplicates are harmless for correctness but
+    /// waste sweep time).
+    pub fn from_dag<T>(dag: &Dag<T>) -> Option<Csr> {
+        let n = dag.len();
+        let mut succ_off = Vec::with_capacity(n + 1);
+        let mut succ_adj = Vec::with_capacity(dag.edge_count());
+        succ_off.push(0u32);
+        for l in &dag.succs {
+            for &v in l {
+                succ_adj.push(v as u32);
+            }
+            succ_off.push(succ_adj.len() as u32);
+        }
+        // Kahn over the frozen lists, computed once and cached.
+        let mut indeg = vec![0u32; n];
+        for &v in &succ_adj {
+            indeg[v as usize] += 1;
+        }
+        let mut topo: Vec<u32> = (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
+        let mut head = 0;
+        while head < topo.len() {
+            let u = topo[head] as usize;
+            head += 1;
+            for &v in &succ_adj[succ_off[u] as usize..succ_off[u + 1] as usize] {
+                indeg[v as usize] -= 1;
+                if indeg[v as usize] == 0 {
+                    topo.push(v);
+                }
+            }
+        }
+        if topo.len() == n {
+            Some(Csr { succ_off, succ_adj, topo })
+        } else {
+            None
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.succ_off.len().saturating_sub(1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The cached topological order.
+    pub fn topo(&self) -> &[u32] {
+        &self.topo
+    }
+
+    #[inline]
+    pub fn succ(&self, u: usize) -> &[u32] {
+        &self.succ_adj[self.succ_off[u] as usize..self.succ_off[u + 1] as usize]
+    }
+
+    /// Longest-path start times (eq. 5) into a caller-owned buffer:
+    /// one forward sweep over the cached topo order, no allocation.
+    pub fn start_times_into(&self, weights: &[f64], out: &mut Vec<f64>) {
+        let n = self.len();
+        assert_eq!(weights.len(), n);
+        out.clear();
+        out.resize(n, 0.0);
+        for &u in &self.topo {
+            let u = u as usize;
+            let finish = out[u] + weights[u];
+            for &v in self.succ(u) {
+                let v = v as usize;
+                if finish > out[v] {
+                    out[v] = finish;
+                }
+            }
+        }
+    }
+}
+
+/// Reusable longest-path evaluator: a [`Csr`] plus a scratch buffer, so
+/// per-step callers (simulator, LP envelopes, benches) evaluate
+/// `start_times` without allocating or re-sorting.
+#[derive(Clone, Debug)]
+pub struct Evaluator {
+    csr: Csr,
+    scratch: Vec<f64>,
+}
+
+impl Evaluator {
+    pub fn new(csr: Csr) -> Evaluator {
+        let n = csr.len();
+        Evaluator { csr, scratch: vec![0.0; n] }
+    }
+
+    /// Freeze a built DAG into an evaluator. `None` on a cycle.
+    pub fn from_dag<T>(dag: &Dag<T>) -> Option<Evaluator> {
+        Csr::from_dag(dag).map(Evaluator::new)
+    }
+
+    pub fn len(&self) -> usize {
+        self.csr.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.csr.is_empty()
+    }
+
+    pub fn csr(&self) -> &Csr {
+        &self.csr
+    }
+
+    /// Start times under `weights`; the slice borrows the internal
+    /// scratch buffer and is valid until the next call.
+    pub fn start_times(&mut self, weights: &[f64]) -> &[f64] {
+        let mut out = std::mem::take(&mut self.scratch);
+        self.csr.start_times_into(weights, &mut out);
+        self.scratch = out;
+        &self.scratch
+    }
+
+    /// Makespan: max over nodes of `P_i + w_i`.
+    pub fn makespan(&mut self, weights: &[f64]) -> f64 {
+        let p = self.start_times(weights);
+        p.iter().zip(weights).map(|(pi, wi)| pi + wi).fold(0.0f64, f64::max)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -258,13 +422,47 @@ mod tests {
     }
 
     #[test]
-    fn duplicate_edges_ignored() {
+    fn duplicate_edges_removed_by_dedup() {
         let mut g = Dag::new();
         let a = g.add_node(());
         let b = g.add_node(());
         g.add_edge(a, b);
         g.add_edge(a, b);
+        // O(1) inserts keep duplicates until the finalize pass…
+        assert_eq!(g.edge_count(), 2);
+        g.dedup_edges();
         assert_eq!(g.edge_count(), 1);
+        assert_eq!(g.preds[b], vec![a]);
+        // …and longest paths are correct either way.
+        assert_eq!(g.makespan(&[1.0, 2.0]).unwrap(), 3.0);
+    }
+
+    #[test]
+    fn csr_matches_dense_on_diamond() {
+        let g = diamond();
+        let csr = Csr::from_dag(&g).unwrap();
+        assert_eq!(csr.len(), 4);
+        assert_eq!(csr.topo().len(), 4);
+        let w = [1.0, 5.0, 1.0, 2.0];
+        let mut out = Vec::new();
+        csr.start_times_into(&w, &mut out);
+        assert_eq!(out, g.start_times(&w).unwrap());
+        let mut ev = Evaluator::new(csr);
+        assert_eq!(ev.makespan(&w), g.makespan(&w).unwrap());
+        // Scratch reuse across weight vectors.
+        let w2 = [1.0, 1.0, 7.0, 2.0];
+        assert_eq!(ev.start_times(&w2), &g.start_times(&w2).unwrap()[..]);
+    }
+
+    #[test]
+    fn csr_detects_cycle() {
+        let mut g = Dag::new();
+        let a = g.add_node(());
+        let b = g.add_node(());
+        g.add_edge(a, b);
+        g.add_edge(b, a);
+        assert!(Csr::from_dag(&g).is_none());
+        assert!(Evaluator::from_dag(&g).is_none());
     }
 
     #[test]

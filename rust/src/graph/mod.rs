@@ -1,8 +1,9 @@
 //! Graph layer: a generic DAG (topological sort, longest path, critical
-//! path) and the pipeline-schedule DAG of §3.2.1 built on top of it.
+//! path), its frozen CSR form with a cached topo order for the per-step
+//! hot path, and the pipeline-schedule DAG of §3.2.1 built on top.
 
 pub mod dag;
 pub mod pipeline;
 
-pub use dag::Dag;
-pub use pipeline::{structural_edges, Node, PipelineDag};
+pub use dag::{Csr, Dag, Evaluator};
+pub use pipeline::{structural_edges, BatchEvaluator, Node, PipelineDag};

@@ -11,7 +11,7 @@
 //! The same DAG serves three consumers: the LP formulation (§3.2.2), the
 //! discrete-event simulator, and the schedule property tests.
 
-use crate::graph::dag::Dag;
+use crate::graph::dag::{Csr, Dag, Evaluator};
 use crate::schedule::Schedule;
 use crate::types::{Action, ActionKind};
 use std::collections::BTreeMap;
@@ -87,6 +87,9 @@ pub fn structural_edges(
 #[derive(Clone, Debug)]
 pub struct PipelineDag {
     pub dag: Dag<Node>,
+    /// Frozen CSR form with the topo order cached at construction — the
+    /// longest-path hot path. `dag` stays as the builder/reference form.
+    pub csr: Csr,
     pub source: usize,
     pub dest: usize,
     /// Action → node id.
@@ -128,6 +131,9 @@ impl PipelineDag {
                 dag.add_edge(index[&pair[0]], index[&pair[1]]);
             }
         }
+        // Edges were inserted in O(1); drop the duplicates produced by
+        // overlapping rules before freezing the CSR form.
+        dag.dedup_edges();
         // Rule 1: source feeds every orphan; every terminal feeds dest.
         // (The paper wires v_s → f(1,1) and b(M,1) → v_d; with rule 2–4
         // edges in place the only orphan is f(1,1) and the only terminal
@@ -143,9 +149,11 @@ impl PipelineDag {
                 dag.add_edge(id, dest);
             }
         }
+        let csr = Csr::from_dag(&dag).expect("pipeline DAG must be acyclic");
 
         PipelineDag {
             dag,
+            csr,
             source,
             dest,
             index,
@@ -182,7 +190,26 @@ impl PipelineDag {
     }
 
     /// Batch execution time `P_d` under the given weights (eq. 5).
+    /// Single forward sweep over the cached topo order. Callers that
+    /// evaluate every step should hold a [`BatchEvaluator`] instead,
+    /// which also skips this call's output allocation.
     pub fn batch_time(&self, weights: &[f64]) -> f64 {
+        let mut p = Vec::new();
+        self.csr.start_times_into(weights, &mut p);
+        p[self.dest]
+    }
+
+    /// Start times `P_i` for all nodes.
+    pub fn start_times(&self, weights: &[f64]) -> Vec<f64> {
+        let mut p = Vec::new();
+        self.csr.start_times_into(weights, &mut p);
+        p
+    }
+
+    /// Seed reference path: full Kahn sort + longest path on the nested
+    /// `Vec` adjacency. Kept for the CSR equivalence tests and the
+    /// before/after perf benches.
+    pub fn batch_time_dense(&self, weights: &[f64]) -> f64 {
         let p = self
             .dag
             .start_times(weights)
@@ -190,11 +217,11 @@ impl PipelineDag {
         p[self.dest]
     }
 
-    /// Start times `P_i` for all nodes.
-    pub fn start_times(&self, weights: &[f64]) -> Vec<f64> {
-        self.dag
-            .start_times(weights)
-            .expect("pipeline DAG must be acyclic")
+    /// A reusable evaluator over this DAG's CSR form for per-step
+    /// callers (simulator, LP envelopes, benches): repeated
+    /// `batch_time` / `start_times` with zero allocation.
+    pub fn evaluator(&self) -> BatchEvaluator {
+        BatchEvaluator { eval: Evaluator::new(self.csr.clone()), dest: self.dest }
     }
 
     /// Freezable action nodes grouped by stage — the sets `V_s` of
@@ -216,6 +243,28 @@ impl PipelineDag {
         (0..self.len())
             .filter(|&i| matches!(self.dag.nodes[i], Node::Act(_)))
             .collect()
+    }
+}
+
+/// Held-across-steps longest-path evaluator for one [`PipelineDag`]:
+/// owns the CSR (schedule-lifetime, cloned once) plus the scratch
+/// buffer, so the per-step `batch_time` is a pure forward sweep.
+#[derive(Clone, Debug)]
+pub struct BatchEvaluator {
+    eval: Evaluator,
+    dest: usize,
+}
+
+impl BatchEvaluator {
+    /// `P_d` under `weights` — allocation-free.
+    pub fn batch_time(&mut self, weights: &[f64]) -> f64 {
+        self.eval.start_times(weights)[self.dest]
+    }
+
+    /// Start times for all nodes; the slice borrows the internal
+    /// scratch buffer and is valid until the next call.
+    pub fn start_times(&mut self, weights: &[f64]) -> &[f64] {
+        self.eval.start_times(weights)
     }
 }
 
@@ -288,6 +337,26 @@ mod tests {
                 let s = Schedule::build(kind, ranks, m, Schedule::default_chunks(kind));
                 let g = PipelineDag::from_schedule(&s);
                 assert!(g.dag.is_acyclic(), "{} {ranks}x{m}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn evaluator_matches_dense_path_on_all_schedules() {
+        for kind in ScheduleKind::all() {
+            let g = build(kind, 4, 8);
+            let mut ev = g.evaluator();
+            for scale in [0.5, 1.0, 2.5] {
+                let w = g.weights(|a| if a.kind.freezable() { 2.0 * scale } else { scale });
+                let dense = g.batch_time_dense(&w);
+                assert_eq!(g.batch_time(&w), dense, "{}", kind.name());
+                assert_eq!(ev.batch_time(&w), dense, "{}", kind.name());
+                assert_eq!(
+                    ev.start_times(&w),
+                    &g.dag.start_times(&w).unwrap()[..],
+                    "{}",
+                    kind.name()
+                );
             }
         }
     }

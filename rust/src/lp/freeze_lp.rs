@@ -15,7 +15,7 @@
 //! (eq. 4).
 
 use crate::graph::pipeline::{Node, PipelineDag};
-use crate::lp::simplex::{self, Cmp, LpProblem, LpStatus, INF};
+use crate::lp::simplex::{self, Basis, Cmp, LpProblem, LpSolution, LpStatus, INF};
 
 /// Default tie-breaker weight. The paper only requires λ ≪ 1 so that
 /// minimizing P_d always dominates; we scale it against the number of
@@ -87,22 +87,94 @@ impl FreezeSolution {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FreezeLpError {
-    #[error("w_min/w_max length {got} does not match DAG size {want}")]
     BadLength { got: usize, want: usize },
-    #[error("node {node}: invalid bounds w_min={w_min} w_max={w_max}")]
     BadBounds { node: usize, w_min: f64, w_max: f64 },
-    #[error("r_max must be in [0,1], got {0}")]
     BadRmax(f64),
-    #[error("LP terminated with status {0:?}")]
     Solver(LpStatus),
 }
 
-/// Build and solve the freeze LP. Always feasible by construction
-/// (w = w_max satisfies every constraint), so `Err(Solver(_))` indicates
-/// numerically hostile inputs rather than modelling infeasibility.
+impl std::fmt::Display for FreezeLpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FreezeLpError::BadLength { got, want } => {
+                write!(f, "w_min/w_max length {got} does not match DAG size {want}")
+            }
+            FreezeLpError::BadBounds { node, w_min, w_max } => {
+                write!(f, "node {node}: invalid bounds w_min={w_min} w_max={w_max}")
+            }
+            FreezeLpError::BadRmax(r) => write!(f, "r_max must be in [0,1], got {r}"),
+            FreezeLpError::Solver(s) => write!(f, "LP terminated with status {s:?}"),
+        }
+    }
+}
+
+impl std::error::Error for FreezeLpError {}
+
+/// Re-usable freeze-LP solver that keeps the previous optimal simplex
+/// basis. Successive freeze-LP instances over the *same* pipeline DAG
+/// differ only in objective coefficients and RHS entries (refreshed
+/// monitoring bounds, a changed `r_max`), so a warm-started re-solve
+/// converges in a handful of pivots where a cold solve replays both
+/// phases. Falls back to a cold solve transparently whenever the cached
+/// basis no longer fits; results are bit-for-bit a valid LP optimum
+/// either way.
+#[derive(Clone, Debug, Default)]
+pub struct FreezeLpSolver {
+    basis: Option<Basis>,
+}
+
+impl FreezeLpSolver {
+    pub fn new() -> FreezeLpSolver {
+        FreezeLpSolver::default()
+    }
+
+    /// Whether the next [`FreezeLpSolver::solve`] will warm-start.
+    pub fn has_warm_basis(&self) -> bool {
+        self.basis.is_some()
+    }
+
+    /// Drop the cached basis (e.g. after the schedule changed shape).
+    pub fn reset(&mut self) {
+        self.basis = None;
+    }
+
+    pub fn solve(&mut self, input: &FreezeLpInput) -> Result<FreezeSolution, FreezeLpError> {
+        let built = build_problem(input)?;
+        let sol: LpSolution = match &self.basis {
+            Some(b) => simplex::solve_from_basis(&built.lp, b),
+            None => simplex::solve(&built.lp),
+        };
+        if sol.status != LpStatus::Optimal {
+            self.basis = None;
+            return Err(FreezeLpError::Solver(sol.status));
+        }
+        self.basis = sol.basis.clone();
+        Ok(extract_solution(input, &built, &sol))
+    }
+}
+
+/// Build and solve the freeze LP from scratch. Always feasible by
+/// construction (w = w_max satisfies every constraint), so
+/// `Err(Solver(_))` indicates numerically hostile inputs rather than
+/// modelling infeasibility. Controllers that re-solve should hold a
+/// [`FreezeLpSolver`] instead to reuse the optimal basis.
 pub fn solve_freeze_lp(input: &FreezeLpInput) -> Result<FreezeSolution, FreezeLpError> {
+    FreezeLpSolver::new().solve(input)
+}
+
+/// The assembled LP plus the variable maps needed to read a solution
+/// back out.
+struct BuiltLp {
+    lp: LpProblem,
+    /// Node → `w` column (freezable nodes only).
+    w_var: Vec<Option<usize>>,
+    /// δ_i per node (0 where unfreezable).
+    delta: Vec<f64>,
+}
+
+fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
     let pdag = input.pdag;
     let n = pdag.len();
     if input.w_min.len() != n || input.w_max.len() != n {
@@ -198,28 +270,40 @@ pub fn solve_freeze_lp(input: &FreezeLpInput) -> Result<FreezeSolution, FreezeLp
         lp.add_row(coeffs, Cmp::Ge, rhs);
     }
 
-    let sol = simplex::solve(&lp);
-    if sol.status != LpStatus::Optimal {
-        return Err(FreezeLpError::Solver(sol.status));
-    }
+    Ok(BuiltLp { lp, w_var, delta })
+}
 
+fn extract_solution(
+    input: &FreezeLpInput,
+    built: &BuiltLp,
+    sol: &LpSolution,
+) -> FreezeSolution {
+    let pdag = input.pdag;
+    let n = pdag.len();
     let w: Vec<f64> = (0..n)
-        .map(|i| match w_var[i] {
+        .map(|i| match built.w_var[i] {
             Some(wi) => sol.x[wi].clamp(input.w_min[i], input.w_max[i]),
             None => input.w_max[i],
         })
         .collect();
     let ratios: Vec<f64> = (0..n)
-        .map(|i| (delta[i] * (input.w_max[i] - w[i])).clamp(0.0, 1.0))
+        .map(|i| (built.delta[i] * (input.w_max[i] - w[i])).clamp(0.0, 1.0))
         .collect();
     // Earliest start times under chosen durations (eq. 5) — the LP's P_i
-    // may carry slack on non-critical nodes.
-    let start_times = pdag.start_times(&w);
+    // may carry slack on non-critical nodes. The three longest-path
+    // sweeps (chosen durations + both envelopes of eq. 46) run straight
+    // off the DAG's cached CSR: no clone, one scratch buffer for the
+    // envelopes.
+    let mut start_times = Vec::new();
+    pdag.csr.start_times_into(&w, &mut start_times);
     let batch_time = start_times[pdag.dest];
-    let p_d_max = pdag.batch_time(input.w_max);
-    let p_d_min = pdag.batch_time(input.w_min);
+    let mut scratch = Vec::new();
+    pdag.csr.start_times_into(input.w_max, &mut scratch);
+    let p_d_max = scratch[pdag.dest];
+    pdag.csr.start_times_into(input.w_min, &mut scratch);
+    let p_d_min = scratch[pdag.dest];
 
-    Ok(FreezeSolution {
+    FreezeSolution {
         ratios,
         w,
         start_times,
@@ -227,7 +311,7 @@ pub fn solve_freeze_lp(input: &FreezeLpInput) -> Result<FreezeSolution, FreezeLp
         p_d_max,
         p_d_min,
         iterations: sol.iterations,
-    })
+    }
 }
 
 #[cfg(test)]
@@ -458,6 +542,66 @@ mod tests {
         assert!(sol.kappa() > 0.0 && sol.kappa() <= 1.0);
         let mean = sol.mean_freezable_ratio(&g);
         assert!((0.0..=0.8 + 1e-6).contains(&mean));
+    }
+
+    #[test]
+    fn warm_solver_matches_cold_across_perturbed_instances() {
+        // A controller re-planning per check-interval sees the same DAG
+        // with slightly refreshed monitoring bounds. The warm-started
+        // solver must return the same optimum as a cold solve each time.
+        let (g, w_min, mut w_max) = setup(ScheduleKind::OneFOneB, 4, 8, 0.4);
+        let mut solver = FreezeLpSolver::new();
+        let mut rng = crate::util::rng::Rng::seed_from_u64(99);
+        for round in 0..6 {
+            let r_max = 0.4 + 0.1 * (round % 3) as f64;
+            let input = FreezeLpInput {
+                pdag: &g,
+                w_min: &w_min,
+                w_max: &w_max,
+                r_max,
+                lambda: DEFAULT_LAMBDA,
+            };
+            let warm = solver.solve(&input).unwrap();
+            let cold = solve_freeze_lp(&input).unwrap();
+            assert!(
+                (warm.batch_time - cold.batch_time).abs() < 1e-6,
+                "round {round}: warm {} vs cold {}",
+                warm.batch_time,
+                cold.batch_time
+            );
+            assert!(solver.has_warm_basis());
+            // Jitter the measured upper bounds a few percent, keeping
+            // w_max ≥ w_min, like refreshed monitoring means would.
+            for i in 0..g.len() {
+                if w_max[i] > w_min[i] {
+                    let jitter = 1.0 + 0.03 * (rng.next_f64() - 0.5);
+                    w_max[i] = (w_max[i] * jitter).max(w_min[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_solver_converges_in_few_pivots() {
+        let (g, w_min, w_max) = setup(ScheduleKind::OneFOneB, 4, 8, 0.4);
+        let input = FreezeLpInput {
+            pdag: &g,
+            w_min: &w_min,
+            w_max: &w_max,
+            r_max: 0.8,
+            lambda: DEFAULT_LAMBDA,
+        };
+        let mut solver = FreezeLpSolver::new();
+        let cold = solver.solve(&input).unwrap();
+        // Identical re-solve: pricing certifies optimality immediately.
+        let warm = solver.solve(&input).unwrap();
+        assert!(
+            warm.iterations * 10 <= cold.iterations.max(10),
+            "warm resolve took {} iterations vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+        assert!((warm.batch_time - cold.batch_time).abs() < 1e-9);
     }
 
     #[test]

@@ -1,8 +1,14 @@
 //! Linear programming layer: a from-scratch bounded-variable simplex
-//! solver and the TimelyFreeze freeze-ratio formulation built on it.
+//! solver (flat tableau, partial pricing, warm starts) and the
+//! TimelyFreeze freeze-ratio formulation built on it.
 
 pub mod freeze_lp;
 pub mod simplex;
 
-pub use freeze_lp::{solve_freeze_lp, FreezeLpError, FreezeLpInput, FreezeSolution, DEFAULT_LAMBDA};
-pub use simplex::{solve, Cmp, LpProblem, LpRow, LpSolution, LpStatus, INF};
+pub use freeze_lp::{
+    solve_freeze_lp, FreezeLpError, FreezeLpInput, FreezeLpSolver, FreezeSolution,
+    DEFAULT_LAMBDA,
+};
+pub use simplex::{
+    solve, solve_from_basis, Basis, Cmp, LpProblem, LpRow, LpSolution, LpStatus, INF,
+};

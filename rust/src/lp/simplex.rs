@@ -7,7 +7,7 @@
 //! so this module implements the classic bounded-variable simplex — exact
 //! on the paper's problem sizes (|V| ≈ 2·M·S + 2 nodes → a few hundred
 //! variables and constraints), and fast enough to re-solve per batch if a
-//! schedule were elastic (see benches/lp_micro.rs).
+//! schedule were elastic (see benches/perf_micro.rs).
 //!
 //! Method: rows are converted to equalities with slack variables; phase 1
 //! minimizes the sum of artificial variables from an identity basis;
@@ -15,6 +15,14 @@
 //! finite bound; the ratio test accounts for basic variables hitting
 //! either bound and for bound flips of the entering variable. Bland's
 //! rule kicks in after a stall to guarantee termination.
+//!
+//! Hot-path layout: the tableau `B⁻¹A` is one row-major `Vec<f64>`
+//! (m × ntot) rather than nested `Vec`s, pivots go through a scratch
+//! pivot-row buffer, and pricing uses Dantzig rule over a rotating
+//! partial window so one pivot no longer scans every column of large
+//! problems. [`solve_from_basis`] warm-starts from a previous optimal
+//! [`Basis`]: re-solves that differ only in a few objective/RHS entries
+//! converge in a handful of pivots instead of replaying both phases.
 
 pub const INF: f64 = f64::INFINITY;
 
@@ -109,6 +117,22 @@ pub enum LpStatus {
     IterationLimit,
 }
 
+/// A basis snapshot of a solved LP, sufficient to warm-start a re-solve
+/// of a structurally identical problem (same variables, same rows in the
+/// same order with the same comparison kinds; objective coefficients,
+/// RHS values, and bounds may change).
+#[derive(Clone, Debug)]
+pub struct Basis {
+    /// Row → column in the `[structural | slack | artificial]` layout.
+    pub row_to_var: Vec<usize>,
+    /// Nonbasic columns resting at their upper bound (len `ntot`).
+    pub at_upper: Vec<bool>,
+    /// Structural + slack column count (artificials start here).
+    pub n_struct_slack: usize,
+    /// Total column count.
+    pub ntot: usize,
+}
+
 #[derive(Clone, Debug)]
 pub struct LpSolution {
     pub status: LpStatus,
@@ -116,6 +140,9 @@ pub struct LpSolution {
     pub x: Vec<f64>,
     pub objective: f64,
     pub iterations: usize,
+    /// Final basis (present on `Optimal`), reusable via
+    /// [`solve_from_basis`].
+    pub basis: Option<Basis>,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -128,10 +155,18 @@ enum VarState {
 const FEAS_TOL: f64 = 1e-9;
 const OPT_TOL: f64 = 1e-9;
 const PIVOT_TOL: f64 = 1e-10;
+/// Minimum Dantzig pricing window; the effective window is
+/// `max(PRICE_WINDOW, col_limit / 8)`, so small problems degrade to the
+/// exact full-scan Dantzig rule.
+const PRICE_WINDOW: usize = 64;
+/// Basic-value tolerance when validating a warm-started basis.
+const WARM_TOL: f64 = 1e-7;
 
 struct Tableau {
-    /// Dense rows of B⁻¹·A, m × ntot.
-    a: Vec<Vec<f64>>,
+    /// Dense row-major B⁻¹·A, m × ntot in one allocation.
+    a: Vec<f64>,
+    /// Scratch copy of the (scaled) pivot row, reused across pivots.
+    pivot_row: Vec<f64>,
     /// Current values of basic variables (in bound-shifted space: actual
     /// values, with nonbasics at their bounds).
     xb: Vec<f64>,
@@ -147,6 +182,8 @@ struct Tableau {
     m: usize,
     ntot: usize,
     iterations: usize,
+    /// Rotating start of the partial-pricing window.
+    price_cursor: usize,
 }
 
 impl Tableau {
@@ -157,57 +194,130 @@ impl Tableau {
         }
     }
 
+    /// Improving direction and score of nonbasic column `j`, if any.
+    /// score = rate of objective decrease per unit step (> 0 ⇒
+    /// improving). AtLower moves up (rate −d_j), AtUpper moves down
+    /// (rate +d_j); free nonbasics (l = −∞, u = +∞, resting at 0 with
+    /// AtLower state) may move either way.
+    #[inline]
+    fn entering_candidate(&self, j: usize, fixed: &[bool]) -> Option<(f64, f64)> {
+        if fixed[j] || self.lower[j] == self.upper[j] {
+            return None;
+        }
+        match self.state[j] {
+            VarState::Basic(_) => None,
+            VarState::AtLower => {
+                let free = self.lower[j] == -INF && self.upper[j] == INF;
+                if self.d[j] < -OPT_TOL {
+                    Some((1.0, -self.d[j]))
+                } else if free && self.d[j] > OPT_TOL {
+                    Some((-1.0, self.d[j]))
+                } else {
+                    None
+                }
+            }
+            VarState::AtUpper => {
+                if self.d[j] > OPT_TOL {
+                    Some((-1.0, self.d[j]))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Pick an entering variable. Bland mode scans from column 0 and
+    /// takes the first improving index (termination guarantee); normal
+    /// mode runs Dantzig's rule over a rotating partial window, only
+    /// expanding the scan when the window holds no improving column —
+    /// optimality is still certified by a full scan coming up empty.
+    fn price(&mut self, fixed: &[bool], col_limit: usize, bland: bool) -> Option<(usize, f64)> {
+        if col_limit == 0 {
+            return None;
+        }
+        if bland {
+            for j in 0..col_limit {
+                if let Some((dir, _)) = self.entering_candidate(j, fixed) {
+                    return Some((j, dir));
+                }
+            }
+            return None;
+        }
+        let window = PRICE_WINDOW.max(col_limit / 8);
+        let mut start = self.price_cursor % col_limit;
+        let mut scanned = 0usize;
+        while scanned < col_limit {
+            let count = window.min(col_limit - scanned);
+            let mut best: Option<(usize, f64, f64)> = None;
+            for k in 0..count {
+                let mut j = start + k;
+                if j >= col_limit {
+                    j -= col_limit;
+                }
+                if let Some((dir, score)) = self.entering_candidate(j, fixed) {
+                    if best.map_or(true, |(_, _, s)| score > s) {
+                        best = Some((j, dir, score));
+                    }
+                }
+            }
+            if let Some((j, dir, _)) = best {
+                // Sticky window: keep pricing here while it still pays.
+                self.price_cursor = start;
+                return Some((j, dir));
+            }
+            scanned += count;
+            start = (start + count) % col_limit;
+        }
+        None
+    }
+
+    /// Pivot row `r` on column `j`, updating columns `0..col_limit` of
+    /// every row plus the reduced-cost row.
+    fn pivot(&mut self, r: usize, j: usize, col_limit: usize) {
+        let ntot = self.ntot;
+        let base = r * ntot;
+        let piv = self.a[base + j];
+        debug_assert!(piv.abs() > PIVOT_TOL, "tiny pivot {piv}");
+        let inv = 1.0 / piv;
+        for v in self.a[base..base + col_limit].iter_mut() {
+            *v *= inv;
+        }
+        self.pivot_row[..col_limit].copy_from_slice(&self.a[base..base + col_limit]);
+        for i in 0..self.m {
+            if i == r {
+                continue;
+            }
+            let row_base = i * ntot;
+            let f = self.a[row_base + j];
+            if f != 0.0 {
+                let row = &mut self.a[row_base..row_base + col_limit];
+                for (rv, pv) in row.iter_mut().zip(&self.pivot_row[..col_limit]) {
+                    *rv -= f * pv;
+                }
+                self.a[row_base + j] = 0.0; // exact zero
+            }
+        }
+        let f = self.d[j];
+        if f != 0.0 {
+            for (dv, pv) in self.d[..col_limit].iter_mut().zip(&self.pivot_row[..col_limit]) {
+                *dv -= f * pv;
+            }
+            self.d[j] = 0.0;
+        }
+    }
+
     /// One simplex phase: minimize the cost vector already loaded in `d`.
-    /// `col_limit` bounds the columns touched by pivot updates (phase 2
-    /// passes the structural+slack count: artificial columns are pinned
-    /// to zero and never read again, so updating them is wasted work).
-    /// Returns Ok(()) at optimality, Err(Unbounded) otherwise.
+    /// `col_limit` bounds the columns touched by pricing and pivot
+    /// updates (phase 2 passes the structural+slack count: artificial
+    /// columns are pinned to zero and never read again, so updating them
+    /// is wasted work). Returns Ok(()) at optimality, Err(Unbounded)
+    /// otherwise.
     fn optimize(&mut self, max_iter: usize, fixed: &[bool], col_limit: usize) -> Result<(), LpStatus> {
         let mut stall = 0usize;
         for _ in 0..max_iter {
             self.iterations += 1;
             let bland = stall > 2 * (self.m + self.ntot);
-            // --- pricing: pick entering variable ---
-            // score = rate of objective decrease per unit step (> 0 ⇒
-            // improving). AtLower moves up (rate −d_j), AtUpper moves
-            // down (rate +d_j); free nonbasics (l = −∞, u = +∞, resting
-            // at 0 with AtLower state) may move either way.
-            let mut enter: Option<(usize, f64, f64)> = None; // (var, dir, score)
-            for j in 0..col_limit {
-                if fixed[j] || self.lower[j] == self.upper[j] {
-                    continue;
-                }
-                let cand: Option<(f64, f64)> = match self.state[j] {
-                    VarState::Basic(_) => None,
-                    VarState::AtLower => {
-                        let free = self.lower[j] == -INF && self.upper[j] == INF;
-                        if self.d[j] < -OPT_TOL {
-                            Some((1.0, -self.d[j]))
-                        } else if free && self.d[j] > OPT_TOL {
-                            Some((-1.0, self.d[j]))
-                        } else {
-                            None
-                        }
-                    }
-                    VarState::AtUpper => {
-                        if self.d[j] > OPT_TOL {
-                            Some((-1.0, self.d[j]))
-                        } else {
-                            None
-                        }
-                    }
-                };
-                if let Some((dir, score)) = cand {
-                    if bland {
-                        enter = Some((j, dir, score));
-                        break;
-                    }
-                    if enter.map_or(true, |(_, _, s)| score > s) {
-                        enter = Some((j, dir, score));
-                    }
-                }
-            }
-            let Some((j, dir, _)) = enter else {
+            let Some((j, dir)) = self.price(fixed, col_limit, bland) else {
                 return Ok(()); // optimal
             };
 
@@ -217,7 +327,7 @@ impl Tableau {
             let mut t_star = own_range;
             let mut leave: Option<(usize, VarState)> = None; // (row, bound hit)
             for i in 0..self.m {
-                let rate = self.a[i][j] * dir; // x_b[i] decreases at `rate`
+                let rate = self.a[i * self.ntot + j] * dir; // x_b[i] decreases at `rate`
                 let bi = self.basis[i];
                 if rate > PIVOT_TOL {
                     if self.lower[bi] > -INF {
@@ -258,7 +368,7 @@ impl Tableau {
                     // bound; basics shift, basis unchanged.
                     let delta = dir * t_star;
                     for i in 0..self.m {
-                        self.xb[i] -= self.a[i][j] * delta;
+                        self.xb[i] -= self.a[i * self.ntot + j] * delta;
                     }
                     self.xval[j] += delta;
                     self.state[j] = if dir > 0.0 { VarState::AtUpper } else { VarState::AtLower };
@@ -267,7 +377,7 @@ impl Tableau {
                     // Update basic values for the step, then pivot.
                     let delta = dir * t_star;
                     for i in 0..self.m {
-                        self.xb[i] -= self.a[i][j] * delta;
+                        self.xb[i] -= self.a[i * self.ntot + j] * delta;
                     }
                     let entering_value = self.xval[j] + delta;
                     let leaving = self.basis[r];
@@ -280,32 +390,7 @@ impl Tableau {
                     self.xval[leaving] = leave_val;
                     self.state[leaving] = bound_hit;
 
-                    // Pivot row r on column j.
-                    let piv = self.a[r][j];
-                    debug_assert!(piv.abs() > PIVOT_TOL, "tiny pivot {piv}");
-                    let inv = 1.0 / piv;
-                    for col in 0..col_limit {
-                        self.a[r][col] *= inv;
-                    }
-                    for i in 0..self.m {
-                        if i != r {
-                            let f = self.a[i][j];
-                            if f != 0.0 {
-                                for col in 0..col_limit {
-                                    self.a[i][col] -= f * self.a[r][col];
-                                }
-                                self.a[i][j] = 0.0; // exact zero
-                            }
-                        }
-                    }
-                    // Reduced-cost row update.
-                    let f = self.d[j];
-                    if f != 0.0 {
-                        for col in 0..col_limit {
-                            self.d[col] -= f * self.a[r][col];
-                        }
-                        self.d[j] = 0.0;
-                    }
+                    self.pivot(r, j, col_limit);
                     self.basis[r] = j;
                     self.state[j] = VarState::Basic(r);
                     self.xb[r] = entering_value;
@@ -314,10 +399,105 @@ impl Tableau {
         }
         Err(LpStatus::IterationLimit)
     }
+
+    /// Phase-2 reduced costs from the real objective:
+    /// d_j = c_j − c_Bᵀ B⁻¹ A_j (B⁻¹A is the current tableau).
+    fn load_phase2_costs(&mut self, c: &[f64]) {
+        let mut c2 = vec![0.0f64; self.ntot];
+        c2[..c.len()].copy_from_slice(c);
+        let cb: Vec<f64> = self.basis.iter().map(|&b| c2[b]).collect();
+        for j in 0..self.ntot {
+            if matches!(self.state[j], VarState::Basic(_)) {
+                self.d[j] = 0.0;
+                continue;
+            }
+            let mut z = 0.0;
+            for i in 0..self.m {
+                if cb[i] != 0.0 {
+                    z += cb[i] * self.a[i * self.ntot + j];
+                }
+            }
+            self.d[j] = c2[j] - z;
+        }
+    }
+
+    fn extract_basis(&self, n_struct_slack: usize) -> Basis {
+        Basis {
+            row_to_var: self.basis.clone(),
+            at_upper: self.state.iter().map(|s| matches!(s, VarState::AtUpper)).collect(),
+            n_struct_slack,
+            ntot: self.ntot,
+        }
+    }
 }
 
-/// Solve an [`LpProblem`]. Deterministic; exact up to f64 tolerance.
+/// Column layout shared by cold and warm solves:
+/// `[structural 0..n | slack n..n_struct_slack | artificial .. ntot]`.
+struct Layout {
+    lower: Vec<f64>,
+    upper: Vec<f64>,
+    /// col → (row, coef) for structural and slack columns.
+    cols: Vec<Vec<(usize, f64)>>,
+    n_struct_slack: usize,
+    ntot: usize,
+}
+
+fn build_layout(p: &LpProblem) -> Layout {
+    let m = p.num_rows();
+    let n = p.num_vars();
+    let mut lower = p.lower.clone();
+    let mut upper = p.upper.clone();
+    let mut cols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+    for (i, row) in p.rows.iter().enumerate() {
+        for &(j, a) in &row.coeffs {
+            if a != 0.0 {
+                cols[j].push((i, a));
+            }
+        }
+    }
+    for (i, row) in p.rows.iter().enumerate() {
+        match row.cmp {
+            Cmp::Le => {
+                lower.push(0.0);
+                upper.push(INF);
+                cols.push(vec![(i, 1.0)]);
+            }
+            Cmp::Ge => {
+                lower.push(0.0);
+                upper.push(INF);
+                cols.push(vec![(i, -1.0)]);
+            }
+            Cmp::Eq => {}
+        }
+    }
+    let n_struct_slack = lower.len();
+    // Artificials: one per row (identity basis for phase 1; pinned to
+    // zero and basic-only-on-redundant-rows in warm starts).
+    for _ in 0..m {
+        lower.push(0.0);
+        upper.push(INF);
+    }
+    let ntot = lower.len();
+    Layout { lower, upper, cols, n_struct_slack, ntot }
+}
+
+/// Solve an [`LpProblem`] from scratch. Deterministic; exact up to f64
+/// tolerance.
 pub fn solve(p: &LpProblem) -> LpSolution {
+    solve_with(p, None)
+}
+
+/// Solve warm-started from a previous optimal basis of a structurally
+/// identical problem (same variable count, same rows in the same order
+/// with the same comparison kinds). Falls back to a cold [`solve`] when
+/// the basis no longer fits (dimension mismatch, singular under the new
+/// data, or primal-infeasible after an RHS change) — the result is
+/// always correct; warmth only affects iteration count.
+pub fn solve_from_basis(p: &LpProblem, basis: &Basis) -> LpSolution {
+    solve_with(p, Some(basis))
+}
+
+fn solve_with(p: &LpProblem, warm: Option<&Basis>) -> LpSolution {
     let n = p.num_vars();
     let m = p.num_rows();
     if m == 0 {
@@ -333,47 +513,22 @@ pub fn solve(p: &LpProblem) -> LpSolution {
             objective: p.objective(&x),
             x,
             iterations: 0,
+            basis: None,
         };
     }
 
-    // Layout: [structural 0..n | slack n..n+ns | artificial ...]
-    let mut lower = p.lower.clone();
-    let mut upper = p.upper.clone();
-    let mut cols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n]; // col → (row, coef)
-    for (i, row) in p.rows.iter().enumerate() {
-        for &(j, a) in &row.coeffs {
-            if a != 0.0 {
-                cols[j].push((i, a));
-            }
+    if let Some(b) = warm {
+        if let Some(sol) = try_warm(p, b) {
+            return sol;
         }
     }
-    let mut slack_of_row: Vec<Option<usize>> = vec![None; m];
-    for (i, row) in p.rows.iter().enumerate() {
-        match row.cmp {
-            Cmp::Le => {
-                let j = lower.len();
-                lower.push(0.0);
-                upper.push(INF);
-                cols.push(vec![(i, 1.0)]);
-                slack_of_row[i] = Some(j);
-            }
-            Cmp::Ge => {
-                let j = lower.len();
-                lower.push(0.0);
-                upper.push(INF);
-                cols.push(vec![(i, -1.0)]);
-                slack_of_row[i] = Some(j);
-            }
-            Cmp::Eq => {}
-        }
-    }
-    let n_struct_slack = lower.len();
-    // Artificials: one per row (identity basis).
-    for _ in 0..m {
-        lower.push(0.0);
-        upper.push(INF);
-    }
-    let ntot = lower.len();
+    solve_cold(p)
+}
+
+fn solve_cold(p: &LpProblem) -> LpSolution {
+    let n = p.num_vars();
+    let m = p.num_rows();
+    let Layout { lower, upper, cols, n_struct_slack, ntot } = build_layout(p);
 
     // Initial nonbasic values: finite bound nearest zero; 0 for free vars.
     let mut xval = vec![0.0; ntot];
@@ -381,32 +536,32 @@ pub fn solve(p: &LpProblem) -> LpSolution {
         xval[j] = initial_rest(lower[j], upper[j]);
     }
 
-    // Dense tableau rows; artificial columns get ±1 to make residuals
+    // Flat tableau; artificial columns get ±1 to make residuals
     // nonnegative.
-    let mut a = vec![vec![0.0f64; ntot]; m];
+    let mut a = vec![0.0f64; m * ntot];
     for (j, col) in cols.iter().enumerate() {
         for &(i, v) in col {
-            a[i][j] = v;
+            a[i * ntot + j] = v;
         }
     }
     let mut xb = vec![0.0f64; m];
     for i in 0..m {
         let mut resid = p.rows[i].rhs;
         for j in 0..n_struct_slack {
-            resid -= a[i][j] * xval[j];
+            resid -= a[i * ntot + j] * xval[j];
         }
         // Keep the basis an identity: if the residual is negative, negate
         // the whole row (coefficients and rhs) so the artificial enters
         // with +1 and a nonnegative value.
         if resid < 0.0 {
-            for v in a[i].iter_mut() {
+            for v in a[i * ntot..(i + 1) * ntot].iter_mut() {
                 *v = -*v;
             }
             resid = -resid;
             // rhs negation is implicit: xb stores the shifted residual.
         }
         let art = n_struct_slack + i;
-        a[i][art] = 1.0;
+        a[i * ntot + art] = 1.0;
         xb[i] = resid;
     }
 
@@ -428,26 +583,28 @@ pub fn solve(p: &LpProblem) -> LpSolution {
     // Phase-1 reduced costs: c = e on artificials ⇒ d_j = −Σ_i a[i][j]
     // for nonbasic j (c_B = 1 on all rows), d on artificials = 0.
     let mut d = vec![0.0f64; ntot];
-    for j in 0..n_struct_slack {
+    for (j, dj) in d.iter_mut().enumerate().take(n_struct_slack) {
         let mut s = 0.0;
         for i in 0..m {
-            s += a[i][j];
+            s += a[i * ntot + j];
         }
-        d[j] = -s;
+        *dj = -s;
     }
 
     let mut t = Tableau {
         a,
+        pivot_row: vec![0.0; ntot],
         xb,
         d,
         basis,
         state,
-        lower: lower.clone(),
-        upper: upper.clone(),
+        lower,
+        upper,
         xval,
         m,
         ntot,
         iterations: 0,
+        price_cursor: 0,
     };
 
     let max_iter = 50 * (m + ntot) + 1000;
@@ -484,30 +641,15 @@ pub fn solve(p: &LpProblem) -> LpSolution {
             // structural/slack column with a usable entry.
             let mut found = None;
             for j in 0..n_struct_slack {
-                if !matches!(t.state[j], VarState::Basic(_)) && t.a[r][j].abs() > 1e-7 {
+                if !matches!(t.state[j], VarState::Basic(_)) && t.a[r * ntot + j].abs() > 1e-7 {
                     found = Some(j);
                     break;
                 }
             }
             if let Some(j) = found {
                 // Manual degenerate pivot (step 0).
-                let piv = t.a[r][j];
-                let inv = 1.0 / piv;
-                for col in 0..t.ntot {
-                    t.a[r][col] *= inv;
-                }
-                for i in 0..t.m {
-                    if i != r {
-                        let f = t.a[i][j];
-                        if f != 0.0 {
-                            for col in 0..t.ntot {
-                                t.a[i][col] -= f * t.a[r][col];
-                            }
-                            t.a[i][j] = 0.0;
-                        }
-                    }
-                }
                 let entering_value = t.xval[j];
+                t.pivot(r, j, ntot);
                 t.state[b] = VarState::AtLower;
                 t.xval[b] = 0.0;
                 t.basis[r] = j;
@@ -519,24 +661,7 @@ pub fn solve(p: &LpProblem) -> LpSolution {
         }
     }
 
-    // Phase-2 reduced costs from the real objective.
-    let mut c2 = vec![0.0f64; ntot];
-    c2[..n].copy_from_slice(&p.c);
-    // d_j = c_j − c_Bᵀ B⁻¹ A_j; B⁻¹A is the current tableau.
-    let cb: Vec<f64> = t.basis.iter().map(|&b| c2[b]).collect();
-    for j in 0..ntot {
-        if matches!(t.state[j], VarState::Basic(_)) {
-            t.d[j] = 0.0;
-            continue;
-        }
-        let mut z = 0.0;
-        for i in 0..m {
-            if cb[i] != 0.0 {
-                z += cb[i] * t.a[i][j];
-            }
-        }
-        t.d[j] = c2[j] - z;
-    }
+    t.load_phase2_costs(&p.c);
 
     // Phase 2: artificial columns are fixed at zero and never re-enter;
     // exclude them from pivot updates entirely.
@@ -544,16 +669,176 @@ pub fn solve(p: &LpProblem) -> LpSolution {
         Ok(()) => LpStatus::Optimal,
         Err(s) => s,
     };
-    // Extract structural solution.
-    let mut x = vec![0.0; n];
-    for j in 0..n {
-        x[j] = t.value(j);
+    finish(p, &t, status, n_struct_slack)
+}
+
+/// Attempt a warm-started phase-2-only solve. `None` means the basis is
+/// unusable for this problem and the caller should fall back to a cold
+/// solve.
+fn try_warm(p: &LpProblem, warm: &Basis) -> Option<LpSolution> {
+    let m = p.num_rows();
+    let Layout { mut lower, mut upper, cols, n_struct_slack, ntot } = build_layout(p);
+    if warm.ntot != ntot
+        || warm.n_struct_slack != n_struct_slack
+        || warm.row_to_var.len() != m
+        || warm.at_upper.len() != ntot
+    {
+        return None;
     }
-    LpSolution { status, objective: p.objective(&x), x, iterations: t.iterations }
+
+    // Fresh tableau from the new problem data plus a RHS accumulator.
+    let mut a = vec![0.0f64; m * ntot];
+    for (j, col) in cols.iter().enumerate() {
+        for &(i, v) in col {
+            a[i * ntot + j] = v;
+        }
+    }
+    for i in 0..m {
+        a[i * ntot + n_struct_slack + i] = 1.0;
+    }
+    let mut rhs: Vec<f64> = p.rows.iter().map(|r| r.rhs).collect();
+
+    // Realize the basis by Gauss-Jordan with row swaps: after step k,
+    // column `basis[k]` is the k-th unit vector, i.e. rows hold B⁻¹A and
+    // `rhs` holds B⁻¹b. Row order within the basis is arbitrary, so the
+    // swap only relabels which row carries which basic variable.
+    let mut basis = warm.row_to_var.clone();
+    for k in 0..m {
+        let j = basis[k];
+        if j >= ntot {
+            return None;
+        }
+        let mut best_i = k;
+        let mut best_v = a[k * ntot + j].abs();
+        for i in k + 1..m {
+            let v = a[i * ntot + j].abs();
+            if v > best_v {
+                best_i = i;
+                best_v = v;
+            }
+        }
+        if best_v < 1e-9 {
+            return None; // basis singular under the new coefficients
+        }
+        if best_i != k {
+            for col in 0..ntot {
+                a.swap(best_i * ntot + col, k * ntot + col);
+            }
+            rhs.swap(best_i, k);
+        }
+        let inv = 1.0 / a[k * ntot + j];
+        for v in a[k * ntot..(k + 1) * ntot].iter_mut() {
+            *v *= inv;
+        }
+        rhs[k] *= inv;
+        for i in 0..m {
+            if i == k {
+                continue;
+            }
+            let f = a[i * ntot + j];
+            if f != 0.0 {
+                for col in 0..ntot {
+                    a[i * ntot + col] -= f * a[k * ntot + col];
+                }
+                a[i * ntot + j] = 0.0;
+                rhs[i] -= f * rhs[k];
+            }
+        }
+    }
+
+    // Nonbasic resting states and values from the snapshot.
+    let mut state = vec![VarState::AtLower; ntot];
+    let mut xval = vec![0.0f64; ntot];
+    let mut in_basis = vec![false; ntot];
+    for &b in &basis {
+        in_basis[b] = true;
+    }
+    for j in 0..ntot {
+        if in_basis[j] {
+            continue;
+        }
+        let (st, v) = resting(lower[j], upper[j], warm.at_upper[j]);
+        state[j] = st;
+        xval[j] = v;
+    }
+    for (r, &b) in basis.iter().enumerate() {
+        state[b] = VarState::Basic(r);
+    }
+
+    // Basic values: x_B = B⁻¹b − Σ_{nonbasic j} (B⁻¹A)_j · xval_j.
+    let mut xb = rhs;
+    for j in 0..n_struct_slack {
+        if in_basis[j] || xval[j] == 0.0 {
+            continue;
+        }
+        let v = xval[j];
+        for i in 0..m {
+            xb[i] -= a[i * ntot + j] * v;
+        }
+    }
+
+    // The warm basis must be primal feasible under the new bounds/RHS;
+    // otherwise phase 1 is needed and the cold path handles it.
+    for (r, &b) in basis.iter().enumerate() {
+        if b >= n_struct_slack {
+            // Artificial basic: only legitimate for a redundant row, at 0.
+            if xb[r].abs() > WARM_TOL {
+                return None;
+            }
+        } else if xb[r] < lower[b] - WARM_TOL || xb[r] > upper[b] + WARM_TOL {
+            return None;
+        }
+    }
+
+    // Pin artificials and run phase 2 only.
+    let mut fixed = vec![false; ntot];
+    for jart in n_struct_slack..ntot {
+        lower[jart] = 0.0;
+        upper[jart] = 0.0;
+        fixed[jart] = true;
+    }
+    let mut t = Tableau {
+        a,
+        pivot_row: vec![0.0; ntot],
+        xb,
+        d: vec![0.0; ntot],
+        basis,
+        state,
+        lower,
+        upper,
+        xval,
+        m,
+        ntot,
+        iterations: 0,
+        price_cursor: 0,
+    };
+    t.load_phase2_costs(&p.c);
+    let max_iter = 50 * (m + ntot) + 1000;
+    let status = match t.optimize(max_iter, &fixed, n_struct_slack) {
+        Ok(()) => LpStatus::Optimal,
+        // A genuinely unbounded problem is unbounded from any basis.
+        Err(LpStatus::Unbounded) => LpStatus::Unbounded,
+        // Stalling out from a warm basis is not a verdict on the
+        // problem: fall back to the cold path, which starts from a
+        // fresh phase-1 basis (warmth must only affect iteration count).
+        Err(_) => return None,
+    };
+    Some(finish(p, &t, status, n_struct_slack))
+}
+
+fn finish(p: &LpProblem, t: &Tableau, status: LpStatus, n_struct_slack: usize) -> LpSolution {
+    let n = p.num_vars();
+    let mut x = vec![0.0; n];
+    for (j, xj) in x.iter_mut().enumerate() {
+        *xj = t.value(j);
+    }
+    let basis =
+        (status == LpStatus::Optimal).then(|| t.extract_basis(n_struct_slack));
+    LpSolution { status, objective: p.objective(&x), x, iterations: t.iterations, basis }
 }
 
 fn failed(status: LpStatus, n: usize, iterations: usize) -> LpSolution {
-    LpSolution { status, x: vec![f64::NAN; n], objective: f64::NAN, iterations }
+    LpSolution { status, x: vec![f64::NAN; n], objective: f64::NAN, iterations, basis: None }
 }
 
 fn initial_rest(l: f64, u: f64) -> f64 {
@@ -569,6 +854,24 @@ fn initial_rest(l: f64, u: f64) -> f64 {
         u
     } else {
         0.0
+    }
+}
+
+/// Resting state for a nonbasic variable in a warm start, honouring the
+/// snapshot's bound choice where the new bounds still allow it.
+fn resting(l: f64, u: f64, prefer_upper: bool) -> (VarState, f64) {
+    if l == u {
+        return (VarState::AtLower, l);
+    }
+    if prefer_upper && u < INF {
+        return (VarState::AtUpper, u);
+    }
+    if l > -INF {
+        (VarState::AtLower, l)
+    } else if u < INF {
+        (VarState::AtUpper, u)
+    } else {
+        (VarState::AtLower, 0.0) // free variable rests at 0
     }
 }
 
@@ -754,6 +1057,128 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn warm_restart_from_own_basis_is_immediate() {
+        let mut p = LpProblem::new();
+        let x = p.add_var(-3.0, 0.0, INF);
+        let y = p.add_var(-5.0, 0.0, INF);
+        p.add_row(vec![(x, 1.0)], Cmp::Le, 4.0);
+        p.add_row(vec![(y, 2.0)], Cmp::Le, 12.0);
+        p.add_row(vec![(x, 3.0), (y, 2.0)], Cmp::Le, 18.0);
+        let cold = solve(&p);
+        assert_opt(&cold, -36.0, 1e-7);
+        let basis = cold.basis.clone().expect("optimal solve returns a basis");
+        let warm = solve_from_basis(&p, &basis);
+        assert_opt(&warm, -36.0, 1e-7);
+        // The old optimum is still optimal: phase 2 certifies it in the
+        // first pricing pass without pivoting.
+        assert!(
+            warm.iterations <= 1,
+            "warm restart took {} iterations",
+            warm.iterations
+        );
+    }
+
+    #[test]
+    fn warm_start_tracks_objective_perturbation() {
+        // Shift costs so the optimal vertex moves; warm start must land
+        // on the same optimum as a cold solve.
+        let mut p = LpProblem::new();
+        let x = p.add_var(-3.0, 0.0, INF);
+        let y = p.add_var(-5.0, 0.0, INF);
+        p.add_row(vec![(x, 1.0)], Cmp::Le, 4.0);
+        p.add_row(vec![(y, 2.0)], Cmp::Le, 12.0);
+        p.add_row(vec![(x, 3.0), (y, 2.0)], Cmp::Le, 18.0);
+        let basis = solve(&p).basis.unwrap();
+        let mut p2 = p.clone();
+        p2.c = vec![-5.0, -1.0]; // now x is precious: optimum (4, 3)
+        let cold = solve(&p2);
+        let warm = solve_from_basis(&p2, &basis);
+        assert_eq!(warm.status, LpStatus::Optimal);
+        assert!(
+            (warm.objective - cold.objective).abs() < 1e-7,
+            "warm {} vs cold {}",
+            warm.objective,
+            cold.objective
+        );
+        assert!(p2.is_feasible(&warm.x, 1e-7));
+    }
+
+    #[test]
+    fn warm_start_falls_back_on_infeasible_rhs_change() {
+        // An RHS change that breaks the old basis's primal feasibility
+        // must transparently fall back to the cold path.
+        let mut p = LpProblem::new();
+        let x = p.add_var(1.0, 0.0, 10.0);
+        let y = p.add_var(1.0, 0.0, 10.0);
+        p.add_row(vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 2.0);
+        let basis = solve(&p).basis.unwrap();
+        let mut p2 = p.clone();
+        p2.rows[0].rhs = 15.0; // old vertex (2,0) now violates the row
+        let warm = solve_from_basis(&p2, &basis);
+        let cold = solve(&p2);
+        assert_eq!(warm.status, LpStatus::Optimal);
+        assert!((warm.objective - cold.objective).abs() < 1e-7);
+        assert!(p2.is_feasible(&warm.x, 1e-7));
+    }
+
+    #[test]
+    fn warm_start_rejects_mismatched_shapes() {
+        let mut p = LpProblem::new();
+        let x = p.add_var(1.0, 0.0, 1.0);
+        p.add_row(vec![(x, 1.0)], Cmp::Le, 1.0);
+        let basis = solve(&p).basis.unwrap();
+        let mut p2 = LpProblem::new();
+        let a = p2.add_var(1.0, 0.0, 1.0);
+        let b = p2.add_var(1.0, 0.0, 1.0);
+        p2.add_row(vec![(a, 1.0), (b, 1.0)], Cmp::Le, 1.0);
+        // Different column count: must fall back to cold and stay correct.
+        let sol = solve_from_basis(&p2, &basis);
+        assert_eq!(sol.status, LpStatus::Optimal);
+        assert!((sol.objective - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warm_start_random_perturbations_match_cold() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(777);
+        for case in 0..20 {
+            let nv = 3 + (case % 3);
+            let mut p = LpProblem::new();
+            for _ in 0..nv {
+                p.add_var(rng.range_f64(-2.0, 2.0), 0.0, rng.range_f64(1.0, 5.0));
+            }
+            for _ in 0..nv {
+                let coeffs: Vec<(usize, f64)> =
+                    (0..nv).map(|j| (j, rng.range_f64(-1.0, 2.0))).collect();
+                p.add_row(coeffs, Cmp::Le, rng.range_f64(0.5, 6.0));
+            }
+            let base = solve(&p);
+            assert_eq!(base.status, LpStatus::Optimal, "case {case}");
+            let basis = base.basis.clone().unwrap();
+            // Perturb objective and RHS by a few percent, as a
+            // controller re-plan would.
+            let mut p2 = p.clone();
+            for c in p2.c.iter_mut() {
+                *c += rng.range_f64(-0.05, 0.05);
+            }
+            for row in p2.rows.iter_mut() {
+                row.rhs += rng.range_f64(-0.02, 0.02);
+            }
+            let cold = solve(&p2);
+            let warm = solve_from_basis(&p2, &basis);
+            assert_eq!(cold.status, LpStatus::Optimal, "case {case}");
+            assert_eq!(warm.status, LpStatus::Optimal, "case {case}");
+            assert!(
+                (warm.objective - cold.objective).abs() < 1e-6,
+                "case {case}: warm {} vs cold {}",
+                warm.objective,
+                cold.objective
+            );
+            assert!(p2.is_feasible(&warm.x, 1e-6), "case {case}");
         }
     }
 }

@@ -11,9 +11,7 @@
 //!
 //! Run `tfreeze help` for flags.
 
-use timelyfreeze::bench_support;
 use timelyfreeze::config::ExperimentConfig;
-use timelyfreeze::engine::{self, EngineConfig};
 use timelyfreeze::freeze::PhaseConfig;
 use timelyfreeze::lp;
 use timelyfreeze::sim;
@@ -174,7 +172,21 @@ fn cmd_table(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> Result<(), String> {
+    Err(
+        "this binary was built without the `pjrt` feature; the real PJRT engine \
+         needs the external `xla`/`anyhow` crates (see Cargo.toml). \
+         Rebuild with `--features pjrt`, or use `simulate` for the \
+         discrete-event runner."
+            .to_string(),
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<(), String> {
+    use timelyfreeze::bench_support;
+    use timelyfreeze::engine::{self, EngineConfig};
     let artifacts = args.flag_or(
         "artifacts",
         concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),

@@ -1,6 +1,10 @@
 //! Integration tests over the real PJRT engine (skipped when artifacts
 //! are absent): numerical agreement between partitions, schedule
 //! equivalence, and freezing semantics at the optimizer boundary.
+//!
+//! The engine needs the external `xla` crate; the whole suite is gated
+//! behind the `pjrt` feature (see Cargo.toml).
+#![cfg(feature = "pjrt")]
 
 use std::sync::Mutex;
 use timelyfreeze::engine::{train, EngineConfig};

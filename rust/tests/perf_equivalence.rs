@@ -1,0 +1,207 @@
+//! Equivalence properties for the fast-path overhaul: the CSR
+//! evaluator must reproduce the seed's dense longest-path results on
+//! arbitrary DAGs, and warm-started LP re-solves must land on the same
+//! optimum as cold solves across perturbed freeze-LP instances.
+
+mod prop;
+
+use prop::{check, usize_in};
+use timelyfreeze::graph::dag::{Csr, Dag, Evaluator};
+use timelyfreeze::graph::pipeline::{Node, PipelineDag};
+use timelyfreeze::lp::{self, solve_freeze_lp, FreezeLpInput, FreezeLpSolver};
+use timelyfreeze::schedule::Schedule;
+use timelyfreeze::types::{ActionKind, ScheduleKind};
+use timelyfreeze::util::rng::Rng;
+
+/// Random DAG: edges only go from lower to higher ids (guaranteed
+/// acyclic), with duplicate insertions to exercise the dedup pass.
+fn random_dag(rng: &mut Rng) -> Dag<()> {
+    let n = usize_in(rng, 1, 60);
+    let mut g = Dag::new();
+    for _ in 0..n {
+        g.add_node(());
+    }
+    if n >= 2 {
+        let edges = usize_in(rng, 0, 4 * n);
+        for _ in 0..edges {
+            let u = rng.next_below((n - 1) as u64) as usize;
+            let v = u + 1 + rng.next_below((n - u - 1) as u64) as usize;
+            g.add_edge(u, v);
+            if rng.bernoulli(0.2) {
+                g.add_edge(u, v); // duplicate on purpose
+            }
+        }
+    }
+    g.dedup_edges();
+    g
+}
+
+/// CSR start times == dense (Kahn + nested-Vec) start times on random
+/// DAGs and random weights, including scratch-buffer reuse across
+/// weight vectors.
+#[test]
+fn prop_csr_evaluator_matches_dense_on_random_dags() {
+    check("csr == dense longest path", 80, |rng| {
+        let g = random_dag(rng);
+        let csr = Csr::from_dag(&g).ok_or("random DAG reported cyclic")?;
+        let mut ev = Evaluator::new(csr);
+        for _ in 0..3 {
+            let w: Vec<f64> = (0..g.len()).map(|_| rng.range_f64(0.0, 5.0)).collect();
+            let dense = g.start_times(&w).ok_or("dense path reported cyclic")?;
+            let fast = ev.start_times(&w);
+            if fast != &dense[..] {
+                return Err(format!("start times diverge: {fast:?} vs {dense:?}"));
+            }
+            let makespan = g.makespan(&w).unwrap();
+            if (ev.makespan(&w) - makespan).abs() > 0.0 {
+                return Err("makespan diverges".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The pipeline DAG's cached-CSR `batch_time` and the held
+/// `BatchEvaluator` agree with the seed dense implementation across
+/// random schedules and cost profiles.
+#[test]
+fn prop_pipeline_evaluator_matches_dense() {
+    check("pipeline evaluator == dense", 40, |rng| {
+        let kind = ScheduleKind::all()[rng.next_below(4) as usize];
+        let ranks = usize_in(rng, 1, 6);
+        let m = usize_in(rng, 1, 8);
+        let s = Schedule::build(kind, ranks, m, Schedule::default_chunks(kind));
+        let g = PipelineDag::from_schedule(&s);
+        let mut ev = g.evaluator();
+        for _ in 0..3 {
+            let w: Vec<f64> = (0..g.len()).map(|_| rng.range_f64(0.1, 4.0)).collect();
+            let dense = g.batch_time_dense(&w);
+            if g.batch_time(&w) != dense {
+                return Err(format!("{}: csr batch_time diverges", kind.name()));
+            }
+            if ev.batch_time(&w) != dense {
+                return Err(format!("{}: evaluator batch_time diverges", kind.name()));
+            }
+            let dense_starts = g.dag.start_times(&w).unwrap();
+            if ev.start_times(&w) != &dense_starts[..] {
+                return Err(format!("{}: evaluator start times diverge", kind.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn random_bounds(rng: &mut Rng, g: &PipelineDag) -> (Vec<f64>, Vec<f64>) {
+    let mut w_min = vec![0.0; g.len()];
+    let mut w_max = vec![0.0; g.len()];
+    for (id, node) in g.dag.nodes.iter().enumerate() {
+        if let Node::Act(a) = node {
+            let base = rng.range_f64(0.5, 3.0);
+            match a.kind {
+                ActionKind::Forward | ActionKind::BackwardDgrad => {
+                    w_min[id] = base;
+                    w_max[id] = base;
+                }
+                ActionKind::Backward => {
+                    w_max[id] = base * rng.range_f64(1.5, 3.0);
+                    w_min[id] = base;
+                }
+                ActionKind::BackwardWgrad => {
+                    w_max[id] = base;
+                    w_min[id] = base * rng.range_f64(0.0, 0.2);
+                }
+            }
+        }
+    }
+    (w_min, w_max)
+}
+
+/// A warm-started freeze-LP re-solve returns the same objective (batch
+/// time) as a cold solve, across a drifting sequence of perturbed
+/// instances over one DAG — the controller re-plan pattern.
+#[test]
+fn prop_warm_lp_matches_cold_across_perturbations() {
+    check("warm LP == cold LP", 12, |rng| {
+        let kind = ScheduleKind::all()[rng.next_below(4) as usize];
+        let ranks = usize_in(rng, 2, 4);
+        let m = usize_in(rng, 2, 6);
+        let s = Schedule::build(kind, ranks, m, Schedule::default_chunks(kind));
+        let g = PipelineDag::from_schedule(&s);
+        let (w_min, mut w_max) = random_bounds(rng, &g);
+        let mut solver = FreezeLpSolver::new();
+        for round in 0..4 {
+            let r_max = rng.range_f64(0.1, 1.0);
+            let input = FreezeLpInput {
+                pdag: &g,
+                w_min: &w_min,
+                w_max: &w_max,
+                r_max,
+                lambda: 1e-4,
+            };
+            let warm = solver.solve(&input).map_err(|e| format!("warm: {e}"))?;
+            let cold = solve_freeze_lp(&input).map_err(|e| format!("cold: {e}"))?;
+            if (warm.batch_time - cold.batch_time).abs() > 1e-6 {
+                return Err(format!(
+                    "{} round {round}: warm {} vs cold {}",
+                    kind.name(),
+                    warm.batch_time,
+                    cold.batch_time
+                ));
+            }
+            // Ratios at the optimum can differ only where the LP has
+            // ties; the achieved batch time (primary objective) and the
+            // envelopes must match exactly.
+            if (warm.p_d_max - cold.p_d_max).abs() > 1e-9
+                || (warm.p_d_min - cold.p_d_min).abs() > 1e-9
+            {
+                return Err("envelopes diverge".into());
+            }
+            // Drift the measured upper bounds a few percent for the
+            // next round, as refreshed monitoring means would.
+            for i in 0..g.len() {
+                if w_max[i] > w_min[i] {
+                    let jitter = 1.0 + 0.04 * (rng.next_f64() - 0.5);
+                    w_max[i] = (w_max[i] * jitter).max(w_min[i]);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Warm restarts at the simplex level: re-solving the identical problem
+/// from its own optimal basis certifies optimality without pivoting.
+#[test]
+fn prop_simplex_warm_restart_is_cheap() {
+    check("simplex warm restart", 15, |rng| {
+        let nv = usize_in(rng, 2, 6);
+        let mut p = lp::LpProblem::new();
+        for _ in 0..nv {
+            p.add_var(rng.range_f64(-2.0, 2.0), 0.0, rng.range_f64(1.0, 5.0));
+        }
+        for _ in 0..nv {
+            let coeffs: Vec<(usize, f64)> =
+                (0..nv).map(|j| (j, rng.range_f64(-1.0, 2.0))).collect();
+            p.add_row(coeffs, lp::Cmp::Le, rng.range_f64(0.5, 6.0));
+        }
+        let cold = lp::solve(&p);
+        if cold.status != lp::LpStatus::Optimal {
+            return Err(format!("cold solve failed: {:?}", cold.status));
+        }
+        let basis = cold.basis.clone().ok_or("optimal solve returned no basis")?;
+        let warm = lp::solve_from_basis(&p, &basis);
+        if warm.status != lp::LpStatus::Optimal {
+            return Err(format!("warm solve failed: {:?}", warm.status));
+        }
+        if (warm.objective - cold.objective).abs() > 1e-7 {
+            return Err(format!("objectives diverge: {} vs {}", warm.objective, cold.objective));
+        }
+        if warm.iterations > 5 {
+            return Err(format!(
+                "identical-problem warm restart took {} iterations",
+                warm.iterations
+            ));
+        }
+        Ok(())
+    });
+}

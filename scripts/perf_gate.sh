@@ -1,0 +1,83 @@
+#!/usr/bin/env bash
+# Perf gate for the three hot paths (see PERF.md): builds release, runs
+# the perf_micro bench suite, records the result as a BENCH_*.json
+# trajectory point, and fails on a >20% mean-time regression against the
+# checked-in baseline (when one exists).
+#
+# Usage:
+#   scripts/perf_gate.sh [output.json]          # default: BENCH_PR1.json
+#
+# Baseline: scripts/BENCH_BASELINE.json. Refresh it by copying a trusted
+# output file over it. Benchmarks present in only one of the two files
+# are ignored (suites may grow).
+#
+# Env:
+#   TF_PERF_GATE_TOLERANCE   regression threshold, default 0.20
+#   TF_BENCH_THREADS         worker count for the threaded benches
+
+set -euo pipefail
+
+REPO_ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+RUST_DIR="$REPO_ROOT/rust"
+OUT_JSON="${1:-$REPO_ROOT/BENCH_PR1.json}"
+BASELINE="$REPO_ROOT/scripts/BENCH_BASELINE.json"
+TOLERANCE="${TF_PERF_GATE_TOLERANCE:-0.20}"
+
+cd "$RUST_DIR"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "perf_gate: cargo not found on PATH — cannot build or bench" >&2
+    exit 3
+fi
+
+echo "== fmt =="
+cargo fmt --check
+
+echo "== clippy =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== build (release) =="
+cargo build --release
+
+echo "== perf_micro → $OUT_JSON =="
+TF_BENCH_JSON="$OUT_JSON" cargo bench --bench perf_micro
+
+if [[ ! -f "$BASELINE" ]]; then
+    echo "perf_gate: no baseline at $BASELINE — recorded $OUT_JSON, skipping comparison"
+    exit 0
+fi
+
+echo "== compare vs $BASELINE (tolerance ${TOLERANCE}) =="
+python3 - "$BASELINE" "$OUT_JSON" "$TOLERANCE" <<'PY'
+import json, sys
+
+baseline_path, current_path, tol = sys.argv[1], sys.argv[2], float(sys.argv[3])
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: r for r in doc.get("results", [])}
+
+base, cur = load(baseline_path), load(current_path)
+failures = []
+for name in sorted(base.keys() & cur.keys()):
+    b, c = base[name]["mean_s"], cur[name]["mean_s"]
+    if not b or b <= 0:
+        continue
+    ratio = c / b
+    marker = "OK "
+    if ratio > 1.0 + tol:
+        marker = "REG"
+        failures.append((name, ratio))
+    print(f"  [{marker}] {name:<44} {b*1e6:10.2f}us -> {c*1e6:10.2f}us  ({ratio:0.2f}x)")
+
+only = sorted(base.keys() ^ cur.keys())
+if only:
+    print(f"  (ignored {len(only)} benchmarks present in only one file)")
+
+if failures:
+    print(f"perf_gate: {len(failures)} regression(s) beyond {tol:.0%}:", file=sys.stderr)
+    for name, ratio in failures:
+        print(f"  {name}: {ratio:0.2f}x baseline", file=sys.stderr)
+    sys.exit(1)
+print("perf_gate: no regressions beyond tolerance")
+PY
