@@ -4,6 +4,14 @@
 //! ratio around 0.6.
 //!
 //!     cargo run --release --example lp_walkthrough
+//!
+//! The printed table is the LP's white-box output: one row per backward
+//! action with its expected freeze ratio r*, the chosen duration w, and
+//! the monitored bounds [w_min, w_max] it interpolates between. Reading
+//! it against the Figure 2 narrative: actions on the critical path get
+//! r* near the budget (their time reduction moves P_d), off-path
+//! actions stay near 0 (the λ tie-breaker refuses freezing that buys no
+//! time — the paper's answer to APF's over-freezing).
 
 use timelyfreeze::graph::pipeline::PipelineDag;
 use timelyfreeze::lp::{solve_freeze_lp, FreezeLpInput, DEFAULT_LAMBDA};
@@ -29,14 +37,8 @@ fn main() {
     });
 
     println!("Phase II — Freeze Ratio Formulation (§3.2)\n");
-    let sol = solve_freeze_lp(&FreezeLpInput {
-        pdag: &pdag,
-        w_min: &w_min,
-        w_max: &w_max,
-        r_max: 0.8,
-        lambda: DEFAULT_LAMBDA,
-    })
-    .unwrap();
+    let sol = solve_freeze_lp(&FreezeLpInput::new(&pdag, &w_min, &w_max, 0.8, DEFAULT_LAMBDA))
+        .unwrap();
 
     let mut t = Table::new(
         "expected freeze ratios r* per backward action",

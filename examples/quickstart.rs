@@ -3,6 +3,15 @@
 //! the freeze LP, and read off the expected freeze ratios and speedup.
 //!
 //!     cargo run --release --example quickstart
+//!
+//! What you should see: the LP keeps forward durations fixed (they are
+//! freeze-invariant), shrinks backward durations on the critical path
+//! toward their dgrad-only floor, and reports κ < 1 — the batch-time
+//! reduction eq. 6 buys under the per-stage budget `r_max`. The ASCII
+//! Gantt at the end draws the optimized pipeline; compare its bubble
+//! structure with `examples/schedule_explorer.rs`. For the memory-aware
+//! variant of the same LP (constraint [5]), run
+//! `tfreeze lp --mem-budget 0.3` or see `benches/fig16_memory_pareto.rs`.
 
 use timelyfreeze::graph::pipeline::PipelineDag;
 use timelyfreeze::lp::{solve_freeze_lp, FreezeLpInput, DEFAULT_LAMBDA};
@@ -31,14 +40,8 @@ fn main() {
     });
 
     // 4. Solve the LP (eq. 6 with constraints [1]–[4]).
-    let sol = solve_freeze_lp(&FreezeLpInput {
-        pdag: &pdag,
-        w_min: &w_min,
-        w_max: &w_max,
-        r_max: 0.8,
-        lambda: DEFAULT_LAMBDA,
-    })
-    .expect("LP is always feasible");
+    let sol = solve_freeze_lp(&FreezeLpInput::new(&pdag, &w_min, &w_max, 0.8, DEFAULT_LAMBDA))
+        .expect("LP is always feasible");
 
     // 5. Results.
     println!("batch time: {:.1} ms → {:.1} ms (κ = {:.3})",

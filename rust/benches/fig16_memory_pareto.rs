@@ -1,0 +1,176 @@
+//! Figure 16 (this repo's extension): the memory–throughput Pareto
+//! frontier of the memory-aware freeze LP. Sweeping the per-device
+//! memory budget from the full card down to the OOM wall, the LP's
+//! per-stage freeze-ratio floor (constraint [5]) rises, forced freezing
+//! grows, and batch time *falls* — freezing bought as memory headroom
+//! instead of (only) speed. Each budget row reports the floor, the
+//! achieved per-stage ratios, the optimized batch time, and the peak
+//! stage memory, verified against the budgeted capacity.
+//!
+//! Successive budgets re-solve through one [`FreezeLpSolver`], the
+//! controller's warm-start pattern: adjacent budgets move only the [5]
+//! RHS entries once the same stages bind.
+//!
+//!     TF_BENCH_JSON=out.json cargo bench --bench fig16_memory_pareto
+
+use timelyfreeze::config::ExperimentConfig;
+use timelyfreeze::cost::{peak_inflight, CostModel, MemoryModel};
+use timelyfreeze::graph::pipeline::PipelineDag;
+use timelyfreeze::lp::{FreezeLpError, FreezeLpInput, FreezeLpSolver};
+use timelyfreeze::metrics::Recorder;
+use timelyfreeze::partition::PartitionMethod;
+use timelyfreeze::schedule::Schedule;
+use timelyfreeze::sim;
+use timelyfreeze::types::ScheduleKind;
+use timelyfreeze::util::json::Json;
+
+const GIB: f64 = (1u64 << 30) as f64;
+
+fn main() {
+    let mut rec = Recorder::default_dir();
+    for preset in ["llama-1b", "llama-8b"] {
+        let cfg = ExperimentConfig::paper_preset(preset).unwrap();
+        for schedule_kind in [ScheduleKind::OneFOneB, ScheduleKind::GPipe] {
+            sweep(&mut rec, preset, &cfg, schedule_kind);
+        }
+    }
+    rec.flush().unwrap();
+    println!("\nrows recorded under bench_out/fig16_memory_pareto.json");
+}
+
+fn sweep(rec: &mut Recorder, preset: &str, cfg: &ExperimentConfig, kind: ScheduleKind) {
+    let mut cfg = cfg.clone();
+    cfg.schedule = kind;
+    let schedule =
+        Schedule::build(kind, cfg.ranks, cfg.microbatches, cfg.effective_chunks());
+    let pdag = PipelineDag::from_schedule(&schedule);
+    let layout = sim::build_layout(&cfg, PartitionMethod::Parameter);
+    let cost = CostModel::new(
+        &cfg.model,
+        &cfg.gpu,
+        &layout.layer_stage,
+        cfg.stages(),
+        cfg.microbatch_size,
+        cfg.seq_len,
+    );
+    let mem = MemoryModel::from_presets(
+        &cfg.model,
+        &cfg.gpu,
+        &layout.layer_stage,
+        cfg.stages(),
+        cfg.microbatch_size,
+        cfg.seq_len,
+        cfg.effective_chunks(),
+    );
+    let inflight = peak_inflight(&schedule);
+    let w_min = pdag.weights(|a| cost.bounds(a).0);
+    let w_max = pdag.weights(|a| cost.bounds(a).1);
+    let tokens = cfg.tokens_per_step() as f64;
+
+    println!(
+        "\n== {} — {} ({} ranks × {} microbatches, {:.0} GiB/device) ==",
+        cfg.model.name,
+        kind.name(),
+        cfg.ranks,
+        cfg.microbatches,
+        cfg.gpu.memory_bytes / GIB
+    );
+    println!(
+        "{:>8} {:>10} {:>12} {:>12} {:>10} {:>12} {:>12}",
+        "budget", "floor̄", "mean r*", "P_d (s)", "tok/s", "peak GiB", "cap GiB"
+    );
+
+    let mut solver = FreezeLpSolver::new();
+    // Sweep from the full device down to the OOM wall in 5% steps.
+    let mut frac = 1.0f64;
+    while frac > 0.02 {
+        let m = mem.clone().scaled_capacity(frac);
+        let cap_gib = m.capacity_bytes[0] / GIB;
+        match m.required_ratios(&inflight) {
+            Err(e) => {
+                println!("{frac:>8.2} {:>10} — OOM: {e}", "—");
+                rec.push(
+                    "fig16_memory_pareto",
+                    Json::obj(vec![
+                        ("model", Json::str(preset)),
+                        ("schedule", Json::str(kind.name())),
+                        ("budget_frac", Json::num(frac)),
+                        ("feasible", Json::Bool(false)),
+                        ("reason", Json::str("over_capacity")),
+                    ]),
+                );
+                break;
+            }
+            Ok(floor) => {
+                let mut input =
+                    FreezeLpInput::new(&pdag, &w_min, &w_max, cfg.r_max, cfg.lambda);
+                if floor.iter().any(|&r| r > 0.0) {
+                    input = input.with_stage_floor(&floor);
+                }
+                let sol = match solver.solve(&input) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        // Record the stop marker (like the OOM branch)
+                        // and end the sweep — distinguishing a genuine
+                        // budget/accuracy conflict from a numeric
+                        // solver failure so the JSON doesn't mislabel.
+                        let reason = if matches!(e, FreezeLpError::FloorExceedsBudget { .. })
+                        {
+                            "floor_exceeds_r_max"
+                        } else {
+                            "lp_error"
+                        };
+                        println!("{frac:>8.2} sweep stopped ({reason}): {e}");
+                        rec.push(
+                            "fig16_memory_pareto",
+                            Json::obj(vec![
+                                ("model", Json::str(preset)),
+                                ("schedule", Json::str(kind.name())),
+                                ("budget_frac", Json::num(frac)),
+                                ("feasible", Json::Bool(false)),
+                                ("reason", Json::str(&format!("{reason}: {e}"))),
+                            ]),
+                        );
+                        break;
+                    }
+                };
+                let stage_ratios = sol.stage_ratios(&pdag);
+                let peak_gib = (0..cfg.stages())
+                    .map(|s| m.stage_bytes(s, inflight[s], stage_ratios[s]))
+                    .fold(0.0f64, f64::max)
+                    / GIB;
+                let floor_mean = floor.iter().sum::<f64>() / floor.len() as f64;
+                let mean_r = sol.mean_freezable_ratio(&pdag);
+                let tput = tokens / sol.batch_time;
+                println!(
+                    "{frac:>8.2} {floor_mean:>10.3} {mean_r:>12.3} {:>12.4} {tput:>10.0} {peak_gib:>12.2} {cap_gib:>12.2}",
+                    sol.batch_time
+                );
+                // Slack: LP rows hold to simplex tolerance (kB-scale
+                // once multiplied by multi-GB state sizes).
+                assert!(
+                    peak_gib <= cap_gib + 1e-4,
+                    "plan violates its own memory budget: {peak_gib} > {cap_gib} GiB"
+                );
+                rec.push(
+                    "fig16_memory_pareto",
+                    Json::obj(vec![
+                        ("model", Json::str(preset)),
+                        ("schedule", Json::str(kind.name())),
+                        ("budget_frac", Json::num(frac)),
+                        ("feasible", Json::Bool(true)),
+                        ("floor_mean", Json::num(floor_mean)),
+                        ("mean_ratio", Json::num(mean_r)),
+                        ("batch_time", Json::num(sol.batch_time)),
+                        ("throughput", Json::num(tput)),
+                        ("kappa", Json::num(sol.kappa())),
+                        ("peak_gib", Json::num(peak_gib)),
+                        ("cap_gib", Json::num(cap_gib)),
+                        ("lp_iterations", Json::num(sol.iterations as f64)),
+                    ]),
+                );
+            }
+        }
+        frac -= 0.05;
+    }
+}

@@ -59,14 +59,9 @@ fn main() {
             &format!("lp_solve/{}_{ranks}x{m} ({} nodes)", kind.name(), pdag.len()),
             1.0,
             || {
-                let sol = solve_freeze_lp(&FreezeLpInput {
-                    pdag: &pdag,
-                    w_min: &w_min,
-                    w_max: &w_max,
-                    r_max: 0.8,
-                    lambda: 1e-4,
-                })
-                .unwrap();
+                let sol =
+                    solve_freeze_lp(&FreezeLpInput::new(&pdag, &w_min, &w_max, 0.8, 1e-4))
+                        .unwrap();
                 std::hint::black_box(sol.batch_time);
             },
         ));
@@ -82,28 +77,14 @@ fn main() {
         let mut solver = FreezeLpSolver::new();
         let mut round = 0u64;
         // Prime the basis with one cold solve outside the timed loop.
-        solver
-            .solve(&FreezeLpInput {
-                pdag: &pdag,
-                w_min: &w_min,
-                w_max: &w_max,
-                r_max: 0.8,
-                lambda: 1e-4,
-            })
-            .unwrap();
+        solver.solve(&FreezeLpInput::new(&pdag, &w_min, &w_max, 0.8, 1e-4)).unwrap();
         record(bench_auto("lp_resolve_warm/1f1b_8x16", 1.0, || {
             // Nudge the budget each round so the re-solve is not a pure
             // no-op, like a controller tracking drifting measurements.
             round += 1;
             let r_max = 0.8 - 0.001 * (round % 8) as f64;
             let sol = solver
-                .solve(&FreezeLpInput {
-                    pdag: &pdag,
-                    w_min: &w_min,
-                    w_max: &w_max,
-                    r_max,
-                    lambda: 1e-4,
-                })
+                .solve(&FreezeLpInput::new(&pdag, &w_min, &w_max, r_max, 1e-4))
                 .unwrap();
             std::hint::black_box(sol.batch_time);
         }));

@@ -5,17 +5,25 @@
 use crate::util::stats;
 use std::time::Instant;
 
+/// Summary statistics of one timed benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark id (e.g. "lp_solve/1f1b_4x8").
     pub name: String,
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Standard deviation, seconds.
     pub stddev_s: f64,
+    /// Median seconds.
     pub p50_s: f64,
+    /// 95th-percentile seconds.
     pub p95_s: f64,
 }
 
 impl BenchResult {
+    /// One formatted row (pair with [`header`]).
     pub fn report(&self) -> String {
         format!(
             "{:<40} {:>10} {:>12} {:>12} {:>12}",
@@ -28,6 +36,7 @@ impl BenchResult {
     }
 }
 
+/// Human-friendly duration (ns/µs/ms/s auto-scaled).
 pub fn fmt_time(s: f64) -> String {
     if s < 1e-6 {
         format!("{:.1}ns", s * 1e9)
@@ -150,5 +159,7 @@ mod tests {
         assert!(r.report().contains("n=3"));
     }
 }
+/// Threaded experiment-grid driver.
 pub mod parallel;
+/// Shared config/printing for the table benches.
 pub mod tables;

@@ -14,27 +14,46 @@ use crate::util::toml::TomlDoc;
 /// needs (Table 3 column).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
+    /// Model under test.
     pub model: ModelPreset,
+    /// Testbed device.
     pub gpu: GpuPreset,
+    /// Pipeline schedule.
     pub schedule: ScheduleKind,
+    /// Freezing method.
     pub method: FreezeMethod,
     /// Physical GPU ranks (pipeline-parallel degree).
     pub ranks: usize,
     /// Model chunks per rank for Interleaved/ZBV.
     pub chunks: usize,
+    /// Microbatches per optimizer step.
     pub microbatches: usize,
     /// Samples per microbatch.
     pub microbatch_size: usize,
+    /// Sequence length (tokens per sample).
     pub seq_len: usize,
+    /// Training steps.
     pub steps: usize,
+    /// Phase boundaries {T_w, T_m, T_f}.
     pub phases: PhaseConfig,
+    /// Maximum average freeze ratio per stage (§3.2.2).
     pub r_max: f64,
+    /// LP tie-breaker weight λ.
     pub lambda: f64,
+    /// APF baseline tunables.
     pub apf: ApfConfig,
+    /// AutoFreeze baseline tunables.
     pub auto: AutoFreezeConfig,
+    /// Master RNG seed.
     pub seed: u64,
     /// Multiplicative timing-noise stddev for the simulator.
     pub timing_noise: f64,
+    /// Fraction of each device's memory available to the job
+    /// (`(0, 1]`); `None` ⇒ memory-unconstrained. When set, the runner
+    /// derives the per-stage freeze-ratio floor from
+    /// [`MemoryModel`](crate::cost::MemoryModel) and the TimelyFreeze LP
+    /// enforces it (constraint [5]).
+    pub memory_budget: Option<f64>,
 }
 
 impl ExperimentConfig {
@@ -89,6 +108,7 @@ impl ExperimentConfig {
             auto: AutoFreezeConfig { percentile: p_auto, check_interval: 10 },
             seed: 42,
             timing_noise: 0.02,
+            memory_budget: None,
         };
         Some(match key.as_str() {
             // LLaMA-3.2-1B · Alpaca-GPT4 · 4×A6000 (Table 3 col 1).
@@ -105,7 +125,7 @@ impl ExperimentConfig {
                 0.8,
                 // Paper thresholds (1e-2 … 1e-4) act on Adam-update
                 // statistics; calibrated to the simulator's SGD delta
-                // scale (EXPERIMENTS.md §Calibration).
+                // scale (docs/ARCHITECTURE.md §"Accuracy proxy").
                 0.30,
                 80.0,
             ),
@@ -173,8 +193,8 @@ impl ExperimentConfig {
     /// Apply overrides from a parsed TOML doc. Recognized keys (all
     /// optional): `experiment.{schedule, method, ranks, chunks,
     /// microbatches, microbatch_size, seq_len, steps, r_max, seed,
-    /// timing_noise}`, `phases.{warmup, monitor, freeze}`,
-    /// `apf.{threshold, alpha, check_interval}`,
+    /// timing_noise, memory_budget}`, `phases.{warmup, monitor,
+    /// freeze}`, `apf.{threshold, alpha, check_interval}`,
     /// `autofreeze.{percentile, check_interval}`.
     pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<(), String> {
         if let Some(s) = doc.get_str("experiment.schedule") {
@@ -207,6 +227,12 @@ impl ExperimentConfig {
         set_usize!("experiment.steps", self.steps);
         set_f64!("experiment.r_max", self.r_max);
         set_f64!("experiment.timing_noise", self.timing_noise);
+        if let Some(v) = doc.get_f64("experiment.memory_budget") {
+            if !(0.0..=1.0).contains(&v) || v == 0.0 {
+                return Err(format!("memory_budget {v} outside (0,1]"));
+            }
+            self.memory_budget = Some(v);
+        }
         if let Some(v) = doc.get_i64("experiment.seed") {
             self.seed = v as u64;
         }
@@ -277,6 +303,17 @@ mod tests {
         assert!(cfg.apply_toml(&doc).is_err());
         let doc = TomlDoc::parse("[phases]\nwarmup = 50\nmonitor = 10\nfreeze = 60").unwrap();
         assert!(cfg.apply_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[experiment]\nmemory_budget = 1.5").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn toml_sets_memory_budget() {
+        let mut cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+        assert_eq!(cfg.memory_budget, None);
+        let doc = TomlDoc::parse("[experiment]\nmemory_budget = 0.35").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.memory_budget, Some(0.35));
     }
 
     #[test]

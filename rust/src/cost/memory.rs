@@ -1,0 +1,346 @@
+//! Per-stage device-memory accounting and the freeze-ratio floor.
+//!
+//! A pipeline stage holds three kinds of bytes:
+//!
+//! * **weights** — the stage's parameters (resident regardless of
+//!   freezing);
+//! * **activations** — stashed between a microbatch's forward and
+//!   backward; the peak count of simultaneously in-flight microbatches
+//!   is a property of the *schedule* ([`peak_inflight`]);
+//! * **trainable state** — gradients + optimizer moments + fp32 master
+//!   copy, needed only for *unfrozen* parameters. This is the term
+//!   freezing reclaims.
+//!
+//! Given a capacity, [`MemoryModel::required_ratios`] inverts the
+//! accounting into the minimum average freeze ratio each stage needs to
+//! fit — the per-stage floor the freeze LP enforces as constraint [5]
+//! (see [`crate::lp::freeze_lp`]). This is the memory-pressure regime of
+//! "Pipeline Parallelism with Controllable Memory" (Qi et al., 2024):
+//! freezing is no longer purely a throughput knob but also a way to fit
+//! a model on smaller devices.
+
+use crate::config::{ExperimentConfig, GpuPreset, ModelPreset};
+use crate::schedule::Schedule;
+use crate::types::ActionKind;
+
+/// Bytes per parameter held by the resident weights (bf16).
+pub const WEIGHT_BYTES_PER_PARAM: f64 = 2.0;
+
+/// Bytes per *trainable* parameter beyond the weight itself: bf16
+/// gradient (2) + fp32 Adam moments (8) + fp32 master copy (4).
+/// Freezing a parameter reclaims all of it.
+pub const TRAIN_STATE_BYTES_PER_PARAM: f64 = 14.0;
+
+/// Per-stage memory accounting for one experiment configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemoryModel {
+    /// Resident weight bytes per stage.
+    pub weight_bytes: Vec<f64>,
+    /// Activation bytes stashed per in-flight microbatch per stage.
+    pub act_bytes_per_mb: Vec<f64>,
+    /// Gradient + optimizer + master bytes per stage if *nothing* is
+    /// frozen; the freeze ratio scales this term by `1 − r`.
+    pub train_state_bytes: Vec<f64>,
+    /// Device-memory capacity available to each stage.
+    pub capacity_bytes: Vec<f64>,
+}
+
+/// Why a memory budget cannot be met.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MemoryError {
+    /// Even at full freezing (`r = 1`, zero trainable state) the stage's
+    /// weights + activations exceed its capacity.
+    OverCapacity {
+        /// The offending stage.
+        stage: usize,
+        /// Bytes required at full freezing.
+        required_bytes: f64,
+        /// The stage's capacity.
+        capacity_bytes: f64,
+    },
+}
+
+impl std::fmt::Display for MemoryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MemoryError::OverCapacity { stage, required_bytes, capacity_bytes } => write!(
+                f,
+                "stage {stage} needs {:.2} GiB even fully frozen but only {:.2} GiB fit",
+                required_bytes / (1u64 << 30) as f64,
+                capacity_bytes / (1u64 << 30) as f64,
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MemoryError {}
+
+impl MemoryModel {
+    /// Derive the accounting from the paper presets: per-stage parameter
+    /// sums from the layer→stage assignment, the coarse per-layer
+    /// activation formula of
+    /// [`ModelPreset::layer_act_bytes`], and an equal slice of the GPU's
+    /// memory per virtual stage hosted on the rank (`chunks` slices).
+    pub fn from_presets(
+        model: &ModelPreset,
+        gpu: &GpuPreset,
+        layer_stage: &[usize],
+        stages: usize,
+        microbatch_size: usize,
+        seq_len: usize,
+        chunks: usize,
+    ) -> MemoryModel {
+        assert_eq!(layer_stage.len(), model.num_layers());
+        assert!(chunks >= 1, "chunks must be ≥ 1");
+        let mut weight = vec![0.0f64; stages];
+        let mut act = vec![0.0f64; stages];
+        for (l, &s) in layer_stage.iter().enumerate() {
+            weight[s] += model.layer_params()[l] * WEIGHT_BYTES_PER_PARAM;
+            act[s] += model.layer_act_bytes(l, microbatch_size, seq_len);
+        }
+        let train_state: Vec<f64> = weight
+            .iter()
+            .map(|w| w / WEIGHT_BYTES_PER_PARAM * TRAIN_STATE_BYTES_PER_PARAM)
+            .collect();
+        MemoryModel {
+            weight_bytes: weight,
+            act_bytes_per_mb: act,
+            train_state_bytes: train_state,
+            capacity_bytes: vec![gpu.memory_bytes / chunks as f64; stages],
+        }
+    }
+
+    /// Number of stages covered.
+    pub fn num_stages(&self) -> usize {
+        self.weight_bytes.len()
+    }
+
+    /// Scale every stage's capacity by `frac` — the budget-sweep knob of
+    /// the fig16 bench (`frac = 1.0` ⇒ the full device).
+    pub fn scaled_capacity(mut self, frac: f64) -> MemoryModel {
+        assert!(frac > 0.0 && frac.is_finite(), "capacity fraction must be positive");
+        for c in &mut self.capacity_bytes {
+            *c *= frac;
+        }
+        self
+    }
+
+    /// Peak bytes held by stage `s` with `inflight` microbatches in
+    /// flight and an average freeze ratio of `r`.
+    pub fn stage_bytes(&self, s: usize, inflight: usize, r: f64) -> f64 {
+        self.weight_bytes[s]
+            + self.act_bytes_per_mb[s] * inflight as f64
+            + self.train_state_bytes[s] * (1.0 - r.clamp(0.0, 1.0))
+    }
+
+    /// The minimum average freeze ratio each stage needs to fit its
+    /// capacity (0 where memory is not binding) — the LP's per-stage
+    /// floor. `inflight[s]` is the schedule's peak in-flight microbatch
+    /// count at stage `s` ([`peak_inflight`]).
+    pub fn required_ratios(&self, inflight: &[usize]) -> Result<Vec<f64>, MemoryError> {
+        assert_eq!(inflight.len(), self.num_stages(), "inflight length mismatch");
+        let mut floor = Vec::with_capacity(self.num_stages());
+        for s in 0..self.num_stages() {
+            let fixed = self.weight_bytes[s] + self.act_bytes_per_mb[s] * inflight[s] as f64;
+            let free = self.capacity_bytes[s] - fixed;
+            if free < 0.0 {
+                return Err(MemoryError::OverCapacity {
+                    stage: s,
+                    required_bytes: fixed,
+                    capacity_bytes: self.capacity_bytes[s],
+                });
+            }
+            let r = if self.train_state_bytes[s] <= free {
+                0.0
+            } else if self.train_state_bytes[s] > 0.0 {
+                1.0 - free / self.train_state_bytes[s]
+            } else {
+                0.0
+            };
+            floor.push(r.clamp(0.0, 1.0));
+        }
+        Ok(floor)
+    }
+}
+
+/// Derive the per-stage freeze-ratio floor for a configured experiment:
+/// `Ok(None)` when the config carries no memory budget, `Ok(Some(floor))`
+/// when the budgeted capacity is satisfiable, and a user-facing error
+/// when it is not — either the device overflows even fully frozen
+/// ([`MemoryError::OverCapacity`]) or a stage's floor exceeds the
+/// accuracy budget `r_max` (the LP would reject it as
+/// `FloorExceedsBudget` on every solve, so it is refused upfront here).
+///
+/// This is the single recipe shared by the simulator runner and the
+/// `tfreeze` CLI, so the `lp` preview and the simulator always agree on
+/// the floor.
+pub fn stage_floor_for(
+    cfg: &ExperimentConfig,
+    layer_stage: &[usize],
+    schedule: &Schedule,
+) -> Result<Option<Vec<f64>>, String> {
+    let Some(frac) = cfg.memory_budget else {
+        return Ok(None);
+    };
+    let mem = MemoryModel::from_presets(
+        &cfg.model,
+        &cfg.gpu,
+        layer_stage,
+        cfg.stages(),
+        cfg.microbatch_size,
+        cfg.seq_len,
+        cfg.effective_chunks(),
+    )
+    .scaled_capacity(frac);
+    let floor = mem
+        .required_ratios(&peak_inflight(schedule))
+        .map_err(|e| format!("memory budget {frac} infeasible for {}: {e}", cfg.model.name))?;
+    if let Some((s, &r)) = floor.iter().enumerate().find(|&(_, &r)| r > cfg.r_max) {
+        return Err(format!(
+            "memory budget {frac} needs a stage-{s} freeze ratio of at least {r:.3}, \
+             above the accuracy budget r_max = {} — raise the budget or r_max",
+            cfg.r_max
+        ));
+    }
+    Ok(Some(floor))
+}
+
+/// Peak number of simultaneously in-flight microbatches per stage: a
+/// microbatch occupies a stage's activation memory from its forward
+/// until the action that consumes the stashed activations completes —
+/// the fused backward, or the parameter-gradient "W" under the
+/// Zero-Bubble split ("B" alone still needs the stash for W).
+///
+/// Derived by replaying each rank's schedule order; deterministic and
+/// schedule-exact (GPipe peaks at `M` everywhere, 1F1B at
+/// `min(M, ranks − rank)`, ZBV between the two).
+pub fn peak_inflight(schedule: &Schedule) -> Vec<usize> {
+    let mut peak = vec![0usize; schedule.stages];
+    let mut live = vec![0isize; schedule.stages];
+    for order in &schedule.orders {
+        for a in order {
+            match a.kind {
+                ActionKind::Forward => {
+                    live[a.stage] += 1;
+                    peak[a.stage] = peak[a.stage].max(live[a.stage] as usize);
+                }
+                ActionKind::Backward | ActionKind::BackwardWgrad => {
+                    live[a.stage] -= 1;
+                }
+                ActionKind::BackwardDgrad => {}
+            }
+        }
+    }
+    peak
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::partition::balanced_partition;
+    use crate::types::ScheduleKind;
+
+    fn model_1b() -> (ExperimentConfig, MemoryModel) {
+        let cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+        let layer_stage = balanced_partition(&cfg.model.layer_params(), 4);
+        let mem = MemoryModel::from_presets(
+            &cfg.model,
+            &cfg.gpu,
+            &layer_stage,
+            4,
+            cfg.microbatch_size,
+            cfg.seq_len,
+            1,
+        );
+        (cfg, mem)
+    }
+
+    #[test]
+    fn preset_accounting_plausible_for_1b() {
+        let (cfg, mem) = model_1b();
+        let total_weight: f64 = mem.weight_bytes.iter().sum();
+        // ~1.24B params × 2 bytes ≈ 2.5 GB.
+        assert!((1.8e9..3.5e9).contains(&total_weight), "{total_weight}");
+        let total_state: f64 = mem.train_state_bytes.iter().sum();
+        assert!((total_state / total_weight - 7.0).abs() < 1e-9);
+        assert!(mem.act_bytes_per_mb.iter().all(|&a| a > 0.0));
+        assert!(mem.capacity_bytes.iter().all(|&c| c == cfg.gpu.memory_bytes));
+    }
+
+    #[test]
+    fn unconstrained_budget_needs_no_freezing() {
+        let (cfg, mem) = model_1b();
+        let s = Schedule::build(ScheduleKind::OneFOneB, 4, cfg.microbatches, 1);
+        let floor = mem.required_ratios(&peak_inflight(&s)).unwrap();
+        assert!(floor.iter().all(|&r| r == 0.0), "48 GB fits 1B easily: {floor:?}");
+    }
+
+    #[test]
+    fn tight_budget_forces_freezing_and_tighter_oom() {
+        let (cfg, mem) = model_1b();
+        let s = Schedule::build(ScheduleKind::OneFOneB, 4, cfg.microbatches, 1);
+        let inflight = peak_inflight(&s);
+        // Shrink capacity until the trainable state no longer fits.
+        let mut frac = 1.0;
+        let floor = loop {
+            let m = mem.clone().scaled_capacity(frac);
+            match m.required_ratios(&inflight) {
+                Ok(f) if f.iter().any(|&r| r > 0.0) => break f,
+                Ok(_) => frac *= 0.8,
+                Err(e) => panic!("walked past feasibility: {e}"),
+            }
+        };
+        assert!(floor.iter().all(|&r| (0.0..=1.0).contains(&r)));
+        // A budget below weights+activations is reported as infeasible.
+        let oom = mem.clone().scaled_capacity(1e-4);
+        assert!(matches!(
+            oom.required_ratios(&inflight),
+            Err(MemoryError::OverCapacity { .. })
+        ));
+    }
+
+    #[test]
+    fn floor_is_monotone_in_capacity() {
+        let (cfg, mem) = model_1b();
+        let s = Schedule::build(ScheduleKind::GPipe, 4, cfg.microbatches, 1);
+        let inflight = peak_inflight(&s);
+        let mut prev = vec![1.0f64; 4];
+        for frac in [0.02, 0.05, 0.1, 0.2, 0.5, 1.0] {
+            let m = mem.clone().scaled_capacity(frac);
+            if let Ok(floor) = m.required_ratios(&inflight) {
+                for (a, b) in floor.iter().zip(&prev) {
+                    assert!(a <= b, "floor must shrink as capacity grows");
+                }
+                prev = floor;
+            }
+        }
+        assert!(prev.iter().all(|&r| r == 0.0));
+    }
+
+    #[test]
+    fn peak_inflight_matches_schedule_theory() {
+        // GPipe: every forward of the batch is in flight before the
+        // first backward → peak M at every stage.
+        let s = Schedule::build(ScheduleKind::GPipe, 4, 8, 1);
+        assert_eq!(peak_inflight(&s), vec![8, 8, 8, 8]);
+        // 1F1B: stage s admits min(M, ranks − s) in-flight microbatches.
+        let s = Schedule::build(ScheduleKind::OneFOneB, 4, 8, 1);
+        assert_eq!(peak_inflight(&s), vec![4, 3, 2, 1]);
+        // ZBV: bounded by M, at least 1, defined for every stage.
+        let s = Schedule::build(ScheduleKind::ZeroBubbleV, 4, 8, 2);
+        let p = peak_inflight(&s);
+        assert_eq!(p.len(), 8);
+        assert!(p.iter().all(|&x| (1..=8).contains(&x)), "{p:?}");
+    }
+
+    #[test]
+    fn stage_bytes_linear_in_ratio() {
+        let (_, mem) = model_1b();
+        let lo = mem.stage_bytes(0, 4, 1.0);
+        let hi = mem.stage_bytes(0, 4, 0.0);
+        let mid = mem.stage_bytes(0, 4, 0.5);
+        assert!(hi > lo);
+        assert!((mid - (lo + hi) / 2.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,34 @@
+//! First-class cost subsystem: execution-time and memory models feeding
+//! the pipeline DAG, the freeze LP, and the discrete-event simulator.
+//!
+//! Three concerns live here, one per submodule:
+//!
+//! * [`model`] — [`CostModel`]: per-stage heterogeneous forward /
+//!   backward (dgrad + wgrad) / optimizer times, per-stage node-charged
+//!   communication, and P2P link costs for cross-rank DAG edges. The
+//!   analytic constructor ([`CostModel::new`]) derives stage times from a
+//!   model × GPU preset exactly as the pre-refactor `sim::cost` did —
+//!   the uniform path is bit-identical (guarded by
+//!   `tests/cost_model.rs`).
+//! * [`profile`] — [`CostProfile`]: hand-specified stage-shape presets
+//!   (uniform, skewed first/last stage, profiled-from-table) for
+//!   heterogeneous-cluster studies that have no preset hardware model.
+//! * [`memory`] — [`MemoryModel`] and [`peak_inflight`]: per-stage
+//!   activation / weight / trainable-state byte accounting against a
+//!   device capacity, producing the per-stage *freeze-ratio floor* the
+//!   LP consumes as constraint [5] (freezing chosen to fit a memory
+//!   budget, not only to cut batch time).
+//!
+//! The split matters for the regimes "Pipeline Parallelism with
+//! Controllable Memory" (Qi et al., 2024) and "OptPipe" (Li et al.,
+//! 2025) study: once stages are heterogeneous or memory-tight, schedules
+//! and freeze plans genuinely differ, and a flat per-action scalar model
+//! cannot see it.
+
+pub mod memory;
+pub mod model;
+pub mod profile;
+
+pub use memory::{peak_inflight, stage_floor_for, MemoryError, MemoryModel};
+pub use model::CostModel;
+pub use profile::{CostProfile, StageProfile};

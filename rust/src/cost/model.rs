@@ -1,0 +1,364 @@
+//! The per-stage execution-time model: action duration bounds
+//! `[w_min, w_max]` for a model × GPU × partition (or a hand-written
+//! [`CostProfile`](crate::cost::CostProfile)), feeding the discrete-event
+//! simulator and the freeze LP.
+//!
+//! The decomposition follows Figure 3: forward time is freeze-invariant;
+//! backward time splits into the activation-gradient part ("B",
+//! irreducible) and the parameter-gradient part ("W", scaling with
+//! 1 − freeze-ratio). Inter-stage communication is charged either to the
+//! receiving action (`comm`, the analytic preset path) or to the DAG edge
+//! that crosses ranks (`p2p` link costs, consumed via
+//! [`PipelineDag::p2p_edge_costs`](crate::graph::pipeline::PipelineDag::p2p_edge_costs)).
+
+use crate::config::{GpuPreset, ModelPreset};
+use crate::cost::memory::MemoryModel;
+use crate::types::{Action, ActionKind};
+
+/// Cost model for one experiment configuration: per-stage action
+/// durations, communication, and (optionally) memory accounting.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Number of virtual pipeline stages this model covers.
+    pub stages: usize,
+    /// Forward seconds per stage (freeze-invariant).
+    fwd: Vec<f64>,
+    /// Activation-gradient ("B") seconds per stage (freeze-invariant).
+    dgrad: Vec<f64>,
+    /// Parameter-gradient ("W") seconds per stage (removed by freezing).
+    wgrad: Vec<f64>,
+    /// Optimizer-step seconds per stage, charged once per batch as a
+    /// tail barrier (zero for the analytic presets).
+    optimizer: Vec<f64>,
+    /// Node-charged communication seconds per stage (every action at
+    /// stage `s` pays `comm[s]` — the analytic preset convention).
+    comm: Vec<f64>,
+    /// Fixed per-action overhead (kernel launch + sync), seconds.
+    overhead: f64,
+    /// P2P link cost between adjacent stages: `p2p[s]` is the seconds to
+    /// cross the `s ↔ s+1` boundary in either direction (activations
+    /// down, gradients back up). Empty ⇒ no edge-charged communication.
+    p2p: Vec<f64>,
+    /// Optional per-stage memory accounting (activation / weight /
+    /// trainable-state bytes against a capacity).
+    memory: Option<MemoryModel>,
+}
+
+impl CostModel {
+    /// Build from a model preset, a GPU preset, and a layer→virtual-stage
+    /// assignment (`layer_stage[l] ∈ 0..stages`).
+    ///
+    /// This is the pre-refactor `sim::cost::CostModel::new` path, kept
+    /// bit-identical: communication is node-charged (uniform per stage),
+    /// `p2p` is empty, optimizer time is zero, and no memory model is
+    /// attached (add one with [`CostModel::with_memory`]).
+    pub fn new(
+        model: &ModelPreset,
+        gpu: &GpuPreset,
+        layer_stage: &[usize],
+        stages: usize,
+        microbatch_size: usize,
+        seq_len: usize,
+    ) -> CostModel {
+        assert_eq!(layer_stage.len(), model.num_layers());
+        let tokens = (microbatch_size * seq_len) as f64;
+        let mut fwd_flops = vec![0.0f64; stages];
+        let mut dgrad_flops = vec![0.0f64; stages];
+        let mut wgrad_flops = vec![0.0f64; stages];
+        for (l, &s) in layer_stage.iter().enumerate() {
+            fwd_flops[s] += model.layer_fwd_flops(l, tokens, seq_len);
+            dgrad_flops[s] += model.layer_dgrad_flops(l, tokens, seq_len);
+            wgrad_flops[s] += model.layer_wgrad_flops(l, tokens);
+        }
+        let c = gpu.compute_rate * model.compute_efficiency;
+        let comm = model.boundary_bytes(microbatch_size, seq_len) / gpu.link_bandwidth;
+        CostModel {
+            stages,
+            fwd: fwd_flops.iter().map(|f| f / c).collect(),
+            dgrad: dgrad_flops.iter().map(|f| f / c).collect(),
+            wgrad: wgrad_flops.iter().map(|f| f / c).collect(),
+            optimizer: vec![0.0; stages],
+            comm: vec![comm; stages],
+            overhead: gpu.overhead,
+            p2p: Vec::new(),
+            memory: None,
+        }
+    }
+
+    /// Build directly from per-stage components. `p2p` must be empty or
+    /// hold `stages − 1` boundary costs; the other vectors must have one
+    /// entry per stage.
+    pub fn from_stage_times(
+        fwd: Vec<f64>,
+        dgrad: Vec<f64>,
+        wgrad: Vec<f64>,
+        optimizer: Vec<f64>,
+        comm: Vec<f64>,
+        overhead: f64,
+        p2p: Vec<f64>,
+    ) -> CostModel {
+        let stages = fwd.len();
+        assert!(stages > 0, "need at least one stage");
+        assert_eq!(dgrad.len(), stages, "dgrad length mismatch");
+        assert_eq!(wgrad.len(), stages, "wgrad length mismatch");
+        assert_eq!(optimizer.len(), stages, "optimizer length mismatch");
+        assert_eq!(comm.len(), stages, "comm length mismatch");
+        assert!(
+            p2p.is_empty() || p2p.len() == stages - 1,
+            "p2p must cover the {} stage boundaries, got {}",
+            stages - 1,
+            p2p.len()
+        );
+        for v in fwd
+            .iter()
+            .chain(&dgrad)
+            .chain(&wgrad)
+            .chain(&optimizer)
+            .chain(&comm)
+            .chain(&p2p)
+            .chain(std::iter::once(&overhead))
+        {
+            assert!(v.is_finite() && *v >= 0.0, "cost entries must be finite and ≥ 0");
+        }
+        CostModel { stages, fwd, dgrad, wgrad, optimizer, comm, overhead, p2p, memory: None }
+    }
+
+    /// Attach per-stage memory accounting (consumed by
+    /// [`MemoryModel::required_ratios`] and the fig16 bench).
+    pub fn with_memory(mut self, memory: MemoryModel) -> CostModel {
+        assert_eq!(memory.num_stages(), self.stages, "memory model stage count mismatch");
+        self.memory = Some(memory);
+        self
+    }
+
+    /// The attached memory model, if any.
+    pub fn memory(&self) -> Option<&MemoryModel> {
+        self.memory.as_ref()
+    }
+
+    /// Duration bounds (w_min, w_max) of an action — eq. 3 with Figure 3's
+    /// decomposition.
+    pub fn bounds(&self, a: Action) -> (f64, f64) {
+        let s = a.stage;
+        assert!(s < self.stages, "stage {s} out of range");
+        match a.kind {
+            ActionKind::Forward => {
+                let w = self.fwd[s] + self.overhead + self.comm[s];
+                (w, w)
+            }
+            ActionKind::Backward => {
+                let lo = self.dgrad[s] + self.overhead + self.comm[s];
+                (lo, lo + self.wgrad[s])
+            }
+            ActionKind::BackwardDgrad => {
+                let w = self.dgrad[s] + self.overhead + self.comm[s];
+                (w, w)
+            }
+            ActionKind::BackwardWgrad => {
+                let lo = self.overhead;
+                (lo, lo + self.wgrad[s])
+            }
+        }
+    }
+
+    /// Duration at a given actual freeze ratio (linear interpolation —
+    /// eq. 4 inverted, verified empirically in Appendix I / Figure 15).
+    pub fn duration(&self, a: Action, afr: f64) -> f64 {
+        let (lo, hi) = self.bounds(a);
+        hi - afr.clamp(0.0, 1.0) * (hi - lo)
+    }
+
+    /// P2P cost of a DAG edge from `from_stage` to `to_stage`: the link
+    /// cost of the boundary between adjacent stages, zero otherwise (and
+    /// zero when no P2P costs are configured). Callers that know rank
+    /// placement should suppress same-rank crossings — see
+    /// [`PipelineDag::p2p_edge_costs`](crate::graph::pipeline::PipelineDag::p2p_edge_costs).
+    pub fn p2p(&self, from_stage: usize, to_stage: usize) -> f64 {
+        if self.p2p.is_empty() {
+            return 0.0;
+        }
+        let boundary = if to_stage == from_stage + 1 {
+            from_stage
+        } else if from_stage == to_stage + 1 {
+            to_stage
+        } else {
+            return 0.0;
+        };
+        self.p2p.get(boundary).copied().unwrap_or(0.0)
+    }
+
+    /// Whether any P2P link costs are configured (i.e. communication is
+    /// edge-charged rather than node-charged).
+    pub fn has_p2p(&self) -> bool {
+        self.p2p.iter().any(|&c| c > 0.0)
+    }
+
+    /// Optimizer-step barrier added once per batch: the slowest stage's
+    /// optimizer time (stages step in parallel after the last backward).
+    /// Zero for the analytic presets.
+    pub fn optimizer_tail(&self) -> f64 {
+        self.optimizer.iter().cloned().fold(0.0f64, f64::max)
+    }
+
+    /// Forward seconds of one stage (freeze-invariant).
+    pub fn stage_fwd(&self, s: usize) -> f64 {
+        self.fwd[s]
+    }
+
+    /// Activation-gradient seconds of one stage (freeze-invariant).
+    pub fn stage_dgrad(&self, s: usize) -> f64 {
+        self.dgrad[s]
+    }
+
+    /// Parameter-gradient seconds of one stage (removed by freezing).
+    pub fn stage_wgrad(&self, s: usize) -> f64 {
+        self.wgrad[s]
+    }
+
+    /// Total *nominal* model FLOPs per token (2 fwd + 4 bwd per param) —
+    /// the MFU numerator convention.
+    pub fn nominal_flops_per_token(model: &ModelPreset) -> f64 {
+        6.0 * model.total_params()
+    }
+
+    /// Per-layer forward+backward seconds (used by the time-based
+    /// partition heuristic).
+    pub fn layer_times(
+        model: &ModelPreset,
+        gpu: &GpuPreset,
+        microbatch_size: usize,
+        seq_len: usize,
+    ) -> Vec<f64> {
+        let tokens = (microbatch_size * seq_len) as f64;
+        (0..model.num_layers())
+            .map(|l| {
+                (model.layer_fwd_flops(l, tokens, seq_len)
+                    + model.layer_dgrad_flops(l, tokens, seq_len)
+                    + model.layer_wgrad_flops(l, tokens))
+                    / (gpu.compute_rate * model.compute_efficiency)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::partition::balanced_partition;
+
+    fn model_8b() -> (ModelPreset, GpuPreset, CostModel) {
+        let cfg = ExperimentConfig::paper_preset("llama-8b").unwrap();
+        let layer_stage = balanced_partition(&cfg.model.layer_params(), 4);
+        let cm = CostModel::new(&cfg.model, &cfg.gpu, &layer_stage, 4, cfg.microbatch_size, cfg.seq_len);
+        (cfg.model, cfg.gpu, cm)
+    }
+
+    #[test]
+    fn forward_bounds_are_fixed() {
+        let (_, _, cm) = model_8b();
+        let (lo, hi) = cm.bounds(Action::f(0, 1));
+        assert_eq!(lo, hi);
+        assert!(lo > 0.0);
+    }
+
+    #[test]
+    fn backward_bounds_straddle_wgrad() {
+        let (_, _, cm) = model_8b();
+        let (lo, hi) = cm.bounds(Action::b(0, 1));
+        assert!(hi > lo, "wgrad must be freezable");
+        // Full freeze removes roughly half the backward (dgrad ≈ fwd,
+        // wgrad ≈ slightly less than fwd).
+        let ratio = lo / hi;
+        assert!((0.35..0.75).contains(&ratio), "dgrad share {ratio}");
+    }
+
+    #[test]
+    fn duration_interpolates_linearly() {
+        let (_, _, cm) = model_8b();
+        let a = Action::b(0, 2);
+        let (lo, hi) = cm.bounds(a);
+        assert_eq!(cm.duration(a, 0.0), hi);
+        assert_eq!(cm.duration(a, 1.0), lo);
+        let mid = cm.duration(a, 0.5);
+        assert!((mid - (lo + hi) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wgrad_action_nearly_free_when_frozen() {
+        let (_, _, cm) = model_8b();
+        let (lo, hi) = cm.bounds(Action::bw(0, 0));
+        assert!(lo < hi * 0.05, "frozen W should be ≈ overhead only");
+    }
+
+    #[test]
+    fn step_time_in_plausible_range_for_8b() {
+        // Sanity: GPipe batch time for 8B on 4×H200 should be O(seconds)
+        // (paper: 65536 tokens / 5737 tok/s ≈ 11 s per step).
+        use crate::graph::pipeline::PipelineDag;
+        use crate::schedule::Schedule;
+        use crate::types::ScheduleKind;
+        let (_, _, cm) = model_8b();
+        let s = Schedule::build(ScheduleKind::GPipe, 4, 8, 1);
+        let g = PipelineDag::from_schedule(&s);
+        let w = g.weights(|a| cm.bounds(a).1);
+        let t = g.batch_time(&w);
+        assert!((2.0..40.0).contains(&t), "step time {t}s implausible");
+    }
+
+    #[test]
+    fn layer_times_positive_and_sized() {
+        let cfg = ExperimentConfig::paper_preset("convnextv2-l").unwrap();
+        let times = CostModel::layer_times(&cfg.model, &cfg.gpu, cfg.microbatch_size, cfg.seq_len);
+        assert_eq!(times.len(), cfg.model.num_layers());
+        assert!(times.iter().all(|&t| t > 0.0));
+        // ConvNeXt skew shows up in time too.
+        let max = times.iter().cloned().fold(0.0f64, f64::max);
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 10.0);
+    }
+
+    #[test]
+    fn analytic_model_has_no_p2p_or_optimizer_tail() {
+        let (_, _, cm) = model_8b();
+        assert!(!cm.has_p2p());
+        assert_eq!(cm.p2p(0, 1), 0.0);
+        assert_eq!(cm.optimizer_tail(), 0.0);
+    }
+
+    #[test]
+    fn from_stage_times_p2p_lookup() {
+        let cm = CostModel::from_stage_times(
+            vec![1.0, 2.0, 3.0],
+            vec![1.0, 2.0, 3.0],
+            vec![0.5, 1.0, 1.5],
+            vec![0.1, 0.3, 0.2],
+            vec![0.0; 3],
+            0.0,
+            vec![0.25, 0.75],
+        );
+        assert_eq!(cm.p2p(0, 1), 0.25);
+        assert_eq!(cm.p2p(1, 0), 0.25);
+        assert_eq!(cm.p2p(2, 1), 0.75);
+        assert_eq!(cm.p2p(0, 2), 0.0, "non-adjacent stages share no link");
+        assert!(cm.has_p2p());
+        assert_eq!(cm.optimizer_tail(), 0.3);
+        let (lo, hi) = cm.bounds(Action::b(0, 2));
+        assert_eq!(lo, 3.0);
+        assert_eq!(hi, 4.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_stage_times_rejects_bad_p2p_len() {
+        CostModel::from_stage_times(
+            vec![1.0, 1.0],
+            vec![1.0, 1.0],
+            vec![1.0, 1.0],
+            vec![0.0, 0.0],
+            vec![0.0, 0.0],
+            0.0,
+            vec![0.1, 0.2], // should be 1 boundary
+        );
+    }
+}

@@ -1,0 +1,211 @@
+//! Hand-specified stage-shape presets for heterogeneity studies.
+//!
+//! The analytic [`CostModel::new`](crate::cost::CostModel::new) path
+//! derives stage times from a hardware preset; a [`CostProfile`] instead
+//! states the shape directly — uniform stages, a skewed first or last
+//! stage (embedding/head imbalance, a straggler device), or a fully
+//! profiled per-stage table (e.g. transcribed from a cluster profiler).
+//! [`CostProfile::to_model`] lowers any profile to a [`CostModel`].
+
+use crate::cost::CostModel;
+
+/// One row of a profiled-from-table cost specification: the measured
+/// per-microbatch seconds of a single pipeline stage.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StageProfile {
+    /// Forward seconds (freeze-invariant).
+    pub fwd: f64,
+    /// Activation-gradient ("B") seconds (freeze-invariant).
+    pub dgrad: f64,
+    /// Parameter-gradient ("W") seconds (removed by freezing).
+    pub wgrad: f64,
+    /// Optimizer-step seconds, charged once per batch as a tail barrier.
+    pub optimizer: f64,
+    /// P2P cost of the link to the *next* stage (activations down,
+    /// gradients back up). Ignored for the last stage.
+    pub link: f64,
+}
+
+impl StageProfile {
+    /// A compute-only row: no optimizer tail, no link cost.
+    pub fn compute(fwd: f64, dgrad: f64, wgrad: f64) -> StageProfile {
+        StageProfile { fwd, dgrad, wgrad, optimizer: 0.0, link: 0.0 }
+    }
+}
+
+/// A stage-shape preset, lowered to a [`CostModel`] by
+/// [`CostProfile::to_model`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum CostProfile {
+    /// Every stage identical — the PR 1 flat-scalar setting. With
+    /// `link == 0` the resulting model reproduces flat per-action
+    /// weights bit-for-bit (guarded by `tests/cost_model.rs`).
+    Uniform {
+        /// Forward seconds per stage.
+        fwd: f64,
+        /// Activation-gradient seconds per stage.
+        dgrad: f64,
+        /// Parameter-gradient seconds per stage.
+        wgrad: f64,
+        /// P2P cost of every stage boundary.
+        link: f64,
+    },
+    /// Uniform except one end of the pipeline, whose compute entries are
+    /// multiplied by `skew` — the embedding-heavy first stage or the
+    /// head/loss-heavy last stage of real partitions, or a straggler
+    /// device in a heterogeneous cluster.
+    Skewed {
+        /// Forward seconds of a regular stage.
+        fwd: f64,
+        /// Activation-gradient seconds of a regular stage.
+        dgrad: f64,
+        /// Parameter-gradient seconds of a regular stage.
+        wgrad: f64,
+        /// P2P cost of every stage boundary.
+        link: f64,
+        /// Multiplier applied to the skewed stage's fwd/dgrad/wgrad.
+        skew: f64,
+        /// `false` ⇒ the first stage is skewed; `true` ⇒ the last.
+        last: bool,
+    },
+    /// Fully profiled per-stage table. `to_model` requires exactly one
+    /// row per stage.
+    Profiled(
+        /// Measured per-stage rows, stage 0 first.
+        Vec<StageProfile>,
+    ),
+}
+
+impl CostProfile {
+    /// Uniform stages with the given per-action seconds and boundary
+    /// link cost.
+    pub fn uniform(fwd: f64, dgrad: f64, wgrad: f64, link: f64) -> CostProfile {
+        CostProfile::Uniform { fwd, dgrad, wgrad, link }
+    }
+
+    /// Uniform stages with stage 0's compute scaled by `skew`.
+    pub fn skewed_first(fwd: f64, dgrad: f64, wgrad: f64, link: f64, skew: f64) -> CostProfile {
+        CostProfile::Skewed { fwd, dgrad, wgrad, link, skew, last: false }
+    }
+
+    /// Uniform stages with the last stage's compute scaled by `skew`.
+    pub fn skewed_last(fwd: f64, dgrad: f64, wgrad: f64, link: f64, skew: f64) -> CostProfile {
+        CostProfile::Skewed { fwd, dgrad, wgrad, link, skew, last: true }
+    }
+
+    /// A profiled-from-table specification (one row per stage).
+    pub fn profiled(rows: Vec<StageProfile>) -> CostProfile {
+        CostProfile::Profiled(rows)
+    }
+
+    /// Lower this profile to a [`CostModel`] over `stages` stages.
+    /// Profiles carry no kernel-launch overhead and no node-charged
+    /// communication: all transfer cost is on the P2P links, so DAG
+    /// weights are pure compute and edges carry the wire time.
+    ///
+    /// Panics if `stages == 0` or a profiled table's row count does not
+    /// match `stages`.
+    pub fn to_model(&self, stages: usize) -> CostModel {
+        assert!(stages > 0, "need at least one stage");
+        let rows: Vec<StageProfile> = match self {
+            CostProfile::Uniform { fwd, dgrad, wgrad, link } => (0..stages)
+                .map(|_| StageProfile {
+                    fwd: *fwd,
+                    dgrad: *dgrad,
+                    wgrad: *wgrad,
+                    optimizer: 0.0,
+                    link: *link,
+                })
+                .collect(),
+            CostProfile::Skewed { fwd, dgrad, wgrad, link, skew, last } => (0..stages)
+                .map(|s| {
+                    let hot = if *last { s + 1 == stages } else { s == 0 };
+                    let m = if hot { *skew } else { 1.0 };
+                    StageProfile {
+                        fwd: fwd * m,
+                        dgrad: dgrad * m,
+                        wgrad: wgrad * m,
+                        optimizer: 0.0,
+                        link: *link,
+                    }
+                })
+                .collect(),
+            CostProfile::Profiled(rows) => {
+                assert_eq!(
+                    rows.len(),
+                    stages,
+                    "profiled table has {} rows for {} stages",
+                    rows.len(),
+                    stages
+                );
+                rows.clone()
+            }
+        };
+        let p2p: Vec<f64> = rows.iter().take(stages - 1).map(|r| r.link).collect();
+        CostModel::from_stage_times(
+            rows.iter().map(|r| r.fwd).collect(),
+            rows.iter().map(|r| r.dgrad).collect(),
+            rows.iter().map(|r| r.wgrad).collect(),
+            rows.iter().map(|r| r.optimizer).collect(),
+            vec![0.0; stages],
+            0.0,
+            if p2p.iter().any(|&c| c > 0.0) { p2p } else { Vec::new() },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Action;
+
+    #[test]
+    fn uniform_profile_is_flat() {
+        let cm = CostProfile::uniform(1.0, 1.3, 0.9, 0.0).to_model(4);
+        for s in 0..4 {
+            assert_eq!(cm.bounds(Action::f(0, s)), (1.0, 1.0));
+            assert_eq!(cm.bounds(Action::b(0, s)), (1.3, 1.3 + 0.9));
+        }
+        assert!(!cm.has_p2p());
+    }
+
+    #[test]
+    fn skewed_first_scales_stage_zero_only() {
+        let cm = CostProfile::skewed_first(1.0, 1.0, 1.0, 0.0, 3.0).to_model(4);
+        assert_eq!(cm.stage_fwd(0), 3.0);
+        assert_eq!(cm.stage_fwd(1), 1.0);
+        assert_eq!(cm.stage_wgrad(3), 1.0);
+        let cm = CostProfile::skewed_last(1.0, 1.0, 1.0, 0.0, 2.0).to_model(4);
+        assert_eq!(cm.stage_fwd(0), 1.0);
+        assert_eq!(cm.stage_fwd(3), 2.0);
+    }
+
+    #[test]
+    fn profiled_table_maps_rows_and_links() {
+        let rows = vec![
+            StageProfile { fwd: 1.0, dgrad: 1.0, wgrad: 0.5, optimizer: 0.2, link: 0.1 },
+            StageProfile { fwd: 2.0, dgrad: 2.0, wgrad: 1.0, optimizer: 0.4, link: 0.3 },
+            StageProfile::compute(3.0, 3.0, 1.5),
+        ];
+        let cm = CostProfile::profiled(rows).to_model(3);
+        assert_eq!(cm.stage_fwd(2), 3.0);
+        assert_eq!(cm.p2p(0, 1), 0.1);
+        assert_eq!(cm.p2p(2, 1), 0.3);
+        assert_eq!(cm.optimizer_tail(), 0.4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn profiled_table_rejects_row_mismatch() {
+        CostProfile::profiled(vec![StageProfile::compute(1.0, 1.0, 1.0)]).to_model(2);
+    }
+
+    #[test]
+    fn uniform_link_becomes_edge_costs() {
+        let cm = CostProfile::uniform(1.0, 1.0, 1.0, 0.25).to_model(3);
+        assert!(cm.has_p2p());
+        assert_eq!(cm.p2p(1, 2), 0.25);
+        // Node-charged comm stays zero: edges carry the wire time.
+        assert_eq!(cm.bounds(Action::f(0, 0)), (1.0, 1.0));
+    }
+}

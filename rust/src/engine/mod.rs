@@ -6,7 +6,7 @@
 //!
 //! Scope: combined-backward schedules (GPipe, 1F1B) on `stages == ranks`;
 //! the split-backward ZBV / Interleaved variants are evaluated in the
-//! simulator (DESIGN.md §5).
+//! simulator (docs/ARCHITECTURE.md).
 
 pub mod params;
 pub mod worker;
@@ -141,6 +141,7 @@ pub fn train(cfg: &EngineConfig) -> Result<TrainReport> {
         lambda: cfg.lambda,
         apf: cfg.apf.clone(),
         auto: cfg.auto.clone(),
+        stage_floor: None,
     };
     let mut controller = factory.build(cfg.method, &schedule, &layout);
     let lr = LrSchedule::cosine(cfg.base_lr, cfg.phases.t_warmup, cfg.steps);

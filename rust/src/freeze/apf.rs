@@ -16,6 +16,7 @@ use crate::freeze::layout::ModelLayout;
 use crate::freeze::{Controller, FreezePlan, PhaseConfig, UnitDelta};
 use crate::types::{Action, ActionKind, FreezeMethod};
 
+/// APF tunables (eq. 2 and the check cadence).
 #[derive(Clone, Debug)]
 pub struct ApfConfig {
     /// Freezing threshold T_APF (Table 3: 1e-4 … 1e-2 depending on task).
@@ -32,6 +33,7 @@ impl Default for ApfConfig {
     }
 }
 
+/// The APF baseline controller state.
 pub struct Apf {
     cfg: ApfConfig,
     layout: ModelLayout,
@@ -53,6 +55,7 @@ pub struct Apf {
 }
 
 impl Apf {
+    /// A fresh controller (no unit frozen, scores at 1.0).
     pub fn new(cfg: ApfConfig, layout: ModelLayout, phases: PhaseConfig) -> Apf {
         let n = layout.num_units();
         let stages = layout.num_stages;
@@ -105,10 +108,12 @@ impl Apf {
             .collect()
     }
 
+    /// The current frozen-unit mask.
     pub fn frozen_mask(&self) -> &[bool] {
         &self.frozen
     }
 
+    /// Latest per-unit effective perturbation scores.
     pub fn scores(&self) -> &[f64] {
         &self.score
     }

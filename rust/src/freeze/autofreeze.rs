@@ -14,6 +14,7 @@ use crate::freeze::{Controller, FreezePlan, PhaseConfig, UnitDelta};
 use crate::types::{Action, FreezeMethod};
 use crate::util::stats::percentile;
 
+/// AutoFreeze tunables (eq. 1 percentile and check cadence).
 #[derive(Clone, Debug)]
 pub struct AutoFreezeConfig {
     /// Percentile P_Auto (Table 3 uses 80%).
@@ -28,6 +29,7 @@ impl Default for AutoFreezeConfig {
     }
 }
 
+/// The AutoFreeze baseline controller state.
 pub struct AutoFreeze {
     cfg: AutoFreezeConfig,
     layout: ModelLayout,
@@ -47,6 +49,7 @@ pub struct AutoFreeze {
 }
 
 impl AutoFreeze {
+    /// A fresh controller (empty prefix).
     pub fn new(cfg: AutoFreezeConfig, layout: ModelLayout, phases: PhaseConfig) -> AutoFreeze {
         let layers = layout.num_layers();
         let units = layout.num_units();
@@ -66,14 +69,17 @@ impl AutoFreeze {
         }
     }
 
+    /// Declare the batch's actions so plans can enumerate backwards.
     pub fn set_actions(&mut self, actions: Vec<Action>) {
         self.actions = actions;
     }
 
+    /// Number of layers in the frozen prefix.
     pub fn frozen_prefix(&self) -> usize {
         self.prefix
     }
 
+    /// Latest per-layer norm-change scores.
     pub fn layer_scores(&self) -> &[f64] {
         &self.scores
     }
@@ -124,6 +130,7 @@ impl AutoFreeze {
         }
     }
 
+    /// Frozen-unit mask implied by the prefix.
     pub fn frozen_mask(&self) -> Vec<bool> {
         (0..self.layout.num_units())
             .map(|u| self.layout.unit_layer[u] < self.prefix)

@@ -15,12 +15,14 @@ enum Metric {
     Auto(AutoFreeze),
 }
 
+/// A TimelyFreeze budget paired with a metric-driven selector.
 pub struct Hybrid {
     timely: TimelyFreeze,
     metric: Metric,
 }
 
 impl Hybrid {
+    /// TimelyFreeze+APF (Table 1's best-accuracy hybrid).
     pub fn with_apf(timely: TimelyFreeze, cfg: ApfConfig, layout: ModelLayout) -> Hybrid {
         // Reuse the Timely phase boundaries so the metric's warm-up gate
         // matches the budget controller's.
@@ -30,6 +32,7 @@ impl Hybrid {
         Hybrid { timely, metric: Metric::Apf(apf) }
     }
 
+    /// TimelyFreeze+AutoFreeze.
     pub fn with_autofreeze(
         timely: TimelyFreeze,
         cfg: AutoFreezeConfig,
@@ -39,6 +42,7 @@ impl Hybrid {
         Hybrid { timely, metric: Metric::Auto(auto) }
     }
 
+    /// The wrapped budget controller.
     pub fn timely(&self) -> &TimelyFreeze {
         &self.timely
     }

@@ -9,6 +9,7 @@
 //! * A **stage** (virtual pipeline stage) owns a contiguous range of
 //!   layers, assigned by a partitioning heuristic (`crate::partition`).
 
+/// The unit ↔ layer ↔ stage bookkeeping map (see the module docs).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelLayout {
     /// Parameter count per unit.
@@ -64,10 +65,12 @@ impl ModelLayout {
         ModelLayout::new(unit_params, unit_layer, layer_stage, num_stages)
     }
 
+    /// Number of bookkeeping units.
     pub fn num_units(&self) -> usize {
         self.unit_params.len()
     }
 
+    /// Number of model layers.
     pub fn num_layers(&self) -> usize {
         self.layer_stage.len()
     }

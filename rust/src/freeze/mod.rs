@@ -53,6 +53,7 @@ pub struct PhaseConfig {
 }
 
 impl PhaseConfig {
+    /// Validated construction; panics unless `T_w < T_m < T_f`.
     pub fn new(t_warmup: usize, t_monitor: usize, t_freeze: usize) -> Self {
         assert!(t_warmup < t_monitor, "T_w must precede T_m");
         assert!(t_monitor < t_freeze, "T_m must precede T_f");
@@ -92,10 +93,12 @@ pub struct FreezePlan {
 }
 
 impl FreezePlan {
+    /// The empty plan: freeze nothing.
     pub fn none() -> FreezePlan {
         FreezePlan::default()
     }
 
+    /// The plan's AFR for one action (0 when absent).
     pub fn ratio_of(&self, a: &Action) -> f64 {
         self.afr.get(a).copied().unwrap_or(0.0)
     }
@@ -112,6 +115,7 @@ impl FreezePlan {
 
 /// Common interface of all freezing methods.
 pub trait Controller: Send {
+    /// Which method this controller implements.
     fn method(&self) -> FreezeMethod;
 
     /// Produce the freeze plan for step `t` (1-based, matching the
@@ -137,14 +141,26 @@ pub trait Controller: Send {
 /// config.
 #[derive(Clone, Debug)]
 pub struct ControllerFactory {
+    /// Phase boundaries shared by every controller.
     pub phases: PhaseConfig,
+    /// TimelyFreeze budget: maximum average freeze ratio per stage.
     pub r_max: f64,
+    /// TimelyFreeze LP tie-breaker weight.
     pub lambda: f64,
+    /// APF baseline tunables.
     pub apf: ApfConfig,
+    /// AutoFreeze baseline tunables.
     pub auto: AutoFreezeConfig,
+    /// Per-stage freeze-ratio floor from memory accounting
+    /// ([`MemoryModel::required_ratios`](crate::cost::MemoryModel::required_ratios)),
+    /// honoured by the TimelyFreeze family (constraint [5]). The
+    /// metric-only baselines are memory-blind — exactly the gap the
+    /// memory-aware LP closes.
+    pub stage_floor: Option<Vec<f64>>,
 }
 
 impl ControllerFactory {
+    /// Build the controller implementing `method`.
     pub fn build(
         &self,
         method: FreezeMethod,
@@ -155,6 +171,11 @@ impl ControllerFactory {
             phases: self.phases,
             r_max: self.r_max,
             lambda: self.lambda,
+        };
+        let timely = || {
+            let mut tf = TimelyFreeze::new(timely_cfg, schedule, layout.clone());
+            tf.set_stage_floor(self.stage_floor.clone());
+            tf
         };
         match method {
             FreezeMethod::NoFreezing => Box::new(NoFreezing::new()),
@@ -168,19 +189,13 @@ impl ControllerFactory {
                 auto.set_actions(schedule.all_actions());
                 Box::new(auto)
             }
-            FreezeMethod::TimelyFreeze => {
-                Box::new(TimelyFreeze::new(timely_cfg, schedule, layout.clone()))
+            FreezeMethod::TimelyFreeze => Box::new(timely()),
+            FreezeMethod::TimelyApf => {
+                Box::new(Hybrid::with_apf(timely(), self.apf.clone(), layout.clone()))
             }
-            FreezeMethod::TimelyApf => Box::new(Hybrid::with_apf(
-                TimelyFreeze::new(timely_cfg, schedule, layout.clone()),
-                self.apf.clone(),
-                layout.clone(),
-            )),
-            FreezeMethod::TimelyAuto => Box::new(Hybrid::with_autofreeze(
-                TimelyFreeze::new(timely_cfg, schedule, layout.clone()),
-                self.auto.clone(),
-                layout.clone(),
-            )),
+            FreezeMethod::TimelyAuto => {
+                Box::new(Hybrid::with_autofreeze(timely(), self.auto.clone(), layout.clone()))
+            }
         }
     }
 }
@@ -201,6 +216,53 @@ mod tests {
     #[should_panic]
     fn phase_config_validates_order() {
         PhaseConfig::new(100, 100, 200);
+    }
+
+    /// The factory must thread `stage_floor` into the TimelyFreeze
+    /// family — this is the wiring a memory-budgeted simulator run
+    /// relies on, asserted through the `Controller` interface alone.
+    #[test]
+    fn factory_threads_stage_floor_to_timely() {
+        use crate::schedule::Schedule;
+        use crate::types::{ActionKind, ScheduleKind};
+        let schedule = Schedule::build(ScheduleKind::OneFOneB, 4, 8, 1);
+        let layout = ModelLayout::uniform(8, 4, 1000, 4);
+        let floor = 0.5f64;
+        let factory = ControllerFactory {
+            phases: PhaseConfig::new(10, 30, 50),
+            r_max: 0.8,
+            lambda: 1e-4,
+            apf: ApfConfig::default(),
+            auto: AutoFreezeConfig::default(),
+            stage_floor: Some(vec![floor; 4]),
+        };
+        let mut c = factory.build(FreezeMethod::TimelyFreeze, &schedule, &layout);
+        // Drive warm-up + monitoring with synthetic timings (forward
+        // 1 ms; backward 2 ms unfrozen, 0.8 ms frozen).
+        for t in 1..=30 {
+            let plan = c.plan(t);
+            for a in schedule.all_actions() {
+                let dur = match a.kind {
+                    ActionKind::Forward => 1.0,
+                    _ => 2.0 - plan.ratio_of(&a) * 1.2,
+                };
+                c.record_time(t, a, dur);
+            }
+        }
+        // Past T_f the plan's AFR equals r*; every stage must average
+        // at least the floor (and stay within r_max).
+        let plan = c.plan(100);
+        for s in 0..4 {
+            let rs: Vec<f64> = schedule
+                .all_actions()
+                .into_iter()
+                .filter(|a| a.kind.freezable() && a.stage == s)
+                .map(|a| plan.ratio_of(&a))
+                .collect();
+            let mean = rs.iter().sum::<f64>() / rs.len() as f64;
+            assert!(mean >= floor - 1e-6, "stage {s} below wired floor: {mean}");
+            assert!(mean <= 0.8 + 1e-6, "stage {s} over budget: {mean}");
+        }
     }
 
     #[test]

@@ -3,10 +3,12 @@
 use crate::freeze::{Controller, FreezePlan};
 use crate::types::FreezeMethod;
 
+/// The trivial controller: freezes nothing, ever.
 #[derive(Default)]
 pub struct NoFreezing;
 
 impl NoFreezing {
+    /// The controller (stateless).
     pub fn new() -> NoFreezing {
         NoFreezing
     }

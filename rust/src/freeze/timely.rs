@@ -1,7 +1,16 @@
 //! The TimelyFreeze controller (§3, Algorithm 1): warm-up → two-part
 //! monitoring (upper-bound, then lower-bound) → LP solve at t = T_m →
 //! progressive freezing toward the expected ratios r*.
+//!
+//! Beyond the paper's algorithm the controller understands the cost
+//! subsystem's memory accounting: attach a per-stage freeze-ratio floor
+//! with [`TimelyFreeze::set_stage_floor`], or hand
+//! [`TimelyFreeze::replan`] a [`CostModel`] carrying a
+//! [`MemoryModel`](crate::cost::MemoryModel) and the floor is derived
+//! from the schedule's peak in-flight microbatch counts — the LP then
+//! picks freeze ratios that fit the device budget (constraint [5]).
 
+use crate::cost::{peak_inflight, CostModel};
 use crate::freeze::layout::ModelLayout;
 use crate::freeze::{Controller, FreezePlan, PhaseConfig};
 use crate::graph::pipeline::{Node, PipelineDag};
@@ -11,8 +20,10 @@ use crate::types::{Action, FreezeMethod};
 use crate::util::stats::Accum;
 use std::collections::BTreeMap;
 
+/// Tunables of the TimelyFreeze controller.
 #[derive(Clone, Copy, Debug)]
 pub struct TimelyFreezeConfig {
+    /// Phase boundaries {T_w, T_m, T_f}.
     pub phases: PhaseConfig,
     /// User-specified maximum average freeze ratio per stage (§3.2.2).
     pub r_max: f64,
@@ -23,12 +34,17 @@ pub struct TimelyFreezeConfig {
 /// Which monitoring window a step belongs to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {
+    /// Steps `1..=T_w`: no freezing, LR warm-up.
     Warmup,
+    /// First monitoring half: no freezing, measuring `w_max`.
     MonitorUpper,
+    /// Second monitoring half: full freezing, measuring `w_min`.
     MonitorLower,
+    /// Steps `> T_m`: progressive freezing toward r*.
     Freezing,
 }
 
+/// The TimelyFreeze controller state (see the module docs).
 pub struct TimelyFreeze {
     cfg: TimelyFreezeConfig,
     pdag: PipelineDag,
@@ -45,11 +61,19 @@ pub struct TimelyFreeze {
     /// the same DAG (refreshed bounds, new r_max) warm-start in a
     /// handful of pivots.
     solver: FreezeLpSolver,
+    /// Per-stage freeze-ratio floor from memory accounting (constraint
+    /// [5]); `None` ⇒ memory-unconstrained.
+    stage_floor: Option<Vec<f64>>,
+    /// Peak in-flight microbatches per stage, a schedule constant —
+    /// needed to re-derive the floor from a memory model in `replan`.
+    inflight: Vec<usize>,
     #[allow(dead_code)]
     layout: ModelLayout,
 }
 
 impl TimelyFreeze {
+    /// Build the controller for one schedule, deriving the pipeline DAG
+    /// and the schedule's peak in-flight microbatch profile.
     pub fn new(cfg: TimelyFreezeConfig, schedule: &Schedule, layout: ModelLayout) -> TimelyFreeze {
         let pdag = PipelineDag::from_schedule(schedule);
         let freezable = schedule
@@ -57,6 +81,7 @@ impl TimelyFreeze {
             .into_iter()
             .filter(|a| a.kind.freezable())
             .collect();
+        let inflight = peak_inflight(schedule);
         TimelyFreeze {
             cfg,
             pdag,
@@ -66,10 +91,13 @@ impl TimelyFreeze {
             expected: None,
             solution: None,
             solver: FreezeLpSolver::new(),
+            stage_floor: None,
+            inflight,
             layout,
         }
     }
 
+    /// The phase step `t` belongs to.
     pub fn phase(&self, t: usize) -> Phase {
         let p = &self.cfg.phases;
         if t <= p.t_warmup {
@@ -92,10 +120,60 @@ impl TimelyFreeze {
     /// warm-started from the previous optimal basis (a handful of pivots
     /// instead of a full two-phase solve), refreshing `r*`. For elastic
     /// controllers re-planning per check-interval.
-    pub fn replan(&mut self) {
+    ///
+    /// When `cost` carries a [`MemoryModel`](crate::cost::MemoryModel),
+    /// the per-stage freeze-ratio floor is re-derived from it first, so
+    /// an elastic run whose memory budget drifts **on the unchanged
+    /// schedule** — a resized device slice, revised activation-byte
+    /// estimates — re-plans against the fresh budget. The peak
+    /// in-flight profile is a construction-time constant of the
+    /// schedule; a run whose schedule shape changes (microbatch or rank
+    /// count) needs a new controller, not a `replan`. Pass `None` to
+    /// re-plan on timings alone, keeping any floor previously set. An unsatisfiable budget — the device
+    /// overflows even fully frozen, or the derived floor exceeds
+    /// `r_max` (the LP would reject it as `FloorExceedsBudget` on every
+    /// solve) — keeps the previous floor and logs, so the controller
+    /// keeps executing its last consistent plan rather than tripping
+    /// the freeze-nothing fail-safe at maximum memory pressure.
+    pub fn replan(&mut self, cost: Option<&CostModel>) {
+        if let Some(mem) = cost.and_then(|c| c.memory()) {
+            match mem.required_ratios(&self.inflight) {
+                Ok(floor) => {
+                    if let Some((s, &r)) =
+                        floor.iter().enumerate().find(|&(_, &r)| r > self.cfg.r_max)
+                    {
+                        eprintln!(
+                            "timelyfreeze: memory floor {r:.3} at stage {s} exceeds \
+                             r_max = {}; keeping previous floor",
+                            self.cfg.r_max
+                        );
+                    } else {
+                        self.stage_floor =
+                            if floor.iter().any(|&r| r > 0.0) { Some(floor) } else { None };
+                    }
+                }
+                Err(e) => {
+                    eprintln!("timelyfreeze: memory budget infeasible ({e}); keeping previous floor");
+                }
+            }
+        }
         self.solve();
     }
 
+    /// Set (or clear) the per-stage freeze-ratio floor directly — the
+    /// environment computed it from
+    /// [`MemoryModel::required_ratios`](crate::cost::MemoryModel::required_ratios).
+    /// Takes effect at the next LP solve.
+    pub fn set_stage_floor(&mut self, floor: Option<Vec<f64>>) {
+        self.stage_floor = floor.filter(|f| f.iter().any(|&r| r > 0.0));
+    }
+
+    /// The active per-stage freeze-ratio floor, if any.
+    pub fn stage_floor(&self) -> Option<&[f64]> {
+        self.stage_floor.as_deref()
+    }
+
+    /// The pipeline DAG the controller plans over.
     pub fn pdag(&self) -> &PipelineDag {
         &self.pdag
     }
@@ -148,13 +226,11 @@ impl TimelyFreeze {
                 w_max[id] = v;
             }
         }
-        let input = FreezeLpInput {
-            pdag: &self.pdag,
-            w_min: &w_min,
-            w_max: &w_max,
-            r_max: self.cfg.r_max,
-            lambda: self.cfg.lambda,
-        };
+        let mut input =
+            FreezeLpInput::new(&self.pdag, &w_min, &w_max, self.cfg.r_max, self.cfg.lambda);
+        if let Some(floor) = self.stage_floor.as_deref() {
+            input = input.with_stage_floor(floor);
+        }
         match self.solver.solve(&input) {
             Ok(sol) => {
                 let mut expected = BTreeMap::new();
@@ -170,8 +246,11 @@ impl TimelyFreeze {
             }
             Err(e) => {
                 // Fail safe: freeze nothing rather than crash training.
+                // Drop the stale solution too, so reporting accessors
+                // don't show a plan that is no longer being executed.
                 eprintln!("timelyfreeze: LP failed ({e}); disabling freezing");
                 self.expected = Some(BTreeMap::new());
+                self.solution = None;
             }
         }
     }
@@ -356,7 +435,7 @@ mod tests {
         let first = tf.solution().unwrap().clone();
         // Same monitoring state → the warm re-solve lands on the same
         // optimum in (almost) no pivots.
-        tf.replan();
+        tf.replan(None);
         let second = tf.solution().unwrap();
         assert!((first.batch_time - second.batch_time).abs() < 1e-9);
         assert!(
@@ -376,5 +455,87 @@ mod tests {
         drive_monitoring(&mut tf, &schedule);
         let plan = tf.plan(60);
         assert!(plan.afr.values().all(|&r| r < 1e-9));
+    }
+
+    #[test]
+    fn stage_floor_raises_expected_ratios() {
+        let (mut tf, schedule) = make(0.8);
+        tf.set_stage_floor(Some(vec![0.6; 4]));
+        drive_monitoring(&mut tf, &schedule);
+        tf.plan(31);
+        let sol = tf.solution().unwrap();
+        for (s, &r) in sol.stage_ratios(tf.pdag()).iter().enumerate() {
+            assert!(r >= 0.6 - 1e-6, "stage {s} below memory floor: {r}");
+            assert!(r <= 0.8 + 1e-6, "stage {s} over budget: {r}");
+        }
+        // An all-zero floor is dropped entirely.
+        tf.set_stage_floor(Some(vec![0.0; 4]));
+        assert!(tf.stage_floor().is_none());
+    }
+
+    #[test]
+    fn replan_with_memory_model_derives_floor() {
+        use crate::config::ExperimentConfig;
+        use crate::cost::{CostModel, MemoryModel};
+        use crate::partition::balanced_partition;
+
+        let (mut tf, schedule) = make(0.8);
+        drive_monitoring(&mut tf, &schedule);
+        tf.plan(31);
+        assert!(tf.stage_floor().is_none());
+
+        // A memory model whose capacity forces some freezing everywhere.
+        let cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+        let layer_stage = balanced_partition(&cfg.model.layer_params(), 4);
+        let mem = MemoryModel::from_presets(
+            &cfg.model,
+            &cfg.gpu,
+            &layer_stage,
+            4,
+            cfg.microbatch_size,
+            cfg.seq_len,
+            1,
+        );
+        let inflight = crate::cost::peak_inflight(&schedule);
+        // Find a capacity fraction with a binding floor that stays well
+        // under r_max = 0.8 (fine 2% steps so the crossing is gentle).
+        let mut frac = 1.0;
+        let mem = loop {
+            let m = mem.clone().scaled_capacity(frac);
+            match m.required_ratios(&inflight) {
+                Ok(f) if f.iter().any(|&r| r > 0.02) => {
+                    assert!(f.iter().all(|&r| r <= 0.7), "crossing too coarse: {f:?}");
+                    break m;
+                }
+                Ok(_) => frac *= 0.98,
+                Err(e) => panic!("overshot feasibility: {e}"),
+            }
+        };
+        let cost = CostModel::new(
+            &cfg.model,
+            &cfg.gpu,
+            &layer_stage,
+            4,
+            cfg.microbatch_size,
+            cfg.seq_len,
+        )
+        .with_memory(mem.clone());
+        tf.replan(Some(&cost));
+        let floor = tf.stage_floor().expect("binding budget must install a floor").to_vec();
+        let sol = tf.solution().unwrap();
+        for (s, (&r, &f)) in sol.stage_ratios(tf.pdag()).iter().zip(&floor).enumerate() {
+            assert!(r >= f - 1e-6, "stage {s}: ratio {r} below derived floor {f}");
+        }
+        // The floored plan fits the budget the memory model describes
+        // (slack: LP rows hold to simplex tolerance, which scaled by
+        // multi-GB state sizes is a few kB).
+        for s in 0..4 {
+            let used = mem.stage_bytes(s, inflight[s], sol.stage_ratios(tf.pdag())[s]);
+            assert!(
+                used <= mem.capacity_bytes[s] + mem.train_state_bytes[s] * 1e-5,
+                "stage {s}: {used} bytes over capacity {}",
+                mem.capacity_bytes[s]
+            );
+        }
     }
 }

@@ -12,10 +12,23 @@
 //!
 //! Node payloads are generic; the pipeline-specific structure lives in
 //! [`crate::graph::pipeline`].
+//!
+//! ## Edge weights
+//!
+//! Longest paths come in two flavours: node-weighted (`start_times`,
+//! the PR 1 hot path — durations on nodes, edges free) and
+//! node-plus-edge-weighted (`start_times_with_edges`, for P2P
+//! communication charged to the cross-rank edges of the pipeline DAG).
+//! Edge weights are supplied as one flat slice in **CSR edge order**:
+//! edge `k` is the `k`-th edge of the u-major iteration
+//! `for u in 0..n { for v in succs[u] }` over the *deduplicated*
+//! adjacency — exactly the order [`Csr::from_dag`] freezes into
+//! `succ_adj`, so the same slice indexes both representations.
 
 /// Dense-id DAG. Node ids are `usize` handles into `nodes`.
 #[derive(Clone, Debug)]
 pub struct Dag<T> {
+    /// Node payloads, indexed by node id.
     pub nodes: Vec<T>,
     /// Outgoing adjacency: `succs[i]` = nodes j with edge i → j.
     pub succs: Vec<Vec<usize>>,
@@ -30,18 +43,22 @@ impl<T> Default for Dag<T> {
 }
 
 impl<T> Dag<T> {
+    /// An empty DAG.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Number of nodes.
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Whether the DAG has no nodes.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }
 
+    /// Add a node, returning its id.
     pub fn add_node(&mut self, payload: T) -> usize {
         self.nodes.push(payload);
         self.succs.push(Vec::new());
@@ -81,6 +98,7 @@ impl<T> Dag<T> {
         self.succs.iter().map(|s| s.len()).sum()
     }
 
+    /// Whether an edge u → v is stored.
     pub fn has_edge(&self, u: usize, v: usize) -> bool {
         self.succs[u].contains(&v)
     }
@@ -110,6 +128,7 @@ impl<T> Dag<T> {
         }
     }
 
+    /// Whether the graph contains no cycle.
     pub fn is_acyclic(&self) -> bool {
         self.topo_order().is_some()
     }
@@ -125,6 +144,46 @@ impl<T> Dag<T> {
         for &u in &order {
             for &v in &self.succs[u] {
                 let cand = p[u] + weights[u];
+                if cand > p[v] {
+                    p[v] = cand;
+                }
+            }
+        }
+        Some(p)
+    }
+
+    /// Longest-path start times with per-edge costs:
+    /// `P_j = max over edges (i→j) of (P_i + w_i + e_ij)`.
+    ///
+    /// `edge_costs` is indexed in CSR edge order (u-major over the
+    /// deduplicated adjacency — see the module docs); this is the dense
+    /// reference implementation the CSR equivalence tests compare
+    /// against. Returns `None` on a cycle.
+    pub fn start_times_with_edges(
+        &self,
+        weights: &[f64],
+        edge_costs: &[f64],
+    ) -> Option<Vec<f64>> {
+        assert_eq!(weights.len(), self.len());
+        assert_eq!(
+            edge_costs.len(),
+            self.edge_count(),
+            "edge cost vector must cover every stored edge"
+        );
+        // Prefix offset of each node's edge block in the u-major order.
+        let mut off = Vec::with_capacity(self.len() + 1);
+        let mut acc = 0usize;
+        off.push(acc);
+        for l in &self.succs {
+            acc += l.len();
+            off.push(acc);
+        }
+        let order = self.topo_order()?;
+        let mut p = vec![0.0f64; self.len()];
+        for &u in &order {
+            let finish = p[u] + weights[u];
+            for (k, &v) in self.succs[u].iter().enumerate() {
+                let cand = finish + edge_costs[off[u] + k];
                 if cand > p[v] {
                     p[v] = cand;
                 }
@@ -276,12 +335,19 @@ impl Csr {
         }
     }
 
+    /// Number of nodes.
     pub fn len(&self) -> usize {
         self.succ_off.len().saturating_sub(1)
     }
 
+    /// Whether the CSR has no nodes.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Number of stored edges (the length an edge-cost vector must have).
+    pub fn edge_count(&self) -> usize {
+        self.succ_adj.len()
     }
 
     /// The cached topological order.
@@ -289,6 +355,7 @@ impl Csr {
         &self.topo
     }
 
+    /// Successors of node `u`.
     #[inline]
     pub fn succ(&self, u: usize) -> &[u32] {
         &self.succ_adj[self.succ_off[u] as usize..self.succ_off[u + 1] as usize]
@@ -312,6 +379,40 @@ impl Csr {
             }
         }
     }
+
+    /// Longest-path start times with per-edge costs
+    /// (`P_j = max (P_i + w_i + e_ij)`) into a caller-owned buffer.
+    /// `edge_costs` is in CSR edge order (aligned with `succ_adj`); the
+    /// node-only [`Csr::start_times_into`] stays the hot path when no
+    /// edges carry cost.
+    pub fn start_times_with_edges_into(
+        &self,
+        weights: &[f64],
+        edge_costs: &[f64],
+        out: &mut Vec<f64>,
+    ) {
+        let n = self.len();
+        assert_eq!(weights.len(), n);
+        assert_eq!(
+            edge_costs.len(),
+            self.succ_adj.len(),
+            "edge cost vector must cover every CSR edge"
+        );
+        out.clear();
+        out.resize(n, 0.0);
+        for &u in &self.topo {
+            let u = u as usize;
+            let finish = out[u] + weights[u];
+            let (lo, hi) = (self.succ_off[u] as usize, self.succ_off[u + 1] as usize);
+            for e in lo..hi {
+                let v = self.succ_adj[e] as usize;
+                let cand = finish + edge_costs[e];
+                if cand > out[v] {
+                    out[v] = cand;
+                }
+            }
+        }
+    }
 }
 
 /// Reusable longest-path evaluator: a [`Csr`] plus a scratch buffer, so
@@ -324,6 +425,7 @@ pub struct Evaluator {
 }
 
 impl Evaluator {
+    /// Wrap a frozen CSR with a scratch buffer sized for it.
     pub fn new(csr: Csr) -> Evaluator {
         let n = csr.len();
         Evaluator { csr, scratch: vec![0.0; n] }
@@ -334,14 +436,17 @@ impl Evaluator {
         Csr::from_dag(dag).map(Evaluator::new)
     }
 
+    /// Number of nodes.
     pub fn len(&self) -> usize {
         self.csr.len()
     }
 
+    /// Whether the underlying CSR has no nodes.
     pub fn is_empty(&self) -> bool {
         self.csr.is_empty()
     }
 
+    /// The underlying CSR.
     pub fn csr(&self) -> &Csr {
         &self.csr
     }
@@ -351,6 +456,16 @@ impl Evaluator {
     pub fn start_times(&mut self, weights: &[f64]) -> &[f64] {
         let mut out = std::mem::take(&mut self.scratch);
         self.csr.start_times_into(weights, &mut out);
+        self.scratch = out;
+        &self.scratch
+    }
+
+    /// Start times under `weights` plus CSR-ordered `edge_costs`; the
+    /// slice borrows the internal scratch buffer and is valid until the
+    /// next call.
+    pub fn start_times_with_edges(&mut self, weights: &[f64], edge_costs: &[f64]) -> &[f64] {
+        let mut out = std::mem::take(&mut self.scratch);
+        self.csr.start_times_with_edges_into(weights, edge_costs, &mut out);
         self.scratch = out;
         &self.scratch
     }
@@ -452,6 +567,29 @@ mod tests {
         // Scratch reuse across weight vectors.
         let w2 = [1.0, 1.0, 7.0, 2.0];
         assert_eq!(ev.start_times(&w2), &g.start_times(&w2).unwrap()[..]);
+    }
+
+    #[test]
+    fn edge_costs_shift_longest_paths() {
+        let g = diamond();
+        let w = [1.0, 5.0, 1.0, 2.0];
+        // Edges in u-major order: a→b, a→c, b→d, c→d. A huge cost on
+        // c→d reroutes the critical path through the fast branch.
+        let ec = [0.0, 0.0, 0.0, 10.0];
+        let dense = g.start_times_with_edges(&w, &ec).unwrap();
+        assert_eq!(dense[3], 12.0); // via c: 1 + 1 + 10
+        let csr = Csr::from_dag(&g).unwrap();
+        let mut out = Vec::new();
+        csr.start_times_with_edges_into(&w, &ec, &mut out);
+        assert_eq!(out, dense);
+        let mut ev = Evaluator::new(csr);
+        assert_eq!(ev.start_times_with_edges(&w, &ec), &dense[..]);
+        // Zero edge costs reproduce the node-only sweep bit-for-bit.
+        let zeros = vec![0.0; 4];
+        assert_eq!(
+            g.start_times_with_edges(&w, &zeros).unwrap(),
+            g.start_times(&w).unwrap()
+        );
     }
 
     #[test]

@@ -19,12 +19,16 @@ use std::collections::BTreeMap;
 /// Node payload in the pipeline DAG.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Node {
+    /// The abstract source node `v_s` (zero weight, starts the batch).
     Source,
+    /// The abstract destination node `v_d` (zero weight, ends the batch).
     Dest,
+    /// A schedule action.
     Act(Action),
 }
 
 impl Node {
+    /// The wrapped action, if this is an action node.
     pub fn action(&self) -> Option<Action> {
         match self {
             Node::Act(a) => Some(*a),
@@ -86,23 +90,31 @@ pub fn structural_edges(
 /// The pipeline DAG of one batch.
 #[derive(Clone, Debug)]
 pub struct PipelineDag {
+    /// The builder/reference DAG with [`Node`] payloads.
     pub dag: Dag<Node>,
     /// Frozen CSR form with the topo order cached at construction — the
     /// longest-path hot path. `dag` stays as the builder/reference form.
     pub csr: Csr,
+    /// Node id of the abstract source `v_s`.
     pub source: usize,
+    /// Node id of the abstract destination `v_d`.
     pub dest: usize,
     /// Action → node id.
     pub index: BTreeMap<Action, usize>,
     /// Rank hosting each node (source/dest map to rank 0 by convention —
     /// they carry zero weight and never execute).
     pub rank_of_node: Vec<usize>,
+    /// Virtual stage count of the schedule.
     pub stages: usize,
+    /// Physical rank count of the schedule.
     pub ranks: usize,
+    /// Microbatches per batch.
     pub microbatches: usize,
 }
 
 impl PipelineDag {
+    /// Build the batch DAG of a schedule (rules 1–4 of Appendix B) and
+    /// freeze its CSR form.
     pub fn from_schedule(schedule: &Schedule) -> PipelineDag {
         debug_assert!(schedule.validate().is_ok());
         let mut dag: Dag<Node> = Dag::new();
@@ -164,14 +176,17 @@ impl PipelineDag {
         }
     }
 
+    /// Number of nodes (actions + source + dest).
     pub fn len(&self) -> usize {
         self.dag.len()
     }
 
+    /// Whether the DAG has no nodes.
     pub fn is_empty(&self) -> bool {
         self.dag.is_empty()
     }
 
+    /// The action at a node id (`None` for source/dest).
     pub fn node_action(&self, id: usize) -> Option<Action> {
         self.dag.nodes[id].action()
     }
@@ -203,6 +218,48 @@ impl PipelineDag {
     pub fn start_times(&self, weights: &[f64]) -> Vec<f64> {
         let mut p = Vec::new();
         self.csr.start_times_into(weights, &mut p);
+        p
+    }
+
+    /// Per-edge P2P communication costs in CSR edge order: an edge pays
+    /// `link_cost(from_stage, to_stage)` iff it connects two *action*
+    /// nodes hosted on **different ranks** (same-rank chunk crossings —
+    /// e.g. ZBV's V turn — and source/dest wiring are free). The result
+    /// aligns with both [`Csr`] sweeps and the u-major `dag.succs`
+    /// iteration the freeze LP uses, because [`Csr::from_dag`] freezes
+    /// edges in exactly that order.
+    ///
+    /// Pair with
+    /// [`CostModel::p2p`](crate::cost::CostModel::p2p):
+    /// `pdag.p2p_edge_costs(|a, b| cost.p2p(a, b))`.
+    pub fn p2p_edge_costs<F: Fn(usize, usize) -> f64>(&self, link_cost: F) -> Vec<f64> {
+        let mut costs = Vec::with_capacity(self.dag.edge_count());
+        for u in 0..self.dag.len() {
+            for &v in &self.dag.succs[u] {
+                let c = match (self.dag.nodes[u].action(), self.dag.nodes[v].action()) {
+                    (Some(a), Some(b)) if self.rank_of_node[u] != self.rank_of_node[v] => {
+                        link_cost(a.stage, b.stage)
+                    }
+                    _ => 0.0,
+                };
+                costs.push(c);
+            }
+        }
+        costs
+    }
+
+    /// Batch execution time under node `weights` plus CSR-ordered
+    /// `edge_costs` (P2P communication on cross-rank edges).
+    pub fn batch_time_with_edges(&self, weights: &[f64], edge_costs: &[f64]) -> f64 {
+        let mut p = Vec::new();
+        self.csr.start_times_with_edges_into(weights, edge_costs, &mut p);
+        p[self.dest]
+    }
+
+    /// Start times for all nodes under node weights plus edge costs.
+    pub fn start_times_with_edges(&self, weights: &[f64], edge_costs: &[f64]) -> Vec<f64> {
+        let mut p = Vec::new();
+        self.csr.start_times_with_edges_into(weights, edge_costs, &mut p);
         p
     }
 
@@ -259,6 +316,13 @@ impl BatchEvaluator {
     /// `P_d` under `weights` — allocation-free.
     pub fn batch_time(&mut self, weights: &[f64]) -> f64 {
         self.eval.start_times(weights)[self.dest]
+    }
+
+    /// `P_d` under node `weights` plus CSR-ordered `edge_costs`
+    /// (typically from [`PipelineDag::p2p_edge_costs`], computed once
+    /// per schedule) — allocation-free.
+    pub fn batch_time_with_edges(&mut self, weights: &[f64], edge_costs: &[f64]) -> f64 {
+        self.eval.start_times_with_edges(weights, edge_costs)[self.dest]
     }
 
     /// Start times for all nodes; the slice borrows the internal
@@ -359,6 +423,41 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn p2p_edge_costs_charge_cross_rank_edges_only() {
+        // GPipe on 4 ranks: every stage boundary is a rank boundary.
+        let g = build(ScheduleKind::GPipe, 4, 4);
+        let ec = g.p2p_edge_costs(|_, _| 0.5);
+        assert_eq!(ec.len(), g.dag.edge_count());
+        assert!(ec.iter().any(|&c| c > 0.0));
+        // With unit compute and a boundary cost c, each of the 2(S−1)
+        // boundary hops on the critical path pays c: makespan grows by
+        // exactly 2(S−1)·c versus the free-comm baseline.
+        let w = g.weights(|_| 1.0);
+        let base = g.batch_time(&w);
+        let with = g.batch_time_with_edges(&w, &ec);
+        assert!((with - (base + 2.0 * 3.0 * 0.5)).abs() < 1e-9, "{with} vs {base}");
+        let mut ev = g.evaluator();
+        assert_eq!(ev.batch_time_with_edges(&w, &ec), with);
+        // ZBV hosts two chunks per rank: its V-turn edge (stage R−1 →
+        // stage R) stays on one rank and must be free.
+        let g = build(ScheduleKind::ZeroBubbleV, 4, 4);
+        let mut eidx = 0usize;
+        let ec = g.p2p_edge_costs(|_, _| 1.0);
+        for u in 0..g.dag.len() {
+            for &v in &g.dag.succs[u] {
+                if g.rank_of_node[u] == g.rank_of_node[v] {
+                    assert_eq!(ec[eidx], 0.0, "same-rank edge {u}→{v} charged");
+                }
+                eidx += 1;
+            }
+        }
+        // Zero link costs reproduce the node-only batch time bit-for-bit.
+        let w = g.weights(|_| 1.0);
+        let zeros = g.p2p_edge_costs(|_, _| 0.0);
+        assert_eq!(g.batch_time_with_edges(&w, &zeros), g.batch_time(&w));
     }
 
     #[test]

@@ -17,23 +17,44 @@
 //! Python never runs at training time: `make artifacts` AOT-compiles
 //! everything to `artifacts/*.hlo.txt`, which `runtime` loads via PJRT.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `README.md` for the repo map and quickstart,
+//! `docs/ARCHITECTURE.md` for the schedule → DAG → LP → simulator
+//! data flow, and `PERF.md` for the hot paths and the bench/regression
+//! workflow.
 
+#![warn(missing_docs)]
+
+/// Experiment configuration: model/GPU presets and the TOML launcher.
 pub mod config;
+/// Execution-time + memory cost models (the planner's world model).
+pub mod cost;
+/// Freezing controllers: TimelyFreeze, APF, AutoFreeze, hybrids.
 pub mod freeze;
+/// Generic DAG + the pipeline batch DAG (CSR hot path).
 pub mod graph;
+/// From-scratch bounded simplex and the freeze-ratio LP.
 pub mod lp;
+/// Experiment metric recording (JSONL).
 pub mod metrics;
+/// Timing-sample collection (the engine's monitoring phase).
 pub mod monitor;
+/// Layer → stage partition heuristics.
 pub mod partition;
+/// The four pipeline schedules (GPipe, 1F1B, Interleaved, ZBV).
 pub mod schedule;
+/// Discrete-event simulator and the paper-scale experiment runner.
 pub mod sim;
+/// Core identifiers: actions, schedule kinds, freeze methods.
 pub mod types;
+/// Dependency-free support code (rng, json, toml, stats, cli, tables).
 pub mod util;
+/// Gantt and histogram renderers (ASCII + SVG).
 pub mod viz;
 
+/// Micro/table bench harness shared by `benches/*.rs`.
 pub mod bench_support;
+/// Training-loop pieces shared by engine and simulator (data, LR,
+/// optimizer).
 pub mod train;
 
 // The real PJRT execution layers need the external `xla` (and `anyhow`)
@@ -41,7 +62,9 @@ pub mod train;
 // the `pjrt` feature so the default build — coordinator, simulator, LP,
 // benches, tests — compiles with zero external dependencies; enable the
 // feature after adding those crates to Cargo.toml (see its comments).
+/// Real multi-threaded pipeline execution engine (PJRT-backed).
 #[cfg(feature = "pjrt")]
 pub mod engine;
+/// PJRT client/runtime bindings (HLO artifact loading, device tensors).
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -5,14 +5,31 @@
 //! per-stage budget r_max.
 //!
 //!   min  P_d − λ Σ_i δ_i w_i                               (eq. 6)
-//!   s.t. P_j ≥ P_i + w_i            ∀ (i→j) ∈ E            [1]
+//!   s.t. P_j ≥ P_i + w_i + e_ij     ∀ (i→j) ∈ E            [1]
 //!        w_min_i ≤ w_i ≤ w_max_i    ∀ i                    [2]
 //!        P_s = 0, w_s = 0                                  [3]
 //!        Σ_{i∈V_s} δ_i (w_max_i − w_i) ≤ r_max |V_s|  ∀ s  [4]
+//!        Σ_{i∈V_s} δ_i (w_max_i − w_i) ≥ r_min_s |V_s| ∀ s [5]
 //!
 //! with δ_i = 1 / (w_max_i − w_min_i) for freezable nodes (0 otherwise),
 //! so that r_i = δ_i (w_max_i − w_i) is the linearized freeze ratio
 //! (eq. 4).
+//!
+//! Two optional extensions beyond the paper's formulation, both exactly
+//! zero-cost when absent:
+//!
+//! * **edge costs** `e_ij` — P2P communication charged to cross-rank DAG
+//!   edges (heterogeneous-interconnect studies). Supplied in CSR edge
+//!   order via [`FreezeLpInput::with_edge_costs`]; when `None`, the
+//!   precedence rows are bit-identical to the pre-refactor build.
+//! * **per-stage freeze-ratio floors** `r_min_s` — the memory-pressure
+//!   constraint [5]: stage `s` must freeze at least an `r_min_s` average
+//!   ratio so its gradient/optimizer state fits the device budget
+//!   (derived by
+//!   [`MemoryModel::required_ratios`](crate::cost::MemoryModel::required_ratios)).
+//!   Supplied via [`FreezeLpInput::with_stage_floor`]; a floor above
+//!   `r_max` is rejected upfront as [`FreezeLpError::FloorExceedsBudget`]
+//!   (the memory budget and the accuracy budget genuinely conflict).
 
 use crate::graph::pipeline::{Node, PipelineDag};
 use crate::lp::simplex::{self, Basis, Cmp, LpProblem, LpSolution, LpStatus, INF};
@@ -23,8 +40,12 @@ use crate::lp::simplex::{self, Basis, Cmp, LpProblem, LpSolution, LpStatus, INF}
 /// one time unit (≪ any realistic P_d).
 pub const DEFAULT_LAMBDA: f64 = 1e-4;
 
+/// One freeze-LP instance. Construct with [`FreezeLpInput::new`] and
+/// opt into the memory floor / edge-cost extensions with the builder
+/// methods.
 #[derive(Clone, Debug)]
 pub struct FreezeLpInput<'a> {
+    /// The pipeline DAG the LP runs over.
     pub pdag: &'a PipelineDag,
     /// Per-node minimum duration (all parameters frozen). Forward nodes
     /// must have `w_min == w_max`.
@@ -35,8 +56,44 @@ pub struct FreezeLpInput<'a> {
     pub r_max: f64,
     /// Tie-breaker weight λ ≪ 1.
     pub lambda: f64,
+    /// Optional per-stage freeze-ratio floor (constraint [5], len ==
+    /// `pdag.stages`): stage `s` must average at least `r_min[s]` to fit
+    /// its memory budget. `None` ⇒ no floor rows.
+    pub r_min: Option<&'a [f64]>,
+    /// Optional per-edge communication costs in CSR edge order (len ==
+    /// `pdag.csr.edge_count()`), typically from
+    /// [`PipelineDag::p2p_edge_costs`]. `None` ⇒ free edges,
+    /// bit-identical to the pre-refactor precedence rows.
+    pub edge_costs: Option<&'a [f64]>,
 }
 
+impl<'a> FreezeLpInput<'a> {
+    /// The paper's base formulation: no memory floor, free edges.
+    pub fn new(
+        pdag: &'a PipelineDag,
+        w_min: &'a [f64],
+        w_max: &'a [f64],
+        r_max: f64,
+        lambda: f64,
+    ) -> FreezeLpInput<'a> {
+        FreezeLpInput { pdag, w_min, w_max, r_max, lambda, r_min: None, edge_costs: None }
+    }
+
+    /// Enforce a per-stage freeze-ratio floor (constraint [5]).
+    pub fn with_stage_floor(mut self, r_min: &'a [f64]) -> FreezeLpInput<'a> {
+        self.r_min = Some(r_min);
+        self
+    }
+
+    /// Charge P2P communication to DAG edges (CSR edge order).
+    pub fn with_edge_costs(mut self, edge_costs: &'a [f64]) -> FreezeLpInput<'a> {
+        self.edge_costs = Some(edge_costs);
+        self
+    }
+}
+
+/// The solved freeze LP: per-node ratios and durations plus the batch
+/// time and its envelopes.
 #[derive(Clone, Debug)]
 pub struct FreezeSolution {
     /// Expected freeze ratio per node (0 for forwards and source/dest).
@@ -48,8 +105,9 @@ pub struct FreezeSolution {
     pub start_times: Vec<f64>,
     /// Optimized batch time `P_d*`.
     pub batch_time: f64,
-    /// Makespan envelopes (eq. 46): no freezing / full freezing.
+    /// No-freezing makespan envelope (eq. 46, `w = w_max`).
     pub p_d_max: f64,
+    /// Full-freezing makespan envelope (eq. 46, `w = w_min`).
     pub p_d_min: f64,
     /// Simplex iterations (for the perf log).
     pub iterations: usize,
@@ -85,13 +143,73 @@ impl FreezeSolution {
             self.batch_time / self.p_d_max
         }
     }
+
+    /// Mean expected freeze ratio per stage (the quantity both the
+    /// `r_max` budget [4] and the memory floor [5] constrain). Stages
+    /// with no freezable nodes report 0.
+    pub fn stage_ratios(&self, pdag: &PipelineDag) -> Vec<f64> {
+        pdag.freezable_by_stage()
+            .iter()
+            .map(|set| {
+                if set.is_empty() {
+                    0.0
+                } else {
+                    set.iter().map(|&i| self.ratios[i]).sum::<f64>() / set.len() as f64
+                }
+            })
+            .collect()
+    }
 }
 
+/// Why a freeze-LP solve failed.
 #[derive(Debug)]
 pub enum FreezeLpError {
-    BadLength { got: usize, want: usize },
-    BadBounds { node: usize, w_min: f64, w_max: f64 },
+    /// The bound vectors do not match the DAG's node count.
+    BadLength {
+        /// Supplied length.
+        got: usize,
+        /// Expected length (DAG size).
+        want: usize,
+    },
+    /// A node's `[w_min, w_max]` interval is malformed.
+    BadBounds {
+        /// Offending node id.
+        node: usize,
+        /// Supplied lower bound.
+        w_min: f64,
+        /// Supplied upper bound.
+        w_max: f64,
+    },
+    /// `r_max` outside `[0, 1]`.
     BadRmax(f64),
+    /// The per-stage floor vector is malformed (wrong length, or an
+    /// entry outside `[0, 1]`).
+    BadStageFloor {
+        /// Offending stage (`usize::MAX` for a length mismatch).
+        stage: usize,
+        /// The offending value (or supplied length for a mismatch).
+        r_min: f64,
+    },
+    /// A stage's memory floor exceeds the accuracy budget `r_max`: the
+    /// configuration cannot simultaneously fit the device and respect
+    /// the freeze-ratio cap.
+    FloorExceedsBudget {
+        /// Offending stage.
+        stage: usize,
+        /// Required floor from the memory model.
+        r_min: f64,
+        /// The user's budget.
+        r_max: f64,
+    },
+    /// The edge-cost vector is malformed (wrong length or a negative /
+    /// non-finite entry).
+    BadEdgeCosts {
+        /// Supplied length.
+        got: usize,
+        /// Expected length (CSR edge count).
+        want: usize,
+    },
+    /// The simplex terminated abnormally.
     Solver(LpStatus),
 }
 
@@ -105,6 +223,17 @@ impl std::fmt::Display for FreezeLpError {
                 write!(f, "node {node}: invalid bounds w_min={w_min} w_max={w_max}")
             }
             FreezeLpError::BadRmax(r) => write!(f, "r_max must be in [0,1], got {r}"),
+            FreezeLpError::BadStageFloor { stage, r_min } => {
+                write!(f, "stage {stage}: invalid freeze-ratio floor {r_min}")
+            }
+            FreezeLpError::FloorExceedsBudget { stage, r_min, r_max } => write!(
+                f,
+                "stage {stage} needs a freeze ratio of at least {r_min:.3} to fit its \
+                 memory budget, above the accuracy budget r_max = {r_max:.3}"
+            ),
+            FreezeLpError::BadEdgeCosts { got, want } => {
+                write!(f, "edge cost length {got} does not match CSR edge count {want}")
+            }
             FreezeLpError::Solver(s) => write!(f, "LP terminated with status {s:?}"),
         }
     }
@@ -115,17 +244,19 @@ impl std::error::Error for FreezeLpError {}
 /// Re-usable freeze-LP solver that keeps the previous optimal simplex
 /// basis. Successive freeze-LP instances over the *same* pipeline DAG
 /// differ only in objective coefficients and RHS entries (refreshed
-/// monitoring bounds, a changed `r_max`), so a warm-started re-solve
-/// converges in a handful of pivots where a cold solve replays both
-/// phases. Falls back to a cold solve transparently whenever the cached
-/// basis no longer fits; results are bit-for-bit a valid LP optimum
-/// either way.
+/// monitoring bounds, a changed `r_max`, a drifting memory floor over
+/// the same binding stages), so a warm-started re-solve converges in a
+/// handful of pivots where a cold solve replays both phases. Falls back
+/// to a cold solve transparently whenever the cached basis no longer
+/// fits — e.g. the floor extension toggling on/off changes the row
+/// count; results are bit-for-bit a valid LP optimum either way.
 #[derive(Clone, Debug, Default)]
 pub struct FreezeLpSolver {
     basis: Option<Basis>,
 }
 
 impl FreezeLpSolver {
+    /// A solver with no cached basis (first solve runs cold).
     pub fn new() -> FreezeLpSolver {
         FreezeLpSolver::default()
     }
@@ -140,6 +271,8 @@ impl FreezeLpSolver {
         self.basis = None;
     }
 
+    /// Solve `input`, warm-starting from the previous optimal basis when
+    /// one is cached and still fits.
     pub fn solve(&mut self, input: &FreezeLpInput) -> Result<FreezeSolution, FreezeLpError> {
         let built = build_problem(input)?;
         let sol: LpSolution = match &self.basis {
@@ -155,11 +288,15 @@ impl FreezeLpSolver {
     }
 }
 
-/// Build and solve the freeze LP from scratch. Always feasible by
-/// construction (w = w_max satisfies every constraint), so
-/// `Err(Solver(_))` indicates numerically hostile inputs rather than
-/// modelling infeasibility. Controllers that re-solve should hold a
-/// [`FreezeLpSolver`] instead to reuse the optimal basis.
+/// Build and solve the freeze LP from scratch. Without a stage floor the
+/// LP is always feasible by construction (w = w_max satisfies every
+/// constraint), so `Err(Solver(_))` indicates numerically hostile inputs
+/// rather than modelling infeasibility; with a floor, genuine
+/// infeasibility (floor above budget) is rejected upfront as
+/// [`FreezeLpError::FloorExceedsBudget`] and the LP itself stays
+/// feasible (any per-stage average in `[r_min_s, r_max]` is realizable
+/// within the `[w_min, w_max]` boxes). Controllers that re-solve should
+/// hold a [`FreezeLpSolver`] instead to reuse the optimal basis.
 pub fn solve_freeze_lp(input: &FreezeLpInput) -> Result<FreezeSolution, FreezeLpError> {
     FreezeLpSolver::new().solve(input)
 }
@@ -187,6 +324,32 @@ fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
         let (lo, hi) = (input.w_min[i], input.w_max[i]);
         if !(lo.is_finite() && hi.is_finite()) || lo < 0.0 || hi < lo {
             return Err(FreezeLpError::BadBounds { node: i, w_min: lo, w_max: hi });
+        }
+    }
+    if let Some(rmin) = input.r_min {
+        if rmin.len() != pdag.stages {
+            return Err(FreezeLpError::BadStageFloor {
+                stage: usize::MAX,
+                r_min: rmin.len() as f64,
+            });
+        }
+        for (s, &r) in rmin.iter().enumerate() {
+            if !r.is_finite() || !(0.0..=1.0).contains(&r) {
+                return Err(FreezeLpError::BadStageFloor { stage: s, r_min: r });
+            }
+            if r > input.r_max {
+                return Err(FreezeLpError::FloorExceedsBudget {
+                    stage: s,
+                    r_min: r,
+                    r_max: input.r_max,
+                });
+            }
+        }
+    }
+    if let Some(ec) = input.edge_costs {
+        let want = pdag.csr.edge_count();
+        if ec.len() != want || ec.iter().any(|c| !c.is_finite() || *c < 0.0) {
+            return Err(FreezeLpError::BadEdgeCosts { got: ec.len(), want });
         }
     }
 
@@ -219,7 +382,7 @@ fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
     // Variable layout: P_0..P_{n-1}, then w_i for *freezable* nodes only
     // — fixed-duration nodes (forwards, dgrad) enter the precedence rows
     // as constants, roughly halving the column count and, empirically,
-    // cutting simplex time ~4× on ZBV-sized DAGs (EXPERIMENTS.md §Perf).
+    // cutting simplex time ~4× on ZBV-sized DAGs (PERF.md §2).
     let mut p_var = Vec::with_capacity(n);
     for i in 0..n {
         let cost = if i == pdag.dest { 1.0 } else { 0.0 };
@@ -239,35 +402,45 @@ fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
         }
     }
 
-    // [1] precedence: P_j − P_i − w_i ≥ 0 (w_i constant when fixed).
+    // [1] precedence: P_j − P_i − w_i ≥ e_ij (w_i constant when fixed).
+    // Edges iterate u-major over the deduplicated adjacency — the same
+    // CSR edge order `p2p_edge_costs` produces, so `eidx` indexes
+    // `input.edge_costs` directly.
+    let mut eidx = 0usize;
     for u in 0..n {
         for &v in &pdag.dag.succs[u] {
+            let ec = input.edge_costs.map_or(0.0, |e| e[eidx]);
+            eidx += 1;
             match w_var[u] {
                 Some(wu) => lp.add_row(
                     vec![(p_var[v], 1.0), (p_var[u], -1.0), (wu, -1.0)],
                     Cmp::Ge,
-                    0.0,
+                    ec,
                 ),
                 None => lp.add_row(
                     vec![(p_var[v], 1.0), (p_var[u], -1.0)],
                     Cmp::Ge,
-                    input.w_max[u],
+                    input.w_max[u] + ec,
                 ),
             }
         }
     }
 
-    // [4] stage budget: Σ δ_i w_i ≥ Σ δ_i w_max_i − r_max |V_s|.
-    for set in pdag.freezable_by_stage() {
+    // [4] stage budget: Σ δ_i w_i ≥ Σ δ_i w_max_i − r_max |V_s|, and
+    // [5] memory floor: Σ δ_i w_i ≤ Σ δ_i w_max_i − r_min_s |V_s|.
+    for (s, set) in pdag.freezable_by_stage().iter().enumerate() {
         if set.is_empty() {
             continue;
         }
-        let rhs: f64 =
-            set.iter().map(|&i| delta[i] * input.w_max[i]).sum::<f64>()
-                - input.r_max * set.len() as f64;
+        let wmax_term: f64 = set.iter().map(|&i| delta[i] * input.w_max[i]).sum::<f64>();
         let coeffs: Vec<(usize, f64)> =
             set.iter().filter_map(|&i| w_var[i].map(|wi| (wi, delta[i]))).collect();
-        lp.add_row(coeffs, Cmp::Ge, rhs);
+        lp.add_row(coeffs.clone(), Cmp::Ge, wmax_term - input.r_max * set.len() as f64);
+        if let Some(rmin) = input.r_min {
+            if rmin[s] > 0.0 {
+                lp.add_row(coeffs, Cmp::Le, wmax_term - rmin[s] * set.len() as f64);
+            }
+        }
     }
 
     Ok(BuiltLp { lp, w_var, delta })
@@ -293,14 +466,19 @@ fn extract_solution(
     // may carry slack on non-critical nodes. The three longest-path
     // sweeps (chosen durations + both envelopes of eq. 46) run straight
     // off the DAG's cached CSR: no clone, one scratch buffer for the
-    // envelopes.
+    // envelopes. With edge costs, the same sweeps charge e_ij so the
+    // reported times match the precedence rows the LP optimized.
+    let sweep = |weights: &[f64], out: &mut Vec<f64>| match input.edge_costs {
+        None => pdag.csr.start_times_into(weights, out),
+        Some(ec) => pdag.csr.start_times_with_edges_into(weights, ec, out),
+    };
     let mut start_times = Vec::new();
-    pdag.csr.start_times_into(&w, &mut start_times);
+    sweep(&w, &mut start_times);
     let batch_time = start_times[pdag.dest];
     let mut scratch = Vec::new();
-    pdag.csr.start_times_into(input.w_max, &mut scratch);
+    sweep(input.w_max, &mut scratch);
     let p_d_max = scratch[pdag.dest];
-    pdag.csr.start_times_into(input.w_min, &mut scratch);
+    sweep(input.w_min, &mut scratch);
     let p_d_min = scratch[pdag.dest];
 
     FreezeSolution {
@@ -358,14 +536,7 @@ mod tests {
     }
 
     fn solve(g: &PipelineDag, w_min: &[f64], w_max: &[f64], r_max: f64) -> FreezeSolution {
-        solve_freeze_lp(&FreezeLpInput {
-            pdag: g,
-            w_min,
-            w_max,
-            r_max,
-            lambda: DEFAULT_LAMBDA,
-        })
-        .unwrap()
+        solve_freeze_lp(&FreezeLpInput::new(g, w_min, w_max, r_max, DEFAULT_LAMBDA)).unwrap()
     }
 
     #[test]
@@ -554,13 +725,7 @@ mod tests {
         let mut rng = crate::util::rng::Rng::seed_from_u64(99);
         for round in 0..6 {
             let r_max = 0.4 + 0.1 * (round % 3) as f64;
-            let input = FreezeLpInput {
-                pdag: &g,
-                w_min: &w_min,
-                w_max: &w_max,
-                r_max,
-                lambda: DEFAULT_LAMBDA,
-            };
+            let input = FreezeLpInput::new(&g, &w_min, &w_max, r_max, DEFAULT_LAMBDA);
             let warm = solver.solve(&input).unwrap();
             let cold = solve_freeze_lp(&input).unwrap();
             assert!(
@@ -584,13 +749,7 @@ mod tests {
     #[test]
     fn warm_solver_converges_in_few_pivots() {
         let (g, w_min, w_max) = setup(ScheduleKind::OneFOneB, 4, 8, 0.4);
-        let input = FreezeLpInput {
-            pdag: &g,
-            w_min: &w_min,
-            w_max: &w_max,
-            r_max: 0.8,
-            lambda: DEFAULT_LAMBDA,
-        };
+        let input = FreezeLpInput::new(&g, &w_min, &w_max, 0.8, DEFAULT_LAMBDA);
         let mut solver = FreezeLpSolver::new();
         let cold = solver.solve(&input).unwrap();
         // Identical re-solve: pricing certifies optimality immediately.
@@ -607,9 +766,81 @@ mod tests {
     #[test]
     fn rejects_bad_inputs() {
         let (g, w_min, w_max) = setup(ScheduleKind::GPipe, 2, 2, 0.5);
-        let bad = FreezeLpInput { pdag: &g, w_min: &w_min[1..], w_max: &w_max, r_max: 0.5, lambda: 1e-4 };
+        let bad = FreezeLpInput::new(&g, &w_min[1..], &w_max, 0.5, 1e-4);
         assert!(matches!(solve_freeze_lp(&bad), Err(FreezeLpError::BadLength { .. })));
-        let bad2 = FreezeLpInput { pdag: &g, w_min: &w_min, w_max: &w_max, r_max: 1.5, lambda: 1e-4 };
+        let bad2 = FreezeLpInput::new(&g, &w_min, &w_max, 1.5, 1e-4);
         assert!(matches!(solve_freeze_lp(&bad2), Err(FreezeLpError::BadRmax(_))));
+        // Floor outside [0,1], floor above budget, short edge vector.
+        let floor = [0.2, 1.4];
+        let bad3 = FreezeLpInput::new(&g, &w_min, &w_max, 0.5, 1e-4).with_stage_floor(&floor);
+        assert!(matches!(
+            solve_freeze_lp(&bad3),
+            Err(FreezeLpError::BadStageFloor { stage: 1, .. })
+        ));
+        let floor = [0.2, 0.9];
+        let bad4 = FreezeLpInput::new(&g, &w_min, &w_max, 0.5, 1e-4).with_stage_floor(&floor);
+        assert!(matches!(
+            solve_freeze_lp(&bad4),
+            Err(FreezeLpError::FloorExceedsBudget { stage: 1, .. })
+        ));
+        let short = [0.0; 3];
+        let bad5 = FreezeLpInput::new(&g, &w_min, &w_max, 0.5, 1e-4).with_edge_costs(&short);
+        assert!(matches!(solve_freeze_lp(&bad5), Err(FreezeLpError::BadEdgeCosts { .. })));
+    }
+
+    #[test]
+    fn stage_floor_binds_from_below() {
+        // Without a floor, cheap stages freeze ~nothing (tie-breaker);
+        // with a memory floor every stage must average at least r_min.
+        let (g, w_min, w_max) = setup(ScheduleKind::OneFOneB, 4, 8, 0.4);
+        let free = solve(&g, &w_min, &w_max, 0.8);
+        let floor = vec![0.5; 4];
+        let sol = solve_freeze_lp(
+            &FreezeLpInput::new(&g, &w_min, &w_max, 0.8, DEFAULT_LAMBDA)
+                .with_stage_floor(&floor),
+        )
+        .unwrap();
+        let rs = sol.stage_ratios(&g);
+        for (s, &r) in rs.iter().enumerate() {
+            assert!(r >= 0.5 - 1e-6, "stage {s} below floor: {r}");
+            assert!(r <= 0.8 + 1e-6, "stage {s} over budget: {r}");
+        }
+        // Forcing freezing can only help (or leave) the batch time.
+        assert!(sol.batch_time <= free.batch_time + 1e-6);
+        // A floor of zero reproduces the unconstrained optimum exactly.
+        let zeros = vec![0.0; 4];
+        let same = solve_freeze_lp(
+            &FreezeLpInput::new(&g, &w_min, &w_max, 0.8, DEFAULT_LAMBDA)
+                .with_stage_floor(&zeros),
+        )
+        .unwrap();
+        assert_eq!(same.batch_time, free.batch_time);
+        assert_eq!(same.ratios, free.ratios);
+    }
+
+    #[test]
+    fn edge_costs_raise_batch_time_and_shift_optimum() {
+        let (g, w_min, w_max) = setup(ScheduleKind::GPipe, 4, 4, 0.5);
+        let free = solve(&g, &w_min, &w_max, 0.8);
+        let ec = g.p2p_edge_costs(|_, _| 0.4);
+        let sol = solve_freeze_lp(
+            &FreezeLpInput::new(&g, &w_min, &w_max, 0.8, DEFAULT_LAMBDA).with_edge_costs(&ec),
+        )
+        .unwrap();
+        // Communication inflates the whole envelope.
+        assert!(sol.p_d_max > free.p_d_max + 1e-9);
+        assert!(sol.batch_time > free.batch_time - 1e-9);
+        // The reported batch time matches an edge-aware DAG sweep of the
+        // chosen durations.
+        assert!((sol.batch_time - g.batch_time_with_edges(&sol.w, &ec)).abs() < 1e-9);
+        // Zero edge costs are bit-identical to the edge-free path.
+        let zeros = vec![0.0; g.csr.edge_count()];
+        let same = solve_freeze_lp(
+            &FreezeLpInput::new(&g, &w_min, &w_max, 0.8, DEFAULT_LAMBDA)
+                .with_edge_costs(&zeros),
+        )
+        .unwrap();
+        assert_eq!(same.batch_time, free.batch_time);
+        assert_eq!(same.ratios, free.ratios);
     }
 }

@@ -24,34 +24,46 @@
 //! [`Basis`]: re-solves that differ only in a few objective/RHS entries
 //! converge in a handful of pivots instead of replaying both phases.
 
+/// Shorthand for an unbounded variable bound.
 pub const INF: f64 = f64::INFINITY;
 
 /// Comparison operator of a row.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Cmp {
+    /// `≤ rhs`.
     Le,
+    /// `≥ rhs`.
     Ge,
+    /// `= rhs`.
     Eq,
 }
 
 /// One sparse constraint row: `Σ coeffs · x  cmp  rhs`.
 #[derive(Clone, Debug)]
 pub struct LpRow {
+    /// Sparse (column, coefficient) pairs.
     pub coeffs: Vec<(usize, f64)>,
+    /// Row sense.
     pub cmp: Cmp,
+    /// Right-hand side.
     pub rhs: f64,
 }
 
 /// `min cᵀx  s.t.  rows,  lower ≤ x ≤ upper`.
 #[derive(Clone, Debug, Default)]
 pub struct LpProblem {
+    /// Objective coefficients.
     pub c: Vec<f64>,
+    /// Per-variable lower bounds.
     pub lower: Vec<f64>,
+    /// Per-variable upper bounds ([`INF`] allowed).
     pub upper: Vec<f64>,
+    /// Constraint rows.
     pub rows: Vec<LpRow>,
 }
 
 impl LpProblem {
+    /// An empty problem.
     pub fn new() -> Self {
         Self::default()
     }
@@ -65,6 +77,7 @@ impl LpProblem {
         self.c.len() - 1
     }
 
+    /// Add a constraint row over existing variables.
     pub fn add_row(&mut self, coeffs: Vec<(usize, f64)>, cmp: Cmp, rhs: f64) {
         for &(j, _) in &coeffs {
             assert!(j < self.c.len(), "row references unknown variable {j}");
@@ -72,10 +85,12 @@ impl LpProblem {
         self.rows.push(LpRow { coeffs, cmp, rhs });
     }
 
+    /// Number of structural variables.
     pub fn num_vars(&self) -> usize {
         self.c.len()
     }
 
+    /// Number of constraint rows.
     pub fn num_rows(&self) -> usize {
         self.rows.len()
     }
@@ -104,16 +119,22 @@ impl LpProblem {
         true
     }
 
+    /// Evaluate `cᵀx`.
     pub fn objective(&self, x: &[f64]) -> f64 {
         self.c.iter().zip(x).map(|(c, x)| c * x).sum()
     }
 }
 
+/// Terminal state of a simplex solve.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LpStatus {
+    /// An optimal basic solution was found.
     Optimal,
+    /// No point satisfies the rows and bounds.
     Infeasible,
+    /// The objective decreases without bound.
     Unbounded,
+    /// The pivot budget was exhausted (numerically hostile input).
     IterationLimit,
 }
 
@@ -133,12 +154,16 @@ pub struct Basis {
     pub ntot: usize,
 }
 
+/// Result of [`solve`] / [`solve_from_basis`].
 #[derive(Clone, Debug)]
 pub struct LpSolution {
+    /// How the solve terminated.
     pub status: LpStatus,
     /// Values of the structural variables.
     pub x: Vec<f64>,
+    /// Objective value at `x`.
     pub objective: f64,
+    /// Simplex pivots performed.
     pub iterations: usize,
     /// Final basis (present on `Optimal`), reusable via
     /// [`solve_from_basis`].

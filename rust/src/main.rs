@@ -27,6 +27,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "method", takes_value: true, help: "none|apf|autofreeze|timely|timely+apf|timely+auto" },
         FlagSpec { name: "steps", takes_value: true, help: "training steps" },
         FlagSpec { name: "r-max", takes_value: true, help: "max average freeze ratio per stage" },
+        FlagSpec { name: "mem-budget", takes_value: true, help: "fraction of device memory available (0,1]; enables the memory-aware LP floor" },
         FlagSpec { name: "seed", takes_value: true, help: "random seed" },
         FlagSpec { name: "ranks", takes_value: true, help: "pipeline ranks (GPUs)" },
         FlagSpec { name: "microbatches", takes_value: true, help: "microbatches per step" },
@@ -96,6 +97,12 @@ fn build_sim_config(args: &Args) -> Result<ExperimentConfig, String> {
     if let Some(v) = args.flag_f64("r-max")? {
         cfg.r_max = v;
     }
+    if let Some(v) = args.flag_f64("mem-budget")? {
+        if !(0.0..=1.0).contains(&v) || v == 0.0 {
+            return Err(format!("mem-budget {v} outside (0,1]"));
+        }
+        cfg.memory_budget = Some(v);
+    }
     if let Some(v) = args.flag_u64("seed")? {
         cfg.seed = v;
     }
@@ -120,7 +127,30 @@ fn build_sim_config(args: &Args) -> Result<ExperimentConfig, String> {
         return Err(format!("phase boundaries must satisfy {w} < {m} < {f}"));
     }
     cfg.phases = PhaseConfig::new(w, m, f);
+    // Validate the memory budget upfront so the subcommand reports an
+    // unsatisfiable one (device overflow, or a floor above r_max) as a
+    // clean CLI error instead of a panic mid-run. The simulator derives
+    // the same floor from the same helper, so preview and run agree.
+    // (`table` re-validates per swept schedule — feasibility depends on
+    // the schedule's in-flight activation profile.)
+    validate_memory_budget(&cfg)?;
     Ok(cfg)
+}
+
+/// Resolve the config's memory budget to a per-stage floor for the
+/// schedule it currently names, surfacing infeasibility as a CLI error.
+fn validate_memory_budget(cfg: &ExperimentConfig) -> Result<(), String> {
+    if cfg.memory_budget.is_none() {
+        return Ok(());
+    }
+    let schedule = timelyfreeze::schedule::Schedule::build(
+        cfg.schedule,
+        cfg.ranks,
+        cfg.microbatches,
+        cfg.effective_chunks(),
+    );
+    let layout = sim::build_layout(cfg, timelyfreeze::partition::PartitionMethod::Parameter);
+    timelyfreeze::cost::stage_floor_for(cfg, &layout.layer_stage, &schedule).map(|_| ())
 }
 
 fn cmd_simulate(args: &Args) -> Result<(), String> {
@@ -147,6 +177,14 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
 
 fn cmd_table(args: &Args) -> Result<(), String> {
     let base = build_sim_config(args)?;
+    // A memory budget feasible for the base schedule can be infeasible
+    // for another (GPipe keeps every microbatch's activations in
+    // flight); check each swept schedule before running any cell.
+    for schedule in ScheduleKind::all() {
+        let mut probe = base.clone();
+        probe.schedule = schedule;
+        validate_memory_budget(&probe)?;
+    }
     for schedule in ScheduleKind::all() {
         let mut t = Table::new(
             &format!("{} — {}", base.model.name, schedule.name()),
@@ -308,14 +346,15 @@ fn cmd_lp(args: &Args) -> Result<(), String> {
     );
     let w_min = pdag.weights(|a| cost.bounds(a).0);
     let w_max = pdag.weights(|a| cost.bounds(a).1);
-    let sol = lp::solve_freeze_lp(&lp::FreezeLpInput {
-        pdag: &pdag,
-        w_min: &w_min,
-        w_max: &w_max,
-        r_max: cfg.r_max,
-        lambda: cfg.lambda,
-    })
-    .map_err(|e| e.to_string())?;
+    // Memory-constrained LP: derive the per-stage floor from the
+    // budgeted capacity (same helper the simulator runner uses) and
+    // attach constraint [5].
+    let floor = timelyfreeze::cost::stage_floor_for(&cfg, &layout.layer_stage, &schedule)?;
+    let mut input = lp::FreezeLpInput::new(&pdag, &w_min, &w_max, cfg.r_max, cfg.lambda);
+    if let Some(f) = &floor {
+        input = input.with_stage_floor(f);
+    }
+    let sol = lp::solve_freeze_lp(&input).map_err(|e| e.to_string())?;
     println!(
         "LP over {} nodes / {} edges ({} iterations)",
         pdag.len(),
@@ -326,13 +365,22 @@ fn cmd_lp(args: &Args) -> Result<(), String> {
     println!("  P_d (full freezing) {:.4} s", sol.p_d_min);
     println!("  P_d* (optimized)    {:.4} s  → κ = {:.3}", sol.batch_time, sol.kappa());
     println!("  mean expected freeze ratio: {:.3}", sol.mean_freezable_ratio(&pdag));
-    let mut t = Table::new("per-stage expected freeze ratios", &["Stage", "mean r*"]);
+    let headers: &[&str] = if floor.is_some() {
+        &["Stage", "mean r*", "memory floor"]
+    } else {
+        &["Stage", "mean r*"]
+    };
+    let mut t = Table::new("per-stage expected freeze ratios", headers);
+    let stage_ratios = sol.stage_ratios(&pdag);
     for (s, set) in pdag.freezable_by_stage().iter().enumerate() {
         if set.is_empty() {
             continue;
         }
-        let mean: f64 = set.iter().map(|&i| sol.ratios[i]).sum::<f64>() / set.len() as f64;
-        t.row(vec![format!("{s}"), format!("{mean:.3}")]);
+        let mut row = vec![format!("{s}"), format!("{:.3}", stage_ratios[s])];
+        if let Some(f) = &floor {
+            row.push(format!("{:.3}", f[s]));
+        }
+        t.row(row);
     }
     println!("{}", t.render());
     Ok(())

@@ -37,6 +37,7 @@ pub struct FreezeRatioMeter {
 }
 
 impl FreezeRatioMeter {
+    /// Fold in one step's frozen fraction.
     pub fn push(&mut self, frozen_fraction: f64) {
         self.sum += frozen_fraction.clamp(0.0, 1.0);
         self.steps += 1;
@@ -69,6 +70,7 @@ pub struct Recorder {
 }
 
 impl Recorder {
+    /// A recorder writing under `dir`.
     pub fn new<P: AsRef<Path>>(dir: P) -> Recorder {
         Recorder { dir: dir.as_ref().to_path_buf(), rows: BTreeMap::new() }
     }
@@ -78,6 +80,7 @@ impl Recorder {
         Recorder::new(concat!(env!("CARGO_MANIFEST_DIR"), "/bench_out"))
     }
 
+    /// Append a row to an experiment.
     pub fn push(&mut self, experiment: &str, row: Json) {
         self.rows.entry(experiment.to_string()).or_default().push(row);
     }

@@ -14,12 +14,15 @@ use std::collections::BTreeMap;
 /// One timing observation.
 #[derive(Clone, Copy, Debug)]
 pub struct TimingSample {
+    /// Which action was measured.
     pub action: Action,
     /// Actual freeze ratio in effect when measured.
     pub afr: f64,
+    /// Measured duration, seconds.
     pub duration: f64,
 }
 
+/// Collected timing samples with per-action grouping.
 #[derive(Clone, Debug, Default)]
 pub struct TimingMonitor {
     /// All samples, grouped per action.
@@ -27,10 +30,12 @@ pub struct TimingMonitor {
 }
 
 impl TimingMonitor {
+    /// An empty monitor.
     pub fn new() -> TimingMonitor {
         TimingMonitor::default()
     }
 
+    /// Record one sample.
     pub fn record(&mut self, sample: TimingSample) {
         self.per_action
             .entry(sample.action)
@@ -38,16 +43,19 @@ impl TimingMonitor {
             .push((sample.afr, sample.duration));
     }
 
+    /// Record a batch of samples.
     pub fn record_all<I: IntoIterator<Item = TimingSample>>(&mut self, it: I) {
         for s in it {
             self.record(s);
         }
     }
 
+    /// Total sample count.
     pub fn len(&self) -> usize {
         self.per_action.values().map(|v| v.len()).sum()
     }
 
+    /// Whether no samples have been recorded.
     pub fn is_empty(&self) -> bool {
         self.per_action.is_empty()
     }

@@ -76,6 +76,7 @@ pub enum PartitionMethod {
 }
 
 impl PartitionMethod {
+    /// Display name.
     pub fn name(self) -> &'static str {
         match self {
             PartitionMethod::Memory => "Memory",
@@ -84,6 +85,7 @@ impl PartitionMethod {
         }
     }
 
+    /// Every heuristic, in Appendix G.1's order.
     pub fn all() -> [PartitionMethod; 3] {
         [PartitionMethod::Memory, PartitionMethod::Parameter, PartitionMethod::Time]
     }
@@ -101,6 +103,7 @@ pub struct LayerProfile {
 }
 
 impl LayerProfile {
+    /// Partition by the weight vector `method` selects.
     pub fn partition(&self, method: PartitionMethod, stages: usize) -> Vec<usize> {
         let weights = match method {
             PartitionMethod::Memory => &self.memory,

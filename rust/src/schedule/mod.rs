@@ -25,6 +25,7 @@ use crate::types::{Action, ActionKind, ScheduleKind};
 /// A fully-instantiated pipeline schedule for one batch.
 #[derive(Clone, Debug)]
 pub struct Schedule {
+    /// Which schedule family built this.
     pub kind: ScheduleKind,
     /// Number of physical GPU ranks.
     pub ranks: usize,
@@ -32,6 +33,7 @@ pub struct Schedule {
     pub chunks: usize,
     /// Total virtual stages = `ranks * chunks`.
     pub stages: usize,
+    /// Microbatches per batch.
     pub microbatches: usize,
     /// Virtual stage → rank placement.
     pub rank_of_stage: Vec<usize>,

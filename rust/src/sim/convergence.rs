@@ -1,4 +1,5 @@
-//! Convergence simulator — the accuracy-proxy substrate (DESIGN.md §6).
+//! Convergence simulator — the accuracy-proxy substrate (see
+//! docs/ARCHITECTURE.md §"Accuracy proxy").
 //!
 //! The paper evaluates accuracy by fine-tuning LLaMA/ViT models on real
 //! datasets, which this testbed cannot run. Appendix D shows the paper's
@@ -27,7 +28,9 @@ pub struct ConvergenceSim {
     theta: Vec<f64>,
     /// Per-unit curvature.
     h: Vec<f64>,
+    /// Number of bookkeeping units.
     pub units: usize,
+    /// Synthetic parameter dimensions per unit.
     pub dims: usize,
     /// Gradient noise scale.
     pub sigma: f64,
@@ -78,6 +81,7 @@ impl ConvergenceSim {
         sim
     }
 
+    /// Current objective value (per-parameter average).
     pub fn loss(&self) -> f64 {
         let mut f = 0.0;
         for u in 0..self.units {
@@ -90,6 +94,7 @@ impl ConvergenceSim {
         f / (self.units * self.dims) as f64
     }
 
+    /// Objective value at initialization.
     pub fn initial_loss(&self) -> f64 {
         self.initial_loss
     }

@@ -13,6 +13,7 @@ use crate::util::rng::Rng;
 /// with fixed decaying probabilities.
 #[derive(Clone, Debug)]
 pub struct BigramCorpus {
+    /// Vocabulary size.
     pub vocab: usize,
     /// successors[t] = candidate next tokens for t.
     successors: Vec<Vec<u32>>,
@@ -21,6 +22,7 @@ pub struct BigramCorpus {
 }
 
 impl BigramCorpus {
+    /// Build the transition table deterministically from `seed`.
     pub fn new(vocab: usize, seed: u64) -> BigramCorpus {
         assert!(vocab >= 8, "vocab too small");
         let branching = 4;

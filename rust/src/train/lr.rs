@@ -2,16 +2,21 @@
 //! "Cosine Annealing" row). The warm-up length is the same `T_w` the
 //! freeze controller aligns to (§3.1).
 
+/// Linear warm-up followed by cosine annealing to a floor.
 #[derive(Clone, Copy, Debug)]
 pub struct LrSchedule {
+    /// Peak learning rate.
     pub base_lr: f64,
+    /// Linear warm-up length (aligned with `T_w`).
     pub warmup_steps: usize,
+    /// Total schedule length.
     pub total_steps: usize,
     /// Floor as a fraction of base_lr.
     pub min_ratio: f64,
 }
 
 impl LrSchedule {
+    /// Standard cosine schedule with a 10% floor.
     pub fn cosine(base_lr: f64, warmup_steps: usize, total_steps: usize) -> LrSchedule {
         assert!(total_steps > warmup_steps, "total must exceed warmup");
         LrSchedule { base_lr, warmup_steps, total_steps, min_ratio: 0.1 }

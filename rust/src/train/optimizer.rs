@@ -6,15 +6,31 @@
 /// Optimizer family (Table 3: AdamW for language, SGD for ViT).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum OptimizerKind {
-    AdamW { beta1: f64, beta2: f64, eps: f64, weight_decay: f64 },
-    Sgd { momentum: f64 },
+    /// AdamW with decoupled weight decay.
+    AdamW {
+        /// First-moment decay β₁.
+        beta1: f64,
+        /// Second-moment decay β₂.
+        beta2: f64,
+        /// Denominator stabilizer ε.
+        eps: f64,
+        /// Decoupled weight-decay coefficient.
+        weight_decay: f64,
+    },
+    /// SGD with classical momentum.
+    Sgd {
+        /// Momentum coefficient.
+        momentum: f64,
+    },
 }
 
 impl OptimizerKind {
+    /// The paper's AdamW defaults.
     pub fn adamw() -> OptimizerKind {
         OptimizerKind::AdamW { beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.01 }
     }
 
+    /// SGD with the given momentum.
     pub fn sgd(momentum: f64) -> OptimizerKind {
         OptimizerKind::Sgd { momentum }
     }
@@ -36,12 +52,16 @@ pub struct Optimizer {
 /// UnitDelta statistics).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct UpdateStats {
+    /// Σ of applied update elements.
     pub signed: f64,
+    /// Σ |update|.
     pub abs: f64,
+    /// Σ update².
     pub sq: f64,
 }
 
 impl Optimizer {
+    /// Register the tensor set (sizes fix the state shapes).
     pub fn new(kind: OptimizerKind, tensor_sizes: &[usize]) -> Optimizer {
         let states = tensor_sizes
             .iter()
@@ -55,6 +75,7 @@ impl Optimizer {
         Optimizer { kind, states }
     }
 
+    /// Number of registered tensors.
     pub fn num_tensors(&self) -> usize {
         self.states.len()
     }

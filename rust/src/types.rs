@@ -50,6 +50,7 @@ impl ActionKind {
 /// the schedule maps stages to ranks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Action {
+    /// What the action computes.
     pub kind: ActionKind,
     /// Microbatch index, 0-based (`m ∈ {1..M}` in the paper).
     pub mb: usize,
@@ -58,18 +59,22 @@ pub struct Action {
 }
 
 impl Action {
+    /// Forward action `v_(f, mb, stage)`.
     pub fn f(mb: usize, stage: usize) -> Action {
         Action { kind: ActionKind::Forward, mb, stage }
     }
 
+    /// Combined backward action `v_(b, mb, stage)`.
     pub fn b(mb: usize, stage: usize) -> Action {
         Action { kind: ActionKind::Backward, mb, stage }
     }
 
+    /// Zero-Bubble "B" (activation-gradient) action.
     pub fn bd(mb: usize, stage: usize) -> Action {
         Action { kind: ActionKind::BackwardDgrad, mb, stage }
     }
 
+    /// Zero-Bubble "W" (parameter-gradient) action.
     pub fn bw(mb: usize, stage: usize) -> Action {
         Action { kind: ActionKind::BackwardWgrad, mb, stage }
     }
@@ -84,14 +89,18 @@ impl std::fmt::Display for Action {
 /// The four pipeline schedules evaluated in the paper (§4.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ScheduleKind {
+    /// All forwards, then all backwards (Huang et al. 2019).
     GPipe,
+    /// One-forward-one-backward steady state (PipeDream-Flush).
     OneFOneB,
+    /// 1F1B over multiple model chunks per rank (Megatron-LM).
     Interleaved1F1B,
     /// Zero-Bubble V-shaped (ZBV), with the B/W backward split.
     ZeroBubbleV,
 }
 
 impl ScheduleKind {
+    /// Display name (e.g. "1F1B").
     pub fn name(self) -> &'static str {
         match self {
             ScheduleKind::GPipe => "GPipe",
@@ -101,6 +110,7 @@ impl ScheduleKind {
         }
     }
 
+    /// Parse a user-supplied name (case/punctuation-insensitive).
     pub fn parse(s: &str) -> Option<ScheduleKind> {
         match s.to_ascii_lowercase().replace(['-', '_', ' '], "").as_str() {
             "gpipe" => Some(ScheduleKind::GPipe),
@@ -111,6 +121,7 @@ impl ScheduleKind {
         }
     }
 
+    /// Every schedule, in the paper's presentation order.
     pub fn all() -> [ScheduleKind; 4] {
         [
             ScheduleKind::GPipe,
@@ -124,15 +135,22 @@ impl ScheduleKind {
 /// The freezing methods compared throughout the evaluation (Table 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum FreezeMethod {
+    /// Baseline: every parameter trains every step.
     NoFreezing,
+    /// APF (Chen et al. 2023): per-parameter perturbation scores.
     Apf,
+    /// AutoFreeze (Liu et al. 2021): monotone prefix freezing.
     AutoFreeze,
+    /// The paper's LP-planned, schedule-aware controller.
     TimelyFreeze,
+    /// TimelyFreeze budget + APF's metric-aware selection.
     TimelyApf,
+    /// TimelyFreeze budget + AutoFreeze's metric-aware selection.
     TimelyAuto,
 }
 
 impl FreezeMethod {
+    /// Display name (e.g. "TimelyFreeze+APF").
     pub fn name(self) -> &'static str {
         match self {
             FreezeMethod::NoFreezing => "No Freezing",
@@ -144,6 +162,7 @@ impl FreezeMethod {
         }
     }
 
+    /// Parse a user-supplied name (case/punctuation-insensitive).
     pub fn parse(s: &str) -> Option<FreezeMethod> {
         match s.to_ascii_lowercase().replace(['-', '_', ' ', '+'], "").as_str() {
             "none" | "nofreezing" | "nofreeze" => Some(FreezeMethod::NoFreezing),
@@ -158,6 +177,7 @@ impl FreezeMethod {
         }
     }
 
+    /// Every method, in Table 1's row order.
     pub fn all() -> [FreezeMethod; 6] {
         [
             FreezeMethod::NoFreezing,

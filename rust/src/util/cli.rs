@@ -6,18 +6,25 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: subcommand, flags, and positionals.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// First non-flag token, if any.
     pub subcommand: Option<String>,
+    /// Flag name → value ("true" for boolean flags).
     pub flags: BTreeMap<String, String>,
+    /// Remaining non-flag tokens.
     pub positional: Vec<String>,
 }
 
 /// Declarative flag spec used for validation + help text.
 #[derive(Clone, Debug)]
 pub struct FlagSpec {
+    /// Flag name without the leading `--`.
     pub name: &'static str,
+    /// Whether the flag consumes a value.
     pub takes_value: bool,
+    /// One-line help text.
     pub help: &'static str,
 }
 
@@ -64,18 +71,22 @@ impl Args {
         Ok(out)
     }
 
+    /// Raw value of a flag, if present.
     pub fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// Value of a flag, or `default` when absent.
     pub fn flag_or(&self, name: &str, default: &str) -> String {
         self.flag(name).unwrap_or(default).to_string()
     }
 
+    /// Whether a boolean flag was given (accepts true/1/yes).
     pub fn flag_bool(&self, name: &str) -> bool {
         matches!(self.flag(name), Some("true" | "1" | "yes"))
     }
 
+    /// Parse a flag as `usize`; `Ok(None)` when absent.
     pub fn flag_usize(&self, name: &str) -> Result<Option<usize>, String> {
         match self.flag(name) {
             None => Ok(None),
@@ -86,6 +97,7 @@ impl Args {
         }
     }
 
+    /// Parse a flag as `u64`; `Ok(None)` when absent.
     pub fn flag_u64(&self, name: &str) -> Result<Option<u64>, String> {
         match self.flag(name) {
             None => Ok(None),
@@ -96,6 +108,7 @@ impl Args {
         }
     }
 
+    /// Parse a flag as `f64`; `Ok(None)` when absent.
     pub fn flag_f64(&self, name: &str) -> Result<Option<f64>, String> {
         match self.flag(name) {
             None => Ok(None),

@@ -9,17 +9,25 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys for deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -27,14 +35,17 @@ impl Json {
         }
     }
 
+    /// The number truncated to `i64`, if this is a `Num`.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|x| x as i64)
     }
 
+    /// The number as a non-negative index, if this is a `Num ≥ 0`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|x| if x >= 0.0 { Some(x as usize) } else { None })
     }
 
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -42,6 +53,7 @@ impl Json {
         }
     }
 
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -49,6 +61,7 @@ impl Json {
         }
     }
 
+    /// The items, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -56,6 +69,7 @@ impl Json {
         }
     }
 
+    /// The map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -63,6 +77,7 @@ impl Json {
         }
     }
 
+    /// Object field lookup (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|o| o.get(key))
     }
@@ -76,14 +91,17 @@ impl Json {
         Some(cur)
     }
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Shorthand for `Json::Num`.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
+    /// Shorthand for `Json::Str` from a borrowed string.
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
@@ -155,6 +173,7 @@ impl Json {
         }
     }
 
+    /// Parse a JSON document (rejecting trailing characters).
     pub fn parse(src: &str) -> Result<Json, JsonError> {
         let mut p = Parser { src: src.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -194,9 +213,12 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// A parse failure with its byte position.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub pos: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 

@@ -1,9 +1,15 @@
 //! Foundational utilities implemented from scratch for the offline build:
 //! RNG, statistics, JSON, a TOML subset, CLI parsing, and table rendering.
 
+/// Declarative flag parsing for the `tfreeze` launcher.
 pub mod cli;
+/// Minimal JSON value, parser, and pretty-printer.
 pub mod json;
+/// Deterministic splittable PRNG (SplitMix64-based).
 pub mod rng;
+/// Streaming accumulators, percentiles, linear fits.
 pub mod stats;
+/// Fixed-width ASCII table rendering.
 pub mod table;
+/// The TOML subset the experiment configs need.
 pub mod toml;

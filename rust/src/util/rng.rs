@@ -52,6 +52,7 @@ impl Rng {
         Rng { s }
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
@@ -68,6 +69,7 @@ impl Rng {
         result
     }
 
+    /// Next 32-bit output (the high half, per xoshiro guidance).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32

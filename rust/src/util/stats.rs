@@ -19,14 +19,17 @@ pub fn variance(xs: &[f64]) -> f64 {
     xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
 }
 
+/// Population standard deviation; 0.0 for fewer than 2 samples.
 pub fn stddev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }
 
+/// Minimum (`+inf` for an empty slice).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
+/// Maximum (`-inf` for an empty slice).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
@@ -50,6 +53,7 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Median (50th percentile).
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
@@ -60,12 +64,15 @@ pub fn median(xs: &[f64]) -> f64 {
 /// backward time as a linear function of the effective freeze ratio.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LinFit {
+    /// Fitted slope.
     pub slope: f64,
+    /// Fitted intercept.
     pub intercept: f64,
     /// Coefficient of determination.
     pub r2: f64,
 }
 
+/// OLS fit of `ys` on `xs`; `None` for degenerate inputs.
 pub fn linear_fit(xs: &[f64], ys: &[f64]) -> Option<LinFit> {
     let n = xs.len();
     if n < 2 || n != ys.len() {
@@ -96,16 +103,19 @@ pub fn linear_fit(xs: &[f64], ys: &[f64]) -> Option<LinFit> {
 /// perturbation score (eq. 2): `E_K = α·E_{K−1} + (1−α)·x`.
 #[derive(Clone, Copy, Debug)]
 pub struct Ema {
+    /// Smoothing factor α of eq. 2.
     pub alpha: f64,
     value: Option<f64>,
 }
 
 impl Ema {
+    /// An EMA with `E_0 = 0` semantics.
     pub fn new(alpha: f64) -> Self {
         assert!((0.0..=1.0).contains(&alpha), "alpha must be in [0,1]");
         Ema { alpha, value: None }
     }
 
+    /// Fold in a sample, returning the new EMA value.
     pub fn update(&mut self, x: f64) -> f64 {
         let v = match self.value {
             // The paper initializes E_0 = 0, so the first update is
@@ -117,10 +127,12 @@ impl Ema {
         v
     }
 
+    /// Current EMA value (0.0 before the first update).
     pub fn value(&self) -> f64 {
         self.value.unwrap_or(0.0)
     }
 
+    /// Whether any sample has been folded in.
     pub fn is_initialized(&self) -> bool {
         self.value.is_some()
     }
@@ -129,18 +141,25 @@ impl Ema {
 /// Online mean/min/max accumulator for streaming timing samples.
 #[derive(Clone, Debug, Default)]
 pub struct Accum {
+    /// Sample count.
     pub n: u64,
+    /// Running sum.
     pub sum: f64,
+    /// Running sum of squares.
     pub sum_sq: f64,
+    /// Smallest sample seen.
     pub min: f64,
+    /// Largest sample seen.
     pub max: f64,
 }
 
 impl Accum {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Accum { n: 0, sum: 0.0, sum_sq: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold in a sample.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         self.sum += x;
@@ -149,6 +168,7 @@ impl Accum {
         self.max = self.max.max(x);
     }
 
+    /// Mean of the samples (0.0 when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -157,6 +177,7 @@ impl Accum {
         }
     }
 
+    /// Population variance (0.0 for fewer than 2 samples).
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             return 0.0;
@@ -165,6 +186,7 @@ impl Accum {
         (self.sum_sq / self.n as f64 - m * m).max(0.0)
     }
 
+    /// Population standard deviation.
     pub fn stddev(&self) -> f64 {
         self.variance().sqrt()
     }

@@ -1,14 +1,19 @@
 //! Plain-text table rendering for the benchmark harness — every bench
 //! prints rows in the same layout as the paper's tables.
 
+/// A titled, fixed-width text table.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
+    /// Title printed above the table.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows (each as wide as `headers`).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given title and headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -17,6 +22,7 @@ impl Table {
         }
     }
 
+    /// Append a row; panics on a width mismatch.
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(
             cells.len(),
@@ -28,6 +34,7 @@ impl Table {
         self.rows.push(cells);
     }
 
+    /// Render to a string with padded columns and a separator line.
     pub fn render(&self) -> String {
         let ncol = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
@@ -74,6 +81,7 @@ pub fn fmt_delta(value: f64, delta: f64, decimals: usize) -> String {
     format!("{value:.decimals$} ({delta:+.decimals$})")
 }
 
+/// Format a fraction as a percentage with two decimals.
 pub fn fmt_pct(x: f64) -> String {
     format!("{:.2}", x * 100.0)
 }

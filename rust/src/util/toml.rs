@@ -12,16 +12,23 @@
 
 use std::collections::BTreeMap;
 
+/// A parsed TOML scalar or array.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlValue {
+    /// A quoted string.
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// An array of scalars.
     Arr(Vec<TomlValue>),
 }
 
 impl TomlValue {
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             TomlValue::Str(s) => Some(s),
@@ -29,6 +36,7 @@ impl TomlValue {
         }
     }
 
+    /// The integer, if this is an `Int`.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             TomlValue::Int(x) => Some(*x),
@@ -36,6 +44,7 @@ impl TomlValue {
         }
     }
 
+    /// The number (floats and ints), if numeric.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             TomlValue::Float(x) => Some(*x),
@@ -44,6 +53,7 @@ impl TomlValue {
         }
     }
 
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             TomlValue::Bool(b) => Some(*b),
@@ -51,6 +61,7 @@ impl TomlValue {
         }
     }
 
+    /// The items, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[TomlValue]> {
         match self {
             TomlValue::Arr(a) => Some(a),
@@ -59,9 +70,12 @@ impl TomlValue {
     }
 }
 
+/// A parse failure with its line number.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TomlError {
+    /// 0-based line of the failure.
     pub line: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 
@@ -76,10 +90,12 @@ impl std::error::Error for TomlError {}
 /// Flat document: `section.key → value`.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct TomlDoc {
+    /// `section.key` → value.
     pub entries: BTreeMap<String, TomlValue>,
 }
 
 impl TomlDoc {
+    /// Parse the supported TOML subset (see the module docs).
     pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
         let mut entries = BTreeMap::new();
         let mut section = String::new();
@@ -115,26 +131,32 @@ impl TomlDoc {
         Ok(TomlDoc { entries })
     }
 
+    /// Look up a flat `section.key`.
     pub fn get(&self, key: &str) -> Option<&TomlValue> {
         self.entries.get(key)
     }
 
+    /// Typed lookup: string.
     pub fn get_str(&self, key: &str) -> Option<&str> {
         self.get(key).and_then(|v| v.as_str())
     }
 
+    /// Typed lookup: integer.
     pub fn get_i64(&self, key: &str) -> Option<i64> {
         self.get(key).and_then(|v| v.as_i64())
     }
 
+    /// Typed lookup: non-negative integer.
     pub fn get_usize(&self, key: &str) -> Option<usize> {
         self.get_i64(key).and_then(|x| usize::try_from(x).ok())
     }
 
+    /// Typed lookup: number (floats and ints).
     pub fn get_f64(&self, key: &str) -> Option<f64> {
         self.get(key).and_then(|v| v.as_f64())
     }
 
+    /// Typed lookup: boolean.
     pub fn get_bool(&self, key: &str) -> Option<bool> {
         self.get(key).and_then(|v| v.as_bool())
     }

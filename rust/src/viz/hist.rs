@@ -27,7 +27,9 @@ pub fn histogram(values: &[f64], bins: usize, width: usize, title: &str) -> Stri
 /// the per-unit freeze frequencies are.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FreezeSpread {
+    /// Mean per-unit freeze frequency.
     pub mean: f64,
+    /// Standard deviation of the frequencies.
     pub stddev: f64,
     /// Fraction of units frozen (ratio > 0.99) ~always.
     pub saturated: f64,
@@ -35,6 +37,7 @@ pub struct FreezeSpread {
     pub untouched: f64,
 }
 
+/// Summarize a per-unit freeze-frequency distribution.
 pub fn spread(values: &[f64]) -> FreezeSpread {
     if values.is_empty() {
         return FreezeSpread { mean: 0.0, stddev: 0.0, saturated: 0.0, untouched: 1.0 };

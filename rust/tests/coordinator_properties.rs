@@ -100,14 +100,8 @@ fn prop_lp_respects_envelopes_budget_and_monotonicity() {
         }
         let mut prev = f64::INFINITY;
         for r_max in [0.0, 0.5, 1.0] {
-            let sol = solve_freeze_lp(&FreezeLpInput {
-                pdag: &g,
-                w_min: &w_min,
-                w_max: &w_max,
-                r_max,
-                lambda: 1e-4,
-            })
-            .map_err(|e| e.to_string())?;
+            let sol = solve_freeze_lp(&FreezeLpInput::new(&g, &w_min, &w_max, r_max, 1e-4))
+                .map_err(|e| e.to_string())?;
             if sol.batch_time > sol.p_d_max + 1e-6 || sol.batch_time < sol.p_d_min - 1e-6 {
                 return Err(format!(
                     "P_d* {} outside [{}, {}]",

@@ -131,13 +131,7 @@ fn prop_warm_lp_matches_cold_across_perturbations() {
         let mut solver = FreezeLpSolver::new();
         for round in 0..4 {
             let r_max = rng.range_f64(0.1, 1.0);
-            let input = FreezeLpInput {
-                pdag: &g,
-                w_min: &w_min,
-                w_max: &w_max,
-                r_max,
-                lambda: 1e-4,
-            };
+            let input = FreezeLpInput::new(&g, &w_min, &w_max, r_max, 1e-4);
             let warm = solver.solve(&input).map_err(|e| format!("warm: {e}"))?;
             let cold = solve_freeze_lp(&input).map_err(|e| format!("cold: {e}"))?;
             if (warm.batch_time - cold.batch_time).abs() > 1e-6 {

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Perf gate for the three hot paths (see PERF.md): builds release, runs
-# the perf_micro bench suite, records the result as a BENCH_*.json
-# trajectory point, and fails on a >20% mean-time regression against the
-# checked-in baseline (when one exists).
+# Perf + hygiene gate (see PERF.md): fmt, clippy, rustdoc with warnings
+# denied (the crate carries #![warn(missing_docs)]), release build, then
+# the perf_micro bench suite recorded as a BENCH_*.json trajectory
+# point, failing on a >20% mean-time regression against the checked-in
+# baseline (when one exists).
 #
 # Usage:
 #   scripts/perf_gate.sh [output.json]          # default: BENCH_PR1.json
@@ -35,6 +36,9 @@ cargo fmt --check
 
 echo "== clippy =="
 cargo clippy --all-targets -- -D warnings
+
+echo "== rustdoc (warnings are errors; missing_docs is active) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 echo "== build (release) =="
 cargo build --release
