@@ -19,7 +19,7 @@ fn main() {
         apply_quick(&mut cfg);
         cfg.schedule = ScheduleKind::OneFOneB;
         cfg.method = method;
-        let r = sim::run(&cfg);
+        let r = sim::run(&cfg).expect("feasible config");
         let layout = sim::build_layout(&cfg, timelyfreeze::partition::PartitionMethod::Parameter);
         // Rank 3 = last stage's units.
         let last_stage = cfg.stages() - 1;

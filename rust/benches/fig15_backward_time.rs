@@ -12,7 +12,7 @@ fn main() {
     apply_quick(&mut cfg);
     cfg.schedule = ScheduleKind::OneFOneB;
     cfg.method = FreezeMethod::TimelyFreeze;
-    let r = sim::run(&cfg);
+    let r = sim::run(&cfg).expect("feasible config");
     let mut mon = TimingMonitor::new();
     mon.record_all(r.backward_samples.iter().map(|s| TimingSample {
         action: Action::b(s.mb, s.stage),

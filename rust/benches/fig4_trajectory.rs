@@ -13,7 +13,7 @@ fn main() {
     apply_quick(&mut cfg);
     cfg.schedule = ScheduleKind::OneFOneB;
     cfg.method = FreezeMethod::TimelyFreeze;
-    let r = sim::run(&cfg);
+    let r = sim::run(&cfg).expect("feasible config");
     println!(
         "Figure 4 — {} · 1F1B · TimelyFreeze (T_w={} T_m={} T_f={})",
         cfg.model.name, cfg.phases.t_warmup, cfg.phases.t_monitor, cfg.phases.t_freeze

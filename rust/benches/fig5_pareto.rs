@@ -25,7 +25,7 @@ fn main() {
         apply_quick(&mut cfg);
         cfg.schedule = schedule;
         cfg.method = method;
-        let r = sim::run(&cfg);
+        let r = sim::run(&cfg).expect("feasible config");
         (method, r.throughput, r.accuracy)
     });
 

@@ -8,7 +8,7 @@ use timelyfreeze::types::{FreezeMethod, ScheduleKind};
 use timelyfreeze::util::json::Json;
 
 fn run(cfg: &ExperimentConfig) -> (f64, f64, f64) {
-    let r = sim::run(cfg);
+    let r = sim::run(cfg).expect("feasible config");
     (r.throughput, r.accuracy, r.freeze_ratio)
 }
 

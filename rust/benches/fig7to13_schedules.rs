@@ -28,7 +28,7 @@ fn render(figure: &str, preset: &str, schedule: ScheduleKind, ranks: usize, mb: 
         cfg.method = method;
         cfg.ranks = ranks;
         cfg.microbatches = mb;
-        sim::run(&cfg)
+        sim::run(&cfg).expect("feasible config")
     });
     let mut base_time = None;
     for (method, r) in methods.iter().zip(&results) {

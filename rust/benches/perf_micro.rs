@@ -44,6 +44,13 @@ fn main() {
     record(bench_auto("longest_path_dense/zbv_4x8", 0.3, || {
         std::hint::black_box(g.batch_time_dense(&w));
     }));
+    // The discrete-event executor over the same batch (heap-driven;
+    // expected a small constant factor above the raw sweep).
+    let mut engine = sim::EventEngine::new(&g, &s);
+    let zero_delays = vec![0.0; g.dag.edge_count()];
+    record(bench_auto("event_exec/zbv_4x8", 0.3, || {
+        std::hint::black_box(engine.execute(&w, &zero_delays));
+    }));
 
     // LP solve at several scales (cold: full two-phase simplex).
     for (ranks, m, kind) in [
@@ -96,11 +103,17 @@ fn main() {
     cfg.phases = timelyfreeze::freeze::PhaseConfig::new(8, 26, 40);
     cfg.method = FreezeMethod::TimelyFreeze;
     let r = bench_auto("sim_run/llama1b_100steps", 2.0, || {
-        std::hint::black_box(sim::run(&cfg).throughput);
+        std::hint::black_box(sim::run(&cfg).expect("feasible config").throughput);
     });
     let sim_mean = r.mean_s;
     record(r);
-    println!("sim rate ≈ {:.0} steps/s", 100.0 / sim_mean);
+    println!("sim rate ≈ {:.0} steps/s (event executor)", 100.0 / sim_mean);
+    // The analytic fast mode of the same run, for the executor-overhead
+    // comparison (bit-identical results, pure sweep per step).
+    cfg.exec = timelyfreeze::config::ExecMode::Analytic;
+    record(bench_auto("sim_run_analytic/llama1b_100steps", 2.0, || {
+        std::hint::black_box(sim::run(&cfg).expect("feasible config").throughput);
+    }));
 
     write_json_if_requested("perf_micro", &all);
 }

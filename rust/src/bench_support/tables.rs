@@ -54,7 +54,7 @@ pub fn run_llm_table(preset: &str, experiment_id: &str) {
         apply_quick(&mut cfg);
         cfg.schedule = schedule;
         cfg.method = method;
-        sim::run(&cfg)
+        sim::run(&cfg).expect("table grid config must be feasible")
     });
     let mut results = results.into_iter();
     for schedule in ScheduleKind::all() {
@@ -125,7 +125,8 @@ pub fn run_vision_table(
         apply_quick(&mut cfg);
         cfg.schedule = schedule;
         cfg.method = method;
-        let r = sim::run_with_partition(&cfg, partition);
+        let r = sim::run_with_partition(&cfg, partition)
+            .expect("vision grid config must be feasible");
         let train_time = cfg.tokens_per_step() as f64 * cfg.steps as f64 / r.throughput;
         (r, train_time)
     });

@@ -3,12 +3,45 @@
 //! the launcher.
 
 pub mod presets;
+pub mod scenario;
 
 pub use presets::{GpuPreset, ModelFamily, ModelPreset};
+pub use scenario::{LinkSlowdown, Scenario, Straggler};
 
 use crate::freeze::{ApfConfig, AutoFreezeConfig, PhaseConfig};
 use crate::types::{FreezeMethod, ScheduleKind};
 use crate::util::toml::TomlDoc;
+
+/// Which executor the simulator runs batches through.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// The discrete-event engine (`sim::engine`): per-rank executors,
+    /// P2P messages, event-sourced Gantt data. The default.
+    #[default]
+    Event,
+    /// The analytic fast path: one longest-path sweep per step
+    /// (bit-identical to the event engine when no dynamics are active).
+    Analytic,
+}
+
+impl ExecMode {
+    /// Parse a user-supplied name.
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "event" | "engine" | "des" => Some(ExecMode::Event),
+            "analytic" | "fast" | "sweep" => Some(ExecMode::Analytic),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Event => "event",
+            ExecMode::Analytic => "analytic",
+        }
+    }
+}
 
 /// Full experiment description — everything a simulator or engine run
 /// needs (Table 3 column).
@@ -54,6 +87,26 @@ pub struct ExperimentConfig {
     /// [`MemoryModel`](crate::cost::MemoryModel) and the TimelyFreeze LP
     /// enforces it (constraint [5]).
     pub memory_budget: Option<f64>,
+    /// Per-rank device-memory capacities in bytes for mixed-GPU
+    /// clusters, overriding the uniform `gpu.memory_bytes` in the
+    /// memory accounting (`None` ⇒ homogeneous). Must name one capacity
+    /// per rank, and requires an active `memory_budget` — setting
+    /// capacities with no budget is rejected rather than silently
+    /// ignored.
+    pub rank_memory_bytes: Option<Vec<f64>>,
+    /// Runtime-dynamics scenario for the event-driven executor
+    /// (stragglers, jitter, link slowdowns); `None` or an identity
+    /// scenario leaves execution undisturbed.
+    pub scenario: Option<Scenario>,
+    /// Online-replanning cadence: at every boundary `T_m + k ·
+    /// replan_interval` (so possibly during the freeze ramp), the
+    /// runner distills observed action times into a
+    /// [`CostProfile`](crate::cost::CostProfile) and the TimelyFreeze
+    /// family re-solves the warm-started LP against it. `0` ⇒ the plan
+    /// stays static after `T_m` (the paper's Algorithm 1).
+    pub replan_interval: usize,
+    /// Which executor runs batches (event-driven or analytic sweep).
+    pub exec: ExecMode,
 }
 
 impl ExperimentConfig {
@@ -109,6 +162,10 @@ impl ExperimentConfig {
             seed: 42,
             timing_noise: 0.02,
             memory_budget: None,
+            rank_memory_bytes: None,
+            scenario: None,
+            replan_interval: 0,
+            exec: ExecMode::Event,
         };
         Some(match key.as_str() {
             // LLaMA-3.2-1B · Alpaca-GPT4 · 4×A6000 (Table 3 col 1).
@@ -193,9 +250,13 @@ impl ExperimentConfig {
     /// Apply overrides from a parsed TOML doc. Recognized keys (all
     /// optional): `experiment.{schedule, method, ranks, chunks,
     /// microbatches, microbatch_size, seq_len, steps, r_max, seed,
-    /// timing_noise, memory_budget}`, `phases.{warmup, monitor,
-    /// freeze}`, `apf.{threshold, alpha, check_interval}`,
-    /// `autofreeze.{percentile, check_interval}`.
+    /// timing_noise, memory_budget, rank_memory_gb, scenario,
+    /// replan_interval, exec}`, `phases.{warmup, monitor, freeze}`,
+    /// `apf.{threshold, alpha, check_interval}`,
+    /// `autofreeze.{percentile, check_interval}`. `rank_memory_gb` is an
+    /// array of per-rank GB capacities; `scenario` uses the
+    /// [`Scenario::parse`] mini-language; `exec` is `event` or
+    /// `analytic`.
     pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<(), String> {
         if let Some(s) = doc.get_str("experiment.schedule") {
             self.schedule =
@@ -232,6 +293,31 @@ impl ExperimentConfig {
                 return Err(format!("memory_budget {v} outside (0,1]"));
             }
             self.memory_budget = Some(v);
+        }
+        if let Some(v) = doc.get("experiment.rank_memory_gb") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| "rank_memory_gb must be an array of GB values".to_string())?;
+            let caps: Vec<f64> = arr
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .filter(|g| *g > 0.0 && g.is_finite())
+                        .map(|g| g * 1e9)
+                        .ok_or_else(|| {
+                            "rank_memory_gb entries must be positive numbers".to_string()
+                        })
+                })
+                .collect::<Result<_, _>>()?;
+            self.rank_memory_bytes = Some(caps);
+        }
+        if let Some(s) = doc.get_str("experiment.scenario") {
+            self.scenario = Some(Scenario::parse(s)?);
+        }
+        set_usize!("experiment.replan_interval", self.replan_interval);
+        if let Some(s) = doc.get_str("experiment.exec") {
+            self.exec =
+                ExecMode::parse(s).ok_or_else(|| format!("unknown exec mode '{s}'"))?;
         }
         if let Some(v) = doc.get_i64("experiment.seed") {
             self.seed = v as u64;
@@ -304,6 +390,34 @@ mod tests {
         let doc = TomlDoc::parse("[phases]\nwarmup = 50\nmonitor = 10\nfreeze = 60").unwrap();
         assert!(cfg.apply_toml(&doc).is_err());
         let doc = TomlDoc::parse("[experiment]\nmemory_budget = 1.5").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn toml_sets_dynamics_and_hetero_keys() {
+        let mut cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+        let doc = TomlDoc::parse(
+            "[experiment]\nscenario = \"straggler:1x1.5@30,jitter:0.05\"\n\
+             replan_interval = 25\nexec = \"analytic\"\n\
+             rank_memory_gb = [48.0, 48.0, 24.0, 48.0]",
+        )
+        .unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        let sc = cfg.scenario.as_ref().unwrap();
+        assert_eq!(sc.stragglers.len(), 1);
+        assert_eq!(sc.jitter_sigma, 0.05);
+        assert_eq!(cfg.replan_interval, 25);
+        assert_eq!(cfg.exec, ExecMode::Analytic);
+        assert_eq!(
+            cfg.rank_memory_bytes.as_deref(),
+            Some(&[48e9, 48e9, 24e9, 48e9][..])
+        );
+        // Malformed values are clean errors, not panics.
+        let doc = TomlDoc::parse("[experiment]\nscenario = \"warp:9\"").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[experiment]\nexec = \"quantum\"").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[experiment]\nrank_memory_gb = [48.0, -1.0]").unwrap();
         assert!(cfg.apply_toml(&doc).is_err());
     }
 

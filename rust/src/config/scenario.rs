@@ -1,0 +1,463 @@
+//! Runtime-dynamics scenarios for the discrete-event simulator: seeded,
+//! composable perturbations of an execution the static LP plan did not
+//! predict.
+//!
+//! Three dynamics compose freely (OptPipe and Zero Bubble Pipeline
+//! Parallelism both observe that exactly these skews degrade static
+//! schedules):
+//!
+//! * **stragglers** — a per-rank multiplier on compute time (a thermally
+//!   throttled or contended device), optionally appearing only from an
+//!   onset step, so a plan solved during monitoring can be invalidated
+//!   mid-run;
+//! * **jitter** — multiplicative per-action noise sampled from a seeded
+//!   normal, modelling kernel-time variance beyond the simulator's base
+//!   `timing_noise`;
+//! * **link slowdowns** — multipliers on communication time, either on
+//!   every link (node-charged comm and all P2P edges) or on one stage
+//!   boundary's P2P link.
+//!
+//! All randomness derives from `(scenario seed ⊕ run seed, step, node)`
+//! counters, never from event order, so a fixed seed makes scenario
+//! runs fully deterministic and the event-driven executor stays
+//! replayable (`tests/event_engine.rs` pins this).
+//!
+//! Scenarios are built from presets ([`Scenario::straggler`],
+//! [`Scenario::jittery`], [`Scenario::congested`]), composed with the
+//! `with_*` builders, or parsed from the CLI/TOML mini-language of
+//! [`Scenario::parse`]:
+//!
+//! ```text
+//! straggler:1x1.5          rank 1 runs 1.5× slower from step 0
+//! straggler:1x1.5@300      … appearing at step 300
+//! jitter:0.1               σ = 0.1 multiplicative action jitter
+//! link:2.0                 all communication 2× slower
+//! link:0x4.0@100           boundary 0↔1 4× slower from step 100
+//! seed:7                   scenario RNG stream
+//! ```
+//!
+//! Terms combine with commas: `straggler:2x2.0@250,jitter:0.05`.
+
+use crate::util::rng::Rng;
+
+/// A per-rank compute slowdown, active from `onset`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Straggler {
+    /// The slowed GPU rank.
+    pub rank: usize,
+    /// Compute-time multiplier (> 1 ⇒ slower).
+    pub factor: f64,
+    /// First step the slowdown applies to.
+    pub onset: usize,
+}
+
+/// A communication slowdown, active from `onset`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkSlowdown {
+    /// `None` ⇒ every link (including node-charged comm); `Some(b)` ⇒
+    /// the stage boundary `b ↔ b+1`: its P2P edge delays when the cost
+    /// model charges communication to edges, and the node-charged comm
+    /// of the two adjacent stages otherwise
+    /// ([`Scenario::stage_link_factor`]).
+    pub boundary: Option<usize>,
+    /// Communication-time multiplier (> 1 ⇒ slower).
+    pub factor: f64,
+    /// First step the slowdown applies to.
+    pub onset: usize,
+}
+
+/// A composed runtime-dynamics scenario (see the module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// Human-readable label (the parse spec, or the preset name).
+    pub label: String,
+    /// Per-rank compute slowdowns.
+    pub stragglers: Vec<Straggler>,
+    /// Stddev of the multiplicative per-action jitter (0 ⇒ none).
+    pub jitter_sigma: f64,
+    /// First step the jitter applies to.
+    pub jitter_onset: usize,
+    /// Communication slowdowns.
+    pub links: Vec<LinkSlowdown>,
+    /// Scenario RNG stream, xor-folded with the run seed.
+    pub seed: u64,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            label: "calm".to_string(),
+            stragglers: Vec::new(),
+            jitter_sigma: 0.0,
+            jitter_onset: 0,
+            links: Vec::new(),
+            seed: 0,
+        }
+    }
+}
+
+impl std::fmt::Display for Scenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label)
+    }
+}
+
+impl Scenario {
+    /// The identity scenario: no dynamics (bit-identical to running
+    /// without a scenario).
+    pub fn calm() -> Scenario {
+        Scenario::default()
+    }
+
+    /// One rank `factor`× slower from step 0.
+    pub fn straggler(rank: usize, factor: f64) -> Scenario {
+        Scenario::calm()
+            .with_straggler(rank, factor, 0)
+            .relabel(&format!("straggler:{rank}x{factor}"))
+    }
+
+    /// Multiplicative per-action jitter with stddev `sigma`.
+    pub fn jittery(sigma: f64) -> Scenario {
+        Scenario::calm().with_jitter(sigma, 0).relabel(&format!("jitter:{sigma}"))
+    }
+
+    /// Every link `factor`× slower from step 0.
+    pub fn congested(factor: f64) -> Scenario {
+        Scenario::calm()
+            .with_link(None, factor, 0)
+            .relabel(&format!("link:{factor}"))
+    }
+
+    /// Add a per-rank compute slowdown.
+    pub fn with_straggler(mut self, rank: usize, factor: f64, onset: usize) -> Scenario {
+        assert!(factor > 0.0 && factor.is_finite(), "straggler factor must be positive");
+        self.stragglers.push(Straggler { rank, factor, onset });
+        self
+    }
+
+    /// Set the per-action jitter stddev and onset.
+    pub fn with_jitter(mut self, sigma: f64, onset: usize) -> Scenario {
+        assert!(sigma >= 0.0 && sigma.is_finite(), "jitter sigma must be ≥ 0");
+        self.jitter_sigma = sigma;
+        self.jitter_onset = onset;
+        self
+    }
+
+    /// Add a communication slowdown (`boundary = None` ⇒ all links).
+    pub fn with_link(mut self, boundary: Option<usize>, factor: f64, onset: usize) -> Scenario {
+        assert!(factor > 0.0 && factor.is_finite(), "link factor must be positive");
+        self.links.push(LinkSlowdown { boundary, factor, onset });
+        self
+    }
+
+    /// Set the scenario RNG stream.
+    pub fn with_seed(mut self, seed: u64) -> Scenario {
+        self.seed = seed;
+        self
+    }
+
+    /// Replace the label.
+    pub fn relabel(mut self, label: &str) -> Scenario {
+        self.label = label.to_string();
+        self
+    }
+
+    /// Parse the comma-separated mini-language (see the module docs).
+    pub fn parse(spec: &str) -> Result<Scenario, String> {
+        let mut sc = Scenario::calm().relabel(spec.trim());
+        for term in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (head, rest) = match term.split_once(':') {
+                Some((h, r)) => (h.trim(), Some(r.trim())),
+                None => (term, None),
+            };
+            match (head, rest) {
+                ("calm", None) => {}
+                ("straggler", Some(arg)) => {
+                    let (body, onset) = split_onset(arg)?;
+                    let (rank, factor) = body.split_once('x').ok_or_else(|| {
+                        format!("straggler term '{term}' wants <rank>x<factor>[@onset]")
+                    })?;
+                    let rank = rank
+                        .trim()
+                        .parse::<usize>()
+                        .map_err(|_| format!("bad straggler rank in '{term}'"))?;
+                    let factor = parse_factor(factor, term)?;
+                    sc = sc.with_straggler(rank, factor, onset);
+                }
+                ("jitter", Some(arg)) => {
+                    let (body, onset) = split_onset(arg)?;
+                    let sigma = body
+                        .trim()
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|s| *s >= 0.0 && s.is_finite())
+                        .ok_or_else(|| format!("bad jitter sigma in '{term}'"))?;
+                    sc = sc.with_jitter(sigma, onset);
+                }
+                ("link", Some(arg)) => {
+                    let (body, onset) = split_onset(arg)?;
+                    let (boundary, factor) = match body.split_once('x') {
+                        Some((b, f)) => {
+                            let b = b
+                                .trim()
+                                .parse::<usize>()
+                                .map_err(|_| format!("bad link boundary in '{term}'"))?;
+                            (Some(b), parse_factor(f, term)?)
+                        }
+                        None => (None, parse_factor(body, term)?),
+                    };
+                    sc = sc.with_link(boundary, factor, onset);
+                }
+                ("seed", Some(arg)) => {
+                    let seed = arg
+                        .parse::<u64>()
+                        .map_err(|_| format!("bad scenario seed in '{term}'"))?;
+                    sc = sc.with_seed(seed);
+                }
+                _ => {
+                    return Err(format!(
+                        "unknown scenario term '{term}' \
+                         (try straggler:<rank>x<factor>[@onset], jitter:<sigma>[@onset], \
+                         link:[<boundary>x]<factor>[@onset], seed:<n>, calm)"
+                    ))
+                }
+            }
+        }
+        Ok(sc)
+    }
+
+    /// Check rank/boundary indices against a concrete pipeline shape.
+    pub fn validate(&self, ranks: usize, stages: usize) -> Result<(), String> {
+        for s in &self.stragglers {
+            if s.rank >= ranks {
+                return Err(format!(
+                    "scenario straggles rank {} but the pipeline has {ranks} ranks",
+                    s.rank
+                ));
+            }
+        }
+        for l in &self.links {
+            if let Some(b) = l.boundary {
+                if b + 1 >= stages {
+                    return Err(format!(
+                        "scenario slows boundary {b} but the pipeline has only {} \
+                         boundaries",
+                        stages.saturating_sub(1)
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether the scenario perturbs nothing — the runner treats an
+    /// identity scenario exactly like no scenario, preserving the
+    /// bit-identity contract of the event engine.
+    pub fn is_identity(&self) -> bool {
+        self.jitter_sigma == 0.0
+            && self.stragglers.iter().all(|s| s.factor == 1.0)
+            && self.links.iter().all(|l| l.factor == 1.0)
+    }
+
+    /// Compute-time multiplier of `rank` at step `t` (product of active
+    /// stragglers).
+    pub fn rank_factor(&self, rank: usize, t: usize) -> f64 {
+        self.stragglers
+            .iter()
+            .filter(|s| s.rank == rank && t >= s.onset)
+            .map(|s| s.factor)
+            .product()
+    }
+
+    /// Communication multiplier of every link at step `t` (the global
+    /// terms only).
+    pub fn global_link_factor(&self, t: usize) -> f64 {
+        self.links
+            .iter()
+            .filter(|l| l.boundary.is_none() && t >= l.onset)
+            .map(|l| l.factor)
+            .product()
+    }
+
+    /// Communication multiplier of stage `stage`'s *node-charged* comm
+    /// at step `t`: the global terms, times any per-boundary term on a
+    /// boundary adjacent to the stage (`stage−1 ↔ stage` carries its
+    /// inbound activations, `stage ↔ stage+1` its inbound gradients).
+    /// This is how boundary-targeted slowdowns reach the analytic
+    /// presets, whose cost models charge communication to nodes rather
+    /// than P2P edges.
+    pub fn stage_link_factor(&self, stage: usize, t: usize) -> f64 {
+        self.links
+            .iter()
+            .filter(|l| t >= l.onset)
+            .filter(|l| match l.boundary {
+                None => true,
+                Some(b) => b == stage || b + 1 == stage,
+            })
+            .map(|l| l.factor)
+            .product()
+    }
+
+    /// Communication multiplier of the P2P link across stage boundary
+    /// `boundary` at step `t` (global terms × matching per-boundary
+    /// terms).
+    pub fn edge_link_factor(&self, boundary: usize, t: usize) -> f64 {
+        self.global_link_factor(t)
+            * self
+                .links
+                .iter()
+                .filter(|l| l.boundary == Some(boundary) && t >= l.onset)
+                .map(|l| l.factor)
+                .product::<f64>()
+    }
+
+    /// Multiplicative jitter sample for `(step, node)` under the run's
+    /// master seed — a counter-derived stream, independent of event
+    /// order, clamped away from zero like the simulator's base timing
+    /// noise.
+    pub fn jitter_mult(&self, run_seed: u64, t: usize, node: usize) -> f64 {
+        if self.jitter_sigma == 0.0 || t < self.jitter_onset {
+            return 1.0;
+        }
+        let mut rng = Rng::seed_from_u64(self.seed ^ run_seed ^ 0x5CE0_A11D)
+            .derive(t as u64, node as u64);
+        (1.0 + self.jitter_sigma * rng.normal()).max(0.05)
+    }
+}
+
+fn split_onset(arg: &str) -> Result<(&str, usize), String> {
+    match arg.split_once('@') {
+        None => Ok((arg, 0)),
+        Some((body, onset)) => {
+            let onset = onset
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| format!("bad onset step in '{arg}'"))?;
+            Ok((body, onset))
+        }
+    }
+}
+
+fn parse_factor(s: &str, term: &str) -> Result<f64, String> {
+    s.trim()
+        .parse::<f64>()
+        .ok()
+        .filter(|f| *f > 0.0 && f.is_finite())
+        .ok_or_else(|| format!("bad factor in '{term}' (must be a positive number)"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calm_is_identity() {
+        assert!(Scenario::calm().is_identity());
+        assert!(Scenario::parse("calm").unwrap().is_identity());
+        assert!(!Scenario::straggler(1, 1.5).is_identity());
+        assert!(Scenario::straggler(1, 1.0).is_identity());
+        assert!(!Scenario::jittery(0.1).is_identity());
+        assert!(!Scenario::congested(2.0).is_identity());
+    }
+
+    #[test]
+    fn parse_composes_terms() {
+        let sc = Scenario::parse("straggler:2x1.5@300, jitter:0.05, link:0x4.0@100, seed:7")
+            .unwrap();
+        assert_eq!(
+            sc.stragglers,
+            vec![Straggler { rank: 2, factor: 1.5, onset: 300 }]
+        );
+        assert_eq!(sc.jitter_sigma, 0.05);
+        assert_eq!(sc.jitter_onset, 0);
+        assert_eq!(
+            sc.links,
+            vec![LinkSlowdown { boundary: Some(0), factor: 4.0, onset: 100 }]
+        );
+        assert_eq!(sc.seed, 7);
+        assert_eq!(sc.to_string(), "straggler:2x1.5@300, jitter:0.05, link:0x4.0@100, seed:7");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_terms() {
+        for bad in [
+            "straggler:1.5",
+            "straggler:ax2",
+            "straggler:1x-2",
+            "jitter:-0.1",
+            "link:0x",
+            "wibble:3",
+            "seed:x",
+            "straggler:1x2@x",
+        ] {
+            assert!(Scenario::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn onset_gates_factors() {
+        let sc = Scenario::calm()
+            .with_straggler(1, 2.0, 100)
+            .with_link(Some(0), 3.0, 50)
+            .with_link(None, 1.5, 0);
+        assert_eq!(sc.rank_factor(1, 99), 1.0);
+        assert_eq!(sc.rank_factor(1, 100), 2.0);
+        assert_eq!(sc.rank_factor(0, 500), 1.0);
+        assert_eq!(sc.global_link_factor(10), 1.5);
+        assert_eq!(sc.edge_link_factor(0, 49), 1.5);
+        assert_eq!(sc.edge_link_factor(0, 50), 4.5);
+        assert_eq!(sc.edge_link_factor(1, 50), 1.5);
+    }
+
+    #[test]
+    fn stage_link_factor_hits_adjacent_stages() {
+        let sc = Scenario::calm()
+            .with_link(Some(1), 3.0, 0)
+            .with_link(None, 2.0, 10);
+        // Boundary 1 ↔ 2 touches stages 1 and 2, nothing else.
+        assert_eq!(sc.stage_link_factor(0, 0), 1.0);
+        assert_eq!(sc.stage_link_factor(1, 0), 3.0);
+        assert_eq!(sc.stage_link_factor(2, 0), 3.0);
+        assert_eq!(sc.stage_link_factor(3, 0), 1.0);
+        // The global term stacks once its onset passes.
+        assert_eq!(sc.stage_link_factor(1, 10), 6.0);
+        assert_eq!(sc.stage_link_factor(3, 10), 2.0);
+    }
+
+    #[test]
+    fn stacked_stragglers_multiply() {
+        let sc = Scenario::calm()
+            .with_straggler(0, 2.0, 0)
+            .with_straggler(0, 1.5, 10);
+        assert_eq!(sc.rank_factor(0, 5), 2.0);
+        assert_eq!(sc.rank_factor(0, 10), 3.0);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_seed_sensitive() {
+        let sc = Scenario::jittery(0.1).with_seed(3);
+        let a = sc.jitter_mult(42, 5, 17);
+        let b = sc.jitter_mult(42, 5, 17);
+        assert_eq!(a, b);
+        assert!(a > 0.0);
+        assert_ne!(a, sc.jitter_mult(43, 5, 17));
+        assert_ne!(a, sc.jitter_mult(42, 6, 17));
+        assert_ne!(a, sc.jitter_mult(42, 5, 18));
+        let other = Scenario::jittery(0.1).with_seed(4);
+        assert_ne!(a, other.jitter_mult(42, 5, 17));
+        // Onset gates sampling entirely.
+        let late = Scenario::calm().with_jitter(0.1, 100);
+        assert_eq!(late.jitter_mult(42, 99, 0), 1.0);
+        assert_ne!(late.jitter_mult(42, 100, 0), 1.0);
+    }
+
+    #[test]
+    fn validate_checks_shape() {
+        let sc = Scenario::straggler(4, 2.0);
+        assert!(sc.validate(4, 4).is_err());
+        assert!(sc.validate(5, 5).is_ok());
+        let sc = Scenario::calm().with_link(Some(3), 2.0, 0);
+        assert!(sc.validate(4, 4).is_err());
+        assert!(sc.validate(4, 8).is_ok());
+    }
+}

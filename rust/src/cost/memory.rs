@@ -115,6 +115,36 @@ impl MemoryModel {
         self.weight_bytes.len()
     }
 
+    /// Replace the uniform per-stage capacities with per-rank device
+    /// capacities — the mixed-GPU-cluster case. Each virtual stage gets
+    /// an equal slice (`1/chunks`) of the memory of the rank hosting it
+    /// (`rank_of_stage`, from the schedule's placement).
+    ///
+    /// Panics when a stage names a rank without a capacity entry or a
+    /// capacity is not positive.
+    pub fn with_rank_capacities(
+        mut self,
+        rank_capacity_bytes: &[f64],
+        rank_of_stage: &[usize],
+        chunks: usize,
+    ) -> MemoryModel {
+        assert_eq!(rank_of_stage.len(), self.num_stages(), "rank_of_stage length mismatch");
+        assert!(chunks >= 1, "chunks must be ≥ 1");
+        assert!(
+            rank_capacity_bytes.iter().all(|c| *c > 0.0 && c.is_finite()),
+            "rank capacities must be positive"
+        );
+        for (s, &r) in rank_of_stage.iter().enumerate() {
+            assert!(
+                r < rank_capacity_bytes.len(),
+                "stage {s} lives on rank {r} but only {} capacities were given",
+                rank_capacity_bytes.len()
+            );
+            self.capacity_bytes[s] = rank_capacity_bytes[r] / chunks as f64;
+        }
+        self
+    }
+
     /// Scale every stage's capacity by `frac` — the budget-sweep knob of
     /// the fig16 bench (`frac = 1.0` ⇒ the full device).
     pub fn scaled_capacity(mut self, frac: f64) -> MemoryModel {
@@ -171,6 +201,11 @@ impl MemoryModel {
 /// accuracy budget `r_max` (the LP would reject it as
 /// `FloorExceedsBudget` on every solve, so it is refused upfront here).
 ///
+/// When the config names per-rank capacities
+/// (`ExperimentConfig::rank_memory_bytes`, mixed-GPU clusters), each
+/// stage is budgeted against the memory of the rank the schedule places
+/// it on rather than the uniform GPU preset.
+///
 /// This is the single recipe shared by the simulator runner and the
 /// `tfreeze` CLI, so the `lp` preview and the simulator always agree on
 /// the floor.
@@ -180,9 +215,16 @@ pub fn stage_floor_for(
     schedule: &Schedule,
 ) -> Result<Option<Vec<f64>>, String> {
     let Some(frac) = cfg.memory_budget else {
+        if cfg.rank_memory_bytes.is_some() {
+            return Err(
+                "per-rank memory capacities are set but no memory budget is active — \
+                 set memory_budget (CLI --mem-budget) to enable the per-rank floor"
+                    .to_string(),
+            );
+        }
         return Ok(None);
     };
-    let mem = MemoryModel::from_presets(
+    let mut mem = MemoryModel::from_presets(
         &cfg.model,
         &cfg.gpu,
         layer_stage,
@@ -190,8 +232,20 @@ pub fn stage_floor_for(
         cfg.microbatch_size,
         cfg.seq_len,
         cfg.effective_chunks(),
-    )
-    .scaled_capacity(frac);
+    );
+    // Mixed-GPU clusters: per-rank capacities override the uniform
+    // preset before the budget fraction scales them.
+    if let Some(caps) = &cfg.rank_memory_bytes {
+        if caps.len() != schedule.ranks {
+            return Err(format!(
+                "rank_memory_gb names {} ranks but the pipeline has {}",
+                caps.len(),
+                schedule.ranks
+            ));
+        }
+        mem = mem.with_rank_capacities(caps, &schedule.rank_of_stage, cfg.effective_chunks());
+    }
+    let mem = mem.scaled_capacity(frac);
     let floor = mem
         .required_ratios(&peak_inflight(schedule))
         .map_err(|e| format!("memory budget {frac} infeasible for {}: {e}", cfg.model.name))?;
@@ -316,6 +370,97 @@ mod tests {
             }
         }
         assert!(prev.iter().all(|&r| r == 0.0));
+    }
+
+    #[test]
+    fn rank_capacities_map_through_stage_placement() {
+        let (cfg, mem) = model_1b();
+        // 4 ranks, 1 chunk: stage s lives on rank s. Rank 2 is a small
+        // card; only its stage's capacity shrinks.
+        let caps = [48e9, 48e9, 24e9, 48e9];
+        let m = mem.clone().with_rank_capacities(&caps, &[0, 1, 2, 3], 1);
+        assert_eq!(m.capacity_bytes, vec![48e9, 48e9, 24e9, 48e9]);
+        // Two chunks per rank split each card across its stages (ZBV's
+        // V placement: rank r hosts stages r and 2R−1−r).
+        let caps2 = [48e9, 24e9];
+        let m = MemoryModel {
+            weight_bytes: vec![1.0; 4],
+            act_bytes_per_mb: vec![1.0; 4],
+            train_state_bytes: vec![7.0; 4],
+            capacity_bytes: vec![0.0; 4],
+        }
+        .with_rank_capacities(&caps2, &[0, 1, 1, 0], 2);
+        assert_eq!(m.capacity_bytes, vec![24e9, 12e9, 12e9, 24e9]);
+        let _ = cfg;
+    }
+
+    #[test]
+    fn hetero_floor_binds_only_on_the_small_card() {
+        let (cfg, mem) = model_1b();
+        let s = Schedule::build(ScheduleKind::OneFOneB, 4, cfg.microbatches, 1);
+        let inflight = peak_inflight(&s);
+        // Uniform capacity that needs no freezing…
+        let uniform = mem.clone().required_ratios(&inflight).unwrap();
+        assert!(uniform.iter().all(|&r| r == 0.0));
+        // …then shrink one rank until its stage (and only its stage)
+        // needs a floor.
+        let mut small = cfg.gpu.memory_bytes;
+        loop {
+            small *= 0.8;
+            let caps = [cfg.gpu.memory_bytes, cfg.gpu.memory_bytes, small, cfg.gpu.memory_bytes];
+            match mem
+                .clone()
+                .with_rank_capacities(&caps, &s.rank_of_stage, 1)
+                .required_ratios(&inflight)
+            {
+                Ok(floor) if floor[2] > 0.0 => {
+                    assert_eq!(floor[0], 0.0);
+                    assert_eq!(floor[1], 0.0);
+                    assert_eq!(floor[3], 0.0);
+                    break;
+                }
+                Ok(_) => continue,
+                Err(e) => panic!("walked past feasibility: {e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn stage_floor_for_threads_rank_capacities() {
+        let (mut cfg, mem) = model_1b();
+        let s = Schedule::build(ScheduleKind::OneFOneB, 4, cfg.microbatches, 1);
+        let layer_stage = balanced_partition(&cfg.model.layer_params(), 4);
+        // A budget fraction that is floor-free on uniform cards…
+        cfg.memory_budget = Some(1.0);
+        let uniform = stage_floor_for(&cfg, &layer_stage, &s).unwrap().unwrap();
+        assert!(uniform.iter().all(|&r| r == 0.0));
+        // …but binds once rank 1 is a much smaller card. Probe for a
+        // size that is binding-but-feasible under r_max.
+        let mut small = cfg.gpu.memory_bytes;
+        let floor = loop {
+            small *= 0.9;
+            cfg.rank_memory_bytes = Some(vec![
+                cfg.gpu.memory_bytes,
+                small,
+                cfg.gpu.memory_bytes,
+                cfg.gpu.memory_bytes,
+            ]);
+            match stage_floor_for(&cfg, &layer_stage, &s) {
+                Ok(Some(f)) if f[1] > 0.0 => break f,
+                Ok(_) => continue,
+                Err(e) => panic!("probe overshot: {e}"),
+            }
+        };
+        assert!(floor[1] > 0.0 && floor[0] == 0.0 && floor[2] == 0.0);
+        // A capacity vector of the wrong arity is a clean error…
+        cfg.rank_memory_bytes = Some(vec![48e9, 48e9]);
+        assert!(stage_floor_for(&cfg, &layer_stage, &s).is_err());
+        // …and so are rank capacities without an active budget (they
+        // would otherwise be silently ignored).
+        cfg.memory_budget = None;
+        cfg.rank_memory_bytes = Some(vec![48e9; 4]);
+        assert!(stage_floor_for(&cfg, &layer_stage, &s).is_err());
+        let _ = mem;
     }
 
     #[test]

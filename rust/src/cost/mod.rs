@@ -12,7 +12,10 @@
 //!   `tests/cost_model.rs`).
 //! * [`profile`] — [`CostProfile`]: hand-specified stage-shape presets
 //!   (uniform, skewed first/last stage, profiled-from-table) for
-//!   heterogeneous-cluster studies that have no preset hardware model.
+//!   heterogeneous-cluster studies that have no preset hardware model,
+//!   plus [`ProfileRecorder`], which captures *observed* per-stage
+//!   action times from the event-driven executor into a profiled table
+//!   for online replanning.
 //! * [`memory`] — [`MemoryModel`] and [`peak_inflight`]: per-stage
 //!   activation / weight / trainable-state byte accounting against a
 //!   device capacity, producing the per-stage *freeze-ratio floor* the
@@ -31,4 +34,4 @@ pub mod profile;
 
 pub use memory::{peak_inflight, stage_floor_for, MemoryError, MemoryModel};
 pub use model::CostModel;
-pub use profile::{CostProfile, StageProfile};
+pub use profile::{CostProfile, ProfileRecorder, StageProfile};

@@ -200,6 +200,14 @@ impl CostModel {
         self.optimizer.iter().cloned().fold(0.0f64, f64::max)
     }
 
+    /// Node-charged communication seconds of one stage (every action at
+    /// the stage pays this; zero for edge-charged profiles). The
+    /// simulator's link-slowdown dynamics scale exactly this share of an
+    /// action's duration.
+    pub fn stage_comm(&self, s: usize) -> f64 {
+        self.comm[s]
+    }
+
     /// Forward seconds of one stage (freeze-invariant).
     pub fn stage_fwd(&self, s: usize) -> f64 {
         self.fwd[s]

@@ -1,4 +1,5 @@
-//! Hand-specified stage-shape presets for heterogeneity studies.
+//! Hand-specified stage-shape presets for heterogeneity studies, and
+//! the observed-profile capture that closes the planning loop.
 //!
 //! The analytic [`CostModel::new`](crate::cost::CostModel::new) path
 //! derives stage times from a hardware preset; a [`CostProfile`] instead
@@ -6,8 +7,16 @@
 //! stage (embedding/head imbalance, a straggler device), or a fully
 //! profiled per-stage table (e.g. transcribed from a cluster profiler).
 //! [`CostProfile::to_model`] lowers any profile to a [`CostModel`].
+//!
+//! [`ProfileRecorder`] is the capture side: the discrete-event runner
+//! feeds it every executed action's `(kind, stage, freeze ratio,
+//! observed seconds)` and it distills a `CostProfile::Profiled` table —
+//! the per-stage world the execution *actually* exhibited, stragglers
+//! and all — which `TimelyFreeze::replan_with_profile` re-solves the LP
+//! against at phase boundaries.
 
 use crate::cost::CostModel;
+use crate::types::{Action, ActionKind};
 
 /// One row of a profiled-from-table cost specification: the measured
 /// per-microbatch seconds of a single pipeline stage.
@@ -154,6 +163,171 @@ impl CostProfile {
     }
 }
 
+/// Per-stage accumulator of one stage's freezable-action samples:
+/// running sums for the OLS fit of `duration = c₀ + c₁·afr`.
+#[derive(Clone, Copy, Debug, Default)]
+struct FreezableFit {
+    kind: Option<ActionKind>,
+    n: f64,
+    sx: f64,
+    sy: f64,
+    sxx: f64,
+    sxy: f64,
+}
+
+impl FreezableFit {
+    fn push(&mut self, kind: ActionKind, afr: f64, duration: f64) {
+        debug_assert!(
+            self.kind.is_none() || self.kind == Some(kind),
+            "a stage schedules one freezable kind, never both"
+        );
+        self.kind = Some(kind);
+        self.n += 1.0;
+        self.sx += afr;
+        self.sy += duration;
+        self.sxx += afr * afr;
+        self.sxy += afr * duration;
+    }
+
+    /// `(duration at afr = 0, freezable share)` — by OLS when the
+    /// window saw enough freeze-ratio spread to identify the slope,
+    /// otherwise by scaling `prior`'s decomposition to the observed
+    /// mean (exact for the multiplicative perturbations the scenarios
+    /// inject: a straggler slows dgrad and wgrad alike).
+    fn estimate(&self, s: usize, prior: &CostModel) -> Option<(f64, f64)> {
+        let kind = self.kind?;
+        let (n, mx, my) = (self.n, self.sx / self.n, self.sy / self.n);
+        let sxx_c = self.sxx - n * mx * mx;
+        let sxy_c = self.sxy - n * mx * my;
+        // OLS only when the ratio spread is wide enough to identify the
+        // slope against timing noise (stddev of afr > ~0.03); a narrow
+        // spread would amplify noise into the slope, so the prior-scale
+        // fallback is the better estimator there.
+        if sxx_c > 1e-3 * n {
+            let slope = sxy_c / sxx_c;
+            let wgrad = (-slope).max(0.0);
+            let hi = my + wgrad * mx;
+            return Some((hi, wgrad.min(hi)));
+        }
+        let probe = Action { kind, mb: 0, stage: s };
+        let expected = prior.duration(probe, mx);
+        let scale = if expected > 0.0 { my / expected } else { 1.0 };
+        let (lo_p, hi_p) = prior.bounds(probe);
+        let wgrad = ((hi_p - lo_p) * scale).max(0.0);
+        let hi = my + wgrad * mx;
+        Some((hi, wgrad.min(hi)))
+    }
+}
+
+/// Captures observed per-stage action times from the event-driven
+/// executor and distills them into a [`CostProfile::Profiled`] table.
+///
+/// Feed every executed action through [`ProfileRecorder::record`]; at a
+/// replan boundary, [`ProfileRecorder::to_profile`] estimates each
+/// stage's forward / activation-gradient / parameter-gradient seconds
+/// from the window's samples. The freezable split is identified by
+/// regressing duration on the freeze ratio the actions actually ran at
+/// (the linear law of eq. 4 / Figure 15); when the window's ratios have
+/// no spread — a converged static plan — the recorder falls back to
+/// scaling `prior`'s split to the observed mean, which is exact for
+/// multiplicative slowdowns (stragglers, link contention).
+///
+/// Observed wall-clock is attributed whole: kernel-launch overhead and
+/// node-charged communication fold into the estimated compute terms, so
+/// the distilled profile reproduces observed durations rather than the
+/// prior's decomposition.
+#[derive(Clone, Debug)]
+pub struct ProfileRecorder {
+    stages: usize,
+    /// (count, sum) of observed Forward durations per stage.
+    fwd: Vec<(f64, f64)>,
+    /// (count, sum) of observed BackwardDgrad durations per stage.
+    dgrad: Vec<(f64, f64)>,
+    frz: Vec<FreezableFit>,
+    samples: usize,
+}
+
+impl ProfileRecorder {
+    /// An empty recorder over `stages` pipeline stages.
+    pub fn new(stages: usize) -> ProfileRecorder {
+        ProfileRecorder {
+            stages,
+            fwd: vec![(0.0, 0.0); stages],
+            dgrad: vec![(0.0, 0.0); stages],
+            frz: vec![FreezableFit::default(); stages],
+            samples: 0,
+        }
+    }
+
+    /// Record one executed action: the freeze ratio it ran at and its
+    /// observed duration in seconds.
+    pub fn record(&mut self, a: Action, afr: f64, duration: f64) {
+        debug_assert!(a.stage < self.stages, "stage {} out of range", a.stage);
+        match a.kind {
+            ActionKind::Forward => {
+                self.fwd[a.stage].0 += 1.0;
+                self.fwd[a.stage].1 += duration;
+            }
+            ActionKind::BackwardDgrad => {
+                self.dgrad[a.stage].0 += 1.0;
+                self.dgrad[a.stage].1 += duration;
+            }
+            ActionKind::Backward | ActionKind::BackwardWgrad => {
+                self.frz[a.stage].push(a.kind, afr.clamp(0.0, 1.0), duration);
+            }
+        }
+        self.samples += 1;
+    }
+
+    /// Total samples recorded since construction or the last reset.
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
+    /// Drop the window's samples (called after each replan so the next
+    /// window reflects only the current regime).
+    pub fn reset(&mut self) {
+        self.fwd.iter_mut().for_each(|a| *a = (0.0, 0.0));
+        self.dgrad.iter_mut().for_each(|a| *a = (0.0, 0.0));
+        self.frz.iter_mut().for_each(|a| *a = FreezableFit::default());
+        self.samples = 0;
+    }
+
+    /// Distill the window into a profiled-from-table cost specification,
+    /// or `None` when some stage lacks forward or freezable samples
+    /// (an empty or truncated window).
+    pub fn to_profile(&self, prior: &CostModel) -> Option<CostProfile> {
+        let mut rows = Vec::with_capacity(self.stages);
+        for s in 0..self.stages {
+            let (fn_, fs) = self.fwd[s];
+            if fn_ == 0.0 {
+                return None;
+            }
+            let (hi, wgrad) = self.frz[s].estimate(s, prior)?;
+            let dgrad = match self.frz[s].kind {
+                // Combined backward: duration at afr = 0 is dgrad + wgrad.
+                Some(ActionKind::Backward) => (hi - wgrad).max(0.0),
+                // Zero-Bubble split: "b" is observed directly.
+                _ => {
+                    let (dn, ds) = self.dgrad[s];
+                    if dn == 0.0 {
+                        return None;
+                    }
+                    ds / dn
+                }
+            };
+            rows.push(StageProfile {
+                fwd: fs / fn_,
+                dgrad,
+                wgrad,
+                optimizer: 0.0,
+                link: 0.0,
+            });
+        }
+        Some(CostProfile::Profiled(rows))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,5 +381,87 @@ mod tests {
         assert_eq!(cm.p2p(1, 2), 0.25);
         // Node-charged comm stays zero: edges carry the wire time.
         assert_eq!(cm.bounds(Action::f(0, 0)), (1.0, 1.0));
+    }
+
+    /// Observed samples with freeze-ratio spread identify the split by
+    /// regression alone — the prior never enters.
+    #[test]
+    fn recorder_recovers_split_from_ratio_spread() {
+        let truth = CostProfile::uniform(1.0, 1.3, 0.9, 0.0).to_model(2);
+        // A deliberately wrong prior proves the fit path ignores it.
+        let prior = CostProfile::uniform(5.0, 5.0, 5.0, 0.0).to_model(2);
+        let mut rec = ProfileRecorder::new(2);
+        for s in 0..2 {
+            for afr in [0.0, 0.25, 0.5, 0.75] {
+                rec.record(Action::f(0, s), 0.0, 1.0);
+                rec.record(Action::b(0, s), afr, truth.duration(Action::b(0, s), afr));
+            }
+        }
+        let model = rec.to_profile(&prior).unwrap().to_model(2);
+        for s in 0..2 {
+            assert!((model.stage_fwd(s) - 1.0).abs() < 1e-9);
+            assert!((model.stage_dgrad(s) - 1.3).abs() < 1e-9, "{}", model.stage_dgrad(s));
+            assert!((model.stage_wgrad(s) - 0.9).abs() < 1e-9, "{}", model.stage_wgrad(s));
+        }
+    }
+
+    /// With no ratio spread (a converged static plan) the recorder
+    /// scales the prior's split to the observed mean — exact for the
+    /// multiplicative slowdowns the scenarios inject.
+    #[test]
+    fn recorder_prior_scale_fallback_recovers_straggler() {
+        let prior = CostProfile::uniform(1.0, 1.3, 0.9, 0.0).to_model(3);
+        let mut rec = ProfileRecorder::new(3);
+        let slow = 1.5; // stage 1 runs on a straggler
+        for s in 0..3 {
+            let m = if s == 1 { slow } else { 1.0 };
+            for _ in 0..4 {
+                rec.record(Action::f(0, s), 0.0, m * 1.0);
+                let afr = 0.4;
+                rec.record(Action::b(0, s), afr, m * prior.duration(Action::b(0, s), afr));
+            }
+        }
+        let model = rec.to_profile(&prior).unwrap().to_model(3);
+        for s in 0..3 {
+            let m = if s == 1 { slow } else { 1.0 };
+            assert!((model.stage_fwd(s) - m * 1.0).abs() < 1e-9);
+            assert!((model.stage_dgrad(s) - m * 1.3).abs() < 1e-9);
+            assert!((model.stage_wgrad(s) - m * 0.9).abs() < 1e-9);
+        }
+    }
+
+    /// The Zero-Bubble split path: "b" observed directly, "W" fitted.
+    #[test]
+    fn recorder_handles_split_backward() {
+        let prior = CostProfile::uniform(1.0, 1.3, 0.9, 0.0).to_model(2);
+        let mut rec = ProfileRecorder::new(2);
+        for s in 0..2 {
+            for afr in [0.1, 0.6] {
+                rec.record(Action::f(0, s), 0.0, 1.0);
+                rec.record(Action::bd(0, s), 0.0, 1.3);
+                rec.record(Action::bw(0, s), afr, (1.0 - afr) * 0.9);
+            }
+        }
+        let model = rec.to_profile(&prior).unwrap().to_model(2);
+        assert!((model.stage_dgrad(0) - 1.3).abs() < 1e-9);
+        assert!((model.stage_wgrad(0) - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recorder_reset_and_insufficient_windows() {
+        let prior = CostProfile::uniform(1.0, 1.0, 1.0, 0.0).to_model(2);
+        let mut rec = ProfileRecorder::new(2);
+        assert!(rec.to_profile(&prior).is_none(), "empty window has no profile");
+        rec.record(Action::f(0, 0), 0.0, 1.0);
+        assert_eq!(rec.samples(), 1);
+        // Stage 1 never observed → still no profile.
+        rec.record(Action::b(0, 0), 0.2, 1.8);
+        assert!(rec.to_profile(&prior).is_none());
+        rec.record(Action::f(0, 1), 0.0, 1.0);
+        rec.record(Action::b(0, 1), 0.2, 1.8);
+        assert!(rec.to_profile(&prior).is_some());
+        rec.reset();
+        assert_eq!(rec.samples(), 0);
+        assert!(rec.to_profile(&prior).is_none());
     }
 }

@@ -87,6 +87,15 @@ impl Controller for Hybrid {
     fn expected_ratios(&self) -> Option<&BTreeMap<Action, f64>> {
         self.timely.expected_ratios()
     }
+
+    fn replan_with_profile(&mut self, profile: &crate::cost::CostProfile) {
+        // The budget half replans; metric selection is plan-independent.
+        self.timely.replan_with_profile(profile);
+    }
+
+    fn planned_batch_time(&self) -> Option<f64> {
+        Controller::planned_batch_time(&self.timely)
+    }
 }
 
 #[cfg(test)]

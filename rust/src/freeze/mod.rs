@@ -134,6 +134,21 @@ pub trait Controller: Send {
     fn expected_ratios(&self) -> Option<&BTreeMap<Action, f64>> {
         None
     }
+
+    /// Online replanning: re-solve the plan against a cost profile
+    /// distilled from *observed* execution (stragglers, jitter, link
+    /// contention included), replacing the bounds monitored before
+    /// `T_m`. The TimelyFreeze family re-solves its warm-started LP;
+    /// metric-only baselines have no plan to revise and ignore it.
+    fn replan_with_profile(&mut self, _profile: &crate::cost::CostProfile) {}
+
+    /// The batch time the current plan expects (`P_d*` of the last LP
+    /// solve); `None` for controllers without a planning model. Paired
+    /// with realized step times, this is the planned-vs-realized gap the
+    /// dynamics benches report.
+    fn planned_batch_time(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// Construct a controller by method with shared inputs. `schedule` is

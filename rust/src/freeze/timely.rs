@@ -64,6 +64,11 @@ pub struct TimelyFreeze {
     /// Per-stage freeze-ratio floor from memory accounting (constraint
     /// [5]); `None` ⇒ memory-unconstrained.
     stage_floor: Option<Vec<f64>>,
+    /// Observed-execution cost model distilled by the event engine
+    /// ([`ProfileRecorder`](crate::cost::ProfileRecorder) →
+    /// [`CostProfile`](crate::cost::CostProfile)); when set, LP bounds
+    /// come from here instead of the pre-`T_m` monitoring windows.
+    observed: Option<CostModel>,
     /// Peak in-flight microbatches per stage, a schedule constant —
     /// needed to re-derive the floor from a memory model in `replan`.
     inflight: Vec<usize>,
@@ -92,6 +97,7 @@ impl TimelyFreeze {
             solution: None,
             solver: FreezeLpSolver::new(),
             stage_floor: None,
+            observed: None,
             inflight,
             layout,
         }
@@ -160,6 +166,27 @@ impl TimelyFreeze {
         self.solve();
     }
 
+    /// Online replanning against observed execution: lower `profile` —
+    /// typically distilled by
+    /// [`ProfileRecorder`](crate::cost::ProfileRecorder) from the event
+    /// engine's observed action times — to a cost model, take LP bounds
+    /// from it instead of the pre-`T_m` monitoring windows, and re-solve
+    /// warm-started from the previous optimal basis. This is how the
+    /// plan adapts to dynamics the monitoring phase never saw: a
+    /// straggler appearing mid-run shifts the observed profile, the
+    /// refreshed LP moves the freezing budget onto the new critical
+    /// path. The memory floor (constraint [5]) carries over unchanged.
+    pub fn replan_with_profile(&mut self, profile: &crate::cost::CostProfile) {
+        self.observed = Some(profile.to_model(self.pdag.stages));
+        self.solve();
+    }
+
+    /// Drop any observed-profile override, returning LP bounds to the
+    /// monitoring windows at the next solve.
+    pub fn clear_observed_profile(&mut self) {
+        self.observed = None;
+    }
+
     /// Set (or clear) the per-stage freeze-ratio floor directly — the
     /// environment computed it from
     /// [`MemoryModel::required_ratios`](crate::cost::MemoryModel::required_ratios).
@@ -186,13 +213,27 @@ impl TimelyFreeze {
         (r * frac).min(r)
     }
 
-    /// Solve the LP from the recorded bounds (Alg. 1 lines 12–14). The
-    /// environment has effectively all-gathered timings by routing every
-    /// stage's `record_time` into this controller.
+    /// Solve the LP from the recorded bounds (Alg. 1 lines 12–14) — or,
+    /// when an observed profile is installed
+    /// ([`TimelyFreeze::replan_with_profile`]), from that profile's
+    /// duration model. The environment has effectively all-gathered
+    /// timings by routing every stage's `record_time` into this
+    /// controller.
     fn solve(&mut self) {
         let n = self.pdag.len();
         let mut w_min = vec![0.0f64; n];
         let mut w_max = vec![0.0f64; n];
+        if let Some(model) = &self.observed {
+            for (id, node) in self.pdag.dag.nodes.iter().enumerate() {
+                if let Node::Act(a) = node {
+                    let (lo, hi) = model.bounds(*a);
+                    w_min[id] = lo;
+                    w_max[id] = hi;
+                }
+            }
+            self.solve_with_bounds(&w_min, &w_max);
+            return;
+        }
         for (id, node) in self.pdag.dag.nodes.iter().enumerate() {
             let Node::Act(a) = node else { continue };
             let up = self.upper.get(a).map(|acc| acc.mean());
@@ -226,8 +267,15 @@ impl TimelyFreeze {
                 w_max[id] = v;
             }
         }
+        self.solve_with_bounds(&w_min, &w_max);
+    }
+
+    /// Run the warm-started LP for explicit per-node bounds and install
+    /// the resulting expected ratios (shared by the monitoring and
+    /// observed-profile paths).
+    fn solve_with_bounds(&mut self, w_min: &[f64], w_max: &[f64]) {
         let mut input =
-            FreezeLpInput::new(&self.pdag, &w_min, &w_max, self.cfg.r_max, self.cfg.lambda);
+            FreezeLpInput::new(&self.pdag, w_min, w_max, self.cfg.r_max, self.cfg.lambda);
         if let Some(floor) = self.stage_floor.as_deref() {
             input = input.with_stage_floor(floor);
         }
@@ -303,6 +351,14 @@ impl Controller for TimelyFreeze {
 
     fn expected_ratios(&self) -> Option<&BTreeMap<Action, f64>> {
         self.expected.as_ref()
+    }
+
+    fn replan_with_profile(&mut self, profile: &crate::cost::CostProfile) {
+        TimelyFreeze::replan_with_profile(self, profile);
+    }
+
+    fn planned_batch_time(&self) -> Option<f64> {
+        self.solution.as_ref().map(|s| s.batch_time)
     }
 }
 
@@ -447,6 +503,49 @@ mod tests {
         for (a, b) in first.ratios.iter().zip(&second.ratios) {
             assert!((a - b).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn replan_with_profile_chases_a_straggler() {
+        use crate::cost::CostProfile;
+        let (mut tf, schedule) = make(0.5);
+        drive_monitoring(&mut tf, &schedule);
+        tf.plan(31);
+        let before = tf.solution().unwrap().clone();
+        assert_eq!(Controller::planned_batch_time(&tf), Some(before.batch_time));
+        // Observed execution: stage 2's device has slowed 2.5× since
+        // monitoring (fwd 1 → 2.5, backward 2/0.8 → 5/2).
+        let skewed = CostProfile::profiled(
+            (0..4)
+                .map(|s| {
+                    let m = if s == 2 { 2.5 } else { 1.0 };
+                    crate::cost::StageProfile::compute(m * 1.0, m * 0.8, m * 1.2)
+                })
+                .collect(),
+        );
+        tf.replan_with_profile(&skewed);
+        let after = tf.solution().unwrap().clone();
+        // The LP now plans against the slower world…
+        assert!(after.p_d_max > before.p_d_max + 1e-9);
+        // …and the straggler's stage gets at least as much freezing as
+        // any other stage: its wgrad is the biggest absolute saving.
+        let ratios = after.stage_ratios(tf.pdag());
+        let others = ratios
+            .iter()
+            .enumerate()
+            .filter(|&(s, _)| s != 2)
+            .map(|(_, &r)| r)
+            .fold(0.0f64, f64::max);
+        assert!(
+            ratios[2] >= others - 1e-9,
+            "straggler stage under-frozen: {ratios:?}"
+        );
+        assert!(ratios[2] > 0.4, "straggler stage should use the budget: {ratios:?}");
+        // Clearing the override returns the plan to monitored bounds.
+        tf.clear_observed_profile();
+        tf.replan(None);
+        let back = tf.solution().unwrap();
+        assert!((back.batch_time - before.batch_time).abs() < 1e-9);
     }
 
     #[test]

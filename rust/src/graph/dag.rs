@@ -361,6 +361,20 @@ impl Csr {
         &self.succ_adj[self.succ_off[u] as usize..self.succ_off[u + 1] as usize]
     }
 
+    /// Index range of node `u`'s outgoing edges in CSR edge order — the
+    /// indices into an edge-cost vector that correspond to
+    /// [`Csr::succ`]`(u)`, element for element.
+    #[inline]
+    pub fn edge_range(&self, u: usize) -> std::ops::Range<usize> {
+        self.succ_off[u] as usize..self.succ_off[u + 1] as usize
+    }
+
+    /// Destination node of edge `e` (CSR edge order).
+    #[inline]
+    pub fn edge_dst(&self, e: usize) -> usize {
+        self.succ_adj[e] as usize
+    }
+
     /// Longest-path start times (eq. 5) into a caller-owned buffer:
     /// one forward sweep over the cached topo order, no allocation.
     pub fn start_times_into(&self, weights: &[f64], out: &mut Vec<f64>) {
@@ -412,6 +426,96 @@ impl Csr {
                 }
             }
         }
+    }
+}
+
+/// Incremental ready-set tracker over a frozen [`Csr`] — the frontier
+/// iteration the discrete-event engine drives execution with.
+///
+/// Where the batch sweeps above consume the whole topo order at once, a
+/// `Frontier` releases nodes one completion at a time: construction (or
+/// [`Frontier::reset`]) charges every node its in-degree, the zero-degree
+/// sources form the initial ready set, and [`Frontier::complete`]
+/// retires one node, reporting exactly the successors whose last
+/// dependency that was. Feeding every released node back into
+/// `complete` enumerates a topological order — the property
+/// `tests/event_engine.rs` pins — but callers are free to interleave
+/// completions in any dependency-respecting order, which is what an
+/// event queue does.
+#[derive(Clone, Debug)]
+pub struct Frontier {
+    /// In-degree of every node at construction time (immutable).
+    base_indeg: Vec<u32>,
+    /// Remaining unsatisfied dependencies per node.
+    remaining: Vec<u32>,
+    /// Number of nodes retired by `complete` since the last reset.
+    done: usize,
+}
+
+impl Frontier {
+    /// Build the tracker for a frozen CSR.
+    pub fn new(csr: &Csr) -> Frontier {
+        let mut indeg = vec![0u32; csr.len()];
+        for &v in &csr.succ_adj {
+            indeg[v as usize] += 1;
+        }
+        Frontier { remaining: indeg.clone(), base_indeg: indeg, done: 0 }
+    }
+
+    /// Restore the initial state (every dependency unsatisfied).
+    pub fn reset(&mut self) {
+        self.remaining.copy_from_slice(&self.base_indeg);
+        self.done = 0;
+    }
+
+    /// Nodes with no dependencies — the initial ready set.
+    pub fn sources(&self) -> impl Iterator<Item = usize> + '_ {
+        self.base_indeg
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(i, _)| i)
+    }
+
+    /// Whether every dependency of `v` has been satisfied.
+    pub fn is_ready(&self, v: usize) -> bool {
+        self.remaining[v] == 0
+    }
+
+    /// Number of nodes retired since construction/reset.
+    pub fn completed(&self) -> usize {
+        self.done
+    }
+
+    /// Whether every node has been retired.
+    pub fn is_drained(&self) -> bool {
+        self.done == self.remaining.len()
+    }
+
+    /// Retire node `u`, invoking `on_ready(v)` for each successor whose
+    /// last unsatisfied dependency was the `u → v` edge. `u` must itself
+    /// be ready (all dependencies satisfied) and not yet retired.
+    pub fn complete<F: FnMut(usize)>(&mut self, csr: &Csr, u: usize, mut on_ready: F) {
+        debug_assert_eq!(self.remaining[u], 0, "completing a non-ready node");
+        self.done += 1;
+        for &v in csr.succ(u) {
+            let v = v as usize;
+            if self.satisfy(v) {
+                on_ready(v);
+            }
+        }
+    }
+
+    /// Satisfy a single dependency of `v`, returning `true` when it was
+    /// the last outstanding one. This is the per-edge primitive behind
+    /// [`Frontier::complete`]; the event engine calls it directly
+    /// because a node's incoming edges deliver at *different* times
+    /// (P2P messages in flight), so dependencies retire one arrival at
+    /// a time rather than all at once.
+    pub fn satisfy(&mut self, v: usize) -> bool {
+        debug_assert!(self.remaining[v] > 0, "over-satisfying node {v}");
+        self.remaining[v] -= 1;
+        self.remaining[v] == 0
     }
 }
 
@@ -601,6 +705,28 @@ mod tests {
         g.add_edge(b, a);
         assert!(Csr::from_dag(&g).is_none());
         assert!(Evaluator::from_dag(&g).is_none());
+    }
+
+    #[test]
+    fn frontier_releases_a_topo_order() {
+        let g = diamond();
+        let csr = Csr::from_dag(&g).unwrap();
+        let mut frontier = Frontier::new(&csr);
+        let mut ready: Vec<usize> = frontier.sources().collect();
+        assert_eq!(ready, vec![0]);
+        let mut order = Vec::new();
+        while let Some(u) = ready.pop() {
+            assert!(frontier.is_ready(u));
+            order.push(u);
+            frontier.complete(&csr, u, |v| ready.push(v));
+        }
+        assert!(frontier.is_drained());
+        assert_eq!(frontier.completed(), 4);
+        assert!(g.respects_order(&order));
+        // Reset restores the initial state exactly.
+        frontier.reset();
+        assert_eq!(frontier.completed(), 0);
+        assert!(frontier.is_ready(0) && !frontier.is_ready(3));
     }
 
     #[test]

@@ -221,31 +221,44 @@ impl PipelineDag {
         p
     }
 
+    /// Map every edge in CSR edge order: `f(a, b)` for edges connecting
+    /// two *action* nodes hosted on **different ranks**, `default` for
+    /// everything else (same-rank chunk crossings — e.g. ZBV's V turn —
+    /// and source/dest wiring). The result aligns with both [`Csr`]
+    /// sweeps and the u-major `dag.succs` iteration the freeze LP uses,
+    /// because [`Csr::from_dag`] freezes edges in exactly that order.
+    /// This is the single classification behind
+    /// [`PipelineDag::p2p_edge_costs`] and the simulator's per-edge
+    /// scenario bookkeeping.
+    pub fn cross_rank_edge_map<T: Clone, F: Fn(Action, Action) -> T>(
+        &self,
+        f: F,
+        default: T,
+    ) -> Vec<T> {
+        let mut out = Vec::with_capacity(self.dag.edge_count());
+        for u in 0..self.dag.len() {
+            for &v in &self.dag.succs[u] {
+                let x = match (self.dag.nodes[u].action(), self.dag.nodes[v].action()) {
+                    (Some(a), Some(b)) if self.rank_of_node[u] != self.rank_of_node[v] => {
+                        f(a, b)
+                    }
+                    _ => default.clone(),
+                };
+                out.push(x);
+            }
+        }
+        out
+    }
+
     /// Per-edge P2P communication costs in CSR edge order: an edge pays
-    /// `link_cost(from_stage, to_stage)` iff it connects two *action*
-    /// nodes hosted on **different ranks** (same-rank chunk crossings —
-    /// e.g. ZBV's V turn — and source/dest wiring are free). The result
-    /// aligns with both [`Csr`] sweeps and the u-major `dag.succs`
-    /// iteration the freeze LP uses, because [`Csr::from_dag`] freezes
-    /// edges in exactly that order.
+    /// `link_cost(from_stage, to_stage)` iff it crosses ranks between
+    /// two action nodes (see [`PipelineDag::cross_rank_edge_map`]).
     ///
     /// Pair with
     /// [`CostModel::p2p`](crate::cost::CostModel::p2p):
     /// `pdag.p2p_edge_costs(|a, b| cost.p2p(a, b))`.
     pub fn p2p_edge_costs<F: Fn(usize, usize) -> f64>(&self, link_cost: F) -> Vec<f64> {
-        let mut costs = Vec::with_capacity(self.dag.edge_count());
-        for u in 0..self.dag.len() {
-            for &v in &self.dag.succs[u] {
-                let c = match (self.dag.nodes[u].action(), self.dag.nodes[v].action()) {
-                    (Some(a), Some(b)) if self.rank_of_node[u] != self.rank_of_node[v] => {
-                        link_cost(a.stage, b.stage)
-                    }
-                    _ => 0.0,
-                };
-                costs.push(c);
-            }
-        }
-        costs
+        self.cross_rank_edge_map(|a, b| link_cost(a.stage, b.stage), 0.0)
     }
 
     /// Batch execution time under node `weights` plus CSR-ordered

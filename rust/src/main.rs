@@ -1,14 +1,17 @@
 //! `tfreeze` — the TimelyFreeze launcher.
 //!
 //! Subcommands:
-//!   simulate   run one paper-scale experiment in the discrete-event
-//!              simulator and print its result row
+//!   simulate   run one paper-scale experiment through the event-driven
+//!              simulator and print its result row (alias: sim)
 //!   table      run a full table grid (4 schedules × 6 methods)
 //!   train      train end-to-end on the real PJRT pipeline engine
 //!   gantt      render a pipeline execution as ASCII (and optionally SVG)
 //!   lp         LP walkthrough on measured bounds (Figure 2 example)
 //!   schedules  print per-rank schedule orders
 //!
+//! Runtime dynamics ride on `simulate`: `tfreeze sim --scenario
+//! "straggler:1x1.5@300,jitter:0.05"` perturbs execution, and
+//! `--replan 50` turns on observation-driven online replanning.
 //! Run `tfreeze help` for flags.
 
 use timelyfreeze::config::ExperimentConfig;
@@ -28,6 +31,10 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "steps", takes_value: true, help: "training steps" },
         FlagSpec { name: "r-max", takes_value: true, help: "max average freeze ratio per stage" },
         FlagSpec { name: "mem-budget", takes_value: true, help: "fraction of device memory available (0,1]; enables the memory-aware LP floor" },
+        FlagSpec { name: "rank-mem", takes_value: true, help: "per-rank device memory in GB for mixed clusters, e.g. 48,48,24,48 (with --mem-budget)" },
+        FlagSpec { name: "scenario", takes_value: true, help: "runtime dynamics, e.g. straggler:1x1.5@300,jitter:0.05,link:2.0 (see docs)" },
+        FlagSpec { name: "replan", takes_value: true, help: "online replanning cadence in steps (0 = static plan)" },
+        FlagSpec { name: "exec", takes_value: true, help: "executor: event (discrete-event engine) | analytic (fast sweep)" },
         FlagSpec { name: "seed", takes_value: true, help: "random seed" },
         FlagSpec { name: "ranks", takes_value: true, help: "pipeline ranks (GPUs)" },
         FlagSpec { name: "microbatches", takes_value: true, help: "microbatches per step" },
@@ -58,11 +65,11 @@ fn main() {
     let cmd = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
     if args.flag_bool("help") || cmd == "help" {
         println!("{}", render_help("tfreeze", "TimelyFreeze pipeline-parallel trainer", &specs));
-        println!("subcommands: simulate | table | train | gantt | lp | schedules");
+        println!("subcommands: simulate (sim) | table | train | gantt | lp | schedules");
         return;
     }
     let result = match cmd.as_str() {
-        "simulate" => cmd_simulate(&args),
+        "simulate" | "sim" => cmd_simulate(&args),
         "table" => cmd_table(&args),
         "train" => cmd_train(&args),
         "gantt" => cmd_gantt(&args),
@@ -103,6 +110,30 @@ fn build_sim_config(args: &Args) -> Result<ExperimentConfig, String> {
         }
         cfg.memory_budget = Some(v);
     }
+    if let Some(spec) = args.flag("rank-mem") {
+        let caps: Vec<f64> = spec
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|g| *g > 0.0 && g.is_finite())
+                    .map(|g| g * 1e9)
+                    .ok_or_else(|| format!("bad rank-mem entry '{s}' (GB, positive)"))
+            })
+            .collect::<Result<_, _>>()?;
+        cfg.rank_memory_bytes = Some(caps);
+    }
+    if let Some(spec) = args.flag("scenario") {
+        cfg.scenario = Some(timelyfreeze::config::Scenario::parse(spec)?);
+    }
+    if let Some(v) = args.flag_usize("replan")? {
+        cfg.replan_interval = v;
+    }
+    if let Some(s) = args.flag("exec") {
+        cfg.exec = timelyfreeze::config::ExecMode::parse(s)
+            .ok_or_else(|| format!("bad exec mode '{s}' (event|analytic)"))?;
+    }
     if let Some(v) = args.flag_u64("seed")? {
         cfg.seed = v;
     }
@@ -134,13 +165,17 @@ fn build_sim_config(args: &Args) -> Result<ExperimentConfig, String> {
     // (`table` re-validates per swept schedule — feasibility depends on
     // the schedule's in-flight activation profile.)
     validate_memory_budget(&cfg)?;
+    if let Some(sc) = &cfg.scenario {
+        sc.validate(cfg.ranks, cfg.stages())
+            .map_err(|e| format!("invalid scenario: {e}"))?;
+    }
     Ok(cfg)
 }
 
 /// Resolve the config's memory budget to a per-stage floor for the
 /// schedule it currently names, surfacing infeasibility as a CLI error.
 fn validate_memory_budget(cfg: &ExperimentConfig) -> Result<(), String> {
-    if cfg.memory_budget.is_none() {
+    if cfg.memory_budget.is_none() && cfg.rank_memory_bytes.is_none() {
         return Ok(());
     }
     let schedule = timelyfreeze::schedule::Schedule::build(
@@ -155,14 +190,18 @@ fn validate_memory_budget(cfg: &ExperimentConfig) -> Result<(), String> {
 
 fn cmd_simulate(args: &Args) -> Result<(), String> {
     let cfg = build_sim_config(args)?;
-    let r = sim::run(&cfg);
+    let r = sim::run(&cfg).map_err(|e| e.to_string())?;
     println!(
-        "{} · {} · {} — {} steps",
+        "{} · {} · {} — {} steps ({} executor)",
         cfg.model.name,
         cfg.schedule.name(),
         cfg.method.name(),
-        cfg.steps
+        cfg.steps,
+        cfg.exec.name()
     );
+    if let Some(sc) = &cfg.scenario {
+        println!("  scenario        {sc}");
+    }
     let thpt = if args.flag_bool("steady") { r.steady_throughput } else { r.throughput };
     println!("  throughput      {:>10.0} tokens/s", thpt);
     println!("  MFU             {:>10.2} %", r.mfu);
@@ -172,6 +211,12 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         "  batch time      {:>10.4} s (no-freeze {:.4} s)",
         r.batch_time_final, r.batch_time_nofreeze
     );
+    if let Some(planned) = r.planned_batch_time {
+        println!(
+            "  planned P_d*    {:>10.4} s ({} replans)",
+            planned, r.replans
+        );
+    }
     Ok(())
 }
 
@@ -195,7 +240,7 @@ fn cmd_table(args: &Args) -> Result<(), String> {
             let mut cfg = base.clone();
             cfg.schedule = schedule;
             cfg.method = method;
-            let r = sim::run(&cfg);
+            let r = sim::run(&cfg).map_err(|e| e.to_string())?;
             let b = baseline.get_or_insert_with(|| r.clone());
             t.row(vec![
                 method.name().to_string(),
@@ -307,7 +352,7 @@ fn cmd_gantt(args: &Args) -> Result<(), String> {
     if args.flag("steps").is_none() {
         cfg.steps = cfg.phases.t_freeze + 30;
     }
-    let r = sim::run(&cfg);
+    let r = sim::run(&cfg).map_err(|e| e.to_string())?;
     println!("— no freezing —");
     print!("{}", viz::ascii(&r.gantt_nofreeze, cfg.ranks, 100));
     println!("— {} (final step) —", cfg.method.name());

@@ -1,0 +1,353 @@
+//! Discrete-event execution core: per-rank executors replaying
+//! [`Schedule::orders`](crate::schedule::Schedule) over an event queue
+//! of ordered simulated time, with readiness driven by the pipeline
+//! DAG's precedence ([`Frontier`]) and cross-rank data movement priced
+//! as in-flight P2P messages (per-edge delays in CSR edge order,
+//! typically from
+//! [`PipelineDag::p2p_edge_costs`](crate::graph::pipeline::PipelineDag::p2p_edge_costs)).
+//!
+//! The structure follows dslab's `DagSimulation` (an event-driven DAG
+//! runner over per-resource executors), specialized to this crate's
+//! pipeline batches:
+//!
+//! * every rank is an executor that consumes its schedule order one
+//!   action at a time — an action dispatches when it reaches the head
+//!   of its rank's order, its last dependency has arrived, and the rank
+//!   is idle;
+//! * an action's completion enqueues one arrival per outgoing DAG edge:
+//!   immediate for same-rank edges, delayed by the link cost for
+//!   cross-rank ones;
+//! * the abstract source/destination nodes execute instantly when ready
+//!   (zero weight, owned by no rank).
+//!
+//! ## Equivalence contract
+//!
+//! Dispatch computes `start = max(rank_free, ready)` where `ready` is
+//! the running maximum of arrival times `finish_pred + edge_delay`.
+//! Because the pipeline DAG's rule-4 edges already serialize each
+//! rank's order, these are exactly the recurrences of the analytic
+//! longest-path sweep (eq. 5) evaluated event-wise — `f64::max` is
+//! exact and every addition pairs the same operands — so with identical
+//! inputs the event-driven makespan is **bit-identical** to
+//! [`BatchEvaluator::makespan`](crate::graph::pipeline::BatchEvaluator)
+//! (`tests/event_engine.rs` property-tests this across all four
+//! schedules and freeze ratios). What the engine adds over the sweep is
+//! the executor vocabulary: observed per-action start/finish times for
+//! event-sourced Gantt charts and profile capture, and a place where
+//! runtime dynamics (stragglers, jitter, link slowdowns — see
+//! [`Scenario`](crate::config::Scenario)) act on an *execution*, not on
+//! a formula.
+
+mod queue;
+
+pub use queue::EventQueue;
+
+use crate::graph::dag::{Csr, Frontier};
+use crate::graph::pipeline::PipelineDag;
+use crate::schedule::Schedule;
+
+/// Events of one batch execution.
+#[derive(Clone, Copy, Debug)]
+enum Event {
+    /// The outputs of a finished predecessor reach node `to` (after the
+    /// connecting edge's message delay).
+    Arrive {
+        /// Receiving node id.
+        to: usize,
+    },
+    /// Node `node` completes execution on its rank.
+    Finish {
+        /// Completing node id.
+        node: usize,
+    },
+}
+
+/// Per-rank executor state: a cursor into the rank's schedule order and
+/// the time the device frees up.
+#[derive(Clone, Debug)]
+struct RankExec {
+    /// The rank's schedule order as DAG node ids.
+    order: Vec<usize>,
+    /// Next order position to dispatch.
+    cursor: usize,
+    /// Whether the device is currently between actions.
+    idle: bool,
+    /// When the device last freed up.
+    free_at: f64,
+}
+
+/// The discrete-event pipeline executor for one schedule's batch DAG.
+///
+/// Build once per schedule; [`EventEngine::execute`] replays a batch
+/// under per-node durations and per-edge message delays, reusing all
+/// internal buffers across steps.
+#[derive(Clone, Debug)]
+pub struct EventEngine {
+    csr: Csr,
+    frontier: Frontier,
+    /// Rank owning each node (`None` for the abstract source/dest).
+    owner: Vec<Option<usize>>,
+    ranks: Vec<RankExec>,
+    dest: usize,
+    queue: EventQueue<Event>,
+    /// Running max of arrival times per node.
+    ready_at: Vec<f64>,
+    /// Dispatch time per node (valid after `execute`).
+    starts: Vec<f64>,
+    /// Nodes finished in the current execution.
+    executed: usize,
+}
+
+impl EventEngine {
+    /// Build the executor for a schedule and its batch DAG. The two must
+    /// describe the same batch (the DAG indexes every scheduled action).
+    pub fn new(pdag: &PipelineDag, schedule: &Schedule) -> EventEngine {
+        let n = pdag.len();
+        let mut owner = vec![None; n];
+        let mut ranks = Vec::with_capacity(schedule.ranks);
+        for (rank, order) in schedule.orders.iter().enumerate() {
+            let ids: Vec<usize> = order
+                .iter()
+                .map(|a| {
+                    *pdag
+                        .index
+                        .get(a)
+                        .unwrap_or_else(|| panic!("schedule action {a} missing from DAG"))
+                })
+                .collect();
+            for &id in &ids {
+                debug_assert!(owner[id].is_none(), "node {id} scheduled twice");
+                owner[id] = Some(rank);
+            }
+            ranks.push(RankExec { order: ids, cursor: 0, idle: true, free_at: 0.0 });
+        }
+        let csr = pdag.csr.clone();
+        let frontier = Frontier::new(&csr);
+        EventEngine {
+            csr,
+            frontier,
+            owner,
+            ranks,
+            dest: pdag.dest,
+            queue: EventQueue::new(),
+            ready_at: vec![0.0; n],
+            starts: vec![0.0; n],
+            executed: 0,
+        }
+    }
+
+    /// Number of nodes in the batch DAG.
+    pub fn len(&self) -> usize {
+        self.csr.len()
+    }
+
+    /// Whether the batch DAG has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.csr.is_empty()
+    }
+
+    /// Execute one batch: `weights[id]` is the duration of node `id`
+    /// (zero for source/dest), `edge_delays[e]` the message delay of CSR
+    /// edge `e` (zero for same-rank edges). Returns the makespan — the
+    /// instant the destination node becomes ready. Start times of the
+    /// run are available from [`EventEngine::starts`] until the next
+    /// call.
+    pub fn execute(&mut self, weights: &[f64], edge_delays: &[f64]) -> f64 {
+        let n = self.csr.len();
+        assert_eq!(weights.len(), n, "one weight per node");
+        assert_eq!(
+            edge_delays.len(),
+            self.csr.edge_count(),
+            "one delay per CSR edge"
+        );
+        // Reset per-run state.
+        self.frontier.reset();
+        self.queue.clear();
+        self.executed = 0;
+        for r in &mut self.ranks {
+            r.cursor = 0;
+            r.idle = true;
+            r.free_at = 0.0;
+        }
+        self.ready_at[..n].fill(0.0);
+        self.starts[..n].fill(0.0);
+
+        // Bootstrap: dependency-free nodes are ready at t = 0.
+        let sources: Vec<usize> = self.frontier.sources().collect();
+        for v in sources {
+            self.node_ready(v, 0.0, weights);
+        }
+
+        // Main loop: drain the queue in (time, insertion) order.
+        while let Some((t, ev)) = self.queue.pop() {
+            match ev {
+                Event::Finish { node } => self.on_finish(node, t, weights, edge_delays),
+                Event::Arrive { to } => {
+                    // Events pop in nondecreasing time order, so the
+                    // running max lands on the latest arrival.
+                    if t > self.ready_at[to] {
+                        self.ready_at[to] = t;
+                    }
+                    if self.frontier.satisfy(to) {
+                        self.node_ready(to, self.ready_at[to], weights);
+                    }
+                }
+            }
+        }
+        assert_eq!(
+            self.executed, n,
+            "batch deadlocked: {} of {n} nodes executed",
+            self.executed
+        );
+        // Destination has zero weight: its start *is* the batch time.
+        self.starts[self.dest]
+    }
+
+    /// Start times of the last [`EventEngine::execute`] run, node-aligned.
+    pub fn starts(&self) -> &[f64] {
+        &self.starts
+    }
+
+    /// All dependencies of `v` are satisfied as of `ready`: dispatch it
+    /// if it is an unowned (source/dest) node, or poke its rank.
+    fn node_ready(&mut self, v: usize, ready: f64, weights: &[f64]) {
+        match self.owner[v] {
+            None => {
+                // Abstract nodes execute instantly (zero weight).
+                debug_assert_eq!(weights[v], 0.0, "abstract node {v} must be weightless");
+                self.starts[v] = ready;
+                self.queue.push(ready, Event::Finish { node: v });
+            }
+            Some(rank) => self.try_dispatch(rank, weights),
+        }
+    }
+
+    /// Dispatch the head of `rank`'s order if the device is idle and the
+    /// head's dependencies have all arrived.
+    fn try_dispatch(&mut self, rank: usize, weights: &[f64]) {
+        let r = &mut self.ranks[rank];
+        if !r.idle || r.cursor >= r.order.len() {
+            return;
+        }
+        let head = r.order[r.cursor];
+        if !self.frontier.is_ready(head) {
+            return;
+        }
+        // Rule-4 edges make the rank's previous finish one of the
+        // arrivals folded into `ready_at`, so this max reproduces the
+        // longest-path recurrence exactly (see the module docs).
+        let start = r.free_at.max(self.ready_at[head]);
+        r.idle = false;
+        self.starts[head] = start;
+        self.queue.push(start + weights[head], Event::Finish { node: head });
+    }
+
+    /// Node `u` finished at `t`: free its rank and put one arrival per
+    /// outgoing edge in flight.
+    fn on_finish(&mut self, u: usize, t: f64, weights: &[f64], edge_delays: &[f64]) {
+        self.executed += 1;
+        if let Some(rank) = self.owner[u] {
+            let r = &mut self.ranks[rank];
+            debug_assert_eq!(r.order[r.cursor], u, "out-of-order finish on rank {rank}");
+            r.cursor += 1;
+            r.idle = true;
+            r.free_at = t;
+        }
+        for e in self.csr.edge_range(u) {
+            let v = self.csr.edge_dst(e);
+            self.queue.push(t + edge_delays[e], Event::Arrive { to: v });
+        }
+        if let Some(rank) = self.owner[u] {
+            // Usually a no-op (the next head still awaits its rule-4
+            // arrival, queued just above at this same instant), but it
+            // keeps the executor correct on DAGs without same-rank
+            // serialization edges.
+            self.try_dispatch(rank, weights);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::ScheduleKind;
+
+    fn engine_for(kind: ScheduleKind, ranks: usize, m: usize) -> (PipelineDag, EventEngine) {
+        let s = Schedule::build(kind, ranks, m, Schedule::default_chunks(kind));
+        let pdag = PipelineDag::from_schedule(&s);
+        let engine = EventEngine::new(&pdag, &s);
+        (pdag, engine)
+    }
+
+    #[test]
+    fn uniform_gpipe_makespan_matches_closed_form() {
+        let (pdag, mut engine) = engine_for(ScheduleKind::GPipe, 4, 8);
+        let w = pdag.weights(|_| 1.0);
+        let zeros = vec![0.0; pdag.dag.edge_count()];
+        // 2(M + S − 1) for unit forward/backward.
+        assert_eq!(engine.execute(&w, &zeros), 2.0 * (8.0 + 4.0 - 1.0));
+    }
+
+    #[test]
+    fn bit_identical_to_analytic_sweep() {
+        for kind in ScheduleKind::all() {
+            let (pdag, mut engine) = engine_for(kind, 4, 8);
+            let mut ev = pdag.evaluator();
+            let zeros = vec![0.0; pdag.dag.edge_count()];
+            for scale in [0.3, 1.0, 2.7] {
+                let w = pdag.weights(|a| {
+                    if a.kind.freezable() { 1.7 * scale } else { scale }
+                });
+                let des = engine.execute(&w, &zeros);
+                assert_eq!(des.to_bits(), ev.batch_time(&w).to_bits(), "{}", kind.name());
+                assert_eq!(engine.starts(), ev.start_times(&w), "{}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn edge_delays_match_edge_weighted_sweep() {
+        for kind in ScheduleKind::all() {
+            let (pdag, mut engine) = engine_for(kind, 4, 6);
+            let w = pdag.weights(|_| 1.0);
+            let delays = pdag.p2p_edge_costs(|a, b| 0.1 * (1 + a.min(b)) as f64);
+            let des = engine.execute(&w, &delays);
+            let analytic = pdag.batch_time_with_edges(&w, &delays);
+            assert_eq!(des.to_bits(), analytic.to_bits(), "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn ranks_never_overlap() {
+        let (pdag, mut engine) = engine_for(ScheduleKind::ZeroBubbleV, 4, 8);
+        let w = pdag.weights(|a| 1.0 + 0.1 * a.stage as f64);
+        let zeros = vec![0.0; pdag.dag.edge_count()];
+        engine.execute(&w, &zeros);
+        let starts = engine.starts();
+        for rank in 0..4 {
+            let mut spans: Vec<(f64, f64)> = (0..pdag.len())
+                .filter(|&id| {
+                    pdag.node_action(id).is_some() && pdag.rank_of_node[id] == rank
+                })
+                .map(|id| (starts[id], starts[id] + w[id]))
+                .collect();
+            spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for pair in spans.windows(2) {
+                assert!(pair[0].1 <= pair[1].0 + 1e-12, "overlap on rank {rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn reusable_across_weight_vectors() {
+        let (pdag, mut engine) = engine_for(ScheduleKind::OneFOneB, 4, 8);
+        let zeros = vec![0.0; pdag.dag.edge_count()];
+        let w1 = pdag.weights(|_| 1.0);
+        let w2 = pdag.weights(|_| 2.0);
+        let t1 = engine.execute(&w1, &zeros);
+        let t2 = engine.execute(&w2, &zeros);
+        assert_eq!(2.0 * t1, t2);
+        let t1_again = engine.execute(&w1, &zeros);
+        assert_eq!(t1.to_bits(), t1_again.to_bits());
+    }
+}

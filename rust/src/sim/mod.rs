@@ -1,17 +1,21 @@
-//! Discrete-event evaluation substrate: the convergence (accuracy-proxy)
-//! simulator and the experiment runner that regenerates the paper's
-//! tables and figures at LLaMA-1B/8B/13B and vision-model scale (see
-//! docs/ARCHITECTURE.md for the substitution rationale).
+//! Discrete-event evaluation substrate: the event-driven execution core
+//! ([`engine`]), the convergence (accuracy-proxy) simulator, and the
+//! experiment runner that regenerates the paper's tables and figures at
+//! LLaMA-1B/8B/13B and vision-model scale (see docs/ARCHITECTURE.md for
+//! the substitution rationale).
 //!
 //! The execution-time and memory models the runner consumes live in the
 //! first-class [`crate::cost`] subsystem; [`CostModel`] is re-exported
 //! here for the pre-refactor `sim::CostModel` spelling.
 
 pub mod convergence;
+pub mod engine;
 pub mod runner;
 
 pub use crate::cost::CostModel;
 pub use convergence::{layer_curvature, progress_to_accuracy, ConvergenceSim};
+pub use engine::EventEngine;
 pub use runner::{
-    build_layout, run, run_with_partition, BackwardSample, GanttBlock, SimResult, TrajPoint,
+    build_layout, run, run_with_partition, BackwardSample, GanttBlock, SimError, SimResult,
+    TrajPoint,
 };

@@ -2,22 +2,61 @@
 //! pipeline DAG, the real controllers and LP, the analytic cost model,
 //! and the convergence simulator into one paper-scale training run.
 //!
+//! Every batch executes through the event engine
+//! ([`crate::sim::engine::EventEngine`]): per-rank executors consume the
+//! schedule orders, readiness follows DAG precedence, and P2P messages
+//! carry the cost model's link delays. With no dynamics this is
+//! bit-identical to the analytic longest-path sweep, which remains
+//! selectable as a fast mode
+//! ([`ExecMode::Analytic`](crate::config::ExecMode)); with a
+//! [`Scenario`](crate::config::Scenario) attached, stragglers, jitter,
+//! and link slowdowns perturb the execution, observed action times feed
+//! a [`ProfileRecorder`](crate::cost::ProfileRecorder), and (when
+//! `replan_interval > 0`) the TimelyFreeze family re-solves its
+//! warm-started LP against the observed profile — the online-replanning
+//! loop `benches/fig17_dynamics.rs` sweeps.
+//!
 //! Every per-step quantity the paper reports is produced here:
 //! throughput (tokens/s), MFU, average freeze ratio, accuracy proxy, the
 //! freeze-ratio/throughput trajectory (Figure 4), per-action timings
-//! (Figure 15), and Gantt data (Figures 7–13).
+//! (Figure 15), and event-sourced Gantt data (Figures 7–13).
 
-use crate::config::ExperimentConfig;
-use crate::cost::{stage_floor_for, CostModel};
+use crate::config::{ExecMode, ExperimentConfig, Scenario};
+use crate::cost::{stage_floor_for, CostModel, ProfileRecorder};
 use crate::freeze::{select_frozen_units_into, ControllerFactory, ModelLayout};
-use crate::graph::pipeline::{Node, PipelineDag};
+use crate::graph::pipeline::{BatchEvaluator, Node, PipelineDag};
 use crate::partition::{balanced_partition, PartitionMethod};
 use crate::schedule::Schedule;
 use crate::sim::convergence::{progress_to_accuracy, ConvergenceSim};
+use crate::sim::engine::EventEngine;
 use crate::types::{Action, FreezeMethod};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::sync::{Mutex, OnceLock};
+
+/// Why a simulated experiment could not run. Programmatic callers get
+/// this as a value; the `tfreeze` CLI renders it as a clean error.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SimError {
+    /// The configured memory budget cannot be satisfied — the device
+    /// overflows even fully frozen, a derived floor exceeds `r_max`, or
+    /// the per-rank capacity vector has the wrong arity.
+    InfeasibleMemoryBudget(String),
+    /// The scenario names ranks or stage boundaries the pipeline does
+    /// not have.
+    InvalidScenario(String),
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::InfeasibleMemoryBudget(msg) => write!(f, "{msg}"),
+            SimError::InvalidScenario(msg) => write!(f, "invalid scenario: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// One block of a Gantt chart (Figures 7–13).
 #[derive(Clone, Debug)]
@@ -96,6 +135,14 @@ pub struct SimResult {
     pub backward_samples: Vec<BackwardSample>,
     /// Mean per-unit frozen frequency (Figure 14 histogram input).
     pub unit_freeze_freq: Vec<f64>,
+    /// The step time the final plan *expected*: `P_d*` of the last LP
+    /// solve plus the once-per-batch optimizer tail, so it compares
+    /// directly against realized step times (the planned-vs-realized
+    /// gap under dynamics). `None` for controllers without a planning
+    /// model.
+    pub planned_batch_time: Option<f64>,
+    /// Number of observed-profile replans the run performed.
+    pub replans: usize,
 }
 
 impl SimResult {
@@ -151,8 +198,57 @@ pub fn build_layout(cfg: &ExperimentConfig, partition: PartitionMethod) -> Model
 }
 
 /// Run one full experiment.
-pub fn run(cfg: &ExperimentConfig) -> SimResult {
+pub fn run(cfg: &ExperimentConfig) -> Result<SimResult, SimError> {
     run_with_partition(cfg, PartitionMethod::Parameter)
+}
+
+/// The executor a run drives batches through: the discrete-event engine
+/// (default) or the analytic longest-path sweep (fast mode) — bit-equal
+/// on identical inputs, so the choice never changes results.
+enum Exec {
+    Event(EventEngine),
+    Analytic(BatchEvaluator),
+}
+
+impl Exec {
+    fn build(mode: ExecMode, pdag: &PipelineDag, schedule: &Schedule) -> Exec {
+        match mode {
+            ExecMode::Event => Exec::Event(EventEngine::new(pdag, schedule)),
+            ExecMode::Analytic => Exec::Analytic(pdag.evaluator()),
+        }
+    }
+
+    /// Batch makespan under node `weights` and optional CSR-ordered edge
+    /// delays.
+    fn batch_time(&mut self, weights: &[f64], delays: Option<&[f64]>, zeros: &[f64]) -> f64 {
+        match self {
+            Exec::Event(engine) => engine.execute(weights, delays.unwrap_or(zeros)),
+            Exec::Analytic(ev) => match delays {
+                Some(d) => ev.batch_time_with_edges(weights, d),
+                None => ev.batch_time(weights),
+            },
+        }
+    }
+
+    /// Per-node start times of a batch (event-sourced in engine mode).
+    fn start_times(
+        &mut self,
+        pdag: &PipelineDag,
+        weights: &[f64],
+        delays: Option<&[f64]>,
+        zeros: &[f64],
+    ) -> Vec<f64> {
+        match self {
+            Exec::Event(engine) => {
+                engine.execute(weights, delays.unwrap_or(zeros));
+                engine.starts().to_vec()
+            }
+            Exec::Analytic(_) => match delays {
+                Some(d) => pdag.start_times_with_edges(weights, d),
+                None => pdag.start_times(weights),
+            },
+        }
+    }
 }
 
 /// Key identifying one no-freezing reference run of the convergence
@@ -205,7 +301,15 @@ fn reference_final_loss(layout: &ModelLayout, eta: f64, cfg: &ExperimentConfig) 
 }
 
 /// Run one full experiment with an explicit partition heuristic.
-pub fn run_with_partition(cfg: &ExperimentConfig, partition: PartitionMethod) -> SimResult {
+///
+/// Errors (rather than panics) on an unsatisfiable memory budget or a
+/// scenario that names ranks/boundaries the pipeline lacks, so
+/// programmatic callers can recover; the CLI validates the same
+/// conditions upfront and renders the identical message.
+pub fn run_with_partition(
+    cfg: &ExperimentConfig,
+    partition: PartitionMethod,
+) -> Result<SimResult, SimError> {
     let schedule = Schedule::build(
         cfg.schedule,
         cfg.ranks,
@@ -225,12 +329,19 @@ pub fn run_with_partition(cfg: &ExperimentConfig, partition: PartitionMethod) ->
     // Memory-constrained runs: derive the per-stage freeze-ratio floor
     // from the budgeted device capacity and the schedule's peak
     // in-flight profile; the TimelyFreeze LP then respects it
-    // (constraint [5]). An unsatisfiable budget (device overflow, or a
-    // floor above r_max) is a configuration error — the CLI validates
-    // it before reaching this point, so programmatic callers failing
-    // here get the same message, loudly.
+    // (constraint [5]).
     let stage_floor = stage_floor_for(cfg, &layout.layer_stage, &schedule)
-        .unwrap_or_else(|e| panic!("{e}"));
+        .map_err(SimError::InfeasibleMemoryBudget)?;
+    // Runtime dynamics: an identity scenario (or none) leaves execution
+    // untouched — the bit-identity contract with the analytic sweep.
+    let scenario: Option<&Scenario> = match &cfg.scenario {
+        Some(sc) => {
+            sc.validate(cfg.ranks, cfg.stages())
+                .map_err(SimError::InvalidScenario)?;
+            (!sc.is_identity()).then_some(sc)
+        }
+        None => None,
+    };
     let factory = ControllerFactory {
         phases: cfg.phases,
         r_max: cfg.r_max,
@@ -296,13 +407,32 @@ pub fn run_with_partition(cfg: &ExperimentConfig, partition: PartitionMethod) ->
     let mut last_weights = vec![0.0f64; pdag.len()];
     let mut last_plan_ratios: Vec<f64> = vec![0.0; pdag.len()];
     let tokens_per_step = cfg.tokens_per_step() as f64;
-    // Per-step hot-path buffers, allocated once: the longest-path
-    // evaluator over the cached CSR topo order, the per-microbatch
+    // Per-step hot-path buffers, allocated once: the executor (event
+    // engine by default, analytic sweep in fast mode), the per-microbatch
     // freeze masks, and the per-action selection scratch.
-    let mut evaluator = pdag.evaluator();
+    let mut exec = Exec::build(cfg.exec, &pdag, &schedule);
     let num_units = layout.num_units();
     let mut masks: Vec<Vec<bool>> = vec![vec![false; num_units]; cfg.microbatches];
     let mut sel: Vec<bool> = Vec::with_capacity(num_units);
+    // P2P message delays on cross-rank edges (CSR edge order). The
+    // analytic presets charge communication to nodes, so this is `None`
+    // for them; profiled cost models carry real link costs. Scenario
+    // link slowdowns scale the active delays into `delays_scratch`.
+    let base_delays: Option<Vec<f64>> = cost
+        .has_p2p()
+        .then(|| pdag.p2p_edge_costs(|a, b| cost.p2p(a, b)));
+    let edge_boundary: Vec<Option<usize>> = edge_boundaries(&pdag);
+    let mut delays_scratch: Vec<f64> = base_delays.clone().unwrap_or_default();
+    let zero_delays = vec![0.0f64; pdag.dag.edge_count()];
+    // Observed-profile capture for online replanning (window resets at
+    // every replan so each plan reflects the current regime).
+    let replanning = cfg.replan_interval > 0
+        && matches!(
+            cfg.method,
+            FreezeMethod::TimelyFreeze | FreezeMethod::TimelyApf | FreezeMethod::TimelyAuto
+        );
+    let mut recorder = ProfileRecorder::new(cfg.stages());
+    let mut replans = 0usize;
 
     for t in 1..=cfg.steps {
         let plan = controller.plan(t);
@@ -318,11 +448,70 @@ pub fn run_with_partition(cfg: &ExperimentConfig, partition: PartitionMethod) ->
                 }
             };
         }
-        let step_time = evaluator.batch_time(&weights) + opt_tail;
+        // ---- runtime dynamics: perturb the sampled durations ----
+        let delays = match scenario {
+            None => base_delays.as_deref(),
+            Some(sc) => {
+                for (id, act) in node_actions.iter().enumerate() {
+                    if let Some(a) = act {
+                        let rank_f = sc.rank_factor(pdag.rank_of_node[id], t);
+                        let link_f = sc.stage_link_factor(a.stage, t);
+                        // Only kinds whose duration charges node comm
+                        // carry a comm share (W-actions never do — see
+                        // CostModel::bounds); and when both factors
+                        // agree (in particular pre-onset, both 1.0) the
+                        // whole duration scales as one product, keeping
+                        // undisturbed steps bit-exact.
+                        let d = if rank_f == link_f {
+                            weights[id] * rank_f
+                        } else {
+                            let comm = match a.kind {
+                                crate::types::ActionKind::BackwardWgrad => 0.0,
+                                _ => cost.stage_comm(a.stage),
+                            };
+                            let compute = (weights[id] - comm).max(0.0);
+                            compute * rank_f + comm * link_f
+                        };
+                        weights[id] = d * sc.jitter_mult(cfg.seed, t, id);
+                    }
+                }
+                match &base_delays {
+                    None => None,
+                    Some(base) => {
+                        for (e, &b) in base.iter().enumerate() {
+                            delays_scratch[e] = match edge_boundary[e] {
+                                Some(boundary) => b * sc.edge_link_factor(boundary, t),
+                                None => b,
+                            };
+                        }
+                        Some(delays_scratch.as_slice())
+                    }
+                }
+            }
+        };
+        let step_time = exec.batch_time(&weights, delays, &zero_delays) + opt_tail;
         total_time += step_time;
         if t > cfg.phases.t_freeze {
             steady_time += step_time;
             steady_steps += 1;
+        }
+        // ---- observed-profile capture + online replanning ----
+        if replanning {
+            for (id, act) in node_actions.iter().enumerate() {
+                if let Some(a) = act {
+                    recorder.record(*a, plan.ratio_of(a), weights[id]);
+                }
+            }
+            if t > cfg.phases.t_monitor
+                && t < cfg.steps
+                && (t - cfg.phases.t_monitor) % cfg.replan_interval == 0
+            {
+                if let Some(profile) = recorder.to_profile(&cost) {
+                    controller.replan_with_profile(&profile);
+                    replans += 1;
+                }
+                recorder.reset();
+            }
         }
 
         // ---- feed monitors ----
@@ -412,12 +601,24 @@ pub fn run_with_partition(cfg: &ExperimentConfig, partition: PartitionMethod) ->
         }
     }
 
-    // ---- Gantt charts ----
+    // ---- Gantt charts (event-sourced: starts come from the executor) ----
+    // The no-freezing chart is the undisturbed reference world; the
+    // final chart replays the last step's realized durations and (under
+    // a scenario) its scaled link delays.
+    let final_delays: Option<&[f64]> = match (&base_delays, scenario) {
+        (None, _) => None,
+        (Some(b), None) => Some(b.as_slice()),
+        (Some(_), Some(_)) => Some(delays_scratch.as_slice()),
+    };
     let w_nofreeze = pdag.weights(|a| cost.duration(a, 0.0));
-    let gantt_nofreeze = gantt(&pdag, &w_nofreeze, &vec![0.0; pdag.len()]);
-    let gantt_final = gantt(&pdag, &last_weights, &last_plan_ratios);
-    let batch_time_nofreeze = pdag.batch_time(&w_nofreeze) + opt_tail;
-    let batch_time_final = pdag.batch_time(&last_weights) + opt_tail;
+    let starts_nofreeze =
+        exec.start_times(&pdag, &w_nofreeze, base_delays.as_deref(), &zero_delays);
+    let gantt_nofreeze =
+        gantt(&pdag, &starts_nofreeze, &w_nofreeze, &vec![0.0; pdag.len()]);
+    let batch_time_nofreeze = starts_nofreeze[pdag.dest] + opt_tail;
+    let starts_final = exec.start_times(&pdag, &last_weights, final_delays, &zero_delays);
+    let gantt_final = gantt(&pdag, &starts_final, &last_weights, &last_plan_ratios);
+    let batch_time_final = starts_final[pdag.dest] + opt_tail;
 
     // ---- accuracy proxy ----
     let progress = match reference_final {
@@ -448,7 +649,7 @@ pub fn run_with_partition(cfg: &ExperimentConfig, partition: PartitionMethod) ->
         .map(|f| f / cfg.microbatches as f64)
         .collect();
 
-    SimResult {
+    Ok(SimResult {
         method: cfg.method,
         schedule: cfg.schedule,
         throughput,
@@ -465,13 +666,29 @@ pub fn run_with_partition(cfg: &ExperimentConfig, partition: PartitionMethod) ->
         gantt_final,
         backward_samples,
         unit_freeze_freq,
-    }
+        planned_batch_time: controller.planned_batch_time().map(|p| p + opt_tail),
+        replans,
+    })
 }
 
-/// Compute Gantt blocks (per-action start/duration/rank) for one step's
-/// node weights.
-fn gantt(pdag: &PipelineDag, weights: &[f64], ratios: &[f64]) -> Vec<GanttBlock> {
-    let starts = pdag.start_times(weights);
+/// P2P stage boundary of each CSR edge: `Some(b)` when the edge crosses
+/// ranks between adjacent stages `b` and `b+1` (the edges scenario link
+/// slowdowns can target), `None` for same-rank and source/dest wiring.
+fn edge_boundaries(pdag: &PipelineDag) -> Vec<Option<usize>> {
+    pdag.cross_rank_edge_map(
+        |a, b| (a.stage.abs_diff(b.stage) == 1).then_some(a.stage.min(b.stage)),
+        None,
+    )
+}
+
+/// Compute Gantt blocks (per-action start/duration/rank) from one
+/// executed step's start times and node weights.
+fn gantt(
+    pdag: &PipelineDag,
+    starts: &[f64],
+    weights: &[f64],
+    ratios: &[f64],
+) -> Vec<GanttBlock> {
     let mut blocks = Vec::new();
     for (id, node) in pdag.dag.nodes.iter().enumerate() {
         if let Node::Act(a) = node {
@@ -509,7 +726,7 @@ mod tests {
     #[test]
     fn no_freezing_baseline_sane() {
         let cfg = quick_cfg(FreezeMethod::NoFreezing, ScheduleKind::GPipe);
-        let r = run(&cfg);
+        let r = run(&cfg).unwrap();
         assert!(r.throughput > 0.0);
         assert!(r.freeze_ratio < 1e-9);
         assert_eq!(r.progress, 1.0);
@@ -519,8 +736,8 @@ mod tests {
 
     #[test]
     fn timelyfreeze_beats_baseline_throughput() {
-        let base = run(&quick_cfg(FreezeMethod::NoFreezing, ScheduleKind::OneFOneB));
-        let ours = run(&quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB));
+        let base = run(&quick_cfg(FreezeMethod::NoFreezing, ScheduleKind::OneFOneB)).unwrap();
+        let ours = run(&quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB)).unwrap();
         assert!(
             ours.steady_throughput > base.steady_throughput * 1.05,
             "timely {} vs base {}",
@@ -535,7 +752,7 @@ mod tests {
     #[test]
     fn gantt_blocks_cover_all_actions_without_rank_overlap() {
         let cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::GPipe);
-        let r = run(&cfg);
+        let r = run(&cfg).unwrap();
         assert_eq!(r.gantt_final.len(), 2 * 4 * cfg.microbatches);
         // No two blocks on one rank overlap.
         for rank in 0..4 {
@@ -554,7 +771,7 @@ mod tests {
     #[test]
     fn trajectory_shows_ramp() {
         let cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
-        let r = run(&cfg);
+        let r = run(&cfg).unwrap();
         let early_afr = r.trajectory.iter().find(|p| p.step <= 30).map(|p| p.mean_afr);
         let late = r.trajectory.last().unwrap();
         assert!(late.mean_afr > 0.05, "no freezing at end");
@@ -605,9 +822,9 @@ mod tests {
         // percentage point of slack. This is the end-to-end smoke layer;
         // the exact floor-reaches-the-plan assertion lives in
         // freeze::tests::factory_threads_stage_floor_to_timely.
-        let unbudgeted = run(&cfg);
+        let unbudgeted = run(&cfg).unwrap();
         cfg.memory_budget = Some(frac);
-        let r = run(&cfg);
+        let r = run(&cfg).unwrap();
         assert!(r.throughput.is_finite() && r.throughput > 0.0);
         assert!(r.freeze_ratio > 1.0, "binding budget froze nothing: {}", r.freeze_ratio);
         assert!(
@@ -619,13 +836,102 @@ mod tests {
     }
 
     #[test]
+    fn infeasible_configs_are_error_values_not_panics() {
+        use crate::config::Scenario;
+        // A scenario naming a rank the pipeline lacks.
+        let mut cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+        cfg.scenario = Some(Scenario::straggler(99, 2.0));
+        assert!(matches!(run(&cfg), Err(SimError::InvalidScenario(_))));
+        // A memory budget below the fully-frozen footprint.
+        let mut cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+        cfg.memory_budget = Some(1e-6);
+        assert!(matches!(run(&cfg), Err(SimError::InfeasibleMemoryBudget(_))));
+        // A per-rank capacity vector of the wrong arity.
+        let mut cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+        cfg.memory_budget = Some(0.9);
+        cfg.rank_memory_bytes = Some(vec![48e9; 3]);
+        assert!(matches!(run(&cfg), Err(SimError::InfeasibleMemoryBudget(_))));
+    }
+
+    /// The calm scenario and the analytic fast mode must change nothing:
+    /// the event engine, the sweep, and the no-scenario path all land on
+    /// the same floats.
+    #[test]
+    fn calm_scenario_and_analytic_mode_are_bit_identical() {
+        use crate::config::{ExecMode, Scenario};
+        let cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+        let event = run(&cfg).unwrap();
+        let mut calm = cfg.clone();
+        calm.scenario = Some(Scenario::calm());
+        let calm = run(&calm).unwrap();
+        let mut fast = cfg.clone();
+        fast.exec = ExecMode::Analytic;
+        let fast = run(&fast).unwrap();
+        for other in [&calm, &fast] {
+            assert_eq!(event.throughput.to_bits(), other.throughput.to_bits());
+            assert_eq!(event.batch_time_final.to_bits(), other.batch_time_final.to_bits());
+            assert_eq!(event.accuracy.to_bits(), other.accuracy.to_bits());
+            for (a, b) in event.gantt_final.iter().zip(&other.gantt_final) {
+                assert_eq!(a.start.to_bits(), b.start.to_bits());
+                assert_eq!(a.duration.to_bits(), b.duration.to_bits());
+            }
+        }
+    }
+
+    /// A mid-run straggler degrades a static plan; observation-driven
+    /// replanning recovers throughput. Deterministic (zero noise), so
+    /// the comparison is exact: the replanned LP optimizes against the
+    /// true straggler world and the static plan is a feasible point of
+    /// that same LP.
+    #[test]
+    fn replanning_recovers_from_late_straggler() {
+        use crate::config::Scenario;
+        let mut cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+        cfg.timing_noise = 0.0;
+        cfg.scenario = Some(Scenario::calm().with_straggler(1, 2.0, 60).relabel("late"));
+        let calm_ref = {
+            let mut c = cfg.clone();
+            c.scenario = None;
+            run(&c).unwrap()
+        };
+        let static_plan = run(&cfg).unwrap();
+        assert!(
+            static_plan.steady_throughput < calm_ref.steady_throughput * 0.95,
+            "straggler should hurt: {} vs calm {}",
+            static_plan.steady_throughput,
+            calm_ref.steady_throughput
+        );
+        assert_eq!(static_plan.replans, 0);
+        let mut replanned_cfg = cfg.clone();
+        replanned_cfg.replan_interval = 30;
+        let replanned = run(&replanned_cfg).unwrap();
+        assert_eq!(replanned.replans, 2, "expected replans at t = 60 and t = 90");
+        // The refreshed plan has *seen* the straggler: its expected
+        // batch time reflects the slower world, where the static plan
+        // still believes the monitoring-phase timings.
+        let planned_static = static_plan.planned_batch_time.unwrap();
+        let planned_replanned = replanned.planned_batch_time.unwrap();
+        assert!(
+            planned_replanned > planned_static * 1.05,
+            "replanned P_d* {planned_replanned} should reflect the straggler \
+             (static believes {planned_static})"
+        );
+        assert!(
+            replanned.steady_throughput >= static_plan.steady_throughput * 0.999,
+            "replanning lost throughput: {} vs static {}",
+            replanned.steady_throughput,
+            static_plan.steady_throughput
+        );
+    }
+
+    #[test]
     fn all_methods_run_all_schedules_smoke() {
         for schedule in [ScheduleKind::GPipe, ScheduleKind::ZeroBubbleV] {
             for method in FreezeMethod::all() {
                 let mut cfg = quick_cfg(method, schedule);
                 cfg.steps = 60;
                 cfg.phases = crate::freeze::PhaseConfig::new(5, 15, 25);
-                let r = run(&cfg);
+                let r = run(&cfg).unwrap();
                 assert!(
                     r.throughput.is_finite() && r.throughput > 0.0,
                     "{} {}",

@@ -1,0 +1,238 @@
+//! The event-driven executor's two contracts, property-tested through
+//! the public API:
+//!
+//! 1. **Equivalence** — with all dynamics disabled, the discrete-event
+//!    makespan is bit-identical to the analytic longest-path sweep
+//!    (`BatchEvaluator::makespan`) on every schedule, freeze-ratio
+//!    pattern, and edge-cost configuration, and a full simulated run is
+//!    bit-identical across executors.
+//! 2. **Determinism** — a fixed seed makes scenario runs (stragglers +
+//!    jitter + link slowdowns) fully reproducible, and the executors
+//!    agree even *under* dynamics, because every perturbation is
+//!    counter-seeded rather than event-ordered.
+
+use timelyfreeze::config::{ExecMode, ExperimentConfig, Scenario};
+use timelyfreeze::cost::{CostModel, CostProfile};
+use timelyfreeze::freeze::PhaseConfig;
+use timelyfreeze::graph::dag::Frontier;
+use timelyfreeze::graph::pipeline::PipelineDag;
+use timelyfreeze::partition::balanced_partition;
+use timelyfreeze::schedule::Schedule;
+use timelyfreeze::sim::{self, EventEngine};
+use timelyfreeze::types::{Action, FreezeMethod, ScheduleKind};
+
+fn preset_cost(stages: usize) -> CostModel {
+    let cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+    let layer_stage = balanced_partition(&cfg.model.layer_params(), stages);
+    CostModel::new(
+        &cfg.model,
+        &cfg.gpu,
+        &layer_stage,
+        stages,
+        cfg.microbatch_size,
+        cfg.seq_len,
+    )
+}
+
+fn quick(method: FreezeMethod, schedule: ScheduleKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+    cfg.steps = 140;
+    cfg.phases = PhaseConfig::new(10, 30, 50);
+    cfg.method = method;
+    cfg.schedule = schedule;
+    cfg
+}
+
+/// A deterministic per-action freeze-ratio pattern (covers flat and
+/// action-varying plans).
+fn ratio_pattern(a: Action, flat: f64, varying: bool) -> f64 {
+    if !a.kind.freezable() {
+        return 0.0;
+    }
+    if varying {
+        (flat + 0.13 * ((a.mb + 3 * a.stage) % 5) as f64).min(1.0)
+    } else {
+        flat
+    }
+}
+
+/// Acceptance criterion: with zero dynamics the event engine reproduces
+/// `BatchEvaluator::makespan` bit-for-bit on GPipe, 1F1B, Interleaved
+/// 1F1B, and ZBV, across freeze ratios and realistic preset costs.
+#[test]
+fn zero_dynamics_event_makespan_bit_identical_all_schedules() {
+    for kind in ScheduleKind::all() {
+        let schedule = Schedule::build(kind, 4, 8, Schedule::default_chunks(kind));
+        let pdag = PipelineDag::from_schedule(&schedule);
+        let mut engine = EventEngine::new(&pdag, &schedule);
+        let mut evaluator = pdag.evaluator();
+        let cost = preset_cost(schedule.stages);
+        let zeros = vec![0.0; pdag.dag.edge_count()];
+        for flat in [0.0, 0.3, 0.65, 1.0] {
+            for varying in [false, true] {
+                let w =
+                    pdag.weights(|a| cost.duration(a, ratio_pattern(a, flat, varying)));
+                let des = engine.execute(&w, &zeros);
+                let sweep = evaluator.batch_time(&w);
+                assert_eq!(
+                    des.to_bits(),
+                    sweep.to_bits(),
+                    "{} flat={flat} varying={varying}: {des} vs {sweep}",
+                    kind.name()
+                );
+                assert_eq!(
+                    engine.starts(),
+                    &pdag.start_times(&w)[..],
+                    "{}: start times diverge",
+                    kind.name()
+                );
+            }
+        }
+    }
+}
+
+/// The same contract with P2P link costs on cross-rank edges (profiled
+/// cost models): event-driven messages vs the edge-weighted sweep.
+#[test]
+fn event_engine_matches_edge_weighted_sweep() {
+    for kind in ScheduleKind::all() {
+        let schedule = Schedule::build(kind, 4, 6, Schedule::default_chunks(kind));
+        let pdag = PipelineDag::from_schedule(&schedule);
+        let model = CostProfile::uniform(1.0, 1.1, 0.8, 0.3).to_model(schedule.stages);
+        let delays = pdag.p2p_edge_costs(|a, b| model.p2p(a, b));
+        assert!(delays.iter().any(|&d| d > 0.0), "{}", kind.name());
+        let w = pdag.weights(|a| model.duration(a, ratio_pattern(a, 0.4, true)));
+        let mut engine = EventEngine::new(&pdag, &schedule);
+        let des = engine.execute(&w, &delays);
+        let sweep = pdag.batch_time_with_edges(&w, &delays);
+        assert_eq!(des.to_bits(), sweep.to_bits(), "{}", kind.name());
+    }
+}
+
+/// Full simulated runs are bit-identical across executors — for every
+/// schedule, and even with a scenario attached (perturbations are
+/// counter-seeded, never event-ordered).
+#[test]
+fn full_runs_bit_identical_across_executors() {
+    for kind in [ScheduleKind::GPipe, ScheduleKind::ZeroBubbleV] {
+        for scenario in [
+            None,
+            Some(
+                Scenario::calm()
+                    .with_straggler(2, 1.7, 40)
+                    .with_jitter(0.08, 0)
+                    .with_seed(5),
+            ),
+        ] {
+            let mut event_cfg = quick(FreezeMethod::TimelyFreeze, kind);
+            event_cfg.scenario = scenario.clone();
+            let mut fast_cfg = event_cfg.clone();
+            fast_cfg.exec = ExecMode::Analytic;
+            let event = sim::run(&event_cfg).unwrap();
+            let fast = sim::run(&fast_cfg).unwrap();
+            assert_eq!(event.throughput.to_bits(), fast.throughput.to_bits());
+            assert_eq!(
+                event.steady_throughput.to_bits(),
+                fast.steady_throughput.to_bits()
+            );
+            assert_eq!(event.batch_time_final.to_bits(), fast.batch_time_final.to_bits());
+            assert_eq!(event.accuracy.to_bits(), fast.accuracy.to_bits());
+            for (a, b) in event.gantt_final.iter().zip(&fast.gantt_final) {
+                assert_eq!(a.start.to_bits(), b.start.to_bits());
+            }
+        }
+    }
+}
+
+/// A fixed seed makes scenario runs fully deterministic; changing the
+/// scenario seed (jitter stream) changes the realization.
+#[test]
+fn seeded_scenario_runs_are_fully_deterministic() {
+    let scenario = Scenario::calm()
+        .with_straggler(1, 1.6, 35)
+        .with_jitter(0.1, 0)
+        .with_link(None, 1.4, 60)
+        .with_seed(11);
+    let mut cfg = quick(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+    cfg.replan_interval = 40;
+    cfg.scenario = Some(scenario.clone());
+    let a = sim::run(&cfg).unwrap();
+    let b = sim::run(&cfg).unwrap();
+    assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+    assert_eq!(a.replans, b.replans);
+    assert_eq!(a.trajectory.len(), b.trajectory.len());
+    for (p, q) in a.trajectory.iter().zip(&b.trajectory) {
+        assert_eq!(p.step_time.to_bits(), q.step_time.to_bits());
+    }
+    for (p, q) in a.gantt_final.iter().zip(&b.gantt_final) {
+        assert_eq!(p.start.to_bits(), q.start.to_bits());
+        assert_eq!(p.duration.to_bits(), q.duration.to_bits());
+    }
+    // A different jitter stream realizes differently.
+    let mut other = cfg.clone();
+    other.scenario = Some(scenario.with_seed(12));
+    let c = sim::run(&other).unwrap();
+    assert_ne!(a.throughput.to_bits(), c.throughput.to_bits());
+}
+
+/// Dynamics hurt; calm does not. (Direction sanity for the scenario
+/// transforms.)
+#[test]
+fn stragglers_and_congestion_slow_runs_down() {
+    let calm = sim::run(&quick(FreezeMethod::NoFreezing, ScheduleKind::OneFOneB)).unwrap();
+    let mut cfg = quick(FreezeMethod::NoFreezing, ScheduleKind::OneFOneB);
+    cfg.scenario = Some(Scenario::straggler(1, 2.0));
+    let straggled = sim::run(&cfg).unwrap();
+    assert!(
+        straggled.throughput < calm.throughput * 0.8,
+        "straggler barely hurt: {} vs {}",
+        straggled.throughput,
+        calm.throughput
+    );
+    // Link slowdowns reach node-charged comm too — globally and on a
+    // single boundary (the analytic presets have no P2P edges, so this
+    // is the only path communication dynamics can take).
+    let mut cfg = quick(FreezeMethod::NoFreezing, ScheduleKind::OneFOneB);
+    cfg.scenario = Some(Scenario::congested(8.0));
+    let congested = sim::run(&cfg).unwrap();
+    assert!(
+        congested.throughput < calm.throughput,
+        "global link slowdown did nothing: {} vs {}",
+        congested.throughput,
+        calm.throughput
+    );
+    let mut cfg = quick(FreezeMethod::NoFreezing, ScheduleKind::OneFOneB);
+    cfg.scenario = Some(Scenario::calm().with_link(Some(0), 8.0, 0));
+    let one_link = sim::run(&cfg).unwrap();
+    assert!(
+        one_link.throughput < calm.throughput && one_link.throughput > congested.throughput,
+        "boundary slowdown should sit between calm ({}) and fully congested ({}): {}",
+        calm.throughput,
+        congested.throughput,
+        one_link.throughput
+    );
+    let mut cfg = quick(FreezeMethod::NoFreezing, ScheduleKind::OneFOneB);
+    cfg.scenario = Some(Scenario::calm().with_seed(99));
+    let calm2 = sim::run(&cfg).unwrap();
+    assert_eq!(calm.throughput.to_bits(), calm2.throughput.to_bits());
+}
+
+/// The graph-layer frontier API releases a valid topological order of
+/// every schedule's batch DAG.
+#[test]
+fn frontier_releases_topo_orders_for_all_schedules() {
+    for kind in ScheduleKind::all() {
+        let schedule = Schedule::build(kind, 4, 8, Schedule::default_chunks(kind));
+        let pdag = PipelineDag::from_schedule(&schedule);
+        let mut frontier = Frontier::new(&pdag.csr);
+        let mut ready: Vec<usize> = frontier.sources().collect();
+        let mut order = Vec::with_capacity(pdag.len());
+        while let Some(u) = ready.pop() {
+            order.push(u);
+            frontier.complete(&pdag.csr, u, |v| ready.push(v));
+        }
+        assert!(frontier.is_drained(), "{}", kind.name());
+        assert!(pdag.dag.respects_order(&order), "{}", kind.name());
+    }
+}

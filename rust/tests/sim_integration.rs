@@ -23,8 +23,8 @@ fn quick(preset: &str, method: FreezeMethod, schedule: ScheduleKind) -> Experime
 #[test]
 fn timelyfreeze_dominates_baseline_on_all_schedules() {
     for schedule in ScheduleKind::all() {
-        let base = sim::run(&quick("llama-1b", FreezeMethod::NoFreezing, schedule));
-        let ours = sim::run(&quick("llama-1b", FreezeMethod::TimelyFreeze, schedule));
+        let base = sim::run(&quick("llama-1b", FreezeMethod::NoFreezing, schedule)).unwrap();
+        let ours = sim::run(&quick("llama-1b", FreezeMethod::TimelyFreeze, schedule)).unwrap();
         assert!(
             ours.steady_throughput > base.steady_throughput * 1.08,
             "{}: {} vs {}",
@@ -50,9 +50,10 @@ fn timelyfreeze_pareto_undominated_on_1f1b() {
     // strict Pareto dominance is not assertable (the full-scale benches
     // show it); require near-frontier behaviour instead: within 7% of the
     // best baseline's throughput and within 0.3 points of its accuracy.
-    let ours = sim::run(&quick("llama-1b", FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB));
+    let ours =
+        sim::run(&quick("llama-1b", FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB)).unwrap();
     for m in [FreezeMethod::Apf, FreezeMethod::AutoFreeze] {
-        let b = sim::run(&quick("llama-1b", m, ScheduleKind::OneFOneB));
+        let b = sim::run(&quick("llama-1b", m, ScheduleKind::OneFOneB)).unwrap();
         assert!(
             ours.steady_throughput >= 0.93 * b.steady_throughput,
             "{}: thpt {} vs ours {}",
@@ -74,7 +75,8 @@ fn timelyfreeze_pareto_undominated_on_1f1b() {
 /// (eq. 12 observable form).
 #[test]
 fn kappa_realized_in_batch_times() {
-    let r = sim::run(&quick("llama-1b", FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB));
+    let r =
+        sim::run(&quick("llama-1b", FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB)).unwrap();
     let kappa = r.batch_time_final / r.batch_time_nofreeze;
     assert!(kappa < 0.95, "no speedup: κ = {kappa}");
     assert!(kappa > 0.3, "speedup implausibly large: κ = {kappa}");
@@ -84,14 +86,14 @@ fn kappa_realized_in_batch_times() {
 /// different seed changes only the noise, not the ordering.
 #[test]
 fn deterministic_given_seed() {
-    let a = sim::run(&quick("llama-1b", FreezeMethod::TimelyFreeze, ScheduleKind::GPipe));
-    let b = sim::run(&quick("llama-1b", FreezeMethod::TimelyFreeze, ScheduleKind::GPipe));
+    let a = sim::run(&quick("llama-1b", FreezeMethod::TimelyFreeze, ScheduleKind::GPipe)).unwrap();
+    let b = sim::run(&quick("llama-1b", FreezeMethod::TimelyFreeze, ScheduleKind::GPipe)).unwrap();
     assert_eq!(a.throughput, b.throughput);
     assert_eq!(a.accuracy, b.accuracy);
     assert_eq!(a.freeze_ratio, b.freeze_ratio);
     let mut cfg = quick("llama-1b", FreezeMethod::TimelyFreeze, ScheduleKind::GPipe);
     cfg.seed = 7;
-    let c = sim::run(&cfg);
+    let c = sim::run(&cfg).unwrap();
     assert_ne!(a.throughput, c.throughput);
 }
 
@@ -99,9 +101,10 @@ fn deterministic_given_seed() {
 /// stay close to the pure variant's.
 #[test]
 fn hybrids_track_timely_budget() {
-    let pure = sim::run(&quick("llama-1b", FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB));
+    let pure =
+        sim::run(&quick("llama-1b", FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB)).unwrap();
     for m in [FreezeMethod::TimelyApf, FreezeMethod::TimelyAuto] {
-        let h = sim::run(&quick("llama-1b", m, ScheduleKind::OneFOneB));
+        let h = sim::run(&quick("llama-1b", m, ScheduleKind::OneFOneB)).unwrap();
         assert!(
             (h.freeze_ratio - pure.freeze_ratio).abs() < 8.0,
             "{}: {} vs pure {}",
@@ -116,8 +119,9 @@ fn hybrids_track_timely_budget() {
 /// equal cost profiles.
 #[test]
 fn zbv_baseline_faster_than_gpipe() {
-    let g = sim::run(&quick("llama-1b", FreezeMethod::NoFreezing, ScheduleKind::GPipe));
-    let z = sim::run(&quick("llama-1b", FreezeMethod::NoFreezing, ScheduleKind::ZeroBubbleV));
+    let g = sim::run(&quick("llama-1b", FreezeMethod::NoFreezing, ScheduleKind::GPipe)).unwrap();
+    let z =
+        sim::run(&quick("llama-1b", FreezeMethod::NoFreezing, ScheduleKind::ZeroBubbleV)).unwrap();
     assert!(
         z.throughput > g.throughput,
         "ZBV {} should beat GPipe {}",
@@ -134,7 +138,7 @@ fn rmax_monotone_throughput() {
     for r_max in [0.2, 0.5, 0.8] {
         let mut cfg = quick("llama-1b", FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
         cfg.r_max = r_max;
-        let r = sim::run(&cfg);
+        let r = sim::run(&cfg).unwrap();
         assert!(
             r.steady_throughput >= prev - 1e-6,
             "throughput fell at r_max={r_max}"
@@ -154,8 +158,8 @@ fn convnext_time_partitioning_helps() {
     cfg.phases = PhaseConfig::new(10, 30, 50);
     cfg.method = FreezeMethod::NoFreezing;
     cfg.schedule = ScheduleKind::OneFOneB;
-    let by_param = sim::run_with_partition(&cfg, PartitionMethod::Parameter);
-    let by_time = sim::run_with_partition(&cfg, PartitionMethod::Time);
+    let by_param = sim::run_with_partition(&cfg, PartitionMethod::Parameter).unwrap();
+    let by_time = sim::run_with_partition(&cfg, PartitionMethod::Time).unwrap();
     assert!(
         by_time.throughput >= by_param.throughput * 0.98,
         "time-balanced {} << param-balanced {}",
@@ -169,7 +173,7 @@ fn convnext_time_partitioning_helps() {
 #[test]
 fn gantt_blocks_well_ordered_across_methods() {
     for method in FreezeMethod::all() {
-        let r = sim::run(&quick("llama-1b", method, ScheduleKind::GPipe));
+        let r = sim::run(&quick("llama-1b", method, ScheduleKind::GPipe)).unwrap();
         for rank in 0..4 {
             let mut blocks: Vec<_> =
                 r.gantt_final.iter().filter(|b| b.rank == rank).collect();

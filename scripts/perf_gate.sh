@@ -46,6 +46,9 @@ cargo build --release
 echo "== perf_micro → $OUT_JSON =="
 TF_BENCH_JSON="$OUT_JSON" cargo bench --bench perf_micro
 
+echo "== fig17 dynamics (quick smoke: replanning must not lose to static) =="
+TF_BENCH_QUICK=1 cargo bench --bench fig17_dynamics
+
 if [[ ! -f "$BASELINE" ]]; then
     echo "perf_gate: no baseline at $BASELINE — recorded $OUT_JSON, skipping comparison"
     exit 0
