@@ -1,20 +1,34 @@
 //! Figure 16 (this repo's extension): the memory–throughput Pareto
-//! frontier of the memory-aware freeze LP. Sweeping the per-device
-//! memory budget from the full card down to the OOM wall, the LP's
-//! per-stage freeze-ratio floor (constraint [5]) rises, forced freezing
-//! grows, and batch time *falls* — freezing bought as memory headroom
-//! instead of (only) speed. Each budget row reports the floor, the
-//! achieved per-stage ratios, the optimized batch time, and the peak
-//! stage memory, verified against the budgeted capacity.
+//! frontier of the memory-aware freeze LP, swept **per recompute
+//! policy**. Sweeping the per-device memory budget from the full card
+//! down to the OOM wall, the LP's per-stage freeze-ratio floor
+//! (constraint [5]) rises, forced freezing grows, and batch time
+//! *falls* — freezing bought as memory headroom instead of (only)
+//! speed.
 //!
-//! Successive budgets re-solve through one [`FreezeLpSolver`], the
-//! controller's warm-start pattern: adjacent budgets move only the [5]
-//! RHS entries once the same stages bind.
+//! Three policies trace three frontiers:
+//!
+//! * `off` — the freeze-only floor (pre-recompute behavior, row
+//!   numerics bit-identical to it). The sweep stops where the floor
+//!   conflicts with `r_max` or the device overflows even fully frozen.
+//! * `auto` — freeze up to `r_max` first, recompute only the deficit:
+//!   identical to `off` wherever `off` is feasible (asserted in-bench),
+//!   and it keeps going *past* `off`'s wall — recompute dominating pure
+//!   freezing at tight budgets.
+//! * `full` — every stage recomputes all activations: lowest floors and
+//!   the deepest feasible budgets, paying the forward re-run on every
+//!   backward.
+//!
+//! Successive budgets re-solve through one [`FreezeLpSolver`] per
+//! policy, the controller's warm-start pattern: adjacent budgets move
+//! only the [5] RHS entries once the same stages bind.
 //!
 //!     TF_BENCH_JSON=out.json cargo bench --bench fig16_memory_pareto
 
 use timelyfreeze::config::ExperimentConfig;
-use timelyfreeze::cost::{peak_inflight, CostModel, MemoryModel};
+use timelyfreeze::cost::{
+    peak_inflight, CostModel, MemoryError, MemoryModel, RecomputePolicy,
+};
 use timelyfreeze::graph::pipeline::PipelineDag;
 use timelyfreeze::lp::{FreezeLpError, FreezeLpInput, FreezeLpSolver};
 use timelyfreeze::metrics::Recorder;
@@ -36,6 +50,12 @@ fn main() {
     }
     rec.flush().unwrap();
     println!("\nrows recorded under bench_out/fig16_memory_pareto.json");
+}
+
+/// One feasible frontier row, kept for the cross-policy asserts.
+struct Row {
+    frac_bits: u64,
+    batch_time: f64,
 }
 
 fn sweep(rec: &mut Recorder, preset: &str, cfg: &ExperimentConfig, kind: ScheduleKind) {
@@ -65,7 +85,6 @@ fn sweep(rec: &mut Recorder, preset: &str, cfg: &ExperimentConfig, kind: Schedul
     let inflight = peak_inflight(&schedule);
     let w_min = pdag.weights(|a| cost.bounds(a).0);
     let w_max = pdag.weights(|a| cost.bounds(a).1);
-    let tokens = cfg.tokens_per_step() as f64;
 
     println!(
         "\n== {} — {} ({} ranks × {} microbatches, {:.0} GiB/device) ==",
@@ -75,37 +94,109 @@ fn sweep(rec: &mut Recorder, preset: &str, cfg: &ExperimentConfig, kind: Schedul
         cfg.microbatches,
         cfg.gpu.memory_bytes / GIB
     );
+
+    let mut off_rows: Vec<Row> = Vec::new();
+    for policy in [RecomputePolicy::Off, RecomputePolicy::Auto, RecomputePolicy::Full] {
+        let rows = sweep_policy(
+            rec, preset, &cfg, kind, &pdag, &cost, &mem, &inflight, &w_min, &w_max, &policy,
+        );
+        match policy {
+            RecomputePolicy::Off => off_rows = rows,
+            RecomputePolicy::Auto => {
+                // Wherever pure freezing is feasible, auto resolves to
+                // the same plan; past the freeze-only wall it keeps
+                // producing feasible rows — the domination claim.
+                for off in &off_rows {
+                    let auto = rows
+                        .iter()
+                        .find(|r| r.frac_bits == off.frac_bits)
+                        .expect("auto must cover every freeze-only-feasible budget");
+                    assert!(
+                        auto.batch_time <= off.batch_time + 1e-9,
+                        "auto worse than off at budget {}: {} vs {}",
+                        f64::from_bits(off.frac_bits),
+                        auto.batch_time,
+                        off.batch_time
+                    );
+                }
+                assert!(
+                    rows.len() >= off_rows.len(),
+                    "auto frontier shorter than freeze-only: {} vs {}",
+                    rows.len(),
+                    off_rows.len()
+                );
+            }
+            RecomputePolicy::Full => {}
+            RecomputePolicy::Fraction(_) => unreachable!(),
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sweep_policy(
+    rec: &mut Recorder,
+    preset: &str,
+    cfg: &ExperimentConfig,
+    kind: ScheduleKind,
+    pdag: &PipelineDag,
+    cost: &CostModel,
+    mem: &MemoryModel,
+    inflight: &[usize],
+    w_min: &[f64],
+    w_max: &[f64],
+    policy: &RecomputePolicy,
+) -> Vec<Row> {
+    let tokens = cfg.tokens_per_step() as f64;
+    println!("-- recompute: {} --", policy.name());
     println!(
-        "{:>8} {:>10} {:>12} {:>12} {:>10} {:>12} {:>12}",
-        "budget", "floor̄", "mean r*", "P_d (s)", "tok/s", "peak GiB", "cap GiB"
+        "{:>8} {:>10} {:>8} {:>12} {:>12} {:>10} {:>12} {:>12}",
+        "budget", "floor̄", "ρ̄", "mean r*", "P_d (s)", "tok/s", "peak GiB", "cap GiB"
     );
 
+    let mut rows = Vec::new();
     let mut solver = FreezeLpSolver::new();
+    let infeasible_row = |frac: f64, reason: &str| {
+        Json::obj(vec![
+            ("model", Json::str(preset)),
+            ("schedule", Json::str(kind.name())),
+            ("recompute", Json::str(&policy.name())),
+            ("budget_frac", Json::num(frac)),
+            ("feasible", Json::Bool(false)),
+            ("reason", Json::str(reason)),
+        ])
+    };
     // Sweep from the full device down to the OOM wall in 5% steps.
     let mut frac = 1.0f64;
     while frac > 0.02 {
         let m = mem.clone().scaled_capacity(frac);
         let cap_gib = m.capacity_bytes[0] / GIB;
-        match m.required_ratios(&inflight) {
-            Err(e) => {
-                println!("{frac:>8.2} {:>10} — OOM: {e}", "—");
-                rec.push(
-                    "fig16_memory_pareto",
-                    Json::obj(vec![
-                        ("model", Json::str(preset)),
-                        ("schedule", Json::str(kind.name())),
-                        ("budget_frac", Json::num(frac)),
-                        ("feasible", Json::Bool(false)),
-                        ("reason", Json::str("over_capacity")),
-                    ]),
-                );
+        // Resolve the policy against this budget's capacities — the
+        // same `MemoryModel::policy_floor` core `memory_plan_for`
+        // (hence the simulator and the CLI) runs, so the bench can
+        // never drift from the executed recipe.
+        match m.policy_floor(inflight, cfg.r_max, policy) {
+            Err(e @ MemoryError::RecomputeInsufficient { .. }) => {
+                println!("{frac:>8.2} {:>10} — even full recompute cannot fit: {e}", "—");
+                rec.push("fig16_memory_pareto", infeasible_row(frac, "recompute_insufficient"));
                 break;
             }
-            Ok(floor) => {
+            Err(e) => {
+                println!("{frac:>8.2} {:>10} — OOM: {e}", "—");
+                rec.push("fig16_memory_pareto", infeasible_row(frac, "over_capacity"));
+                break;
+            }
+            Ok((floor, rho)) => {
+                let recomputing = rho.iter().any(|&r| r > 0.0);
+                let m = if recomputing { m.apply_recompute(&rho) } else { m };
+                let surcharge =
+                    recomputing.then(|| cost.recompute_surcharges_for(&rho));
                 let mut input =
-                    FreezeLpInput::new(&pdag, &w_min, &w_max, cfg.r_max, cfg.lambda);
+                    FreezeLpInput::new(pdag, w_min, w_max, cfg.r_max, cfg.lambda);
                 if floor.iter().any(|&r| r > 0.0) {
                     input = input.with_stage_floor(&floor);
+                }
+                if let Some(sur) = &surcharge {
+                    input = input.with_recompute(sur);
                 }
                 let sol = match solver.solve(&input) {
                     Ok(s) => s,
@@ -123,27 +214,22 @@ fn sweep(rec: &mut Recorder, preset: &str, cfg: &ExperimentConfig, kind: Schedul
                         println!("{frac:>8.2} sweep stopped ({reason}): {e}");
                         rec.push(
                             "fig16_memory_pareto",
-                            Json::obj(vec![
-                                ("model", Json::str(preset)),
-                                ("schedule", Json::str(kind.name())),
-                                ("budget_frac", Json::num(frac)),
-                                ("feasible", Json::Bool(false)),
-                                ("reason", Json::str(&format!("{reason}: {e}"))),
-                            ]),
+                            infeasible_row(frac, &format!("{reason}: {e}")),
                         );
                         break;
                     }
                 };
-                let stage_ratios = sol.stage_ratios(&pdag);
+                let stage_ratios = sol.stage_ratios(pdag);
                 let peak_gib = (0..cfg.stages())
                     .map(|s| m.stage_bytes(s, inflight[s], stage_ratios[s]))
                     .fold(0.0f64, f64::max)
                     / GIB;
                 let floor_mean = floor.iter().sum::<f64>() / floor.len() as f64;
-                let mean_r = sol.mean_freezable_ratio(&pdag);
+                let rho_mean = rho.iter().sum::<f64>() / rho.len() as f64;
+                let mean_r = sol.mean_freezable_ratio(pdag);
                 let tput = tokens / sol.batch_time;
                 println!(
-                    "{frac:>8.2} {floor_mean:>10.3} {mean_r:>12.3} {:>12.4} {tput:>10.0} {peak_gib:>12.2} {cap_gib:>12.2}",
+                    "{frac:>8.2} {floor_mean:>10.3} {rho_mean:>8.3} {mean_r:>12.3} {:>12.4} {tput:>10.0} {peak_gib:>12.2} {cap_gib:>12.2}",
                     sol.batch_time
                 );
                 // Slack: LP rows hold to simplex tolerance (kB-scale
@@ -152,14 +238,17 @@ fn sweep(rec: &mut Recorder, preset: &str, cfg: &ExperimentConfig, kind: Schedul
                     peak_gib <= cap_gib + 1e-4,
                     "plan violates its own memory budget: {peak_gib} > {cap_gib} GiB"
                 );
+                rows.push(Row { frac_bits: frac.to_bits(), batch_time: sol.batch_time });
                 rec.push(
                     "fig16_memory_pareto",
                     Json::obj(vec![
                         ("model", Json::str(preset)),
                         ("schedule", Json::str(kind.name())),
+                        ("recompute", Json::str(&policy.name())),
                         ("budget_frac", Json::num(frac)),
                         ("feasible", Json::Bool(true)),
                         ("floor_mean", Json::num(floor_mean)),
+                        ("recompute_mean", Json::num(rho_mean)),
                         ("mean_ratio", Json::num(mean_r)),
                         ("batch_time", Json::num(sol.batch_time)),
                         ("throughput", Json::num(tput)),
@@ -173,4 +262,5 @@ fn sweep(rec: &mut Recorder, preset: &str, cfg: &ExperimentConfig, kind: Schedul
         }
         frac -= 0.05;
     }
+    rows
 }

@@ -8,6 +8,7 @@ pub mod scenario;
 pub use presets::{GpuPreset, ModelFamily, ModelPreset};
 pub use scenario::{LinkSlowdown, Scenario, Straggler};
 
+use crate::cost::RecomputePolicy;
 use crate::freeze::{ApfConfig, AutoFreezeConfig, PhaseConfig};
 use crate::types::{FreezeMethod, ScheduleKind};
 use crate::util::toml::TomlDoc;
@@ -94,6 +95,16 @@ pub struct ExperimentConfig {
     /// capacities with no budget is rejected rather than silently
     /// ignored.
     pub rank_memory_bytes: Option<Vec<f64>>,
+    /// Activation-recomputation policy (`--recompute {off,full,auto}`):
+    /// whether stages may regenerate activations during the backward
+    /// pass instead of stashing them, trading a per-stage forward-time
+    /// surcharge for activation memory.
+    /// [`memory_plan_for`](crate::cost::memory_plan_for) resolves it —
+    /// together with `memory_budget` — into per-stage recompute
+    /// fractions and a (possibly relaxed) freeze-ratio floor.
+    /// [`RecomputePolicy::Off`] keeps every path bit-identical to a
+    /// build without the policy.
+    pub recompute: RecomputePolicy,
     /// Runtime-dynamics scenario for the event-driven executor
     /// (stragglers, jitter, link slowdowns); `None` or an identity
     /// scenario leaves execution undisturbed.
@@ -163,6 +174,7 @@ impl ExperimentConfig {
             timing_noise: 0.02,
             memory_budget: None,
             rank_memory_bytes: None,
+            recompute: RecomputePolicy::Off,
             scenario: None,
             replan_interval: 0,
             exec: ExecMode::Event,
@@ -250,11 +262,13 @@ impl ExperimentConfig {
     /// Apply overrides from a parsed TOML doc. Recognized keys (all
     /// optional): `experiment.{schedule, method, ranks, chunks,
     /// microbatches, microbatch_size, seq_len, steps, r_max, seed,
-    /// timing_noise, memory_budget, rank_memory_gb, scenario,
+    /// timing_noise, memory_budget, rank_memory_gb, recompute, scenario,
     /// replan_interval, exec}`, `phases.{warmup, monitor, freeze}`,
     /// `apf.{threshold, alpha, check_interval}`,
     /// `autofreeze.{percentile, check_interval}`. `rank_memory_gb` is an
-    /// array of per-rank GB capacities; `scenario` uses the
+    /// array of per-rank GB capacities; `recompute` is
+    /// `"off" | "full" | "auto"` or a uniform fraction
+    /// ([`RecomputePolicy::parse`]); `scenario` uses the
     /// [`Scenario::parse`] mini-language; `exec` is `event` or
     /// `analytic`.
     pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<(), String> {
@@ -310,6 +324,11 @@ impl ExperimentConfig {
                 })
                 .collect::<Result<_, _>>()?;
             self.rank_memory_bytes = Some(caps);
+        }
+        if let Some(s) = doc.get_str("experiment.recompute") {
+            self.recompute = RecomputePolicy::parse(s)?;
+        } else if let Some(f) = doc.get_f64("experiment.recompute") {
+            self.recompute = RecomputePolicy::parse(&f.to_string())?;
         }
         if let Some(s) = doc.get_str("experiment.scenario") {
             self.scenario = Some(Scenario::parse(s)?);
@@ -428,6 +447,30 @@ mod tests {
         let doc = TomlDoc::parse("[experiment]\nmemory_budget = 0.35").unwrap();
         cfg.apply_toml(&doc).unwrap();
         assert_eq!(cfg.memory_budget, Some(0.35));
+    }
+
+    #[test]
+    fn toml_sets_recompute_policy() {
+        let mut cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+        assert_eq!(cfg.recompute, RecomputePolicy::Off);
+        let doc = TomlDoc::parse("[experiment]\nrecompute = \"auto\"").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.recompute, RecomputePolicy::Auto);
+        let doc = TomlDoc::parse("[experiment]\nrecompute = \"full\"").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.recompute, RecomputePolicy::Full);
+        // A bare TOML number is a uniform per-stage fraction.
+        let doc = TomlDoc::parse("[experiment]\nrecompute = 0.5").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.recompute, RecomputePolicy::Fraction(0.5));
+        let doc = TomlDoc::parse("[experiment]\nrecompute = \"off\"").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.recompute, RecomputePolicy::Off);
+        // Malformed policies are clean errors.
+        let doc = TomlDoc::parse("[experiment]\nrecompute = \"sometimes\"").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[experiment]\nrecompute = 1.7").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
     }
 
     #[test]

@@ -18,6 +18,19 @@
 //! "Pipeline Parallelism with Controllable Memory" (Qi et al., 2024):
 //! freezing is no longer purely a throughput knob but also a way to fit
 //! a model on smaller devices.
+//!
+//! Forced freezing is not the only way to buy activation memory back:
+//! a stage can **recompute** some fraction ρ of its activations during
+//! the backward pass instead of stashing them (Zero Bubble Pipeline
+//! Parallelism trades compute for exactly this headroom). A
+//! [`RecomputePolicy`] scales the stashed activation bytes by `1 − ρ`
+//! and charges a per-stage time surcharge of `ρ · fwd_s` on every
+//! stash-consuming backward action
+//! ([`CostModel::recompute_surcharges_for`](crate::cost::CostModel::recompute_surcharges_for)).
+//! [`memory_plan_for`] resolves a configured budget into both knobs at
+//! once — the per-stage floor *and* the recompute fractions — choosing,
+//! under [`RecomputePolicy::Auto`], the cheaper of "freeze more" (free
+//! in time, capped by `r_max`) and "pay forward time again" per stage.
 
 use crate::config::{ExperimentConfig, GpuPreset, ModelPreset};
 use crate::schedule::Schedule;
@@ -30,6 +43,69 @@ pub const WEIGHT_BYTES_PER_PARAM: f64 = 2.0;
 /// gradient (2) + fp32 Adam moments (8) + fp32 master copy (4).
 /// Freezing a parameter reclaims all of it.
 pub const TRAIN_STATE_BYTES_PER_PARAM: f64 = 14.0;
+
+/// How stages trade stashed-activation memory for recompute time: the
+/// planner-visible knob behind `--recompute {off,full,auto}`.
+///
+/// Each policy resolves
+/// ([`MemoryModel::recompute_fractions`]) to a per-stage fraction
+/// `ρ_s ∈ [0, 1]` of activations that are recomputed during the
+/// backward pass instead of stashed: stashed bytes scale by `1 − ρ_s`
+/// and every stash-consuming backward action at the stage pays a
+/// `ρ_s · fwd_s` time surcharge.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum RecomputePolicy {
+    /// Stash every activation — the pre-recompute behavior. All paths
+    /// stay bit-identical to a build without the policy.
+    #[default]
+    Off,
+    /// Recompute every stage's activations fully (`ρ_s = 1`).
+    Full,
+    /// A uniform per-stage recompute fraction in `(0, 1]`.
+    Fraction(f64),
+    /// Planner-chosen per-stage fractions: freezing is free in time (it
+    /// *shrinks* backwards) and allowed up to `r_max`, so each stage
+    /// first freezes toward the accuracy budget and recomputes only the
+    /// remaining deficit — the per-stage minimum of the two closed
+    /// forms (see [`MemoryModel::recompute_fractions`]).
+    Auto,
+}
+
+impl RecomputePolicy {
+    /// Parse a user-supplied policy: `off`/`none`, `full`, `auto`, or a
+    /// uniform fraction in `(0, 1]` (e.g. `0.5`; `0` means off, `1`
+    /// means full).
+    pub fn parse(s: &str) -> Result<RecomputePolicy, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" => Ok(RecomputePolicy::Off),
+            "full" => Ok(RecomputePolicy::Full),
+            "auto" => Ok(RecomputePolicy::Auto),
+            other => match other.parse::<f64>() {
+                Ok(f) if f == 0.0 => Ok(RecomputePolicy::Off),
+                Ok(f) if f == 1.0 => Ok(RecomputePolicy::Full),
+                Ok(f) if f > 0.0 && f < 1.0 => Ok(RecomputePolicy::Fraction(f)),
+                _ => Err(format!(
+                    "bad recompute policy '{s}' (off | full | auto | fraction in (0,1])"
+                )),
+            },
+        }
+    }
+
+    /// Display name (`off`, `full`, `auto`, or the fraction).
+    pub fn name(&self) -> String {
+        match self {
+            RecomputePolicy::Off => "off".to_string(),
+            RecomputePolicy::Full => "full".to_string(),
+            RecomputePolicy::Auto => "auto".to_string(),
+            RecomputePolicy::Fraction(f) => format!("{f}"),
+        }
+    }
+
+    /// Whether the policy is [`RecomputePolicy::Off`].
+    pub fn is_off(&self) -> bool {
+        matches!(self, RecomputePolicy::Off)
+    }
+}
 
 /// Per-stage memory accounting for one experiment configuration.
 #[derive(Clone, Debug, PartialEq)]
@@ -58,6 +134,20 @@ pub enum MemoryError {
         /// The stage's capacity.
         capacity_bytes: f64,
     },
+    /// Even full activation recomputation (`ρ = 1`) combined with
+    /// maximal freezing at the accuracy budget `r_max` cannot fit the
+    /// stage — the [`RecomputePolicy::Auto`] rescue has nothing left to
+    /// give back.
+    RecomputeInsufficient {
+        /// The offending stage.
+        stage: usize,
+        /// Bytes required at full recompute and `r = r_max`.
+        required_bytes: f64,
+        /// The stage's capacity.
+        capacity_bytes: f64,
+        /// The accuracy budget the freezing side was capped at.
+        r_max: f64,
+    },
 }
 
 impl std::fmt::Display for MemoryError {
@@ -66,6 +156,18 @@ impl std::fmt::Display for MemoryError {
             MemoryError::OverCapacity { stage, required_bytes, capacity_bytes } => write!(
                 f,
                 "stage {stage} needs {:.2} GiB even fully frozen but only {:.2} GiB fit",
+                required_bytes / (1u64 << 30) as f64,
+                capacity_bytes / (1u64 << 30) as f64,
+            ),
+            MemoryError::RecomputeInsufficient {
+                stage,
+                required_bytes,
+                capacity_bytes,
+                r_max,
+            } => write!(
+                f,
+                "stage {stage} needs {:.2} GiB even at full recompute and maximal \
+                 freezing (r_max = {r_max}) but only {:.2} GiB fit",
                 required_bytes / (1u64 << 30) as f64,
                 capacity_bytes / (1u64 << 30) as f64,
             ),
@@ -155,6 +257,125 @@ impl MemoryModel {
         self
     }
 
+    /// Scale each stage's stashed activation bytes by `1 − ρ_s`: the
+    /// accounting of a run that recomputes a fraction `ρ_s` of stage
+    /// `s`'s activations during the backward pass. `rho` must name one
+    /// fraction in `[0, 1]` per stage; all-zero fractions leave the
+    /// model bit-identical.
+    pub fn apply_recompute(mut self, rho: &[f64]) -> MemoryModel {
+        assert_eq!(rho.len(), self.num_stages(), "recompute fraction length mismatch");
+        for (a, &r) in self.act_bytes_per_mb.iter_mut().zip(rho) {
+            assert!(
+                r.is_finite() && (0.0..=1.0).contains(&r),
+                "recompute fractions must be in [0, 1]"
+            );
+            if r > 0.0 {
+                *a *= 1.0 - r;
+            }
+        }
+        self
+    }
+
+    /// Resolve a [`RecomputePolicy`] to per-stage recompute fractions
+    /// against this model's capacities.
+    ///
+    /// [`RecomputePolicy::Auto`] is the per-stage minimum over the two
+    /// closed forms: forced freezing is free in time (it *shrinks*
+    /// backward durations) and allowed up to the accuracy budget
+    /// `r_max`, so each stage freezes first and recomputes only the
+    /// deficit beyond it —
+    ///
+    /// ```text
+    /// ρ_s = clamp( (W_s + A_s + (1 − r_max)·T_s − C_s) / A_s , 0, 1 )
+    /// ```
+    ///
+    /// with `W` weights, `A = act/mb × inflight`, `T` trainable state,
+    /// `C` capacity. `ρ_s = 0` wherever the freeze floor alone fits
+    /// under `r_max` (so a generous budget resolves to the all-zero
+    /// vector and stays bit-identical to [`RecomputePolicy::Off`]);
+    /// `ρ_s > 1` means even full recompute plus maximal freezing cannot
+    /// fit ([`MemoryError::RecomputeInsufficient`]).
+    pub fn recompute_fractions(
+        &self,
+        inflight: &[usize],
+        r_max: f64,
+        policy: &RecomputePolicy,
+    ) -> Result<Vec<f64>, MemoryError> {
+        assert_eq!(inflight.len(), self.num_stages(), "inflight length mismatch");
+        let n = self.num_stages();
+        match policy {
+            RecomputePolicy::Off => Ok(vec![0.0; n]),
+            RecomputePolicy::Full => Ok(vec![1.0; n]),
+            RecomputePolicy::Fraction(f) => {
+                assert!(
+                    f.is_finite() && *f > 0.0 && *f <= 1.0,
+                    "uniform recompute fraction must be in (0, 1]"
+                );
+                Ok(vec![*f; n])
+            }
+            RecomputePolicy::Auto => {
+                let mut rho = Vec::with_capacity(n);
+                for s in 0..n {
+                    let act = self.act_bytes_per_mb[s] * inflight[s] as f64;
+                    let unreclaimable =
+                        self.train_state_bytes[s] * (1.0 - r_max.clamp(0.0, 1.0));
+                    let deficit =
+                        self.weight_bytes[s] + act + unreclaimable - self.capacity_bytes[s];
+                    if deficit <= 0.0 {
+                        rho.push(0.0);
+                        continue;
+                    }
+                    // Tolerate the roundoff of an exactly-full-recompute
+                    // crossing before declaring the stage unfittable.
+                    let r = if act > 0.0 { deficit / act } else { f64::INFINITY };
+                    if r > 1.0 + 1e-9 {
+                        return Err(MemoryError::RecomputeInsufficient {
+                            stage: s,
+                            required_bytes: self.weight_bytes[s] + unreclaimable,
+                            capacity_bytes: self.capacity_bytes[s],
+                            r_max,
+                        });
+                    }
+                    rho.push(r.min(1.0));
+                }
+                Ok(rho)
+            }
+        }
+    }
+
+    /// Capacity-level core of [`memory_plan_for`]: resolve `policy`
+    /// against this (already budget-scaled) model into per-stage
+    /// recompute fractions and the freeze-ratio floor derived from the
+    /// ρ-scaled activation accounting. For [`RecomputePolicy::Auto`]
+    /// the floor is capped at `r_max` (the fractions target exactly
+    /// `r_max` on deficit stages; re-deriving the floor from scaled
+    /// bytes can land an ulp above it). Returns `(floor, rho)`; errors
+    /// are the raw [`MemoryError`]s — the caller decides how to render
+    /// infeasibility. Shared by [`memory_plan_for`] and the fig16
+    /// bench so the two can never drift.
+    pub fn policy_floor(
+        &self,
+        inflight: &[usize],
+        r_max: f64,
+        policy: &RecomputePolicy,
+    ) -> Result<(Vec<f64>, Vec<f64>), MemoryError> {
+        let rho = self.recompute_fractions(inflight, r_max, policy)?;
+        let scaled;
+        let eff = if rho.iter().any(|&r| r > 0.0) {
+            scaled = self.clone().apply_recompute(&rho);
+            &scaled
+        } else {
+            self
+        };
+        let mut floor = eff.required_ratios(inflight)?;
+        if matches!(policy, RecomputePolicy::Auto) {
+            for r in &mut floor {
+                *r = r.min(r_max);
+            }
+        }
+        Ok((floor, rho))
+    }
+
     /// Peak bytes held by stage `s` with `inflight` microbatches in
     /// flight and an average freeze ratio of `r`.
     pub fn stage_bytes(&self, s: usize, inflight: usize, r: f64) -> f64 {
@@ -193,13 +414,35 @@ impl MemoryModel {
     }
 }
 
-/// Derive the per-stage freeze-ratio floor for a configured experiment:
-/// `Ok(None)` when the config carries no memory budget, `Ok(Some(floor))`
-/// when the budgeted capacity is satisfiable, and a user-facing error
-/// when it is not — either the device overflows even fully frozen
-/// ([`MemoryError::OverCapacity`]) or a stage's floor exceeds the
-/// accuracy budget `r_max` (the LP would reject it as
-/// `FloorExceedsBudget` on every solve, so it is refused upfront here).
+/// The planner-visible resolution of an experiment's memory policy: the
+/// per-stage freeze-ratio floor the LP enforces as constraint [5], and
+/// the per-stage activation-recompute fractions the run executes with.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MemoryPlan {
+    /// Per-stage freeze-ratio floor; `None` ⇔ no memory budget active.
+    pub floor: Option<Vec<f64>>,
+    /// Per-stage recompute fractions `ρ`; `None` ⇔ no recomputation
+    /// (all execution and LP paths bit-identical to
+    /// [`RecomputePolicy::Off`]).
+    pub recompute: Option<Vec<f64>>,
+}
+
+/// Resolve a configured experiment's memory policy — budget fraction,
+/// per-rank capacities, and [`RecomputePolicy`] — into a [`MemoryPlan`],
+/// or a user-facing error when it cannot be satisfied: the device
+/// overflows even fully frozen ([`MemoryError::OverCapacity`]), a floor
+/// exceeds the accuracy budget `r_max` (the LP would reject it as
+/// `FloorExceedsBudget` on every solve, so it is refused upfront here),
+/// or even full recompute plus maximal freezing cannot fit
+/// ([`MemoryError::RecomputeInsufficient`]).
+///
+/// Under [`RecomputePolicy::Auto`] the floor is *relaxed* by recompute:
+/// each stage freezes up to `r_max` first (free in time) and recomputes
+/// only the remaining deficit, so configurations the freeze-only floor
+/// would reject as `FloorExceedsBudget` resolve to a feasible plan that
+/// pays forward time instead. [`RecomputePolicy::Full`] and
+/// [`RecomputePolicy::Fraction`] apply unconditionally — also without a
+/// budget, as a pure memory-for-time trade.
 ///
 /// When the config names per-rank capacities
 /// (`ExperimentConfig::rank_memory_bytes`, mixed-GPU clusters), each
@@ -208,12 +451,12 @@ impl MemoryModel {
 ///
 /// This is the single recipe shared by the simulator runner and the
 /// `tfreeze` CLI, so the `lp` preview and the simulator always agree on
-/// the floor.
-pub fn stage_floor_for(
+/// both knobs.
+pub fn memory_plan_for(
     cfg: &ExperimentConfig,
     layer_stage: &[usize],
     schedule: &Schedule,
-) -> Result<Option<Vec<f64>>, String> {
+) -> Result<MemoryPlan, String> {
     let Some(frac) = cfg.memory_budget else {
         if cfg.rank_memory_bytes.is_some() {
             return Err(
@@ -222,7 +465,14 @@ pub fn stage_floor_for(
                     .to_string(),
             );
         }
-        return Ok(None);
+        // Unbudgeted runs can still recompute unconditionally (a pure
+        // memory-for-time trade); Auto has no deficit to cover.
+        let recompute = match &cfg.recompute {
+            RecomputePolicy::Off | RecomputePolicy::Auto => None,
+            RecomputePolicy::Full => Some(vec![1.0; cfg.stages()]),
+            RecomputePolicy::Fraction(f) => Some(vec![*f; cfg.stages()]),
+        };
+        return Ok(MemoryPlan { floor: None, recompute });
     };
     let mut mem = MemoryModel::from_presets(
         &cfg.model,
@@ -246,17 +496,38 @@ pub fn stage_floor_for(
         mem = mem.with_rank_capacities(caps, &schedule.rank_of_stage, cfg.effective_chunks());
     }
     let mem = mem.scaled_capacity(frac);
-    let floor = mem
-        .required_ratios(&peak_inflight(schedule))
+    let inflight = peak_inflight(schedule);
+    let (floor, rho) = mem
+        .policy_floor(&inflight, cfg.r_max, &cfg.recompute)
         .map_err(|e| format!("memory budget {frac} infeasible for {}: {e}", cfg.model.name))?;
+    let recomputing = rho.iter().any(|&r| r > 0.0);
     if let Some((s, &r)) = floor.iter().enumerate().find(|&(_, &r)| r > cfg.r_max) {
+        let hint = if cfg.recompute.is_off() {
+            " or enable activation recomputation (--recompute auto)"
+        } else {
+            ""
+        };
         return Err(format!(
             "memory budget {frac} needs a stage-{s} freeze ratio of at least {r:.3}, \
-             above the accuracy budget r_max = {} — raise the budget or r_max",
+             above the accuracy budget r_max = {} — raise the budget or r_max{hint}",
             cfg.r_max
         ));
     }
-    Ok(Some(floor))
+    Ok(MemoryPlan { floor: Some(floor), recompute: recomputing.then_some(rho) })
+}
+
+/// Derive the per-stage freeze-ratio floor alone: `Ok(None)` when the
+/// config carries no memory budget, `Ok(Some(floor))` when the budgeted
+/// capacity is satisfiable under the config's [`RecomputePolicy`]. A
+/// thin view over [`memory_plan_for`] kept for callers that only
+/// consume constraint [5]; anything that executes should take the whole
+/// [`MemoryPlan`] so the recompute surcharge is not silently dropped.
+pub fn stage_floor_for(
+    cfg: &ExperimentConfig,
+    layer_stage: &[usize],
+    schedule: &Schedule,
+) -> Result<Option<Vec<f64>>, String> {
+    memory_plan_for(cfg, layer_stage, schedule).map(|p| p.floor)
 }
 
 /// Peak number of simultaneously in-flight microbatches per stage: a
@@ -487,5 +758,186 @@ mod tests {
         let mid = mem.stage_bytes(0, 4, 0.5);
         assert!(hi > lo);
         assert!((mid - (lo + hi) / 2.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn recompute_policy_parses_and_names() {
+        assert_eq!(RecomputePolicy::parse("off").unwrap(), RecomputePolicy::Off);
+        assert_eq!(RecomputePolicy::parse("none").unwrap(), RecomputePolicy::Off);
+        assert_eq!(RecomputePolicy::parse("0").unwrap(), RecomputePolicy::Off);
+        assert_eq!(RecomputePolicy::parse("Full").unwrap(), RecomputePolicy::Full);
+        assert_eq!(RecomputePolicy::parse("1.0").unwrap(), RecomputePolicy::Full);
+        assert_eq!(RecomputePolicy::parse("auto").unwrap(), RecomputePolicy::Auto);
+        assert_eq!(
+            RecomputePolicy::parse("0.5").unwrap(),
+            RecomputePolicy::Fraction(0.5)
+        );
+        for bad in ["1.5", "-0.2", "sometimes", ""] {
+            assert!(RecomputePolicy::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+        // name() round-trips through parse().
+        for p in [
+            RecomputePolicy::Off,
+            RecomputePolicy::Full,
+            RecomputePolicy::Auto,
+            RecomputePolicy::Fraction(0.25),
+        ] {
+            assert_eq!(RecomputePolicy::parse(&p.name()).unwrap(), p);
+        }
+        assert!(RecomputePolicy::Off.is_off());
+        assert!(!RecomputePolicy::Auto.is_off());
+    }
+
+    #[test]
+    fn apply_recompute_scales_activations_only() {
+        let (_, mem) = model_1b();
+        let rho = [0.0, 0.5, 1.0, 0.25];
+        let scaled = mem.clone().apply_recompute(&rho);
+        for s in 0..4 {
+            assert_eq!(
+                scaled.act_bytes_per_mb[s],
+                if rho[s] > 0.0 {
+                    mem.act_bytes_per_mb[s] * (1.0 - rho[s])
+                } else {
+                    mem.act_bytes_per_mb[s]
+                }
+            );
+            assert_eq!(scaled.weight_bytes[s], mem.weight_bytes[s]);
+            assert_eq!(scaled.train_state_bytes[s], mem.train_state_bytes[s]);
+            assert_eq!(scaled.capacity_bytes[s], mem.capacity_bytes[s]);
+        }
+        // All-zero fractions are bit-identical.
+        assert_eq!(mem.clone().apply_recompute(&[0.0; 4]), mem);
+    }
+
+    #[test]
+    fn auto_fractions_zero_on_generous_budget() {
+        let (cfg, mem) = model_1b();
+        let s = Schedule::build(ScheduleKind::OneFOneB, 4, cfg.microbatches, 1);
+        let inflight = peak_inflight(&s);
+        let rho = mem
+            .recompute_fractions(&inflight, cfg.r_max, &RecomputePolicy::Auto)
+            .unwrap();
+        assert_eq!(rho, vec![0.0; 4], "48 GB fits 1B without recompute");
+        // Off and Full resolve to the constant vectors.
+        assert_eq!(
+            mem.recompute_fractions(&inflight, cfg.r_max, &RecomputePolicy::Off).unwrap(),
+            vec![0.0; 4]
+        );
+        assert_eq!(
+            mem.recompute_fractions(&inflight, cfg.r_max, &RecomputePolicy::Full).unwrap(),
+            vec![1.0; 4]
+        );
+        assert_eq!(
+            mem.recompute_fractions(&inflight, cfg.r_max, &RecomputePolicy::Fraction(0.3))
+                .unwrap(),
+            vec![0.3; 4]
+        );
+    }
+
+    #[test]
+    fn auto_fractions_cover_the_deficit_exactly() {
+        let (cfg, mem) = model_1b();
+        let s = Schedule::build(ScheduleKind::GPipe, 4, cfg.microbatches, 1);
+        let inflight = peak_inflight(&s);
+        let r_max = 0.8;
+        // Shrink capacity until the freeze-only floor conflicts with
+        // r_max — the regime Auto exists to rescue. Fine 1% steps: the
+        // conflict window is only (1 − r_max)·T wide before the OOM
+        // wall, and a coarse probe would jump straight past it.
+        let mut frac = 1.0f64;
+        let mem = loop {
+            let m = mem.clone().scaled_capacity(frac);
+            match m.required_ratios(&inflight) {
+                Ok(f) if f.iter().any(|&r| r > r_max) => break m,
+                Ok(_) => frac *= 0.99,
+                Err(e) => panic!("walked past the OOM wall: {e}"),
+            }
+        };
+        let rho = mem.recompute_fractions(&inflight, r_max, &RecomputePolicy::Auto).unwrap();
+        assert!(rho.iter().any(|&r| r > 0.0), "deficit stages must recompute");
+        assert!(rho.iter().all(|&r| (0.0..=1.0).contains(&r)));
+        // The scaled accounting fits with the floor capped at r_max.
+        let scaled = mem.clone().apply_recompute(&rho);
+        let floor = scaled.required_ratios(&inflight).unwrap();
+        for s in 0..4 {
+            assert!(
+                floor[s] <= r_max + 1e-9,
+                "stage {s}: relaxed floor {} still above r_max",
+                floor[s]
+            );
+            let used = scaled.stage_bytes(s, inflight[s], floor[s].min(r_max));
+            assert!(
+                used <= scaled.capacity_bytes[s] + scaled.train_state_bytes[s] * 1e-9 + 1.0,
+                "stage {s}: {used} bytes over capacity {}",
+                scaled.capacity_bytes[s]
+            );
+        }
+        // A budget below even weights + (1 − r_max)·state is reported as
+        // unfittable-with-recompute.
+        let hopeless = mem.clone().scaled_capacity(1e-4);
+        assert!(matches!(
+            hopeless.recompute_fractions(&inflight, r_max, &RecomputePolicy::Auto),
+            Err(MemoryError::RecomputeInsufficient { .. })
+        ));
+    }
+
+    #[test]
+    fn memory_plan_auto_rescues_floor_exceeds_budget() {
+        let (mut cfg, mem) = model_1b();
+        let s = Schedule::build(ScheduleKind::GPipe, 4, cfg.microbatches, 1);
+        let layer_stage = balanced_partition(&cfg.model.layer_params(), 4);
+        let inflight = peak_inflight(&s);
+        // Probe for a budget fraction whose freeze-only floor exceeds
+        // r_max but stays above the OOM wall (fine 1% steps — the
+        // window is only (1 − r_max)·T wide).
+        let mut frac = 1.0f64;
+        loop {
+            match mem.clone().scaled_capacity(frac).required_ratios(&inflight) {
+                Ok(f) if f.iter().any(|&r| r > cfg.r_max) => break,
+                Ok(_) => frac *= 0.99,
+                Err(e) => panic!("walked past the OOM wall: {e}"),
+            }
+        }
+        cfg.memory_budget = Some(frac);
+        // Freeze-only: a clean upfront error that names the conflict.
+        cfg.recompute = RecomputePolicy::Off;
+        let err = memory_plan_for(&cfg, &layer_stage, &s).unwrap_err();
+        assert!(err.contains("above the accuracy budget"), "{err}");
+        assert!(err.contains("--recompute auto"), "{err}");
+        // Auto: same budget resolves to a feasible plan with the floor
+        // capped at r_max and a nonzero recompute vector.
+        cfg.recompute = RecomputePolicy::Auto;
+        let plan = memory_plan_for(&cfg, &layer_stage, &s).unwrap();
+        let floor = plan.floor.expect("budgeted plan must carry a floor");
+        assert!(floor.iter().all(|&r| r <= cfg.r_max));
+        let rho = plan.recompute.expect("deficit must be covered by recompute");
+        assert!(rho.iter().any(|&r| r > 0.0));
+        // Full also fits here (it frees even more activation memory) and
+        // its floor can only be lower or equal.
+        cfg.recompute = RecomputePolicy::Full;
+        let full = memory_plan_for(&cfg, &layer_stage, &s).unwrap();
+        for (a, b) in full.floor.unwrap().iter().zip(&floor) {
+            assert!(a <= b, "full-recompute floor must not exceed auto's");
+        }
+    }
+
+    #[test]
+    fn memory_plan_without_budget_only_recomputes_unconditionally() {
+        let (mut cfg, _) = model_1b();
+        let s = Schedule::build(ScheduleKind::OneFOneB, 4, cfg.microbatches, 1);
+        let layer_stage = balanced_partition(&cfg.model.layer_params(), 4);
+        cfg.memory_budget = None;
+        for (policy, want) in [
+            (RecomputePolicy::Off, None),
+            (RecomputePolicy::Auto, None),
+            (RecomputePolicy::Full, Some(vec![1.0; 4])),
+            (RecomputePolicy::Fraction(0.4), Some(vec![0.4; 4])),
+        ] {
+            cfg.recompute = policy;
+            let plan = memory_plan_for(&cfg, &layer_stage, &s).unwrap();
+            assert_eq!(plan.floor, None);
+            assert_eq!(plan.recompute, want);
+        }
     }
 }

@@ -20,7 +20,10 @@
 //!   activation / weight / trainable-state byte accounting against a
 //!   device capacity, producing the per-stage *freeze-ratio floor* the
 //!   LP consumes as constraint [5] (freezing chosen to fit a memory
-//!   budget, not only to cut batch time).
+//!   budget, not only to cut batch time), plus [`RecomputePolicy`] —
+//!   activation recomputation as the alternative way to buy memory
+//!   back, paying a per-stage forward-time surcharge instead of forced
+//!   freezing ([`memory_plan_for`] resolves both knobs at once).
 //!
 //! The split matters for the regimes "Pipeline Parallelism with
 //! Controllable Memory" (Qi et al., 2024) and "OptPipe" (Li et al.,
@@ -32,6 +35,9 @@ pub mod memory;
 pub mod model;
 pub mod profile;
 
-pub use memory::{peak_inflight, stage_floor_for, MemoryError, MemoryModel};
+pub use memory::{
+    memory_plan_for, peak_inflight, stage_floor_for, MemoryError, MemoryModel, MemoryPlan,
+    RecomputePolicy,
+};
 pub use model::CostModel;
 pub use profile::{CostProfile, ProfileRecorder, StageProfile};

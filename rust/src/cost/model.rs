@@ -39,6 +39,13 @@ pub struct CostModel {
     /// cross the `s ↔ s+1` boundary in either direction (activations
     /// down, gradients back up). Empty ⇒ no edge-charged communication.
     p2p: Vec<f64>,
+    /// Per-stage activation-recompute fractions `ρ_s`: every
+    /// stash-consuming backward action at stage `s` (fused `Backward`,
+    /// or the Zero-Bubble `BackwardDgrad`) re-runs `ρ_s` of the stage's
+    /// forward, adding a `ρ_s · fwd_s` surcharge to both duration
+    /// bounds. Empty ⇒ no recomputation — the surcharge-free paths are
+    /// untouched.
+    recompute: Vec<f64>,
     /// Optional per-stage memory accounting (activation / weight /
     /// trainable-state bytes against a capacity).
     memory: Option<MemoryModel>,
@@ -81,6 +88,7 @@ impl CostModel {
             comm: vec![comm; stages],
             overhead: gpu.overhead,
             p2p: Vec::new(),
+            recompute: Vec::new(),
             memory: None,
         }
     }
@@ -120,7 +128,69 @@ impl CostModel {
         {
             assert!(v.is_finite() && *v >= 0.0, "cost entries must be finite and ≥ 0");
         }
-        CostModel { stages, fwd, dgrad, wgrad, optimizer, comm, overhead, p2p, memory: None }
+        CostModel {
+            stages,
+            fwd,
+            dgrad,
+            wgrad,
+            optimizer,
+            comm,
+            overhead,
+            p2p,
+            recompute: Vec::new(),
+            memory: None,
+        }
+    }
+
+    /// Attach per-stage activation-recompute fractions `ρ_s ∈ [0, 1]`
+    /// (typically from
+    /// [`memory_plan_for`](crate::cost::memory_plan_for)): every
+    /// stash-consuming backward action at stage `s` gains a
+    /// `ρ_s · fwd_s` duration surcharge — the forward re-run that
+    /// regenerates the activations the stage chose not to stash. The
+    /// surcharge is freeze-invariant (added to both bounds), so freeze
+    /// ratios and their linearization are unchanged.
+    pub fn with_recompute_fractions(mut self, rho: &[f64]) -> CostModel {
+        assert_eq!(rho.len(), self.stages, "recompute fraction length mismatch");
+        assert!(
+            rho.iter().all(|r| r.is_finite() && (0.0..=1.0).contains(r)),
+            "recompute fractions must be in [0, 1]"
+        );
+        self.recompute = rho.to_vec();
+        self
+    }
+
+    /// The attached per-stage recompute fractions, if any.
+    pub fn recompute_fractions(&self) -> Option<&[f64]> {
+        (!self.recompute.is_empty()).then_some(self.recompute.as_slice())
+    }
+
+    /// Per-stage recompute surcharge seconds for fractions `rho`:
+    /// `ρ_s × fwd_s`. This is the vector
+    /// [`FreezeLpInput::with_recompute`](crate::lp::FreezeLpInput::with_recompute)
+    /// consumes; callers that bake the fractions into the model instead
+    /// ([`CostModel::with_recompute_fractions`]) get bit-identical
+    /// bounds, because both paths append the same product as the last
+    /// addend.
+    pub fn recompute_surcharges_for(&self, rho: &[f64]) -> Vec<f64> {
+        assert_eq!(rho.len(), self.stages, "recompute fraction length mismatch");
+        rho.iter().zip(&self.fwd).map(|(r, f)| r * f).collect()
+    }
+
+    /// The baked-in per-stage surcharge vector (`ρ_s × fwd_s`), when
+    /// fractions are attached.
+    pub fn recompute_surcharges(&self) -> Option<Vec<f64>> {
+        self.recompute_fractions().map(|rho| self.recompute_surcharges_for(rho))
+    }
+
+    /// Recompute surcharge seconds of one stage (0 with no fractions
+    /// attached).
+    fn recompute_surcharge(&self, s: usize) -> f64 {
+        if self.recompute.is_empty() {
+            0.0
+        } else {
+            self.recompute[s] * self.fwd[s]
+        }
     }
 
     /// Attach per-stage memory accounting (consumed by
@@ -137,7 +207,13 @@ impl CostModel {
     }
 
     /// Duration bounds (w_min, w_max) of an action — eq. 3 with Figure 3's
-    /// decomposition.
+    /// decomposition. With recompute fractions attached, the
+    /// stash-consuming backward kinds (`Backward`, `BackwardDgrad`)
+    /// additionally carry the stage's `ρ_s · fwd_s` forward re-run,
+    /// appended as the **last** addend to both bounds so the result is
+    /// bit-identical to handing the surcharge-free bounds plus the same
+    /// vector to
+    /// [`FreezeLpInput::with_recompute`](crate::lp::FreezeLpInput::with_recompute).
     pub fn bounds(&self, a: Action) -> (f64, f64) {
         let s = a.stage;
         assert!(s < self.stages, "stage {s} out of range");
@@ -148,11 +224,22 @@ impl CostModel {
             }
             ActionKind::Backward => {
                 let lo = self.dgrad[s] + self.overhead + self.comm[s];
-                (lo, lo + self.wgrad[s])
+                let hi = lo + self.wgrad[s];
+                if self.recompute.is_empty() {
+                    (lo, hi)
+                } else {
+                    let sur = self.recompute_surcharge(s);
+                    (lo + sur, hi + sur)
+                }
             }
             ActionKind::BackwardDgrad => {
                 let w = self.dgrad[s] + self.overhead + self.comm[s];
-                (w, w)
+                if self.recompute.is_empty() {
+                    (w, w)
+                } else {
+                    let sur = self.recompute_surcharge(s);
+                    (w + sur, w + sur)
+                }
             }
             ActionKind::BackwardWgrad => {
                 let lo = self.overhead;
@@ -354,6 +441,46 @@ mod tests {
         let (lo, hi) = cm.bounds(Action::b(0, 2));
         assert_eq!(lo, 3.0);
         assert_eq!(hi, 4.5);
+    }
+
+    #[test]
+    fn recompute_surcharge_is_freeze_invariant_and_bit_stable() {
+        let (_, _, cm) = model_8b();
+        let rho = [0.0, 0.5, 1.0, 0.25];
+        let rc = cm.clone().with_recompute_fractions(&rho);
+        let sur = cm.recompute_surcharges_for(&rho);
+        for s in 0..4 {
+            assert_eq!(sur[s], rho[s] * cm.stage_fwd(s));
+            // Backward and dgrad bounds grow by exactly the surcharge,
+            // appended last — bit-identical to the LP-side path.
+            let (lo, hi) = cm.bounds(Action::b(0, s));
+            let (rlo, rhi) = rc.bounds(Action::b(0, s));
+            assert_eq!(rlo.to_bits(), (lo + sur[s]).to_bits());
+            assert_eq!(rhi.to_bits(), (hi + sur[s]).to_bits());
+            let (dlo, dhi) = cm.bounds(Action::bd(0, s));
+            let (rdlo, rdhi) = rc.bounds(Action::bd(0, s));
+            assert_eq!(rdlo.to_bits(), (dlo + sur[s]).to_bits());
+            assert_eq!(rdhi.to_bits(), (dhi + sur[s]).to_bits());
+            // Forward and wgrad are untouched; the freezable range is
+            // invariant, so freeze-ratio linearization is unchanged.
+            assert_eq!(rc.bounds(Action::f(0, s)), cm.bounds(Action::f(0, s)));
+            assert_eq!(rc.bounds(Action::bw(0, s)), cm.bounds(Action::bw(0, s)));
+            assert_eq!((rhi - rlo).to_bits(), (hi - lo).to_bits());
+        }
+        assert_eq!(rc.recompute_fractions(), Some(&rho[..]));
+        assert_eq!(rc.recompute_surcharges(), Some(sur));
+        assert!(cm.recompute_fractions().is_none());
+        assert!(cm.recompute_surcharges().is_none());
+        // All-zero fractions leave every bound bit-identical.
+        let zero = cm.clone().with_recompute_fractions(&[0.0; 4]);
+        for s in 0..4 {
+            for a in [Action::f(0, s), Action::b(0, s), Action::bw(0, s)] {
+                let (lo, hi) = cm.bounds(a);
+                let (zlo, zhi) = zero.bounds(a);
+                assert_eq!(lo.to_bits(), zlo.to_bits());
+                assert_eq!(hi.to_bits(), zhi.to_bits());
+            }
+        }
     }
 
     #[test]

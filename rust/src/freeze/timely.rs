@@ -64,6 +64,14 @@ pub struct TimelyFreeze {
     /// Per-stage freeze-ratio floor from memory accounting (constraint
     /// [5]); `None` ⇒ memory-unconstrained.
     stage_floor: Option<Vec<f64>>,
+    /// Per-stage recompute surcharge seconds added to the LP's backward
+    /// envelopes ([`FreezeLpInput::with_recompute`]); `None` ⇒ the
+    /// monitored (or observed) bounds already tell the whole story.
+    /// Only set this when the bounds fed to the LP come from a
+    /// *surcharge-free* world — the simulator bakes the surcharge into
+    /// its cost model instead, so monitored durations carry it already
+    /// and setting this too would double-charge.
+    recompute_surcharge: Option<Vec<f64>>,
     /// Observed-execution cost model distilled by the event engine
     /// ([`ProfileRecorder`](crate::cost::ProfileRecorder) →
     /// [`CostProfile`](crate::cost::CostProfile)); when set, LP bounds
@@ -97,6 +105,7 @@ impl TimelyFreeze {
             solution: None,
             solver: FreezeLpSolver::new(),
             stage_floor: None,
+            recompute_surcharge: None,
             observed: None,
             inflight,
             layout,
@@ -143,8 +152,30 @@ impl TimelyFreeze {
     /// the freeze-nothing fail-safe at maximum memory pressure.
     pub fn replan(&mut self, cost: Option<&CostModel>) {
         if let Some(mem) = cost.and_then(|c| c.memory()) {
+            // A cost model carrying recompute fractions stashes only
+            // `1 − ρ_s` of each stage's activations; the floor must be
+            // derived from the same scaled accounting
+            // (`memory_plan_for` semantics) or it would over-freeze.
+            let scaled;
+            let mem = match cost.and_then(|c| c.recompute_fractions()) {
+                Some(rho) => {
+                    scaled = mem.clone().apply_recompute(rho);
+                    &scaled
+                }
+                None => mem,
+            };
             match mem.required_ratios(&self.inflight) {
-                Ok(floor) => {
+                Ok(mut floor) => {
+                    // Tolerate the roundoff of a recompute-scaled floor
+                    // landing an ulp above r_max (Auto-derived fractions
+                    // target exactly r_max on deficit stages — the same
+                    // guard `memory_plan_for` applies); genuine
+                    // conflicts are still rejected below.
+                    for r in &mut floor {
+                        if *r > self.cfg.r_max && *r <= self.cfg.r_max + 1e-9 {
+                            *r = self.cfg.r_max;
+                        }
+                    }
                     if let Some((s, &r)) =
                         floor.iter().enumerate().find(|&(_, &r)| r > self.cfg.r_max)
                     {
@@ -198,6 +229,24 @@ impl TimelyFreeze {
     /// The active per-stage freeze-ratio floor, if any.
     pub fn stage_floor(&self) -> Option<&[f64]> {
         self.stage_floor.as_deref()
+    }
+
+    /// Set (or clear) the per-stage recompute surcharge the LP should
+    /// grow its backward envelopes by (`Δ_s = ρ_s · fwd_s`, see
+    /// [`FreezeLpInput::with_recompute`]). Use only when the bounds the
+    /// controller monitors come from a surcharge-free execution — an
+    /// environment that already executes (and therefore measures) the
+    /// forward re-runs, like the simulator with a baked
+    /// [`CostModel::with_recompute_fractions`], must leave this unset
+    /// or the surcharge would be charged twice. An all-zero vector is
+    /// dropped. Takes effect at the next LP solve.
+    pub fn set_recompute_surcharge(&mut self, surcharge: Option<Vec<f64>>) {
+        self.recompute_surcharge = surcharge.filter(|s| s.iter().any(|&x| x > 0.0));
+    }
+
+    /// The active per-stage recompute surcharge, if any.
+    pub fn recompute_surcharge(&self) -> Option<&[f64]> {
+        self.recompute_surcharge.as_deref()
     }
 
     /// The pipeline DAG the controller plans over.
@@ -278,6 +327,9 @@ impl TimelyFreeze {
             FreezeLpInput::new(&self.pdag, w_min, w_max, self.cfg.r_max, self.cfg.lambda);
         if let Some(floor) = self.stage_floor.as_deref() {
             input = input.with_stage_floor(floor);
+        }
+        if let Some(sur) = self.recompute_surcharge.as_deref() {
+            input = input.with_recompute(sur);
         }
         match self.solver.solve(&input) {
             Ok(sol) => {
@@ -570,6 +622,92 @@ mod tests {
         // An all-zero floor is dropped entirely.
         tf.set_stage_floor(Some(vec![0.0; 4]));
         assert!(tf.stage_floor().is_none());
+    }
+
+    #[test]
+    fn recompute_surcharge_inflates_the_plan_envelopes() {
+        let (mut tf, schedule) = make(0.8);
+        drive_monitoring(&mut tf, &schedule);
+        tf.plan(31);
+        let free = tf.solution().unwrap().clone();
+        assert!(free.recompute_surcharge.is_none());
+        // Monitored bounds from a surcharge-free world + an explicit
+        // surcharge: the plan now accounts for the forward re-runs.
+        tf.set_recompute_surcharge(Some(vec![0.5; 4]));
+        tf.replan(None);
+        let sur = tf.solution().unwrap();
+        assert!(sur.p_d_max > free.p_d_max + 1e-9);
+        assert!(sur.batch_time > free.batch_time + 1e-9);
+        assert_eq!(sur.recompute_surcharge.as_deref(), Some(&[0.5f64; 4][..]));
+        // An all-zero vector is dropped and the plan returns exactly.
+        tf.set_recompute_surcharge(Some(vec![0.0; 4]));
+        assert!(tf.recompute_surcharge().is_none());
+        tf.replan(None);
+        let back = tf.solution().unwrap();
+        assert!((back.batch_time - free.batch_time).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replan_derives_floor_from_recompute_scaled_memory() {
+        use crate::config::ExperimentConfig;
+        use crate::cost::{CostModel, MemoryModel};
+        use crate::partition::balanced_partition;
+
+        let (mut tf, schedule) = make(0.8);
+        drive_monitoring(&mut tf, &schedule);
+        tf.plan(31);
+        // A capacity where the freeze-only floor binds…
+        let cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+        let layer_stage = balanced_partition(&cfg.model.layer_params(), 4);
+        let mem = MemoryModel::from_presets(
+            &cfg.model,
+            &cfg.gpu,
+            &layer_stage,
+            4,
+            cfg.microbatch_size,
+            cfg.seq_len,
+            1,
+        );
+        let inflight = crate::cost::peak_inflight(&schedule);
+        let mut frac = 1.0;
+        let mem = loop {
+            let m = mem.clone().scaled_capacity(frac);
+            match m.required_ratios(&inflight) {
+                Ok(f) if f.iter().any(|&r| r > 0.05) => {
+                    assert!(f.iter().all(|&r| r <= 0.7), "crossing too coarse: {f:?}");
+                    break m;
+                }
+                Ok(_) => frac *= 0.98,
+                Err(e) => panic!("overshot feasibility: {e}"),
+            }
+        };
+        let base_cost = CostModel::new(
+            &cfg.model,
+            &cfg.gpu,
+            &layer_stage,
+            4,
+            cfg.microbatch_size,
+            cfg.seq_len,
+        );
+        // Freeze-only cost model installs the binding floor…
+        tf.replan(Some(&base_cost.clone().with_memory(mem.clone())));
+        let frozen_floor = tf
+            .stage_floor()
+            .expect("binding budget must install a floor")
+            .to_vec();
+        assert!(frozen_floor.iter().any(|&r| r > 0.05));
+        // …while the same memory under full recompute needs less forced
+        // freezing at every stage (activations no longer stashed).
+        let rc_cost = base_cost.with_recompute_fractions(&[1.0; 4]).with_memory(mem);
+        tf.replan(Some(&rc_cost));
+        match tf.stage_floor() {
+            None => {} // floor dissolved entirely — the strongest relaxation
+            Some(relaxed) => {
+                for (s, (&r, &f)) in relaxed.iter().zip(&frozen_floor).enumerate() {
+                    assert!(r <= f + 1e-9, "stage {s}: recompute floor {r} above {f}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! so that r_i = δ_i (w_max_i − w_i) is the linearized freeze ratio
 //! (eq. 4).
 //!
-//! Two optional extensions beyond the paper's formulation, both exactly
+//! Three optional extensions beyond the paper's formulation, all exactly
 //! zero-cost when absent:
 //!
 //! * **edge costs** `e_ij` — P2P communication charged to cross-rank DAG
@@ -30,9 +30,25 @@
 //!   Supplied via [`FreezeLpInput::with_stage_floor`]; a floor above
 //!   `r_max` is rejected upfront as [`FreezeLpError::FloorExceedsBudget`]
 //!   (the memory budget and the accuracy budget genuinely conflict).
+//! * **recompute surcharges** `Δ_s` — activation recomputation as the
+//!   alternative memory policy
+//!   ([`RecomputePolicy`](crate::cost::RecomputePolicy)): a stage that
+//!   stashes only `1 − ρ_s` of its activations re-runs `ρ_s` of its
+//!   forward during every stash-consuming backward, so `Δ_s = ρ_s ·
+//!   fwd_s` grows *both* duration bounds of the stage's `Backward` /
+//!   `BackwardDgrad` nodes ([`FreezeLpInput::with_recompute`]). The
+//!   surcharge is freeze-invariant — the `[w_min, w_max]` range, hence
+//!   `δ_i` and the ratio linearization, is unchanged — and the memory
+//!   deficit it covers reaches the LP as a *relaxed* constraint-[5]
+//!   floor (derived by
+//!   [`memory_plan_for`](crate::cost::memory_plan_for), which trades
+//!   the two off per stage). `None` keeps every path bit-identical and
+//!   the warm-start basis valid (bounds and constants move; the row
+//!   structure does not).
 
 use crate::graph::pipeline::{Node, PipelineDag};
 use crate::lp::simplex::{self, Basis, Cmp, LpProblem, LpSolution, LpStatus, INF};
+use crate::types::ActionKind;
 
 /// Default tie-breaker weight. The paper only requires λ ≪ 1 so that
 /// minimizing P_d always dominates; we scale it against the number of
@@ -65,6 +81,13 @@ pub struct FreezeLpInput<'a> {
     /// [`PipelineDag::p2p_edge_costs`]. `None` ⇒ free edges,
     /// bit-identical to the pre-refactor precedence rows.
     pub edge_costs: Option<&'a [f64]>,
+    /// Optional per-stage recompute surcharge seconds (len ==
+    /// `pdag.stages`, typically
+    /// [`CostModel::recompute_surcharges_for`](crate::cost::CostModel::recompute_surcharges_for)):
+    /// added to both duration bounds of every stash-consuming backward
+    /// node (`Backward`, `BackwardDgrad`) at the stage. `None` ⇒ no
+    /// recomputation, bit-identical to the surcharge-free build.
+    pub recompute: Option<&'a [f64]>,
 }
 
 impl<'a> FreezeLpInput<'a> {
@@ -76,7 +99,16 @@ impl<'a> FreezeLpInput<'a> {
         r_max: f64,
         lambda: f64,
     ) -> FreezeLpInput<'a> {
-        FreezeLpInput { pdag, w_min, w_max, r_max, lambda, r_min: None, edge_costs: None }
+        FreezeLpInput {
+            pdag,
+            w_min,
+            w_max,
+            r_max,
+            lambda,
+            r_min: None,
+            edge_costs: None,
+            recompute: None,
+        }
     }
 
     /// Enforce a per-stage freeze-ratio floor (constraint [5]).
@@ -88,6 +120,14 @@ impl<'a> FreezeLpInput<'a> {
     /// Charge P2P communication to DAG edges (CSR edge order).
     pub fn with_edge_costs(mut self, edge_costs: &'a [f64]) -> FreezeLpInput<'a> {
         self.edge_costs = Some(edge_costs);
+        self
+    }
+
+    /// Grow every stash-consuming backward node's duration bounds by its
+    /// stage's recompute surcharge `Δ_s = ρ_s · fwd_s` (activation
+    /// recomputation as a memory policy).
+    pub fn with_recompute(mut self, surcharge: &'a [f64]) -> FreezeLpInput<'a> {
+        self.recompute = Some(surcharge);
         self
     }
 }
@@ -111,6 +151,14 @@ pub struct FreezeSolution {
     pub p_d_min: f64,
     /// Simplex iterations (for the perf log).
     pub iterations: usize,
+    /// The per-stage recompute surcharge **in seconds** (`Δ_s = ρ_s ·
+    /// fwd_s`, not a fraction — unlike
+    /// [`MemoryPlan::recompute`](crate::cost::MemoryPlan)) that the
+    /// envelopes included ([`FreezeLpInput::with_recompute`]) — the
+    /// chosen memory policy, recorded so reports can attribute batch
+    /// time to the forward re-runs. `None` ⇒ the solve saw no
+    /// recomputation.
+    pub recompute_surcharge: Option<Vec<f64>>,
 }
 
 impl FreezeSolution {
@@ -209,6 +257,14 @@ pub enum FreezeLpError {
         /// Expected length (CSR edge count).
         want: usize,
     },
+    /// The recompute-surcharge vector is malformed (wrong length or a
+    /// negative / non-finite entry).
+    BadRecompute {
+        /// Supplied length.
+        got: usize,
+        /// Expected length (stage count).
+        want: usize,
+    },
     /// The simplex terminated abnormally.
     Solver(LpStatus),
 }
@@ -234,6 +290,11 @@ impl std::fmt::Display for FreezeLpError {
             FreezeLpError::BadEdgeCosts { got, want } => {
                 write!(f, "edge cost length {got} does not match CSR edge count {want}")
             }
+            FreezeLpError::BadRecompute { got, want } => write!(
+                f,
+                "recompute surcharge length {got} does not match stage count {want} \
+                 (or an entry is negative / non-finite)"
+            ),
             FreezeLpError::Solver(s) => write!(f, "LP terminated with status {s:?}"),
         }
     }
@@ -309,6 +370,21 @@ struct BuiltLp {
     w_var: Vec<Option<usize>>,
     /// δ_i per node (0 where unfreezable).
     delta: Vec<f64>,
+    /// Surcharge-grown lower bounds when the input carries recompute;
+    /// `None` ⇒ use `input.w_min` directly (the bit-identical path).
+    w_min_eff: Option<Vec<f64>>,
+    /// Surcharge-grown upper bounds (see `w_min_eff`).
+    w_max_eff: Option<Vec<f64>>,
+}
+
+impl BuiltLp {
+    /// The duration bounds the LP was actually built from.
+    fn bounds<'b>(&'b self, input: &'b FreezeLpInput<'_>) -> (&'b [f64], &'b [f64]) {
+        (
+            self.w_min_eff.as_deref().unwrap_or(input.w_min),
+            self.w_max_eff.as_deref().unwrap_or(input.w_max),
+        )
+    }
 }
 
 fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
@@ -326,6 +402,34 @@ fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
             return Err(FreezeLpError::BadBounds { node: i, w_min: lo, w_max: hi });
         }
     }
+    if let Some(sur) = input.recompute {
+        if sur.len() != pdag.stages || sur.iter().any(|c| !c.is_finite() || *c < 0.0) {
+            return Err(FreezeLpError::BadRecompute { got: sur.len(), want: pdag.stages });
+        }
+    }
+    // Effective duration bounds: the recompute surcharge (a partial
+    // forward re-run per stash-consuming backward) grows both bounds of
+    // the stage's Backward / BackwardDgrad nodes. Appending the
+    // surcharge to the caller's bounds here mirrors
+    // `CostModel::bounds` baking it in, bit for bit.
+    let (w_min_eff, w_max_eff) = match input.recompute {
+        None => (None, None),
+        Some(sur) => {
+            let mut lo = input.w_min.to_vec();
+            let mut hi = input.w_max.to_vec();
+            for (id, node) in pdag.dag.nodes.iter().enumerate() {
+                if let Node::Act(a) = node {
+                    if matches!(a.kind, ActionKind::Backward | ActionKind::BackwardDgrad) {
+                        lo[id] += sur[a.stage];
+                        hi[id] += sur[a.stage];
+                    }
+                }
+            }
+            (Some(lo), Some(hi))
+        }
+    };
+    let w_min: &[f64] = w_min_eff.as_deref().unwrap_or(input.w_min);
+    let w_max: &[f64] = w_max_eff.as_deref().unwrap_or(input.w_max);
     if let Some(rmin) = input.r_min {
         if rmin.len() != pdag.stages {
             return Err(FreezeLpError::BadStageFloor {
@@ -353,10 +457,12 @@ fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
         }
     }
 
-    // δ_i (reciprocal execution-time range; 0 where unfreezable).
+    // δ_i (reciprocal execution-time range; 0 where unfreezable). The
+    // surcharge is additive on both bounds, so the range — and with it
+    // the freeze-ratio linearization — is unchanged by recompute.
     let delta: Vec<f64> = (0..n)
         .map(|i| {
-            let range = input.w_max[i] - input.w_min[i];
+            let range = w_max[i] - w_min[i];
             if range > 0.0 {
                 1.0 / range
             } else {
@@ -370,11 +476,9 @@ fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
     let lam = if freezable.is_empty() {
         0.0
     } else {
-        let mean_range: f64 = freezable
-            .iter()
-            .map(|&i| input.w_max[i] - input.w_min[i])
-            .sum::<f64>()
-            / freezable.len() as f64;
+        let mean_range: f64 =
+            freezable.iter().map(|&i| w_max[i] - w_min[i]).sum::<f64>()
+                / freezable.len() as f64;
         input.lambda * mean_range / freezable.len() as f64
     };
 
@@ -396,7 +500,7 @@ fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
             // Secondary objective: −λ δ_i w_i (maximize durations ⇔
             // minimize freezing) — tie-breaker only.
             let cost = -lam * delta[i];
-            w_var.push(Some(lp.add_var(cost, input.w_min[i], input.w_max[i])));
+            w_var.push(Some(lp.add_var(cost, w_min[i], w_max[i])));
         } else {
             w_var.push(None);
         }
@@ -420,7 +524,7 @@ fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
                 None => lp.add_row(
                     vec![(p_var[v], 1.0), (p_var[u], -1.0)],
                     Cmp::Ge,
-                    input.w_max[u] + ec,
+                    w_max[u] + ec,
                 ),
             }
         }
@@ -432,7 +536,7 @@ fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
         if set.is_empty() {
             continue;
         }
-        let wmax_term: f64 = set.iter().map(|&i| delta[i] * input.w_max[i]).sum::<f64>();
+        let wmax_term: f64 = set.iter().map(|&i| delta[i] * w_max[i]).sum::<f64>();
         let coeffs: Vec<(usize, f64)> =
             set.iter().filter_map(|&i| w_var[i].map(|wi| (wi, delta[i]))).collect();
         lp.add_row(coeffs.clone(), Cmp::Ge, wmax_term - input.r_max * set.len() as f64);
@@ -443,7 +547,7 @@ fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
         }
     }
 
-    Ok(BuiltLp { lp, w_var, delta })
+    Ok(BuiltLp { lp, w_var, delta, w_min_eff, w_max_eff })
 }
 
 fn extract_solution(
@@ -453,14 +557,17 @@ fn extract_solution(
 ) -> FreezeSolution {
     let pdag = input.pdag;
     let n = pdag.len();
+    // Recompute-grown bounds when a surcharge was supplied; the caller's
+    // slices otherwise.
+    let (w_min, w_max) = built.bounds(input);
     let w: Vec<f64> = (0..n)
         .map(|i| match built.w_var[i] {
-            Some(wi) => sol.x[wi].clamp(input.w_min[i], input.w_max[i]),
-            None => input.w_max[i],
+            Some(wi) => sol.x[wi].clamp(w_min[i], w_max[i]),
+            None => w_max[i],
         })
         .collect();
     let ratios: Vec<f64> = (0..n)
-        .map(|i| (built.delta[i] * (input.w_max[i] - w[i])).clamp(0.0, 1.0))
+        .map(|i| (built.delta[i] * (w_max[i] - w[i])).clamp(0.0, 1.0))
         .collect();
     // Earliest start times under chosen durations (eq. 5) — the LP's P_i
     // may carry slack on non-critical nodes. The three longest-path
@@ -476,9 +583,9 @@ fn extract_solution(
     sweep(&w, &mut start_times);
     let batch_time = start_times[pdag.dest];
     let mut scratch = Vec::new();
-    sweep(input.w_max, &mut scratch);
+    sweep(w_max, &mut scratch);
     let p_d_max = scratch[pdag.dest];
-    sweep(input.w_min, &mut scratch);
+    sweep(w_min, &mut scratch);
     let p_d_min = scratch[pdag.dest];
 
     FreezeSolution {
@@ -489,6 +596,7 @@ fn extract_solution(
         p_d_max,
         p_d_min,
         iterations: sol.iterations,
+        recompute_surcharge: input.recompute.map(|s| s.to_vec()),
     }
 }
 
@@ -816,6 +924,81 @@ mod tests {
         .unwrap();
         assert_eq!(same.batch_time, free.batch_time);
         assert_eq!(same.ratios, free.ratios);
+    }
+
+    #[test]
+    fn recompute_surcharge_grows_envelopes_zero_is_bit_identical() {
+        let (g, w_min, w_max) = setup(ScheduleKind::OneFOneB, 4, 8, 0.4);
+        let free = solve(&g, &w_min, &w_max, 0.8);
+        assert!(free.recompute_surcharge.is_none());
+        // A uniform surcharge inflates the whole envelope: every
+        // microbatch's backward re-runs part of the forward.
+        let sur = vec![0.4; 4];
+        let sol = solve_freeze_lp(
+            &FreezeLpInput::new(&g, &w_min, &w_max, 0.8, DEFAULT_LAMBDA).with_recompute(&sur),
+        )
+        .unwrap();
+        assert!(sol.p_d_max > free.p_d_max + 1e-9);
+        assert!(sol.p_d_min > free.p_d_min + 1e-9);
+        assert!(sol.batch_time > free.batch_time + 1e-9);
+        assert_eq!(sol.recompute_surcharge.as_deref(), Some(&sur[..]));
+        // The surcharge is freeze-invariant: budgets still hold and the
+        // reported time matches a sweep of the chosen durations.
+        for (s, set) in g.freezable_by_stage().iter().enumerate() {
+            let avg: f64 = set.iter().map(|&i| sol.ratios[i]).sum::<f64>() / set.len() as f64;
+            assert!(avg <= 0.8 + 1e-6, "stage {s} over budget: {avg}");
+        }
+        assert!((sol.batch_time - g.batch_time(&sol.w)).abs() < 1e-9);
+        // A zero surcharge is bit-identical to the surcharge-free path.
+        let zeros = vec![0.0; 4];
+        let same = solve_freeze_lp(
+            &FreezeLpInput::new(&g, &w_min, &w_max, 0.8, DEFAULT_LAMBDA)
+                .with_recompute(&zeros),
+        )
+        .unwrap();
+        assert_eq!(same.batch_time.to_bits(), free.batch_time.to_bits());
+        assert_eq!(same.p_d_max.to_bits(), free.p_d_max.to_bits());
+        assert_eq!(same.ratios, free.ratios);
+        assert_eq!(same.w, free.w);
+        assert_eq!(same.iterations, free.iterations);
+    }
+
+    #[test]
+    fn recompute_keeps_warm_start_valid() {
+        // The surcharge moves bounds and RHS constants but not the row
+        // structure, so one solver can alternate surcharge on/off and
+        // keep warm-starting to the cold optimum.
+        let (g, w_min, w_max) = setup(ScheduleKind::ZeroBubbleV, 4, 8, 0.5);
+        let sur = vec![0.3; 8];
+        let mut solver = FreezeLpSolver::new();
+        for round in 0..4 {
+            let mut input = FreezeLpInput::new(&g, &w_min, &w_max, 0.7, DEFAULT_LAMBDA);
+            if round % 2 == 1 {
+                input = input.with_recompute(&sur);
+            }
+            let warm = solver.solve(&input).unwrap();
+            let cold = solve_freeze_lp(&input).unwrap();
+            assert!(
+                (warm.batch_time - cold.batch_time).abs() < 1e-6,
+                "round {round}: warm {} vs cold {}",
+                warm.batch_time,
+                cold.batch_time
+            );
+            assert!(solver.has_warm_basis());
+        }
+    }
+
+    #[test]
+    fn rejects_bad_recompute_vectors() {
+        let (g, w_min, w_max) = setup(ScheduleKind::GPipe, 2, 2, 0.5);
+        // Wrong arity (per-stage, not per-node).
+        let short = [0.1];
+        let bad = FreezeLpInput::new(&g, &w_min, &w_max, 0.5, 1e-4).with_recompute(&short);
+        assert!(matches!(solve_freeze_lp(&bad), Err(FreezeLpError::BadRecompute { .. })));
+        // Negative surcharge.
+        let neg = [0.1, -0.2];
+        let bad = FreezeLpInput::new(&g, &w_min, &w_max, 0.5, 1e-4).with_recompute(&neg);
+        assert!(matches!(solve_freeze_lp(&bad), Err(FreezeLpError::BadRecompute { .. })));
     }
 
     #[test]

@@ -32,6 +32,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "r-max", takes_value: true, help: "max average freeze ratio per stage" },
         FlagSpec { name: "mem-budget", takes_value: true, help: "fraction of device memory available (0,1]; enables the memory-aware LP floor" },
         FlagSpec { name: "rank-mem", takes_value: true, help: "per-rank device memory in GB for mixed clusters, e.g. 48,48,24,48 (with --mem-budget)" },
+        FlagSpec { name: "recompute", takes_value: true, help: "activation recompute policy: off|full|auto|<fraction>; auto covers memory deficits beyond r_max by re-running forwards" },
         FlagSpec { name: "scenario", takes_value: true, help: "runtime dynamics, e.g. straggler:1x1.5@300,jitter:0.05,link:2.0 (see docs)" },
         FlagSpec { name: "replan", takes_value: true, help: "online replanning cadence in steps (0 = static plan)" },
         FlagSpec { name: "exec", takes_value: true, help: "executor: event (discrete-event engine) | analytic (fast sweep)" },
@@ -124,6 +125,9 @@ fn build_sim_config(args: &Args) -> Result<ExperimentConfig, String> {
             .collect::<Result<_, _>>()?;
         cfg.rank_memory_bytes = Some(caps);
     }
+    if let Some(spec) = args.flag("recompute") {
+        cfg.recompute = timelyfreeze::cost::RecomputePolicy::parse(spec)?;
+    }
     if let Some(spec) = args.flag("scenario") {
         cfg.scenario = Some(timelyfreeze::config::Scenario::parse(spec)?);
     }
@@ -172,10 +176,14 @@ fn build_sim_config(args: &Args) -> Result<ExperimentConfig, String> {
     Ok(cfg)
 }
 
-/// Resolve the config's memory budget to a per-stage floor for the
-/// schedule it currently names, surfacing infeasibility as a CLI error.
+/// Resolve the config's memory policy (budget fraction, per-rank
+/// capacities, recompute) to a per-stage plan for the schedule it
+/// currently names, surfacing infeasibility as a CLI error.
 fn validate_memory_budget(cfg: &ExperimentConfig) -> Result<(), String> {
-    if cfg.memory_budget.is_none() && cfg.rank_memory_bytes.is_none() {
+    if cfg.memory_budget.is_none()
+        && cfg.rank_memory_bytes.is_none()
+        && cfg.recompute.is_off()
+    {
         return Ok(());
     }
     let schedule = timelyfreeze::schedule::Schedule::build(
@@ -185,7 +193,7 @@ fn validate_memory_budget(cfg: &ExperimentConfig) -> Result<(), String> {
         cfg.effective_chunks(),
     );
     let layout = sim::build_layout(cfg, timelyfreeze::partition::PartitionMethod::Parameter);
-    timelyfreeze::cost::stage_floor_for(cfg, &layout.layer_stage, &schedule).map(|_| ())
+    timelyfreeze::cost::memory_plan_for(cfg, &layout.layer_stage, &schedule).map(|_| ())
 }
 
 fn cmd_simulate(args: &Args) -> Result<(), String> {
@@ -215,6 +223,13 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         println!(
             "  planned P_d*    {:>10.4} s ({} replans)",
             planned, r.replans
+        );
+    }
+    if let Some(rho) = &r.recompute {
+        println!(
+            "  recompute       {} (mean ρ {:.3})",
+            cfg.recompute.name(),
+            rho.iter().sum::<f64>() / rho.len() as f64
         );
     }
     Ok(())
@@ -391,13 +406,21 @@ fn cmd_lp(args: &Args) -> Result<(), String> {
     );
     let w_min = pdag.weights(|a| cost.bounds(a).0);
     let w_max = pdag.weights(|a| cost.bounds(a).1);
-    // Memory-constrained LP: derive the per-stage floor from the
-    // budgeted capacity (same helper the simulator runner uses) and
-    // attach constraint [5].
-    let floor = timelyfreeze::cost::stage_floor_for(&cfg, &layout.layer_stage, &schedule)?;
+    // Memory-constrained LP: resolve budget + recompute policy to the
+    // per-stage floor and recompute fractions (same helper the
+    // simulator runner uses), attach constraint [5], and grow the
+    // backward envelopes by the recompute surcharge.
+    let plan = timelyfreeze::cost::memory_plan_for(&cfg, &layout.layer_stage, &schedule)?;
+    let surcharge = plan
+        .recompute
+        .as_ref()
+        .map(|rho| cost.recompute_surcharges_for(rho));
     let mut input = lp::FreezeLpInput::new(&pdag, &w_min, &w_max, cfg.r_max, cfg.lambda);
-    if let Some(f) = &floor {
+    if let Some(f) = &plan.floor {
         input = input.with_stage_floor(f);
+    }
+    if let Some(sur) = &surcharge {
+        input = input.with_recompute(sur);
     }
     let sol = lp::solve_freeze_lp(&input).map_err(|e| e.to_string())?;
     println!(
@@ -410,20 +433,34 @@ fn cmd_lp(args: &Args) -> Result<(), String> {
     println!("  P_d (full freezing) {:.4} s", sol.p_d_min);
     println!("  P_d* (optimized)    {:.4} s  → κ = {:.3}", sol.batch_time, sol.kappa());
     println!("  mean expected freeze ratio: {:.3}", sol.mean_freezable_ratio(&pdag));
-    let headers: &[&str] = if floor.is_some() {
-        &["Stage", "mean r*", "memory floor"]
-    } else {
-        &["Stage", "mean r*"]
-    };
-    let mut t = Table::new("per-stage expected freeze ratios", headers);
+    if let Some(rho) = &plan.recompute {
+        let total: f64 = surcharge.iter().flatten().sum();
+        println!(
+            "  recompute policy {} — mean fraction {:.3}, surcharge Σ_s ρ_s·fwd_s = {:.4} s per microbatch",
+            cfg.recompute.name(),
+            rho.iter().sum::<f64>() / rho.len() as f64,
+            total
+        );
+    }
+    let mut headers = vec!["Stage", "mean r*"];
+    if plan.floor.is_some() {
+        headers.push("memory floor");
+    }
+    if plan.recompute.is_some() {
+        headers.push("recompute ρ");
+    }
+    let mut t = Table::new("per-stage expected freeze ratios", &headers);
     let stage_ratios = sol.stage_ratios(&pdag);
     for (s, set) in pdag.freezable_by_stage().iter().enumerate() {
         if set.is_empty() {
             continue;
         }
         let mut row = vec![format!("{s}"), format!("{:.3}", stage_ratios[s])];
-        if let Some(f) = &floor {
+        if let Some(f) = &plan.floor {
             row.push(format!("{:.3}", f[s]));
+        }
+        if let Some(rho) = &plan.recompute {
+            row.push(format!("{:.3}", rho[s]));
         }
         t.row(row);
     }

@@ -37,6 +37,14 @@
 //! runtime dynamics (stragglers, jitter, link slowdowns — see
 //! [`Scenario`](crate::config::Scenario)) act on an *execution*, not on
 //! a formula.
+//!
+//! Activation recomputation rides on the same contract: the runner
+//! bakes the per-stage `ρ_s · fwd_s` surcharge into the duration of
+//! every stash-consuming backward
+//! ([`CostModel::with_recompute_fractions`](crate::cost::CostModel::with_recompute_fractions)),
+//! so the forward re-runs occupy the executing rank exactly like any
+//! other compute — and the bit-identity with the analytic sweep holds
+//! with surcharges on (`tests/recompute.rs`).
 
 mod queue;
 

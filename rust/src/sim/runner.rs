@@ -16,13 +16,20 @@
 //! warm-started LP against the observed profile — the online-replanning
 //! loop `benches/fig17_dynamics.rs` sweeps.
 //!
+//! Memory policies thread through here too: a configured budget and
+//! [`RecomputePolicy`](crate::config::ExperimentConfig::recompute)
+//! resolve to a [`MemoryPlan`](crate::cost::MemoryPlan) whose floor
+//! feeds the controller (LP constraint [5]) and whose recompute
+//! fractions are baked into the cost model, so each stash-consuming
+//! backward pays its `ρ_s · fwd_s` forward re-run in both executors.
+//!
 //! Every per-step quantity the paper reports is produced here:
 //! throughput (tokens/s), MFU, average freeze ratio, accuracy proxy, the
 //! freeze-ratio/throughput trajectory (Figure 4), per-action timings
 //! (Figure 15), and event-sourced Gantt data (Figures 7–13).
 
 use crate::config::{ExecMode, ExperimentConfig, Scenario};
-use crate::cost::{stage_floor_for, CostModel, ProfileRecorder};
+use crate::cost::{memory_plan_for, CostModel, ProfileRecorder};
 use crate::freeze::{select_frozen_units_into, ControllerFactory, ModelLayout};
 use crate::graph::pipeline::{BatchEvaluator, Node, PipelineDag};
 use crate::partition::{balanced_partition, PartitionMethod};
@@ -143,6 +150,11 @@ pub struct SimResult {
     pub planned_batch_time: Option<f64>,
     /// Number of observed-profile replans the run performed.
     pub replans: usize,
+    /// The per-stage activation-recompute fractions the run executed
+    /// with (the chosen memory policy, resolved by
+    /// [`memory_plan_for`](crate::cost::memory_plan_for)); `None` ⇒ no
+    /// recomputation.
+    pub recompute: Option<Vec<f64>>,
 }
 
 impl SimResult {
@@ -318,7 +330,7 @@ pub fn run_with_partition(
     );
     let pdag = PipelineDag::from_schedule(&schedule);
     let layout = build_layout(cfg, partition);
-    let cost = CostModel::new(
+    let mut cost = CostModel::new(
         &cfg.model,
         &cfg.gpu,
         &layout.layer_stage,
@@ -326,12 +338,20 @@ pub fn run_with_partition(
         cfg.microbatch_size,
         cfg.seq_len,
     );
-    // Memory-constrained runs: derive the per-stage freeze-ratio floor
-    // from the budgeted device capacity and the schedule's peak
-    // in-flight profile; the TimelyFreeze LP then respects it
-    // (constraint [5]).
-    let stage_floor = stage_floor_for(cfg, &layout.layer_stage, &schedule)
+    // Memory-constrained runs: resolve the budget + recompute policy to
+    // the per-stage freeze-ratio floor (constraint [5], honoured by the
+    // TimelyFreeze LP) and the recompute fractions. The fractions are
+    // baked into the cost model, so every executed — and therefore
+    // every *monitored* — backward carries its `ρ_s · fwd_s` forward
+    // re-run: the controller's LP bounds then include the surcharge
+    // without any double-charging, and both executors (event engine and
+    // analytic sweep) see identical surcharged durations.
+    let plan = memory_plan_for(cfg, &layout.layer_stage, &schedule)
         .map_err(SimError::InfeasibleMemoryBudget)?;
+    if let Some(rho) = &plan.recompute {
+        cost = cost.with_recompute_fractions(rho);
+    }
+    let stage_floor = plan.floor;
     // Runtime dynamics: an identity scenario (or none) leaves execution
     // untouched — the bit-identity contract with the analytic sweep.
     let scenario: Option<&Scenario> = match &cfg.scenario {
@@ -668,6 +688,7 @@ pub fn run_with_partition(
         unit_freeze_freq,
         planned_batch_time: controller.planned_batch_time().map(|p| p + opt_tail),
         replans,
+        recompute: plan.recompute,
     })
 }
 
@@ -833,6 +854,36 @@ mod tests {
             r.freeze_ratio,
             unbudgeted.freeze_ratio
         );
+    }
+
+    #[test]
+    fn recompute_policy_threads_through_the_run() {
+        use crate::cost::RecomputePolicy;
+        // Auto with no binding deficit resolves to no recomputation and
+        // is bit-identical to off.
+        let mut cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+        cfg.memory_budget = Some(1.0);
+        let off = run(&cfg).unwrap();
+        assert!(off.recompute.is_none());
+        let mut auto_cfg = cfg.clone();
+        auto_cfg.recompute = RecomputePolicy::Auto;
+        let auto = run(&auto_cfg).unwrap();
+        assert!(auto.recompute.is_none());
+        assert_eq!(off.throughput.to_bits(), auto.throughput.to_bits());
+        assert_eq!(off.accuracy.to_bits(), auto.accuracy.to_bits());
+        // Full recompute pays the forward re-run on every backward:
+        // strictly slower, and the chosen policy is reported.
+        let mut full_cfg = cfg.clone();
+        full_cfg.recompute = RecomputePolicy::Full;
+        let full = run(&full_cfg).unwrap();
+        assert_eq!(full.recompute, Some(vec![1.0; 4]));
+        assert!(
+            full.throughput < off.throughput,
+            "full recompute should cost time: {} vs {}",
+            full.throughput,
+            off.throughput
+        );
+        assert!(full.batch_time_nofreeze > off.batch_time_nofreeze);
     }
 
     #[test]

@@ -1,0 +1,254 @@
+//! Shared fixtures for the integration-test suites: quick experiment
+//! configs, preset-backed cost/memory models, random schedules/DAGs and
+//! LP bound vectors, scenario presets, and the binding-budget probe —
+//! the setup blocks that used to be copy-pasted per test file. The
+//! seeded property harness lives in [`prop`].
+//!
+//! Every test binary compiles its own copy of this module and uses a
+//! subset of it, hence the file-wide `dead_code` allowance.
+#![allow(dead_code)]
+
+pub mod prop;
+
+use self::prop::usize_in;
+use timelyfreeze::config::{ExperimentConfig, Scenario};
+use timelyfreeze::cost::{CostModel, MemoryModel};
+use timelyfreeze::freeze::PhaseConfig;
+use timelyfreeze::graph::dag::Dag;
+use timelyfreeze::graph::pipeline::{Node, PipelineDag};
+use timelyfreeze::partition::balanced_partition;
+use timelyfreeze::schedule::Schedule;
+use timelyfreeze::types::{ActionKind, FreezeMethod, ScheduleKind};
+use timelyfreeze::util::rng::Rng;
+
+/// A paper preset cut down to integration-test scale: 160 steps, phases
+/// {12, 36, 60}, metric-baseline check interval 6.
+pub fn quick(preset: &str, method: FreezeMethod, schedule: ScheduleKind) -> ExperimentConfig {
+    let mut cfg = quick_paced(preset, method, schedule, 160, (12, 36, 60));
+    cfg.apf.check_interval = 6;
+    cfg.auto.check_interval = 6;
+    cfg
+}
+
+/// A paper preset with explicit step count and phase boundaries
+/// (everything else — check intervals included — stays at the preset's
+/// values).
+pub fn quick_paced(
+    preset: &str,
+    method: FreezeMethod,
+    schedule: ScheduleKind,
+    steps: usize,
+    (warmup, monitor, freeze): (usize, usize, usize),
+) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_preset(preset).unwrap();
+    cfg.steps = steps;
+    cfg.phases = PhaseConfig::new(warmup, monitor, freeze);
+    cfg.method = method;
+    cfg.schedule = schedule;
+    cfg
+}
+
+/// The layer→stage assignment the simulator's parameter partition
+/// derives for a preset.
+pub fn preset_layer_stage(preset: &str, stages: usize) -> Vec<usize> {
+    let cfg = ExperimentConfig::paper_preset(preset).unwrap();
+    balanced_partition(&cfg.model.layer_params(), stages)
+}
+
+/// The analytic cost model of a preset over `stages` balanced stages.
+pub fn preset_cost(preset: &str, stages: usize) -> CostModel {
+    let cfg = ExperimentConfig::paper_preset(preset).unwrap();
+    let layer_stage = balanced_partition(&cfg.model.layer_params(), stages);
+    CostModel::new(
+        &cfg.model,
+        &cfg.gpu,
+        &layer_stage,
+        stages,
+        cfg.microbatch_size,
+        cfg.seq_len,
+    )
+}
+
+/// The memory model of a preset over `stages` balanced stages (each
+/// rank hosting `chunks` virtual stages).
+pub fn preset_memory(preset: &str, stages: usize, chunks: usize) -> MemoryModel {
+    let cfg = ExperimentConfig::paper_preset(preset).unwrap();
+    let layer_stage = balanced_partition(&cfg.model.layer_params(), stages);
+    MemoryModel::from_presets(
+        &cfg.model,
+        &cfg.gpu,
+        &layer_stage,
+        stages,
+        cfg.microbatch_size,
+        cfg.seq_len,
+        chunks,
+    )
+}
+
+/// A random schedule with ranks in `[r_lo, r_hi]` and microbatches in
+/// `[m_lo, m_hi]`, over all four schedule kinds (the kind is readable
+/// from `Schedule::kind`).
+pub fn random_schedule(
+    rng: &mut Rng,
+    (r_lo, r_hi): (usize, usize),
+    (m_lo, m_hi): (usize, usize),
+) -> Schedule {
+    let kind = ScheduleKind::all()[rng.next_below(4) as usize];
+    let ranks = usize_in(rng, r_lo, r_hi);
+    let m = usize_in(rng, m_lo, m_hi);
+    Schedule::build(kind, ranks, m, Schedule::default_chunks(kind))
+}
+
+/// Random DAG: edges only go from lower to higher ids (guaranteed
+/// acyclic), with duplicate insertions to exercise the dedup pass.
+pub fn random_dag(rng: &mut Rng) -> Dag<()> {
+    let n = usize_in(rng, 1, 60);
+    let mut g = Dag::new();
+    for _ in 0..n {
+        g.add_node(());
+    }
+    if n >= 2 {
+        let edges = usize_in(rng, 0, 4 * n);
+        for _ in 0..edges {
+            let u = rng.next_below((n - 1) as u64) as usize;
+            let v = u + 1 + rng.next_below((n - u - 1) as u64) as usize;
+            g.add_edge(u, v);
+            if rng.bernoulli(0.2) {
+                g.add_edge(u, v); // duplicate on purpose
+            }
+        }
+    }
+    g.dedup_edges();
+    g
+}
+
+/// Random `[w_min, w_max]` bound vectors over a pipeline DAG: forwards
+/// and dgrads fixed, fused backwards with a 1.5–3× freezable range,
+/// wgrads nearly fully freezable.
+pub fn random_bounds(rng: &mut Rng, g: &PipelineDag) -> (Vec<f64>, Vec<f64>) {
+    let mut w_min = vec![0.0; g.len()];
+    let mut w_max = vec![0.0; g.len()];
+    for (id, node) in g.dag.nodes.iter().enumerate() {
+        if let Node::Act(a) = node {
+            let base = rng.range_f64(0.5, 3.0);
+            match a.kind {
+                ActionKind::Forward | ActionKind::BackwardDgrad => {
+                    w_min[id] = base;
+                    w_max[id] = base;
+                }
+                ActionKind::Backward => {
+                    w_max[id] = base * rng.range_f64(1.5, 3.0);
+                    w_min[id] = base;
+                }
+                ActionKind::BackwardWgrad => {
+                    w_max[id] = base;
+                    w_min[id] = base * rng.range_f64(0.0, 0.2);
+                }
+            }
+        }
+    }
+    (w_min, w_max)
+}
+
+/// A small pipeline DAG plus deterministic bound vectors (forward = 1.0
+/// fixed; fused backward ∈ [dgrad_frac·2.0, 2.0]; ZB split: dgrad 1.0
+/// fixed, wgrad ∈ [0, 1]) — the freeze-LP unit-test workhorse.
+pub fn pipeline_with_bounds(
+    kind: ScheduleKind,
+    ranks: usize,
+    m: usize,
+    dgrad_frac: f64,
+) -> (PipelineDag, Vec<f64>, Vec<f64>) {
+    let s = Schedule::build(kind, ranks, m, Schedule::default_chunks(kind));
+    let g = PipelineDag::from_schedule(&s);
+    let mut w_min = vec![0.0; g.len()];
+    let mut w_max = vec![0.0; g.len()];
+    for (id, node) in g.dag.nodes.iter().enumerate() {
+        if let Node::Act(a) = node {
+            match a.kind {
+                ActionKind::Forward => {
+                    w_min[id] = 1.0;
+                    w_max[id] = 1.0;
+                }
+                ActionKind::Backward => {
+                    w_max[id] = 2.0;
+                    w_min[id] = 2.0 * dgrad_frac;
+                }
+                ActionKind::BackwardDgrad => {
+                    w_min[id] = 1.0;
+                    w_max[id] = 1.0;
+                }
+                ActionKind::BackwardWgrad => {
+                    w_max[id] = 1.0;
+                    w_min[id] = 0.0;
+                }
+            }
+        }
+    }
+    (g, w_min, w_max)
+}
+
+/// Walk a memory model's capacity down in fine (2%) steps until the
+/// freeze-only floor first binds above `threshold`, asserting the
+/// crossing stays below `ceiling` (so the probe is binding *and*
+/// feasible under the accuracy budget). Returns the scaled model, its
+/// floor, and the capacity fraction reached.
+pub fn binding_budget(
+    mem: &MemoryModel,
+    inflight: &[usize],
+    threshold: f64,
+    ceiling: f64,
+) -> (MemoryModel, Vec<f64>, f64) {
+    let mut frac = 1.0f64;
+    loop {
+        let m = mem.clone().scaled_capacity(frac);
+        let f = m.required_ratios(inflight).expect("probe walked past the OOM wall");
+        if f.iter().any(|&r| r > threshold) {
+            assert!(
+                f.iter().all(|&r| r < ceiling),
+                "budget crossing too coarse: {f:?}"
+            );
+            return (m, f, frac);
+        }
+        frac *= 0.98;
+    }
+}
+
+/// A composed mid-run dynamics scenario (straggler + jitter + late link
+/// slowdown) with its own RNG stream — the determinism fixture.
+pub fn dynamic_scenario(seed: u64) -> Scenario {
+    Scenario::calm()
+        .with_straggler(1, 1.6, 35)
+        .with_jitter(0.1, 0)
+        .with_link(None, 1.4, 60)
+        .with_seed(seed)
+}
+
+/// Real-PJRT-engine fixtures (the suite is feature-gated; artifacts may
+/// be absent at runtime, in which case tests skip themselves).
+#[cfg(feature = "pjrt")]
+pub mod engine {
+    use timelyfreeze::engine::EngineConfig;
+    use timelyfreeze::freeze::PhaseConfig;
+    use timelyfreeze::types::FreezeMethod;
+
+    /// The artifacts directory, when `tfreeze`'s manifest has been
+    /// built into it.
+    pub fn artifacts() -> Option<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    /// A 4-block / 2-stage / 10-step engine config with no freezing —
+    /// the base every engine test perturbs.
+    pub fn base(dir: std::path::PathBuf) -> EngineConfig {
+        let mut cfg = EngineConfig::quick_defaults(dir);
+        cfg.blocks = 4;
+        cfg.stages = 2;
+        cfg.microbatches = 2;
+        cfg.steps = 10;
+        cfg.phases = PhaseConfig::new(2, 6, 8);
+        cfg.method = FreezeMethod::NoFreezing;
+        cfg
+    }
+}

@@ -4,9 +4,10 @@
 //! and cost profiles (see DESIGN.md S28; the prop framework is
 //! in-repo since proptest is unavailable offline).
 
-mod prop;
+mod common;
 
-use prop::{check, usize_in};
+use common::prop::{check, usize_in};
+use common::random_schedule as random_schedule_in;
 use timelyfreeze::freeze::{
     select_frozen_units, Controller, ModelLayout, PhaseConfig, TimelyFreeze, TimelyFreezeConfig,
 };
@@ -17,10 +18,7 @@ use timelyfreeze::types::{ActionKind, ScheduleKind};
 use timelyfreeze::util::rng::Rng;
 
 fn random_schedule(rng: &mut Rng) -> Schedule {
-    let kind = ScheduleKind::all()[rng.next_below(4) as usize];
-    let ranks = usize_in(rng, 1, 6);
-    let m = usize_in(rng, 1, 10);
-    Schedule::build(kind, ranks, m, Schedule::default_chunks(kind))
+    random_schedule_in(rng, (1, 6), (1, 10))
 }
 
 /// Every randomly-shaped schedule validates and yields an acyclic DAG

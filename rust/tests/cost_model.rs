@@ -8,24 +8,16 @@
 //! 3. edge-weighted longest paths (P2P costs) agree between the CSR
 //!    sweep and the dense reference on every schedule's pipeline DAG.
 
-mod prop;
+mod common;
 
-use prop::{check, usize_in};
+use common::prop::check;
+use common::{binding_budget, preset_layer_stage, random_schedule};
 use timelyfreeze::config::ExperimentConfig;
-use timelyfreeze::cost::{peak_inflight, CostModel, CostProfile, MemoryModel, StageProfile};
+use timelyfreeze::cost::{peak_inflight, CostModel, CostProfile, StageProfile};
 use timelyfreeze::graph::pipeline::PipelineDag;
 use timelyfreeze::lp::{solve_freeze_lp, FreezeLpInput, DEFAULT_LAMBDA};
-use timelyfreeze::partition::balanced_partition;
 use timelyfreeze::schedule::Schedule;
 use timelyfreeze::types::{ActionKind, ScheduleKind};
-use timelyfreeze::util::rng::Rng;
-
-fn random_schedule(rng: &mut Rng) -> (ScheduleKind, Schedule) {
-    let kind = ScheduleKind::all()[rng.next_below(4) as usize];
-    let ranks = usize_in(rng, 2, 5);
-    let m = usize_in(rng, 2, 8);
-    (kind, Schedule::build(kind, ranks, m, Schedule::default_chunks(kind)))
-}
 
 /// Acceptance property 1: the uniform cost preset is the flat-scalar
 /// model of PR 1, bit for bit — same weight vectors, same batch time,
@@ -33,7 +25,8 @@ fn random_schedule(rng: &mut Rng) -> (ScheduleKind, Schedule) {
 #[test]
 fn prop_uniform_profile_bit_identical_to_flat_scalars() {
     check("uniform CostModel == flat scalars", 25, |rng| {
-        let (kind, s) = random_schedule(rng);
+        let s = random_schedule(rng, (2, 5), (2, 8));
+        let kind = s.kind;
         let g = PipelineDag::from_schedule(&s);
         let fwd = rng.range_f64(0.5, 2.0);
         let dgrad = rng.range_f64(0.5, 2.0);
@@ -90,7 +83,7 @@ fn prop_uniform_profile_bit_identical_to_flat_scalars() {
 fn analytic_model_matches_seed_formula() {
     let cfg = ExperimentConfig::paper_preset("llama-8b").unwrap();
     let stages = 4;
-    let layer_stage = balanced_partition(&cfg.model.layer_params(), stages);
+    let layer_stage = preset_layer_stage("llama-8b", stages);
     let cm = CostModel::new(
         &cfg.model,
         &cfg.gpu,
@@ -131,40 +124,15 @@ fn binding_memory_budget_yields_plan_within_budget() {
     for kind in [ScheduleKind::OneFOneB, ScheduleKind::GPipe] {
         let schedule = Schedule::build(kind, cfg.ranks, cfg.microbatches, 1);
         let g = PipelineDag::from_schedule(&schedule);
-        let layer_stage = balanced_partition(&cfg.model.layer_params(), cfg.ranks);
-        let cm = CostModel::new(
-            &cfg.model,
-            &cfg.gpu,
-            &layer_stage,
-            cfg.ranks,
-            cfg.microbatch_size,
-            cfg.seq_len,
-        );
-        let mem = MemoryModel::from_presets(
-            &cfg.model,
-            &cfg.gpu,
-            &layer_stage,
-            cfg.ranks,
-            cfg.microbatch_size,
-            cfg.seq_len,
-            1,
-        );
+        let cm = common::preset_cost("llama-1b", cfg.ranks);
         let inflight = peak_inflight(&schedule);
         // Walk the budget down in fine steps to the first binding floor.
-        let mut frac = 1.0f64;
-        let (mem, floor) = loop {
-            let m = mem.clone().scaled_capacity(frac);
-            let f = m.required_ratios(&inflight).expect("walked past the OOM wall");
-            if f.iter().any(|&r| r > 0.02) {
-                assert!(
-                    f.iter().all(|&r| r < cfg.r_max),
-                    "{}: budget crossing too coarse: {f:?}",
-                    kind.name()
-                );
-                break (m, f);
-            }
-            frac *= 0.98;
-        };
+        let (mem, floor, _) = binding_budget(
+            &common::preset_memory("llama-1b", cfg.ranks, 1),
+            &inflight,
+            0.02,
+            cfg.r_max,
+        );
         let w_min = g.weights(|a| cm.bounds(a).0);
         let w_max = g.weights(|a| cm.bounds(a).1);
         let sol = solve_freeze_lp(
@@ -205,7 +173,8 @@ fn binding_memory_budget_yields_plan_within_budget() {
 #[test]
 fn prop_edge_weighted_sweeps_match_dense() {
     check("csr+edges == dense+edges", 30, |rng| {
-        let (kind, s) = random_schedule(rng);
+        let s = random_schedule(rng, (2, 5), (2, 8));
+        let kind = s.kind;
         let g = PipelineDag::from_schedule(&s);
         let w: Vec<f64> = (0..g.len()).map(|_| rng.range_f64(0.1, 3.0)).collect();
         let link = rng.range_f64(0.0, 1.0);

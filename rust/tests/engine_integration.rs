@@ -6,30 +6,17 @@
 //! behind the `pjrt` feature (see Cargo.toml).
 #![cfg(feature = "pjrt")]
 
+mod common;
+
+use common::engine::{artifacts, base};
 use std::sync::Mutex;
-use timelyfreeze::engine::{train, EngineConfig};
+use timelyfreeze::engine::train;
 
 // Engine tests measure wall-clock and spawn several PJRT clients each;
 // serialize them so concurrent tests don't skew each other's timings.
 static LOCK: Mutex<()> = Mutex::new(());
 use timelyfreeze::freeze::PhaseConfig;
 use timelyfreeze::types::{FreezeMethod, ScheduleKind};
-
-fn artifacts() -> Option<std::path::PathBuf> {
-    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.json").exists().then_some(dir)
-}
-
-fn base(dir: std::path::PathBuf) -> EngineConfig {
-    let mut cfg = EngineConfig::quick_defaults(dir);
-    cfg.blocks = 4;
-    cfg.stages = 2;
-    cfg.microbatches = 2;
-    cfg.steps = 10;
-    cfg.phases = PhaseConfig::new(2, 6, 8);
-    cfg.method = FreezeMethod::NoFreezing;
-    cfg
-}
 
 /// The pipeline partition must not change the math: a 1-stage and a
 /// 2-stage run of the same model produce identical loss curves (same

@@ -11,36 +11,23 @@
 //!    agree even *under* dynamics, because every perturbation is
 //!    counter-seeded rather than event-ordered.
 
+mod common;
+
+use common::{dynamic_scenario, quick_paced};
 use timelyfreeze::config::{ExecMode, ExperimentConfig, Scenario};
-use timelyfreeze::cost::{CostModel, CostProfile};
-use timelyfreeze::freeze::PhaseConfig;
+use timelyfreeze::cost::CostProfile;
 use timelyfreeze::graph::dag::Frontier;
 use timelyfreeze::graph::pipeline::PipelineDag;
-use timelyfreeze::partition::balanced_partition;
 use timelyfreeze::schedule::Schedule;
 use timelyfreeze::sim::{self, EventEngine};
 use timelyfreeze::types::{Action, FreezeMethod, ScheduleKind};
 
-fn preset_cost(stages: usize) -> CostModel {
-    let cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
-    let layer_stage = balanced_partition(&cfg.model.layer_params(), stages);
-    CostModel::new(
-        &cfg.model,
-        &cfg.gpu,
-        &layer_stage,
-        stages,
-        cfg.microbatch_size,
-        cfg.seq_len,
-    )
+fn preset_cost(stages: usize) -> timelyfreeze::cost::CostModel {
+    common::preset_cost("llama-1b", stages)
 }
 
 fn quick(method: FreezeMethod, schedule: ScheduleKind) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
-    cfg.steps = 140;
-    cfg.phases = PhaseConfig::new(10, 30, 50);
-    cfg.method = method;
-    cfg.schedule = schedule;
-    cfg
+    quick_paced("llama-1b", method, schedule, 140, (10, 30, 50))
 }
 
 /// A deterministic per-action freeze-ratio pattern (covers flat and
@@ -148,11 +135,7 @@ fn full_runs_bit_identical_across_executors() {
 /// scenario seed (jitter stream) changes the realization.
 #[test]
 fn seeded_scenario_runs_are_fully_deterministic() {
-    let scenario = Scenario::calm()
-        .with_straggler(1, 1.6, 35)
-        .with_jitter(0.1, 0)
-        .with_link(None, 1.4, 60)
-        .with_seed(11);
+    let scenario = dynamic_scenario(11);
     let mut cfg = quick(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
     cfg.replan_interval = 40;
     cfg.scenario = Some(scenario.clone());

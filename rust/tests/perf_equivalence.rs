@@ -3,38 +3,13 @@
 //! arbitrary DAGs, and warm-started LP re-solves must land on the same
 //! optimum as cold solves across perturbed freeze-LP instances.
 
-mod prop;
+mod common;
 
-use prop::{check, usize_in};
-use timelyfreeze::graph::dag::{Csr, Dag, Evaluator};
-use timelyfreeze::graph::pipeline::{Node, PipelineDag};
+use common::prop::{check, usize_in};
+use common::{random_bounds, random_dag, random_schedule};
+use timelyfreeze::graph::dag::{Csr, Evaluator};
+use timelyfreeze::graph::pipeline::PipelineDag;
 use timelyfreeze::lp::{self, solve_freeze_lp, FreezeLpInput, FreezeLpSolver};
-use timelyfreeze::schedule::Schedule;
-use timelyfreeze::types::{ActionKind, ScheduleKind};
-use timelyfreeze::util::rng::Rng;
-
-/// Random DAG: edges only go from lower to higher ids (guaranteed
-/// acyclic), with duplicate insertions to exercise the dedup pass.
-fn random_dag(rng: &mut Rng) -> Dag<()> {
-    let n = usize_in(rng, 1, 60);
-    let mut g = Dag::new();
-    for _ in 0..n {
-        g.add_node(());
-    }
-    if n >= 2 {
-        let edges = usize_in(rng, 0, 4 * n);
-        for _ in 0..edges {
-            let u = rng.next_below((n - 1) as u64) as usize;
-            let v = u + 1 + rng.next_below((n - u - 1) as u64) as usize;
-            g.add_edge(u, v);
-            if rng.bernoulli(0.2) {
-                g.add_edge(u, v); // duplicate on purpose
-            }
-        }
-    }
-    g.dedup_edges();
-    g
-}
 
 /// CSR start times == dense (Kahn + nested-Vec) start times on random
 /// DAGs and random weights, including scratch-buffer reuse across
@@ -67,10 +42,8 @@ fn prop_csr_evaluator_matches_dense_on_random_dags() {
 #[test]
 fn prop_pipeline_evaluator_matches_dense() {
     check("pipeline evaluator == dense", 40, |rng| {
-        let kind = ScheduleKind::all()[rng.next_below(4) as usize];
-        let ranks = usize_in(rng, 1, 6);
-        let m = usize_in(rng, 1, 8);
-        let s = Schedule::build(kind, ranks, m, Schedule::default_chunks(kind));
+        let s = random_schedule(rng, (1, 6), (1, 8));
+        let kind = s.kind;
         let g = PipelineDag::from_schedule(&s);
         let mut ev = g.evaluator();
         for _ in 0..3 {
@@ -91,41 +64,14 @@ fn prop_pipeline_evaluator_matches_dense() {
     });
 }
 
-fn random_bounds(rng: &mut Rng, g: &PipelineDag) -> (Vec<f64>, Vec<f64>) {
-    let mut w_min = vec![0.0; g.len()];
-    let mut w_max = vec![0.0; g.len()];
-    for (id, node) in g.dag.nodes.iter().enumerate() {
-        if let Node::Act(a) = node {
-            let base = rng.range_f64(0.5, 3.0);
-            match a.kind {
-                ActionKind::Forward | ActionKind::BackwardDgrad => {
-                    w_min[id] = base;
-                    w_max[id] = base;
-                }
-                ActionKind::Backward => {
-                    w_max[id] = base * rng.range_f64(1.5, 3.0);
-                    w_min[id] = base;
-                }
-                ActionKind::BackwardWgrad => {
-                    w_max[id] = base;
-                    w_min[id] = base * rng.range_f64(0.0, 0.2);
-                }
-            }
-        }
-    }
-    (w_min, w_max)
-}
-
 /// A warm-started freeze-LP re-solve returns the same objective (batch
 /// time) as a cold solve, across a drifting sequence of perturbed
 /// instances over one DAG — the controller re-plan pattern.
 #[test]
 fn prop_warm_lp_matches_cold_across_perturbations() {
     check("warm LP == cold LP", 12, |rng| {
-        let kind = ScheduleKind::all()[rng.next_below(4) as usize];
-        let ranks = usize_in(rng, 2, 4);
-        let m = usize_in(rng, 2, 6);
-        let s = Schedule::build(kind, ranks, m, Schedule::default_chunks(kind));
+        let s = random_schedule(rng, (2, 4), (2, 6));
+        let kind = s.kind;
         let g = PipelineDag::from_schedule(&s);
         let (w_min, mut w_max) = random_bounds(rng, &g);
         let mut solver = FreezeLpSolver::new();

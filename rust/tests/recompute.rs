@@ -1,0 +1,392 @@
+//! Acceptance properties of activation recomputation as a first-class
+//! memory policy (seeded, dependency-free — see `common/prop.rs`):
+//!
+//! 1. **Off is today** — with `RecomputePolicy::Off` (and with `Auto`
+//!    resolving to no recomputation), whole simulated runs are
+//!    bit-identical to the pre-policy behavior across all four
+//!    schedules, and LP solutions with a zero surcharge are bit-equal
+//!    to surcharge-free solves.
+//! 2. **Auto never loses to Off** — across a budget sweep, wherever the
+//!    freeze-only floor is feasible the auto plan solves to the same
+//!    (never higher) LP objective; past the freeze-only wall auto keeps
+//!    producing feasible plans (recompute covers the deficit).
+//! 3. **Memory feasibility** — recompute plans fit their budgeted
+//!    capacity under the *scaled* activation accounting.
+//! 4. **Executor equivalence** — the analytic sweep and the event
+//!    engine stay bit-identical with surcharges on, and the baked-cost
+//!    path (`CostModel::with_recompute_fractions`) equals the LP-side
+//!    path (`FreezeLpInput::with_recompute`) bit for bit.
+
+mod common;
+
+use common::prop::check;
+use common::{preset_cost, preset_layer_stage, preset_memory, quick_paced, random_schedule};
+use timelyfreeze::config::{ExecMode, ExperimentConfig};
+use timelyfreeze::cost::{memory_plan_for, peak_inflight, RecomputePolicy};
+use timelyfreeze::graph::pipeline::PipelineDag;
+use timelyfreeze::lp::{solve_freeze_lp, FreezeLpInput, FreezeLpSolver, DEFAULT_LAMBDA};
+use timelyfreeze::schedule::Schedule;
+use timelyfreeze::sim::{self, SimResult};
+use timelyfreeze::types::{FreezeMethod, ScheduleKind};
+
+fn quick(schedule: ScheduleKind, preset: &str) -> ExperimentConfig {
+    quick_paced(preset, FreezeMethod::TimelyFreeze, schedule, 120, (10, 30, 50))
+}
+
+fn assert_bit_identical(a: &SimResult, b: &SimResult, label: &str) {
+    assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "{label}: throughput");
+    assert_eq!(
+        a.steady_throughput.to_bits(),
+        b.steady_throughput.to_bits(),
+        "{label}: steady throughput"
+    );
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{label}: accuracy");
+    assert_eq!(a.freeze_ratio.to_bits(), b.freeze_ratio.to_bits(), "{label}: freeze ratio");
+    assert_eq!(
+        a.batch_time_final.to_bits(),
+        b.batch_time_final.to_bits(),
+        "{label}: final batch time"
+    );
+    assert_eq!(a.trajectory.len(), b.trajectory.len(), "{label}: trajectory length");
+    for (p, q) in a.trajectory.iter().zip(&b.trajectory) {
+        assert_eq!(p.step_time.to_bits(), q.step_time.to_bits(), "{label}: step time");
+    }
+    for (p, q) in a.gantt_final.iter().zip(&b.gantt_final) {
+        assert_eq!(p.start.to_bits(), q.start.to_bits(), "{label}: gantt start");
+        assert_eq!(p.duration.to_bits(), q.duration.to_bits(), "{label}: gantt duration");
+    }
+}
+
+/// Acceptance criterion: with `--recompute off` (explicitly, or `auto`
+/// resolving to nothing), runs are bit-identical to the pre-policy
+/// behavior — across all four schedules and both model-profile
+/// families, with and without an (ample) memory budget.
+#[test]
+fn recompute_off_and_idle_auto_bit_identical_across_schedules() {
+    for (preset, kinds) in [
+        ("llama-1b", &ScheduleKind::all()[..]),
+        ("convnextv2-l", &[ScheduleKind::OneFOneB][..]),
+    ] {
+        for &kind in kinds {
+            let off = sim::run(&quick(kind, preset)).unwrap();
+            assert!(off.recompute.is_none());
+            // Auto without a budget has no deficit to cover.
+            let mut auto_cfg = quick(kind, preset);
+            auto_cfg.recompute = RecomputePolicy::Auto;
+            let auto = sim::run(&auto_cfg).unwrap();
+            assert!(auto.recompute.is_none());
+            assert_bit_identical(&off, &auto, &format!("{preset}/{} no-budget", kind.name()));
+        }
+    }
+    // With an ample budget the floor machinery engages (constraint [5]
+    // rows exist as all-zero floors) and auto still resolves to zero
+    // recomputation: both policies land on identical floats.
+    for kind in [ScheduleKind::OneFOneB, ScheduleKind::GPipe] {
+        let mut off_cfg = quick(kind, "llama-1b");
+        off_cfg.memory_budget = Some(1.0);
+        let off = sim::run(&off_cfg).unwrap();
+        let mut auto_cfg = off_cfg.clone();
+        auto_cfg.recompute = RecomputePolicy::Auto;
+        let auto = sim::run(&auto_cfg).unwrap();
+        assert!(auto.recompute.is_none());
+        assert_bit_identical(&off, &auto, &format!("llama-1b/{} budget", kind.name()));
+    }
+}
+
+/// The baked-cost path (`CostModel::with_recompute_fractions`) and the
+/// LP-side path (`FreezeLpInput::with_recompute`) produce bit-identical
+/// freeze-LP solutions for random schedules and random fractions — the
+/// contract that lets the simulator bake while `tfreeze lp` and the
+/// fig16 bench grow envelopes at the LP layer.
+#[test]
+fn prop_baked_cost_equals_lp_surcharge_path() {
+    check("baked recompute == LP surcharge", 15, |rng| {
+        let s = random_schedule(rng, (2, 5), (2, 6));
+        let g = PipelineDag::from_schedule(&s);
+        let cost = preset_cost("llama-1b", s.stages);
+        let rho: Vec<f64> = (0..s.stages).map(|_| rng.range_f64(0.0, 1.0)).collect();
+        let r_max = rng.range_f64(0.2, 1.0);
+
+        let baked_cost = cost.clone().with_recompute_fractions(&rho);
+        let baked_min = g.weights(|a| baked_cost.bounds(a).0);
+        let baked_max = g.weights(|a| baked_cost.bounds(a).1);
+        let baked = solve_freeze_lp(&FreezeLpInput::new(
+            &g, &baked_min, &baked_max, r_max, DEFAULT_LAMBDA,
+        ))
+        .map_err(|e| e.to_string())?;
+
+        let w_min = g.weights(|a| cost.bounds(a).0);
+        let w_max = g.weights(|a| cost.bounds(a).1);
+        let sur = cost.recompute_surcharges_for(&rho);
+        let lp_side = solve_freeze_lp(
+            &FreezeLpInput::new(&g, &w_min, &w_max, r_max, DEFAULT_LAMBDA)
+                .with_recompute(&sur),
+        )
+        .map_err(|e| e.to_string())?;
+
+        if baked.batch_time.to_bits() != lp_side.batch_time.to_bits() {
+            return Err(format!(
+                "{}: batch time diverges: {} vs {}",
+                s.kind.name(),
+                baked.batch_time,
+                lp_side.batch_time
+            ));
+        }
+        if baked.p_d_max.to_bits() != lp_side.p_d_max.to_bits()
+            || baked.p_d_min.to_bits() != lp_side.p_d_min.to_bits()
+        {
+            return Err(format!("{}: envelopes diverge", s.kind.name()));
+        }
+        if baked.ratios != lp_side.ratios || baked.w != lp_side.w {
+            return Err(format!("{}: solutions diverge", s.kind.name()));
+        }
+        if baked.iterations != lp_side.iterations {
+            return Err(format!("{}: pivot counts diverge", s.kind.name()));
+        }
+        Ok(())
+    });
+}
+
+/// Acceptance criterion: `recompute=auto` never produces a higher LP
+/// objective than `off` — equal wherever the freeze-only floor is
+/// feasible, and still solvable (memory-feasibly) beyond `off`'s
+/// feasibility wall.
+#[test]
+fn auto_objective_never_above_off_across_budget_sweep() {
+    for kind in [ScheduleKind::OneFOneB, ScheduleKind::GPipe] {
+        let base = quick(kind, "llama-1b");
+        let schedule =
+            Schedule::build(kind, base.ranks, base.microbatches, base.effective_chunks());
+        let pdag = PipelineDag::from_schedule(&schedule);
+        let layer_stage = preset_layer_stage("llama-1b", base.stages());
+        let cost = preset_cost("llama-1b", base.stages());
+        let mem = preset_memory("llama-1b", base.stages(), base.effective_chunks());
+        let inflight = peak_inflight(&schedule);
+        let w_min = pdag.weights(|a| cost.bounds(a).0);
+        let w_max = pdag.weights(|a| cost.bounds(a).1);
+        let mut off_solver = FreezeLpSolver::new();
+        let mut auto_solver = FreezeLpSolver::new();
+        let mut rescued = 0usize;
+        let mut compared = 0usize;
+        let mut frac = 1.0f64;
+        while frac > 0.02 {
+            let mut off_cfg = base.clone();
+            off_cfg.memory_budget = Some(frac);
+            let mut auto_cfg = off_cfg.clone();
+            auto_cfg.recompute = RecomputePolicy::Auto;
+
+            let auto_plan = match memory_plan_for(&auto_cfg, &layer_stage, &schedule) {
+                Ok(p) => p,
+                Err(_) => break, // below even the full-recompute wall
+            };
+            let floor = auto_plan.floor.clone().unwrap();
+            let surcharge =
+                auto_plan.recompute.as_ref().map(|rho| cost.recompute_surcharges_for(rho));
+            let mut input = FreezeLpInput::new(&pdag, &w_min, &w_max, base.r_max, base.lambda);
+            if floor.iter().any(|&r| r > 0.0) {
+                input = input.with_stage_floor(&floor);
+            }
+            if let Some(sur) = &surcharge {
+                input = input.with_recompute(sur);
+            }
+            let auto_sol = auto_solver
+                .solve(&input)
+                .unwrap_or_else(|e| panic!("{}: auto infeasible at {frac}: {e}", kind.name()));
+
+            // Memory feasibility under the scaled activation accounting.
+            let m = mem.clone().scaled_capacity(frac);
+            let m = match &auto_plan.recompute {
+                Some(rho) => m.apply_recompute(rho),
+                None => m,
+            };
+            let ratios = auto_sol.stage_ratios(&pdag);
+            for s in 0..base.stages() {
+                let used = m.stage_bytes(s, inflight[s], ratios[s]);
+                assert!(
+                    used <= m.capacity_bytes[s] + m.train_state_bytes[s] * 1e-5,
+                    "{} frac {frac}: stage {s} uses {used} of {} bytes",
+                    kind.name(),
+                    m.capacity_bytes[s]
+                );
+            }
+
+            match memory_plan_for(&off_cfg, &layer_stage, &schedule) {
+                Ok(off_plan) => {
+                    let off_floor = off_plan.floor.unwrap();
+                    let mut input =
+                        FreezeLpInput::new(&pdag, &w_min, &w_max, base.r_max, base.lambda);
+                    if off_floor.iter().any(|&r| r > 0.0) {
+                        input = input.with_stage_floor(&off_floor);
+                    }
+                    let off_sol = off_solver.solve(&input).unwrap();
+                    assert!(
+                        auto_sol.batch_time <= off_sol.batch_time + 1e-9,
+                        "{} frac {frac}: auto {} worse than off {}",
+                        kind.name(),
+                        auto_sol.batch_time,
+                        off_sol.batch_time
+                    );
+                    compared += 1;
+                }
+                Err(_) => {
+                    // Freeze-only cannot fit; auto just proved it can.
+                    assert!(
+                        auto_plan.recompute.is_some(),
+                        "{} frac {frac}: off infeasible but auto recomputed nothing",
+                        kind.name()
+                    );
+                    rescued += 1;
+                }
+            }
+            frac -= 0.05;
+        }
+        assert!(compared > 0, "{}: sweep never compared the policies", kind.name());
+        let _ = rescued; // the 5% grid usually crosses the wall, but is not guaranteed to
+
+        // The rescue claim, deterministically: walk fine 1% steps to the
+        // *first* budget the freeze-only floor rejects — auto must
+        // resolve it with a nonzero recompute vector (at the crossing
+        // the auto wall `W + (1 − r_max)·T` is still strictly below the
+        // freeze-only wall, so a rescue frac always exists).
+        let mut frac = 1.0f64;
+        let rescue_frac = loop {
+            let mut off_cfg = base.clone();
+            off_cfg.memory_budget = Some(frac);
+            if memory_plan_for(&off_cfg, &layer_stage, &schedule).is_err() {
+                break frac;
+            }
+            frac *= 0.99;
+        };
+        let mut auto_cfg = base.clone();
+        auto_cfg.memory_budget = Some(rescue_frac);
+        auto_cfg.recompute = RecomputePolicy::Auto;
+        let plan = memory_plan_for(&auto_cfg, &layer_stage, &schedule).unwrap_or_else(|e| {
+            panic!(
+                "{}: auto failed to rescue the first freeze-only-infeasible budget \
+                 {rescue_frac}: {e}",
+                kind.name()
+            )
+        });
+        assert!(
+            plan.recompute.expect("rescue must recompute").iter().any(|&r| r > 0.0),
+            "{}: rescue plan recomputed nothing",
+            kind.name()
+        );
+    }
+}
+
+/// Full recompute pays time for memory: lower floors, memory-feasible,
+/// and an LP objective no better than the freeze-only plan at the same
+/// (feasible) budget — the fig16 Pareto shape.
+#[test]
+fn full_recompute_trades_time_for_memory() {
+    let kind = ScheduleKind::GPipe;
+    let base = quick(kind, "llama-1b");
+    let schedule =
+        Schedule::build(kind, base.ranks, base.microbatches, base.effective_chunks());
+    let pdag = PipelineDag::from_schedule(&schedule);
+    let layer_stage = preset_layer_stage("llama-1b", base.stages());
+    let cost = preset_cost("llama-1b", base.stages());
+    let mem = preset_memory("llama-1b", base.stages(), base.effective_chunks());
+    let inflight = peak_inflight(&schedule);
+    let (_, off_floor, frac) = common::binding_budget(&mem, &inflight, 0.02, base.r_max);
+
+    let mut full_cfg = base.clone();
+    full_cfg.memory_budget = Some(frac);
+    full_cfg.recompute = RecomputePolicy::Full;
+    let plan = memory_plan_for(&full_cfg, &layer_stage, &schedule).unwrap();
+    let full_floor = plan.floor.unwrap();
+    for (s, (&f, &o)) in full_floor.iter().zip(&off_floor).enumerate() {
+        assert!(f <= o + 1e-12, "stage {s}: full-recompute floor {f} above freeze-only {o}");
+    }
+    let rho = plan.recompute.unwrap();
+    assert_eq!(rho, vec![1.0; base.stages()]);
+
+    let w_min = pdag.weights(|a| cost.bounds(a).0);
+    let w_max = pdag.weights(|a| cost.bounds(a).1);
+    let sur = cost.recompute_surcharges_for(&rho);
+    let mut input = FreezeLpInput::new(&pdag, &w_min, &w_max, base.r_max, base.lambda);
+    if full_floor.iter().any(|&r| r > 0.0) {
+        input = input.with_stage_floor(&full_floor);
+    }
+    let full_sol = solve_freeze_lp(&input.clone().with_recompute(&sur)).unwrap();
+    let mut off_input = FreezeLpInput::new(&pdag, &w_min, &w_max, base.r_max, base.lambda);
+    if off_floor.iter().any(|&r| r > 0.0) {
+        off_input = off_input.with_stage_floor(&off_floor);
+    }
+    let off_sol = solve_freeze_lp(&off_input).unwrap();
+    assert!(
+        full_sol.batch_time >= off_sol.batch_time - 1e-9,
+        "full recompute cannot be faster than freeze-only at a feasible budget: {} vs {}",
+        full_sol.batch_time,
+        off_sol.batch_time
+    );
+    // Memory-feasible under the fully-scaled accounting.
+    let m = mem.clone().scaled_capacity(frac).apply_recompute(&rho);
+    let ratios = full_sol.stage_ratios(&pdag);
+    for s in 0..base.stages() {
+        let used = m.stage_bytes(s, inflight[s], ratios[s]);
+        assert!(used <= m.capacity_bytes[s] + m.train_state_bytes[s] * 1e-5);
+    }
+}
+
+/// Acceptance criterion: the analytic sweep and the event engine agree
+/// bit-for-bit with surcharges on — recompute rides the same executor
+/// contract as every other duration.
+#[test]
+fn analytic_sweep_equals_event_engine_with_surcharges() {
+    // Unbudgeted full recompute: the surcharge is active on every
+    // backward of every schedule family.
+    for kind in [ScheduleKind::OneFOneB, ScheduleKind::ZeroBubbleV] {
+        let mut event_cfg = quick(kind, "llama-1b");
+        event_cfg.recompute = RecomputePolicy::Full;
+        let mut fast_cfg = event_cfg.clone();
+        fast_cfg.exec = ExecMode::Analytic;
+        let event = sim::run(&event_cfg).unwrap();
+        let fast = sim::run(&fast_cfg).unwrap();
+        assert_eq!(event.recompute, Some(vec![1.0; event_cfg.stages()]));
+        assert_bit_identical(&event, &fast, &format!("full/{}", kind.name()));
+        // And the surcharge genuinely slows the run.
+        let off = sim::run(&quick(kind, "llama-1b")).unwrap();
+        assert!(
+            event.batch_time_nofreeze > off.batch_time_nofreeze,
+            "{}: surcharge did not reach execution",
+            kind.name()
+        );
+    }
+    // Budgeted auto past the freeze-only wall: the rescue path, under
+    // both executors.
+    let kind = ScheduleKind::GPipe;
+    let base = quick(kind, "llama-1b");
+    let schedule =
+        Schedule::build(kind, base.ranks, base.microbatches, base.effective_chunks());
+    let mem = preset_memory("llama-1b", base.stages(), base.effective_chunks());
+    let inflight = peak_inflight(&schedule);
+    // Fine 1% steps: the floor>r_max window before the OOM wall is only
+    // (1 − r_max)·T wide, and a coarse probe would jump past it.
+    let mut frac = 1.0f64;
+    loop {
+        match mem.clone().scaled_capacity(frac).required_ratios(&inflight) {
+            Ok(f) if f.iter().any(|&r| r > base.r_max) => break,
+            Ok(_) => frac *= 0.99,
+            Err(e) => panic!("walked past the OOM wall: {e}"),
+        }
+    }
+    let mut event_cfg = base.clone();
+    event_cfg.memory_budget = Some(frac);
+    event_cfg.recompute = RecomputePolicy::Auto;
+    let mut fast_cfg = event_cfg.clone();
+    fast_cfg.exec = ExecMode::Analytic;
+    let event = sim::run(&event_cfg).unwrap();
+    let fast = sim::run(&fast_cfg).unwrap();
+    let rho = event.recompute.clone().expect("auto must recompute past the wall");
+    assert!(rho.iter().any(|&r| r > 0.0));
+    assert_bit_identical(&event, &fast, "auto/gpipe rescue");
+    // The same budget with recompute off is a clean error, not a run.
+    let mut off_cfg = base;
+    off_cfg.memory_budget = Some(frac);
+    assert!(matches!(
+        sim::run(&off_cfg),
+        Err(timelyfreeze::sim::SimError::InfeasibleMemoryBudget(_))
+    ));
+}

@@ -1,0 +1,139 @@
+//! Direct coverage of the scenario mini-language parser
+//! (`config/scenario.rs`): parse → `Display` → parse round-trips, the
+//! randomized spec generator, and the exact error messages malformed
+//! specs produce.
+
+mod common;
+
+use common::prop::{check, usize_in};
+use timelyfreeze::config::{LinkSlowdown, Scenario, Straggler};
+
+/// Every spec the docs advertise round-trips: parse → Display → parse
+/// lands on an identical scenario (label included — Display *is* the
+/// spec).
+#[test]
+fn documented_specs_round_trip() {
+    for spec in [
+        "calm",
+        "straggler:1x1.5",
+        "straggler:1x1.5@300",
+        "jitter:0.1",
+        "jitter:0.05@40",
+        "link:2.0",
+        "link:0x4.0@100",
+        "seed:7",
+        "straggler:2x2.0@250,jitter:0.05",
+        "straggler:2x1.5@300, jitter:0.05, link:0x4.0@100, seed:7",
+        "straggler:0x1.25,straggler:3x2.5@10,link:1.5,link:2x3.0@5",
+    ] {
+        let parsed = Scenario::parse(spec).unwrap_or_else(|e| panic!("'{spec}': {e}"));
+        let displayed = parsed.to_string();
+        assert_eq!(displayed, spec.trim(), "Display must echo the spec");
+        let reparsed = Scenario::parse(&displayed).unwrap();
+        assert_eq!(reparsed, parsed, "'{spec}' did not round-trip");
+    }
+}
+
+/// Randomized round-trip: compose a scenario from random terms, format
+/// the canonical spec, and parse it back — every field must survive.
+#[test]
+fn prop_random_specs_round_trip() {
+    check("scenario spec round-trip", 40, |rng| {
+        let mut terms: Vec<String> = Vec::new();
+        let mut expect = Scenario::calm();
+        for _ in 0..usize_in(rng, 0, 3) {
+            let rank = usize_in(rng, 0, 7);
+            // Shortest-round-trip float formatting guarantees the
+            // factor survives the string form exactly.
+            let factor = (rng.range_f64(0.5, 4.0) * 100.0).round() / 100.0;
+            let onset = usize_in(rng, 0, 500);
+            terms.push(format!("straggler:{rank}x{factor}@{onset}"));
+            expect = expect.with_straggler(rank, factor, onset);
+        }
+        if rng.bernoulli(0.5) {
+            let sigma = (rng.range_f64(0.01, 0.5) * 1000.0).round() / 1000.0;
+            let onset = usize_in(rng, 0, 100);
+            terms.push(format!("jitter:{sigma}@{onset}"));
+            expect = expect.with_jitter(sigma, onset);
+        }
+        for _ in 0..usize_in(rng, 0, 2) {
+            let factor = (rng.range_f64(1.1, 8.0) * 10.0).round() / 10.0;
+            let onset = usize_in(rng, 0, 200);
+            if rng.bernoulli(0.5) {
+                let boundary = usize_in(rng, 0, 6);
+                terms.push(format!("link:{boundary}x{factor}@{onset}"));
+                expect = expect.with_link(Some(boundary), factor, onset);
+            } else {
+                terms.push(format!("link:{factor}@{onset}"));
+                expect = expect.with_link(None, factor, onset);
+            }
+        }
+        if rng.bernoulli(0.5) {
+            let seed = rng.next_below(1 << 20);
+            terms.push(format!("seed:{seed}"));
+            expect = expect.with_seed(seed);
+        }
+        let spec = terms.join(",");
+        let expect = expect.relabel(&spec);
+        let parsed = Scenario::parse(&spec).map_err(|e| format!("'{spec}': {e}"))?;
+        if parsed != expect {
+            return Err(format!("'{spec}': parsed {parsed:?}, expected {expect:?}"));
+        }
+        // And through Display a second time.
+        let reparsed = Scenario::parse(&parsed.to_string()).map_err(|e| e.to_string())?;
+        if reparsed != parsed {
+            return Err(format!("'{spec}': second round-trip diverged"));
+        }
+        Ok(())
+    });
+}
+
+/// Structured fields land where the spec says they do.
+#[test]
+fn parsed_terms_populate_the_right_fields() {
+    let sc = Scenario::parse("straggler:2x1.5@300,jitter:0.05@10,link:0x4.0@100,seed:7").unwrap();
+    assert_eq!(sc.stragglers, vec![Straggler { rank: 2, factor: 1.5, onset: 300 }]);
+    assert_eq!(sc.jitter_sigma, 0.05);
+    assert_eq!(sc.jitter_onset, 10);
+    assert_eq!(
+        sc.links,
+        vec![LinkSlowdown { boundary: Some(0), factor: 4.0, onset: 100 }]
+    );
+    assert_eq!(sc.seed, 7);
+    // An empty spec (or stray commas) is calm.
+    let calm = Scenario::parse(" , ,calm, ").unwrap();
+    assert!(calm.is_identity());
+}
+
+/// Malformed specs are rejected with messages that name the offending
+/// term and the expected shape — the contract the CLI and TOML layers
+/// surface verbatim.
+#[test]
+fn malformed_specs_name_the_offence() {
+    for (spec, needle) in [
+        ("warp:9", "unknown scenario term 'warp:9'"),
+        ("wibble", "unknown scenario term 'wibble'"),
+        ("straggler:1.5", "wants <rank>x<factor>[@onset]"),
+        ("straggler:ax2", "bad straggler rank in 'straggler:ax2'"),
+        ("straggler:1x-2", "bad factor in 'straggler:1x-2'"),
+        ("straggler:1x2@x", "bad onset step"),
+        ("jitter:-0.1", "bad jitter sigma in 'jitter:-0.1'"),
+        ("jitter:lots", "bad jitter sigma in 'jitter:lots'"),
+        ("link:0x", "bad factor in 'link:0x'"),
+        ("link:axb", "bad link boundary in 'link:axb'"),
+        ("link:0x0", "bad factor in 'link:0x0'"),
+        ("seed:x", "bad scenario seed in 'seed:x'"),
+        ("straggler:", "wants <rank>x<factor>[@onset]"),
+    ] {
+        let err = Scenario::parse(spec).expect_err(spec);
+        assert!(
+            err.contains(needle),
+            "'{spec}': error '{err}' does not mention '{needle}'"
+        );
+    }
+    // The unknown-term message teaches the full grammar.
+    let err = Scenario::parse("warp:9").unwrap_err();
+    for fragment in ["straggler:<rank>x<factor>[@onset]", "jitter:<sigma>[@onset]", "seed:<n>"] {
+        assert!(err.contains(fragment), "grammar hint missing '{fragment}': {err}");
+    }
+}

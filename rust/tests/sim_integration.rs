@@ -1,21 +1,11 @@
 //! Integration tests over the simulator: cross-method and cross-schedule
 //! invariants that mirror the paper's headline claims at reduced scale.
 
-use timelyfreeze::config::ExperimentConfig;
-use timelyfreeze::freeze::PhaseConfig;
+mod common;
+
+use common::{quick, quick_paced};
 use timelyfreeze::sim;
 use timelyfreeze::types::{FreezeMethod, ScheduleKind};
-
-fn quick(preset: &str, method: FreezeMethod, schedule: ScheduleKind) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::paper_preset(preset).unwrap();
-    cfg.steps = 160;
-    cfg.phases = PhaseConfig::new(12, 36, 60);
-    cfg.apf.check_interval = 6;
-    cfg.auto.check_interval = 6;
-    cfg.method = method;
-    cfg.schedule = schedule;
-    cfg
-}
 
 /// Headline claim: TimelyFreeze improves throughput over the no-freezing
 /// baseline on every schedule while keeping the accuracy proxy within
@@ -153,11 +143,13 @@ fn rmax_monotone_throughput() {
 #[test]
 fn convnext_time_partitioning_helps() {
     use timelyfreeze::partition::PartitionMethod;
-    let mut cfg = ExperimentConfig::paper_preset("convnextv2-l").unwrap();
-    cfg.steps = 120;
-    cfg.phases = PhaseConfig::new(10, 30, 50);
-    cfg.method = FreezeMethod::NoFreezing;
-    cfg.schedule = ScheduleKind::OneFOneB;
+    let cfg = quick_paced(
+        "convnextv2-l",
+        FreezeMethod::NoFreezing,
+        ScheduleKind::OneFOneB,
+        120,
+        (10, 30, 50),
+    );
     let by_param = sim::run_with_partition(&cfg, PartitionMethod::Parameter).unwrap();
     let by_time = sim::run_with_partition(&cfg, PartitionMethod::Time).unwrap();
     assert!(
