@@ -25,6 +25,7 @@ use timelyfreeze::metrics::Recorder;
 use timelyfreeze::sim;
 use timelyfreeze::types::{FreezeMethod, ScheduleKind};
 use timelyfreeze::util::json::Json;
+use timelyfreeze::util::stats;
 use timelyfreeze::util::table::Table;
 
 fn main() {
@@ -67,6 +68,8 @@ fn main() {
             "Plan gap static",
             "Plan gap replan",
             "Replans",
+            "Replan p50",
+            "Replan p95",
         ],
     );
     let tokens = base.tokens_per_step() as f64;
@@ -89,6 +92,11 @@ fn main() {
         let recovery = 100.0
             * (replan_run.steady_throughput - static_run.steady_throughput)
             / static_run.steady_throughput;
+        // Per-replan latency (profile distillation + warm LP re-solve):
+        // the "cheap enough to re-solve online" claim as an artifact.
+        let lat = &replan_run.replan_latency_s;
+        let lat_p50 = stats::percentile(lat, 50.0);
+        let lat_p95 = stats::percentile(lat, 95.0);
         t.row(vec![
             sc.to_string(),
             format!("{:.0}", static_run.steady_throughput),
@@ -97,6 +105,8 @@ fn main() {
             format!("{:+.2}%", gap(&static_run)),
             format!("{:+.2}%", gap(&replan_run)),
             format!("{}", replan_run.replans),
+            format!("{:.1}µs", lat_p50 * 1e6),
+            format!("{:.1}µs", lat_p95 * 1e6),
         ]);
         rec.push(
             "fig17_dynamics",
@@ -108,6 +118,8 @@ fn main() {
                 ("static_plan_gap_pct", Json::num(gap(&static_run))),
                 ("replan_plan_gap_pct", Json::num(gap(&replan_run))),
                 ("replans", Json::num(replan_run.replans as f64)),
+                ("replan_latency_p50_s", Json::num(lat_p50)),
+                ("replan_latency_p95_s", Json::num(lat_p95)),
                 ("static_acc", Json::num(static_run.accuracy)),
                 ("replan_acc", Json::num(replan_run.accuracy)),
             ]),

@@ -7,7 +7,7 @@
 use timelyfreeze::bench_support::{bench_auto, header, write_json_if_requested, BenchResult};
 use timelyfreeze::config::ExperimentConfig;
 use timelyfreeze::graph::pipeline::PipelineDag;
-use timelyfreeze::lp::{solve_freeze_lp, FreezeLpInput, FreezeLpSolver};
+use timelyfreeze::lp::{solve_freeze_lp, FreezeLpInput, FreezeLpSolver, SolvePath};
 use timelyfreeze::schedule::Schedule;
 use timelyfreeze::sim;
 use timelyfreeze::types::{FreezeMethod, ScheduleKind};
@@ -74,26 +74,130 @@ fn main() {
         ));
     }
 
-    // Warm-started re-solve: the per-check-interval controller pattern —
-    // same DAG, slightly perturbed bounds, previous basis reused.
+    // Warm vs incremental re-solves: the per-check-interval controller
+    // pattern — same DAG, previous solver state reused. Bound drift on
+    // freezable nodes moves the budget rows' δ coefficients (a matrix
+    // change), forcing the warm Gauss-Jordan realization; budget-only
+    // drift moves RHS entries alone, so the stored tableau is patched
+    // through the basis inverse (dual simplex / phase 2, no
+    // realization). The gap between the two entries is the tentpole's
+    // measured win.
     {
         let sched = Schedule::build(ScheduleKind::OneFOneB, 8, 16, 1);
         let pdag = PipelineDag::from_schedule(&sched);
-        let w_max = pdag.weights(|a| if a.kind.freezable() { 2.0 } else { 1.0 });
+        let base_max = pdag.weights(|a| if a.kind.freezable() { 2.0 } else { 1.0 });
         let w_min = pdag.weights(|a| if a.kind.freezable() { 0.9 } else { 1.0 });
+        let mut w_max = base_max.clone();
         let mut solver = FreezeLpSolver::new();
         let mut round = 0u64;
-        // Prime the basis with one cold solve outside the timed loop.
+        // Prime the state with one cold solve outside the timed loop.
         solver.solve(&FreezeLpInput::new(&pdag, &w_min, &w_max, 0.8, 1e-4)).unwrap();
         record(bench_auto("lp_resolve_warm/1f1b_8x16", 1.0, || {
-            // Nudge the budget each round so the re-solve is not a pure
-            // no-op, like a controller tracking drifting measurements.
+            // Jitter the measured upper bounds ±1%: δ moves, the matrix
+            // changes, and the solver realizes the basis anew each time.
+            round += 1;
+            let jitter = 1.0 + 0.01 * ((round % 8) as f64 - 3.5) / 3.5;
+            for (w, b) in w_max.iter_mut().zip(&base_max) {
+                if *b > 1.0 {
+                    *w = b * jitter;
+                }
+            }
+            let sol = solver
+                .solve(&FreezeLpInput::new(&pdag, &w_min, &w_max, 0.8, 1e-4))
+                .unwrap();
+            std::hint::black_box(sol.batch_time);
+        }));
+        // δ drift must never be patched through the stored tableau
+        // (the occasional bound move that breaks basis feasibility
+        // falls through to cold — same order of cost).
+        assert_ne!(
+            solver.last_solve_path(),
+            Some(SolvePath::Incremental),
+            "bound drift must not take the incremental rung"
+        );
+
+        // Budget-only drift: RHS entries move, the matrix does not —
+        // the incremental rung patches the stored tableau in place.
+        let mut solver = FreezeLpSolver::new();
+        solver.solve(&FreezeLpInput::new(&pdag, &w_min, &base_max, 0.8, 1e-4)).unwrap();
+        let mut round = 0u64;
+        record(bench_auto("lp_resolve_incremental/1f1b_8x16", 1.0, || {
             round += 1;
             let r_max = 0.8 - 0.001 * (round % 8) as f64;
             let sol = solver
-                .solve(&FreezeLpInput::new(&pdag, &w_min, &w_max, r_max, 1e-4))
+                .solve(&FreezeLpInput::new(&pdag, &w_min, &base_max, r_max, 1e-4))
                 .unwrap();
             std::hint::black_box(sol.batch_time);
+        }));
+        // The incremental claims, checked on a fresh ladder (the timed
+        // loop above may legitimately end on a periodic-refactorization
+        // solve): budget drift stays on the incremental rung, and an
+        // unchanged re-solve certifies optimality in ~zero pivots.
+        let mut fresh = FreezeLpSolver::new();
+        fresh.solve(&FreezeLpInput::new(&pdag, &w_min, &base_max, 0.8, 1e-4)).unwrap();
+        fresh.solve(&FreezeLpInput::new(&pdag, &w_min, &base_max, 0.79, 1e-4)).unwrap();
+        assert_eq!(
+            fresh.last_solve_path(),
+            Some(SolvePath::Incremental),
+            "budget drift must stay on the incremental rung"
+        );
+        let same =
+            fresh.solve(&FreezeLpInput::new(&pdag, &w_min, &base_max, 0.79, 1e-4)).unwrap();
+        assert_eq!(fresh.last_solve_path(), Some(SolvePath::Incremental));
+        assert!(
+            same.iterations <= 4,
+            "unchanged-problem incremental restart pivoted {} times",
+            same.iterations
+        );
+    }
+
+    // The controller replan loop end to end: observed-profile
+    // distillation → skeleton refresh → (warm/incremental) LP solve →
+    // delta envelope sweeps. This is the hot loop of the online
+    // replanning path (PERF.md §2, fig17).
+    {
+        use timelyfreeze::cost::{CostProfile, StageProfile};
+        use timelyfreeze::freeze::{
+            Controller, ModelLayout, PhaseConfig, TimelyFreeze, TimelyFreezeConfig,
+        };
+        use timelyfreeze::types::ActionKind;
+        let sched = Schedule::build(ScheduleKind::OneFOneB, 4, 8, 1);
+        let layout = ModelLayout::uniform(8, 4, 1000, 4);
+        let tf_cfg = TimelyFreezeConfig {
+            phases: PhaseConfig::new(10, 30, 50),
+            r_max: 0.8,
+            lambda: 1e-4,
+        };
+        let mut tf = TimelyFreeze::new(tf_cfg, &sched, layout);
+        // Synthetic monitoring: forward 1, backward 2 unfrozen / 0.8
+        // frozen — the timely.rs test fixture.
+        for t in 1..=30 {
+            let plan = tf.plan(t);
+            for a in sched.all_actions() {
+                let dur = match a.kind {
+                    ActionKind::Forward => 1.0,
+                    _ => 2.0 - plan.ratio_of(&a) * 1.2,
+                };
+                tf.record_time(t, a, dur);
+            }
+        }
+        tf.plan(31); // first LP solve (cold), outside the timed loop
+        let mut round = 0u64;
+        record(bench_auto("replan_loop/llama1b", 1.0, || {
+            // A drifting observed world: stage 2 degrades and recovers,
+            // as a straggler would between check intervals.
+            round += 1;
+            let m = 1.0 + 0.2 * ((round % 16) as f64) / 16.0;
+            let profile = CostProfile::profiled(
+                (0..4)
+                    .map(|s| {
+                        let f = if s == 2 { m } else { 1.0 };
+                        StageProfile::compute(f * 1.0, f * 0.8, f * 1.2)
+                    })
+                    .collect(),
+            );
+            tf.replan_with_profile(&profile);
+            std::hint::black_box(tf.solution().map(|s| s.batch_time));
         }));
     }
 
@@ -114,6 +218,17 @@ fn main() {
     record(bench_auto("sim_run_analytic/llama1b_100steps", 2.0, || {
         std::hint::black_box(sim::run(&cfg).expect("feasible config").throughput);
     }));
+
+    // Shadow-run memo telemetry: visible whenever a trajectory point is
+    // being recorded, so sweep drivers can check the bounded cache
+    // still serves their baseline pattern.
+    if std::env::var("TF_BENCH_JSON").map_or(false, |p| !p.is_empty()) {
+        let (hits, misses, resident) = sim::shadow_memo_stats();
+        println!(
+            "shadow-run memo: {hits} hits / {misses} misses, {resident} resident (cap {})",
+            sim::SHADOW_MEMO_CAP
+        );
+    }
 
     write_json_if_requested("perf_micro", &all);
 }

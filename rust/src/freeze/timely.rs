@@ -80,6 +80,11 @@ pub struct TimelyFreeze {
     /// Peak in-flight microbatches per stage, a schedule constant —
     /// needed to re-derive the floor from a memory model in `replan`.
     inflight: Vec<usize>,
+    /// Reusable per-solve bound buffers: the replan loop refreshes
+    /// these in place instead of allocating two DAG-sized vectors per
+    /// LP solve.
+    scratch_w_min: Vec<f64>,
+    scratch_w_max: Vec<f64>,
     #[allow(dead_code)]
     layout: ModelLayout,
 }
@@ -108,6 +113,8 @@ impl TimelyFreeze {
             recompute_surcharge: None,
             observed: None,
             inflight,
+            scratch_w_min: Vec::new(),
+            scratch_w_max: Vec::new(),
             layout,
         }
     }
@@ -129,6 +136,15 @@ impl TimelyFreeze {
     /// The LP solution (available once t > T_m and `plan` has run).
     pub fn solution(&self) -> Option<&FreezeSolution> {
         self.solution.as_ref()
+    }
+
+    /// Which rung of the LP solver's fallback ladder produced the last
+    /// plan (`None` before the first solve) — incremental tableau
+    /// patch, warm basis realization, or cold two-phase solve. The
+    /// steady-state replan loop is expected to report
+    /// [`SolvePath::Incremental`](crate::lp::SolvePath::Incremental).
+    pub fn last_solve_path(&self) -> Option<crate::lp::SolvePath> {
+        self.solver.last_solve_path()
     }
 
     /// Re-plan from the current monitoring state: re-solves the LP
@@ -270,8 +286,15 @@ impl TimelyFreeze {
     /// controller.
     fn solve(&mut self) {
         let n = self.pdag.len();
-        let mut w_min = vec![0.0f64; n];
-        let mut w_max = vec![0.0f64; n];
+        // Hoisted scratch: the replan loop calls this every interval,
+        // so the two bound vectors live on the controller and are
+        // refreshed in place.
+        let mut w_min = std::mem::take(&mut self.scratch_w_min);
+        let mut w_max = std::mem::take(&mut self.scratch_w_max);
+        w_min.clear();
+        w_min.resize(n, 0.0);
+        w_max.clear();
+        w_max.resize(n, 0.0);
         if let Some(model) = &self.observed {
             for (id, node) in self.pdag.dag.nodes.iter().enumerate() {
                 if let Node::Act(a) = node {
@@ -281,6 +304,8 @@ impl TimelyFreeze {
                 }
             }
             self.solve_with_bounds(&w_min, &w_max);
+            self.scratch_w_min = w_min;
+            self.scratch_w_max = w_max;
             return;
         }
         for (id, node) in self.pdag.dag.nodes.iter().enumerate() {
@@ -317,6 +342,8 @@ impl TimelyFreeze {
             }
         }
         self.solve_with_bounds(&w_min, &w_max);
+        self.scratch_w_min = w_min;
+        self.scratch_w_max = w_max;
     }
 
     /// Run the warm-started LP for explicit per-node bounds and install

@@ -286,7 +286,11 @@ impl<T> Dag<T> {
 /// order cached at build time. This is the hot-path representation: the
 /// builder's nested `Vec`s cost a pointer chase per node and a full Kahn
 /// pass per longest-path query; `Csr` pays for both exactly once.
-#[derive(Clone, Debug, Default)]
+///
+/// Equality compares the frozen adjacency (used as the cache key of the
+/// freeze-LP skeleton, which may only be reused across solves over the
+/// same DAG).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Csr {
     /// `succ_off[i]..succ_off[i+1]` indexes `succ_adj` for node i.
     succ_off: Vec<u32>,
@@ -519,6 +523,243 @@ impl Frontier {
     }
 }
 
+/// Incremental longest-path evaluator: start times stay resident
+/// between sweeps and a change to a few node weights re-relaxes only
+/// the affected CSR frontier instead of re-running the whole forward
+/// sweep — the graph-layer half of the incremental replan fast path.
+///
+/// A full sweep ([`DeltaEvaluator::full`]) primes the state; each
+/// [`DeltaEvaluator::update`] then applies a change set `(node, new
+/// weight)` by marking the changed nodes' successors dirty and pulling
+/// fresh start times in topological-position order, propagating only
+/// where a value actually moved. Results are **bit-identical** to the
+/// full sweep on the same weights: the pull recomputation takes the max
+/// over exactly the same `P_u + w_u (+ e)` candidates the push sweep
+/// folds, and `f64::max` over a fixed candidate set is
+/// order-independent (property-tested in `tests/perf_equivalence.rs`,
+/// including empty and all-node change sets).
+///
+/// Edge costs (CSR edge order, as everywhere) are part of the primed
+/// state; [`DeltaEvaluator::refresh`] is the convenience entry that
+/// diffs a whole new weight vector against the resident one and picks
+/// delta propagation or a full sweep, falling back to the full sweep
+/// when the edge costs changed or the change set is too large for the
+/// frontier walk to win.
+#[derive(Clone, Debug)]
+pub struct DeltaEvaluator {
+    csr: Csr,
+    /// Transposed adjacency: `pred_off[v]..pred_off[v+1]` indexes
+    /// `pred_adj`/`pred_edge` for node v.
+    pred_off: Vec<u32>,
+    pred_adj: Vec<u32>,
+    /// CSR edge id of each predecessor entry (edge-cost lookup).
+    pred_edge: Vec<u32>,
+    /// Topological position of every node (inverse of `csr.topo`).
+    topo_pos: Vec<u32>,
+    /// Resident node weights of the primed state.
+    weights: Vec<f64>,
+    /// Resident edge costs (empty ⇔ free edges).
+    edge_costs: Vec<f64>,
+    /// Resident start times (valid once primed).
+    starts: Vec<f64>,
+    primed: bool,
+    /// Queued-for-recompute marker per node.
+    dirty: Vec<bool>,
+    /// Pending topological positions, smallest first.
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<u32>>,
+    /// Scratch change list for [`DeltaEvaluator::refresh`].
+    changed_scratch: Vec<(usize, f64)>,
+}
+
+impl DeltaEvaluator {
+    /// Build the evaluator (with its predecessor transpose) for a
+    /// frozen CSR. Unprimed until the first [`DeltaEvaluator::full`].
+    pub fn new(csr: &Csr) -> DeltaEvaluator {
+        let n = csr.len();
+        let ne = csr.edge_count();
+        let mut indeg = vec![0u32; n];
+        for e in 0..ne {
+            indeg[csr.edge_dst(e)] += 1;
+        }
+        let mut pred_off = Vec::with_capacity(n + 1);
+        let mut acc = 0u32;
+        pred_off.push(0u32);
+        for &d in &indeg {
+            acc += d;
+            pred_off.push(acc);
+        }
+        let mut next: Vec<u32> = pred_off[..n].to_vec();
+        let mut pred_adj = vec![0u32; ne];
+        let mut pred_edge = vec![0u32; ne];
+        for u in 0..n {
+            for e in csr.edge_range(u) {
+                let v = csr.edge_dst(e);
+                let slot = next[v] as usize;
+                next[v] += 1;
+                pred_adj[slot] = u as u32;
+                pred_edge[slot] = e as u32;
+            }
+        }
+        let mut topo_pos = vec![0u32; n];
+        for (pos, &u) in csr.topo().iter().enumerate() {
+            topo_pos[u as usize] = pos as u32;
+        }
+        DeltaEvaluator {
+            csr: csr.clone(),
+            pred_off,
+            pred_adj,
+            pred_edge,
+            topo_pos,
+            weights: vec![0.0; n],
+            edge_costs: Vec::new(),
+            starts: vec![0.0; n],
+            primed: false,
+            dirty: vec![false; n],
+            heap: std::collections::BinaryHeap::new(),
+            changed_scratch: Vec::new(),
+        }
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.csr.len()
+    }
+
+    /// Whether the underlying CSR has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.csr.is_empty()
+    }
+
+    /// Whether a full sweep has primed the resident state.
+    pub fn is_primed(&self) -> bool {
+        self.primed
+    }
+
+    /// Start times of the resident state (valid once primed).
+    pub fn starts(&self) -> &[f64] {
+        &self.starts
+    }
+
+    /// Prime (or re-prime) with a full forward sweep under `weights`
+    /// and optional CSR-ordered `edge_costs`. Bit-identical to
+    /// [`Csr::start_times_into`] / [`Csr::start_times_with_edges_into`].
+    pub fn full(&mut self, weights: &[f64], edge_costs: Option<&[f64]>) -> &[f64] {
+        assert_eq!(weights.len(), self.csr.len());
+        self.weights.clear();
+        self.weights.extend_from_slice(weights);
+        match edge_costs {
+            None => {
+                self.edge_costs.clear();
+                self.csr.start_times_into(weights, &mut self.starts);
+            }
+            Some(ec) => {
+                self.edge_costs.clear();
+                self.edge_costs.extend_from_slice(ec);
+                self.csr.start_times_with_edges_into(weights, ec, &mut self.starts);
+            }
+        }
+        self.dirty.fill(false);
+        self.heap.clear();
+        self.primed = true;
+        &self.starts
+    }
+
+    /// Apply a change set `(node, new weight)` to the primed state,
+    /// re-relaxing start times only over the affected frontier. Entries
+    /// whose weight is unchanged cost nothing; an empty set is free.
+    ///
+    /// Panics if called before [`DeltaEvaluator::full`].
+    pub fn update(&mut self, changed: &[(usize, f64)]) -> &[f64] {
+        assert!(self.primed, "DeltaEvaluator::update before a priming full sweep");
+        for &(u, w) in changed {
+            if self.weights[u] == w {
+                continue;
+            }
+            self.weights[u] = w;
+            // P_u itself is unaffected by w_u; its successors are the
+            // initial frontier.
+            for e in self.csr.edge_range(u) {
+                let v = self.csr.edge_dst(e);
+                if !self.dirty[v] {
+                    self.dirty[v] = true;
+                    self.heap.push(std::cmp::Reverse(self.topo_pos[v]));
+                }
+            }
+        }
+        let edged = !self.edge_costs.is_empty();
+        while let Some(std::cmp::Reverse(pos)) = self.heap.pop() {
+            let v = self.csr.topo()[pos as usize] as usize;
+            if !self.dirty[v] {
+                continue; // stale duplicate
+            }
+            self.dirty[v] = false;
+            // Pull: recompute P_v from scratch over its predecessors
+            // (the same candidates the push sweep folds, so the max is
+            // bit-identical). Every predecessor's position precedes
+            // `pos`, so its value is already final.
+            let mut p = 0.0f64;
+            for k in self.pred_off[v] as usize..self.pred_off[v + 1] as usize {
+                let u = self.pred_adj[k] as usize;
+                let mut cand = self.starts[u] + self.weights[u];
+                if edged {
+                    cand += self.edge_costs[self.pred_edge[k] as usize];
+                }
+                if cand > p {
+                    p = cand;
+                }
+            }
+            if p != self.starts[v] {
+                self.starts[v] = p;
+                for e in self.csr.edge_range(v) {
+                    let s = self.csr.edge_dst(e);
+                    if !self.dirty[s] {
+                        self.dirty[s] = true;
+                        self.heap.push(std::cmp::Reverse(self.topo_pos[s]));
+                    }
+                }
+            }
+        }
+        &self.starts
+    }
+
+    /// Diff a whole new weight vector (and optional edge costs) against
+    /// the resident state and take the cheaper path: delta propagation
+    /// for small change sets, a re-priming full sweep when unprimed,
+    /// when the edge costs moved, or when more than ~1/8 of the nodes
+    /// changed (the frontier walk's bookkeeping stops paying there).
+    pub fn refresh(&mut self, weights: &[f64], edge_costs: Option<&[f64]>) -> &[f64] {
+        let n = self.csr.len();
+        assert_eq!(weights.len(), n);
+        let edges_match = match edge_costs {
+            None => self.edge_costs.is_empty(),
+            Some(ec) => self.edge_costs == ec,
+        };
+        if !self.primed || !edges_match {
+            return self.full(weights, edge_costs);
+        }
+        let mut changed = std::mem::take(&mut self.changed_scratch);
+        changed.clear();
+        let cutoff = (n / 8).max(8);
+        let mut overflow = false;
+        for (i, (&w_new, &w_old)) in weights.iter().zip(&self.weights).enumerate() {
+            if w_new != w_old {
+                if changed.len() >= cutoff {
+                    overflow = true;
+                    break;
+                }
+                changed.push((i, w_new));
+            }
+        }
+        if overflow {
+            self.changed_scratch = changed;
+            return self.full(weights, edge_costs);
+        }
+        self.update(&changed);
+        self.changed_scratch = changed;
+        &self.starts
+    }
+}
+
 /// Reusable longest-path evaluator: a [`Csr`] plus a scratch buffer, so
 /// per-step callers (simulator, LP envelopes, benches) evaluate
 /// `start_times` without allocating or re-sorting.
@@ -727,6 +968,57 @@ mod tests {
         frontier.reset();
         assert_eq!(frontier.completed(), 0);
         assert!(frontier.is_ready(0) && !frontier.is_ready(3));
+    }
+
+    #[test]
+    fn delta_evaluator_matches_full_sweep_on_diamond() {
+        let g = diamond();
+        let csr = Csr::from_dag(&g).unwrap();
+        let mut de = DeltaEvaluator::new(&csr);
+        assert!(!de.is_primed());
+        let w = [1.0, 5.0, 1.0, 2.0];
+        de.full(&w, None);
+        assert_eq!(de.starts(), &g.start_times(&w).unwrap()[..]);
+        // Change the slow branch: only b's descendants re-relax.
+        let w2 = [1.0, 0.5, 1.0, 2.0];
+        de.update(&[(1, 0.5)]);
+        assert_eq!(de.starts(), &g.start_times(&w2).unwrap()[..]);
+        // Empty change set is free and exact.
+        de.update(&[]);
+        assert_eq!(de.starts(), &g.start_times(&w2).unwrap()[..]);
+        // Same-value entries cost nothing.
+        de.update(&[(1, 0.5), (2, 1.0)]);
+        assert_eq!(de.starts(), &g.start_times(&w2).unwrap()[..]);
+        // All-node change set equals a fresh full sweep bit-for-bit.
+        let w3 = [2.0, 1.0, 7.0, 0.5];
+        let changed: Vec<(usize, f64)> = w3.iter().copied().enumerate().collect();
+        de.update(&changed);
+        let mut full = Vec::new();
+        csr.start_times_into(&w3, &mut full);
+        assert_eq!(de.starts(), &full[..]);
+    }
+
+    #[test]
+    fn delta_evaluator_tracks_edge_costs() {
+        let g = diamond();
+        let csr = Csr::from_dag(&g).unwrap();
+        let mut de = DeltaEvaluator::new(&csr);
+        let w = [1.0, 5.0, 1.0, 2.0];
+        let ec = [0.0, 0.0, 0.0, 10.0];
+        de.full(&w, Some(&ec));
+        assert_eq!(de.starts(), &g.start_times_with_edges(&w, &ec).unwrap()[..]);
+        // Weight drift under resident edge costs.
+        let w2 = [1.0, 9.0, 1.0, 2.0];
+        de.update(&[(1, 9.0)]);
+        assert_eq!(de.starts(), &g.start_times_with_edges(&w2, &ec).unwrap()[..]);
+        // refresh() notices changed edge costs and re-primes.
+        let ec2 = [0.0, 0.0, 0.0, 0.0];
+        de.refresh(&w2, Some(&ec2));
+        assert_eq!(de.starts(), &g.start_times_with_edges(&w2, &ec2).unwrap()[..]);
+        // …and diffs weights when they match.
+        let w3 = [1.0, 9.0, 4.0, 2.0];
+        de.refresh(&w3, Some(&ec2));
+        assert_eq!(de.starts(), &g.start_times_with_edges(&w3, &ec2).unwrap()[..]);
     }
 
     #[test]

@@ -5,5 +5,5 @@
 pub mod dag;
 pub mod pipeline;
 
-pub use dag::{Csr, Dag, Evaluator, Frontier};
+pub use dag::{Csr, Dag, DeltaEvaluator, Evaluator, Frontier};
 pub use pipeline::{structural_edges, BatchEvaluator, Node, PipelineDag};

@@ -11,7 +11,7 @@
 //! The same DAG serves three consumers: the LP formulation (§3.2.2), the
 //! discrete-event simulator, and the schedule property tests.
 
-use crate::graph::dag::{Csr, Dag, Evaluator};
+use crate::graph::dag::{Csr, Dag, DeltaEvaluator, Evaluator};
 use crate::schedule::Schedule;
 use crate::types::{Action, ActionKind};
 use std::collections::BTreeMap;
@@ -291,7 +291,7 @@ impl PipelineDag {
     /// callers (simulator, LP envelopes, benches): repeated
     /// `batch_time` / `start_times` with zero allocation.
     pub fn evaluator(&self) -> BatchEvaluator {
-        BatchEvaluator { eval: Evaluator::new(self.csr.clone()), dest: self.dest }
+        BatchEvaluator { eval: Evaluator::new(self.csr.clone()), dest: self.dest, delta: None }
     }
 
     /// Freezable action nodes grouped by stage — the sets `V_s` of
@@ -319,10 +319,19 @@ impl PipelineDag {
 /// Held-across-steps longest-path evaluator for one [`PipelineDag`]:
 /// owns the CSR (schedule-lifetime, cloned once) plus the scratch
 /// buffer, so the per-step `batch_time` is a pure forward sweep.
+///
+/// For callers whose successive weight vectors differ in only a few
+/// entries (the monitored-bounds replan pattern), the delta channel —
+/// [`BatchEvaluator::prime`] then [`BatchEvaluator::update_weights`] —
+/// re-relaxes start times only over the affected CSR frontier and is
+/// bit-identical to the full sweep.
 #[derive(Clone, Debug)]
 pub struct BatchEvaluator {
     eval: Evaluator,
     dest: usize,
+    /// Lazily-built delta-propagation channel (see
+    /// [`DeltaEvaluator`]); `None` until the first [`BatchEvaluator::prime`].
+    delta: Option<DeltaEvaluator>,
 }
 
 impl BatchEvaluator {
@@ -342,6 +351,38 @@ impl BatchEvaluator {
     /// scratch buffer and is valid until the next call.
     pub fn start_times(&mut self, weights: &[f64]) -> &[f64] {
         self.eval.start_times(weights)
+    }
+
+    /// Prime the delta channel with a full sweep under `weights`,
+    /// returning `P_d`. Subsequent [`BatchEvaluator::update_weights`]
+    /// calls then pay only for what changed.
+    pub fn prime(&mut self, weights: &[f64]) -> f64 {
+        if self.delta.is_none() {
+            self.delta = Some(DeltaEvaluator::new(self.eval.csr()));
+        }
+        let delta = self.delta.as_mut().unwrap();
+        delta.full(weights, None)[self.dest]
+    }
+
+    /// Apply a `(node, new weight)` change set to the primed delta
+    /// channel, re-relaxing only the affected frontier, and return the
+    /// updated `P_d`. Bit-identical to a full sweep over the same
+    /// effective weights (including empty and all-node change sets).
+    ///
+    /// Panics if [`BatchEvaluator::prime`] has not run.
+    pub fn update_weights(&mut self, changed: &[(usize, f64)]) -> f64 {
+        let delta = self
+            .delta
+            .as_mut()
+            .expect("BatchEvaluator::update_weights before prime()");
+        delta.update(changed)[self.dest]
+    }
+
+    /// Start times of the primed delta channel (valid after
+    /// [`BatchEvaluator::prime`], updated by
+    /// [`BatchEvaluator::update_weights`]).
+    pub fn delta_starts(&self) -> Option<&[f64]> {
+        self.delta.as_ref().filter(|d| d.is_primed()).map(|d| d.starts())
     }
 }
 
@@ -435,6 +476,40 @@ mod tests {
                     kind.name()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn batch_evaluator_delta_channel_matches_full_sweeps() {
+        for kind in ScheduleKind::all() {
+            let g = build(kind, 4, 8);
+            let mut ev = g.evaluator();
+            assert!(ev.delta_starts().is_none());
+            let w = g.weights(|_| 1.0);
+            let primed = ev.prime(&w);
+            assert_eq!(primed.to_bits(), g.batch_time(&w).to_bits(), "{}", kind.name());
+            // Slow one stage's backwards: only those nodes change.
+            let mut w2 = w.clone();
+            let mut changed = Vec::new();
+            for (id, node) in g.dag.nodes.iter().enumerate() {
+                if let Node::Act(a) = node {
+                    if a.stage == 2 && a.kind.freezable() {
+                        w2[id] = 3.0;
+                        changed.push((id, 3.0));
+                    }
+                }
+            }
+            let dt = ev.update_weights(&changed);
+            assert_eq!(dt.to_bits(), g.batch_time(&w2).to_bits(), "{}", kind.name());
+            assert_eq!(
+                ev.delta_starts().unwrap(),
+                &g.start_times(&w2)[..],
+                "{}",
+                kind.name()
+            );
+            // The empty change set is free and exact.
+            let same = ev.update_weights(&[]);
+            assert_eq!(same.to_bits(), dt.to_bits(), "{}", kind.name());
         }
     }
 

@@ -46,8 +46,11 @@
 //!   the warm-start basis valid (bounds and constants move; the row
 //!   structure does not).
 
+use crate::graph::dag::DeltaEvaluator;
 use crate::graph::pipeline::{Node, PipelineDag};
-use crate::lp::simplex::{self, Basis, Cmp, LpProblem, LpSolution, LpStatus, INF};
+use crate::lp::simplex::{
+    self, Cmp, LpProblem, LpSolution, LpStatus, PersistentSimplex, SolvePath, INF,
+};
 use crate::types::ActionKind;
 
 /// Default tie-breaker weight. The paper only requires λ ≪ 1 so that
@@ -302,51 +305,359 @@ impl std::fmt::Display for FreezeLpError {
 
 impl std::error::Error for FreezeLpError {}
 
-/// Re-usable freeze-LP solver that keeps the previous optimal simplex
-/// basis. Successive freeze-LP instances over the *same* pipeline DAG
-/// differ only in objective coefficients and RHS entries (refreshed
-/// monitoring bounds, a changed `r_max`, a drifting memory floor over
-/// the same binding stages), so a warm-started re-solve converges in a
-/// handful of pivots where a cold solve replays both phases. Falls back
-/// to a cold solve transparently whenever the cached basis no longer
-/// fits — e.g. the floor extension toggling on/off changes the row
-/// count; results are bit-for-bit a valid LP optimum either way.
+/// Re-usable freeze-LP solver for the online replan loop: keeps the
+/// constraint *skeleton*, the realized simplex *tableau*, and the
+/// envelope *start-time state* alive between solves.
+///
+/// Successive freeze-LP instances over the *same* pipeline DAG differ
+/// only in bound/envelope data (refreshed monitoring bounds, a changed
+/// `r_max`, a drifting memory floor over the same binding stages), so a
+/// replan:
+///
+/// * **rewrites** the cached precedence-row skeleton in place — only
+///   RHS, objective, variable-bound, and stage-row δ entries move;
+///   nothing is reallocated (the skeleton rebuilds only when the DAG,
+///   the freezable set, or the floor-row pattern changes);
+/// * **re-solves** through a [`PersistentSimplex`]: a re-solve whose
+///   constraint matrix is unchanged patches through the stored basis
+///   inverse (dual simplex for RHS drift, primal phase 2 for cost
+///   drift, zero pivots on an unchanged problem) and only a δ change
+///   pays the warm Gauss-Jordan realization — the cold two-phase solve
+///   is the last rung of the ladder;
+/// * **re-sweeps** the three longest-path envelopes (chosen durations
+///   plus both eq. 46 envelopes) through [`DeltaEvaluator`] channels
+///   that re-relax only the nodes whose weights moved.
+///
+/// Every fallback is transparent; results are bit-for-bit a valid LP
+/// optimum whichever path ran ([`FreezeLpSolver::last_solve_path`]
+/// reports which one did).
 #[derive(Clone, Debug, Default)]
 pub struct FreezeLpSolver {
-    basis: Option<Basis>,
+    simplex: PersistentSimplex,
+    skel: Option<Skeleton>,
 }
 
 impl FreezeLpSolver {
-    /// A solver with no cached basis (first solve runs cold).
+    /// A solver with no cached state (first solve runs cold).
     pub fn new() -> FreezeLpSolver {
         FreezeLpSolver::default()
     }
 
-    /// Whether the next [`FreezeLpSolver::solve`] will warm-start.
+    /// Whether the next [`FreezeLpSolver::solve`] can reuse the stored
+    /// tableau (incremental or warm-started re-solve).
     pub fn has_warm_basis(&self) -> bool {
-        self.basis.is_some()
+        self.simplex.has_state()
     }
 
-    /// Drop the cached basis (e.g. after the schedule changed shape).
+    /// Which rung of the simplex fallback ladder produced the last
+    /// solution (`None` before the first solve): incremental tableau
+    /// patch, warm basis realization, or cold two-phase solve.
+    pub fn last_solve_path(&self) -> Option<SolvePath> {
+        self.simplex.last_path()
+    }
+
+    /// Drop all cached state (e.g. after the schedule changed shape).
     pub fn reset(&mut self) {
-        self.basis = None;
+        self.simplex.reset();
+        self.skel = None;
     }
 
-    /// Solve `input`, warm-starting from the previous optimal basis when
-    /// one is cached and still fits.
+    /// Solve `input`, reusing the cached skeleton/tableau/envelope state
+    /// where it still fits (see the type docs).
     pub fn solve(&mut self, input: &FreezeLpInput) -> Result<FreezeSolution, FreezeLpError> {
-        let built = build_problem(input)?;
-        let sol: LpSolution = match &self.basis {
-            Some(b) => simplex::solve_from_basis(&built.lp, b),
-            None => simplex::solve(&built.lp),
-        };
+        validate(input)?;
+        let reuse = self.skel.as_ref().map_or(false, |s| s.matches(input));
+        if reuse {
+            self.skel.as_mut().unwrap().refresh(input);
+        } else {
+            self.skel = Some(Skeleton::build(input)?);
+        }
+        let skel = self.skel.as_mut().unwrap();
+        let sol: LpSolution = self.simplex.solve(&skel.built.lp);
         if sol.status != LpStatus::Optimal {
-            self.basis = None;
+            self.reset();
             return Err(FreezeLpError::Solver(sol.status));
         }
-        self.basis = sol.basis.clone();
-        Ok(extract_solution(input, &built, &sol))
+        Ok(skel.extract(input, &sol))
     }
+}
+
+/// The cached constraint skeleton of one (schedule, DAG) — the
+/// assembled [`LpProblem`] plus everything needed to rewrite it in
+/// place for a replan and to read a solution back out incrementally.
+///
+/// The key and the three envelope channels each own a CSR copy (a few
+/// KiB at pipeline sizes): sharing would need `Arc` — controllers are
+/// `Send` — for a structure that is cloned only on skeleton (re)build,
+/// never per replan. Likewise the simplex layer keeps its own row
+/// fingerprint: an O(nnz) memcmp per solve is the price of a
+/// [`PersistentSimplex`] that is safe standalone, not only under this
+/// cache.
+#[derive(Clone, Debug)]
+struct Skeleton {
+    /// Frozen adjacency the skeleton was built for (reuse key).
+    csr: crate::graph::dag::Csr,
+    /// (kind, stage) signature per node (reuse key: identical adjacency
+    /// with different payloads must not alias).
+    node_sig: Vec<(u8, u32)>,
+    /// Freezable mask (`δ_i > 0`) the variable layout was built for.
+    freezable: Vec<bool>,
+    /// Which stages carry a floor row (constraint [5]).
+    floor_pattern: Vec<bool>,
+    /// Freezable node ids per stage (the sets `V_s`), cached once.
+    by_stage: Vec<Vec<usize>>,
+    /// The assembled problem and its read-back maps, rewritten in place
+    /// by [`Skeleton::refresh`].
+    built: BuiltLp,
+    /// Envelope channels: chosen durations, `w_max`, `w_min` (eq. 46).
+    env_w: DeltaEvaluator,
+    env_max: DeltaEvaluator,
+    env_min: DeltaEvaluator,
+}
+
+impl Skeleton {
+    /// Assemble the problem from scratch (the cold path of the input
+    /// layer). `input` must already be validated.
+    fn build(input: &FreezeLpInput) -> Result<Skeleton, FreezeLpError> {
+        let pdag = input.pdag;
+        let built = build_problem(input)?;
+        let node_sig = node_signature(pdag);
+        let freezable: Vec<bool> = built.delta.iter().map(|&d| d > 0.0).collect();
+        let by_stage = pdag.freezable_by_stage();
+        let floor_pattern: Vec<bool> = (0..pdag.stages)
+            .map(|s| {
+                input.r_min.map_or(false, |rmin| rmin[s] > 0.0) && !by_stage[s].is_empty()
+            })
+            .collect();
+        Ok(Skeleton {
+            csr: pdag.csr.clone(),
+            node_sig,
+            freezable,
+            floor_pattern,
+            by_stage,
+            built,
+            env_w: DeltaEvaluator::new(&pdag.csr),
+            env_max: DeltaEvaluator::new(&pdag.csr),
+            env_min: DeltaEvaluator::new(&pdag.csr),
+        })
+    }
+
+    /// Whether this skeleton can be rewritten in place for `input`
+    /// (same DAG, same freezable set, same floor-row pattern — the row
+    /// *structure* is then identical and only data entries move).
+    fn matches(&self, input: &FreezeLpInput) -> bool {
+        let pdag = input.pdag;
+        let n = pdag.len();
+        if n != self.freezable.len()
+            || pdag.stages != self.floor_pattern.len()
+            || pdag.csr != self.csr
+        {
+            return false;
+        }
+        for (id, node) in pdag.dag.nodes.iter().enumerate() {
+            if node_sig_of(node) != self.node_sig[id] {
+                return false;
+            }
+            // Freezability must be judged on the same *effective* bounds
+            // the build uses: the surcharge shifts both bounds equally,
+            // which preserves the range mathematically but not always
+            // bitwise (a huge surcharge can round a tiny range to 0), and
+            // the stored variable layout keys off `δ > 0` exactly.
+            let (mut lo, mut hi) = (input.w_min[id], input.w_max[id]);
+            if let (Some(sur), Node::Act(a)) = (input.recompute, node) {
+                if matches!(a.kind, ActionKind::Backward | ActionKind::BackwardDgrad) {
+                    lo += sur[a.stage];
+                    hi += sur[a.stage];
+                }
+            }
+            if ((hi - lo) > 0.0) != self.freezable[id] {
+                return false;
+            }
+        }
+        for (s, set) in self.by_stage.iter().enumerate() {
+            let wants_floor =
+                input.r_min.map_or(false, |rmin| rmin[s] > 0.0) && !set.is_empty();
+            if wants_floor != self.floor_pattern[s] {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Rewrite the cached problem's data entries for `input`: effective
+    /// bounds, δ, objective, variable boxes, and every row's RHS (plus
+    /// the stage rows' δ coefficients). Preconditions: `input` is
+    /// validated and [`Skeleton::matches`] holds. Every float is
+    /// computed by the same expressions in the same order as
+    /// [`build_problem`], so the rewritten problem is bit-identical to
+    /// a from-scratch build.
+    fn refresh(&mut self, input: &FreezeLpInput) {
+        let pdag = input.pdag;
+        let n = pdag.len();
+        let built = &mut self.built;
+        // Effective duration bounds (recompute surcharge on both bounds
+        // of stash-consuming backwards), reusing the scratch vectors.
+        match input.recompute {
+            None => {
+                built.w_min_eff = None;
+                built.w_max_eff = None;
+            }
+            Some(sur) => {
+                let lo = built.w_min_eff.get_or_insert_with(Vec::new);
+                lo.clear();
+                lo.extend_from_slice(input.w_min);
+                let hi = built.w_max_eff.get_or_insert_with(Vec::new);
+                hi.clear();
+                hi.extend_from_slice(input.w_max);
+                for (id, node) in pdag.dag.nodes.iter().enumerate() {
+                    if let Node::Act(a) = node {
+                        if matches!(a.kind, ActionKind::Backward | ActionKind::BackwardDgrad) {
+                            lo[id] += sur[a.stage];
+                            hi[id] += sur[a.stage];
+                        }
+                    }
+                }
+            }
+        }
+        let w_min: &[f64] = built.w_min_eff.as_deref().unwrap_or(input.w_min);
+        let w_max: &[f64] = built.w_max_eff.as_deref().unwrap_or(input.w_max);
+        // δ in place (same formula and order as the build).
+        built.delta.clear();
+        built.delta.extend((0..n).map(|i| {
+            let range = w_max[i] - w_min[i];
+            if range > 0.0 {
+                1.0 / range
+            } else {
+                0.0
+            }
+        }));
+        // Tie-break scaling, replayed without the intermediate index
+        // vector (identical summation order: ascending i).
+        let mut count = 0usize;
+        let mut range_sum = 0.0f64;
+        for i in 0..n {
+            if built.delta[i] > 0.0 {
+                count += 1;
+                range_sum += w_max[i] - w_min[i];
+            }
+        }
+        let lam = if count == 0 {
+            0.0
+        } else {
+            input.lambda * (range_sum / count as f64) / count as f64
+        };
+        // Objective and variable boxes of the w columns.
+        for i in 0..n {
+            if let Some(wi) = built.w_var[i] {
+                built.lp.c[wi] = -lam * built.delta[i];
+                built.lp.lower[wi] = w_min[i];
+                built.lp.upper[wi] = w_max[i];
+            }
+        }
+        // Precedence-row RHS (rows 0..E in u-major edge order).
+        let mut row = 0usize;
+        let mut eidx = 0usize;
+        for u in 0..n {
+            for _ in &pdag.dag.succs[u] {
+                let ec = input.edge_costs.map_or(0.0, |e| e[eidx]);
+                eidx += 1;
+                built.lp.rows[row].rhs = match built.w_var[u] {
+                    Some(_) => ec,
+                    None => w_max[u] + ec,
+                };
+                row += 1;
+            }
+        }
+        // Stage rows: budget [4] (and floor [5] where present) — δ
+        // coefficients and RHS move, the variable layout does not.
+        for (s, set) in self.by_stage.iter().enumerate() {
+            if set.is_empty() {
+                continue;
+            }
+            let wmax_term: f64 = set.iter().map(|&i| built.delta[i] * w_max[i]).sum::<f64>();
+            let budget = &mut built.lp.rows[row];
+            row += 1;
+            let mut slot = 0usize;
+            for &i in set {
+                if built.w_var[i].is_some() {
+                    budget.coeffs[slot].1 = built.delta[i];
+                    slot += 1;
+                }
+            }
+            debug_assert_eq!(slot, budget.coeffs.len());
+            budget.rhs = wmax_term - input.r_max * set.len() as f64;
+            if self.floor_pattern[s] {
+                let rmin = input.r_min.expect("floor pattern implies r_min");
+                let floor = &mut built.lp.rows[row];
+                row += 1;
+                let mut slot = 0usize;
+                for &i in set {
+                    if built.w_var[i].is_some() {
+                        floor.coeffs[slot].1 = built.delta[i];
+                        slot += 1;
+                    }
+                }
+                debug_assert_eq!(slot, floor.coeffs.len());
+                floor.rhs = wmax_term - rmin[s] * set.len() as f64;
+            }
+        }
+        debug_assert_eq!(row, built.lp.rows.len());
+    }
+
+    /// Read a solved LP back out, sweeping the three envelopes through
+    /// the persistent delta channels (bit-identical to the transient
+    /// sweeps of [`solve_freeze_lp`]).
+    fn extract(&mut self, input: &FreezeLpInput, sol: &LpSolution) -> FreezeSolution {
+        let pdag = input.pdag;
+        let n = pdag.len();
+        let (w_min, w_max) = self.built.bounds(input);
+        let w: Vec<f64> = (0..n)
+            .map(|i| match self.built.w_var[i] {
+                Some(wi) => sol.x[wi].clamp(w_min[i], w_max[i]),
+                None => w_max[i],
+            })
+            .collect();
+        let ratios: Vec<f64> = (0..n)
+            .map(|i| (self.built.delta[i] * (w_max[i] - w[i])).clamp(0.0, 1.0))
+            .collect();
+        let ec = input.edge_costs;
+        let start_times = self.env_w.refresh(&w, ec).to_vec();
+        let batch_time = start_times[pdag.dest];
+        let p_d_max = self.env_max.refresh(w_max, ec)[pdag.dest];
+        let p_d_min = self.env_min.refresh(w_min, ec)[pdag.dest];
+        FreezeSolution {
+            ratios,
+            w,
+            start_times,
+            batch_time,
+            p_d_max,
+            p_d_min,
+            iterations: sol.iterations,
+            recompute_surcharge: input.recompute.map(|s| s.to_vec()),
+        }
+    }
+}
+
+/// (kind, stage) signature of one node (source/dest get sentinel 255).
+fn node_sig_of(node: &Node) -> (u8, u32) {
+    match node {
+        Node::Source => (255, 0),
+        Node::Dest => (255, 1),
+        Node::Act(a) => {
+            let k = match a.kind {
+                ActionKind::Forward => 0u8,
+                ActionKind::Backward => 1,
+                ActionKind::BackwardDgrad => 2,
+                ActionKind::BackwardWgrad => 3,
+            };
+            (k, a.stage as u32)
+        }
+    }
+}
+
+/// Node signatures of a whole DAG (skeleton reuse key).
+fn node_signature(pdag: &PipelineDag) -> Vec<(u8, u32)> {
+    pdag.dag.nodes.iter().map(node_sig_of).collect()
 }
 
 /// Build and solve the freeze LP from scratch. Without a stage floor the
@@ -357,13 +668,21 @@ impl FreezeLpSolver {
 /// [`FreezeLpError::FloorExceedsBudget`] and the LP itself stays
 /// feasible (any per-stage average in `[r_min_s, r_max]` is realizable
 /// within the `[w_min, w_max]` boxes). Controllers that re-solve should
-/// hold a [`FreezeLpSolver`] instead to reuse the optimal basis.
+/// hold a [`FreezeLpSolver`] instead to reuse the skeleton and the
+/// realized tableau; this one-shot entry builds, solves cold, and
+/// sweeps transiently.
 pub fn solve_freeze_lp(input: &FreezeLpInput) -> Result<FreezeSolution, FreezeLpError> {
-    FreezeLpSolver::new().solve(input)
+    let built = build_problem(input)?;
+    let sol = simplex::solve(&built.lp);
+    if sol.status != LpStatus::Optimal {
+        return Err(FreezeLpError::Solver(sol.status));
+    }
+    Ok(extract_solution(input, &built, &sol))
 }
 
 /// The assembled LP plus the variable maps needed to read a solution
 /// back out.
+#[derive(Clone, Debug)]
 struct BuiltLp {
     lp: LpProblem,
     /// Node → `w` column (freezable nodes only).
@@ -387,7 +706,9 @@ impl BuiltLp {
     }
 }
 
-fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
+/// Validate one freeze-LP instance's data without assembling anything —
+/// shared by the from-scratch build and the in-place skeleton refresh.
+fn validate(input: &FreezeLpInput) -> Result<(), FreezeLpError> {
     let pdag = input.pdag;
     let n = pdag.len();
     if input.w_min.len() != n || input.w_max.len() != n {
@@ -407,29 +728,6 @@ fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
             return Err(FreezeLpError::BadRecompute { got: sur.len(), want: pdag.stages });
         }
     }
-    // Effective duration bounds: the recompute surcharge (a partial
-    // forward re-run per stash-consuming backward) grows both bounds of
-    // the stage's Backward / BackwardDgrad nodes. Appending the
-    // surcharge to the caller's bounds here mirrors
-    // `CostModel::bounds` baking it in, bit for bit.
-    let (w_min_eff, w_max_eff) = match input.recompute {
-        None => (None, None),
-        Some(sur) => {
-            let mut lo = input.w_min.to_vec();
-            let mut hi = input.w_max.to_vec();
-            for (id, node) in pdag.dag.nodes.iter().enumerate() {
-                if let Node::Act(a) = node {
-                    if matches!(a.kind, ActionKind::Backward | ActionKind::BackwardDgrad) {
-                        lo[id] += sur[a.stage];
-                        hi[id] += sur[a.stage];
-                    }
-                }
-            }
-            (Some(lo), Some(hi))
-        }
-    };
-    let w_min: &[f64] = w_min_eff.as_deref().unwrap_or(input.w_min);
-    let w_max: &[f64] = w_max_eff.as_deref().unwrap_or(input.w_max);
     if let Some(rmin) = input.r_min {
         if rmin.len() != pdag.stages {
             return Err(FreezeLpError::BadStageFloor {
@@ -456,6 +754,36 @@ fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
             return Err(FreezeLpError::BadEdgeCosts { got: ec.len(), want });
         }
     }
+    Ok(())
+}
+
+fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
+    validate(input)?;
+    let pdag = input.pdag;
+    let n = pdag.len();
+    // Effective duration bounds: the recompute surcharge (a partial
+    // forward re-run per stash-consuming backward) grows both bounds of
+    // the stage's Backward / BackwardDgrad nodes. Appending the
+    // surcharge to the caller's bounds here mirrors
+    // `CostModel::bounds` baking it in, bit for bit.
+    let (w_min_eff, w_max_eff) = match input.recompute {
+        None => (None, None),
+        Some(sur) => {
+            let mut lo = input.w_min.to_vec();
+            let mut hi = input.w_max.to_vec();
+            for (id, node) in pdag.dag.nodes.iter().enumerate() {
+                if let Node::Act(a) = node {
+                    if matches!(a.kind, ActionKind::Backward | ActionKind::BackwardDgrad) {
+                        lo[id] += sur[a.stage];
+                        hi[id] += sur[a.stage];
+                    }
+                }
+            }
+            (Some(lo), Some(hi))
+        }
+    };
+    let w_min: &[f64] = w_min_eff.as_deref().unwrap_or(input.w_min);
+    let w_max: &[f64] = w_max_eff.as_deref().unwrap_or(input.w_max);
 
     // δ_i (reciprocal execution-time range; 0 where unfreezable). The
     // surcharge is additive on both bounds, so the range — and with it

@@ -10,5 +10,6 @@ pub use freeze_lp::{
     DEFAULT_LAMBDA,
 };
 pub use simplex::{
-    solve, solve_from_basis, Basis, Cmp, LpProblem, LpRow, LpSolution, LpStatus, INF,
+    solve, solve_from_basis, Basis, Cmp, LpProblem, LpRow, LpSolution, LpStatus,
+    PersistentSimplex, SolvePath, INF,
 };

@@ -23,6 +23,16 @@
 //! problems. [`solve_from_basis`] warm-starts from a previous optimal
 //! [`Basis`]: re-solves that differ only in a few objective/RHS entries
 //! converge in a handful of pivots instead of replaying both phases.
+//!
+//! [`PersistentSimplex`] goes one step further for the online-replan
+//! loop: it keeps the *realized tableau* alive between solves, so a
+//! re-solve whose constraint matrix is unchanged (only RHS, objective,
+//! or variable bounds drifted) skips even the warm path's O(m³)
+//! Gauss-Jordan realization — the new data patches through the stored
+//! basis inverse in O(m²) and **dual simplex** repairs RHS drift while
+//! primal phase 2 repairs cost drift, with a fallback ladder
+//! (incremental → warm basis → cold) and a periodic refactorization
+//! guard bounding numerical drift.
 
 /// Shorthand for an unbounded variable bound.
 pub const INF: f64 = f64::INFINITY;
@@ -187,6 +197,7 @@ const PRICE_WINDOW: usize = 64;
 /// Basic-value tolerance when validating a warm-started basis.
 const WARM_TOL: f64 = 1e-7;
 
+#[derive(Clone, Debug)]
 struct Tableau {
     /// Dense row-major B⁻¹·A, m × ntot in one allocation.
     a: Vec<f64>,
@@ -298,6 +309,12 @@ impl Tableau {
 
     /// Pivot row `r` on column `j`, updating columns `0..col_limit` of
     /// every row plus the reduced-cost row.
+    ///
+    /// One-shot phase-2 solves pass the structural+slack count (the
+    /// artificial columns are pinned to zero and never read again);
+    /// persistent solves pass `ntot` so the artificial block — which
+    /// holds the running basis inverse `B⁻¹` (see
+    /// [`PersistentSimplex`]) — stays current across pivots.
     fn pivot(&mut self, r: usize, j: usize, col_limit: usize) {
         let ntot = self.ntot;
         let base = r * ntot;
@@ -332,12 +349,20 @@ impl Tableau {
     }
 
     /// One simplex phase: minimize the cost vector already loaded in `d`.
-    /// `col_limit` bounds the columns touched by pricing and pivot
-    /// updates (phase 2 passes the structural+slack count: artificial
-    /// columns are pinned to zero and never read again, so updating them
-    /// is wasted work). Returns Ok(()) at optimality, Err(Unbounded)
-    /// otherwise.
-    fn optimize(&mut self, max_iter: usize, fixed: &[bool], col_limit: usize) -> Result<(), LpStatus> {
+    /// `col_limit` bounds the columns touched by pricing; `update_limit`
+    /// bounds the columns pivots rewrite (one-shot phase 2 passes the
+    /// structural+slack count for both: artificial columns are pinned to
+    /// zero and never read again, so updating them is wasted work —
+    /// persistent solves pass `ntot` as `update_limit` to keep the
+    /// stored basis inverse current). Returns Ok(()) at optimality,
+    /// Err(Unbounded) otherwise.
+    fn optimize(
+        &mut self,
+        max_iter: usize,
+        fixed: &[bool],
+        col_limit: usize,
+        update_limit: usize,
+    ) -> Result<(), LpStatus> {
         let mut stall = 0usize;
         for _ in 0..max_iter {
             self.iterations += 1;
@@ -415,12 +440,137 @@ impl Tableau {
                     self.xval[leaving] = leave_val;
                     self.state[leaving] = bound_hit;
 
-                    self.pivot(r, j, col_limit);
+                    self.pivot(r, j, update_limit);
                     self.basis[r] = j;
                     self.state[j] = VarState::Basic(r);
                     self.xb[r] = entering_value;
                 }
             }
+        }
+        Err(LpStatus::IterationLimit)
+    }
+
+    /// Dual simplex: from a dual-feasible basis (reduced costs already
+    /// loaded and optimal-signed) whose basic values violate their
+    /// bounds — the state an RHS/bound drift leaves a previously optimal
+    /// tableau in — pivot until primal feasibility is restored, keeping
+    /// dual feasibility invariant throughout. Returns Ok(()) when primal
+    /// feasible (the basis is then optimal), `Err(Infeasible)` when a
+    /// violated row admits no entering column (for the *caller* this is
+    /// only a fall-back signal: a pinned artificial on a no-longer-
+    /// redundant row can produce it spuriously, so the persistent solver
+    /// refactorizes rather than trusting the verdict), and
+    /// `Err(IterationLimit)` on a pivot-budget exhaustion.
+    fn dual_optimize(
+        &mut self,
+        max_iter: usize,
+        fixed: &[bool],
+        price_limit: usize,
+        update_limit: usize,
+    ) -> Result<(), LpStatus> {
+        let mut stall = 0usize;
+        for _ in 0..max_iter {
+            // --- leaving row: the basic value most outside its bounds
+            // (Dantzig-style dual pricing; Bland mode takes the first
+            // violating row after a stall, for termination) ---
+            let bland = stall > 2 * (self.m + self.ntot);
+            let mut leave: Option<(usize, f64, bool)> = None; // (row, viol, above_upper)
+            for r in 0..self.m {
+                let b = self.basis[r];
+                let (viol, above) = if self.xb[r] < self.lower[b] - FEAS_TOL {
+                    (self.lower[b] - self.xb[r], false)
+                } else if self.xb[r] > self.upper[b] + FEAS_TOL {
+                    (self.xb[r] - self.upper[b], true)
+                } else {
+                    continue;
+                };
+                if bland {
+                    leave = Some((r, viol, above));
+                    break;
+                }
+                if leave.map_or(true, |(_, v, _)| viol > v) {
+                    leave = Some((r, viol, above));
+                }
+            }
+            let Some((r, _, above_upper)) = leave else {
+                return Ok(()); // primal feasible again
+            };
+            self.iterations += 1;
+
+            // --- dual ratio test over row r ---
+            // The leaving basic must move back onto the violated bound;
+            // an entering nonbasic j qualifies when its admissible move
+            // direction pushes the row the right way, and the winner
+            // minimizes |d_j / α_rj| so every other reduced cost keeps
+            // its optimal sign.
+            let base = r * self.ntot;
+            let mut enter: Option<(usize, f64)> = None; // (col, ratio)
+            for j in 0..price_limit {
+                if fixed[j]
+                    || self.lower[j] == self.upper[j]
+                    || matches!(self.state[j], VarState::Basic(_))
+                {
+                    continue;
+                }
+                let alpha = self.a[base + j];
+                if alpha.abs() <= PIVOT_TOL {
+                    continue;
+                }
+                let free = self.lower[j] == -INF && self.upper[j] == INF;
+                // Admissible: AtLower moves up, AtUpper moves down, free
+                // either way. `above_upper` needs α·Δx_j > 0, the lower
+                // violation needs α·Δx_j < 0.
+                let admissible = match self.state[j] {
+                    VarState::AtLower => free || (above_upper == (alpha > 0.0)),
+                    VarState::AtUpper => above_upper == (alpha < 0.0),
+                    VarState::Basic(_) => false,
+                };
+                if !admissible {
+                    continue;
+                }
+                let ratio = (self.d[j] / alpha).abs();
+                if bland {
+                    // Bland mode: smallest admissible index wins.
+                    enter = Some((j, ratio));
+                    break;
+                }
+                let better = match enter {
+                    None => true,
+                    Some((je, best)) => {
+                        ratio < best - OPT_TOL
+                            || (ratio < best + OPT_TOL
+                                && alpha.abs() > self.a[base + je].abs())
+                    }
+                };
+                if better {
+                    enter = Some((j, ratio));
+                }
+            }
+            let Some((j, ratio)) = enter else {
+                return Err(LpStatus::Infeasible);
+            };
+            if ratio <= OPT_TOL {
+                stall += 1;
+            } else {
+                stall = 0;
+            }
+
+            // --- pivot: entering j moves so the leaving basic lands
+            // exactly on its violated bound ---
+            let b = self.basis[r];
+            let alpha = self.a[base + j];
+            let target = if above_upper { self.upper[b] } else { self.lower[b] };
+            let delta = (self.xb[r] - target) / alpha;
+            for i in 0..self.m {
+                self.xb[i] -= self.a[i * self.ntot + j] * delta;
+            }
+            let entering_value = self.xval[j] + delta;
+            self.xval[b] = target;
+            self.state[b] = if above_upper { VarState::AtUpper } else { VarState::AtLower };
+            self.pivot(r, j, update_limit);
+            self.basis[r] = j;
+            self.state[j] = VarState::Basic(r);
+            self.xb[r] = entering_value;
         }
         Err(LpStatus::IterationLimit)
     }
@@ -543,14 +693,17 @@ fn solve_with(p: &LpProblem, warm: Option<&Basis>) -> LpSolution {
     }
 
     if let Some(b) = warm {
-        if let Some(sol) = try_warm(p, b) {
+        if let Some((sol, _)) = try_warm(p, b, false) {
             return sol;
         }
     }
-    solve_cold(p)
+    solve_cold(p, false).0
 }
 
-fn solve_cold(p: &LpProblem) -> LpSolution {
+/// Full two-phase cold solve. With `capture`, phase 2 keeps the
+/// artificial block (the basis inverse) current and the live tableau is
+/// returned alongside the solution for [`PersistentSimplex`] reuse.
+fn solve_cold(p: &LpProblem, capture: bool) -> (LpSolution, Option<PersistState>) {
     let n = p.num_vars();
     let m = p.num_rows();
     let Layout { lower, upper, cols, n_struct_slack, ntot } = build_layout(p);
@@ -570,6 +723,7 @@ fn solve_cold(p: &LpProblem) -> LpSolution {
         }
     }
     let mut xb = vec![0.0f64; m];
+    let mut row_sign = vec![1.0f64; m];
     for i in 0..m {
         let mut resid = p.rows[i].rhs;
         for j in 0..n_struct_slack {
@@ -583,6 +737,7 @@ fn solve_cold(p: &LpProblem) -> LpSolution {
                 *v = -*v;
             }
             resid = -resid;
+            row_sign[i] = -1.0;
             // rhs negation is implicit: xb stores the shifted residual.
         }
         let art = n_struct_slack + i;
@@ -635,20 +790,20 @@ fn solve_cold(p: &LpProblem) -> LpSolution {
     let max_iter = 50 * (m + ntot) + 1000;
     let fixed_none = vec![false; ntot];
     // Phase 1 (artificials active: full column range).
-    match t.optimize(max_iter, &fixed_none, ntot) {
+    match t.optimize(max_iter, &fixed_none, ntot, ntot) {
         Ok(()) => {}
         Err(LpStatus::Unbounded) => {
             // Phase-1 objective is bounded below by 0; unbounded is a bug.
             unreachable!("phase-1 cannot be unbounded");
         }
-        Err(s) => return failed(s, n, t.iterations),
+        Err(s) => return (failed(s, n, t.iterations), None),
     }
     let phase1_obj: f64 = (0..m)
         .filter(|&i| t.basis[i] >= n_struct_slack)
         .map(|i| t.xb[i])
         .sum();
     if phase1_obj > 1e-6 {
-        return failed(LpStatus::Infeasible, n, t.iterations);
+        return (failed(LpStatus::Infeasible, n, t.iterations), None);
     }
 
     // Pin artificials to zero so they can never re-enter; drive basic
@@ -689,18 +844,35 @@ fn solve_cold(p: &LpProblem) -> LpSolution {
     t.load_phase2_costs(&p.c);
 
     // Phase 2: artificial columns are fixed at zero and never re-enter;
-    // exclude them from pivot updates entirely.
-    let status = match t.optimize(max_iter, &fixed, n_struct_slack) {
+    // exclude them from pivot updates entirely — unless the tableau is
+    // being captured for persistent reuse, where the artificial block
+    // must stay a live basis inverse.
+    let update_limit = if capture { ntot } else { n_struct_slack };
+    let status = match t.optimize(max_iter, &fixed, n_struct_slack, update_limit) {
         Ok(()) => LpStatus::Optimal,
         Err(s) => s,
     };
-    finish(p, &t, status, n_struct_slack)
+    let sol = finish(p, &t, status, n_struct_slack);
+    let state = (capture && status == LpStatus::Optimal).then(|| PersistState {
+        t,
+        row_sign,
+        fixed,
+        n_struct_slack,
+        rows: fingerprint_rows(p),
+        n,
+    });
+    (sol, state)
 }
 
 /// Attempt a warm-started phase-2-only solve. `None` means the basis is
 /// unusable for this problem and the caller should fall back to a cold
-/// solve.
-fn try_warm(p: &LpProblem, warm: &Basis) -> Option<LpSolution> {
+/// solve. With `capture`, an optimal solve also returns the live
+/// tableau for [`PersistentSimplex`] reuse.
+fn try_warm(
+    p: &LpProblem,
+    warm: &Basis,
+    capture: bool,
+) -> Option<(LpSolution, Option<PersistState>)> {
     let m = p.num_rows();
     let Layout { mut lower, mut upper, cols, n_struct_slack, ntot } = build_layout(p);
     if warm.ntot != ntot
@@ -839,7 +1011,8 @@ fn try_warm(p: &LpProblem, warm: &Basis) -> Option<LpSolution> {
     };
     t.load_phase2_costs(&p.c);
     let max_iter = 50 * (m + ntot) + 1000;
-    let status = match t.optimize(max_iter, &fixed, n_struct_slack) {
+    let update_limit = if capture { ntot } else { n_struct_slack };
+    let status = match t.optimize(max_iter, &fixed, n_struct_slack, update_limit) {
         Ok(()) => LpStatus::Optimal,
         // A genuinely unbounded problem is unbounded from any basis.
         Err(LpStatus::Unbounded) => LpStatus::Unbounded,
@@ -848,7 +1021,281 @@ fn try_warm(p: &LpProblem, warm: &Basis) -> Option<LpSolution> {
         // fresh phase-1 basis (warmth must only affect iteration count).
         Err(_) => return None,
     };
-    Some(finish(p, &t, status, n_struct_slack))
+    let sol = finish(p, &t, status, n_struct_slack);
+    let state = (capture && status == LpStatus::Optimal).then(|| PersistState {
+        t,
+        // The warm realization never sign-flips rows.
+        row_sign: vec![1.0; m],
+        fixed,
+        n_struct_slack,
+        rows: fingerprint_rows(p),
+        n,
+    });
+    Some((sol, state))
+}
+
+/// Structural fingerprint of a problem's rows (sense + exact
+/// coefficients): the matrix-unchanged precondition of the incremental
+/// resolve path.
+fn fingerprint_rows(p: &LpProblem) -> Vec<(Cmp, Vec<(usize, f64)>)> {
+    p.rows.iter().map(|r| (r.cmp, r.coeffs.clone())).collect()
+}
+
+/// Live tableau of the last optimal solve, reusable across re-solves of
+/// the same constraint matrix. The artificial block of `t.a` holds the
+/// current basis inverse (phase 2 ran with `update_limit = ntot`), so a
+/// new RHS patches through it in O(m²) instead of an O(m³) Gauss-Jordan
+/// realization.
+#[derive(Clone, Debug)]
+struct PersistState {
+    t: Tableau,
+    /// ±1 per row: the sign the cold path flipped the row by so phase 1
+    /// could start from a nonnegative identity basis (all +1 after a
+    /// warm realization). New RHS values enter the tableau's row space
+    /// through this sign.
+    row_sign: Vec<f64>,
+    /// Pinned-column mask (artificials fixed at zero after phase 1).
+    fixed: Vec<bool>,
+    n_struct_slack: usize,
+    /// Structural fingerprint the tableau is valid for.
+    rows: Vec<(Cmp, Vec<(usize, f64)>)>,
+    n: usize,
+}
+
+/// Which rung of [`PersistentSimplex::solve`]'s fallback ladder produced
+/// the last solution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolvePath {
+    /// RHS / objective / bound drift patched through the stored basis
+    /// inverse — no Gauss-Jordan realization, dual simplex for RHS
+    /// drift, primal phase 2 for cost drift.
+    Incremental,
+    /// Warm start from the stored basis: one Gauss-Jordan realization,
+    /// then phase 2 alone.
+    WarmBasis,
+    /// Full two-phase cold solve.
+    Cold,
+}
+
+/// Re-solves between adjacent controller replans drift only in RHS /
+/// objective / bound entries every [`REFACTOR_INTERVAL`] solves; the
+/// periodic refactorization bounds f64 error accumulation in the
+/// incrementally-updated tableau (the classic revised-simplex guard).
+const REFACTOR_INTERVAL: usize = 64;
+
+/// Feasibility tolerance the incremental path's solutions must verify
+/// against the *original* problem data before being trusted — the
+/// numerical-drift detector in front of the refactorization fallback.
+const DRIFT_TOL: f64 = 1e-6;
+
+/// A simplex solver that keeps the realized tableau alive between
+/// solves — the warm-start discipline of revised-simplex codes applied
+/// to the controller replan loop.
+///
+/// The fallback ladder of [`PersistentSimplex::solve`]:
+///
+/// 1. **Incremental** — when the constraint matrix is unchanged (same
+///    rows, senses, and coefficients; only RHS, objective, and variable
+///    bounds moved — the replan pattern), the new data is patched
+///    through the stored basis inverse: dual simplex repairs RHS/bound
+///    drift, primal phase 2 repairs cost drift, and an unchanged
+///    problem certifies optimality in zero pivots. Solutions are
+///    verified against the problem before being returned; any doubt
+///    (structural change, singularity, spurious infeasibility verdict,
+///    drift beyond tolerance, pivot-budget exhaustion) falls through.
+/// 2. **Warm basis** — one Gauss-Jordan realization of the stored basis
+///    under the new coefficients, then phase 2 alone
+///    ([`solve_from_basis`] semantics). Also runs every
+///    64th solve as the periodic refactorization
+///    guard.
+/// 3. **Cold** — the full two-phase solve.
+///
+/// Correctness never depends on which rung answered; the ladder only
+/// affects pivot counts. Results are identical to [`solve`] up to LP
+/// degeneracy (alternative optima tie-broken by pivot order).
+#[derive(Clone, Debug, Default)]
+pub struct PersistentSimplex {
+    state: Option<PersistState>,
+    /// Incremental resolves since the last (re)factorization.
+    since_factor: usize,
+    last_path: Option<SolvePath>,
+}
+
+impl PersistentSimplex {
+    /// A solver with no stored tableau (first solve runs cold).
+    pub fn new() -> PersistentSimplex {
+        PersistentSimplex::default()
+    }
+
+    /// Drop the stored tableau (next solve runs cold).
+    pub fn reset(&mut self) {
+        self.state = None;
+        self.since_factor = 0;
+        self.last_path = None;
+    }
+
+    /// Whether a tableau from a previous optimal solve is stored.
+    pub fn has_state(&self) -> bool {
+        self.state.is_some()
+    }
+
+    /// Which ladder rung produced the last solution (`None` before the
+    /// first solve).
+    pub fn last_path(&self) -> Option<SolvePath> {
+        self.last_path
+    }
+
+    /// The stored optimal basis, if any — interchange format with
+    /// [`solve_from_basis`].
+    pub fn basis(&self) -> Option<Basis> {
+        self.state.as_ref().map(|s| s.t.extract_basis(s.n_struct_slack))
+    }
+
+    /// Solve `p`, preferring the cheapest usable rung of the ladder (see
+    /// the type docs). Always returns a correct terminal status; a
+    /// row-bearing solve that terminates non-optimal drops the stored
+    /// state (bound-only solves leave it untouched).
+    pub fn solve(&mut self, p: &LpProblem) -> LpSolution {
+        if p.num_rows() == 0 {
+            // Bound-only problems have no tableau to keep — but any
+            // stored state stays put (the fingerprint already guards it
+            // against reuse on the wrong problem), so interleaving a
+            // row-less solve does not de-warm the ladder.
+            self.last_path = Some(SolvePath::Cold);
+            return solve_with(p, None);
+        }
+        // Rung 1: patch the stored tableau in place.
+        if self.since_factor < REFACTOR_INTERVAL {
+            if let Some(state) = self.state.as_mut() {
+                if let Some(sol) = resolve_incremental(state, p) {
+                    self.since_factor += 1;
+                    self.last_path = Some(SolvePath::Incremental);
+                    return sol;
+                }
+            }
+        }
+        // Rung 2: Gauss-Jordan realization of the stored basis under the
+        // new coefficients (also the periodic refactorization refresh).
+        if let Some(state) = self.state.take() {
+            let basis = state.t.extract_basis(state.n_struct_slack);
+            if let Some((sol, st)) = try_warm(p, &basis, true) {
+                self.state = st;
+                self.since_factor = 0;
+                self.last_path = Some(SolvePath::WarmBasis);
+                return sol;
+            }
+        }
+        // Rung 3: cold two-phase solve.
+        let (sol, st) = solve_cold(p, true);
+        self.state = st;
+        self.since_factor = 0;
+        self.last_path = Some(SolvePath::Cold);
+        sol
+    }
+}
+
+/// The incremental rung: patch `p`'s RHS / objective / bounds through
+/// `state`'s stored tableau and re-optimize without realizing a basis.
+/// `None` means the tableau is unusable for `p` (or numerically in
+/// doubt) and the caller must refactorize; only verified `Optimal`
+/// solutions are returned.
+fn resolve_incremental(state: &mut PersistState, p: &LpProblem) -> Option<LpSolution> {
+    let m = p.num_rows();
+    let n = p.num_vars();
+    if n != state.n || m != state.rows.len() {
+        return None;
+    }
+    for (row, (cmp, coeffs)) in p.rows.iter().zip(&state.rows) {
+        if row.cmp != *cmp || row.coeffs != *coeffs {
+            return None; // matrix changed: the stored B⁻¹A is stale
+        }
+    }
+    let nss = state.n_struct_slack;
+    let t = &mut state.t;
+    let ntot = t.ntot;
+    // New variable bounds (slacks keep [0, ∞), artificials stay pinned).
+    for j in 0..n {
+        if p.lower[j] > p.upper[j] {
+            return None;
+        }
+        t.lower[j] = p.lower[j];
+        t.upper[j] = p.upper[j];
+    }
+    // Re-seat nonbasic variables on the (possibly moved) bounds.
+    for j in 0..nss {
+        if matches!(t.state[j], VarState::Basic(_)) {
+            continue;
+        }
+        let prefer_upper = matches!(t.state[j], VarState::AtUpper);
+        let (st, v) = resting(t.lower[j], t.upper[j], prefer_upper);
+        t.state[j] = st;
+        t.xval[j] = v;
+    }
+    // x_B = B⁻¹b − Σ_{nonbasic j} (B⁻¹A)_j·x̄_j. The artificial block of
+    // the stored tableau *is* B⁻¹ (phase 2 kept it current), modulo the
+    // cold path's row sign flips.
+    for i in 0..t.m {
+        let row = &t.a[i * ntot..(i + 1) * ntot];
+        let mut v = 0.0;
+        for (k, lprow) in p.rows.iter().enumerate() {
+            let binv = row[nss + k];
+            if binv != 0.0 {
+                v += binv * (state.row_sign[k] * lprow.rhs);
+            }
+        }
+        t.xb[i] = v;
+    }
+    for j in 0..nss {
+        if matches!(t.state[j], VarState::Basic(_)) || t.xval[j] == 0.0 {
+            continue;
+        }
+        let v = t.xval[j];
+        for i in 0..t.m {
+            let a = t.a[i * ntot + j];
+            if a != 0.0 {
+                t.xb[i] -= a * v;
+            }
+        }
+    }
+    t.iterations = 0;
+    let max_iter = 50 * (t.m + ntot) + 1000;
+
+    // RHS/bound drift first: if the stored basis went primal
+    // infeasible, dual simplex repairs it while the *stored*
+    // reduced-cost row — dual feasible for the previous objective, kept
+    // exact through every pivot — still guides the ratio test. (When
+    // the objective also moved, the stored row merely guides pivots; a
+    // dual-infeasible guide costs pivot count, never correctness.)
+    let primal_ok = (0..t.m).all(|r| {
+        let b = t.basis[r];
+        t.xb[r] >= t.lower[b] - WARM_TOL && t.xb[r] <= t.upper[b] + WARM_TOL
+    });
+    if !primal_ok {
+        match t.dual_optimize(max_iter, &state.fixed, nss, ntot) {
+            Ok(()) => {}
+            // Never conclude Infeasible/Unbounded from the fast path —
+            // a pinned artificial on a no-longer-redundant row can
+            // produce a spurious verdict. Refactorize and let the full
+            // ladder decide.
+            Err(_) => return None,
+        }
+    }
+    // Cost drift second: fresh reduced costs for the (possibly moved)
+    // objective, then primal phase 2 from the now primal-feasible
+    // basis. An unchanged problem certifies optimality here in zero
+    // pivots.
+    t.load_phase2_costs(&p.c);
+    match t.optimize(max_iter, &state.fixed, nss, ntot) {
+        Ok(()) => {}
+        Err(_) => return None,
+    }
+    let sol = finish(p, t, LpStatus::Optimal, nss);
+    // Numerical-drift guard: the patched tableau must still describe
+    // the problem it claims to solve.
+    if !p.is_feasible(&sol.x, DRIFT_TOL) {
+        return None;
+    }
+    Some(sol)
 }
 
 fn finish(p: &LpProblem, t: &Tableau, status: LpStatus, n_struct_slack: usize) -> LpSolution {
@@ -1164,6 +1611,177 @@ mod tests {
         let sol = solve_from_basis(&p2, &basis);
         assert_eq!(sol.status, LpStatus::Optimal);
         assert!((sol.objective - 0.0).abs() < 1e-9);
+    }
+
+    fn textbook() -> LpProblem {
+        let mut p = LpProblem::new();
+        let x = p.add_var(-3.0, 0.0, INF);
+        let y = p.add_var(-5.0, 0.0, INF);
+        p.add_row(vec![(x, 1.0)], Cmp::Le, 4.0);
+        p.add_row(vec![(y, 2.0)], Cmp::Le, 12.0);
+        p.add_row(vec![(x, 3.0), (y, 2.0)], Cmp::Le, 18.0);
+        p
+    }
+
+    #[test]
+    fn persistent_identical_resolve_is_incremental_and_pivot_free() {
+        let p = textbook();
+        let mut s = PersistentSimplex::new();
+        let cold = s.solve(&p);
+        assert_opt(&cold, -36.0, 1e-7);
+        assert_eq!(s.last_path(), Some(SolvePath::Cold));
+        let again = s.solve(&p);
+        assert_eq!(s.last_path(), Some(SolvePath::Incremental));
+        assert_eq!(again.iterations, 0, "unchanged problem should not pivot");
+        assert_opt(&again, -36.0, 1e-7);
+        // Same vertex; basic values are re-derived through the basis
+        // inverse, so agreement is to rounding, not bitwise.
+        for (a, c) in again.x.iter().zip(&cold.x) {
+            assert!((a - c).abs() < 1e-9, "vertex moved: {a} vs {c}");
+        }
+    }
+
+    #[test]
+    fn persistent_rhs_drift_repairs_via_dual_simplex() {
+        let p = textbook();
+        let mut s = PersistentSimplex::new();
+        s.solve(&p);
+        // Tighten every row: the old vertex (2, 6) is now primal
+        // infeasible, which is exactly the dual-simplex case.
+        let mut p2 = p.clone();
+        p2.rows[0].rhs = 3.0;
+        p2.rows[1].rhs = 8.0;
+        p2.rows[2].rhs = 13.0;
+        let inc = s.solve(&p2);
+        assert_eq!(s.last_path(), Some(SolvePath::Incremental));
+        let cold = solve(&p2);
+        assert_eq!(inc.status, LpStatus::Optimal);
+        assert!(
+            (inc.objective - cold.objective).abs() < 1e-7,
+            "incremental {} vs cold {}",
+            inc.objective,
+            cold.objective
+        );
+        assert!(p2.is_feasible(&inc.x, 1e-7));
+        assert!(inc.iterations <= 6, "dual repair took {} pivots", inc.iterations);
+    }
+
+    #[test]
+    fn persistent_objective_drift_repairs_via_primal_phase2() {
+        let p = textbook();
+        let mut s = PersistentSimplex::new();
+        s.solve(&p);
+        let mut p2 = p.clone();
+        p2.c = vec![-5.0, -1.0]; // optimum moves to (4, 3)
+        let inc = s.solve(&p2);
+        assert_eq!(s.last_path(), Some(SolvePath::Incremental));
+        let cold = solve(&p2);
+        assert!((inc.objective - cold.objective).abs() < 1e-7);
+        assert!(p2.is_feasible(&inc.x, 1e-7));
+    }
+
+    #[test]
+    fn persistent_bound_drift_stays_incremental() {
+        let mut p = LpProblem::new();
+        let x = p.add_var(-1.0, 0.0, 5.0);
+        let y = p.add_var(-1.0, 0.0, 5.0);
+        p.add_row(vec![(x, 1.0), (y, 1.0)], Cmp::Le, 8.0);
+        let mut s = PersistentSimplex::new();
+        s.solve(&p);
+        // Box moves only: coefficients and RHS untouched.
+        let mut p2 = p.clone();
+        p2.upper = vec![2.0, 4.0];
+        p2.lower = vec![0.5, 0.0];
+        let inc = s.solve(&p2);
+        assert_eq!(s.last_path(), Some(SolvePath::Incremental));
+        let cold = solve(&p2);
+        assert!((inc.objective - cold.objective).abs() < 1e-7);
+        assert!(p2.is_feasible(&inc.x, 1e-7));
+    }
+
+    #[test]
+    fn persistent_matrix_change_falls_back_and_stays_correct() {
+        let p = textbook();
+        let mut s = PersistentSimplex::new();
+        s.solve(&p);
+        let mut p2 = p.clone();
+        p2.rows[2].coeffs = vec![(0, 2.0), (1, 2.0)]; // matrix changed
+        let fb = s.solve(&p2);
+        assert_ne!(s.last_path(), Some(SolvePath::Incremental));
+        let cold = solve(&p2);
+        assert_eq!(fb.status, LpStatus::Optimal);
+        assert!((fb.objective - cold.objective).abs() < 1e-7);
+        // A later re-solve of the *new* matrix is incremental again.
+        let again = s.solve(&p2);
+        assert_eq!(s.last_path(), Some(SolvePath::Incremental));
+        assert!((again.objective - cold.objective).abs() < 1e-7);
+    }
+
+    #[test]
+    fn persistent_infeasible_drift_reports_through_the_ladder() {
+        let mut p = LpProblem::new();
+        let x = p.add_var(1.0, 0.0, 1.0);
+        p.add_row(vec![(x, 1.0)], Cmp::Ge, 0.5);
+        let mut s = PersistentSimplex::new();
+        assert_eq!(s.solve(&p).status, LpStatus::Optimal);
+        let mut p2 = p.clone();
+        p2.rows[0].rhs = 2.0; // x ≤ 1 cannot reach 2
+        let sol = s.solve(&p2);
+        assert_eq!(sol.status, LpStatus::Infeasible);
+        assert!(!s.has_state(), "failed solve must drop the stored tableau");
+        // The solver recovers cold on the next feasible problem.
+        let back = s.solve(&p);
+        assert_eq!(back.status, LpStatus::Optimal);
+    }
+
+    #[test]
+    fn persistent_random_rhs_and_objective_drift_matches_cold() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(4242);
+        for case in 0..15 {
+            let nv = 3 + (case % 3);
+            let mut p = LpProblem::new();
+            for _ in 0..nv {
+                p.add_var(rng.range_f64(-2.0, 2.0), 0.0, rng.range_f64(1.0, 5.0));
+            }
+            for _ in 0..nv {
+                let coeffs: Vec<(usize, f64)> =
+                    (0..nv).map(|j| (j, rng.range_f64(-1.0, 2.0))).collect();
+                p.add_row(coeffs, Cmp::Le, rng.range_f64(0.5, 6.0));
+            }
+            let mut s = PersistentSimplex::new();
+            let first = s.solve(&p);
+            assert_eq!(first.status, LpStatus::Optimal, "case {case}");
+            // A drifting sequence over the fixed matrix: every re-solve
+            // must take the incremental rung and match a cold solve.
+            for round in 0..6 {
+                for c in p.c.iter_mut() {
+                    *c += rng.range_f64(-0.1, 0.1);
+                }
+                for row in p.rows.iter_mut() {
+                    row.rhs = (row.rhs + rng.range_f64(-0.3, 0.3)).max(0.1);
+                }
+                for u in p.upper.iter_mut() {
+                    *u = (*u + rng.range_f64(-0.2, 0.2)).max(0.5);
+                }
+                let inc = s.solve(&p);
+                let cold = solve(&p);
+                assert_eq!(cold.status, LpStatus::Optimal, "case {case} round {round}");
+                assert_eq!(inc.status, LpStatus::Optimal, "case {case} round {round}");
+                assert_eq!(
+                    s.last_path(),
+                    Some(SolvePath::Incremental),
+                    "case {case} round {round}"
+                );
+                assert!(
+                    (inc.objective - cold.objective).abs() < 1e-6,
+                    "case {case} round {round}: incremental {} vs cold {}",
+                    inc.objective,
+                    cold.objective
+                );
+                assert!(p.is_feasible(&inc.x, 1e-6), "case {case} round {round}");
+            }
+        }
     }
 
     #[test]

@@ -131,13 +131,17 @@ impl EventEngine {
         }
         let csr = pdag.csr.clone();
         let frontier = Frontier::new(&csr);
+        // Worst case per batch: one Finish per node plus one Arrive per
+        // edge — size the heap once so `execute`'s `clear()` never
+        // reallocates across steps.
+        let queue = EventQueue::with_capacity(n + csr.edge_count());
         EventEngine {
             csr,
             frontier,
             owner,
             ranks,
             dest: pdag.dest,
-            queue: EventQueue::new(),
+            queue,
             ready_at: vec![0.0; n],
             starts: vec![0.0; n],
             executed: 0,

@@ -63,9 +63,26 @@ impl<E> EventQueue<E> {
         EventQueue::default()
     }
 
+    /// An empty queue whose heap can hold `cap` events before
+    /// reallocating — pair with [`EventQueue::clear`] so a
+    /// batch-per-step driver touches the allocator exactly once.
+    pub fn with_capacity(cap: usize) -> EventQueue<E> {
+        EventQueue { heap: BinaryHeap::with_capacity(cap), seq: 0 }
+    }
+
+    /// Number of events the heap can hold without reallocating.
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
+    }
+
     /// Schedule `event` at absolute simulated time `time` (seconds).
     pub fn push(&mut self, time: f64, event: E) {
         assert!(time.is_finite(), "event time must be finite, got {time}");
+        // The FIFO tie-break relies on `seq` strictly increasing; a
+        // wrap would silently reorder same-time events. u64 cannot wrap
+        // in practice (and `clear` restarts it every batch), but guard
+        // the invariant where it would break.
+        debug_assert!(self.seq != u64::MAX, "event sequence counter exhausted");
         let seq = self.seq;
         self.seq += 1;
         self.heap.push(Scheduled { time, seq, event });
@@ -131,6 +148,19 @@ mod tests {
         q.push(2.0, 3);
         assert_eq!(q.pop(), Some((2.0, 2)));
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn clear_keeps_heap_capacity() {
+        let mut q = EventQueue::with_capacity(64);
+        let cap = q.capacity();
+        assert!(cap >= 64);
+        for i in 0..32 {
+            q.push(i as f64, i);
+        }
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.capacity(), cap, "clear must not shrink the heap");
     }
 
     #[test]

@@ -16,6 +16,6 @@ pub use crate::cost::CostModel;
 pub use convergence::{layer_curvature, progress_to_accuracy, ConvergenceSim};
 pub use engine::EventEngine;
 pub use runner::{
-    build_layout, run, run_with_partition, BackwardSample, GanttBlock, SimError, SimResult,
-    TrajPoint,
+    build_layout, run, run_with_partition, shadow_memo_stats, BackwardSample, GanttBlock,
+    SimError, SimResult, TrajPoint, SHADOW_MEMO_CAP,
 };
