@@ -1,0 +1,214 @@
+//! Figure 19 (this repo's extension): fault injection and elastic
+//! recovery vs the restart-from-scratch baseline.
+//!
+//! A rank crash mid-run forces a choice: **elastic** recovery
+//! repartitions the layers over the survivors, rebuilds the
+//! schedule/DAG/memory floors for the reduced fleet, replans the freeze
+//! ratios, and resumes from the last microbatch checkpoint boundary;
+//! **restart** rebuilds on the survivors but replays every optimizer
+//! step from step 1 after a full weight broadcast. This sweep measures
+//! the gap as *throughput retention* — the faulted run's tokens/s over
+//! the fault-free reference on the same schedule — across:
+//!
+//! * all four schedules (GPipe, 1F1B, interleaved, ZBV) at a fixed late
+//!   crash (the worst case for restart: almost the whole run replays);
+//! * crash time (early / mid / late) on 1F1B — early crashes are where
+//!   restart is cheapest, so the retention curves converge there;
+//! * fleet size on 1F1B — larger fleets lose a smaller capacity
+//!   fraction per crash, so elastic retention *rises* with scale while
+//!   restart's replay cost does not shrink.
+//!
+//! The acceptance contract asserted per schedule: elastic retention
+//! strictly beats restart retention for the late crash, and fixed-seed
+//! fault runs are bit-identical.
+//!
+//!     TF_BENCH_JSON=out.json cargo bench --bench fig19_elasticity
+//!     TF_BENCH_QUICK=1 cargo bench --bench fig19_elasticity   # CI smoke
+
+use timelyfreeze::bench_support::tables::apply_quick;
+use timelyfreeze::config::{ExperimentConfig, RecoveryStrategy, Scenario};
+use timelyfreeze::metrics::Recorder;
+use timelyfreeze::sim;
+use timelyfreeze::types::{FreezeMethod, ScheduleKind};
+use timelyfreeze::util::json::Json;
+use timelyfreeze::util::table::Table;
+
+fn faulted(
+    base: &ExperimentConfig,
+    crash_at: usize,
+    strategy: RecoveryStrategy,
+) -> sim::SimResult {
+    let mut cfg = base.clone();
+    cfg.scenario = Some(Scenario::crash(1, crash_at));
+    cfg.recovery = Some(strategy);
+    sim::run(&cfg).expect("fault config must be recoverable")
+}
+
+fn main() {
+    let mut rec = Recorder::default_dir();
+    let mut base = ExperimentConfig::paper_preset("llama-1b").unwrap();
+    base.method = FreezeMethod::TimelyFreeze;
+    apply_quick(&mut base);
+    // Within-step salvage at every other microbatch boundary.
+    base.ckpt_interval = 2;
+    // The late crash: three quarters of the way through the post-ramp
+    // regime, when restart has the most committed work to throw away.
+    let late = base.phases.t_freeze + 3 * (base.steps - base.phases.t_freeze) / 4;
+    let schedules = [
+        ScheduleKind::GPipe,
+        ScheduleKind::OneFOneB,
+        ScheduleKind::Interleaved1F1B,
+        ScheduleKind::ZeroBubbleV,
+    ];
+
+    println!(
+        "fig19: {} — {} steps, crash rank 1 @ {late}, ckpt every {} microbatches",
+        base.model.name, base.steps, base.ckpt_interval
+    );
+    let mut t = Table::new(
+        "elastic recovery vs restart-from-scratch — late crash, per schedule",
+        &[
+            "Schedule",
+            "Ref tok/s",
+            "Elastic tok/s",
+            "Restart tok/s",
+            "Elastic ret %",
+            "Restart ret %",
+            "Lost mb (e/r)",
+            "Recovery s (e/r)",
+        ],
+    );
+    for schedule in schedules {
+        let mut ref_cfg = base.clone();
+        ref_cfg.schedule = schedule;
+        let reference = sim::run(&ref_cfg).expect("fault-free reference must run");
+        let elastic = faulted(&ref_cfg, late, RecoveryStrategy::Elastic);
+        let restart = faulted(&ref_cfg, late, RecoveryStrategy::Restart);
+        let e_ret = 100.0 * elastic.throughput / reference.throughput;
+        let r_ret = 100.0 * restart.throughput / reference.throughput;
+        t.row(vec![
+            schedule.name().to_string(),
+            format!("{:.0}", reference.throughput),
+            format!("{:.0}", elastic.throughput),
+            format!("{:.0}", restart.throughput),
+            format!("{e_ret:.1}"),
+            format!("{r_ret:.1}"),
+            format!("{}/{}", elastic.lost_microbatches, restart.lost_microbatches),
+            format!("{:.1}/{:.1}", elastic.recovery_time_s, restart.recovery_time_s),
+        ]);
+        rec.push(
+            "fig19_elasticity",
+            Json::obj(vec![
+                ("sweep", Json::str("schedule")),
+                ("schedule", Json::str(schedule.name())),
+                ("crash_at", Json::num(late as f64)),
+                ("ranks", Json::num(ref_cfg.ranks as f64)),
+                ("reference_tps", Json::num(reference.throughput)),
+                ("elastic_tps", Json::num(elastic.throughput)),
+                ("restart_tps", Json::num(restart.throughput)),
+                ("elastic_retention_pct", Json::num(e_ret)),
+                ("restart_retention_pct", Json::num(r_ret)),
+                ("elastic_lost_mb", Json::num(elastic.lost_microbatches as f64)),
+                ("restart_lost_mb", Json::num(restart.lost_microbatches as f64)),
+                ("elastic_recovery_s", Json::num(elastic.recovery_time_s)),
+                ("restart_recovery_s", Json::num(restart.recovery_time_s)),
+                ("elastic_final_ranks", Json::num(elastic.final_ranks as f64)),
+                ("elastic_acc", Json::num(elastic.accuracy)),
+                ("restart_acc", Json::num(restart.accuracy)),
+            ]),
+        );
+        // The acceptance contract: with a late crash the elastic path
+        // must strictly beat replaying the run from scratch, on every
+        // schedule.
+        assert!(
+            e_ret > r_ret,
+            "{}: elastic retention {e_ret:.1}% must beat restart {r_ret:.1}%",
+            schedule.name()
+        );
+        assert_eq!(elastic.final_ranks, ref_cfg.ranks - 1);
+        assert_eq!(restart.final_ranks, ref_cfg.ranks - 1);
+        // Determinism contract: a fixed-seed fault run is bit-identical.
+        let again = faulted(&ref_cfg, late, RecoveryStrategy::Elastic);
+        assert_eq!(
+            elastic.throughput.to_bits(),
+            again.throughput.to_bits(),
+            "{}: fault runs must be bit-identical",
+            schedule.name()
+        );
+        assert_eq!(elastic.accuracy.to_bits(), again.accuracy.to_bits());
+        assert_eq!(elastic.recovery_time_s.to_bits(), again.recovery_time_s.to_bits());
+    }
+    println!("{}", t.render());
+
+    // ---- crash-time sweep (1F1B): where does restart stop competing? ----
+    let mut sweep_cfg = base.clone();
+    sweep_cfg.schedule = ScheduleKind::OneFOneB;
+    let sweep_ref = sim::run(&sweep_cfg).expect("reference");
+    let span = base.steps - base.phases.t_warmup;
+    let mut t2 = Table::new(
+        "crash-time sweep — 1F1B, retention % vs when the crash lands",
+        &["Crash step", "Elastic ret %", "Restart ret %", "Gap pts"],
+    );
+    for frac_num in [1usize, 2, 3] {
+        let crash_at = base.phases.t_warmup + frac_num * span / 4;
+        let elastic = faulted(&sweep_cfg, crash_at, RecoveryStrategy::Elastic);
+        let restart = faulted(&sweep_cfg, crash_at, RecoveryStrategy::Restart);
+        let e_ret = 100.0 * elastic.throughput / sweep_ref.throughput;
+        let r_ret = 100.0 * restart.throughput / sweep_ref.throughput;
+        t2.row(vec![
+            format!("{crash_at}"),
+            format!("{e_ret:.1}"),
+            format!("{r_ret:.1}"),
+            format!("{:+.1}", e_ret - r_ret),
+        ]);
+        rec.push(
+            "fig19_elasticity",
+            Json::obj(vec![
+                ("sweep", Json::str("crash_time")),
+                ("schedule", Json::str("1F1B")),
+                ("crash_at", Json::num(crash_at as f64)),
+                ("elastic_retention_pct", Json::num(e_ret)),
+                ("restart_retention_pct", Json::num(r_ret)),
+            ]),
+        );
+    }
+    println!("{}", t2.render());
+
+    // ---- fleet-size sweep (1F1B): retention vs provisioned ranks ----
+    let mut t3 = Table::new(
+        "fleet-size sweep — 1F1B, late crash of rank 1",
+        &["Ranks", "Elastic ret %", "Restart ret %", "Elastic final ranks"],
+    );
+    for ranks in [3usize, 4, 6] {
+        let mut cfg = base.clone();
+        cfg.schedule = ScheduleKind::OneFOneB;
+        cfg.ranks = ranks;
+        let reference = sim::run(&cfg).expect("reference");
+        let elastic = faulted(&cfg, late, RecoveryStrategy::Elastic);
+        let restart = faulted(&cfg, late, RecoveryStrategy::Restart);
+        let e_ret = 100.0 * elastic.throughput / reference.throughput;
+        let r_ret = 100.0 * restart.throughput / reference.throughput;
+        t3.row(vec![
+            format!("{ranks}"),
+            format!("{e_ret:.1}"),
+            format!("{r_ret:.1}"),
+            format!("{}", elastic.final_ranks),
+        ]);
+        rec.push(
+            "fig19_elasticity",
+            Json::obj(vec![
+                ("sweep", Json::str("fleet_size")),
+                ("schedule", Json::str("1F1B")),
+                ("ranks", Json::num(ranks as f64)),
+                ("crash_at", Json::num(late as f64)),
+                ("elastic_retention_pct", Json::num(e_ret)),
+                ("restart_retention_pct", Json::num(r_ret)),
+            ]),
+        );
+        assert_eq!(elastic.final_ranks, ranks - 1);
+    }
+    println!("{}", t3.render());
+
+    rec.flush().unwrap();
+    println!("rows recorded under bench_out/fig19_elasticity.json");
+}

@@ -6,7 +6,7 @@ pub mod presets;
 pub mod scenario;
 
 pub use presets::{GpuPreset, ModelFamily, ModelPreset};
-pub use scenario::{LinkSlowdown, Scenario, Straggler};
+pub use scenario::{FaultEvent, FaultKind, LinkSlowdown, Scenario, Straggler};
 
 use crate::cost::RecomputePolicy;
 use crate::freeze::{ApfConfig, AutoFreezeConfig, PhaseConfig};
@@ -40,6 +40,38 @@ impl ExecMode {
         match self {
             ExecMode::Event => "event",
             ExecMode::Analytic => "analytic",
+        }
+    }
+}
+
+/// How the simulator reacts to whole-rank fault events
+/// ([`FaultEvent`]): shrink and keep going, or start over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryStrategy {
+    /// Elastic recovery (`sim/elastic.rs`): repartition layers over the
+    /// survivors, rebuild the schedule/DAG/memory floors, replan freeze
+    /// ratios, and resume from the last microbatch checkpoint boundary.
+    Elastic,
+    /// Restart-from-scratch baseline: on every fault the run rebuilds on
+    /// the current fleet and replays all optimizer steps from step 0.
+    Restart,
+}
+
+impl RecoveryStrategy {
+    /// Parse a user-supplied name.
+    pub fn parse(s: &str) -> Option<RecoveryStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "elastic" => Some(RecoveryStrategy::Elastic),
+            "restart" | "scratch" => Some(RecoveryStrategy::Restart),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            RecoveryStrategy::Elastic => "elastic",
+            RecoveryStrategy::Restart => "restart",
         }
     }
 }
@@ -118,6 +150,17 @@ pub struct ExperimentConfig {
     pub replan_interval: usize,
     /// Which executor runs batches (event-driven or analytic sweep).
     pub exec: ExecMode,
+    /// Reaction to whole-rank fault events in the scenario. `None` with
+    /// a faulting scenario is a configuration error
+    /// ([`SimError::RankLost`](crate::sim::SimError)): the user must
+    /// pick `--elastic` (or `--recovery restart`) explicitly.
+    pub recovery: Option<RecoveryStrategy>,
+    /// Microbatch checkpoint cadence for fault recovery: progress is
+    /// durable at every `k`-th microbatch boundary within a step, so a
+    /// faulted step loses only the work past the last boundary. `0` ⇒
+    /// only completed optimizer steps are durable (a fault loses the
+    /// whole in-flight step).
+    pub ckpt_interval: usize,
 }
 
 impl ExperimentConfig {
@@ -178,6 +221,8 @@ impl ExperimentConfig {
             scenario: None,
             replan_interval: 0,
             exec: ExecMode::Event,
+            recovery: None,
+            ckpt_interval: 0,
         };
         Some(match key.as_str() {
             // LLaMA-3.2-1B · Alpaca-GPT4 · 4×A6000 (Table 3 col 1).
@@ -263,14 +308,15 @@ impl ExperimentConfig {
     /// optional): `experiment.{schedule, method, ranks, chunks,
     /// microbatches, microbatch_size, seq_len, steps, r_max, seed,
     /// timing_noise, memory_budget, rank_memory_gb, recompute, scenario,
-    /// replan_interval, exec}`, `phases.{warmup, monitor, freeze}`,
+    /// replan_interval, exec, recovery, ckpt_interval}`,
+    /// `phases.{warmup, monitor, freeze}`,
     /// `apf.{threshold, alpha, check_interval}`,
     /// `autofreeze.{percentile, check_interval}`. `rank_memory_gb` is an
     /// array of per-rank GB capacities; `recompute` is
     /// `"off" | "full" | "auto"` or a uniform fraction
     /// ([`RecomputePolicy::parse`]); `scenario` uses the
     /// [`Scenario::parse`] mini-language; `exec` is `event` or
-    /// `analytic`.
+    /// `analytic`; `recovery` is `elastic` or `restart`.
     pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<(), String> {
         if let Some(s) = doc.get_str("experiment.schedule") {
             self.schedule =
@@ -338,6 +384,13 @@ impl ExperimentConfig {
             self.exec =
                 ExecMode::parse(s).ok_or_else(|| format!("unknown exec mode '{s}'"))?;
         }
+        if let Some(s) = doc.get_str("experiment.recovery") {
+            self.recovery = Some(
+                RecoveryStrategy::parse(s)
+                    .ok_or_else(|| format!("unknown recovery strategy '{s}'"))?,
+            );
+        }
+        set_usize!("experiment.ckpt_interval", self.ckpt_interval);
         if let Some(v) = doc.get_i64("experiment.seed") {
             self.seed = v as u64;
         }
@@ -438,6 +491,33 @@ mod tests {
         assert!(cfg.apply_toml(&doc).is_err());
         let doc = TomlDoc::parse("[experiment]\nrank_memory_gb = [48.0, -1.0]").unwrap();
         assert!(cfg.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn toml_sets_recovery_keys() {
+        let mut cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+        assert_eq!(cfg.recovery, None);
+        assert_eq!(cfg.ckpt_interval, 0);
+        let doc = TomlDoc::parse(
+            "[experiment]\nscenario = \"crash:2@500\"\nrecovery = \"elastic\"\n\
+             ckpt_interval = 2",
+        )
+        .unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.recovery, Some(RecoveryStrategy::Elastic));
+        assert_eq!(cfg.ckpt_interval, 2);
+        assert!(cfg.scenario.as_ref().unwrap().has_faults());
+        let doc = TomlDoc::parse("[experiment]\nrecovery = \"restart\"").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.recovery, Some(RecoveryStrategy::Restart));
+        // Unknown strategies are clean errors.
+        let doc = TomlDoc::parse("[experiment]\nrecovery = \"pray\"").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
+        // Round-trip names.
+        assert_eq!(RecoveryStrategy::parse("elastic"), Some(RecoveryStrategy::Elastic));
+        assert_eq!(RecoveryStrategy::parse("scratch"), Some(RecoveryStrategy::Restart));
+        assert_eq!(RecoveryStrategy::Elastic.name(), "elastic");
+        assert_eq!(RecoveryStrategy::Restart.name(), "restart");
     }
 
     #[test]

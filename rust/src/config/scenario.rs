@@ -34,9 +34,21 @@
 //! link:2.0                 all communication 2× slower
 //! link:0x4.0@100           boundary 0↔1 4× slower from step 100
 //! seed:7                   scenario RNG stream
+//! crash:2@500              rank 2 fails permanently at step 500
+//! preempt:1@300-450        rank 1 is preempted for steps 300..450
+//! evict-slowest@400        kill the worst straggler at step 400
 //! ```
 //!
 //! Terms combine with commas: `straggler:2x2.0@250,jitter:0.05`.
+//!
+//! The three **fault** terms model whole-rank loss rather than slowdown:
+//! a crash is permanent, a preemption ends at its `until` step, and
+//! `evict-slowest` resolves — at its onset, against the fleet alive at
+//! that instant — to the rank with the largest active straggler factor
+//! (ties broken toward the highest rank, which is also the choice when
+//! no straggler is active). Fault runs require a recovery strategy
+//! ([`ExperimentConfig::recovery`](crate::config::ExperimentConfig));
+//! see `sim/elastic.rs` for the repartition-and-replan semantics.
 
 use crate::util::rng::Rng;
 
@@ -66,6 +78,47 @@ pub struct LinkSlowdown {
     pub onset: usize,
 }
 
+/// What a [`FaultEvent`] does to its victim.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Permanent rank loss (`crash:RANK@T`).
+    Crash {
+        /// The failing physical rank.
+        rank: usize,
+    },
+    /// Temporary rank loss (`preempt:RANK@T1-T2`): the rank leaves at
+    /// the event's onset and rejoins at `until`.
+    Preempt {
+        /// The preempted physical rank.
+        rank: usize,
+        /// First step the rank is available again.
+        until: usize,
+    },
+    /// Permanently evict whichever surviving rank has the largest
+    /// active straggler factor at the onset (`evict-slowest@T`).
+    EvictSlowest,
+}
+
+/// An onset-timed whole-rank fault (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// What happens.
+    pub kind: FaultKind,
+    /// The wall step the fault strikes during.
+    pub onset: usize,
+}
+
+impl FaultEvent {
+    /// The physical rank this event names, if fixed at parse time
+    /// (`None` for `evict-slowest`, resolved against the live fleet).
+    pub fn named_rank(&self) -> Option<usize> {
+        match self.kind {
+            FaultKind::Crash { rank } | FaultKind::Preempt { rank, .. } => Some(rank),
+            FaultKind::EvictSlowest => None,
+        }
+    }
+}
+
 /// A composed runtime-dynamics scenario (see the module docs).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Scenario {
@@ -79,6 +132,8 @@ pub struct Scenario {
     pub jitter_onset: usize,
     /// Communication slowdowns.
     pub links: Vec<LinkSlowdown>,
+    /// Whole-rank fault events (crash, preempt, evict-slowest).
+    pub faults: Vec<FaultEvent>,
     /// Scenario RNG stream, xor-folded with the run seed.
     pub seed: u64,
 }
@@ -91,6 +146,7 @@ impl Default for Scenario {
             jitter_sigma: 0.0,
             jitter_onset: 0,
             links: Vec::new(),
+            faults: Vec::new(),
             seed: 0,
         }
     }
@@ -147,6 +203,34 @@ impl Scenario {
     pub fn with_link(mut self, boundary: Option<usize>, factor: f64, onset: usize) -> Scenario {
         assert!(factor > 0.0 && factor.is_finite(), "link factor must be positive");
         self.links.push(LinkSlowdown { boundary, factor, onset });
+        self
+    }
+
+    /// One rank failing permanently at `onset` (the `crash:R@T` term).
+    pub fn crash(rank: usize, onset: usize) -> Scenario {
+        Scenario::calm()
+            .with_crash(rank, onset)
+            .relabel(&format!("crash:{rank}@{onset}"))
+    }
+
+    /// Add a permanent rank crash at `onset`.
+    pub fn with_crash(mut self, rank: usize, onset: usize) -> Scenario {
+        self.faults.push(FaultEvent { kind: FaultKind::Crash { rank }, onset });
+        self
+    }
+
+    /// Add a temporary preemption: `rank` leaves at `onset` and rejoins
+    /// at `until` (exclusive window `onset..until`).
+    pub fn with_preempt(mut self, rank: usize, onset: usize, until: usize) -> Scenario {
+        assert!(until > onset, "preemption must end after it begins");
+        self.faults.push(FaultEvent { kind: FaultKind::Preempt { rank, until }, onset });
+        self
+    }
+
+    /// Add an `evict-slowest` fault at `onset` (victim resolved at run
+    /// time against the live fleet — see the module docs).
+    pub fn with_evict_slowest(mut self, onset: usize) -> Scenario {
+        self.faults.push(FaultEvent { kind: FaultKind::EvictSlowest, onset });
         self
     }
 
@@ -214,11 +298,64 @@ impl Scenario {
                         .map_err(|_| format!("bad scenario seed in '{term}'"))?;
                     sc = sc.with_seed(seed);
                 }
+                ("crash", Some(arg)) => {
+                    let (rank, onset) = arg.split_once('@').ok_or_else(|| {
+                        format!("crash term '{term}' wants crash:<rank>@<onset>")
+                    })?;
+                    let rank = rank
+                        .trim()
+                        .parse::<usize>()
+                        .map_err(|_| format!("bad crash rank in '{term}'"))?;
+                    let onset = onset
+                        .trim()
+                        .parse::<usize>()
+                        .map_err(|_| format!("bad onset step in '{term}'"))?;
+                    sc = sc.with_crash(rank, onset);
+                }
+                ("preempt", Some(arg)) => {
+                    let shape =
+                        || format!("preempt term '{term}' wants preempt:<rank>@<from>-<until>");
+                    let (rank, window) = arg.split_once('@').ok_or_else(shape)?;
+                    let rank = rank
+                        .trim()
+                        .parse::<usize>()
+                        .map_err(|_| format!("bad preempt rank in '{term}'"))?;
+                    let (from, until) = window.split_once('-').ok_or_else(shape)?;
+                    let from = from
+                        .trim()
+                        .parse::<usize>()
+                        .map_err(|_| format!("bad onset step in '{term}'"))?;
+                    let until = until
+                        .trim()
+                        .parse::<usize>()
+                        .map_err(|_| format!("bad preempt end in '{term}'"))?;
+                    if until <= from {
+                        return Err(format!(
+                            "preempt term '{term}' must end after it begins \
+                             (<until> must exceed <from>)"
+                        ));
+                    }
+                    sc = sc.with_preempt(rank, from, until);
+                }
+                (h, None) if h.starts_with("evict-slowest") => {
+                    let onset = h
+                        .strip_prefix("evict-slowest")
+                        .and_then(|tail| tail.strip_prefix('@'))
+                        .ok_or_else(|| {
+                            format!("evict term '{term}' wants evict-slowest@<onset>")
+                        })?
+                        .trim()
+                        .parse::<usize>()
+                        .map_err(|_| format!("bad onset step in '{term}'"))?;
+                    sc = sc.with_evict_slowest(onset);
+                }
                 _ => {
                     return Err(format!(
                         "unknown scenario term '{term}' \
                          (try straggler:<rank>x<factor>[@onset], jitter:<sigma>[@onset], \
-                         link:[<boundary>x]<factor>[@onset], seed:<n>, calm)"
+                         link:[<boundary>x]<factor>[@onset], seed:<n>, \
+                         crash:<rank>@<onset>, preempt:<rank>@<from>-<until>, \
+                         evict-slowest@<onset>, calm)"
                     ))
                 }
             }
@@ -247,6 +384,33 @@ impl Scenario {
                 }
             }
         }
+        let mut crashed: Vec<usize> = Vec::new();
+        let mut evictions = 0usize;
+        for f in &self.faults {
+            if let Some(rank) = f.named_rank() {
+                if rank >= ranks {
+                    return Err(format!(
+                        "scenario faults rank {rank} but the pipeline has {ranks} ranks"
+                    ));
+                }
+            }
+            match f.kind {
+                FaultKind::Crash { rank } => {
+                    if !crashed.contains(&rank) {
+                        crashed.push(rank);
+                    }
+                }
+                FaultKind::EvictSlowest => evictions += 1,
+                FaultKind::Preempt { .. } => {}
+            }
+        }
+        if crashed.len() + evictions >= ranks && ranks > 0 {
+            return Err(format!(
+                "scenario permanently loses {} of {ranks} ranks — at least one \
+                 rank must survive",
+                crashed.len() + evictions
+            ));
+        }
         Ok(())
     }
 
@@ -257,6 +421,14 @@ impl Scenario {
         self.jitter_sigma == 0.0
             && self.stragglers.iter().all(|s| s.factor == 1.0)
             && self.links.iter().all(|l| l.factor == 1.0)
+            && self.faults.is_empty()
+    }
+
+    /// Whether any whole-rank fault events are scheduled — fault runs
+    /// take the elastic-recovery path (`sim/elastic.rs`) instead of the
+    /// plain step loop, and require a configured recovery strategy.
+    pub fn has_faults(&self) -> bool {
+        !self.faults.is_empty()
     }
 
     /// Compute-time multiplier of `rank` at step `t` (product of active
@@ -459,5 +631,71 @@ mod tests {
         let sc = Scenario::calm().with_link(Some(3), 2.0, 0);
         assert!(sc.validate(4, 4).is_err());
         assert!(sc.validate(4, 8).is_ok());
+    }
+
+    #[test]
+    fn parse_composes_fault_terms() {
+        let sc =
+            Scenario::parse("crash:2@500,preempt:1@300-450,evict-slowest@400").unwrap();
+        assert_eq!(
+            sc.faults,
+            vec![
+                FaultEvent { kind: FaultKind::Crash { rank: 2 }, onset: 500 },
+                FaultEvent { kind: FaultKind::Preempt { rank: 1, until: 450 }, onset: 300 },
+                FaultEvent { kind: FaultKind::EvictSlowest, onset: 400 },
+            ]
+        );
+        assert!(sc.has_faults());
+        assert!(!sc.is_identity());
+        assert_eq!(sc.to_string(), "crash:2@500,preempt:1@300-450,evict-slowest@400");
+        // Faults compose with the slowdown terms.
+        let mixed = Scenario::parse("straggler:1x2.0,evict-slowest@50").unwrap();
+        assert_eq!(mixed.stragglers.len(), 1);
+        assert_eq!(mixed.faults.len(), 1);
+        // The preset matches the parsed form.
+        assert_eq!(Scenario::crash(2, 500), Scenario::parse("crash:2@500").unwrap());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_fault_terms() {
+        for (bad, needle) in [
+            ("crash:2", "wants crash:<rank>@<onset>"),
+            ("crash:x@5", "bad crash rank"),
+            ("crash:2@x", "bad onset step"),
+            ("preempt:1@300", "wants preempt:<rank>@<from>-<until>"),
+            ("preempt:x@1-2", "bad preempt rank"),
+            ("preempt:1@a-2", "bad onset step"),
+            ("preempt:1@2-a", "bad preempt end"),
+            ("preempt:1@450-300", "must end after it begins"),
+            ("preempt:1@300-300", "must end after it begins"),
+            ("evict-slowest", "wants evict-slowest@<onset>"),
+            ("evict-slowest@", "bad onset step"),
+            ("evict-slowest@x", "bad onset step"),
+        ] {
+            let err = Scenario::parse(bad).expect_err(bad);
+            assert!(err.contains(needle), "'{bad}': error '{err}' lacks '{needle}'");
+        }
+    }
+
+    #[test]
+    fn validate_checks_fault_ranks_and_survivors() {
+        // Fault rank out of range.
+        assert!(Scenario::crash(4, 10).validate(4, 4).is_err());
+        assert!(Scenario::crash(3, 10).validate(4, 4).is_ok());
+        assert!(Scenario::calm().with_preempt(5, 0, 10).validate(4, 4).is_err());
+        // Permanent losses must leave a survivor: 2 crashes + 1 eviction
+        // on a 4-rank fleet is fine, on a 3-rank fleet it is not.
+        let heavy = Scenario::calm()
+            .with_crash(0, 10)
+            .with_crash(1, 20)
+            .with_evict_slowest(30);
+        assert!(heavy.validate(4, 4).is_ok());
+        assert!(heavy.validate(3, 3).is_err());
+        // Repeat crashes on one rank count once.
+        let twice = Scenario::calm().with_crash(0, 10).with_crash(0, 20);
+        assert!(twice.validate(2, 2).is_ok());
+        // Preemptions are temporary and never exhaust the fleet.
+        let pre = Scenario::calm().with_preempt(0, 0, 5).with_preempt(1, 10, 15);
+        assert!(pre.validate(2, 2).is_ok());
     }
 }

@@ -516,6 +516,47 @@ pub fn memory_plan_for(
     Ok(MemoryPlan { floor: Some(floor), recompute: recomputing.then_some(rho) })
 }
 
+/// [`memory_plan_for`] against a surviving sub-fleet (elastic
+/// recovery): project the experiment onto the physical ranks named by
+/// `fleet` — the rank count shrinks to `fleet.len()` and any per-rank
+/// capacities are filtered to the survivors, preserving heterogeneity —
+/// then resolve the memory policy exactly as the full-fleet path would.
+/// `layer_stage` and `schedule` must already describe the reduced
+/// pipeline (the caller repartitioned layers over `fleet.len()` ranks).
+/// This is where `--recompute auto` rescues budgets a shrunken fleet
+/// could not satisfy by freezing alone.
+pub fn memory_plan_for_fleet(
+    cfg: &ExperimentConfig,
+    layer_stage: &[usize],
+    schedule: &Schedule,
+    fleet: &[usize],
+) -> Result<MemoryPlan, String> {
+    assert!(!fleet.is_empty(), "fleet must name at least one survivor");
+    assert_eq!(
+        schedule.ranks,
+        fleet.len(),
+        "schedule must be built for the reduced fleet"
+    );
+    let mut sub = cfg.clone();
+    sub.ranks = fleet.len();
+    if let Some(caps) = &cfg.rank_memory_bytes {
+        let survivors: Vec<f64> = fleet
+            .iter()
+            .map(|&r| {
+                caps.get(r).copied().ok_or_else(|| {
+                    format!(
+                        "fleet names physical rank {r} but rank_memory_gb covers only \
+                         {} ranks",
+                        caps.len()
+                    )
+                })
+            })
+            .collect::<Result<_, _>>()?;
+        sub.rank_memory_bytes = Some(survivors);
+    }
+    memory_plan_for(&sub, layer_stage, schedule)
+}
+
 /// Derive the per-stage freeze-ratio floor alone: `Ok(None)` when the
 /// config carries no memory budget, `Ok(Some(floor))` when the budgeted
 /// capacity is satisfiable under the config's [`RecomputePolicy`]. A
@@ -920,6 +961,30 @@ mod tests {
         for (a, b) in full.floor.unwrap().iter().zip(&floor) {
             assert!(a <= b, "full-recompute floor must not exceed auto's");
         }
+    }
+
+    #[test]
+    fn memory_plan_for_fleet_projects_ranks_and_capacities() {
+        let (mut cfg, _) = model_1b();
+        cfg.memory_budget = Some(0.9);
+        // Heterogeneous 4-rank cluster; rank 1 dies, survivors keep
+        // their own capacities in physical order.
+        cfg.rank_memory_bytes = Some(vec![48e9, 24e9, 48e9, 32e9]);
+        let fleet = vec![0usize, 2, 3];
+        let sub = Schedule::build(ScheduleKind::OneFOneB, 3, cfg.microbatches, 1);
+        let layer_stage = balanced_partition(&cfg.model.layer_params(), 3);
+        let plan = memory_plan_for_fleet(&cfg, &layer_stage, &sub, &fleet).unwrap();
+        assert!(plan.floor.is_some(), "budgeted fleet plan must carry a floor");
+        // The projection must match a hand-built 3-rank config.
+        let mut hand = cfg.clone();
+        hand.ranks = 3;
+        hand.rank_memory_bytes = Some(vec![48e9, 48e9, 32e9]);
+        assert_eq!(plan, memory_plan_for(&hand, &layer_stage, &sub).unwrap());
+        // A fleet naming a rank outside the capacity table is a clean
+        // error, not a panic.
+        let err =
+            memory_plan_for_fleet(&cfg, &layer_stage, &sub, &[0, 2, 9]).unwrap_err();
+        assert!(err.contains("rank 9"), "{err}");
     }
 
     #[test]

@@ -36,8 +36,8 @@ pub mod model;
 pub mod profile;
 
 pub use memory::{
-    memory_plan_for, peak_inflight, stage_floor_for, MemoryError, MemoryModel, MemoryPlan,
-    RecomputePolicy,
+    memory_plan_for, memory_plan_for_fleet, peak_inflight, stage_floor_for, MemoryError,
+    MemoryModel, MemoryPlan, RecomputePolicy,
 };
 pub use model::CostModel;
 pub use profile::{CostProfile, ProfileRecorder, StageProfile};

@@ -96,6 +96,14 @@ impl Controller for Hybrid {
     fn planned_batch_time(&self) -> Option<f64> {
         Controller::planned_batch_time(&self.timely)
     }
+
+    fn replan_failures(&self) -> usize {
+        Controller::replan_failures(&self.timely)
+    }
+
+    fn replan_with_model(&mut self, cost: &crate::cost::CostModel) {
+        self.timely.replan_with_model(cost);
+    }
 }
 
 #[cfg(test)]

@@ -149,6 +149,21 @@ pub trait Controller: Send {
     fn planned_batch_time(&self) -> Option<f64> {
         None
     }
+
+    /// Replanning attempts whose LP fallback ladder exhausted without a
+    /// feasible solution. The controller keeps executing its last
+    /// feasible plan in that case (graceful degradation); this counter
+    /// surfaces how often it had to.
+    fn replan_failures(&self) -> usize {
+        0
+    }
+
+    /// Re-solve the plan directly against a [`CostModel`] — the elastic
+    /// recovery path uses this after a repartition, where the new
+    /// topology's analytic model is the best available bound source and
+    /// no observed profile exists yet for the shrunken fleet.
+    /// Metric-only baselines have no plan to revise and ignore it.
+    fn replan_with_model(&mut self, _cost: &crate::cost::CostModel) {}
 }
 
 /// Construct a controller by method with shared inputs. `schedule` is

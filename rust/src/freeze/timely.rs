@@ -85,6 +85,10 @@ pub struct TimelyFreeze {
     /// LP solve.
     scratch_w_min: Vec<f64>,
     scratch_w_max: Vec<f64>,
+    /// Solve attempts whose LP fallback ladder exhausted while a
+    /// feasible plan was already installed; the controller kept that
+    /// plan (graceful degradation) instead of disabling freezing.
+    replan_failures: usize,
     #[allow(dead_code)]
     layout: ModelLayout,
 }
@@ -115,6 +119,7 @@ impl TimelyFreeze {
             inflight,
             scratch_w_min: Vec::new(),
             scratch_w_max: Vec::new(),
+            replan_failures: 0,
             layout,
         }
     }
@@ -225,6 +230,17 @@ impl TimelyFreeze {
     /// path. The memory floor (constraint [5]) carries over unchanged.
     pub fn replan_with_profile(&mut self, profile: &crate::cost::CostProfile) {
         self.observed = Some(profile.to_model(self.pdag.stages));
+        self.solve();
+    }
+
+    /// Re-solve the plan directly against `cost`'s per-action duration
+    /// bounds, bypassing both monitoring windows and observed profiles.
+    /// The elastic recovery path calls this right after a repartition:
+    /// the rebuilt topology has no execution history yet, so the
+    /// analytic cost model of the shrunken fleet is the best available
+    /// bound source.
+    pub fn replan_with_model(&mut self, cost: &CostModel) {
+        self.observed = Some(cost.clone());
         self.solve();
     }
 
@@ -372,12 +388,25 @@ impl TimelyFreeze {
                 self.solution = Some(sol);
             }
             Err(e) => {
-                // Fail safe: freeze nothing rather than crash training.
-                // Drop the stale solution too, so reporting accessors
-                // don't show a plan that is no longer being executed.
-                eprintln!("timelyfreeze: LP failed ({e}); disabling freezing");
-                self.expected = Some(BTreeMap::new());
-                self.solution = None;
+                if self.solution.is_some() {
+                    // Graceful degradation: a mid-run replan whose
+                    // fallback ladder exhausted keeps executing the last
+                    // feasible plan — dropping to freeze-nothing would
+                    // discard a solution that is still valid for the
+                    // world it was solved in.
+                    self.replan_failures += 1;
+                    eprintln!(
+                        "timelyfreeze: LP failed ({e}); keeping last feasible plan \
+                         (failure #{})",
+                        self.replan_failures
+                    );
+                } else {
+                    // No feasible plan has ever existed — fail safe:
+                    // freeze nothing rather than crash training.
+                    eprintln!("timelyfreeze: LP failed ({e}); disabling freezing");
+                    self.expected = Some(BTreeMap::new());
+                    self.solution = None;
+                }
             }
         }
     }
@@ -438,6 +467,14 @@ impl Controller for TimelyFreeze {
 
     fn planned_batch_time(&self) -> Option<f64> {
         self.solution.as_ref().map(|s| s.batch_time)
+    }
+
+    fn replan_failures(&self) -> usize {
+        self.replan_failures
+    }
+
+    fn replan_with_model(&mut self, cost: &crate::cost::CostModel) {
+        TimelyFreeze::replan_with_model(self, cost);
     }
 }
 
@@ -672,6 +709,63 @@ mod tests {
         tf.replan(None);
         let back = tf.solution().unwrap();
         assert!((back.batch_time - free.batch_time).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exhausted_replan_keeps_last_feasible_plan() {
+        let (mut tf, schedule) = make(0.8);
+        drive_monitoring(&mut tf, &schedule);
+        tf.plan(31);
+        let before = tf.solution().unwrap().clone();
+        let expected_before = tf.expected_ratios().unwrap().clone();
+        assert_eq!(Controller::replan_failures(&tf), 0);
+        // An infeasible floor (above r_max) makes every solve fail; the
+        // controller must keep executing the previous plan and count the
+        // failure instead of dropping to freeze-nothing.
+        tf.set_stage_floor(Some(vec![0.9; 4]));
+        tf.replan(None);
+        assert_eq!(Controller::replan_failures(&tf), 1);
+        let after = tf.solution().expect("last feasible plan must survive");
+        assert_eq!(after.ratios, before.ratios);
+        assert_eq!(tf.expected_ratios().unwrap(), &expected_before);
+        // The kept plan keeps ramping normally.
+        let plan = tf.plan(60);
+        assert!(plan.afr.values().any(|&r| r > 0.0));
+        // Failures accumulate across repeated exhausted replans.
+        tf.replan(None);
+        assert_eq!(Controller::replan_failures(&tf), 2);
+        // A feasible floor restores normal replanning without resetting
+        // the count.
+        tf.set_stage_floor(None);
+        tf.replan(None);
+        assert_eq!(Controller::replan_failures(&tf), 2);
+        assert!(tf.solution().is_some());
+    }
+
+    #[test]
+    fn replan_with_model_uses_model_bounds() {
+        use crate::config::ExperimentConfig;
+        use crate::cost::CostModel;
+        use crate::partition::balanced_partition;
+        let (mut tf, schedule) = make(0.8);
+        drive_monitoring(&mut tf, &schedule);
+        tf.plan(31);
+        let before = tf.solution().unwrap().clone();
+        let cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+        let layer_stage = balanced_partition(&cfg.model.layer_params(), 4);
+        let cost = CostModel::new(
+            &cfg.model,
+            &cfg.gpu,
+            &layer_stage,
+            4,
+            cfg.microbatch_size,
+            cfg.seq_len,
+        );
+        Controller::replan_with_model(&mut tf, &cost);
+        let after = tf.solution().expect("model replan must produce a plan");
+        // The plan now reflects the analytic model's scale, not the
+        // synthetic monitoring timings.
+        assert!((after.p_d_max - before.p_d_max).abs() > 1e-9);
     }
 
     #[test]

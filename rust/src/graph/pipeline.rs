@@ -191,6 +191,38 @@ impl PipelineDag {
         self.dag.nodes[id].action()
     }
 
+    /// A structural fingerprint of the DAG: FNV-1a over the node count,
+    /// shape parameters, per-node rank ownership, and the full CSR edge
+    /// list. Two DAGs share a signature exactly when they describe the
+    /// same batch structure over the same fleet — the runner keys its
+    /// shadow-run memo on this so an elastic repartition (fewer ranks,
+    /// different layer split) can never read a stale baseline.
+    pub fn signature(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut mix = |x: u64| {
+            for byte in x.to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        mix(self.dag.len() as u64);
+        mix(self.stages as u64);
+        mix(self.ranks as u64);
+        mix(self.microbatches as u64);
+        for &r in &self.rank_of_node {
+            mix(r as u64);
+        }
+        for u in 0..self.csr.len() {
+            for e in self.csr.edge_range(u) {
+                mix(u as u64);
+                mix(self.csr.edge_dst(e) as u64);
+            }
+        }
+        h
+    }
+
     /// Build a node-aligned weight vector from a per-action duration
     /// function; source/dest get zero (`w_s = w_d = 0`).
     pub fn weights<F: Fn(Action) -> f64>(&self, f: F) -> Vec<f64> {
@@ -403,6 +435,17 @@ mod tests {
             let g = build(kind, 4, 8);
             assert!(g.dag.is_acyclic(), "{} produced a cycle", kind.name());
         }
+    }
+
+    #[test]
+    fn signature_separates_structures() {
+        let a = build(ScheduleKind::OneFOneB, 4, 8);
+        assert_eq!(a.signature(), build(ScheduleKind::OneFOneB, 4, 8).signature());
+        // Different schedule, fleet size, or microbatch count ⇒
+        // different fingerprint.
+        assert_ne!(a.signature(), build(ScheduleKind::GPipe, 4, 8).signature());
+        assert_ne!(a.signature(), build(ScheduleKind::OneFOneB, 3, 8).signature());
+        assert_ne!(a.signature(), build(ScheduleKind::OneFOneB, 4, 6).signature());
     }
 
     #[test]

@@ -33,7 +33,10 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "mem-budget", takes_value: true, help: "fraction of device memory available (0,1]; enables the memory-aware LP floor" },
         FlagSpec { name: "rank-mem", takes_value: true, help: "per-rank device memory in GB for mixed clusters, e.g. 48,48,24,48 (with --mem-budget)" },
         FlagSpec { name: "recompute", takes_value: true, help: "activation recompute policy: off|full|auto|<fraction>; auto covers memory deficits beyond r_max by re-running forwards" },
-        FlagSpec { name: "scenario", takes_value: true, help: "runtime dynamics, e.g. straggler:1x1.5@300,jitter:0.05,link:2.0 (see docs)" },
+        FlagSpec { name: "scenario", takes_value: true, help: "runtime dynamics and faults, e.g. straggler:1x1.5@300,jitter:0.05 or crash:2@500 (see docs)" },
+        FlagSpec { name: "elastic", takes_value: false, help: "recover from rank faults elastically (shorthand for --recovery elastic)" },
+        FlagSpec { name: "recovery", takes_value: true, help: "fault recovery strategy: elastic | restart (from-scratch baseline)" },
+        FlagSpec { name: "ckpt-interval", takes_value: true, help: "microbatch checkpoint cadence for elastic recovery (0 = step boundaries only)" },
         FlagSpec { name: "replan", takes_value: true, help: "online replanning cadence in steps (0 = static plan)" },
         FlagSpec { name: "exec", takes_value: true, help: "executor: event (discrete-event engine) | analytic (fast sweep)" },
         FlagSpec { name: "seed", takes_value: true, help: "random seed" },
@@ -130,6 +133,18 @@ fn build_sim_config(args: &Args) -> Result<ExperimentConfig, String> {
     }
     if let Some(spec) = args.flag("scenario") {
         cfg.scenario = Some(timelyfreeze::config::Scenario::parse(spec)?);
+    }
+    if args.flag_bool("elastic") {
+        cfg.recovery = Some(timelyfreeze::config::RecoveryStrategy::Elastic);
+    }
+    if let Some(s) = args.flag("recovery") {
+        cfg.recovery = Some(
+            timelyfreeze::config::RecoveryStrategy::parse(s)
+                .ok_or_else(|| format!("bad recovery strategy '{s}' (elastic|restart)"))?,
+        );
+    }
+    if let Some(v) = args.flag_usize("ckpt-interval")? {
+        cfg.ckpt_interval = v;
     }
     if let Some(v) = args.flag_usize("replan")? {
         cfg.replan_interval = v;
@@ -231,6 +246,18 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
             cfg.recompute.name(),
             rho.iter().sum::<f64>() / rho.len() as f64
         );
+    }
+    if r.faults > 0 {
+        let strategy = cfg
+            .recovery
+            .map(|s| s.name())
+            .unwrap_or("none");
+        println!(
+            "  faults          {:>10} ({} recovery, {}/{} ranks finished)",
+            r.faults, strategy, r.final_ranks, cfg.ranks
+        );
+        println!("  lost microbatches {:>8}", r.lost_microbatches);
+        println!("  recovery time   {:>10.2} s", r.recovery_time_s);
     }
     Ok(())
 }

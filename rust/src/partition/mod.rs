@@ -103,6 +103,35 @@ pub struct LayerProfile {
 }
 
 impl LayerProfile {
+    /// Validated construction: the three weight vectors must agree on
+    /// the layer count, be non-empty, and carry only finite,
+    /// non-negative weights. The elastic-recovery repartition builds its
+    /// profile through here so a malformed model description fails at
+    /// construction, not deep inside the partition DP.
+    pub fn new(params: Vec<f64>, memory: Vec<f64>, time: Vec<f64>) -> LayerProfile {
+        assert!(!params.is_empty(), "layer profile needs at least one layer");
+        assert_eq!(params.len(), memory.len(), "params/memory length mismatch");
+        assert_eq!(params.len(), time.len(), "params/time length mismatch");
+        for v in [&params, &memory, &time] {
+            assert!(
+                v.iter().all(|w| w.is_finite() && *w >= 0.0),
+                "layer weights must be finite and non-negative"
+            );
+        }
+        LayerProfile { params, memory, time }
+    }
+
+    /// Layer count.
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Whether the profile has no layers (never true for a validated
+    /// profile; kept for the `len`/`is_empty` convention).
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
     /// Partition by the weight vector `method` selects.
     pub fn partition(&self, method: PartitionMethod, stages: usize) -> Vec<usize> {
         let weights = match method {
@@ -240,5 +269,30 @@ mod tests {
     #[should_panic]
     fn too_few_layers_panics() {
         balanced_partition(&[1.0], 2);
+    }
+
+    #[test]
+    fn validated_constructor_accepts_and_repartitions() {
+        let p = LayerProfile::new(vec![1.0; 8], vec![2.0; 8], vec![3.0; 8]);
+        assert_eq!(p.len(), 8);
+        assert!(!p.is_empty());
+        // The same profile re-splits over a shrunken fleet: 4 stages →
+        // 3 stages, still contiguous and complete.
+        let four = p.partition(PartitionMethod::Parameter, 4);
+        let three = p.partition(PartitionMethod::Parameter, 3);
+        assert_eq!(four.iter().copied().max(), Some(3));
+        assert_eq!(three.iter().copied().max(), Some(2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn constructor_rejects_length_mismatch() {
+        LayerProfile::new(vec![1.0; 4], vec![1.0; 3], vec![1.0; 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn constructor_rejects_negative_weights() {
+        LayerProfile::new(vec![1.0, -1.0], vec![1.0, 1.0], vec![1.0, 1.0]);
     }
 }

@@ -45,6 +45,22 @@
 //! so the forward re-runs occupy the executing rank exactly like any
 //! other compute — and the bit-identity with the analytic sweep holds
 //! with surcharges on (`tests/recompute.rs`).
+//!
+//! ## Faults
+//!
+//! [`EventEngine::execute_with_fault`] replays the same event stream but
+//! injects a rank death at a chosen simulated instant: the fault is an
+//! ordinary `(time, seq)`-ordered queue event, so its interleaving with
+//! finishes and arrivals is exactly as deterministic as everything else.
+//! When it fires, the victim's in-flight action is cancelled (its
+//! pending finish is dropped on pop), its queued actions never dispatch,
+//! and the survivors drain whatever work is still reachable; nodes
+//! starved of a dependency simply never start, and the partial
+//! completion map comes back in a [`FaultOutcome`] for the recovery
+//! layer (`sim/elastic.rs`) to convert into salvaged vs. lost
+//! microbatches. [`EventEngine::execute`] itself is untouched by all of
+//! this — the fault path is a separate loop, so the bit-identity
+//! contract above cannot regress.
 
 mod queue;
 
@@ -68,6 +84,33 @@ enum Event {
         /// Completing node id.
         node: usize,
     },
+    /// The victim rank dies (only queued by
+    /// [`EventEngine::execute_with_fault`]).
+    Fault,
+}
+
+/// Outcome of [`EventEngine::execute_with_fault`]: which nodes beat the
+/// fault and when the surviving ranks finished draining.
+#[derive(Clone, Debug)]
+pub struct FaultOutcome {
+    /// The requested fault instant (simulated time within the batch).
+    pub fault_time: f64,
+    /// When the last completed work item finished — the batch ends here
+    /// whether or not the destination node was reached.
+    pub drain_time: f64,
+    /// Per-node completion flags, aligned with the batch DAG.
+    pub completed: Vec<bool>,
+    /// Nodes that never completed: the victim's cancelled in-flight and
+    /// queued actions plus everything starved downstream of them.
+    pub cancelled: usize,
+}
+
+impl FaultOutcome {
+    /// Whether the batch beat the fault to the finish line — every node
+    /// completed, so the step counts as a normal full step.
+    pub fn complete(&self) -> bool {
+        self.cancelled == 0
+    }
 }
 
 /// Per-rank executor state: a cursor into the rank's schedule order and
@@ -104,6 +147,9 @@ pub struct EventEngine {
     starts: Vec<f64>,
     /// Nodes finished in the current execution.
     executed: usize,
+    /// Rank killed by the current faulted execution (`None` on the
+    /// normal path and before the fault fires).
+    dead_rank: Option<usize>,
 }
 
 impl EventEngine {
@@ -145,6 +191,7 @@ impl EventEngine {
             ready_at: vec![0.0; n],
             starts: vec![0.0; n],
             executed: 0,
+            dead_rank: None,
         }
     }
 
@@ -172,17 +219,7 @@ impl EventEngine {
             self.csr.edge_count(),
             "one delay per CSR edge"
         );
-        // Reset per-run state.
-        self.frontier.reset();
-        self.queue.clear();
-        self.executed = 0;
-        for r in &mut self.ranks {
-            r.cursor = 0;
-            r.idle = true;
-            r.free_at = 0.0;
-        }
-        self.ready_at[..n].fill(0.0);
-        self.starts[..n].fill(0.0);
+        self.reset_run_state(n);
 
         // Bootstrap: dependency-free nodes are ready at t = 0.
         let sources: Vec<usize> = self.frontier.sources().collect();
@@ -204,6 +241,7 @@ impl EventEngine {
                         self.node_ready(to, self.ready_at[to], weights);
                     }
                 }
+                Event::Fault => unreachable!("fault event on the normal path"),
             }
         }
         assert_eq!(
@@ -213,6 +251,101 @@ impl EventEngine {
         );
         // Destination has zero weight: its start *is* the batch time.
         self.starts[self.dest]
+    }
+
+    /// Execute one batch with rank `victim` dying at simulated instant
+    /// `fault_time`. The fault enters the queue as an ordinary event, so
+    /// its ordering against finishes and arrivals is deterministic; when
+    /// it fires, the victim's in-flight action is cancelled, its queued
+    /// actions never dispatch, and the survivors drain whatever work
+    /// remains reachable. If the batch finishes before `fault_time`, the
+    /// outcome is a complete batch ([`FaultOutcome::complete`]) with
+    /// `drain_time` equal to the makespan.
+    pub fn execute_with_fault(
+        &mut self,
+        weights: &[f64],
+        edge_delays: &[f64],
+        victim: usize,
+        fault_time: f64,
+    ) -> FaultOutcome {
+        let n = self.csr.len();
+        assert_eq!(weights.len(), n, "one weight per node");
+        assert_eq!(
+            edge_delays.len(),
+            self.csr.edge_count(),
+            "one delay per CSR edge"
+        );
+        assert!(victim < self.ranks.len(), "fault victim rank out of range");
+        assert!(
+            fault_time >= 0.0 && fault_time.is_finite(),
+            "fault time must be finite and ≥ 0"
+        );
+        self.reset_run_state(n);
+
+        let mut completed = vec![false; n];
+        let mut drain_time = 0.0f64;
+        // The fault is queued before the bootstrap finishes, so at equal
+        // times it pops first — an action finishing exactly at the fault
+        // instant is cancelled, not salvaged. Either convention would be
+        // deterministic; this one is pessimistic.
+        self.queue.push(fault_time, Event::Fault);
+        let sources: Vec<usize> = self.frontier.sources().collect();
+        for v in sources {
+            self.node_ready(v, 0.0, weights);
+        }
+
+        while let Some((t, ev)) = self.queue.pop() {
+            match ev {
+                Event::Fault => {
+                    if self.executed == n {
+                        // The batch beat the fault; nothing to cancel.
+                        continue;
+                    }
+                    self.dead_rank = Some(victim);
+                    if t > drain_time {
+                        drain_time = t;
+                    }
+                }
+                Event::Finish { node } => {
+                    if self.dead_rank.is_some() && self.owner[node] == Some(victim) {
+                        // The victim's in-flight action dies with it:
+                        // no completion, no output arrivals.
+                        continue;
+                    }
+                    completed[node] = true;
+                    if t > drain_time {
+                        drain_time = t;
+                    }
+                    self.on_finish(node, t, weights, edge_delays);
+                }
+                Event::Arrive { to } => {
+                    if t > self.ready_at[to] {
+                        self.ready_at[to] = t;
+                    }
+                    if self.frontier.satisfy(to) {
+                        self.node_ready(to, self.ready_at[to], weights);
+                    }
+                }
+            }
+        }
+        let cancelled = n - self.executed;
+        self.dead_rank = None;
+        FaultOutcome { fault_time, drain_time, completed, cancelled }
+    }
+
+    /// Reset all per-run buffers ahead of an execution.
+    fn reset_run_state(&mut self, n: usize) {
+        self.frontier.reset();
+        self.queue.clear();
+        self.executed = 0;
+        self.dead_rank = None;
+        for r in &mut self.ranks {
+            r.cursor = 0;
+            r.idle = true;
+            r.free_at = 0.0;
+        }
+        self.ready_at[..n].fill(0.0);
+        self.starts[..n].fill(0.0);
     }
 
     /// Start times of the last [`EventEngine::execute`] run, node-aligned.
@@ -235,8 +368,12 @@ impl EventEngine {
     }
 
     /// Dispatch the head of `rank`'s order if the device is idle and the
-    /// head's dependencies have all arrived.
+    /// head's dependencies have all arrived. A dead rank (faulted
+    /// executions only) never dispatches again.
     fn try_dispatch(&mut self, rank: usize, weights: &[f64]) {
+        if self.dead_rank == Some(rank) {
+            return;
+        }
         let r = &mut self.ranks[rank];
         if !r.idle || r.cursor >= r.order.len() {
             return;
@@ -361,5 +498,86 @@ mod tests {
         assert_eq!(2.0 * t1, t2);
         let t1_again = engine.execute(&w1, &zeros);
         assert_eq!(t1.to_bits(), t1_again.to_bits());
+    }
+
+    #[test]
+    fn fault_after_makespan_is_a_complete_batch() {
+        let (pdag, mut engine) = engine_for(ScheduleKind::GPipe, 4, 8);
+        let w = pdag.weights(|_| 1.0);
+        let zeros = vec![0.0; pdag.dag.edge_count()];
+        let makespan = engine.execute(&w, &zeros);
+        let out = engine.execute_with_fault(&w, &zeros, 0, makespan + 1.0);
+        assert!(out.complete());
+        assert_eq!(out.cancelled, 0);
+        assert!(out.completed.iter().all(|&c| c));
+        assert_eq!(out.drain_time.to_bits(), makespan.to_bits());
+        // And the engine still executes normal batches afterwards.
+        assert_eq!(engine.execute(&w, &zeros).to_bits(), makespan.to_bits());
+    }
+
+    #[test]
+    fn fault_at_zero_on_the_first_stage_starves_everything() {
+        let (pdag, mut engine) = engine_for(ScheduleKind::GPipe, 4, 8);
+        let w = pdag.weights(|_| 1.0);
+        let zeros = vec![0.0; pdag.dag.edge_count()];
+        // Rank 0 owns stage 0: with it dead from t = 0, no microbatch can
+        // even enter the pipeline. Only the abstract source completes.
+        let out = engine.execute_with_fault(&w, &zeros, 0, 0.0);
+        assert!(!out.complete());
+        let done = out.completed.iter().filter(|&&c| c).count();
+        assert_eq!(done, 1, "only the source node should complete");
+        assert_eq!(out.cancelled, pdag.len() - 1);
+    }
+
+    #[test]
+    fn midway_fault_salvages_a_prefix_and_is_deterministic() {
+        for kind in ScheduleKind::all() {
+            let (pdag, mut engine) = engine_for(kind, 4, 8);
+            let w = pdag.weights(|_| 1.0);
+            let zeros = vec![0.0; pdag.dag.edge_count()];
+            let makespan = engine.execute(&w, &zeros);
+            let out = engine.execute_with_fault(&w, &zeros, 1, 0.5 * makespan);
+            assert!(!out.complete(), "{}", kind.name());
+            let done = out.completed.iter().filter(|&&c| c).count();
+            assert!(done > 1, "{}: survivors should salvage work", kind.name());
+            assert_eq!(done + out.cancelled, pdag.len(), "{}", kind.name());
+            assert!(out.drain_time >= out.fault_time, "{}", kind.name());
+            assert!(out.drain_time <= makespan, "{}", kind.name());
+            // Bit-identical replay.
+            let again = engine.execute_with_fault(&w, &zeros, 1, 0.5 * makespan);
+            assert_eq!(again.completed, out.completed, "{}", kind.name());
+            assert_eq!(
+                again.drain_time.to_bits(),
+                out.drain_time.to_bits(),
+                "{}",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn faults_never_deadlock_at_any_onset() {
+        // Property sweep: every victim × a grid of fault instants, on
+        // every schedule — the drain loop must terminate with completed
+        // and cancelled conserving the node count.
+        for kind in ScheduleKind::all() {
+            let (pdag, mut engine) = engine_for(kind, 4, 6);
+            let w = pdag.weights(|_| 1.0);
+            let zeros = vec![0.0; pdag.dag.edge_count()];
+            let makespan = engine.execute(&w, &zeros);
+            for victim in 0..4 {
+                for i in 0..12 {
+                    let t = makespan * i as f64 / 10.0;
+                    let out = engine.execute_with_fault(&w, &zeros, victim, t);
+                    let done = out.completed.iter().filter(|&&c| c).count();
+                    assert_eq!(
+                        done + out.cancelled,
+                        pdag.len(),
+                        "{} victim {victim} t {t}",
+                        kind.name()
+                    );
+                }
+            }
+        }
     }
 }

@@ -9,11 +9,13 @@
 //! here for the pre-refactor `sim::CostModel` spelling.
 
 pub mod convergence;
+pub mod elastic;
 pub mod engine;
 pub mod runner;
 
 pub use crate::cost::CostModel;
 pub use convergence::{layer_curvature, progress_to_accuracy, ConvergenceSim};
+pub use elastic::run_faulted;
 pub use engine::EventEngine;
 pub use runner::{
     build_layout, run, run_with_partition, shadow_memo_stats, BackwardSample, GanttBlock,

@@ -32,7 +32,7 @@ use crate::config::{ExecMode, ExperimentConfig, Scenario};
 use crate::cost::{memory_plan_for, CostModel, ProfileRecorder};
 use crate::freeze::{select_frozen_units_into, ControllerFactory, ModelLayout};
 use crate::graph::pipeline::{BatchEvaluator, Node, PipelineDag};
-use crate::partition::{balanced_partition, PartitionMethod};
+use crate::partition::{LayerProfile, PartitionMethod};
 use crate::schedule::Schedule;
 use crate::sim::convergence::{progress_to_accuracy, ConvergenceSim};
 use crate::sim::engine::EventEngine;
@@ -52,6 +52,14 @@ pub enum SimError {
     /// The scenario names ranks or stage boundaries the pipeline does
     /// not have.
     InvalidScenario(String),
+    /// The scenario kills ranks but the config picked no
+    /// [`RecoveryStrategy`](crate::config::RecoveryStrategy) — the run
+    /// cannot decide on the user's behalf whether to shrink or restart.
+    RankLost(String),
+    /// The chosen recovery strategy cannot rebuild a feasible run on
+    /// the surviving fleet (no survivors left, or the reduced fleet's
+    /// memory floors are unsatisfiable).
+    RecoveryInfeasible(String),
 }
 
 impl std::fmt::Display for SimError {
@@ -59,6 +67,8 @@ impl std::fmt::Display for SimError {
         match self {
             SimError::InfeasibleMemoryBudget(msg) => write!(f, "{msg}"),
             SimError::InvalidScenario(msg) => write!(f, "invalid scenario: {msg}"),
+            SimError::RankLost(msg) => write!(f, "{msg}"),
+            SimError::RecoveryInfeasible(msg) => write!(f, "{msg}"),
         }
     }
 }
@@ -160,6 +170,24 @@ pub struct SimResult {
     /// [`memory_plan_for`](crate::cost::memory_plan_for)); `None` ⇒ no
     /// recomputation.
     pub recompute: Option<Vec<f64>>,
+    /// Replans whose LP fallback ladder exhausted while a feasible plan
+    /// was already installed; the controller kept that plan (graceful
+    /// degradation) rather than disabling freezing.
+    pub replan_failures: usize,
+    /// Whole-rank fault events the run absorbed (crashes, preemptions,
+    /// evictions). Zero on the fault-free path.
+    pub faults: usize,
+    /// Microbatches of completed work discarded to faults: the partial
+    /// step's work past the last `--ckpt-interval` boundary, plus —
+    /// under the restart baseline — every microbatch of the replayed
+    /// steps.
+    pub lost_microbatches: usize,
+    /// Simulated seconds the run spent recovering from faults: weight
+    /// redistribution, drained partial batches, and (restart baseline)
+    /// discarded training passes.
+    pub recovery_time_s: f64,
+    /// Ranks still alive when the run finished.
+    pub final_ranks: usize,
 }
 
 impl SimResult {
@@ -179,30 +207,42 @@ impl SimResult {
 /// APF's per-parameter score semantics are exact at unit granularity.
 const UNITS_PER_LAYER: usize = 16;
 /// Synthetic parameter dimensions per unit in the convergence sim.
-const CONV_DIMS: usize = 1;
+pub(crate) const CONV_DIMS: usize = 1;
+
+/// The per-layer partition profile a config induces: raw parameter
+/// counts, activation-dominated memory (activations scale with layer
+/// width ≈ tokens · d; parameters add their own footprint), and the
+/// analytic per-layer forward+backward latency. Every layout build —
+/// including the elastic-recovery repartition over a shrunken fleet —
+/// goes through this validated profile.
+pub fn layer_profile_for(cfg: &ExperimentConfig) -> LayerProfile {
+    let lp = cfg.model.layer_params();
+    let act = (cfg.microbatch_size * cfg.seq_len * cfg.model.d_model) as f64;
+    LayerProfile::new(
+        lp.to_vec(),
+        lp.iter().map(|&p| p + act).collect(),
+        CostModel::layer_times(&cfg.model, &cfg.gpu, cfg.microbatch_size, cfg.seq_len),
+    )
+}
 
 /// Build the simulator's model layout for a config: every model layer
 /// subdivides into [`UNITS_PER_LAYER`] equal units; layers are placed on
 /// virtual stages by the chosen partition heuristic.
 pub fn build_layout(cfg: &ExperimentConfig, partition: PartitionMethod) -> ModelLayout {
-    let stages = cfg.stages();
+    build_layout_for_stages(cfg, partition, cfg.stages())
+}
+
+/// [`build_layout`] against an explicit stage count — the elastic
+/// recovery path repartitions the *same* layer profile over the
+/// surviving fleet's (smaller) stage total, so unit identity (and with
+/// it the convergence state) is preserved across the rebuild.
+pub fn build_layout_for_stages(
+    cfg: &ExperimentConfig,
+    partition: PartitionMethod,
+    stages: usize,
+) -> ModelLayout {
+    let layer_stage = layer_profile_for(cfg).partition(partition, stages);
     let lp = cfg.model.layer_params();
-    let weights: Vec<f64> = match partition {
-        PartitionMethod::Parameter => lp.to_vec(),
-        PartitionMethod::Memory => {
-            // Activation-dominated memory: activations scale with layer
-            // width (≈ tokens · d); parameters add their own footprint.
-            let times = lp.to_vec();
-            times
-                .iter()
-                .map(|&p| p + (cfg.microbatch_size * cfg.seq_len * cfg.model.d_model) as f64)
-                .collect()
-        }
-        PartitionMethod::Time => {
-            CostModel::layer_times(&cfg.model, &cfg.gpu, cfg.microbatch_size, cfg.seq_len)
-        }
-    };
-    let layer_stage = balanced_partition(&weights, stages);
     let mut unit_params = Vec::new();
     let mut unit_layer = Vec::new();
     for (l, &p) in lp.iter().enumerate() {
@@ -282,6 +322,12 @@ struct ReferenceKey {
     seed: u64,
     steps: usize,
     microbatches: usize,
+    /// Structural fingerprint of the pipeline DAG the run executes
+    /// ([`PipelineDag::signature`]) plus its stage total: two runs that
+    /// agree on every scalar above but were built for different
+    /// (schedule, fleet) shapes must not share a memo entry.
+    dag_sig: u64,
+    stages: usize,
 }
 
 /// Capacity cap of the process-wide shadow-run memo: a long sweep grid
@@ -348,11 +394,16 @@ pub fn shadow_memo_stats() -> (u64, u64, usize) {
 }
 
 /// Final loss of the no-freezing shadow run, memoized on
-/// (layout, steps, seed, …) in a capacity-bounded process-wide map.
-/// Thread-safe; concurrent first callers may both compute (idempotent —
-/// the sim is deterministic in the key), and every later caller hits
-/// the cache until eviction.
-fn reference_final_loss(layout: &ModelLayout, eta: f64, cfg: &ExperimentConfig) -> f64 {
+/// (layout, steps, seed, schedule/DAG signature, …) in a
+/// capacity-bounded process-wide map. Thread-safe; concurrent first
+/// callers may both compute (idempotent — the sim is deterministic in
+/// the key), and every later caller hits the cache until eviction.
+pub(crate) fn reference_final_loss(
+    layout: &ModelLayout,
+    eta: f64,
+    cfg: &ExperimentConfig,
+    pdag: &PipelineDag,
+) -> f64 {
     let key = ReferenceKey {
         unit_layer: layout.unit_layer.clone(),
         num_layers: layout.num_layers(),
@@ -361,6 +412,8 @@ fn reference_final_loss(layout: &ModelLayout, eta: f64, cfg: &ExperimentConfig) 
         seed: cfg.seed,
         steps: cfg.steps,
         microbatches: cfg.microbatches,
+        dag_sig: pdag.signature(),
+        stages: layout.num_stages,
     };
     if let Some(loss) = reference_memo().lock().unwrap().lookup(&key) {
         return loss;
@@ -386,6 +439,23 @@ pub fn run_with_partition(
     cfg: &ExperimentConfig,
     partition: PartitionMethod,
 ) -> Result<SimResult, SimError> {
+    // Fault scenarios leave the bit-identity-contracted batch loop
+    // entirely: they dispatch to the recovery runner, which requires an
+    // explicit strategy choice rather than guessing one.
+    if let Some(sc) = &cfg.scenario {
+        sc.validate(cfg.ranks, cfg.stages())
+            .map_err(SimError::InvalidScenario)?;
+        if sc.has_faults() {
+            return match cfg.recovery {
+                Some(strategy) => crate::sim::elastic::run_faulted(cfg, partition, strategy),
+                None => Err(SimError::RankLost(format!(
+                    "scenario '{sc}' kills ranks but no recovery strategy is set; \
+                     pass --elastic (or --recovery restart) to choose how the run \
+                     should react to losing a rank"
+                ))),
+            };
+        }
+    }
     let schedule = Schedule::build(
         cfg.schedule,
         cfg.ranks,
@@ -459,7 +529,7 @@ pub fn run_with_partition(
     let reference_final = if cfg.method == FreezeMethod::NoFreezing {
         None
     } else {
-        Some(reference_final_loss(&layout, eta, cfg))
+        Some(reference_final_loss(&layout, eta, cfg, &pdag))
     };
 
     let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x51_73);
@@ -757,13 +827,18 @@ pub fn run_with_partition(
         replans,
         replan_latency_s,
         recompute: plan.recompute,
+        replan_failures: controller.replan_failures(),
+        faults: 0,
+        lost_microbatches: 0,
+        recovery_time_s: 0.0,
+        final_ranks: cfg.ranks,
     })
 }
 
 /// P2P stage boundary of each CSR edge: `Some(b)` when the edge crosses
 /// ranks between adjacent stages `b` and `b+1` (the edges scenario link
 /// slowdowns can target), `None` for same-rank and source/dest wiring.
-fn edge_boundaries(pdag: &PipelineDag) -> Vec<Option<usize>> {
+pub(crate) fn edge_boundaries(pdag: &PipelineDag) -> Vec<Option<usize>> {
     pdag.cross_rank_edge_map(
         |a, b| (a.stage.abs_diff(b.stage) == 1).then_some(a.stage.min(b.stage)),
         None,
@@ -772,7 +847,7 @@ fn edge_boundaries(pdag: &PipelineDag) -> Vec<Option<usize>> {
 
 /// Compute Gantt blocks (per-action start/duration/rank) from one
 /// executed step's start times and node weights.
-fn gantt(
+pub(crate) fn gantt(
     pdag: &PipelineDag,
     starts: &[f64],
     weights: &[f64],
@@ -1046,6 +1121,36 @@ mod tests {
         assert_eq!(replanned.replan_latency_s.len(), replanned.replans);
         assert!(replanned.replan_latency_s.iter().all(|&s| (0.0..10.0).contains(&s)));
         assert!(static_plan.replan_latency_s.is_empty());
+    }
+
+    #[test]
+    fn fault_scenarios_demand_an_explicit_recovery_strategy() {
+        use crate::config::Scenario;
+        // A fault scenario with no strategy is a clean RankLost error
+        // that tells the user which flags pick one.
+        let mut cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+        cfg.scenario = Some(Scenario::crash(1, 40));
+        match run(&cfg) {
+            Err(SimError::RankLost(msg)) => {
+                assert!(msg.contains("--elastic"), "missing flag hint: {msg}");
+                assert!(msg.contains("--recovery restart"), "missing flag hint: {msg}");
+            }
+            other => panic!("expected RankLost, got {other:?}"),
+        }
+        // Fault validation still fires before the strategy check.
+        cfg.scenario = Some(Scenario::crash(99, 40));
+        assert!(matches!(run(&cfg), Err(SimError::InvalidScenario(_))));
+    }
+
+    #[test]
+    fn fault_free_runs_report_zero_fault_metrics() {
+        let cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.faults, 0);
+        assert_eq!(r.lost_microbatches, 0);
+        assert_eq!(r.recovery_time_s, 0.0);
+        assert_eq!(r.final_ranks, cfg.ranks);
+        assert_eq!(r.replan_failures, 0);
     }
 
     #[test]

@@ -1,0 +1,175 @@
+//! Integration coverage of the fault-injection and elastic-recovery
+//! path (`sim/elastic.rs`): end-to-end determinism of fixed-seed fault
+//! runs, microbatch accounting under both recovery strategies, and a
+//! crash-at-every-onset sweep that proves the recovery loop never
+//! deadlocks regardless of where in the run the fault lands.
+
+mod common;
+
+use common::quick_paced;
+use timelyfreeze::config::{ExperimentConfig, RecoveryStrategy, Scenario};
+use timelyfreeze::sim;
+use timelyfreeze::types::{FreezeMethod, ScheduleKind};
+
+/// A fault config at integration-test scale: 60 steps on llama-1b /
+/// 1F1B with microbatch checkpoints every 2 microbatches.
+fn fault_cfg(spec: &str, strategy: RecoveryStrategy) -> ExperimentConfig {
+    let mut cfg = quick_paced(
+        "llama-1b",
+        FreezeMethod::TimelyFreeze,
+        ScheduleKind::OneFOneB,
+        60,
+        (8, 20, 32),
+    );
+    cfg.scenario = Some(Scenario::parse(spec).unwrap());
+    cfg.recovery = Some(strategy);
+    cfg.ckpt_interval = 2;
+    cfg
+}
+
+/// Fixed-seed fault runs reproduce the *entire* result — headline
+/// metrics, fault accounting, the trajectory, and the per-unit freeze
+/// histogram — bit for bit, under both recovery strategies and all
+/// three fault kinds.
+#[test]
+fn fault_runs_reproduce_bit_identically_end_to_end() {
+    for strategy in [RecoveryStrategy::Elastic, RecoveryStrategy::Restart] {
+        for spec in ["crash:1@40", "preempt:2@20-35", "evict-slowest@30"] {
+            let cfg = fault_cfg(spec, strategy);
+            let a = sim::run(&cfg).unwrap();
+            let b = sim::run(&cfg).unwrap();
+            let tag = format!("{spec} / {}", strategy.name());
+            assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "{tag}");
+            assert_eq!(a.steady_throughput.to_bits(), b.steady_throughput.to_bits(), "{tag}");
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{tag}");
+            assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "{tag}");
+            assert_eq!(a.recovery_time_s.to_bits(), b.recovery_time_s.to_bits(), "{tag}");
+            assert_eq!(a.faults, b.faults, "{tag}");
+            assert_eq!(a.lost_microbatches, b.lost_microbatches, "{tag}");
+            assert_eq!(a.final_ranks, b.final_ranks, "{tag}");
+            assert_eq!(a.trajectory.len(), b.trajectory.len(), "{tag}");
+            for (pa, pb) in a.trajectory.iter().zip(&b.trajectory) {
+                assert_eq!(pa.step, pb.step, "{tag}");
+                assert_eq!(pa.step_time.to_bits(), pb.step_time.to_bits(), "{tag}");
+                assert_eq!(pa.mean_afr.to_bits(), pb.mean_afr.to_bits(), "{tag}");
+            }
+            assert_eq!(a.unit_freeze_freq.len(), b.unit_freeze_freq.len(), "{tag}");
+            for (fa, fb) in a.unit_freeze_freq.iter().zip(&b.unit_freeze_freq) {
+                assert_eq!(fa.to_bits(), fb.to_bits(), "{tag}");
+            }
+        }
+    }
+}
+
+/// A crash can land at *any* wall step — including step 1, mid-warmup,
+/// the freeze transition, the final step, and past the end of the run —
+/// and the recovery loop must always terminate with sane accounting.
+#[test]
+fn crash_at_every_onset_completes() {
+    let probes: Vec<usize> =
+        (1..=66).step_by(5).chain([8, 20, 32, 59, 60, 500]).collect();
+    for onset in probes {
+        let cfg = fault_cfg(&format!("crash:1@{onset}"), RecoveryStrategy::Elastic);
+        let r = sim::run(&cfg)
+            .unwrap_or_else(|e| panic!("crash:1@{onset} must recover, got {e}"));
+        assert!(r.faults <= 1, "crash:1@{onset}: {} faults", r.faults);
+        // Onsets safely inside the run always fire and shrink the fleet
+        // by the one crashed rank. Near or past the end, the fault may
+        // be moot (it lands after the final commit, or after the run's
+        // last wall step) — the fleet then finishes at full strength.
+        if onset <= 50 {
+            assert_eq!(r.faults, 1, "crash:1@{onset}");
+            assert_eq!(r.final_ranks, cfg.ranks - 1, "crash:1@{onset}");
+        } else {
+            assert!(
+                r.final_ranks == cfg.ranks - 1 || r.final_ranks == cfg.ranks,
+                "crash:1@{onset}: finished on {} ranks",
+                r.final_ranks
+            );
+        }
+        // Elastic recovery loses at most the interrupted pass.
+        assert!(
+            r.lost_microbatches <= cfg.microbatches,
+            "crash:1@{onset}: lost {}",
+            r.lost_microbatches
+        );
+        assert!(r.throughput.is_finite() && r.throughput > 0.0, "crash:1@{onset}");
+        assert!(r.accuracy.is_finite(), "crash:1@{onset}");
+    }
+}
+
+/// Restart-from-scratch accounting: a crash at step T throws away every
+/// committed step, so the lost-microbatch ledger grows linearly with T
+/// while elastic's stays bounded by one pass.
+#[test]
+fn restart_loses_replayed_steps_elastic_does_not() {
+    let m = fault_cfg("crash:1@10", RecoveryStrategy::Restart).microbatches;
+    let mut prev_lost = 0usize;
+    for onset in [10usize, 25, 45] {
+        let spec = format!("crash:1@{onset}");
+        let restart = sim::run(&fault_cfg(&spec, RecoveryStrategy::Restart)).unwrap();
+        let elastic = sim::run(&fault_cfg(&spec, RecoveryStrategy::Elastic)).unwrap();
+        // Every wall step before the crash had committed, so restart
+        // discards at least (onset - 1) full passes plus the partial one.
+        assert!(
+            restart.lost_microbatches >= (onset - 1) * m,
+            "{spec}: restart lost {} < {}",
+            restart.lost_microbatches,
+            (onset - 1) * m
+        );
+        assert!(restart.lost_microbatches <= onset * m, "{spec}");
+        assert!(elastic.lost_microbatches <= m, "{spec}");
+        // Later crashes cost restart strictly more.
+        assert!(restart.lost_microbatches > prev_lost, "{spec}");
+        prev_lost = restart.lost_microbatches;
+        // Both paths pay simulated recovery time; restart pays more
+        // wall-clock overall, which shows up as lower throughput.
+        assert!(restart.recovery_time_s > 0.0, "{spec}");
+        assert!(elastic.throughput > restart.throughput, "{spec}");
+    }
+}
+
+/// Preemption windows of any width resolve to a full-strength fleet at
+/// the end of the run, and a preemption that outlives the run behaves
+/// like a crash until the wall clock stops.
+#[test]
+fn preemption_windows_always_rejoin_or_degrade_cleanly() {
+    for (onset, until) in [(5usize, 6usize), (20, 40), (30, 31), (50, 400)] {
+        let spec = format!("preempt:1@{onset}-{until}");
+        let r = sim::run(&fault_cfg(&spec, RecoveryStrategy::Elastic))
+            .unwrap_or_else(|e| panic!("{spec} must recover, got {e}"));
+        assert_eq!(r.faults, 1, "{spec}");
+        assert!(r.final_ranks == 4 || r.final_ranks == 3, "{spec}: {}", r.final_ranks);
+        assert!(r.throughput > 0.0, "{spec}");
+    }
+}
+
+/// A fault scenario without a recovery strategy is a clean, actionable
+/// error (`SimError::RankLost`), not a panic or a silent fault-free run.
+#[test]
+fn fault_without_strategy_is_a_clean_error() {
+    let mut cfg = fault_cfg("crash:1@40", RecoveryStrategy::Elastic);
+    cfg.recovery = None;
+    match sim::run(&cfg) {
+        Err(sim::SimError::RankLost(msg)) => {
+            assert!(msg.contains("--elastic"), "message should name the flag: {msg}");
+        }
+        other => panic!("expected RankLost, got {other:?}"),
+    }
+}
+
+/// Multi-fault timelines compose: a crash followed by a preemption of a
+/// *different* rank shrinks to 2 ranks mid-run and ends on 3.
+#[test]
+fn stacked_faults_compose() {
+    let r = sim::run(&fault_cfg(
+        "crash:1@20,preempt:2@35-50",
+        RecoveryStrategy::Elastic,
+    ))
+    .unwrap();
+    assert_eq!(r.faults, 2);
+    assert_eq!(r.final_ranks, 3);
+    assert!(r.throughput > 0.0);
+    // Fault metrics accumulate across both events.
+    assert!(r.recovery_time_s > 0.0);
+}

@@ -6,7 +6,7 @@
 mod common;
 
 use common::prop::{check, usize_in};
-use timelyfreeze::config::{LinkSlowdown, Scenario, Straggler};
+use timelyfreeze::config::{FaultEvent, FaultKind, LinkSlowdown, Scenario, Straggler};
 
 /// Every spec the docs advertise round-trips: parse → Display → parse
 /// lands on an identical scenario (label included — Display *is* the
@@ -25,6 +25,11 @@ fn documented_specs_round_trip() {
         "straggler:2x2.0@250,jitter:0.05",
         "straggler:2x1.5@300, jitter:0.05, link:0x4.0@100, seed:7",
         "straggler:0x1.25,straggler:3x2.5@10,link:1.5,link:2x3.0@5",
+        "crash:2@500",
+        "preempt:1@300-450",
+        "evict-slowest@400",
+        "crash:3@200,preempt:1@300-450,evict-slowest@800",
+        "straggler:1x2.0@10,crash:2@500,seed:9",
     ] {
         let parsed = Scenario::parse(spec).unwrap_or_else(|e| panic!("'{spec}': {e}"));
         let displayed = parsed.to_string();
@@ -68,6 +73,26 @@ fn prop_random_specs_round_trip() {
                 expect = expect.with_link(None, factor, onset);
             }
         }
+        for _ in 0..usize_in(rng, 0, 2) {
+            let onset = usize_in(rng, 0, 900);
+            match usize_in(rng, 0, 2) {
+                0 => {
+                    let rank = usize_in(rng, 0, 7);
+                    terms.push(format!("crash:{rank}@{onset}"));
+                    expect = expect.with_crash(rank, onset);
+                }
+                1 => {
+                    let rank = usize_in(rng, 0, 7);
+                    let until = onset + usize_in(rng, 1, 200);
+                    terms.push(format!("preempt:{rank}@{onset}-{until}"));
+                    expect = expect.with_preempt(rank, onset, until);
+                }
+                _ => {
+                    terms.push(format!("evict-slowest@{onset}"));
+                    expect = expect.with_evict_slowest(onset);
+                }
+            }
+        }
         if rng.bernoulli(0.5) {
             let seed = rng.next_below(1 << 20);
             terms.push(format!("seed:{seed}"));
@@ -100,6 +125,18 @@ fn parsed_terms_populate_the_right_fields() {
         vec![LinkSlowdown { boundary: Some(0), factor: 4.0, onset: 100 }]
     );
     assert_eq!(sc.seed, 7);
+    // Fault terms populate the onset-ordered `faults` list.
+    let sc = Scenario::parse("crash:2@500,preempt:1@300-450,evict-slowest@400").unwrap();
+    assert_eq!(
+        sc.faults,
+        vec![
+            FaultEvent { kind: FaultKind::Crash { rank: 2 }, onset: 500 },
+            FaultEvent { kind: FaultKind::Preempt { rank: 1, until: 450 }, onset: 300 },
+            FaultEvent { kind: FaultKind::EvictSlowest, onset: 400 },
+        ]
+    );
+    assert_eq!(sc.faults[0].named_rank(), Some(2));
+    assert_eq!(sc.faults[2].named_rank(), None);
     // An empty spec (or stray commas) is calm.
     let calm = Scenario::parse(" , ,calm, ").unwrap();
     assert!(calm.is_identity());
@@ -124,6 +161,16 @@ fn malformed_specs_name_the_offence() {
         ("link:0x0", "bad factor in 'link:0x0'"),
         ("seed:x", "bad scenario seed in 'seed:x'"),
         ("straggler:", "wants <rank>x<factor>[@onset]"),
+        ("crash:1", "wants crash:<rank>@<onset>"),
+        ("crash:x@5", "bad crash rank in 'crash:x@5'"),
+        ("crash:1@x", "bad onset step in 'crash:1@x'"),
+        ("preempt:1@300", "wants preempt:<rank>@<from>-<until>"),
+        ("preempt:a@1-2", "bad preempt rank in 'preempt:a@1-2'"),
+        ("preempt:1@5-x", "bad preempt end in 'preempt:1@5-x'"),
+        ("preempt:1@50-40", "must end after it begins"),
+        ("preempt:1@50-50", "must end after it begins"),
+        ("evict-slowest", "wants evict-slowest@<onset>"),
+        ("evict-slowest@x", "bad onset step in 'evict-slowest@x'"),
     ] {
         let err = Scenario::parse(spec).expect_err(spec);
         assert!(
@@ -133,7 +180,14 @@ fn malformed_specs_name_the_offence() {
     }
     // The unknown-term message teaches the full grammar.
     let err = Scenario::parse("warp:9").unwrap_err();
-    for fragment in ["straggler:<rank>x<factor>[@onset]", "jitter:<sigma>[@onset]", "seed:<n>"] {
+    for fragment in [
+        "straggler:<rank>x<factor>[@onset]",
+        "jitter:<sigma>[@onset]",
+        "seed:<n>",
+        "crash:<rank>@<onset>",
+        "preempt:<rank>@<from>-<until>",
+        "evict-slowest@<onset>",
+    ] {
         assert!(err.contains(fragment), "grammar hint missing '{fragment}': {err}");
     }
 }

@@ -52,6 +52,9 @@ TF_BENCH_JSON="$OUT_JSON" cargo bench --bench perf_micro
 echo "== fig17 dynamics (quick smoke: replanning must not lose to static) =="
 TF_BENCH_QUICK=1 cargo bench --bench fig17_dynamics
 
+echo "== fig19 elasticity (quick smoke: elastic recovery must beat restart) =="
+TF_BENCH_QUICK=1 cargo bench --bench fig19_elasticity
+
 if [[ ! -f "$BASELINE" ]]; then
     echo "perf_gate: no baseline at $BASELINE — recorded $OUT_JSON, skipping comparison"
     exit 0
