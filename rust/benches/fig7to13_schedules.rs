@@ -4,6 +4,11 @@
 //! The four method runs of each figure execute on worker threads;
 //! rendering stays sequential so the output is unchanged. SVGs land in
 //! bench_out/.
+//!
+//! A trailing synth column runs `--schedule synth` on every unique
+//! (preset, fleet) cell of the grid and asserts the synthesized
+//! schedule's no-freeze batch time is ≤ the best of the four fixed
+//! schedules, reporting bubble fraction and peak in-flight per cell.
 use timelyfreeze::bench_support::parallel::map_parallel;
 use timelyfreeze::bench_support::tables::apply_quick;
 use timelyfreeze::config::ExperimentConfig;
@@ -44,6 +49,53 @@ fn render(figure: &str, preset: &str, schedule: ScheduleKind, ranks: usize, mb: 
     }
 }
 
+/// The synth column: on each unique (preset, ranks, microbatches) cell
+/// of the fig7–13 grid, compare the synthesized schedule's no-freeze
+/// batch time against all four fixed schedules. The portfolio guarantee
+/// (the fixed four are candidates, scored under shape-matched cost
+/// models) makes the assertion hold by construction; this is the
+/// in-bench regression gate for it.
+fn synth_column() {
+    println!("\n===== synth column: synthesized vs best fixed schedule =====");
+    let cells = [("llama-8b", 4usize, 8usize), ("llama-1b", 6, 6), ("llama-1b", 8, 8)];
+    for (preset, ranks, mb) in cells {
+        let run_kind = |kind: ScheduleKind| -> SimResult {
+            let mut cfg = ExperimentConfig::paper_preset(preset).unwrap();
+            apply_quick(&mut cfg);
+            // Analytic no-freeze: batch_time_nofreeze is closed-form
+            // and independent of step count, so the column stays cheap.
+            cfg.exec = timelyfreeze::config::ExecMode::Analytic;
+            cfg.method = FreezeMethod::NoFreezing;
+            cfg.schedule = kind;
+            cfg.ranks = ranks;
+            cfg.microbatches = mb;
+            sim::run(&cfg).expect("feasible config")
+        };
+        let fixed: Vec<(ScheduleKind, f64)> = ScheduleKind::all()
+            .into_iter()
+            .map(|kind| (kind, run_kind(kind).batch_time_nofreeze))
+            .collect();
+        let (best_kind, best_bt) =
+            fixed.iter().cloned().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
+        let synth = run_kind(ScheduleKind::Synthesized);
+        println!(
+            "  {preset} {ranks}x{mb}: synth {:.4}s vs best fixed {:.4}s ({}) · bubble {:.2}% · peak in-flight {} mb",
+            synth.batch_time_nofreeze,
+            best_bt,
+            best_kind.name(),
+            100.0 * synth.bubble_fraction,
+            synth.peak_inflight.iter().copied().max().unwrap_or(0),
+        );
+        assert!(
+            synth.batch_time_nofreeze <= best_bt * (1.0 + 1e-9),
+            "synthesized schedule slower than best fixed on {preset} {ranks}x{mb}: \
+             {} > {best_bt} ({})",
+            synth.batch_time_nofreeze,
+            best_kind.name(),
+        );
+    }
+}
+
 fn main() {
     // Figures 7–10: 4 GPUs, 8 microbatches, LLaMA-8B.
     render("fig7", "llama-8b", ScheduleKind::GPipe, 4, 8);
@@ -55,5 +107,6 @@ fn main() {
     render("fig12", "llama-1b", ScheduleKind::OneFOneB, 6, 6);
     // Figure 13: 8 GPUs GPipe.
     render("fig13", "llama-1b", ScheduleKind::GPipe, 8, 8);
+    synth_column();
     println!("\nSVGs written to bench_out/");
 }

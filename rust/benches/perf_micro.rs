@@ -33,6 +33,31 @@ fn main() {
         std::hint::black_box(g.len());
     }));
 
+    // Full schedule synthesis at the warm-resolve scale (8×16): the
+    // candidate portfolio, shape-matched scoring, and the LP↔rank fixed
+    // point, end to end. Costs are the 1F1B LP-bench fixture flattened
+    // to per-stage times (dgrad-heavy backward, zero tails).
+    {
+        use timelyfreeze::cost::CostModel;
+        let stage_cost = |stages: usize, scale: f64| {
+            CostModel::from_stage_times(
+                vec![scale; stages],
+                vec![1.4 * scale; stages],
+                vec![0.6 * scale; stages],
+                vec![0.0; stages],
+                vec![0.0; stages],
+                0.0,
+                Vec::new(),
+            )
+        };
+        let flat = stage_cost(8, 1.0);
+        let chunked = stage_cost(16, 0.5);
+        record(bench_auto("synthesize/1f1b_8x16", 1.0, || {
+            let out = timelyfreeze::schedule::synthesize(&flat, &chunked, 8, 16, 0.8, 1e-4);
+            std::hint::black_box(out.makespan);
+        }));
+    }
+
     // Longest path: the CSR evaluator hot path vs the dense seed path
     // (per-call Kahn sort over nested-Vec adjacency).
     let g = PipelineDag::from_schedule(&s);

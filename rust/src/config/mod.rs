@@ -170,11 +170,20 @@ impl ExperimentConfig {
     }
 
     /// Chunk count actually used given the schedule kind.
+    ///
+    /// `Synthesized` is shape-flexible: the portfolio compares flat
+    /// (1-chunk, R-stage) candidates against V-shape (2-chunk, 2R-stage)
+    /// ones and the winner fixes the chunk count. This method reports the
+    /// *configured* shape (defaults to the 2-chunk upper shape); the
+    /// simulator re-derives a consistent config from the winning
+    /// schedule's actual chunk count before building layouts and memory
+    /// plans.
     pub fn effective_chunks(&self) -> usize {
         match self.schedule {
             ScheduleKind::GPipe | ScheduleKind::OneFOneB => 1,
             ScheduleKind::Interleaved1F1B => self.chunks.max(2),
             ScheduleKind::ZeroBubbleV => 2,
+            ScheduleKind::Synthesized => self.chunks.clamp(1, 2),
         }
     }
 
@@ -562,5 +571,13 @@ mod tests {
         assert_eq!(cfg.effective_chunks(), 2);
         cfg.schedule = ScheduleKind::ZeroBubbleV;
         assert_eq!(cfg.stages(), 8);
+        // Synthesized defaults to the 2-chunk upper shape but follows an
+        // explicit 1-chunk request (flat candidates).
+        cfg.schedule = ScheduleKind::Synthesized;
+        assert_eq!(cfg.effective_chunks(), 2);
+        cfg.chunks = 1;
+        assert_eq!(cfg.effective_chunks(), 1);
+        cfg.chunks = 7;
+        assert_eq!(cfg.effective_chunks(), 2);
     }
 }

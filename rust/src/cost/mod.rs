@@ -24,6 +24,9 @@
 //!   activation recomputation as the alternative way to buy memory
 //!   back, paying a per-stage forward-time surcharge instead of forced
 //!   freezing ([`memory_plan_for`] resolves both knobs at once).
+//! * [`rank`] — [`upward_ranks`]: HEFT-style critical-path (bottom-level)
+//!   queries over the structural action DAG under any duration function;
+//!   the priority tables the schedule synthesizer ranks candidates with.
 //!
 //! The split matters for the regimes "Pipeline Parallelism with
 //! Controllable Memory" (Qi et al., 2024) and "OptPipe" (Li et al.,
@@ -34,6 +37,7 @@
 pub mod memory;
 pub mod model;
 pub mod profile;
+pub mod rank;
 
 pub use memory::{
     memory_plan_for, memory_plan_for_fleet, peak_inflight, stage_floor_for, MemoryError,
@@ -41,3 +45,4 @@ pub use memory::{
 };
 pub use model::CostModel;
 pub use profile::{CostProfile, ProfileRecorder, StageProfile};
+pub use rank::{quantize_ranks, upward_ranks};

@@ -1,0 +1,111 @@
+//! Critical-path priority queries over a pipeline action set: upward
+//! rank (a.k.a. bottom level) of every action under a duration function,
+//! the classic HEFT priority. `schedule::synth` feeds these tables to
+//! the weighted list scheduler — first from the cost model's `w_max`
+//! durations, then re-ranked from the frozen durations the freeze LP
+//! chose, which is what closes the schedule↔LP fixed-point loop.
+
+use crate::graph::pipeline::structural_edges;
+use crate::types::Action;
+use std::collections::BTreeMap;
+
+/// Upward rank (bottom level) of every action: `rank(a) = duration(a) +
+/// max over structural successors of their rank` (0 for sinks), computed
+/// over the Appendix B rule-1–3 edge set. Higher means more critical.
+///
+/// Durations must be finite and non-negative; the rule edge set is
+/// acyclic by construction, so every action gets a rank.
+pub fn upward_ranks(
+    actions: &[Action],
+    stages: usize,
+    microbatches: usize,
+    duration: impl Fn(Action) -> f64,
+) -> BTreeMap<Action, f64> {
+    let n = actions.len();
+    let index: BTreeMap<Action, usize> = actions.iter().enumerate().map(|(i, a)| (*a, i)).collect();
+    let mut preds_of: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut succs_left = vec![0usize; n];
+    for (u, v) in structural_edges(actions, stages, microbatches) {
+        let (ui, vi) = (index[&u], index[&v]);
+        preds_of[vi].push(ui);
+        succs_left[ui] += 1;
+    }
+
+    let mut rank = vec![0.0f64; n];
+    // Finalize from the sinks backwards: an action's rank is final once
+    // every successor's rank is; `best` accumulates the max successor
+    // rank as successors finalize.
+    let mut best = vec![0.0f64; n];
+    let mut queue: Vec<usize> = (0..n).filter(|&i| succs_left[i] == 0).collect();
+    let mut finalized = 0usize;
+    while let Some(v) = queue.pop() {
+        let d = duration(actions[v]);
+        debug_assert!(d.is_finite() && d >= 0.0, "duration of {} must be finite ≥ 0", actions[v]);
+        rank[v] = d + best[v];
+        finalized += 1;
+        for &u in &preds_of[v] {
+            best[u] = best[u].max(rank[v]);
+            succs_left[u] -= 1;
+            if succs_left[u] == 0 {
+                queue.push(u);
+            }
+        }
+    }
+    assert_eq!(finalized, n, "structural edge set must be acyclic");
+    actions.iter().enumerate().map(|(i, a)| (*a, rank[i])).collect()
+}
+
+/// Quantize a float rank table into the `i64` scores
+/// [`crate::schedule::Priority::with_table`] consumes: scaled so the maximum rank maps
+/// to ~10¹², preserving relative order to well below any meaningful
+/// duration difference. Deterministic.
+pub fn quantize_ranks(ranks: &BTreeMap<Action, f64>) -> BTreeMap<Action, i64> {
+    let max = ranks.values().fold(0.0f64, |m, &r| m.max(r));
+    let scale = if max > 0.0 { 1e12 / max } else { 0.0 };
+    ranks.iter().map(|(a, &r)| (*a, (r * scale).round() as i64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Single-stage chain F→B: forward's rank adds the backward's.
+    #[test]
+    fn chain_ranks_accumulate() {
+        let actions = vec![Action::f(0, 0), Action::b(0, 0)];
+        let r = upward_ranks(&actions, 1, 1, |a| match a.kind {
+            crate::types::ActionKind::Forward => 1.0,
+            _ => 2.0,
+        });
+        assert_eq!(r[&Action::b(0, 0)], 2.0);
+        assert_eq!(r[&Action::f(0, 0)], 3.0);
+    }
+
+    /// Two-stage split set: the first forward sits on the longest path
+    /// (through both stages and both dgrads) and outranks everything.
+    #[test]
+    fn first_forward_most_critical() {
+        let mut actions = Vec::new();
+        for s in 0..2 {
+            actions.push(Action::f(0, s));
+            actions.push(Action::bd(0, s));
+            actions.push(Action::bw(0, s));
+        }
+        let r = upward_ranks(&actions, 2, 1, |_| 1.0);
+        let f0 = r[&Action::f(0, 0)];
+        assert!(actions.iter().all(|a| r[a] <= f0));
+        // f(0,0) → f(0,1) → bd(0,1) → bd(0,0) → bw(0,0): depth 5.
+        assert_eq!(f0, 5.0);
+    }
+
+    /// Quantization preserves order and tops out near 1e12.
+    #[test]
+    fn quantization_preserves_order() {
+        let mut t = BTreeMap::new();
+        t.insert(Action::f(0, 0), 3.0);
+        t.insert(Action::f(1, 0), 1.5);
+        let q = quantize_ranks(&t);
+        assert_eq!(q[&Action::f(0, 0)], 1_000_000_000_000);
+        assert_eq!(q[&Action::f(1, 0)], 500_000_000_000);
+    }
+}

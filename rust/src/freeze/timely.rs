@@ -9,6 +9,14 @@
 //! [`MemoryModel`](crate::cost::MemoryModel) and the floor is derived
 //! from the schedule's peak in-flight microbatch counts — the LP then
 //! picks freeze ratios that fit the device budget (constraint [5]).
+//!
+//! The controller is schedule-agnostic by construction: it only ever
+//! sees the [`PipelineDag`], so synthesized schedules
+//! ([`crate::schedule::synthesize`]) replan through exactly the same
+//! path as the fixed four — no special-casing, and the persistent
+//! [`FreezeLpSolver`] warm-start works across a re-synthesized DAG the
+//! same way it does across an elastic repartition (the solver detects
+//! the skeleton change and rebuilds).
 
 use crate::cost::{peak_inflight, CostModel};
 use crate::freeze::layout::ModelLayout;

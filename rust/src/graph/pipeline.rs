@@ -176,6 +176,16 @@ impl PipelineDag {
         }
     }
 
+    /// Non-panicking variant of [`PipelineDag::from_schedule`] for
+    /// arbitrary (synthesized or fuzzed) orders: runs
+    /// [`Schedule::check_legal`] first and reports the violation as an
+    /// `Err` instead of panicking inside the CSR freeze when the
+    /// combined rule 1–4 edge set has a cycle.
+    pub fn from_schedule_checked(schedule: &Schedule) -> Result<PipelineDag, String> {
+        schedule.check_legal()?;
+        Ok(PipelineDag::from_schedule(schedule))
+    }
+
     /// Number of nodes (actions + source + dest).
     pub fn len(&self) -> usize {
         self.dag.len()
@@ -435,6 +445,20 @@ mod tests {
             let g = build(kind, 4, 8);
             assert!(g.dag.is_acyclic(), "{} produced a cycle", kind.name());
         }
+    }
+
+    #[test]
+    fn checked_build_accepts_legal_and_rejects_broken_orders() {
+        for kind in ScheduleKind::all() {
+            let s = Schedule::build(kind, 3, 4, Schedule::default_chunks(kind));
+            let g = PipelineDag::from_schedule_checked(&s).unwrap();
+            assert_eq!(g.len(), 2 + s.action_count());
+        }
+        let s = Schedule::build(ScheduleKind::Synthesized, 3, 4, 2);
+        assert!(PipelineDag::from_schedule_checked(&s).is_ok());
+        let mut bad = Schedule::build(ScheduleKind::GPipe, 2, 1, 1);
+        bad.orders[0].swap(0, 1);
+        assert!(PipelineDag::from_schedule_checked(&bad).is_err());
     }
 
     #[test]

@@ -1200,6 +1200,54 @@ mod tests {
     }
 
     #[test]
+    fn solves_synthesized_schedule_dags() {
+        // The schedule synthesizer replans against arbitrary generated
+        // orders; the LP must accept their DAGs exactly as it does the
+        // fixed four, and the persistent solver must survive a reset
+        // between two differently-shaped synthesized instances.
+        let mut solver = FreezeLpSolver::new();
+        for (ranks, m) in [(2, 4), (3, 6)] {
+            let s = Schedule::build(ScheduleKind::Synthesized, ranks, m, 2);
+            s.check_legal().unwrap();
+            let g = PipelineDag::from_schedule(&s);
+            let mut w_min = vec![0.0; g.len()];
+            let mut w_max = vec![0.0; g.len()];
+            for (id, node) in g.dag.nodes.iter().enumerate() {
+                if let crate::graph::pipeline::Node::Act(a) = node {
+                    match a.kind {
+                        ActionKind::Forward | ActionKind::BackwardDgrad => {
+                            w_min[id] = 1.0;
+                            w_max[id] = 1.0;
+                        }
+                        ActionKind::Backward => {
+                            w_min[id] = 1.0;
+                            w_max[id] = 2.0;
+                        }
+                        ActionKind::BackwardWgrad => {
+                            w_min[id] = 0.0;
+                            w_max[id] = 1.0;
+                        }
+                    }
+                }
+            }
+            solver.reset();
+            let input = FreezeLpInput::new(&g, &w_min, &w_max, 0.5, DEFAULT_LAMBDA);
+            let sol = solver.solve(&input).unwrap();
+            let cold = solve_freeze_lp(&input).unwrap();
+            assert!((sol.batch_time - cold.batch_time).abs() < 1e-6);
+            assert!(sol.p_d_min - 1e-6 <= sol.batch_time && sol.batch_time <= sol.p_d_max + 1e-6);
+            for (s, set) in g.freezable_by_stage().iter().enumerate() {
+                if set.is_empty() {
+                    continue;
+                }
+                let avg: f64 =
+                    set.iter().map(|&i| sol.ratios[i]).sum::<f64>() / set.len() as f64;
+                assert!(avg <= 0.5 + 1e-6, "stage {s} over budget: {avg}");
+            }
+        }
+    }
+
+    #[test]
     fn rejects_bad_inputs() {
         let (g, w_min, w_max) = setup(ScheduleKind::GPipe, 2, 2, 0.5);
         let bad = FreezeLpInput::new(&g, &w_min[1..], &w_max, 0.5, 1e-4);

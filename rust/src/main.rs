@@ -26,7 +26,7 @@ use timelyfreeze::viz;
 fn flag_specs() -> Vec<FlagSpec> {
     vec![
         FlagSpec { name: "preset", takes_value: true, help: "model preset: llama-1b|llama-8b|llama-13b|vit-l32|convnextv2-l" },
-        FlagSpec { name: "schedule", takes_value: true, help: "gpipe|1f1b|interleaved|zbv" },
+        FlagSpec { name: "schedule", takes_value: true, help: "gpipe|1f1b|interleaved|zbv|synth (synth generates the order via the schedule-synthesis portfolio)" },
         FlagSpec { name: "method", takes_value: true, help: "none|apf|autofreeze|timely|timely+apf|timely+auto" },
         FlagSpec { name: "steps", takes_value: true, help: "training steps" },
         FlagSpec { name: "r-max", takes_value: true, help: "max average freeze ratio per stage" },
@@ -201,14 +201,11 @@ fn validate_memory_budget(cfg: &ExperimentConfig) -> Result<(), String> {
     {
         return Ok(());
     }
-    let schedule = timelyfreeze::schedule::Schedule::build(
-        cfg.schedule,
-        cfg.ranks,
-        cfg.microbatches,
-        cfg.effective_chunks(),
-    );
-    let layout = sim::build_layout(cfg, timelyfreeze::partition::PartitionMethod::Parameter);
-    timelyfreeze::cost::memory_plan_for(cfg, &layout.layer_stage, &schedule).map(|_| ())
+    // Resolve the schedule first (`--schedule synth` generates it), so
+    // the memory plan is checked against the shape the run will use.
+    let world = sim::resolve_world(cfg, timelyfreeze::partition::PartitionMethod::Parameter);
+    timelyfreeze::cost::memory_plan_for(&world.cfg, &world.layout.layer_stage, &world.schedule)
+        .map(|_| ())
 }
 
 fn cmd_simulate(args: &Args) -> Result<(), String> {
@@ -233,6 +230,12 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     println!(
         "  batch time      {:>10.4} s (no-freeze {:.4} s)",
         r.batch_time_final, r.batch_time_nofreeze
+    );
+    println!("  bubble fraction {:>10.2} %", 100.0 * r.bubble_fraction);
+    println!(
+        "  peak in-flight  {:>10} microbatches (max over {} stages)",
+        r.peak_inflight.iter().copied().max().unwrap_or(0),
+        r.peak_inflight.len()
     );
     if let Some(planned) = r.planned_batch_time {
         println!(
@@ -417,20 +420,14 @@ fn cmd_gantt(args: &Args) -> Result<(), String> {
 
 fn cmd_lp(args: &Args) -> Result<(), String> {
     use timelyfreeze::graph::pipeline::PipelineDag;
-    use timelyfreeze::schedule::Schedule;
     let cfg = build_sim_config(args)?;
-    let schedule =
-        Schedule::build(cfg.schedule, cfg.ranks, cfg.microbatches, cfg.effective_chunks());
+    // Resolve the schedule/layout/cost triple the same way the runner
+    // does — `--schedule synth` previews the LP over the synthesized
+    // order's DAG, exactly the one the simulator would execute.
+    let world =
+        sim::resolve_world(&cfg, timelyfreeze::partition::PartitionMethod::Parameter);
+    let sim::ResolvedWorld { cfg, schedule, layout, cost } = world;
     let pdag = PipelineDag::from_schedule(&schedule);
-    let layout = sim::build_layout(&cfg, timelyfreeze::partition::PartitionMethod::Parameter);
-    let cost = sim::CostModel::new(
-        &cfg.model,
-        &cfg.gpu,
-        &layout.layer_stage,
-        cfg.stages(),
-        cfg.microbatch_size,
-        cfg.seq_len,
-    );
     let w_min = pdag.weights(|a| cost.bounds(a).0);
     let w_max = pdag.weights(|a| cost.bounds(a).1);
     // Memory-constrained LP: resolve budget + recompute policy to the
@@ -499,7 +496,7 @@ fn cmd_schedules(args: &Args) -> Result<(), String> {
     use timelyfreeze::schedule::Schedule;
     let ranks = args.flag_usize("ranks")?.unwrap_or(4);
     let microbatches = args.flag_usize("microbatches")?.unwrap_or(8);
-    for kind in ScheduleKind::all() {
+    for kind in ScheduleKind::all().into_iter().chain([ScheduleKind::Synthesized]) {
         if let Some(s) = args.flag("schedule") {
             if ScheduleKind::parse(s) != Some(kind) {
                 continue;

@@ -1,32 +1,70 @@
-//! Greedy list scheduler: given a set of actions, their structural
-//! dependencies (Appendix B rules 1–3), and a priority rule, simulate one
-//! executor per rank and emit a legal per-rank execution order.
+//! List-scheduling schedule *generator*: given a set of actions, their
+//! structural dependencies (Appendix B rules 1–3), and a pluggable
+//! priority rule, simulate one executor per rank and emit a legal
+//! per-rank execution order.
 //!
-//! Used to construct the hand-tuned-style ZBV order (W actions fill
-//! bubbles) and as the general fallback for Interleaved 1F1B when
-//! `M % ranks ≠ 0` (where the Megatron closed form is undefined).
+//! Two generators live here:
+//!
+//! * [`list_schedule`] — the original unit-duration tick simulation,
+//!   used to construct the hand-tuned-style ZBV order (W actions fill
+//!   bubbles) and as the general fallback for Interleaved 1F1B when
+//!   `M % ranks ≠ 0` (where the Megatron closed form is undefined).
+//! * [`list_schedule_weighted`] — HEFT-style list scheduling over real
+//!   action durations: repeatedly commit the highest-priority *available*
+//!   action (all predecessors scheduled) to its rank's order. With an
+//!   upward-rank table as the priority this is classic HEFT restricted
+//!   to fixed placement; `schedule::synth` feeds it critical-path ranks
+//!   from the [`CostModel`](crate::cost::CostModel) and from frozen LP
+//!   durations.
+//!
+//! Both emit per-rank total orders that are linear extensions of the
+//! structural edges, so [`Schedule::check_legal`](crate::schedule::Schedule::check_legal)
+//! holds by construction for any priority rule — the fuzz suite in
+//! `tests/schedule_synth.rs` pins that claim.
 
 use crate::graph::pipeline::structural_edges;
 use crate::types::{Action, ActionKind};
+use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 
+fn kind_index(k: ActionKind) -> usize {
+    match k {
+        ActionKind::Forward => 0,
+        ActionKind::Backward => 1,
+        ActionKind::BackwardDgrad => 2,
+        ActionKind::BackwardWgrad => 3,
+    }
+}
+
 /// Priority rule for picking among ready actions. Higher wins.
+///
+/// Scoring is two-level: an optional per-action table (e.g. quantized
+/// upward ranks) dominates, then a per-kind score breaks ties. Rules
+/// carry a display name so fuzz failures can print the offending
+/// (seed, profile, priority) triple.
 pub struct Priority {
-    /// Rank-ordering of kinds, e.g. dgrad before forward before wgrad.
-    pub kind_score: fn(ActionKind) -> i64,
+    /// Display name for diagnostics and fuzz-failure triples.
+    name: String,
+    /// Per-kind scores indexed `[Forward, Backward, BackwardDgrad,
+    /// BackwardWgrad]`.
+    kind_scores: [i64; 4],
+    /// Optional per-action score that dominates the kind score.
+    table: Option<BTreeMap<Action, i64>>,
 }
 
 impl Priority {
-    /// ZBV priority: B (dgrad) first — it unblocks upstream ranks — then
-    /// forwards, then W (wgrad) to fill bubbles.
+    /// ZBV priority: dgrad first — it unblocks upstream ranks — then the
+    /// fused backward (which carries a dgrad), then forwards, then W
+    /// (wgrad) to fill bubbles. The split dgrad outranks the fused
+    /// backward: on a mixed action set the pure unblocking move must win
+    /// the tie against the heavier fused node (fused B previously tied
+    /// dgrad at 3, which let a fused backward starve a ready dgrad).
     pub fn zero_bubble() -> Priority {
         Priority {
-            kind_score: |k| match k {
-                ActionKind::BackwardDgrad => 3,
-                ActionKind::Forward => 2,
-                ActionKind::BackwardWgrad => 1,
-                ActionKind::Backward => 3,
-            },
+            name: "zero_bubble".to_string(),
+            // [F, B, Bd, Bw]
+            kind_scores: [2, 3, 4, 1],
+            table: None,
         }
     }
 
@@ -34,13 +72,78 @@ impl Priority {
     /// activations), forwards otherwise.
     pub fn one_f_one_b() -> Priority {
         Priority {
-            kind_score: |k| match k {
-                ActionKind::Backward | ActionKind::BackwardDgrad => 2,
-                ActionKind::BackwardWgrad => 1,
-                ActionKind::Forward => 0,
-            },
+            name: "one_f_one_b".to_string(),
+            kind_scores: [0, 2, 2, 1],
+            table: None,
         }
     }
+
+    /// Memory-first priority (Controllable-Memory-style): retire whole
+    /// microbatches — dgrad, then wgrad (which releases the stash), and
+    /// forwards (which grow it) last.
+    pub fn memory_first() -> Priority {
+        Priority {
+            name: "memory_first".to_string(),
+            kind_scores: [1, 3, 4, 2],
+            table: None,
+        }
+    }
+
+    /// Priority dominated by a per-action score table (e.g. quantized
+    /// upward ranks from [`crate::cost::upward_ranks`]); kind scores fall
+    /// back to [`Priority::zero_bubble`] ordering for ties.
+    pub fn with_table(name: impl Into<String>, table: BTreeMap<Action, i64>) -> Priority {
+        Priority { name: name.into(), kind_scores: [2, 3, 4, 1], table: Some(table) }
+    }
+
+    /// Seeded random rule for the fuzz suite: a random permutation of the
+    /// kind scores. Any permutation must still yield a legal,
+    /// deadlock-free order.
+    pub fn random(seed: u64) -> Priority {
+        let mut rng = Rng::seed_from_u64(seed).derive(0x5072_696f, 0);
+        let mut scores = [1i64, 2, 3, 4];
+        rng.shuffle(&mut scores);
+        Priority { name: format!("random(seed=0x{seed:016x})"), kind_scores: scores, table: None }
+    }
+
+    /// Attach a per-action score table to an existing rule (the table
+    /// dominates; existing kind scores keep breaking ties). Used by the
+    /// fuzz suite to combine random kind permutations with random
+    /// per-action jitter.
+    pub fn and_table(mut self, table: BTreeMap<Action, i64>) -> Priority {
+        self.table = Some(table);
+        self
+    }
+
+    /// Display name, e.g. `upward_rank` or `random(seed=0x…)`.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Two-level score of one action: (table score, kind score).
+    pub fn score(&self, a: Action) -> (i64, i64) {
+        let t = self.table.as_ref().map_or(0, |t| t.get(&a).copied().unwrap_or(0));
+        (t, self.kind_scores[kind_index(a.kind)])
+    }
+}
+
+/// Index actions and wire up the rule-1–3 predecessor counts and
+/// successor lists shared by both generators.
+fn dependency_lists(
+    actions: &[Action],
+    stages: usize,
+    microbatches: usize,
+) -> (Vec<usize>, Vec<Vec<usize>>) {
+    let n = actions.len();
+    let index: BTreeMap<Action, usize> = actions.iter().enumerate().map(|(i, a)| (*a, i)).collect();
+    let mut preds_left = vec![0usize; n];
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (u, v) in structural_edges(actions, stages, microbatches) {
+        let (ui, vi) = (index[&u], index[&v]);
+        succs[ui].push(vi);
+        preds_left[vi] += 1;
+    }
+    (preds_left, succs)
 }
 
 /// Simulate unit-duration execution with one executor per rank; returns
@@ -55,14 +158,7 @@ pub fn list_schedule(
     prio: &Priority,
 ) -> Vec<Vec<Action>> {
     let n = actions.len();
-    let index: BTreeMap<Action, usize> = actions.iter().enumerate().map(|(i, a)| (*a, i)).collect();
-    let mut preds_left = vec![0usize; n];
-    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
-    for (u, v) in structural_edges(actions, stages, microbatches) {
-        let (ui, vi) = (index[&u], index[&v]);
-        succs[ui].push(vi);
-        preds_left[vi] += 1;
-    }
+    let (mut preds_left, succs) = dependency_lists(actions, stages, microbatches);
 
     let mut ready: Vec<Vec<usize>> = vec![Vec::new(); ranks]; // per rank
     for i in 0..n {
@@ -89,11 +185,7 @@ pub fn list_schedule(
                 .enumerate()
                 .max_by_key(|(_, &i)| {
                     let a = actions[i];
-                    (
-                        (prio.kind_score)(a.kind),
-                        std::cmp::Reverse(a.mb),
-                        std::cmp::Reverse(a.stage),
-                    )
+                    (prio.score(a), std::cmp::Reverse(a.mb), std::cmp::Reverse(a.stage))
                 })
                 .map(|(pos, _)| pos)
                 .unwrap();
@@ -103,9 +195,10 @@ pub fn list_schedule(
         }
         assert!(
             !executed.is_empty(),
-            "list scheduler deadlocked with {} of {} actions done",
+            "list scheduler deadlocked with {} of {} actions done (priority {})",
             done,
-            n
+            n,
+            prio.name()
         );
         done += executed.len();
         for i in executed {
@@ -114,6 +207,67 @@ pub fn list_schedule(
                 if preds_left[j] == 0 {
                     ready[rank_of_stage[actions[j].stage]].push(j);
                 }
+            }
+        }
+    }
+    orders
+}
+
+/// HEFT-style list scheduling over real durations: repeatedly pick the
+/// highest-priority action whose predecessors are all scheduled, and
+/// commit it to its rank at `max(rank free time, latest pred finish)`.
+/// Placement is fixed (the stage names the rank), so only the *order*
+/// is synthesized; the emitted per-rank orders are linear extensions of
+/// the structural edges by construction. Panics on deadlock, naming the
+/// priority rule (cannot happen for the acyclic rule-1–3 edge set).
+pub fn list_schedule_weighted(
+    actions: &[Action],
+    stages: usize,
+    microbatches: usize,
+    rank_of_stage: &[usize],
+    ranks: usize,
+    prio: &Priority,
+    duration: &dyn Fn(Action) -> f64,
+) -> Vec<Vec<Action>> {
+    let n = actions.len();
+    let (mut preds_left, succs) = dependency_lists(actions, stages, microbatches);
+
+    // `release[i]` = latest finish among scheduled predecessors; valid
+    // once preds_left[i] == 0.
+    let mut release = vec![0.0f64; n];
+    let mut avail: Vec<usize> = (0..n).filter(|&i| preds_left[i] == 0).collect();
+    let mut rank_free = vec![0.0f64; ranks];
+    let mut orders: Vec<Vec<Action>> = vec![Vec::new(); ranks];
+
+    for scheduled in 0..n {
+        assert!(
+            !avail.is_empty(),
+            "weighted list scheduler deadlocked with {} of {} actions done (priority {})",
+            scheduled,
+            n,
+            prio.name()
+        );
+        let best_pos = avail
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &i)| {
+                let a = actions[i];
+                (prio.score(a), std::cmp::Reverse(a.mb), std::cmp::Reverse(a.stage))
+            })
+            .map(|(pos, _)| pos)
+            .unwrap();
+        let i = avail.swap_remove(best_pos);
+        let a = actions[i];
+        let rank = rank_of_stage[a.stage];
+        let start = rank_free[rank].max(release[i]);
+        let finish = start + duration(a);
+        rank_free[rank] = finish;
+        orders[rank].push(a);
+        for &j in &succs[i] {
+            release[j] = release[j].max(finish);
+            preds_left[j] -= 1;
+            if preds_left[j] == 0 {
+                avail.push(j);
             }
         }
     }
@@ -151,5 +305,68 @@ mod tests {
         let actions = vec![Action::f(0, 0), Action::bd(0, 0), Action::bw(0, 0)];
         let orders = list_schedule(&actions, 1, 1, &[0], 1, &Priority::zero_bubble());
         assert_eq!(orders[0], vec![Action::f(0, 0), Action::bd(0, 0), Action::bw(0, 0)]);
+    }
+
+    /// On a mixed fused/split action set the pure dgrad must outrank the
+    /// fused backward (the pre-fix tie let the fused node starve it).
+    #[test]
+    fn split_dgrad_outranks_fused_backward() {
+        let prio = Priority::zero_bubble();
+        let bd = Action::bd(0, 1);
+        let b = Action::b(0, 0);
+        assert!(prio.score(bd) > prio.score(b));
+        assert!(prio.score(b) > prio.score(Action::f(1, 0)));
+        assert!(prio.score(Action::f(1, 0)) > prio.score(Action::bw(0, 1)));
+    }
+
+    /// The weighted generator emits the same rank totals and respects the
+    /// same structural order as the unit-tick one.
+    #[test]
+    fn weighted_schedules_small_pipeline() {
+        let mut actions = Vec::new();
+        for m in 0..3 {
+            for s in 0..2 {
+                actions.push(Action::f(m, s));
+                actions.push(Action::bd(m, s));
+                actions.push(Action::bw(m, s));
+            }
+        }
+        let dur = |a: Action| match a.kind {
+            ActionKind::Forward => 1.0,
+            ActionKind::BackwardDgrad => 2.0,
+            _ => 0.5,
+        };
+        let orders = list_schedule_weighted(
+            &actions,
+            2,
+            3,
+            &[0, 1],
+            2,
+            &Priority::zero_bubble(),
+            &dur,
+        );
+        let total: usize = orders.iter().map(|o| o.len()).sum();
+        assert_eq!(total, 18);
+        let r0 = &orders[0];
+        let pos = |a: Action| r0.iter().position(|x| *x == a).unwrap();
+        assert!(pos(Action::f(0, 0)) < pos(Action::bd(0, 0)));
+        assert!(pos(Action::bd(0, 0)) < pos(Action::bw(0, 0)));
+    }
+
+    /// A random priority permutation still schedules every action.
+    #[test]
+    fn random_priority_is_total() {
+        let mut actions = Vec::new();
+        for m in 0..2 {
+            for s in 0..2 {
+                actions.push(Action::f(m, s));
+                actions.push(Action::b(m, s));
+            }
+        }
+        for seed in 0..8 {
+            let prio = Priority::random(seed);
+            let orders = list_schedule(&actions, 2, 2, &[0, 1], 2, &prio);
+            assert_eq!(orders.iter().map(|o| o.len()).sum::<usize>(), 8, "{}", prio.name());
+        }
     }
 }

@@ -48,11 +48,10 @@
 
 use crate::config::{ExperimentConfig, FaultEvent, FaultKind, RecoveryStrategy, Scenario};
 use crate::cost::memory::WEIGHT_BYTES_PER_PARAM;
-use crate::cost::{memory_plan_for_fleet, CostModel};
+use crate::cost::{memory_plan_for_fleet, peak_inflight, CostModel};
 use crate::freeze::{select_frozen_units_into, ControllerFactory, FreezePlan};
 use crate::graph::pipeline::PipelineDag;
 use crate::partition::PartitionMethod;
-use crate::schedule::Schedule;
 use crate::sim::convergence::{progress_to_accuracy, ConvergenceSim};
 use crate::sim::engine::{EventEngine, FaultOutcome};
 use crate::sim::runner::{self, BackwardSample, SimError, SimResult, TrajPoint};
@@ -91,6 +90,8 @@ struct World {
     recompute: Option<Vec<f64>>,
     /// Virtual stage → logical rank (from the schedule orders).
     stage_rank: Vec<usize>,
+    /// Per-stage peak in-flight microbatches of this world's schedule.
+    peak_inflight: Vec<usize>,
 }
 
 impl World {
@@ -106,27 +107,22 @@ impl World {
     ) -> Result<World, SimError> {
         let mut sub = cfg.clone();
         sub.ranks = fleet.len();
-        let schedule = Schedule::build(
-            sub.schedule,
-            sub.ranks,
-            sub.microbatches,
-            sub.effective_chunks(),
-        );
+        // Resolve the schedule for the survivor fleet — a synthesized
+        // schedule is *re-synthesized* against the repartitioned cost
+        // models here, so recovery re-runs the same portfolio the
+        // initial build did (deterministic: the rebuilt world replays
+        // bit-identically on a fixed seed). Fixed kinds take the
+        // verbatim pre-synthesis construction path.
+        let runner::ResolvedWorld { cfg: sub, schedule, layout, mut cost } =
+            runner::resolve_world(&sub, partition);
         let pdag = PipelineDag::from_schedule(&schedule);
-        let layout = runner::build_layout_for_stages(&sub, partition, sub.stages());
-        let mut cost = CostModel::new(
-            &sub.model,
-            &sub.gpu,
-            &layout.layer_stage,
-            sub.stages(),
-            sub.microbatch_size,
-            sub.seq_len,
-        );
         // Memory floors against the *surviving* devices: heterogeneous
         // capacity vectors are projected onto the fleet, and the
         // recompute policy gets a chance to buy the smaller fleet's
-        // budget back before freezing is forced.
-        let plan = memory_plan_for_fleet(cfg, &layout.layer_stage, &schedule, fleet)
+        // budget back before freezing is forced. The chunk-adjusted
+        // `sub` keeps the memory model's stage count agreeing with the
+        // shape the synthesizer picked.
+        let plan = memory_plan_for_fleet(&sub, &layout.layer_stage, &schedule, fleet)
             .map_err(|e| {
                 if initial {
                     SimError::InfeasibleMemoryBudget(e)
@@ -165,7 +161,7 @@ impl World {
         let zero_delays = vec![0.0f64; pdag.dag.edge_count()];
         let weights = vec![0.0f64; pdag.len()];
         let opt_tail = cost.optimizer_tail();
-        let mut stage_rank = vec![0usize; sub.stages()];
+        let mut stage_rank = vec![0usize; schedule.stages];
         for (rank, order) in schedule.orders.iter().enumerate() {
             for a in order {
                 stage_rank[a.stage] = rank;
@@ -189,6 +185,7 @@ impl World {
             opt_tail,
             recompute: plan.recompute,
             stage_rank,
+            peak_inflight: peak_inflight(&schedule),
         })
     }
 
@@ -822,6 +819,12 @@ pub fn run_faulted(
         lost_microbatches,
         recovery_time_s,
         final_ranks: world.fleet.len(),
+        bubble_fraction: runner::bubble_fraction_of(
+            &w_nofreeze,
+            world.sub.ranks,
+            batch_time_nofreeze - world.opt_tail,
+        ),
+        peak_inflight: world.peak_inflight.clone(),
     })
 }
 

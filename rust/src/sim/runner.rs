@@ -29,14 +29,14 @@
 //! (Figure 15), and event-sourced Gantt data (Figures 7–13).
 
 use crate::config::{ExecMode, ExperimentConfig, Scenario};
-use crate::cost::{memory_plan_for, CostModel, ProfileRecorder};
+use crate::cost::{memory_plan_for, peak_inflight, CostModel, ProfileRecorder};
 use crate::freeze::{select_frozen_units_into, ControllerFactory, ModelLayout};
 use crate::graph::pipeline::{BatchEvaluator, Node, PipelineDag};
 use crate::partition::{LayerProfile, PartitionMethod};
 use crate::schedule::Schedule;
 use crate::sim::convergence::{progress_to_accuracy, ConvergenceSim};
 use crate::sim::engine::EventEngine;
-use crate::types::{Action, FreezeMethod};
+use crate::types::{Action, FreezeMethod, ScheduleKind};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::sync::{Mutex, OnceLock};
@@ -188,6 +188,15 @@ pub struct SimResult {
     pub recovery_time_s: f64,
     /// Ranks still alive when the run finished.
     pub final_ranks: usize,
+    /// Pipeline bubble fraction of the no-freezing step: `1 − Σ
+    /// action durations / (ranks · span)` — the idle share of the
+    /// rank-time rectangle the Gantt charts draw. Synthesized schedules
+    /// report the shape the generator actually picked.
+    pub bubble_fraction: f64,
+    /// Per-stage peak in-flight microbatch counts of the executed
+    /// schedule ([`peak_inflight`]) — the activation-memory driver the
+    /// V-shape and memory-first variants trade bubble time against.
+    pub peak_inflight: Vec<usize>,
 }
 
 impl SimResult {
@@ -257,6 +266,92 @@ pub fn build_layout_for_stages(
 /// Run one full experiment.
 pub fn run(cfg: &ExperimentConfig) -> Result<SimResult, SimError> {
     run_with_partition(cfg, PartitionMethod::Parameter)
+}
+
+/// A config resolved to the concrete world a run executes in: the
+/// schedule (synthesized when `--schedule synth`), the layout and cost
+/// model matched to its shape, and a config whose `chunks` agrees with
+/// the schedule so every downstream `cfg.stages()` consumer — memory
+/// planning, the controller factory, the profile recorder — sees the
+/// shape the generator actually picked. For the four fixed kinds this
+/// is exactly the pre-synthesis construction path.
+pub struct ResolvedWorld {
+    /// The (possibly chunk-adjusted) config; for fixed schedule kinds
+    /// this is a verbatim clone.
+    pub cfg: ExperimentConfig,
+    /// The schedule the run executes.
+    pub schedule: Schedule,
+    /// Model layout partitioned over `schedule.stages` virtual stages.
+    pub layout: ModelLayout,
+    /// Cost model at `schedule.stages` stages.
+    pub cost: CostModel,
+}
+
+/// Resolve a config to its executed world (see [`ResolvedWorld`]).
+///
+/// For [`ScheduleKind::Synthesized`] this builds shape-matched layouts
+/// and cost models for *both* candidate shapes (flat R-stage and
+/// 2-chunk 2R-stage), runs [`crate::schedule::synthesize`] — whose
+/// portfolio includes the four fixed schedules, so the winner's
+/// no-freeze makespan is never worse than any of them — and keeps the
+/// winning shape's pair.
+pub fn resolve_world(cfg: &ExperimentConfig, partition: PartitionMethod) -> ResolvedWorld {
+    if cfg.schedule != ScheduleKind::Synthesized {
+        let schedule = Schedule::build(
+            cfg.schedule,
+            cfg.ranks,
+            cfg.microbatches,
+            cfg.effective_chunks(),
+        );
+        let layout = build_layout(cfg, partition);
+        let cost = CostModel::new(
+            &cfg.model,
+            &cfg.gpu,
+            &layout.layer_stage,
+            cfg.stages(),
+            cfg.microbatch_size,
+            cfg.seq_len,
+        );
+        return ResolvedWorld { cfg: cfg.clone(), schedule, layout, cost };
+    }
+    let flat_layout = build_layout_for_stages(cfg, partition, cfg.ranks);
+    let flat_cost = CostModel::new(
+        &cfg.model,
+        &cfg.gpu,
+        &flat_layout.layer_stage,
+        cfg.ranks,
+        cfg.microbatch_size,
+        cfg.seq_len,
+    );
+    let chunked_layout = build_layout_for_stages(cfg, partition, 2 * cfg.ranks);
+    let chunked_cost = CostModel::new(
+        &cfg.model,
+        &cfg.gpu,
+        &chunked_layout.layer_stage,
+        2 * cfg.ranks,
+        cfg.microbatch_size,
+        cfg.seq_len,
+    );
+    let out = crate::schedule::synthesize(
+        &flat_cost,
+        &chunked_cost,
+        cfg.ranks,
+        cfg.microbatches,
+        cfg.r_max,
+        cfg.lambda,
+    );
+    let schedule = out.schedule;
+    let mut rcfg = cfg.clone();
+    // `effective_chunks(Synthesized)` clamps to [1, 2], so after this
+    // `rcfg.stages() == schedule.stages` and every consumer agrees.
+    rcfg.chunks = schedule.chunks;
+    debug_assert_eq!(rcfg.stages(), schedule.stages);
+    let (layout, cost) = if schedule.chunks == 1 {
+        (flat_layout, flat_cost)
+    } else {
+        (chunked_layout, chunked_cost)
+    };
+    ResolvedWorld { cfg: rcfg, schedule, layout, cost }
 }
 
 /// The executor a run drives batches through: the discrete-event engine
@@ -456,22 +551,15 @@ pub fn run_with_partition(
             };
         }
     }
-    let schedule = Schedule::build(
-        cfg.schedule,
-        cfg.ranks,
-        cfg.microbatches,
-        cfg.effective_chunks(),
-    );
+    // Resolve the schedule (synthesizing it for `--schedule synth`) and
+    // the shape-matched layout/cost/config; shadow `cfg` with the
+    // resolved one so every downstream `cfg.stages()` agrees with the
+    // schedule. For fixed kinds the resolved config is a verbatim clone
+    // and this path is bit-identical to the pre-synthesis construction.
+    let world = resolve_world(cfg, partition);
+    let ResolvedWorld { cfg: rcfg, schedule, layout, mut cost } = world;
+    let cfg = &rcfg;
     let pdag = PipelineDag::from_schedule(&schedule);
-    let layout = build_layout(cfg, partition);
-    let mut cost = CostModel::new(
-        &cfg.model,
-        &cfg.gpu,
-        &layout.layer_stage,
-        cfg.stages(),
-        cfg.microbatch_size,
-        cfg.seq_len,
-    );
     // Memory-constrained runs: resolve the budget + recompute policy to
     // the per-stage freeze-ratio floor (constraint [5], honoured by the
     // TimelyFreeze LP) and the recompute fractions. The fractions are
@@ -585,7 +673,7 @@ pub fn run_with_partition(
             cfg.method,
             FreezeMethod::TimelyFreeze | FreezeMethod::TimelyApf | FreezeMethod::TimelyAuto
         );
-    let mut recorder = ProfileRecorder::new(cfg.stages());
+    let mut recorder = ProfileRecorder::new(schedule.stages);
     let mut replans = 0usize;
     let mut replan_latency_s: Vec<f64> = Vec::new();
 
@@ -776,6 +864,8 @@ pub fn run_with_partition(
     let starts_final = exec.start_times(&pdag, &last_weights, final_delays, &zero_delays);
     let gantt_final = gantt(&pdag, &starts_final, &last_weights, &last_plan_ratios);
     let batch_time_final = starts_final[pdag.dest] + opt_tail;
+    let bubble_fraction =
+        bubble_fraction_of(&w_nofreeze, schedule.ranks, batch_time_nofreeze - opt_tail);
 
     // ---- accuracy proxy ----
     let progress = match reference_final {
@@ -832,7 +922,21 @@ pub fn run_with_partition(
         lost_microbatches: 0,
         recovery_time_s: 0.0,
         final_ranks: cfg.ranks,
+        bubble_fraction,
+        peak_inflight: peak_inflight(&schedule),
     })
+}
+
+/// Bubble fraction of one executed batch: the idle share of the
+/// `ranks × span` rank-time rectangle, `1 − Σ node durations / (ranks ·
+/// span)`. Source/dest carry zero weight, so summing the whole node
+/// vector counts exactly the action work.
+pub(crate) fn bubble_fraction_of(weights: &[f64], ranks: usize, span: f64) -> f64 {
+    if span <= 0.0 || ranks == 0 {
+        return 0.0;
+    }
+    let work: f64 = weights.iter().sum();
+    (1.0 - work / (ranks as f64 * span)).clamp(0.0, 1.0)
 }
 
 /// P2P stage boundary of each CSR edge: `Some(b)` when the edge crosses
@@ -1165,6 +1269,42 @@ mod tests {
             len1 <= SHADOW_MEMO_CAP,
             "memo residency {len1} exceeds cap {SHADOW_MEMO_CAP}"
         );
+    }
+
+    #[test]
+    fn synthesized_schedule_never_slower_than_fixed_nofreeze() {
+        let mut best = f64::INFINITY;
+        for kind in ScheduleKind::all() {
+            let r = run(&quick_cfg(FreezeMethod::NoFreezing, kind)).unwrap();
+            best = best.min(r.batch_time_nofreeze);
+            assert!((0.0..1.0).contains(&r.bubble_fraction), "{}", kind.name());
+            assert!(r.peak_inflight.iter().all(|&p| p >= 1), "{}", kind.name());
+        }
+        let r = run(&quick_cfg(FreezeMethod::NoFreezing, ScheduleKind::Synthesized)).unwrap();
+        assert!(
+            r.batch_time_nofreeze <= best * (1.0 + 1e-9),
+            "synth {} vs best fixed {best}",
+            r.batch_time_nofreeze
+        );
+        assert_eq!(r.schedule, ScheduleKind::Synthesized);
+        assert!((0.0..1.0).contains(&r.bubble_fraction));
+        assert!(!r.peak_inflight.is_empty());
+    }
+
+    #[test]
+    fn synthesized_event_and_analytic_bit_identical() {
+        use crate::config::ExecMode;
+        let cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::Synthesized);
+        let event = run(&cfg).unwrap();
+        let mut fast = cfg.clone();
+        fast.exec = ExecMode::Analytic;
+        let fast = run(&fast).unwrap();
+        assert_eq!(event.throughput.to_bits(), fast.throughput.to_bits());
+        assert_eq!(event.batch_time_final.to_bits(), fast.batch_time_final.to_bits());
+        assert_eq!(event.accuracy.to_bits(), fast.accuracy.to_bits());
+        // And the run is reproducible wholesale.
+        let again = run(&cfg).unwrap();
+        assert_eq!(event.throughput.to_bits(), again.throughput.to_bits());
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Minimal property-testing framework (proptest is unavailable in the
 //! offline image): deterministic random-case generation with failure
-//! reporting of the seed that produced the counterexample.
+//! reporting of the seed that produced the counterexample, plus the
+//! random cost-profile generator the schedule-synthesis suite drives.
 
+use timelyfreeze::cost::CostModel;
 use timelyfreeze::util::rng::Rng;
 
 /// Run `cases` random trials of `property`; on failure, panic with the
@@ -19,4 +21,56 @@ pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, cases: usize,
 /// Random subsize in [lo, hi].
 pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
     lo + rng.next_below((hi - lo + 1) as u64) as usize
+}
+
+/// A shape-matched random cost-profile pair for schedule synthesis: a
+/// flat `ranks`-stage model (one pipeline stage per rank) and a chunked
+/// `2·ranks`-stage model in which virtual stage `s` carries half of
+/// rank `s % ranks`'s per-action time, so total work agrees across
+/// shapes. Half the profiles also carry random p2p boundary costs.
+/// Returns `(flat, chunked, summary)`; the summary string is the
+/// printable profile for fuzz-failure reports.
+pub fn random_cost_pair(rng: &mut Rng, ranks: usize) -> (CostModel, CostModel, String) {
+    let fwd: Vec<f64> = (0..ranks).map(|_| rng.range_f64(0.5, 2.0)).collect();
+    let dgrad: Vec<f64> = (0..ranks).map(|_| rng.range_f64(0.5, 2.5)).collect();
+    let wgrad: Vec<f64> = (0..ranks).map(|_| rng.range_f64(0.0, 1.5)).collect();
+    let overhead = rng.range_f64(0.0, 0.2);
+    let with_p2p = rng.bernoulli(0.5);
+    let summary = format!(
+        "fwd={fwd:.3?} dgrad={dgrad:.3?} wgrad={wgrad:.3?} \
+         overhead={overhead:.3} p2p={with_p2p}"
+    );
+    let chunked_stages = 2 * ranks;
+    let flat_p2p: Vec<f64> = if with_p2p {
+        (1..ranks).map(|_| rng.range_f64(0.0, 0.3)).collect()
+    } else {
+        Vec::new()
+    };
+    let chunked_p2p: Vec<f64> = if with_p2p {
+        (1..chunked_stages).map(|_| rng.range_f64(0.0, 0.3)).collect()
+    } else {
+        Vec::new()
+    };
+    let half = |v: &[f64]| -> Vec<f64> {
+        (0..chunked_stages).map(|s| v[s % ranks] / 2.0).collect()
+    };
+    let flat = CostModel::from_stage_times(
+        fwd.clone(),
+        dgrad.clone(),
+        wgrad.clone(),
+        vec![0.0; ranks],
+        vec![0.0; ranks],
+        overhead,
+        flat_p2p,
+    );
+    let chunked = CostModel::from_stage_times(
+        half(&fwd),
+        half(&dgrad),
+        half(&wgrad),
+        vec![0.0; chunked_stages],
+        vec![0.0; chunked_stages],
+        overhead,
+        chunked_p2p,
+    );
+    (flat, chunked, summary)
 }

@@ -1,8 +1,10 @@
 //! Integration coverage of the fault-injection and elastic-recovery
 //! path (`sim/elastic.rs`): end-to-end determinism of fixed-seed fault
-//! runs, microbatch accounting under both recovery strategies, and a
+//! runs, microbatch accounting under both recovery strategies, a
 //! crash-at-every-onset sweep that proves the recovery loop never
-//! deadlocks regardless of where in the run the fault lands.
+//! deadlocks regardless of where in the run the fault lands, and the
+//! synthesized-schedule elastic path (re-synthesis over the survivor
+//! fleet stays deterministic and retains fixed-schedule throughput).
 
 mod common;
 
@@ -156,6 +158,66 @@ fn fault_without_strategy_is_a_clean_error() {
         }
         other => panic!("expected RankLost, got {other:?}"),
     }
+}
+
+/// Synthesized schedules ride the same elastic path: after a fault the
+/// rebuilt world re-synthesizes over the survivor fleet (the schedule
+/// is regenerated, not replayed), and the whole fixed-seed run — fault
+/// accounting and trajectory included — reproduces bit for bit.
+#[test]
+fn synthesized_fault_runs_reproduce_bit_identically() {
+    for spec in ["crash:1@40", "preempt:2@20-35"] {
+        let mut cfg = fault_cfg(spec, RecoveryStrategy::Elastic);
+        cfg.schedule = ScheduleKind::Synthesized;
+        let a = sim::run(&cfg).unwrap();
+        let b = sim::run(&cfg).unwrap();
+        let tag = format!("synth / {spec}");
+        assert_eq!(a.faults, 1, "{tag}");
+        assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "{tag}");
+        assert_eq!(a.steady_throughput.to_bits(), b.steady_throughput.to_bits(), "{tag}");
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{tag}");
+        assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "{tag}");
+        assert_eq!(a.recovery_time_s.to_bits(), b.recovery_time_s.to_bits(), "{tag}");
+        assert_eq!(a.faults, b.faults, "{tag}");
+        assert_eq!(a.lost_microbatches, b.lost_microbatches, "{tag}");
+        assert_eq!(a.final_ranks, b.final_ranks, "{tag}");
+        assert_eq!(a.trajectory.len(), b.trajectory.len(), "{tag}");
+        for (pa, pb) in a.trajectory.iter().zip(&b.trajectory) {
+            assert_eq!(pa.step_time.to_bits(), pb.step_time.to_bits(), "{tag}");
+            assert_eq!(pa.mean_afr.to_bits(), pb.mean_afr.to_bits(), "{tag}");
+        }
+    }
+}
+
+/// Throughput retention of the synthesized elastic path: it must hold
+/// on to what the fixed-schedule (1F1B) elastic path delivers — the
+/// portfolio contains that exact order as a candidate, so only freeze
+/// dynamics can open a gap (hence the slack) — and it must clearly beat
+/// restarting the same synthesized run from scratch.
+#[test]
+fn synthesized_elastic_retains_fixed_schedule_throughput() {
+    let spec = "crash:1@40";
+    let mut synth_cfg = fault_cfg(spec, RecoveryStrategy::Elastic);
+    synth_cfg.schedule = ScheduleKind::Synthesized;
+    let synth = sim::run(&synth_cfg).unwrap();
+    let fixed = sim::run(&fault_cfg(spec, RecoveryStrategy::Elastic)).unwrap();
+    assert_eq!(synth.faults, 1);
+    assert_eq!(synth.final_ranks, fixed.final_ranks);
+    assert!(
+        synth.throughput >= fixed.throughput * 0.9,
+        "synth elastic retained {} but fixed elastic delivers {}",
+        synth.throughput,
+        fixed.throughput
+    );
+    let mut restart_cfg = fault_cfg(spec, RecoveryStrategy::Restart);
+    restart_cfg.schedule = ScheduleKind::Synthesized;
+    let restart = sim::run(&restart_cfg).unwrap();
+    assert!(
+        synth.throughput > restart.throughput,
+        "synth elastic {} must beat synth restart {}",
+        synth.throughput,
+        restart.throughput
+    );
 }
 
 /// Multi-fault timelines compose: a crash followed by a preemption of a

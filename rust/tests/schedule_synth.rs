@@ -1,0 +1,276 @@
+//! Property and fuzz suite for the schedule-synthesis subsystem
+//! (`schedule::synth` + the list-scheduling generators):
+//!
+//! * every synthesized schedule passes the structural legality oracle
+//!   [`Schedule::check_legal`];
+//! * the synthesized makespan is never worse than the best of the four
+//!   fixed schedules on randomized cost profiles (the portfolio
+//!   guarantee);
+//! * the analytic `BatchEvaluator` and the discrete-event engine agree
+//!   bit for bit on synthesized DAGs;
+//! * randomized priority rules through both generators never deadlock
+//!   or emit an illegal order — failures print the (seed, profile,
+//!   priority) triple;
+//! * fused- and split-backward schedules agree on makespan when the
+//!   wgrad cost is zero (the `Priority::zero_bubble` tie-break
+//!   regression).
+
+mod common;
+
+use common::prop::{check, random_cost_pair, usize_in};
+use timelyfreeze::cost::CostModel;
+use timelyfreeze::graph::pipeline::PipelineDag;
+use timelyfreeze::lp::DEFAULT_LAMBDA;
+use timelyfreeze::schedule::{
+    list_schedule, list_schedule_weighted, makespan_of, synthesize, Priority, Schedule,
+};
+use timelyfreeze::sim::EventEngine;
+use timelyfreeze::types::{Action, ActionKind, ScheduleKind};
+use timelyfreeze::util::rng::Rng;
+
+/// The split dgrad/wgrad action set over `stages × microbatches`.
+fn split_actions(stages: usize, microbatches: usize) -> Vec<Action> {
+    let mut v = Vec::new();
+    for m in 0..microbatches {
+        for s in 0..stages {
+            v.push(Action::f(m, s));
+            v.push(Action::bd(m, s));
+            v.push(Action::bw(m, s));
+        }
+    }
+    v
+}
+
+/// The fused-backward action set over `stages × microbatches`.
+fn fused_actions(stages: usize, microbatches: usize) -> Vec<Action> {
+    let mut v = Vec::new();
+    for m in 0..microbatches {
+        for s in 0..stages {
+            v.push(Action::f(m, s));
+            v.push(Action::b(m, s));
+        }
+    }
+    v
+}
+
+/// Wrap generated per-rank orders into a `Synthesized` schedule so the
+/// legality oracle and makespan scorer can consume them.
+fn wrap(
+    ranks: usize,
+    chunks: usize,
+    microbatches: usize,
+    rank_of_stage: Vec<usize>,
+    orders: Vec<Vec<Action>>,
+) -> Schedule {
+    Schedule {
+        kind: ScheduleKind::Synthesized,
+        ranks,
+        chunks,
+        stages: ranks * chunks,
+        microbatches,
+        rank_of_stage,
+        orders,
+    }
+}
+
+/// The V-shape stage→rank placement (stage `s < R` on rank `s`, stage
+/// `s ≥ R` folding back on rank `2R−1−s`).
+fn vshape(ranks: usize) -> Vec<usize> {
+    (0..2 * ranks).map(|s| if s < ranks { s } else { 2 * ranks - 1 - s }).collect()
+}
+
+/// Every synthesized schedule passes the structural legality oracle,
+/// whatever the cost profile.
+#[test]
+fn synthesized_schedules_are_legal_on_random_profiles() {
+    check("synthesized schedules are legal", 24, |rng| {
+        let ranks = usize_in(rng, 1, 4);
+        let m = usize_in(rng, 1, 8);
+        let (flat, chunked, profile) = random_cost_pair(rng, ranks);
+        let out = synthesize(&flat, &chunked, ranks, m, 0.5, DEFAULT_LAMBDA);
+        if out.schedule.kind != ScheduleKind::Synthesized {
+            return Err(format!("kind {:?} is not Synthesized", out.schedule.kind));
+        }
+        out.schedule
+            .check_legal()
+            .map_err(|e| format!("ranks={ranks} m={m} profile=[{profile}]: {e}"))
+    });
+}
+
+/// The portfolio guarantee on random profiles: the synthesized makespan
+/// is ≤ every fixed schedule's under the shape-matched cost model, and
+/// the reported makespan re-scores bit-identically.
+#[test]
+fn synthesized_never_worse_than_fixed_on_random_profiles() {
+    check("synthesized ≤ min(fixed four)", 24, |rng| {
+        let ranks = usize_in(rng, 1, 4);
+        let m = usize_in(rng, 1, 8);
+        let (flat, chunked, profile) = random_cost_pair(rng, ranks);
+        let out = synthesize(&flat, &chunked, ranks, m, 0.6, DEFAULT_LAMBDA);
+        for kind in ScheduleKind::all() {
+            let chunks = Schedule::default_chunks(kind);
+            let s = Schedule::build(kind, ranks, m, chunks);
+            let cost = if chunks == 1 { &flat } else { &chunked };
+            let fixed = makespan_of(&s, cost);
+            if out.makespan > fixed + 1e-9 {
+                return Err(format!(
+                    "synthesized {} > fixed {} ({}) at ranks={ranks} m={m} profile=[{profile}]",
+                    out.makespan,
+                    fixed,
+                    kind.name()
+                ));
+            }
+        }
+        let cost = if out.schedule.chunks == 1 { &flat } else { &chunked };
+        let rescored = makespan_of(&out.schedule, cost);
+        if rescored.to_bits() != out.makespan.to_bits() {
+            return Err(format!("re-score {rescored} != reported {}", out.makespan));
+        }
+        Ok(())
+    });
+}
+
+/// The analytic longest-path evaluator and the discrete-event engine
+/// must agree bit for bit on synthesized DAGs (they already do on the
+/// fixed four; synthesis must not open a gap).
+#[test]
+fn analytic_and_event_execution_agree_on_synthesized_dags() {
+    check("analytic == event on synthesized DAGs", 16, |rng| {
+        let ranks = usize_in(rng, 1, 4);
+        let m = usize_in(rng, 1, 6);
+        let (flat, chunked, profile) = random_cost_pair(rng, ranks);
+        let out = synthesize(&flat, &chunked, ranks, m, 0.5, DEFAULT_LAMBDA);
+        let cost = if out.schedule.chunks == 1 { &flat } else { &chunked };
+        let g = PipelineDag::from_schedule(&out.schedule);
+        let w = g.weights(|a| cost.duration(a, 0.0));
+        let delays = if cost.has_p2p() {
+            g.p2p_edge_costs(|a, b| cost.p2p(a, b))
+        } else {
+            vec![0.0; g.dag.edge_count()]
+        };
+        let analytic = g.evaluator().batch_time_with_edges(&w, &delays);
+        let event = EventEngine::new(&g, &out.schedule).execute(&w, &delays);
+        if analytic.to_bits() != event.to_bits() {
+            return Err(format!(
+                "analytic {analytic} != event {event} at ranks={ranks} m={m} profile=[{profile}]"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Fuzz: any priority rule — random kind permutations, with and without
+/// random per-action score tables — driven through both generators on
+/// both shapes must terminate (no deadlock) and emit a legal order. On
+/// failure the (seed, profile, priority) triple is printed so the case
+/// replays exactly.
+#[test]
+fn random_priorities_never_deadlock_or_break_legality() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    for seed in 0..48u64 {
+        let mut rng = Rng::seed_from_u64(seed).derive(0xF0_2222, 0);
+        let ranks = usize_in(&mut rng, 1, 4);
+        let m = usize_in(&mut rng, 1, 6);
+        let (flat, chunked, profile) = random_cost_pair(&mut rng, ranks);
+        let mut prio = Priority::random(seed);
+        if rng.bernoulli(0.5) {
+            let table = split_actions(2 * ranks, m)
+                .into_iter()
+                .map(|a| (a, rng.next_below(7) as i64 - 3))
+                .collect();
+            prio = prio.and_table(table);
+        }
+        let name = prio.name().to_string();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            // Flat shape: unit-tick and weighted, split and fused sets.
+            let flat_ros: Vec<usize> = (0..ranks).collect();
+            let flat_dur = |a: Action| flat.duration(a, 0.0);
+            for actions in [split_actions(ranks, m), fused_actions(ranks, m)] {
+                let orders = list_schedule(&actions, ranks, m, &flat_ros, ranks, &prio);
+                wrap(ranks, 1, m, flat_ros.clone(), orders).check_legal()?;
+                let orders = list_schedule_weighted(
+                    &actions, ranks, m, &flat_ros, ranks, &prio, &flat_dur,
+                );
+                wrap(ranks, 1, m, flat_ros.clone(), orders).check_legal()?;
+            }
+            // V shape: the 2R-stage split set.
+            let v_ros = vshape(ranks);
+            let v_split = split_actions(2 * ranks, m);
+            let v_dur = |a: Action| chunked.duration(a, 0.0);
+            let orders = list_schedule(&v_split, 2 * ranks, m, &v_ros, ranks, &prio);
+            wrap(ranks, 2, m, v_ros.clone(), orders).check_legal()?;
+            let orders = list_schedule_weighted(
+                &v_split,
+                2 * ranks,
+                m,
+                &v_ros,
+                ranks,
+                &prio,
+                &v_dur,
+            );
+            wrap(ranks, 2, m, v_ros, orders).check_legal()
+        }));
+        match result {
+            Ok(Ok(())) => {}
+            Ok(Err(illegal)) => panic!(
+                "fuzz: illegal order at seed=0x{seed:016x} profile=[{profile}] \
+                 priority={name}: {illegal}"
+            ),
+            Err(panic) => {
+                let msg = panic
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "non-string panic".to_string());
+                panic!(
+                    "fuzz: generator panicked at seed=0x{seed:016x} profile=[{profile}] \
+                     priority={name}: {msg}"
+                );
+            }
+        }
+    }
+}
+
+/// The zero-bubble tie-break regression: with wgrad cost zero, a fused
+/// backward and its dgrad+wgrad split are the same work, so a fused
+/// schedule and its split twin (each `b` replaced in place by `bd, bw`)
+/// must have bit-identical makespans.
+#[test]
+fn fused_and_split_backward_agree_when_wgrad_is_zero() {
+    for (ranks, m) in [(2usize, 4usize), (3, 5), (4, 8)] {
+        let dgrad: Vec<f64> = (0..ranks).map(|s| 1.0 + 0.25 * s as f64).collect();
+        let cost = CostModel::from_stage_times(
+            vec![1.0; ranks],
+            dgrad,
+            vec![0.0; ranks], // wgrad costs nothing
+            vec![0.0; ranks],
+            vec![0.0; ranks],
+            0.0,
+            Vec::new(),
+        );
+        let fused = Schedule::build(ScheduleKind::OneFOneB, ranks, m, 1);
+        let orders: Vec<Vec<Action>> = fused
+            .orders
+            .iter()
+            .map(|o| {
+                o.iter()
+                    .flat_map(|a| match a.kind {
+                        ActionKind::Backward => {
+                            vec![Action::bd(a.mb, a.stage), Action::bw(a.mb, a.stage)]
+                        }
+                        _ => vec![*a],
+                    })
+                    .collect()
+            })
+            .collect();
+        let split = wrap(ranks, 1, m, fused.rank_of_stage.clone(), orders);
+        split.check_legal().unwrap();
+        let fused_span = makespan_of(&fused, &cost);
+        let split_span = makespan_of(&split, &cost);
+        assert_eq!(
+            fused_span.to_bits(),
+            split_span.to_bits(),
+            "wgrad=0 but fused {fused_span} != split {split_span} (ranks={ranks} m={m})"
+        );
+    }
+}

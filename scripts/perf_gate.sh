@@ -11,9 +11,10 @@
 # Baseline: scripts/BENCH_BASELINE.json. Refresh it by copying a trusted
 # output file over it. Benchmarks present in only one of the two files
 # are ignored (suites may grow): the PR 5 additions
-# (lp_resolve_incremental/1f1b_8x16, replan_loop/llama1b) land in the
-# recorded trajectory immediately but stay outside the ±20% gate until
-# the baseline is re-armed with a file that contains them.
+# (lp_resolve_incremental/1f1b_8x16, replan_loop/llama1b) and the PR 7
+# schedule-synthesis bench (synthesize/1f1b_8x16) land in the recorded
+# trajectory immediately but stay outside the ±20% gate until the
+# baseline is re-armed with a file that contains them.
 #
 # Env:
 #   TF_PERF_GATE_TOLERANCE   regression threshold, default 0.20
@@ -54,6 +55,9 @@ TF_BENCH_QUICK=1 cargo bench --bench fig17_dynamics
 
 echo "== fig19 elasticity (quick smoke: elastic recovery must beat restart) =="
 TF_BENCH_QUICK=1 cargo bench --bench fig19_elasticity
+
+echo "== fig7–13 synth column (quick smoke: synthesized ≤ best fixed schedule) =="
+TF_BENCH_QUICK=1 cargo bench --bench fig7to13_schedules
 
 if [[ ! -f "$BASELINE" ]]; then
     echo "perf_gate: no baseline at $BASELINE — recorded $OUT_JSON, skipping comparison"
