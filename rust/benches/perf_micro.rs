@@ -7,7 +7,10 @@
 use timelyfreeze::bench_support::{bench_auto, header, write_json_if_requested, BenchResult};
 use timelyfreeze::config::ExperimentConfig;
 use timelyfreeze::graph::pipeline::PipelineDag;
-use timelyfreeze::lp::{solve_freeze_lp, FreezeLpInput, FreezeLpSolver, SolvePath};
+use timelyfreeze::lp::{
+    build_lp, solve, solve_freeze_lp, Cmp, FreezeLpInput, FreezeLpSolver, LpProblem,
+    LpRow, LpStatus, PersistentSimplex, SolvePath,
+};
 use timelyfreeze::schedule::Schedule;
 use timelyfreeze::sim;
 use timelyfreeze::types::{FreezeMethod, ScheduleKind};
@@ -176,6 +179,95 @@ fn main() {
         );
     }
 
+    // Sparse revised core vs the dense tableau oracle on the same raw
+    // LP. At 8×16 both cores run — the gap is the tentpole's headline
+    // number. The synthesized 16×64 instance runs the sparse ladder
+    // only: its dense tableau would be ~10⁸ entries, which is exactly
+    // why the revised core exists.
+    {
+        let sched = Schedule::build(ScheduleKind::OneFOneB, 8, 16, 1);
+        let pdag = PipelineDag::from_schedule(&sched);
+        let w_max = pdag.weights(|a| if a.kind.freezable() { 2.0 } else { 1.0 });
+        let w_min = pdag.weights(|a| if a.kind.freezable() { 0.9 } else { 1.0 });
+        record(sparse_drift_bench(
+            "lp_sparse_vs_dense/1f1b_8x16",
+            1.0,
+            &pdag,
+            &w_min,
+            &w_max,
+        ));
+        // The dense oracle on the same instance, for the ratio.
+        let p = build_lp(&FreezeLpInput::new(&pdag, &w_min, &w_max, 0.8, 1e-4)).unwrap();
+        record(bench_auto("lp_dense_oracle/1f1b_8x16", 1.0, || {
+            std::hint::black_box(solve(&p).objective);
+        }));
+
+        // Synthesized 16×64: the acceptance-scale instance. The
+        // synthesizer itself replans through the sparse ladder; the
+        // bench then drives steady-state resolves on its schedule.
+        let stage_cost = |stages: usize, scale: f64| {
+            timelyfreeze::cost::CostModel::from_stage_times(
+                vec![scale; stages],
+                vec![1.4 * scale; stages],
+                vec![0.6 * scale; stages],
+                vec![0.0; stages],
+                vec![0.0; stages],
+                0.0,
+                Vec::new(),
+            )
+        };
+        let out = timelyfreeze::schedule::synthesize(
+            &stage_cost(16, 1.0),
+            &stage_cost(32, 0.5),
+            16,
+            64,
+            0.8,
+            1e-4,
+        );
+        let pdag = PipelineDag::from_schedule(&out.schedule);
+        let w_max = pdag.weights(|a| if a.kind.freezable() { 2.0 } else { 1.0 });
+        let w_min = pdag.weights(|a| if a.kind.freezable() { 0.9 } else { 1.0 });
+        record(sparse_drift_bench(
+            "lp_sparse_vs_dense/synth_16x64",
+            1.5,
+            &pdag,
+            &w_min,
+            &w_max,
+        ));
+    }
+
+    // Long-step dual ratio test in isolation: a 512-variable box LP
+    // whose budget row swings between slack and tight — each resolve
+    // repairs the basis by flipping ~hundreds of bounds around a single
+    // entering pivot, the BFRT's whole advantage over one-pivot-per-
+    // variable dual steps.
+    {
+        let n = 512;
+        let mut p = LpProblem::new();
+        for j in 0..n {
+            // Distinct costs so the optimum is unique and flip-heavy.
+            p.add_var(-1.0 - (j as f64) / (n as f64), 0.0, 1.0);
+        }
+        p.rows.push(LpRow {
+            coeffs: (0..n).map(|j| (j, 1.0)).collect(),
+            cmp: Cmp::Le,
+            rhs: n as f64 * 0.75,
+        });
+        let mut ps = PersistentSimplex::new();
+        std::hint::black_box(ps.solve(&p).objective);
+        let mut round = 0u64;
+        record(bench_auto("lp_bound_flip/box_512", 0.5, || {
+            round += 1;
+            let frac = if round % 2 == 0 { 0.75 } else { 0.25 };
+            p.rows[0].rhs = n as f64 * frac;
+            std::hint::black_box(ps.solve(&p).objective);
+        }));
+        let stats = ps.last_stats().expect("stats recorded");
+        if std::env::var("TF_BENCH_JSON").map_or(false, |q| !q.is_empty()) {
+            println!("lp_bound_flip/box_512: last-resolve stats {stats:?}");
+        }
+    }
+
     // The controller replan loop end to end: observed-profile
     // distillation → skeleton refresh → (warm/incremental) LP solve →
     // delta envelope sweeps. This is the hot loop of the online
@@ -256,4 +348,48 @@ fn main() {
     }
 
     write_json_if_requested("perf_micro", &all);
+}
+
+/// Time a steady-state replan round through the sparse ladder with a
+/// drifting accuracy budget, then verify — on a fresh ladder, since the
+/// timed loop may end on a periodic-refactorization solve — that a
+/// drifted resolve rides the incremental rung of the LU + Devex path:
+/// real dual work (pivots or bound flips) with zero refactorizations.
+/// This is the tentpole's acceptance probe; the stats line prints
+/// whenever a `TF_BENCH_JSON` trajectory point is being recorded.
+fn sparse_drift_bench(
+    name: &str,
+    budget_s: f64,
+    pdag: &PipelineDag,
+    w_min: &[f64],
+    w_max: &[f64],
+) -> BenchResult {
+    let lp_at =
+        |r_max: f64| build_lp(&FreezeLpInput::new(pdag, w_min, w_max, r_max, 1e-4)).unwrap();
+    let mut ps = PersistentSimplex::new();
+    std::hint::black_box(ps.solve(&lp_at(0.8)).objective);
+    let mut round = 0u64;
+    let result = bench_auto(name, budget_s, || {
+        round += 1;
+        let r_max = 0.8 - 0.04 * (round % 8) as f64;
+        std::hint::black_box(ps.solve(&lp_at(r_max)).objective);
+    });
+    let mut fresh = PersistentSimplex::new();
+    fresh.solve(&lp_at(0.8));
+    let drifted = fresh.solve(&lp_at(0.56));
+    assert_eq!(drifted.status, LpStatus::Optimal);
+    assert_eq!(fresh.last_path(), Some(SolvePath::Incremental));
+    let stats = fresh.last_stats().expect("stats recorded");
+    assert!(
+        stats.pivots + stats.bound_flips > 0,
+        "{name}: a 0.8→0.56 budget drop must do dual work, stats {stats:?}"
+    );
+    assert_eq!(
+        stats.refactorizations, 0,
+        "{name}: the incremental rung must reuse the factorization"
+    );
+    if std::env::var("TF_BENCH_JSON").map_or(false, |p| !p.is_empty()) {
+        println!("{name}: drifted-resolve stats {stats:?}");
+    }
+    result
 }

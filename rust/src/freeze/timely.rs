@@ -160,6 +160,15 @@ impl TimelyFreeze {
         self.solver.last_solve_path()
     }
 
+    /// Work counters of the last LP solve — simplex pivots, dual
+    /// bound flips, and basis refactorizations, alongside the ladder
+    /// rung that produced the plan (`None` before the first solve).
+    /// A healthy steady-state replan loop shows single-digit pivots
+    /// and zero refactorizations per call.
+    pub fn last_solve_stats(&self) -> Option<crate::lp::SolveStats> {
+        self.solver.last_solve_stats()
+    }
+
     /// Re-plan from the current monitoring state: re-solves the LP
     /// warm-started from the previous optimal basis (a handful of pivots
     /// instead of a full two-phase solve), refreshing `r*`. For elastic

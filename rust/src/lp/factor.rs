@@ -1,0 +1,547 @@
+//! Sparse LU factorization of a simplex basis, with a product-form eta
+//! file for pivot-by-pivot updates — the numerical kernel behind the
+//! sparse revised simplex core ([`super::revised`]).
+//!
+//! [`LuFactors::factorize`] decomposes the basis matrix `B` (given as
+//! `m` sparse columns) into a sequence of elementary row operations
+//! (`L`) and a permuted upper-triangular remainder (`U`):
+//!
+//! 1. **Singleton triangularization** — a queue-driven sweep that peels
+//!    off column singletons (the pivot column has one active entry: no
+//!    other row needs elimination) and row singletons (the pivot row has
+//!    one active entry: eliminating the pivot column touches no other
+//!    column). Both are *fill-free*; on the near-triangular bases that
+//!    pipeline precedence LPs produce, this phase absorbs almost every
+//!    pivot.
+//! 2. **Markowitz bump elimination** — the small irreducible core that
+//!    remains is eliminated with Markowitz-cost pivot selection
+//!    (minimize `(r_i − 1)(c_j − 1)` over candidate entries) under a
+//!    relative threshold-pivoting guard, trading a little growth control
+//!    against sparsity of the factors.
+//!
+//! [`Factorization`] wraps the LU with a product-form eta file: each
+//! basis change appends one eta column (the ftran'd entering column and
+//! its pivot position), and [`Factorization::ftran`] /
+//! [`Factorization::btran`] replay the file after / before the LU
+//! triangular solves. Periodic refactorization (driven by the caller's
+//! interval and the eta cap) collapses the file back into a fresh LU,
+//! bounding both solve cost and f64 drift — the classic revised-simplex
+//! discipline the dense seed path approximated with every-64th-solve
+//! rebuilds.
+
+/// Pivot values below this are treated as structural singularity.
+const SING_TOL: f64 = 1e-11;
+/// Entries below this are dropped when emitting factor rows.
+const DROP_TOL: f64 = 1e-13;
+/// Relative threshold for Markowitz pivot admission: a candidate must
+/// be at least this fraction of its column's largest active entry.
+const THRESH: f64 = 0.01;
+
+/// One recorded basis change: entering column `w = B⁻¹ a_q` (in basis
+/// position space) replacing the basic variable at position `r`.
+#[derive(Clone, Debug)]
+struct Eta {
+    /// Basis position the entering column pivoted on.
+    r: usize,
+    /// `w[r]` — the pivot element of the eta column.
+    wr: f64,
+    /// Off-pivot nonzeros of `w` (position, value), `r` excluded.
+    entries: Vec<(usize, f64)>,
+}
+
+/// Sparse LU factors of one basis realization: an ordered list of row
+/// operations (`L`) plus a permuted upper-triangular system (`U`).
+///
+/// Step `k` pivoted matrix row `row_of[k]` against basis position
+/// `col_of[k]`; `ops[k]` holds the row operations that zeroed the pivot
+/// column below it, and `urow[k]` the pivot row's surviving entries over
+/// later-eliminated basis positions.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct LuFactors {
+    m: usize,
+    row_of: Vec<usize>,
+    col_of: Vec<usize>,
+    /// Per step: `(target_row, multiplier)` meaning
+    /// `b[target] -= multiplier * b[row_of[k]]`.
+    ops: Vec<Vec<(usize, f64)>>,
+    pivot: Vec<f64>,
+    urow: Vec<Vec<(usize, f64)>>,
+}
+
+impl LuFactors {
+    /// Factorize the basis whose `m` columns are given as sparse
+    /// `(row, value)` lists. `None` on (numerical) singularity.
+    pub(crate) fn factorize(m: usize, cols: &[&[(usize, f64)]]) -> Option<LuFactors> {
+        debug_assert_eq!(cols.len(), m);
+        // Working copies with lazy deletion: entries stay in place and
+        // are filtered through the active masks when scanned.
+        let col_entries: Vec<Vec<(usize, f64)>> = cols.iter().map(|c| c.to_vec()).collect();
+        let mut row_entries: Vec<Vec<(usize, f64)>> = vec![Vec::new(); m];
+        for (k, col) in col_entries.iter().enumerate() {
+            for &(i, v) in col {
+                if i >= m {
+                    return None;
+                }
+                row_entries[i].push((k, v));
+            }
+        }
+        let mut row_active = vec![true; m];
+        let mut col_active = vec![true; m];
+        let mut row_cnt: Vec<usize> = row_entries.iter().map(Vec::len).collect();
+        let mut col_cnt: Vec<usize> = col_entries.iter().map(Vec::len).collect();
+
+        let mut lu = LuFactors {
+            m,
+            row_of: Vec::with_capacity(m),
+            col_of: Vec::with_capacity(m),
+            ops: Vec::with_capacity(m),
+            pivot: Vec::with_capacity(m),
+            urow: Vec::with_capacity(m),
+        };
+
+        // ---- Phase A: fill-free singleton elimination ----
+        // Work stack of (is_col, index) candidates whose active count may
+        // be 1; counts are re-checked on pop (lazy invalidation).
+        let mut stack: Vec<(bool, usize)> = Vec::with_capacity(2 * m);
+        for k in 0..m {
+            if col_cnt[k] == 1 {
+                stack.push((true, k));
+            }
+        }
+        for i in 0..m {
+            if row_cnt[i] == 1 {
+                stack.push((false, i));
+            }
+        }
+        let mut eliminated = 0usize;
+        while let Some((is_col, idx)) = stack.pop() {
+            if is_col {
+                let k = idx;
+                if !col_active[k] || col_cnt[k] != 1 {
+                    continue;
+                }
+                // Column singleton: its unique active entry is the pivot;
+                // no other active row has an entry in this column, so no
+                // elimination (and no fill) is needed.
+                let Some(&(r, v)) =
+                    col_entries[k].iter().find(|&&(i, _)| row_active[i])
+                else {
+                    return None; // count said 1; structure disagrees
+                };
+                if v.abs() < SING_TOL {
+                    return None;
+                }
+                lu.row_of.push(r);
+                lu.col_of.push(k);
+                lu.pivot.push(v);
+                lu.ops.push(Vec::new());
+                // The pivot row's other active entries move to U and
+                // leave their columns' active counts.
+                let mut u = Vec::new();
+                for &(c, w) in &row_entries[r] {
+                    if c != k && col_active[c] {
+                        if w.abs() > DROP_TOL {
+                            u.push((c, w));
+                        }
+                        col_cnt[c] -= 1;
+                        if col_cnt[c] == 1 {
+                            stack.push((true, c));
+                        }
+                    }
+                }
+                lu.urow.push(u);
+                row_active[r] = false;
+                col_active[k] = false;
+                eliminated += 1;
+            } else {
+                let r = idx;
+                if !row_active[r] || row_cnt[r] != 1 {
+                    continue;
+                }
+                // Row singleton: the pivot row has a single active entry,
+                // so zeroing the pivot column in other rows touches no
+                // other column — record the row operations, no fill.
+                let Some(&(k, v)) =
+                    row_entries[r].iter().find(|&&(c, _)| col_active[c])
+                else {
+                    return None;
+                };
+                if v.abs() < SING_TOL {
+                    return None;
+                }
+                let mut ops = Vec::new();
+                for &(i, w) in &col_entries[k] {
+                    if i != r && row_active[i] {
+                        ops.push((i, w / v));
+                        row_cnt[i] -= 1;
+                        if row_cnt[i] == 1 {
+                            stack.push((false, i));
+                        }
+                    }
+                }
+                lu.row_of.push(r);
+                lu.col_of.push(k);
+                lu.pivot.push(v);
+                lu.ops.push(ops);
+                lu.urow.push(Vec::new());
+                row_active[r] = false;
+                col_active[k] = false;
+                eliminated += 1;
+            }
+        }
+
+        // ---- Phase B: Markowitz-ordered bump elimination ----
+        // The irreducible remainder is gathered into a dense working
+        // square (small on precedence-structured bases); pivots are
+        // chosen by Markowitz cost under a relative threshold, and the
+        // resulting row operations / U rows are emitted in the same
+        // global representation as phase A.
+        let nb = m - eliminated;
+        if nb > 0 {
+            let gr: Vec<usize> = (0..m).filter(|&i| row_active[i]).collect();
+            let gc: Vec<usize> = (0..m).filter(|&k| col_active[k]).collect();
+            if gr.len() != nb || gc.len() != nb {
+                return None;
+            }
+            let mut cpos = vec![usize::MAX; m];
+            for (bj, &k) in gc.iter().enumerate() {
+                cpos[k] = bj;
+            }
+            let mut b = vec![0.0f64; nb * nb];
+            for (bi, &i) in gr.iter().enumerate() {
+                for &(k, v) in &row_entries[i] {
+                    if col_active[k] {
+                        b[bi * nb + cpos[k]] = v;
+                    }
+                }
+            }
+            let mut ract = vec![true; nb];
+            let mut cact = vec![true; nb];
+            for _ in 0..nb {
+                // Candidate scan: per active column, the largest entry
+                // (for the threshold) and per entry its Markowitz cost.
+                let mut best: Option<(usize, usize, f64, usize)> = None; // (bi,bj,val,cost)
+                for bj in 0..nb {
+                    if !cact[bj] {
+                        continue;
+                    }
+                    let mut cmax = 0.0f64;
+                    for bi in 0..nb {
+                        if ract[bi] {
+                            cmax = cmax.max(b[bi * nb + bj].abs());
+                        }
+                    }
+                    if cmax < SING_TOL {
+                        return None; // active column vanished: singular
+                    }
+                    let ccnt = (0..nb)
+                        .filter(|&bi| ract[bi] && b[bi * nb + bj].abs() > DROP_TOL)
+                        .count();
+                    for bi in 0..nb {
+                        if !ract[bi] {
+                            continue;
+                        }
+                        let v = b[bi * nb + bj];
+                        if v.abs() < THRESH * cmax || v.abs() < SING_TOL {
+                            continue;
+                        }
+                        let rcnt = (0..nb)
+                            .filter(|&j2| {
+                                cact[j2] && b[bi * nb + j2].abs() > DROP_TOL
+                            })
+                            .count();
+                        let cost = (rcnt - 1) * (ccnt - 1);
+                        let better = match best {
+                            None => true,
+                            Some((_, _, bv, bcost)) => {
+                                cost < bcost
+                                    || (cost == bcost && v.abs() > bv.abs())
+                            }
+                        };
+                        if better {
+                            best = Some((bi, bj, v, cost));
+                        }
+                    }
+                }
+                let (pi, pj, pv, _) = best?;
+                let mut ops = Vec::new();
+                for bi in 0..nb {
+                    if bi == pi || !ract[bi] {
+                        continue;
+                    }
+                    let w = b[bi * nb + pj];
+                    if w.abs() <= DROP_TOL {
+                        continue;
+                    }
+                    let mult = w / pv;
+                    ops.push((gr[bi], mult));
+                    for bj2 in 0..nb {
+                        if bj2 != pj && cact[bj2] {
+                            b[bi * nb + bj2] -= mult * b[pi * nb + bj2];
+                        }
+                    }
+                    b[bi * nb + pj] = 0.0;
+                }
+                let mut u = Vec::new();
+                for bj2 in 0..nb {
+                    if bj2 != pj && cact[bj2] {
+                        let v = b[pi * nb + bj2];
+                        if v.abs() > DROP_TOL {
+                            u.push((gc[bj2], v));
+                        }
+                    }
+                }
+                lu.row_of.push(gr[pi]);
+                lu.col_of.push(gc[pj]);
+                lu.pivot.push(pv);
+                lu.ops.push(ops);
+                lu.urow.push(u);
+                ract[pi] = false;
+                cact[pj] = false;
+            }
+        }
+        debug_assert_eq!(lu.row_of.len(), m);
+        Some(lu)
+    }
+
+    /// Solve `B x = b`. `b` (row space, length `m`) is consumed as the
+    /// forward-substitution workspace; the result lands in `out`,
+    /// indexed by **basis position**.
+    fn ftran(&self, b: &mut [f64], out: &mut [f64]) {
+        for k in 0..self.m {
+            let bv = b[self.row_of[k]];
+            if bv != 0.0 {
+                for &(t, mult) in &self.ops[k] {
+                    b[t] -= mult * bv;
+                }
+            }
+        }
+        for k in (0..self.m).rev() {
+            let mut v = b[self.row_of[k]];
+            for &(c, u) in &self.urow[k] {
+                v -= u * out[c];
+            }
+            out[self.col_of[k]] = v / self.pivot[k];
+        }
+    }
+
+    /// Solve `Bᵀ y = c`. `c` (basis-position space, length `m`) is
+    /// consumed as the forward workspace; the result lands in `out`,
+    /// indexed by **matrix row**.
+    fn btran(&self, c: &mut [f64], out: &mut [f64]) {
+        for k in 0..self.m {
+            let zk = c[self.col_of[k]] / self.pivot[k];
+            out[self.row_of[k]] = zk;
+            if zk != 0.0 {
+                for &(c2, u) in &self.urow[k] {
+                    c[c2] -= u * zk;
+                }
+            }
+        }
+        for k in (0..self.m).rev() {
+            let mut v = out[self.row_of[k]];
+            for &(t, mult) in &self.ops[k] {
+                v -= mult * out[t];
+            }
+            out[self.row_of[k]] = v;
+        }
+    }
+}
+
+/// A live basis factorization: sparse LU plus the product-form eta file
+/// accumulated since the last refactorization.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct Factorization {
+    lu: LuFactors,
+    etas: Vec<Eta>,
+}
+
+impl Factorization {
+    /// Factorize `B` from its sparse columns; `None` on singularity.
+    pub(crate) fn factorize(m: usize, cols: &[&[(usize, f64)]]) -> Option<Factorization> {
+        Some(Factorization { lu: LuFactors::factorize(m, cols)?, etas: Vec::new() })
+    }
+
+    /// Number of eta columns accumulated since the last factorization.
+    pub(crate) fn eta_len(&self) -> usize {
+        self.etas.len()
+    }
+
+    /// Solve `B x = b` through the LU and the eta file. `b` is the
+    /// dense right-hand side over matrix rows (consumed); `out` receives
+    /// the solution over basis positions.
+    pub(crate) fn ftran(&mut self, b: &mut [f64], out: &mut [f64]) {
+        self.lu.ftran(b, out);
+        for eta in &self.etas {
+            let t = out[eta.r] / eta.wr;
+            if t != 0.0 {
+                for &(i, wi) in &eta.entries {
+                    out[i] -= wi * t;
+                }
+            }
+            out[eta.r] = t;
+        }
+    }
+
+    /// Solve `Bᵀ y = c` through the eta file (newest first) and the LU.
+    /// `c` is dense over basis positions (consumed); `out` receives the
+    /// solution over matrix rows.
+    pub(crate) fn btran(&mut self, c: &mut [f64], out: &mut [f64]) {
+        for eta in self.etas.iter().rev() {
+            let mut v = c[eta.r];
+            for &(i, wi) in &eta.entries {
+                v -= wi * c[i];
+            }
+            c[eta.r] = v / eta.wr;
+        }
+        self.lu.btran(c, out);
+    }
+
+    /// Record a basis change: the ftran'd entering column `w = B⁻¹ a_q`
+    /// (dense over positions) pivoting on position `r`. Returns `false`
+    /// when the pivot element is too small to trust (caller should
+    /// refactorize instead).
+    pub(crate) fn push_eta(&mut self, r: usize, w: &[f64]) -> bool {
+        let wr = w[r];
+        if wr.abs() < SING_TOL {
+            return false;
+        }
+        let entries: Vec<(usize, f64)> = w
+            .iter()
+            .enumerate()
+            .filter(|&(i, &v)| i != r && v.abs() > DROP_TOL)
+            .map(|(i, &v)| (i, v))
+            .collect();
+        self.etas.push(Eta { r, wr, entries });
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Multiply the dense column representation by `x` (positions).
+    fn apply(m: usize, cols: &[Vec<(usize, f64)>], x: &[f64]) -> Vec<f64> {
+        let mut b = vec![0.0; m];
+        for (k, col) in cols.iter().enumerate() {
+            for &(i, v) in col {
+                b[i] += v * x[k];
+            }
+        }
+        b
+    }
+
+    fn roundtrip(m: usize, cols: Vec<Vec<(usize, f64)>>, x_true: Vec<f64>) {
+        let refs: Vec<&[(usize, f64)]> = cols.iter().map(|c| c.as_slice()).collect();
+        let mut f = Factorization::factorize(m, &refs).expect("nonsingular");
+        let mut b = apply(m, &cols, &x_true);
+        let mut x = vec![0.0; m];
+        f.ftran(&mut b, &mut x);
+        for (a, e) in x.iter().zip(&x_true) {
+            assert!((a - e).abs() < 1e-9, "ftran {a} vs {e}");
+        }
+        // btran: pick y_true, form c = Bᵀ y, solve back.
+        let y_true: Vec<f64> = (0..m).map(|i| (i as f64) * 0.7 - 1.3).collect();
+        let mut c = vec![0.0; m];
+        for (k, col) in cols.iter().enumerate() {
+            for &(i, v) in col {
+                c[k] += v * y_true[i];
+            }
+        }
+        let mut y = vec![0.0; m];
+        f.btran(&mut c, &mut y);
+        for (a, e) in y.iter().zip(&y_true) {
+            assert!((a - e).abs() < 1e-9, "btran {a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn identity_and_permutation() {
+        roundtrip(
+            3,
+            vec![vec![(0, 1.0)], vec![(1, 1.0)], vec![(2, 1.0)]],
+            vec![1.0, -2.0, 3.0],
+        );
+        roundtrip(
+            3,
+            vec![vec![(2, 2.0)], vec![(0, -1.0)], vec![(1, 4.0)]],
+            vec![0.5, 2.5, -1.5],
+        );
+    }
+
+    #[test]
+    fn triangular_and_general() {
+        // Lower-triangular-ish: singleton phase absorbs everything.
+        roundtrip(
+            3,
+            vec![
+                vec![(0, 2.0), (1, 1.0), (2, -1.0)],
+                vec![(1, 3.0), (2, 0.5)],
+                vec![(2, -2.0)],
+            ],
+            vec![1.0, 2.0, 3.0],
+        );
+        // Fully dense 3×3 (forces the Markowitz bump).
+        roundtrip(
+            3,
+            vec![
+                vec![(0, 2.0), (1, 1.0), (2, 1.0)],
+                vec![(0, 1.0), (1, 3.0), (2, 2.0)],
+                vec![(0, 1.0), (1, 2.0), (2, 4.0)],
+            ],
+            vec![-1.0, 2.0, 0.5],
+        );
+    }
+
+    #[test]
+    fn singular_is_rejected() {
+        let cols: Vec<Vec<(usize, f64)>> = vec![
+            vec![(0, 1.0), (1, 1.0)],
+            vec![(0, 2.0), (1, 2.0)], // linearly dependent
+        ];
+        let refs: Vec<&[(usize, f64)]> = cols.iter().map(|c| c.as_slice()).collect();
+        assert!(Factorization::factorize(2, &refs).is_none());
+    }
+
+    #[test]
+    fn eta_updates_track_basis_changes() {
+        // Start from the identity, replace position 1's column, and
+        // check ftran/btran against the replaced matrix.
+        let cols: Vec<Vec<(usize, f64)>> =
+            vec![vec![(0, 1.0)], vec![(1, 1.0)], vec![(2, 1.0)]];
+        let refs: Vec<&[(usize, f64)]> = cols.iter().map(|c| c.as_slice()).collect();
+        let mut f = Factorization::factorize(3, &refs).unwrap();
+        // New column a_q = (1, 2, 1)ᵀ enters at position 1.
+        let aq = vec![(0usize, 1.0f64), (1, 2.0), (2, 1.0)];
+        let mut b = vec![0.0; 3];
+        for &(i, v) in &aq {
+            b[i] = v;
+        }
+        let mut w = vec![0.0; 3];
+        f.ftran(&mut b, &mut w); // B = I ⇒ w = a_q
+        assert!(f.push_eta(1, &w));
+        // New basis columns: e_0, a_q, e_2.
+        let newcols: Vec<Vec<(usize, f64)>> =
+            vec![vec![(0, 1.0)], aq.clone(), vec![(2, 1.0)]];
+        let x_true = vec![1.5, -0.5, 2.0];
+        let mut rhs = apply(3, &newcols, &x_true);
+        let mut x = vec![0.0; 3];
+        f.ftran(&mut rhs, &mut x);
+        for (a, e) in x.iter().zip(&x_true) {
+            assert!((a - e).abs() < 1e-9, "eta ftran {a} vs {e}");
+        }
+        let y_true = vec![0.3, -1.0, 0.7];
+        let mut c = vec![0.0; 3];
+        for (k, col) in newcols.iter().enumerate() {
+            for &(i, v) in col {
+                c[k] += v * y_true[i];
+            }
+        }
+        let mut y = vec![0.0; 3];
+        f.btran(&mut c, &mut y);
+        for (a, e) in y.iter().zip(&y_true) {
+            assert!((a - e).abs() < 1e-9, "eta btran {a} vs {e}");
+        }
+    }
+}

@@ -49,7 +49,7 @@
 use crate::graph::dag::DeltaEvaluator;
 use crate::graph::pipeline::{Node, PipelineDag};
 use crate::lp::simplex::{
-    self, Cmp, LpProblem, LpSolution, LpStatus, PersistentSimplex, SolvePath, INF,
+    self, Cmp, LpProblem, LpSolution, LpStatus, PersistentSimplex, SolvePath, SolveStats, INF,
 };
 use crate::types::ActionKind;
 
@@ -162,6 +162,11 @@ pub struct FreezeSolution {
     /// time to the forward re-runs. `None` ⇒ the solve saw no
     /// recomputation.
     pub recompute_surcharge: Option<Vec<f64>>,
+    /// Persistent-solver counters (ladder rung, pivots, bound flips,
+    /// refactorizations) for the solve that produced this solution.
+    /// `None` on the one-shot [`solve_freeze_lp`] path, which runs the
+    /// dense reference solver and reports `iterations` only.
+    pub stats: Option<SolveStats>,
 }
 
 impl FreezeSolution {
@@ -356,6 +361,13 @@ impl FreezeLpSolver {
         self.simplex.last_path()
     }
 
+    /// Counters of the last solve — ladder rung, pivots, bound flips,
+    /// refactorizations (`None` before the first solve). The same value
+    /// lands on [`FreezeSolution::stats`].
+    pub fn last_solve_stats(&self) -> Option<SolveStats> {
+        self.simplex.last_stats()
+    }
+
     /// Drop all cached state (e.g. after the schedule changed shape).
     pub fn reset(&mut self) {
         self.simplex.reset();
@@ -378,7 +390,9 @@ impl FreezeLpSolver {
             self.reset();
             return Err(FreezeLpError::Solver(sol.status));
         }
-        Ok(skel.extract(input, &sol))
+        let mut out = skel.extract(input, &sol);
+        out.stats = self.simplex.last_stats();
+        Ok(out)
     }
 }
 
@@ -634,6 +648,7 @@ impl Skeleton {
             p_d_min,
             iterations: sol.iterations,
             recompute_surcharge: input.recompute.map(|s| s.to_vec()),
+            stats: None,
         }
     }
 }
@@ -678,6 +693,13 @@ pub fn solve_freeze_lp(input: &FreezeLpInput) -> Result<FreezeSolution, FreezeLp
         return Err(FreezeLpError::Solver(sol.status));
     }
     Ok(extract_solution(input, &built, &sol))
+}
+
+/// Assemble the raw [`LpProblem`] of the freeze formulation without
+/// solving it — the sparse-vs-dense property tests and benches feed the
+/// exact LP both solver cores see through this entry.
+pub fn build_lp(input: &FreezeLpInput) -> Result<LpProblem, FreezeLpError> {
+    Ok(build_problem(input)?.lp)
 }
 
 /// The assembled LP plus the variable maps needed to read a solution
@@ -925,6 +947,7 @@ fn extract_solution(
         p_d_min,
         iterations: sol.iterations,
         recompute_surcharge: input.recompute.map(|s| s.to_vec()),
+        stats: None,
     }
 }
 

@@ -1,15 +1,24 @@
 //! Linear programming layer: a from-scratch bounded-variable simplex
-//! solver (flat tableau, partial pricing, warm starts) and the
-//! TimelyFreeze freeze-ratio formulation built on it.
+//! solver and the TimelyFreeze freeze-ratio formulation built on it.
+//!
+//! Two solver cores live side by side. The dense two-phase tableau
+//! simplex in [`simplex`] is the one-shot reference oracle
+//! ([`solve`] / [`solve_from_basis`]); the sparse revised simplex in
+//! `revised` (basis LU from `factor`, Devex pricing, long-step
+//! bound-flipping dual ratio test) powers [`PersistentSimplex`]'s
+//! incremental → warm → cold replan ladder and is tuned via
+//! [`SimplexConfig`], reporting per-solve [`SolveStats`].
 
+mod factor;
 pub mod freeze_lp;
+mod revised;
 pub mod simplex;
 
 pub use freeze_lp::{
-    solve_freeze_lp, FreezeLpError, FreezeLpInput, FreezeLpSolver, FreezeSolution,
-    DEFAULT_LAMBDA,
+    build_lp, solve_freeze_lp, FreezeLpError, FreezeLpInput, FreezeLpSolver,
+    FreezeSolution, DEFAULT_LAMBDA,
 };
 pub use simplex::{
     solve, solve_from_basis, Basis, Cmp, LpProblem, LpRow, LpSolution, LpStatus,
-    PersistentSimplex, SolvePath, INF,
+    PersistentSimplex, SimplexConfig, SolvePath, SolveStats, INF,
 };

@@ -1,0 +1,991 @@
+//! Sparse revised simplex core: LU-factorized basis ([`super::factor`]),
+//! Devex pricing, and a long-step bound-flipping dual ratio test.
+//!
+//! This module is the engine behind
+//! [`PersistentSimplex`](super::simplex::PersistentSimplex). Where the
+//! dense seed path stored `B⁻¹A` as an m×ntot tableau and paid O(m²)
+//! per pivot, the revised core keeps only the basis factorization and
+//! reconstructs what each pivot needs on demand:
+//!
+//! * the **entering column** `α = B⁻¹ a_q` by one ftran,
+//! * the **pivot row** `α_r = eᵣᵀ B⁻¹ A` by one btran plus a pass over
+//!   the (sparse) structural columns,
+//!
+//! so per-pivot cost is O(m + nnz) instead of O(m·ntot). Reduced costs
+//! are maintained incrementally from the pivot row and recomputed from
+//! scratch at every refactorization; primal pricing is Devex (reference
+//! weights reset per solve), dual pricing is Devex over rows (weights
+//! updated for free from the ftran'd entering column), and both fall
+//! back to Bland's rule after a degeneracy stall, guaranteeing
+//! termination. The dual ratio test is the long-step bound-flipping
+//! variant: breakpoints are walked in ratio order and every *boxed*
+//! nonbasic crossed on the way flips to its opposite bound in bulk —
+//! one combined ftran repairs the basic values for all flips — so LPs
+//! whose optimum pins many variables at a bound (the freeze LP's `w`
+//! columns under a tight `r_max`) converge in a fraction of the pivots.
+//!
+//! Problem layout: `[structural 0..n | logical n..n+m]`, one logical
+//! column (coefficient +1) per row with bounds `Le → [0, ∞)`,
+//! `Ge → (−∞, 0]`, `Eq → [0, 0]` — no artificial variables. The cold
+//! start seats nonbasics dual-feasibly against the all-logical basis
+//! and *cost-shifts* the columns that cannot be seated (free variables
+//! and semi-infinite boxes with the wrong cost sign), runs the dual
+//! simplex to primal feasibility, then restores true costs for a primal
+//! clean-up phase. With no artificials, an `Infeasible` verdict from
+//! the dual ratio test is a genuine Farkas certificate (a violated row
+//! whose every admissible move worsens it), not the pinned-artificial
+//! ambiguity the dense incremental path had to refactorize around.
+
+use super::factor::Factorization;
+use super::simplex::{Basis, Cmp, LpProblem, LpSolution, LpStatus, INF};
+
+const FEAS_TOL: f64 = 1e-9;
+const OPT_TOL: f64 = 1e-9;
+const PIVOT_TOL: f64 = 1e-10;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum VState {
+    Basic(usize),
+    AtLower,
+    AtUpper,
+}
+
+/// The persistent sparse solver state: problem data in the
+/// `[structural | logical]` layout, the current basis and resting
+/// states, the live factorization, and the per-solve counters.
+#[derive(Clone, Debug)]
+pub(crate) struct RevisedSimplex {
+    n: usize,
+    m: usize,
+    ntot: usize,
+    /// All `ntot` columns, sparse `(row, value)`; logicals are unit.
+    cols: Vec<Vec<(usize, f64)>>,
+    lower: Vec<f64>,
+    upper: Vec<f64>,
+    /// True objective (logicals 0).
+    c: Vec<f64>,
+    /// Working objective (equal to `c` except while cost-shifted).
+    ccur: Vec<f64>,
+    rhs: Vec<f64>,
+    senses: Vec<Cmp>,
+    /// Structural fingerprint guarding incremental reuse.
+    coeffs_fp: Vec<Vec<(usize, f64)>>,
+    basis: Vec<usize>,
+    state: Vec<VState>,
+    xval: Vec<f64>,
+    xb: Vec<f64>,
+    d: Vec<f64>,
+    fac: Factorization,
+    // Devex weights (reset per optimize call).
+    pweight: Vec<f64>,
+    dweight: Vec<f64>,
+    // Scratch buffers.
+    work_row: Vec<f64>,
+    work_pos: Vec<f64>,
+    alpha_col: Vec<f64>,
+    alpha_row: Vec<f64>,
+    // Per-solve counters.
+    pivots: usize,
+    flips: usize,
+    refactors: usize,
+}
+
+/// Internal failure signal: the state is numerically unusable for this
+/// solve and the caller's ladder should fall through to a fresh rung.
+pub(crate) struct NumericalFailure;
+
+impl RevisedSimplex {
+    /// Build a cold state for `p`: all-logical basis (identity
+    /// factorization), nonbasics seated dual-feasibly where a finite
+    /// bound allows it.
+    pub(crate) fn from_problem(p: &LpProblem) -> RevisedSimplex {
+        let n = p.num_vars();
+        let m = p.num_rows();
+        let ntot = n + m;
+        let mut cols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+        for (i, row) in p.rows.iter().enumerate() {
+            for &(j, a) in &row.coeffs {
+                if a != 0.0 {
+                    cols[j].push((i, a));
+                }
+            }
+        }
+        let mut lower = p.lower.clone();
+        let mut upper = p.upper.clone();
+        let mut senses = Vec::with_capacity(m);
+        for (i, row) in p.rows.iter().enumerate() {
+            cols.push(vec![(i, 1.0)]);
+            let (lo, hi) = logical_bounds(row.cmp);
+            lower.push(lo);
+            upper.push(hi);
+            senses.push(row.cmp);
+        }
+        let mut c = vec![0.0; ntot];
+        c[..n].copy_from_slice(&p.c);
+        let mut state = vec![VState::AtLower; ntot];
+        let mut xval = vec![0.0; ntot];
+        for j in 0..n {
+            let (st, v) = seat_cold(c[j], lower[j], upper[j]);
+            state[j] = st;
+            xval[j] = v;
+        }
+        let mut basis = Vec::with_capacity(m);
+        for i in 0..m {
+            basis.push(n + i);
+            state[n + i] = VState::Basic(i);
+        }
+        let fac = identity_factorization(m, &cols[n..]);
+        RevisedSimplex {
+            n,
+            m,
+            ntot,
+            ccur: c.clone(),
+            c,
+            rhs: p.rows.iter().map(|r| r.rhs).collect(),
+            coeffs_fp: p.rows.iter().map(|r| r.coeffs.clone()).collect(),
+            cols,
+            lower,
+            upper,
+            senses,
+            basis,
+            state,
+            xval,
+            xb: vec![0.0; m],
+            d: vec![0.0; ntot],
+            fac,
+            pweight: vec![1.0; ntot],
+            dweight: vec![1.0; m],
+            work_row: vec![0.0; m],
+            work_pos: vec![0.0; m],
+            alpha_col: vec![0.0; m],
+            alpha_row: vec![0.0; ntot],
+            pivots: 0,
+            flips: 0,
+            refactors: 0,
+        }
+    }
+
+    /// Whether `p` has the same constraint matrix this state was built
+    /// for (same dimensions, senses, and exact coefficients) — the
+    /// precondition of the incremental rung.
+    pub(crate) fn matches(&self, p: &LpProblem) -> bool {
+        if p.num_vars() != self.n || p.num_rows() != self.m {
+            return false;
+        }
+        p.rows.iter().zip(self.senses.iter().zip(&self.coeffs_fp)).all(
+            |(row, (cmp, coeffs))| row.cmp == *cmp && row.coeffs == *coeffs,
+        )
+    }
+
+    /// Patch drifted data (objective, RHS, variable bounds) into the
+    /// state without touching the factorization. Requires
+    /// [`RevisedSimplex::matches`]; `false` on inverted bounds.
+    pub(crate) fn patch(&mut self, p: &LpProblem) -> bool {
+        for j in 0..self.n {
+            if p.lower[j] > p.upper[j] {
+                return false;
+            }
+            self.lower[j] = p.lower[j];
+            self.upper[j] = p.upper[j];
+        }
+        self.c[..self.n].copy_from_slice(&p.c);
+        for (dst, row) in self.rhs.iter_mut().zip(&p.rows) {
+            *dst = row.rhs;
+        }
+        self.reseat_nonbasics();
+        true
+    }
+
+    /// Rebuild the state for a *structurally changed* `p` (same
+    /// dimensions), keeping the current basis and resting states, and
+    /// refactorize from scratch. `false` when the dimensions differ or
+    /// the retained basis is singular under the new coefficients — the
+    /// caller then falls through to a cold build.
+    pub(crate) fn rebuild(&mut self, p: &LpProblem) -> bool {
+        if p.num_vars() != self.n || p.num_rows() != self.m {
+            return false;
+        }
+        for j in 0..self.n {
+            if p.lower[j] > p.upper[j] {
+                return false;
+            }
+            self.cols[j].clear();
+            self.lower[j] = p.lower[j];
+            self.upper[j] = p.upper[j];
+        }
+        for (i, row) in p.rows.iter().enumerate() {
+            for &(j, a) in &row.coeffs {
+                if a != 0.0 {
+                    self.cols[j].push((i, a));
+                }
+            }
+            let (lo, hi) = logical_bounds(row.cmp);
+            self.lower[self.n + i] = lo;
+            self.upper[self.n + i] = hi;
+            self.senses[i] = row.cmp;
+            self.rhs[i] = row.rhs;
+            self.coeffs_fp[i].clear();
+            self.coeffs_fp[i].extend_from_slice(&row.coeffs);
+        }
+        self.c[..self.n].copy_from_slice(&p.c);
+        self.reseat_nonbasics();
+        self.refactorize()
+    }
+
+    /// Per-solve counters of the last [`RevisedSimplex::optimize`]:
+    /// `(pivots, bound_flips, refactorizations)`.
+    pub(crate) fn counters(&self) -> (usize, usize, usize) {
+        (self.pivots, self.flips, self.refactors)
+    }
+
+    /// Read the solution out against `p` (structural values, true
+    /// objective, pivot+flip count as `iterations`).
+    pub(crate) fn solution(&self, p: &LpProblem) -> LpSolution {
+        let x: Vec<f64> = (0..self.n).map(|j| self.value(j)).collect();
+        LpSolution {
+            status: LpStatus::Optimal,
+            objective: p.objective(&x),
+            x,
+            iterations: self.pivots + self.flips,
+            basis: Some(self.dense_basis()),
+        }
+    }
+
+    /// Re-optimize from the current state: restore dual feasibility by
+    /// seating/cost-shifting, run the dual simplex (Devex + BFRT) to
+    /// primal feasibility, then a primal clean-up under true costs.
+    /// `eta_cap` bounds the eta file before an in-solve refactorization.
+    ///
+    /// `Ok(status)` is a trustworthy terminal verdict (`Optimal`,
+    /// `Infeasible`, `Unbounded`); `Err(NumericalFailure)` means the
+    /// state went numerically bad and the caller should fall through.
+    pub(crate) fn optimize(
+        &mut self,
+        eta_cap: usize,
+    ) -> Result<LpStatus, NumericalFailure> {
+        self.pivots = 0;
+        self.flips = 0;
+        self.refactors = 0;
+        self.pweight.fill(1.0);
+        self.dweight.fill(1.0);
+        self.ccur.copy_from_slice(&self.c);
+        self.compute_d();
+        // Dual-feasibility restoration: boxed columns whose reduced
+        // cost has the wrong sign flip to their other bound; columns
+        // with no finite bound to flip to are cost-shifted (d forced to
+        // 0) until the post-dual clean-up.
+        let mut shifted = false;
+        for j in 0..self.ntot {
+            if self.lower[j] == self.upper[j] {
+                continue;
+            }
+            match self.state[j] {
+                VState::Basic(_) => {}
+                VState::AtLower => {
+                    let free = self.lower[j] == -INF && self.upper[j] == INF;
+                    if free {
+                        if self.d[j].abs() > OPT_TOL {
+                            self.ccur[j] -= self.d[j];
+                            self.d[j] = 0.0;
+                            shifted = true;
+                        }
+                    } else if self.d[j] < -OPT_TOL {
+                        if self.upper[j] < INF {
+                            self.state[j] = VState::AtUpper;
+                            self.xval[j] = self.upper[j];
+                            self.flips += 1;
+                        } else {
+                            self.ccur[j] -= self.d[j];
+                            self.d[j] = 0.0;
+                            shifted = true;
+                        }
+                    }
+                }
+                VState::AtUpper => {
+                    if self.d[j] > OPT_TOL {
+                        if self.lower[j] > -INF {
+                            self.state[j] = VState::AtLower;
+                            self.xval[j] = self.lower[j];
+                            self.flips += 1;
+                        } else {
+                            self.ccur[j] -= self.d[j];
+                            self.d[j] = 0.0;
+                            shifted = true;
+                        }
+                    }
+                }
+            }
+        }
+        self.compute_xb();
+        let max_iter = 50 * (self.m + self.ntot) + 1000;
+        match self.dual_phase(max_iter, eta_cap)? {
+            LpStatus::Optimal => {}
+            verdict => return Ok(verdict),
+        }
+        // Restore true costs and clean up with the primal simplex; when
+        // nothing was shifted the maintained d is already the true
+        // reduced-cost row and pricing certifies optimality directly.
+        if shifted {
+            self.ccur.copy_from_slice(&self.c);
+            self.compute_d();
+        }
+        self.primal_phase(max_iter, eta_cap)
+    }
+
+    // ---- phases ----
+
+    /// Dual simplex with Devex row pricing and the bound-flipping ratio
+    /// test. Returns `Optimal` (meaning: primal feasible — the caller
+    /// decides whether that is terminal) or `Infeasible` (genuine
+    /// certificate).
+    fn dual_phase(
+        &mut self,
+        max_iter: usize,
+        eta_cap: usize,
+    ) -> Result<LpStatus, NumericalFailure> {
+        let mut stall = 0usize;
+        let mut bad_pivots = 0usize;
+        for _ in 0..max_iter {
+            let bland = stall > 2 * (self.m + self.ntot);
+            // Leaving row: worst violation scaled by the Devex weight.
+            let mut leave: Option<(usize, f64, bool)> = None; // (pos, score, above)
+            for r in 0..self.m {
+                let b = self.basis[r];
+                let (viol, above) = if self.xb[r] < self.lower[b] - FEAS_TOL {
+                    (self.lower[b] - self.xb[r], false)
+                } else if self.xb[r] > self.upper[b] + FEAS_TOL {
+                    (self.xb[r] - self.upper[b], true)
+                } else {
+                    continue;
+                };
+                if bland {
+                    leave = Some((r, viol, above));
+                    break;
+                }
+                let score = viol * viol / self.dweight[r];
+                let better = match leave {
+                    None => true,
+                    Some((_, s, _)) => score > s,
+                };
+                if better {
+                    leave = Some((r, score, above));
+                }
+            }
+            let Some((r, _, above)) = leave else {
+                return Ok(LpStatus::Optimal); // primal feasible
+            };
+
+            // Pivot row α_r = eᵣᵀ B⁻¹ A over all nonbasic columns.
+            self.compute_pivot_row(r);
+
+            // Candidates: nonbasics whose admissible move direction
+            // reduces the violation. Ratio |d_j/α_rj| is the step in
+            // dual space before d_j changes sign.
+            let mut cands: Vec<(usize, f64, f64)> = Vec::new(); // (j, |α|, ratio)
+            for j in 0..self.ntot {
+                if self.lower[j] == self.upper[j]
+                    || matches!(self.state[j], VState::Basic(_))
+                {
+                    continue;
+                }
+                let alpha = self.alpha_row[j];
+                if alpha.abs() <= PIVOT_TOL {
+                    continue;
+                }
+                let free = self.lower[j] == -INF && self.upper[j] == INF;
+                let admissible = match self.state[j] {
+                    VState::AtLower => free || (above == (alpha > 0.0)),
+                    VState::AtUpper => above == (alpha < 0.0),
+                    VState::Basic(_) => false,
+                };
+                if admissible {
+                    cands.push((j, alpha.abs(), (self.d[j] / alpha).abs()));
+                }
+            }
+            if cands.is_empty() {
+                // No admissible column: the violated basic sits at its
+                // extremum over the whole nonbasic box — a genuine
+                // primal-infeasibility certificate (no artificials).
+                return Ok(LpStatus::Infeasible);
+            }
+
+            // Long-step walk: cross boxed breakpoints while the
+            // violation survives the flip, flipping them in bulk;
+            // the first breakpoint that would overshoot enters.
+            let b = self.basis[r];
+            let viol =
+                if above { self.xb[r] - self.upper[b] } else { self.lower[b] - self.xb[r] };
+            let enter;
+            let mut to_flip: Vec<usize> = Vec::new();
+            if bland {
+                // Bland mode: smallest admissible index, no flips.
+                enter = cands.iter().map(|&(j, _, _)| j).min().expect("nonempty");
+            } else {
+                cands.sort_by(|a, b| {
+                    a.2.partial_cmp(&b.2)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then_with(|| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal))
+                        .then_with(|| a.0.cmp(&b.0))
+                });
+                let mut rem = viol;
+                let mut chosen = None;
+                for &(j, absalpha, _) in &cands {
+                    let boxed = self.lower[j] > -INF && self.upper[j] < INF;
+                    let range = self.upper[j] - self.lower[j];
+                    if boxed && rem - absalpha * range > FEAS_TOL {
+                        rem -= absalpha * range;
+                        to_flip.push(j);
+                    } else {
+                        chosen = Some(j);
+                        break;
+                    }
+                }
+                let Some(q) = chosen else {
+                    // Every admissible column flipped and the violation
+                    // survives: infeasible even at the box extremum.
+                    return Ok(LpStatus::Infeasible);
+                };
+                enter = q;
+            }
+
+            // Apply the bulk flips with one combined ftran.
+            if !to_flip.is_empty() {
+                self.work_row.fill(0.0);
+                for &j in &to_flip {
+                    let delta = match self.state[j] {
+                        VState::AtLower => {
+                            self.state[j] = VState::AtUpper;
+                            let d = self.upper[j] - self.xval[j];
+                            self.xval[j] = self.upper[j];
+                            d
+                        }
+                        VState::AtUpper => {
+                            self.state[j] = VState::AtLower;
+                            let d = self.lower[j] - self.xval[j];
+                            self.xval[j] = self.lower[j];
+                            d
+                        }
+                        VState::Basic(_) => unreachable!(),
+                    };
+                    for &(i, v) in &self.cols[j] {
+                        self.work_row[i] += v * delta;
+                    }
+                }
+                self.flips += to_flip.len();
+                let mut b_in = std::mem::take(&mut self.work_row);
+                let mut shift = std::mem::take(&mut self.work_pos);
+                self.fac.ftran(&mut b_in, &mut shift);
+                for (xbv, s) in self.xb.iter_mut().zip(&shift) {
+                    *xbv -= s;
+                }
+                self.work_row = b_in;
+                self.work_pos = shift;
+            }
+
+            // Entering column by ftran; the true pivot element must
+            // agree with the pivot-row pass, else the factorization has
+            // drifted — refactorize and retry.
+            self.load_column(enter);
+            let mut b_in = std::mem::take(&mut self.work_row);
+            let mut acol = std::mem::take(&mut self.alpha_col);
+            self.fac.ftran(&mut b_in, &mut acol);
+            self.work_row = b_in;
+            self.alpha_col = acol;
+            let alpha_rq = self.alpha_col[r];
+            if alpha_rq.abs() < PIVOT_TOL {
+                bad_pivots += 1;
+                if bad_pivots > 3 || !self.refresh_factorization() {
+                    return Err(NumericalFailure);
+                }
+                continue;
+            }
+            bad_pivots = 0;
+
+            let target = if above { self.upper[b] } else { self.lower[b] };
+            let delta_x = (self.xb[r] - target) / alpha_rq;
+            let ratio = (self.d[enter] / alpha_rq).abs();
+            if ratio <= OPT_TOL {
+                stall += 1;
+            } else {
+                stall = 0;
+            }
+            let leaving = b;
+            self.apply_pivot(r, enter, delta_x, target, above);
+            // Dual Devex: weights ride on the ftran'd entering column.
+            let wr = self.dweight[r];
+            let arq2 = alpha_rq * alpha_rq;
+            for i in 0..self.m {
+                if i != r {
+                    let a = self.alpha_col[i];
+                    if a != 0.0 {
+                        let cand = (a * a / arq2) * wr;
+                        if cand > self.dweight[i] {
+                            self.dweight[i] = cand;
+                        }
+                    }
+                }
+            }
+            self.dweight[r] = (wr / arq2).max(1.0);
+            self.post_pivot_update(r, enter, leaving, alpha_rq, eta_cap)?;
+        }
+        Err(NumericalFailure)
+    }
+
+    /// Primal simplex (phase 2) with Devex pricing and the
+    /// bounded-variable ratio test (including entering-variable bound
+    /// flips). Requires a primal-feasible basis. Returns `Optimal` or
+    /// `Unbounded`.
+    fn primal_phase(
+        &mut self,
+        max_iter: usize,
+        eta_cap: usize,
+    ) -> Result<LpStatus, NumericalFailure> {
+        let mut stall = 0usize;
+        for _ in 0..max_iter {
+            let bland = stall > 2 * (self.m + self.ntot);
+            // Pricing: Devex score d²/w over improving candidates.
+            let mut best: Option<(usize, f64, f64)> = None; // (j, dir, score)
+            for j in 0..self.ntot {
+                let Some(dir) = self.improving_direction(j) else {
+                    continue;
+                };
+                if bland {
+                    best = Some((j, dir, 0.0));
+                    break;
+                }
+                let score = self.d[j] * self.d[j] / self.pweight[j];
+                let better = match best {
+                    None => true,
+                    Some((_, _, s)) => score > s,
+                };
+                if better {
+                    best = Some((j, dir, score));
+                }
+            }
+            let Some((q, dir, _)) = best else {
+                return Ok(LpStatus::Optimal);
+            };
+
+            // Entering column and ratio test.
+            self.load_column(q);
+            let mut b_in = std::mem::take(&mut self.work_row);
+            let mut acol = std::mem::take(&mut self.alpha_col);
+            self.fac.ftran(&mut b_in, &mut acol);
+            self.work_row = b_in;
+            self.alpha_col = acol;
+
+            let own_range = self.upper[q] - self.lower[q];
+            let mut t_star = own_range;
+            let mut leave: Option<(usize, bool)> = None; // (pos, hits upper)
+            for i in 0..self.m {
+                let rate = self.alpha_col[i] * dir;
+                let bi = self.basis[i];
+                if rate > PIVOT_TOL {
+                    if self.lower[bi] > -INF {
+                        let t = (self.xb[i] - self.lower[bi]) / rate;
+                        if t < t_star - FEAS_TOL
+                            || (bland && t <= t_star + FEAS_TOL && leave.is_none())
+                        {
+                            t_star = t.max(0.0);
+                            leave = Some((i, false));
+                        }
+                    }
+                } else if rate < -PIVOT_TOL && self.upper[bi] < INF {
+                    let t = (self.upper[bi] - self.xb[i]) / (-rate);
+                    if t < t_star - FEAS_TOL
+                        || (bland && t <= t_star + FEAS_TOL && leave.is_none())
+                    {
+                        t_star = t.max(0.0);
+                        leave = Some((i, true));
+                    }
+                }
+            }
+            if t_star == INF {
+                return Ok(LpStatus::Unbounded);
+            }
+            if t_star <= FEAS_TOL {
+                stall += 1;
+            } else {
+                stall = 0;
+            }
+
+            let delta = dir * t_star;
+            match leave {
+                None => {
+                    // Entering variable flips to its other bound.
+                    for i in 0..self.m {
+                        let a = self.alpha_col[i];
+                        if a != 0.0 {
+                            self.xb[i] -= a * delta;
+                        }
+                    }
+                    self.xval[q] += delta;
+                    self.state[q] =
+                        if dir > 0.0 { VState::AtUpper } else { VState::AtLower };
+                    self.flips += 1;
+                }
+                Some((r, hits_upper)) => {
+                    let b = self.basis[r];
+                    let target = if hits_upper { self.upper[b] } else { self.lower[b] };
+                    let alpha_rq = self.alpha_col[r];
+                    if alpha_rq.abs() < PIVOT_TOL {
+                        if !self.refresh_factorization() {
+                            return Err(NumericalFailure);
+                        }
+                        continue;
+                    }
+                    let entering_value = self.xval[q] + delta;
+                    for i in 0..self.m {
+                        let a = self.alpha_col[i];
+                        if a != 0.0 {
+                            self.xb[i] -= a * delta;
+                        }
+                    }
+                    self.xval[b] = target;
+                    self.state[b] =
+                        if hits_upper { VState::AtUpper } else { VState::AtLower };
+                    self.basis[r] = q;
+                    self.state[q] = VState::Basic(r);
+                    self.xb[r] = entering_value;
+                    self.pivots += 1;
+                    // Pivot row (against the pre-pivot factorization)
+                    // for the d update and primal Devex. The entering
+                    // q is already marked basic, so its entry is stale:
+                    // use the ftran'd pivot element directly.
+                    self.compute_pivot_row(r);
+                    let arq = alpha_rq;
+                    let theta = self.d[q] / arq;
+                    let wq = self.pweight[q];
+                    let arq2 = arq * arq;
+                    for j in 0..self.ntot {
+                        if matches!(self.state[j], VState::Basic(_)) {
+                            continue;
+                        }
+                        let a = self.alpha_row[j];
+                        if a != 0.0 {
+                            self.d[j] -= theta * a;
+                            let cand = (a * a / arq2) * wq;
+                            if cand > self.pweight[j] {
+                                self.pweight[j] = cand;
+                            }
+                        }
+                    }
+                    self.d[b] = -theta;
+                    self.d[q] = 0.0;
+                    self.pweight[b] = (wq / arq2).max(1.0);
+                    if !self.fac.push_eta(r, &self.alpha_col)
+                        || self.fac.eta_len() > eta_cap
+                    {
+                        if !self.refresh_factorization() {
+                            return Err(NumericalFailure);
+                        }
+                    }
+                }
+            }
+        }
+        Err(NumericalFailure)
+    }
+
+    // ---- shared pivot mechanics ----
+
+    /// Apply the dual pivot: step the basics along the entering column,
+    /// seat the leaving variable on its violated bound, swap the basis.
+    fn apply_pivot(&mut self, r: usize, q: usize, delta_x: f64, target: f64, above: bool) {
+        let b = self.basis[r];
+        let entering_value = self.xval[q] + delta_x;
+        for i in 0..self.m {
+            let a = self.alpha_col[i];
+            if a != 0.0 {
+                self.xb[i] -= a * delta_x;
+            }
+        }
+        self.xval[b] = target;
+        self.state[b] = if above { VState::AtUpper } else { VState::AtLower };
+        self.basis[r] = q;
+        self.state[q] = VState::Basic(r);
+        self.xb[r] = entering_value;
+        self.pivots += 1;
+    }
+
+    /// After a dual pivot: update the reduced-cost row from the pivot
+    /// row (already in `alpha_row`), then record the eta / refactorize.
+    /// `leaving`'s entry in `alpha_row` is stale (it was basic when the
+    /// row was computed, and α_r,leaving ≡ 1), so it is set explicitly.
+    fn post_pivot_update(
+        &mut self,
+        r: usize,
+        q: usize,
+        leaving: usize,
+        alpha_rq: f64,
+        eta_cap: usize,
+    ) -> Result<(), NumericalFailure> {
+        let theta = self.d[q] / alpha_rq;
+        for j in 0..self.ntot {
+            if j == leaving || matches!(self.state[j], VState::Basic(_)) {
+                continue;
+            }
+            let a = self.alpha_row[j];
+            if a != 0.0 {
+                self.d[j] -= theta * a;
+            }
+        }
+        self.d[leaving] = -theta;
+        self.d[q] = 0.0;
+        if (!self.fac.push_eta(r, &self.alpha_col) || self.fac.eta_len() > eta_cap)
+            && !self.refresh_factorization()
+        {
+            return Err(NumericalFailure);
+        }
+        Ok(())
+    }
+
+    /// Refactorize from the current basis and recompute `xb` and `d`
+    /// from scratch (the drift-scrubbing refresh). `false` on a
+    /// singular basis.
+    fn refresh_factorization(&mut self) -> bool {
+        if !self.refactorize() {
+            return false;
+        }
+        self.refactors += 1;
+        self.compute_xb();
+        self.compute_d();
+        true
+    }
+
+    /// Rebuild the LU from the current basis columns. Does not bump the
+    /// refactorization counter: in-solve refreshes count through
+    /// [`RevisedSimplex::refresh_factorization`], while the warm/cold
+    /// rungs' initial factorizations are counted by the ladder (the
+    /// per-solve counters reset at [`RevisedSimplex::optimize`] entry).
+    fn refactorize(&mut self) -> bool {
+        let cols: Vec<&[(usize, f64)]> =
+            self.basis.iter().map(|&v| self.cols[v].as_slice()).collect();
+        match Factorization::factorize(self.m, &cols) {
+            Some(f) => {
+                self.fac = f;
+                true
+            }
+            None => false,
+        }
+    }
+
+    // ---- linear algebra helpers ----
+
+    /// `xb = B⁻¹ (b − Σ_{nonbasic j} A_j x̄_j)`.
+    fn compute_xb(&mut self) {
+        self.work_row.copy_from_slice(&self.rhs);
+        for j in 0..self.ntot {
+            if matches!(self.state[j], VState::Basic(_)) || self.xval[j] == 0.0 {
+                continue;
+            }
+            let v = self.xval[j];
+            for &(i, a) in &self.cols[j] {
+                self.work_row[i] -= a * v;
+            }
+        }
+        let mut b_in = std::mem::take(&mut self.work_row);
+        let mut out = std::mem::take(&mut self.xb);
+        self.fac.ftran(&mut b_in, &mut out);
+        self.work_row = b_in;
+        self.xb = out;
+    }
+
+    /// `d_j = c_j − yᵀ A_j` with `y = B⁻ᵀ c_B`, under the working
+    /// costs `ccur`.
+    fn compute_d(&mut self) {
+        for (pos, w) in self.work_pos.iter_mut().enumerate() {
+            *w = self.ccur[self.basis[pos]];
+        }
+        let mut c_in = std::mem::take(&mut self.work_pos);
+        let mut y = std::mem::take(&mut self.work_row);
+        self.fac.btran(&mut c_in, &mut y);
+        self.work_pos = c_in;
+        for j in 0..self.ntot {
+            if matches!(self.state[j], VState::Basic(_)) {
+                self.d[j] = 0.0;
+                continue;
+            }
+            let mut z = 0.0;
+            for &(i, v) in &self.cols[j] {
+                z += y[i] * v;
+            }
+            self.d[j] = self.ccur[j] - z;
+        }
+        self.work_row = y;
+    }
+
+    /// `alpha_row = eᵣᵀ B⁻¹ A` for every nonbasic column (basic entries
+    /// are left stale and must not be read).
+    fn compute_pivot_row(&mut self, r: usize) {
+        self.work_pos.fill(0.0);
+        self.work_pos[r] = 1.0;
+        let mut c_in = std::mem::take(&mut self.work_pos);
+        let mut rho = std::mem::take(&mut self.work_row);
+        self.fac.btran(&mut c_in, &mut rho);
+        self.work_pos = c_in;
+        for j in 0..self.ntot {
+            if matches!(self.state[j], VState::Basic(_)) {
+                continue;
+            }
+            let mut z = 0.0;
+            for &(i, v) in &self.cols[j] {
+                z += rho[i] * v;
+            }
+            self.alpha_row[j] = z;
+        }
+        self.work_row = rho;
+    }
+
+    /// Scatter column `j` densely into `work_row` (for an ftran).
+    fn load_column(&mut self, j: usize) {
+        self.work_row.fill(0.0);
+        for &(i, v) in &self.cols[j] {
+            self.work_row[i] = v;
+        }
+    }
+
+    /// Improving direction of nonbasic `j` under the maintained `d`
+    /// (mirrors the dense core's `entering_candidate`).
+    fn improving_direction(&self, j: usize) -> Option<f64> {
+        if self.lower[j] == self.upper[j] {
+            return None;
+        }
+        match self.state[j] {
+            VState::Basic(_) => None,
+            VState::AtLower => {
+                let free = self.lower[j] == -INF && self.upper[j] == INF;
+                if self.d[j] < -OPT_TOL {
+                    Some(1.0)
+                } else if free && self.d[j] > OPT_TOL {
+                    Some(-1.0)
+                } else {
+                    None
+                }
+            }
+            VState::AtUpper => {
+                if self.d[j] > OPT_TOL {
+                    Some(-1.0)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Re-seat every nonbasic on the (possibly moved) bounds, keeping
+    /// the previous bound choice where still available.
+    fn reseat_nonbasics(&mut self) {
+        for j in 0..self.ntot {
+            if matches!(self.state[j], VState::Basic(_)) {
+                continue;
+            }
+            let (l, u) = (self.lower[j], self.upper[j]);
+            let prefer_upper = matches!(self.state[j], VState::AtUpper);
+            let (st, v) = if l == u {
+                (VState::AtLower, l)
+            } else if prefer_upper && u < INF {
+                (VState::AtUpper, u)
+            } else if l > -INF {
+                (VState::AtLower, l)
+            } else if u < INF {
+                (VState::AtUpper, u)
+            } else {
+                (VState::AtLower, 0.0)
+            };
+            self.state[j] = st;
+            self.xval[j] = v;
+        }
+    }
+
+    fn value(&self, j: usize) -> f64 {
+        match self.state[j] {
+            VState::Basic(r) => self.xb[r],
+            _ => self.xval[j],
+        }
+    }
+
+    /// Map the sparse basis into the dense `[structural | slack |
+    /// artificial]` snapshot format, so
+    /// [`solve_from_basis`](super::simplex::solve_from_basis) can
+    /// warm-start from a persistent solver's state. Le/Ge logicals map
+    /// to the row's slack column; an Eq logical basic at ~0 maps to the
+    /// row's artificial (the redundant-row case).
+    pub(crate) fn dense_basis(&self) -> Basis {
+        // Slack column index per row in the dense layout (Le/Ge only).
+        let mut slack_of = vec![usize::MAX; self.m];
+        let mut next = self.n;
+        for (i, cmp) in self.senses.iter().enumerate() {
+            if matches!(cmp, Cmp::Le | Cmp::Ge) {
+                slack_of[i] = next;
+                next += 1;
+            }
+        }
+        let n_struct_slack = next;
+        let dense_ntot = n_struct_slack + self.m;
+        let map = |v: usize| -> usize {
+            if v < self.n {
+                v
+            } else {
+                let row = v - self.n;
+                match self.senses[row] {
+                    Cmp::Le | Cmp::Ge => slack_of[row],
+                    Cmp::Eq => n_struct_slack + row,
+                }
+            }
+        };
+        let row_to_var: Vec<usize> = self.basis.iter().map(|&v| map(v)).collect();
+        let mut at_upper = vec![false; dense_ntot];
+        for j in 0..self.n {
+            if matches!(self.state[j], VState::AtUpper) {
+                at_upper[j] = true;
+            }
+        }
+        // Slacks/artificials rest at lower (0) in the dense layout: a
+        // nonbasic Le logical sits at 0 (= slack lower) and a nonbasic
+        // Ge logical at 0 (its upper) maps to the negated slack's lower.
+        Basis { row_to_var, at_upper, n_struct_slack, ntot: dense_ntot }
+    }
+}
+
+/// Logical-variable bounds per row sense (row form `A x + y = b`).
+fn logical_bounds(cmp: Cmp) -> (f64, f64) {
+    match cmp {
+        Cmp::Le => (0.0, INF),
+        Cmp::Ge => (-INF, 0.0),
+        Cmp::Eq => (0.0, 0.0),
+    }
+}
+
+/// Dual-feasible cold seat: rest where the cost sign wants the
+/// variable, falling back to any finite bound (or 0 for free columns).
+fn seat_cold(c: f64, l: f64, u: f64) -> (VState, f64) {
+    if l == u {
+        return (VState::AtLower, l);
+    }
+    let (prefer_lower, prefer_upper) = if c > 0.0 {
+        (true, false)
+    } else if c < 0.0 {
+        (false, true)
+    } else {
+        (l > -INF, l == -INF && u < INF)
+    };
+    if prefer_lower && l > -INF {
+        (VState::AtLower, l)
+    } else if prefer_upper && u < INF {
+        (VState::AtUpper, u)
+    } else if l > -INF {
+        (VState::AtLower, l)
+    } else if u < INF {
+        (VState::AtUpper, u)
+    } else {
+        (VState::AtLower, 0.0)
+    }
+}
+
+/// The all-logical basis factorizes trivially (every column is a
+/// singleton); build it through the standard path for uniformity.
+fn identity_factorization(m: usize, logical_cols: &[Vec<(usize, f64)>]) -> Factorization {
+    let refs: Vec<&[(usize, f64)]> =
+        logical_cols.iter().map(|c| c.as_slice()).collect();
+    Factorization::factorize(m, &refs).expect("unit logical basis cannot be singular")
+}

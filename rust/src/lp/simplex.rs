@@ -25,14 +25,21 @@
 //! converge in a handful of pivots instead of replaying both phases.
 //!
 //! [`PersistentSimplex`] goes one step further for the online-replan
-//! loop: it keeps the *realized tableau* alive between solves, so a
-//! re-solve whose constraint matrix is unchanged (only RHS, objective,
-//! or variable bounds drifted) skips even the warm path's O(m³)
-//! Gauss-Jordan realization — the new data patches through the stored
-//! basis inverse in O(m²) and **dual simplex** repairs RHS drift while
-//! primal phase 2 repairs cost drift, with a fallback ladder
-//! (incremental → warm basis → cold) and a periodic refactorization
-//! guard bounding numerical drift.
+//! loop: it runs the **sparse revised simplex** in
+//! [`super::revised`] — a sparse LU factorization of the basis
+//! ([`super::factor`], Markowitz-ordered with product-form eta updates
+//! per pivot and periodic refactorization), Devex pricing for both the
+//! primal and dual phases, and a long-step bound-flipping dual ratio
+//! test — behind the same incremental → warm basis → cold fallback
+//! ladder. A re-solve whose constraint matrix is unchanged (only RHS,
+//! objective, or variable bounds drifted) patches the new data through
+//! the live factorization and repairs in O(m + nnz) per pivot; the
+//! dense two-phase solver in this file remains the reference oracle
+//! (and the persistent path's last-resort safety net). Interval and
+//! drift tolerance are configurable via [`SimplexConfig`]; per-solve
+//! pivot/flip/refactorization counters surface as [`SolveStats`].
+
+use super::revised::RevisedSimplex;
 
 /// Shorthand for an unbounded variable bound.
 pub const INF: f64 = f64::INFINITY;
@@ -450,131 +457,6 @@ impl Tableau {
         Err(LpStatus::IterationLimit)
     }
 
-    /// Dual simplex: from a dual-feasible basis (reduced costs already
-    /// loaded and optimal-signed) whose basic values violate their
-    /// bounds — the state an RHS/bound drift leaves a previously optimal
-    /// tableau in — pivot until primal feasibility is restored, keeping
-    /// dual feasibility invariant throughout. Returns Ok(()) when primal
-    /// feasible (the basis is then optimal), `Err(Infeasible)` when a
-    /// violated row admits no entering column (for the *caller* this is
-    /// only a fall-back signal: a pinned artificial on a no-longer-
-    /// redundant row can produce it spuriously, so the persistent solver
-    /// refactorizes rather than trusting the verdict), and
-    /// `Err(IterationLimit)` on a pivot-budget exhaustion.
-    fn dual_optimize(
-        &mut self,
-        max_iter: usize,
-        fixed: &[bool],
-        price_limit: usize,
-        update_limit: usize,
-    ) -> Result<(), LpStatus> {
-        let mut stall = 0usize;
-        for _ in 0..max_iter {
-            // --- leaving row: the basic value most outside its bounds
-            // (Dantzig-style dual pricing; Bland mode takes the first
-            // violating row after a stall, for termination) ---
-            let bland = stall > 2 * (self.m + self.ntot);
-            let mut leave: Option<(usize, f64, bool)> = None; // (row, viol, above_upper)
-            for r in 0..self.m {
-                let b = self.basis[r];
-                let (viol, above) = if self.xb[r] < self.lower[b] - FEAS_TOL {
-                    (self.lower[b] - self.xb[r], false)
-                } else if self.xb[r] > self.upper[b] + FEAS_TOL {
-                    (self.xb[r] - self.upper[b], true)
-                } else {
-                    continue;
-                };
-                if bland {
-                    leave = Some((r, viol, above));
-                    break;
-                }
-                if leave.map_or(true, |(_, v, _)| viol > v) {
-                    leave = Some((r, viol, above));
-                }
-            }
-            let Some((r, _, above_upper)) = leave else {
-                return Ok(()); // primal feasible again
-            };
-            self.iterations += 1;
-
-            // --- dual ratio test over row r ---
-            // The leaving basic must move back onto the violated bound;
-            // an entering nonbasic j qualifies when its admissible move
-            // direction pushes the row the right way, and the winner
-            // minimizes |d_j / α_rj| so every other reduced cost keeps
-            // its optimal sign.
-            let base = r * self.ntot;
-            let mut enter: Option<(usize, f64)> = None; // (col, ratio)
-            for j in 0..price_limit {
-                if fixed[j]
-                    || self.lower[j] == self.upper[j]
-                    || matches!(self.state[j], VarState::Basic(_))
-                {
-                    continue;
-                }
-                let alpha = self.a[base + j];
-                if alpha.abs() <= PIVOT_TOL {
-                    continue;
-                }
-                let free = self.lower[j] == -INF && self.upper[j] == INF;
-                // Admissible: AtLower moves up, AtUpper moves down, free
-                // either way. `above_upper` needs α·Δx_j > 0, the lower
-                // violation needs α·Δx_j < 0.
-                let admissible = match self.state[j] {
-                    VarState::AtLower => free || (above_upper == (alpha > 0.0)),
-                    VarState::AtUpper => above_upper == (alpha < 0.0),
-                    VarState::Basic(_) => false,
-                };
-                if !admissible {
-                    continue;
-                }
-                let ratio = (self.d[j] / alpha).abs();
-                if bland {
-                    // Bland mode: smallest admissible index wins.
-                    enter = Some((j, ratio));
-                    break;
-                }
-                let better = match enter {
-                    None => true,
-                    Some((je, best)) => {
-                        ratio < best - OPT_TOL
-                            || (ratio < best + OPT_TOL
-                                && alpha.abs() > self.a[base + je].abs())
-                    }
-                };
-                if better {
-                    enter = Some((j, ratio));
-                }
-            }
-            let Some((j, ratio)) = enter else {
-                return Err(LpStatus::Infeasible);
-            };
-            if ratio <= OPT_TOL {
-                stall += 1;
-            } else {
-                stall = 0;
-            }
-
-            // --- pivot: entering j moves so the leaving basic lands
-            // exactly on its violated bound ---
-            let b = self.basis[r];
-            let alpha = self.a[base + j];
-            let target = if above_upper { self.upper[b] } else { self.lower[b] };
-            let delta = (self.xb[r] - target) / alpha;
-            for i in 0..self.m {
-                self.xb[i] -= self.a[i * self.ntot + j] * delta;
-            }
-            let entering_value = self.xval[j] + delta;
-            self.xval[b] = target;
-            self.state[b] = if above_upper { VarState::AtUpper } else { VarState::AtLower };
-            self.pivot(r, j, update_limit);
-            self.basis[r] = j;
-            self.state[j] = VarState::Basic(r);
-            self.xb[r] = entering_value;
-        }
-        Err(LpStatus::IterationLimit)
-    }
-
     /// Phase-2 reduced costs from the real objective:
     /// d_j = c_j − c_Bᵀ B⁻¹ A_j (B⁻¹A is the current tableau).
     fn load_phase2_costs(&mut self, c: &[f64]) {
@@ -693,17 +575,15 @@ fn solve_with(p: &LpProblem, warm: Option<&Basis>) -> LpSolution {
     }
 
     if let Some(b) = warm {
-        if let Some((sol, _)) = try_warm(p, b, false) {
+        if let Some(sol) = try_warm(p, b) {
             return sol;
         }
     }
-    solve_cold(p, false).0
+    solve_cold(p)
 }
 
-/// Full two-phase cold solve. With `capture`, phase 2 keeps the
-/// artificial block (the basis inverse) current and the live tableau is
-/// returned alongside the solution for [`PersistentSimplex`] reuse.
-fn solve_cold(p: &LpProblem, capture: bool) -> (LpSolution, Option<PersistState>) {
+/// Full two-phase cold solve — the dense reference path.
+fn solve_cold(p: &LpProblem) -> LpSolution {
     let n = p.num_vars();
     let m = p.num_rows();
     let Layout { lower, upper, cols, n_struct_slack, ntot } = build_layout(p);
@@ -723,7 +603,6 @@ fn solve_cold(p: &LpProblem, capture: bool) -> (LpSolution, Option<PersistState>
         }
     }
     let mut xb = vec![0.0f64; m];
-    let mut row_sign = vec![1.0f64; m];
     for i in 0..m {
         let mut resid = p.rows[i].rhs;
         for j in 0..n_struct_slack {
@@ -737,7 +616,6 @@ fn solve_cold(p: &LpProblem, capture: bool) -> (LpSolution, Option<PersistState>
                 *v = -*v;
             }
             resid = -resid;
-            row_sign[i] = -1.0;
             // rhs negation is implicit: xb stores the shifted residual.
         }
         let art = n_struct_slack + i;
@@ -796,14 +674,14 @@ fn solve_cold(p: &LpProblem, capture: bool) -> (LpSolution, Option<PersistState>
             // Phase-1 objective is bounded below by 0; unbounded is a bug.
             unreachable!("phase-1 cannot be unbounded");
         }
-        Err(s) => return (failed(s, n, t.iterations), None),
+        Err(s) => return failed(s, n, t.iterations),
     }
     let phase1_obj: f64 = (0..m)
         .filter(|&i| t.basis[i] >= n_struct_slack)
         .map(|i| t.xb[i])
         .sum();
     if phase1_obj > 1e-6 {
-        return (failed(LpStatus::Infeasible, n, t.iterations), None);
+        return failed(LpStatus::Infeasible, n, t.iterations);
     }
 
     // Pin artificials to zero so they can never re-enter; drive basic
@@ -844,35 +722,18 @@ fn solve_cold(p: &LpProblem, capture: bool) -> (LpSolution, Option<PersistState>
     t.load_phase2_costs(&p.c);
 
     // Phase 2: artificial columns are fixed at zero and never re-enter;
-    // exclude them from pivot updates entirely — unless the tableau is
-    // being captured for persistent reuse, where the artificial block
-    // must stay a live basis inverse.
-    let update_limit = if capture { ntot } else { n_struct_slack };
-    let status = match t.optimize(max_iter, &fixed, n_struct_slack, update_limit) {
+    // exclude them from pivot updates entirely.
+    let status = match t.optimize(max_iter, &fixed, n_struct_slack, n_struct_slack) {
         Ok(()) => LpStatus::Optimal,
         Err(s) => s,
     };
-    let sol = finish(p, &t, status, n_struct_slack);
-    let state = (capture && status == LpStatus::Optimal).then(|| PersistState {
-        t,
-        row_sign,
-        fixed,
-        n_struct_slack,
-        rows: fingerprint_rows(p),
-        n,
-    });
-    (sol, state)
+    finish(p, &t, status, n_struct_slack)
 }
 
 /// Attempt a warm-started phase-2-only solve. `None` means the basis is
 /// unusable for this problem and the caller should fall back to a cold
-/// solve. With `capture`, an optimal solve also returns the live
-/// tableau for [`PersistentSimplex`] reuse.
-fn try_warm(
-    p: &LpProblem,
-    warm: &Basis,
-    capture: bool,
-) -> Option<(LpSolution, Option<PersistState>)> {
+/// solve.
+fn try_warm(p: &LpProblem, warm: &Basis) -> Option<LpSolution> {
     let m = p.num_rows();
     let Layout { mut lower, mut upper, cols, n_struct_slack, ntot } = build_layout(p);
     if warm.ntot != ntot
@@ -1011,8 +872,7 @@ fn try_warm(
     };
     t.load_phase2_costs(&p.c);
     let max_iter = 50 * (m + ntot) + 1000;
-    let update_limit = if capture { ntot } else { n_struct_slack };
-    let status = match t.optimize(max_iter, &fixed, n_struct_slack, update_limit) {
+    let status = match t.optimize(max_iter, &fixed, n_struct_slack, n_struct_slack) {
         Ok(()) => LpStatus::Optimal,
         // A genuinely unbounded problem is unbounded from any basis.
         Err(LpStatus::Unbounded) => LpStatus::Unbounded,
@@ -1021,120 +881,148 @@ fn try_warm(
         // fresh phase-1 basis (warmth must only affect iteration count).
         Err(_) => return None,
     };
-    let sol = finish(p, &t, status, n_struct_slack);
-    let state = (capture && status == LpStatus::Optimal).then(|| PersistState {
-        t,
-        // The warm realization never sign-flips rows.
-        row_sign: vec![1.0; m],
-        fixed,
-        n_struct_slack,
-        rows: fingerprint_rows(p),
-        n,
-    });
-    Some((sol, state))
-}
-
-/// Structural fingerprint of a problem's rows (sense + exact
-/// coefficients): the matrix-unchanged precondition of the incremental
-/// resolve path.
-fn fingerprint_rows(p: &LpProblem) -> Vec<(Cmp, Vec<(usize, f64)>)> {
-    p.rows.iter().map(|r| (r.cmp, r.coeffs.clone())).collect()
-}
-
-/// Live tableau of the last optimal solve, reusable across re-solves of
-/// the same constraint matrix. The artificial block of `t.a` holds the
-/// current basis inverse (phase 2 ran with `update_limit = ntot`), so a
-/// new RHS patches through it in O(m²) instead of an O(m³) Gauss-Jordan
-/// realization.
-#[derive(Clone, Debug)]
-struct PersistState {
-    t: Tableau,
-    /// ±1 per row: the sign the cold path flipped the row by so phase 1
-    /// could start from a nonnegative identity basis (all +1 after a
-    /// warm realization). New RHS values enter the tableau's row space
-    /// through this sign.
-    row_sign: Vec<f64>,
-    /// Pinned-column mask (artificials fixed at zero after phase 1).
-    fixed: Vec<bool>,
-    n_struct_slack: usize,
-    /// Structural fingerprint the tableau is valid for.
-    rows: Vec<(Cmp, Vec<(usize, f64)>)>,
-    n: usize,
+    Some(finish(p, &t, status, n_struct_slack))
 }
 
 /// Which rung of [`PersistentSimplex::solve`]'s fallback ladder produced
 /// the last solution.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SolvePath {
-    /// RHS / objective / bound drift patched through the stored basis
-    /// inverse — no Gauss-Jordan realization, dual simplex for RHS
-    /// drift, primal phase 2 for cost drift.
+    /// RHS / objective / bound drift patched through the live basis
+    /// factorization — no refactorization: the dual simplex (Devex
+    /// pricing, bound-flipping ratio test) repairs RHS/bound drift and
+    /// primal phase 2 repairs cost drift.
     Incremental,
-    /// Warm start from the stored basis: one Gauss-Jordan realization,
-    /// then phase 2 alone.
+    /// The stored basis and resting states were kept but the basis LU
+    /// was refactorized from scratch under the (possibly changed)
+    /// coefficients — the matrix-change path and the periodic refresh.
     WarmBasis,
-    /// Full two-phase cold solve.
+    /// Fresh solve from the all-logical basis (first solve, or the
+    /// stored state was unusable for this problem).
     Cold,
 }
 
-/// Re-solves between adjacent controller replans drift only in RHS /
-/// objective / bound entries every [`REFACTOR_INTERVAL`] solves; the
-/// periodic refactorization bounds f64 error accumulation in the
-/// incrementally-updated tableau (the classic revised-simplex guard).
-const REFACTOR_INTERVAL: usize = 64;
+/// Tuning knobs for [`PersistentSimplex`], settable via
+/// [`PersistentSimplex::with_config`] / [`PersistentSimplex::set_config`].
+///
+/// The defaults reproduce the solver's historical hard-coded behaviour;
+/// both knobs exist for callers whose replan loops want a different
+/// speed/robustness trade.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimplexConfig {
+    /// Refactorization interval, default **64**. Bounds both the
+    /// product-form eta file (a solve refactorizes its basis LU once
+    /// this many pivot etas accumulate) and the number of consecutive
+    /// [`SolvePath::Incremental`] solves before the ladder forces a
+    /// [`SolvePath::WarmBasis`] refresh — the classic revised-simplex
+    /// guard on accumulated f64 error. Smaller is more robust, larger
+    /// is faster.
+    pub refactor_interval: usize,
+    /// Feasibility tolerance, default **1e-6**, that a persistent-path
+    /// solution must verify against the *original* problem data before
+    /// being trusted — the numerical-drift detector in front of the
+    /// refactorization fallback. A solution outside the tolerance falls
+    /// through to a fresher rung, ending at the dense two-phase oracle.
+    pub drift_tol: f64,
+}
 
-/// Feasibility tolerance the incremental path's solutions must verify
-/// against the *original* problem data before being trusted — the
-/// numerical-drift detector in front of the refactorization fallback.
-const DRIFT_TOL: f64 = 1e-6;
+impl Default for SimplexConfig {
+    fn default() -> Self {
+        SimplexConfig { refactor_interval: 64, drift_tol: 1e-6 }
+    }
+}
 
-/// A simplex solver that keeps the realized tableau alive between
+/// Per-solve counters of the last [`PersistentSimplex::solve`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SolveStats {
+    /// Ladder rung that produced the solution.
+    pub path: SolvePath,
+    /// Basis-changing pivots.
+    pub pivots: usize,
+    /// Nonbasic bound flips: the long-step dual ratio test's bulk
+    /// flips, primal entering-variable flips, and dual-feasibility
+    /// seating flips.
+    pub bound_flips: usize,
+    /// Basis LU (re)factorizations, including the rung's initial one
+    /// (warm/cold rungs always factorize at least once; incremental
+    /// solves usually report zero).
+    pub refactorizations: usize,
+}
+
+/// A simplex solver that keeps the factorized basis alive between
 /// solves — the warm-start discipline of revised-simplex codes applied
-/// to the controller replan loop.
+/// to the controller replan loop. The engine is the sparse revised
+/// core: a sparse LU factorization of the basis (Markowitz-ordered,
+/// product-form eta update per pivot), Devex pricing in both the primal
+/// and dual phases, and a long-step bound-flipping dual ratio test; see
+/// [`super::revised`].
 ///
 /// The fallback ladder of [`PersistentSimplex::solve`]:
 ///
 /// 1. **Incremental** — when the constraint matrix is unchanged (same
 ///    rows, senses, and coefficients; only RHS, objective, and variable
-///    bounds moved — the replan pattern), the new data is patched
-///    through the stored basis inverse: dual simplex repairs RHS/bound
-///    drift, primal phase 2 repairs cost drift, and an unchanged
-///    problem certifies optimality in zero pivots. Solutions are
-///    verified against the problem before being returned; any doubt
-///    (structural change, singularity, spurious infeasibility verdict,
-///    drift beyond tolerance, pivot-budget exhaustion) falls through.
-/// 2. **Warm basis** — one Gauss-Jordan realization of the stored basis
-///    under the new coefficients, then phase 2 alone
-///    ([`solve_from_basis`] semantics). Also runs every
-///    64th solve as the periodic refactorization
-///    guard.
-/// 3. **Cold** — the full two-phase solve.
+///    bounds moved — the replan pattern), the new data patches through
+///    the live factorization: the dual simplex repairs RHS/bound drift
+///    in O(m + nnz) per pivot, primal phase 2 repairs cost drift, and
+///    an unchanged problem certifies optimality in zero pivots.
+///    Solutions are verified against the problem before being returned;
+///    any doubt (structural change, non-optimal verdict, drift beyond
+///    [`SimplexConfig::drift_tol`]) falls through.
+/// 2. **Warm basis** — the basis and resting states are kept, the
+///    problem data is rebuilt, and the basis LU is refactorized from
+///    scratch. Also runs every [`SimplexConfig::refactor_interval`]-th
+///    solve as the periodic refresh.
+/// 3. **Cold** — a fresh sparse solve from the all-logical basis, whose
+///    `Infeasible`/`Unbounded` verdicts are genuine certificates (the
+///    sparse layout carries no artificial variables). If even this rung
+///    fails numerically, the dense two-phase oracle ([`solve`]'s path)
+///    answers.
 ///
 /// Correctness never depends on which rung answered; the ladder only
 /// affects pivot counts. Results are identical to [`solve`] up to LP
 /// degeneracy (alternative optima tie-broken by pivot order).
 #[derive(Clone, Debug, Default)]
 pub struct PersistentSimplex {
-    state: Option<PersistState>,
+    state: Option<RevisedSimplex>,
+    config: SimplexConfig,
     /// Incremental resolves since the last (re)factorization.
     since_factor: usize,
     last_path: Option<SolvePath>,
+    last_stats: Option<SolveStats>,
 }
 
 impl PersistentSimplex {
-    /// A solver with no stored tableau (first solve runs cold).
+    /// A solver with no stored basis (first solve runs cold) and the
+    /// default [`SimplexConfig`].
     pub fn new() -> PersistentSimplex {
         PersistentSimplex::default()
     }
 
-    /// Drop the stored tableau (next solve runs cold).
+    /// A solver with explicit tuning knobs.
+    pub fn with_config(config: SimplexConfig) -> PersistentSimplex {
+        PersistentSimplex { config, ..PersistentSimplex::default() }
+    }
+
+    /// The active tuning knobs.
+    pub fn config(&self) -> SimplexConfig {
+        self.config
+    }
+
+    /// Replace the tuning knobs (takes effect from the next solve; the
+    /// stored basis is kept).
+    pub fn set_config(&mut self, config: SimplexConfig) {
+        self.config = config;
+    }
+
+    /// Drop the stored basis (next solve runs cold).
     pub fn reset(&mut self) {
         self.state = None;
         self.since_factor = 0;
         self.last_path = None;
+        self.last_stats = None;
     }
 
-    /// Whether a tableau from a previous optimal solve is stored.
+    /// Whether a basis from a previous optimal solve is stored.
     pub fn has_state(&self) -> bool {
         self.state.is_some()
     }
@@ -1145,10 +1033,16 @@ impl PersistentSimplex {
         self.last_path
     }
 
+    /// Counters of the last solve (`None` before the first solve).
+    pub fn last_stats(&self) -> Option<SolveStats> {
+        self.last_stats
+    }
+
     /// The stored optimal basis, if any — interchange format with
-    /// [`solve_from_basis`].
+    /// [`solve_from_basis`] (sparse logicals map onto the dense layout's
+    /// slack and artificial columns).
     pub fn basis(&self) -> Option<Basis> {
-        self.state.as_ref().map(|s| s.t.extract_basis(s.n_struct_slack))
+        self.state.as_ref().map(|s| s.dense_basis())
     }
 
     /// Solve `p`, preferring the cheapest usable rung of the ladder (see
@@ -1157,145 +1051,105 @@ impl PersistentSimplex {
     /// state (bound-only solves leave it untouched).
     pub fn solve(&mut self, p: &LpProblem) -> LpSolution {
         if p.num_rows() == 0 {
-            // Bound-only problems have no tableau to keep — but any
+            // Bound-only problems have no basis to keep — but any
             // stored state stays put (the fingerprint already guards it
             // against reuse on the wrong problem), so interleaving a
             // row-less solve does not de-warm the ladder.
-            self.last_path = Some(SolvePath::Cold);
+            self.record(SolvePath::Cold, (0, 0, 0), 0);
             return solve_with(p, None);
         }
-        // Rung 1: patch the stored tableau in place.
-        if self.since_factor < REFACTOR_INTERVAL {
-            if let Some(state) = self.state.as_mut() {
-                if let Some(sol) = resolve_incremental(state, p) {
-                    self.since_factor += 1;
-                    self.last_path = Some(SolvePath::Incremental);
-                    return sol;
+        // Inverted bounds are infeasible by inspection (problems mutated
+        // in place bypass `add_var`'s assertion).
+        if p.lower.iter().zip(&p.upper).any(|(l, u)| l > u) {
+            self.state = None;
+            self.since_factor = 0;
+            self.record(SolvePath::Cold, (0, 0, 0), 0);
+            return failed(LpStatus::Infeasible, p.num_vars(), 0);
+        }
+        let eta_cap = self.config.refactor_interval.max(1);
+        let drift_tol = self.config.drift_tol;
+
+        // Rung 1: patch drifted data through the live factorization.
+        // Only a verified Optimal is returned from here — any other
+        // outcome (including an Infeasible verdict, which a drifted
+        // eta file could in principle distort) refactorizes and lets a
+        // fresher rung decide.
+        if self.since_factor < self.config.refactor_interval {
+            if let Some(rs) = self.state.as_mut() {
+                if rs.matches(p) && rs.patch(p) {
+                    if let Ok(LpStatus::Optimal) = rs.optimize(eta_cap) {
+                        let sol = rs.solution(p);
+                        let counters = rs.counters();
+                        if p.is_feasible(&sol.x, drift_tol) {
+                            self.since_factor += 1;
+                            self.record(SolvePath::Incremental, counters, 0);
+                            return sol;
+                        }
+                    }
                 }
             }
         }
-        // Rung 2: Gauss-Jordan realization of the stored basis under the
-        // new coefficients (also the periodic refactorization refresh).
-        if let Some(state) = self.state.take() {
-            let basis = state.t.extract_basis(state.n_struct_slack);
-            if let Some((sol, st)) = try_warm(p, &basis, true) {
-                self.state = st;
-                self.since_factor = 0;
-                self.last_path = Some(SolvePath::WarmBasis);
-                return sol;
+
+        // Rung 2: keep the basis and resting states, rebuild the data,
+        // refactorize from scratch.
+        if let Some(mut rs) = self.state.take() {
+            if rs.rebuild(p) {
+                if let Ok(LpStatus::Optimal) = rs.optimize(eta_cap) {
+                    let sol = rs.solution(p);
+                    if p.is_feasible(&sol.x, drift_tol) {
+                        self.since_factor = 0;
+                        self.record(SolvePath::WarmBasis, rs.counters(), 1);
+                        self.state = Some(rs);
+                        return sol;
+                    }
+                }
             }
         }
-        // Rung 3: cold two-phase solve.
-        let (sol, st) = solve_cold(p, true);
-        self.state = st;
+
+        // Rung 3: cold sparse solve from the all-logical basis. Its
+        // terminal verdicts are genuine certificates (no artificials).
+        let mut rs = RevisedSimplex::from_problem(p);
+        match rs.optimize(eta_cap) {
+            Ok(LpStatus::Optimal) => {
+                let sol = rs.solution(p);
+                if p.is_feasible(&sol.x, drift_tol) {
+                    self.since_factor = 0;
+                    self.record(SolvePath::Cold, rs.counters(), 1);
+                    self.state = Some(rs);
+                    return sol;
+                }
+            }
+            Ok(status @ (LpStatus::Infeasible | LpStatus::Unbounded)) => {
+                let (pivots, flips, _) = rs.counters();
+                self.since_factor = 0;
+                self.record(SolvePath::Cold, rs.counters(), 1);
+                return failed(status, p.num_vars(), pivots + flips);
+            }
+            _ => {}
+        }
+
+        // Safety net: the dense two-phase oracle, numerically
+        // independent of the sparse machinery.
         self.since_factor = 0;
-        self.last_path = Some(SolvePath::Cold);
+        let sol = solve_cold(p);
+        self.record(
+            SolvePath::Cold,
+            (sol.iterations, 0, rs.counters().2),
+            1,
+        );
         sol
     }
-}
 
-/// The incremental rung: patch `p`'s RHS / objective / bounds through
-/// `state`'s stored tableau and re-optimize without realizing a basis.
-/// `None` means the tableau is unusable for `p` (or numerically in
-/// doubt) and the caller must refactorize; only verified `Optimal`
-/// solutions are returned.
-fn resolve_incremental(state: &mut PersistState, p: &LpProblem) -> Option<LpSolution> {
-    let m = p.num_rows();
-    let n = p.num_vars();
-    if n != state.n || m != state.rows.len() {
-        return None;
+    fn record(&mut self, path: SolvePath, counters: (usize, usize, usize), base_refactors: usize) {
+        let (pivots, bound_flips, refactors) = counters;
+        self.last_path = Some(path);
+        self.last_stats = Some(SolveStats {
+            path,
+            pivots,
+            bound_flips,
+            refactorizations: refactors + base_refactors,
+        });
     }
-    for (row, (cmp, coeffs)) in p.rows.iter().zip(&state.rows) {
-        if row.cmp != *cmp || row.coeffs != *coeffs {
-            return None; // matrix changed: the stored B⁻¹A is stale
-        }
-    }
-    let nss = state.n_struct_slack;
-    let t = &mut state.t;
-    let ntot = t.ntot;
-    // New variable bounds (slacks keep [0, ∞), artificials stay pinned).
-    for j in 0..n {
-        if p.lower[j] > p.upper[j] {
-            return None;
-        }
-        t.lower[j] = p.lower[j];
-        t.upper[j] = p.upper[j];
-    }
-    // Re-seat nonbasic variables on the (possibly moved) bounds.
-    for j in 0..nss {
-        if matches!(t.state[j], VarState::Basic(_)) {
-            continue;
-        }
-        let prefer_upper = matches!(t.state[j], VarState::AtUpper);
-        let (st, v) = resting(t.lower[j], t.upper[j], prefer_upper);
-        t.state[j] = st;
-        t.xval[j] = v;
-    }
-    // x_B = B⁻¹b − Σ_{nonbasic j} (B⁻¹A)_j·x̄_j. The artificial block of
-    // the stored tableau *is* B⁻¹ (phase 2 kept it current), modulo the
-    // cold path's row sign flips.
-    for i in 0..t.m {
-        let row = &t.a[i * ntot..(i + 1) * ntot];
-        let mut v = 0.0;
-        for (k, lprow) in p.rows.iter().enumerate() {
-            let binv = row[nss + k];
-            if binv != 0.0 {
-                v += binv * (state.row_sign[k] * lprow.rhs);
-            }
-        }
-        t.xb[i] = v;
-    }
-    for j in 0..nss {
-        if matches!(t.state[j], VarState::Basic(_)) || t.xval[j] == 0.0 {
-            continue;
-        }
-        let v = t.xval[j];
-        for i in 0..t.m {
-            let a = t.a[i * ntot + j];
-            if a != 0.0 {
-                t.xb[i] -= a * v;
-            }
-        }
-    }
-    t.iterations = 0;
-    let max_iter = 50 * (t.m + ntot) + 1000;
-
-    // RHS/bound drift first: if the stored basis went primal
-    // infeasible, dual simplex repairs it while the *stored*
-    // reduced-cost row — dual feasible for the previous objective, kept
-    // exact through every pivot — still guides the ratio test. (When
-    // the objective also moved, the stored row merely guides pivots; a
-    // dual-infeasible guide costs pivot count, never correctness.)
-    let primal_ok = (0..t.m).all(|r| {
-        let b = t.basis[r];
-        t.xb[r] >= t.lower[b] - WARM_TOL && t.xb[r] <= t.upper[b] + WARM_TOL
-    });
-    if !primal_ok {
-        match t.dual_optimize(max_iter, &state.fixed, nss, ntot) {
-            Ok(()) => {}
-            // Never conclude Infeasible/Unbounded from the fast path —
-            // a pinned artificial on a no-longer-redundant row can
-            // produce a spurious verdict. Refactorize and let the full
-            // ladder decide.
-            Err(_) => return None,
-        }
-    }
-    // Cost drift second: fresh reduced costs for the (possibly moved)
-    // objective, then primal phase 2 from the now primal-feasible
-    // basis. An unchanged problem certifies optimality here in zero
-    // pivots.
-    t.load_phase2_costs(&p.c);
-    match t.optimize(max_iter, &state.fixed, nss, ntot) {
-        Ok(()) => {}
-        Err(_) => return None,
-    }
-    let sol = finish(p, t, LpStatus::Optimal, nss);
-    // Numerical-drift guard: the patched tableau must still describe
-    // the problem it claims to solve.
-    if !p.is_feasible(&sol.x, DRIFT_TOL) {
-        return None;
-    }
-    Some(sol)
 }
 
 fn finish(p: &LpProblem, t: &Tableau, status: LpStatus, n_struct_slack: usize) -> LpSolution {

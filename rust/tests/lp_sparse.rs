@@ -1,0 +1,354 @@
+//! Equivalence and robustness properties for the sparse revised
+//! simplex core behind [`PersistentSimplex`]: on every LP both cores
+//! can see — freeze LPs over the four fixed schedules and synthesized
+//! DAGs, plus random general LPs — the sparse LU + Devex ladder must
+//! land on the same optimum as the dense two-phase tableau oracle, the
+//! Bland fallback must break degenerate cycling, and the long-step
+//! dual ratio test must flip bounds without corrupting the optimum.
+
+mod common;
+
+use common::prop::{check, random_cost_pair, usize_in};
+use common::{pipeline_with_bounds, random_bounds};
+use timelyfreeze::graph::pipeline::PipelineDag;
+use timelyfreeze::lp::{
+    build_lp, solve, Cmp, FreezeLpInput, LpProblem, LpRow, LpStatus,
+    PersistentSimplex, SolvePath, INF,
+};
+use timelyfreeze::schedule::{synthesize, Schedule};
+use timelyfreeze::types::ScheduleKind;
+use timelyfreeze::util::rng::Rng;
+
+/// Relative-ish objective tolerance: the acceptance bar is 1e-9 on the
+/// optimum, scaled by magnitude so large makespans don't fail on ulps.
+fn obj_tol(reference: f64) -> f64 {
+    1e-9 * (1.0 + reference.abs())
+}
+
+/// Solve `p` through both cores and require identical verdicts, and on
+/// `Optimal` identical objectives within `1e-9`. Returns the dense
+/// oracle's solution for further checks.
+fn assert_cores_agree(
+    ps: &mut PersistentSimplex,
+    p: &LpProblem,
+    ctx: &str,
+) -> Result<timelyfreeze::lp::LpSolution, String> {
+    let sparse = ps.solve(p);
+    let dense = solve(p);
+    if sparse.status != dense.status {
+        return Err(format!(
+            "{ctx}: status diverges — sparse {:?} vs dense {:?}",
+            sparse.status, dense.status
+        ));
+    }
+    if dense.status == LpStatus::Optimal
+        && (sparse.objective - dense.objective).abs() > obj_tol(dense.objective)
+    {
+        return Err(format!(
+            "{ctx}: optimum diverges — sparse {} vs dense {} (path {:?})",
+            sparse.objective,
+            dense.objective,
+            ps.last_path()
+        ));
+    }
+    Ok(dense)
+}
+
+/// Sparse == dense on freeze LPs from all four fixed schedules, with
+/// random freezable bounds, random accuracy budgets, and (half the
+/// time) random per-stage memory floors — re-solved through the ladder
+/// as the bounds drift, so the incremental and warm rungs are hit, not
+/// just the cold one.
+#[test]
+fn prop_sparse_matches_dense_on_fixed_schedule_freeze_lps() {
+    check("sparse == dense on fixed-schedule freeze LPs", 40, |rng| {
+        let kind = ScheduleKind::all()[rng.next_below(4) as usize];
+        let ranks = usize_in(rng, 2, 5);
+        let m = usize_in(rng, ranks, 2 * ranks + 2);
+        let s = Schedule::build(kind, ranks, m, Schedule::default_chunks(kind));
+        let g = PipelineDag::from_schedule(&s);
+        let (mut w_min, mut w_max) = random_bounds(rng, &g);
+        let mut ps = PersistentSimplex::new();
+        for round in 0..4 {
+            let r_max = rng.range_f64(0.15, 1.0);
+            let floor: Vec<f64> =
+                (0..g.stages).map(|_| rng.range_f64(0.0, r_max * 0.9)).collect();
+            let with_floor = rng.bernoulli(0.5);
+            let mut input = FreezeLpInput::new(&g, &w_min, &w_max, r_max, 1e-4);
+            if with_floor {
+                input = input.with_stage_floor(&floor);
+            }
+            let p = build_lp(&input).map_err(|e| format!("build: {e}"))?;
+            assert_cores_agree(
+                &mut ps,
+                &p,
+                &format!("{} round {round} floor={with_floor}", kind.name()),
+            )?;
+            // Drift the measured bounds a few percent for the next
+            // round, as refreshed monitoring means would.
+            for i in 0..g.len() {
+                if w_max[i] > 0.0 {
+                    let f = 1.0 + 0.06 * (rng.next_f64() - 0.5);
+                    w_max[i] *= f;
+                    w_min[i] = (w_min[i] * f).min(w_max[i]);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Sparse == dense on freeze LPs over *synthesized* schedules: the
+/// portfolio + fixed-point synthesizer produces DAG shapes none of the
+/// fixed four have, and the sparse core must agree with the oracle on
+/// them too.
+#[test]
+fn prop_sparse_matches_dense_on_synthesized_freeze_lps() {
+    check("sparse == dense on synthesized freeze LPs", 10, |rng| {
+        let ranks = usize_in(rng, 2, 4);
+        let m = usize_in(rng, ranks, 2 * ranks);
+        let (flat, chunked, summary) = random_cost_pair(rng, ranks);
+        let out = synthesize(&flat, &chunked, ranks, m, 0.6, 1e-4);
+        let g = PipelineDag::from_schedule(&out.schedule);
+        let (w_min, w_max) = random_bounds(rng, &g);
+        let mut ps = PersistentSimplex::new();
+        for round in 0..3 {
+            let r_max = rng.range_f64(0.2, 1.0);
+            let input = FreezeLpInput::new(&g, &w_min, &w_max, r_max, 1e-4);
+            let p = build_lp(&input).map_err(|e| format!("build: {e}"))?;
+            assert_cores_agree(
+                &mut ps,
+                &p,
+                &format!("synth {ranks}x{m} round {round} ({summary})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Sparse == dense on random general LPs exercising every row sense,
+/// negative right-hand sides, and free variables — feasibility is
+/// guaranteed by constructing the rows around a known interior point,
+/// boundedness by zero cost on the free variables.
+#[test]
+fn prop_sparse_matches_dense_on_random_general_lps() {
+    check("sparse == dense on random general LPs", 120, |rng| {
+        let n = usize_in(rng, 1, 12);
+        let m = usize_in(rng, 0, 10);
+        let mut p = LpProblem::new();
+        let mut x0 = Vec::with_capacity(n);
+        for _ in 0..n {
+            let free = rng.bernoulli(0.15);
+            let (lo, hi, cost) = if free {
+                // Free variables carry zero cost so the LP stays
+                // bounded; they still exercise the free-variable
+                // pricing and ratio-test paths.
+                (-INF, INF, 0.0)
+            } else {
+                let lo = rng.range_f64(-4.0, 1.0);
+                (lo, lo + rng.range_f64(0.0, 5.0), rng.range_f64(-2.0, 2.0))
+            };
+            x0.push(if lo.is_finite() && hi.is_finite() {
+                lo + (hi - lo) * rng.next_f64()
+            } else {
+                rng.range_f64(-2.0, 2.0)
+            });
+            p.add_var(cost, lo, hi);
+        }
+        for _ in 0..m {
+            let mut coeffs = Vec::new();
+            let mut lhs = 0.0;
+            for (j, &xj) in x0.iter().enumerate() {
+                if rng.bernoulli(0.5) {
+                    let a = rng.range_f64(-3.0, 3.0);
+                    coeffs.push((j, a));
+                    lhs += a * xj;
+                }
+            }
+            if coeffs.is_empty() {
+                continue;
+            }
+            let (cmp, rhs) = match rng.next_below(3) {
+                0 => (Cmp::Le, lhs + rng.range_f64(0.0, 2.0)),
+                1 => (Cmp::Ge, lhs - rng.range_f64(0.0, 2.0)),
+                _ => (Cmp::Eq, lhs),
+            };
+            p.rows.push(LpRow { coeffs, cmp, rhs });
+        }
+        let mut ps = PersistentSimplex::new();
+        let dense = assert_cores_agree(&mut ps, &p, "general LP")?;
+        if dense.status != LpStatus::Optimal {
+            return Err(format!(
+                "construction should be feasible+bounded, got {:?}",
+                dense.status
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Both cores agree the LP is infeasible when the rows contradict the
+/// bounds — and the sparse verdict is a genuine Farkas certificate
+/// (the no-artificials core has no phase-1 residue to misread).
+#[test]
+fn prop_sparse_matches_dense_on_infeasible_lps() {
+    check("sparse == dense on infeasible LPs", 40, |rng| {
+        let n = usize_in(rng, 1, 6);
+        let mut p = LpProblem::new();
+        for _ in 0..n {
+            p.add_var(rng.range_f64(-1.0, 1.0), 0.0, rng.range_f64(1.0, 3.0));
+        }
+        // Σ x_j ≥ (strictly above the box's maximum) — unsatisfiable.
+        let cap: f64 = p.upper.iter().sum();
+        p.rows.push(LpRow {
+            coeffs: (0..n).map(|j| (j, 1.0)).collect(),
+            cmp: Cmp::Ge,
+            rhs: cap + rng.range_f64(0.5, 2.0),
+        });
+        let mut ps = PersistentSimplex::new();
+        let sparse = ps.solve(&p);
+        let dense = solve(&p);
+        if sparse.status != LpStatus::Infeasible || dense.status != LpStatus::Infeasible {
+            return Err(format!(
+                "expected Infeasible/Infeasible, got sparse {:?} dense {:?}",
+                sparse.status, dense.status
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Beale's classic cycling LP: a textbook degenerate vertex on which
+/// naive Dantzig pricing cycles forever. The Devex core with its Bland
+/// stall fallback must terminate at the known optimum (−1/20), and the
+/// ladder must keep matching the oracle when the degenerate instance
+/// is then re-solved under drifted costs and right-hand sides.
+#[test]
+fn degenerate_beale_lp_terminates_and_matches_dense() {
+    let mut p = LpProblem::new();
+    p.add_var(-0.75, 0.0, INF);
+    p.add_var(150.0, 0.0, INF);
+    p.add_var(-0.02, 0.0, INF);
+    p.add_var(6.0, 0.0, INF);
+    p.rows.push(LpRow {
+        coeffs: vec![(0, 0.25), (1, -60.0), (2, -0.04), (3, 9.0)],
+        cmp: Cmp::Le,
+        rhs: 0.0,
+    });
+    p.rows.push(LpRow {
+        coeffs: vec![(0, 0.5), (1, -90.0), (2, -0.02), (3, 3.0)],
+        cmp: Cmp::Le,
+        rhs: 0.0,
+    });
+    p.rows.push(LpRow { coeffs: vec![(2, 1.0)], cmp: Cmp::Le, rhs: 1.0 });
+
+    let mut ps = PersistentSimplex::new();
+    let sparse = ps.solve(&p);
+    assert_eq!(sparse.status, LpStatus::Optimal, "degenerate LP must terminate");
+    assert!(
+        (sparse.objective - (-0.05)).abs() < 1e-9,
+        "Beale optimum is -1/20, got {}",
+        sparse.objective
+    );
+    let dense = solve(&p);
+    assert_eq!(dense.status, LpStatus::Optimal);
+    assert!((sparse.objective - dense.objective).abs() < 1e-9);
+
+    // Degenerate drift: keep the zero right-hand sides (the degeneracy)
+    // while nudging costs — the dual/primal repair must not cycle either.
+    let mut rng = Rng::seed_from_u64(0xBEA1E);
+    for round in 0..6 {
+        for cj in p.c.iter_mut() {
+            *cj *= 1.0 + 0.05 * (rng.next_f64() - 0.5);
+        }
+        let sparse = ps.solve(&p);
+        let dense = solve(&p);
+        assert_eq!(sparse.status, LpStatus::Optimal, "round {round} must terminate");
+        assert!(
+            (sparse.objective - dense.objective).abs() < obj_tol(dense.objective),
+            "round {round}: sparse {} vs dense {}",
+            sparse.objective,
+            dense.objective
+        );
+    }
+}
+
+/// Long-step dual ratio test: on a box LP whose optimum pins almost
+/// every variable at a bound, a right-hand-side drift must be repaired
+/// on the incremental rung with genuine bound *flips* (not one pivot
+/// per variable), and still land on the dense optimum.
+#[test]
+fn bound_flips_repair_box_lp_drift_incrementally() {
+    let n = 64;
+    let mut rng = Rng::seed_from_u64(0xF11B5);
+    let mut p = LpProblem::new();
+    for _ in 0..n {
+        // Distinct negative costs: the optimum fills the cheapest
+        // variables to their upper bound until the budget row binds.
+        p.add_var(-rng.range_f64(0.5, 2.0), 0.0, 1.0);
+    }
+    let budget = |b: f64| LpRow {
+        coeffs: (0..n).map(|j| (j, 1.0)).collect(),
+        cmp: Cmp::Le,
+        rhs: b,
+    };
+    p.rows.push(budget(n as f64 * 0.75));
+
+    let mut ps = PersistentSimplex::new();
+    let first = ps.solve(&p);
+    assert_eq!(first.status, LpStatus::Optimal);
+
+    // Tighten the budget hard: ~half the at-upper variables must drop
+    // to their lower bound — the long-step dual ratio test flips them
+    // in bulk while choosing a single entering pivot.
+    p.rows[0] = budget(n as f64 * 0.25);
+    let sparse = ps.solve(&p);
+    let dense = solve(&p);
+    assert_eq!(sparse.status, LpStatus::Optimal);
+    assert!(
+        (sparse.objective - dense.objective).abs() < obj_tol(dense.objective),
+        "sparse {} vs dense {}",
+        sparse.objective,
+        dense.objective
+    );
+    assert_eq!(ps.last_path(), Some(SolvePath::Incremental));
+    let stats = ps.last_stats().expect("stats recorded after a solve");
+    assert!(
+        stats.bound_flips > 0,
+        "a 0.75→0.25 budget drop must flip bounds, stats {stats:?}"
+    );
+    assert!(
+        stats.bound_flips > stats.pivots,
+        "long-step repair should flip more than it pivots, stats {stats:?}"
+    );
+}
+
+/// Bound flips on the real formulation: with generous freezable ranges
+/// and a tight accuracy budget, many stages' freeze ratios sit exactly
+/// at `r_max`; budget drifts must re-pin them via the flip-rich dual
+/// path while matching the oracle and respecting `r ≤ r_max`.
+#[test]
+fn freeze_lp_budget_drift_pins_ratios_at_r_max() {
+    let (g, w_min, w_max) = pipeline_with_bounds(ScheduleKind::OneFOneB, 4, 12, 0.25);
+    let mut ps = PersistentSimplex::new();
+    let mut flipped_any = false;
+    let mut r_max = 0.9;
+    for round in 0..6 {
+        let input = FreezeLpInput::new(&g, &w_min, &w_max, r_max, 1e-4);
+        let p = build_lp(&input).expect("freeze LP builds");
+        let sparse = ps.solve(&p);
+        let dense = solve(&p);
+        assert_eq!(sparse.status, LpStatus::Optimal, "round {round}");
+        assert!(
+            (sparse.objective - dense.objective).abs() < obj_tol(dense.objective),
+            "round {round}: sparse {} vs dense {}",
+            sparse.objective,
+            dense.objective
+        );
+        flipped_any |= ps.last_stats().map_or(0, |s| s.bound_flips) > 0;
+        // March the accuracy budget down: each tightening re-pins the
+        // wgrad freeze variables against their shrunken budget rows.
+        r_max -= 0.12;
+    }
+    assert!(flipped_any, "no budget drift ever exercised a bound flip");
+}

@@ -11,10 +11,13 @@
 # Baseline: scripts/BENCH_BASELINE.json. Refresh it by copying a trusted
 # output file over it. Benchmarks present in only one of the two files
 # are ignored (suites may grow): the PR 5 additions
-# (lp_resolve_incremental/1f1b_8x16, replan_loop/llama1b) and the PR 7
-# schedule-synthesis bench (synthesize/1f1b_8x16) land in the recorded
-# trajectory immediately but stay outside the ±20% gate until the
-# baseline is re-armed with a file that contains them.
+# (lp_resolve_incremental/1f1b_8x16, replan_loop/llama1b), the PR 7
+# schedule-synthesis bench (synthesize/1f1b_8x16), and the PR 8 sparse
+# revised-simplex benches (lp_sparse_vs_dense/1f1b_8x16,
+# lp_sparse_vs_dense/synth_16x64, lp_dense_oracle/1f1b_8x16,
+# lp_bound_flip/box_512) land in the recorded trajectory immediately
+# but stay outside the ±20% gate until the baseline is re-armed with a
+# file that contains them.
 #
 # Env:
 #   TF_PERF_GATE_TOLERANCE   regression threshold, default 0.20
