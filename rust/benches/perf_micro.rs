@@ -336,6 +336,54 @@ fn main() {
         std::hint::black_box(sim::run(&cfg).expect("feasible config").throughput);
     }));
 
+    // Max-min fair sharing in isolation: admit a burst of island- and
+    // spine-crossing transfers, then drain the fabric event by event —
+    // the per-step network work of the contended executor, without the
+    // pipeline around it. Each arrival/departure re-solves the
+    // water-filling allocation, so the burst costs O(events · links ·
+    // transfers).
+    {
+        use timelyfreeze::net::FairShareFabric;
+        let caps = [6e10, 6e10, 1e9]; // two islands + the spine
+        let paths: [&[usize]; 3] = [&[0], &[0, 2, 1], &[1, 2, 0]];
+        let mut fabric = FairShareFabric::new();
+        record(bench_auto("net_fair_share/burst_24x3links", 0.3, || {
+            fabric.reset(&caps);
+            for k in 0..24u64 {
+                let _ = fabric.begin(0.001 * k as f64, 3.4e7, paths[(k % 3) as usize], k);
+            }
+            let mut drained = 0u64;
+            while !fabric.idle() {
+                let mut next: Option<(f64, usize)> = None;
+                fabric.predictions(|id, _, due| {
+                    if next.map_or(true, |(t, _)| due < t) {
+                        next = Some((due, id));
+                    }
+                });
+                let (due, id) = next.expect("busy fabric predicts completions");
+                drained += fabric.complete(due, id);
+            }
+            std::hint::black_box(drained);
+        }));
+    }
+
+    // The same 100-step run priced through the shared-link fabric: the
+    // event executor's contended path (NetDue events, epoch-versioned
+    // lazy deletion, per-step capacity reinstall). The delta against
+    // sim_run/llama1b_100steps is the network model's full cost.
+    {
+        let mut cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+        cfg.steps = 100;
+        cfg.phases = timelyfreeze::freeze::PhaseConfig::new(8, 26, 40);
+        cfg.method = FreezeMethod::TimelyFreeze;
+        cfg.net = Some(
+            timelyfreeze::net::Topology::parse("island:2x6e10,spine:1e9,lat:0.0002").unwrap(),
+        );
+        record(bench_auto("contended_sim_run/llama1b_100steps", 2.0, || {
+            std::hint::black_box(sim::run(&cfg).expect("feasible config").throughput);
+        }));
+    }
+
     // Shadow-run memo telemetry: visible whenever a trajectory point is
     // being recorded, so sweep drivers can check the bounded cache
     // still serves their baseline pattern.

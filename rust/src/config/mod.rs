@@ -6,7 +6,7 @@ pub mod presets;
 pub mod scenario;
 
 pub use presets::{GpuPreset, ModelFamily, ModelPreset};
-pub use scenario::{FaultEvent, FaultKind, LinkSlowdown, Scenario, Straggler};
+pub use scenario::{FaultEvent, FaultKind, LinkCap, LinkSlowdown, Scenario, Straggler};
 
 use crate::cost::RecomputePolicy;
 use crate::freeze::{ApfConfig, AutoFreezeConfig, PhaseConfig};
@@ -161,6 +161,20 @@ pub struct ExperimentConfig {
     /// only completed optimizer steps are durable (a fault loses the
     /// whole in-flight step).
     pub ckpt_interval: usize,
+    /// Network topology (`--net`): `None` or
+    /// [`Topology::uniform`](crate::net::Topology::uniform) keeps the
+    /// pre-network fixed-delay communication model bit-identically;
+    /// a hierarchical topology prices P2P sends through the shared-link
+    /// fabric ([`crate::net`]) — expected link costs in the planner,
+    /// fair-shared transfers in the event engine.
+    pub net: Option<crate::net::Topology>,
+    /// Price the freeze LP's cross-rank edges at their *dedicated*
+    /// (contention-free) link cost even though execution contends for
+    /// the fabric. This is the strawman planner that
+    /// `benches/fig18_contention.rs` re-evaluates under contention;
+    /// it is deliberately not exposed on the CLI. Ignored when `net`
+    /// is `None`.
+    pub net_blind_lp: bool,
 }
 
 impl ExperimentConfig {
@@ -232,6 +246,8 @@ impl ExperimentConfig {
             exec: ExecMode::Event,
             recovery: None,
             ckpt_interval: 0,
+            net: None,
+            net_blind_lp: false,
         };
         Some(match key.as_str() {
             // LLaMA-3.2-1B · Alpaca-GPT4 · 4×A6000 (Table 3 col 1).
@@ -317,8 +333,10 @@ impl ExperimentConfig {
     /// optional): `experiment.{schedule, method, ranks, chunks,
     /// microbatches, microbatch_size, seq_len, steps, r_max, seed,
     /// timing_noise, memory_budget, rank_memory_gb, recompute, scenario,
-    /// replan_interval, exec, recovery, ckpt_interval}`,
+    /// replan_interval, exec, recovery, ckpt_interval, net}`,
     /// `phases.{warmup, monitor, freeze}`,
+    /// a `[network]` topology section
+    /// ([`Topology::from_toml`](crate::net::Topology::from_toml)),
     /// `apf.{threshold, alpha, check_interval}`,
     /// `autofreeze.{percentile, check_interval}`. `rank_memory_gb` is an
     /// array of per-rank GB capacities; `recompute` is
@@ -400,6 +418,17 @@ impl ExperimentConfig {
             );
         }
         set_usize!("experiment.ckpt_interval", self.ckpt_interval);
+        if let Some(s) = doc.get_str("experiment.net") {
+            self.net = Some(crate::net::Topology::parse(s)?);
+        }
+        // A `[network]` section (the `--net topo.toml` format) also
+        // installs a topology; an inline `experiment.net` spec wins when
+        // both are present in one document.
+        if self.net.is_none() {
+            if let Some(topo) = crate::net::Topology::from_toml(doc)? {
+                self.net = Some(topo);
+            }
+        }
         if let Some(v) = doc.get_i64("experiment.seed") {
             self.seed = v as u64;
         }
@@ -527,6 +556,33 @@ mod tests {
         assert_eq!(RecoveryStrategy::parse("scratch"), Some(RecoveryStrategy::Restart));
         assert_eq!(RecoveryStrategy::Elastic.name(), "elastic");
         assert_eq!(RecoveryStrategy::Restart.name(), "restart");
+    }
+
+    #[test]
+    fn toml_sets_network_topology() {
+        use crate::net::Topology;
+        let mut cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+        assert!(cfg.net.is_none());
+        // Inline spec on the experiment table.
+        let doc = TomlDoc::parse("[experiment]\nnet = \"island:2x1e12,spine:5e10\"").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.net, Some(Topology::parse("island:2x1e12,spine:5e10").unwrap()));
+        // A [network] section (the `--net topo.toml` format).
+        let mut cfg2 = ExperimentConfig::paper_preset("llama-1b").unwrap();
+        let doc = TomlDoc::parse(
+            "[network]\nmode = \"hierarchical\"\nisland_size = 2\n\
+             island_bandwidth = 1e12\nspine_bandwidth = 5e10",
+        )
+        .unwrap();
+        cfg2.apply_toml(&doc).unwrap();
+        // Labels may differ (parsed spec vs canonical); shapes must not.
+        assert_eq!(cfg2.net.as_ref().unwrap().kind, cfg.net.as_ref().unwrap().kind);
+        // Uniform is representable and malformed specs are clean errors.
+        let doc = TomlDoc::parse("[experiment]\nnet = \"uniform\"").unwrap();
+        cfg2.apply_toml(&doc).unwrap();
+        assert!(cfg2.net.as_ref().unwrap().is_uniform());
+        let doc = TomlDoc::parse("[experiment]\nnet = \"mesh:3\"").unwrap();
+        assert!(cfg2.apply_toml(&doc).is_err());
     }
 
     #[test]

@@ -33,6 +33,8 @@
 //! jitter:0.1               σ = 0.1 multiplicative action jitter
 //! link:2.0                 all communication 2× slower
 //! link:0x4.0@100           boundary 0↔1 4× slower from step 100
+//! linkcap:0-1x0.5@200      links routing rank 0 → 1 at half capacity
+//!                          from step 200 (needs a `--net` topology)
 //! seed:7                   scenario RNG stream
 //! crash:2@500              rank 2 fails permanently at step 500
 //! preempt:1@300-450        rank 1 is preempted for steps 300..450
@@ -75,6 +77,27 @@ pub struct LinkSlowdown {
     /// Communication-time multiplier (> 1 ⇒ slower).
     pub factor: f64,
     /// First step the slowdown applies to.
+    pub onset: usize,
+}
+
+/// A capacity change on the network links between two ranks, active
+/// from `onset` (the `linkcap:<a>-<b>x<factor>[@onset]` term).
+///
+/// Unlike [`LinkSlowdown`] — a multiplier on communication *time* —
+/// a `LinkCap` scales the *capacity* of every fabric link on the route
+/// from rank `a` to rank `b`, so its effect depends on contention:
+/// halving a shared spine hurts every transfer crossing it, not just
+/// the named pair. Requires an active `--net` topology; the runner
+/// rejects capacity terms on the fixed-delay fabric.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkCap {
+    /// Route endpoint (a physical rank).
+    pub from: usize,
+    /// Route endpoint (a physical rank).
+    pub to: usize,
+    /// Capacity multiplier (< 1 ⇒ less bandwidth).
+    pub factor: f64,
+    /// First step the capacity change applies to.
     pub onset: usize,
 }
 
@@ -132,6 +155,8 @@ pub struct Scenario {
     pub jitter_onset: usize,
     /// Communication slowdowns.
     pub links: Vec<LinkSlowdown>,
+    /// Fabric-capacity changes (require an active `--net` topology).
+    pub linkcaps: Vec<LinkCap>,
     /// Whole-rank fault events (crash, preempt, evict-slowest).
     pub faults: Vec<FaultEvent>,
     /// Scenario RNG stream, xor-folded with the run seed.
@@ -146,6 +171,7 @@ impl Default for Scenario {
             jitter_sigma: 0.0,
             jitter_onset: 0,
             links: Vec::new(),
+            linkcaps: Vec::new(),
             faults: Vec::new(),
             seed: 0,
         }
@@ -203,6 +229,15 @@ impl Scenario {
     pub fn with_link(mut self, boundary: Option<usize>, factor: f64, onset: usize) -> Scenario {
         assert!(factor > 0.0 && factor.is_finite(), "link factor must be positive");
         self.links.push(LinkSlowdown { boundary, factor, onset });
+        self
+    }
+
+    /// Add a fabric-capacity change: every link on the topology route
+    /// from rank `from` to rank `to` runs at `factor`× capacity from
+    /// `onset`.
+    pub fn with_linkcap(mut self, from: usize, to: usize, factor: f64, onset: usize) -> Scenario {
+        assert!(factor > 0.0 && factor.is_finite(), "linkcap factor must be positive");
+        self.linkcaps.push(LinkCap { from, to, factor, onset });
         self
     }
 
@@ -292,6 +327,25 @@ impl Scenario {
                     };
                     sc = sc.with_link(boundary, factor, onset);
                 }
+                ("linkcap", Some(arg)) => {
+                    let shape = || {
+                        format!(
+                            "linkcap term '{term}' wants linkcap:<rankA>-<rankB>x<factor>[@onset]"
+                        )
+                    };
+                    let (body, onset) = split_onset(arg)?;
+                    let (route, factor) = body.split_once('x').ok_or_else(shape)?;
+                    let (from, to) = route.split_once('-').ok_or_else(shape)?;
+                    let from = from
+                        .trim()
+                        .parse::<usize>()
+                        .map_err(|_| format!("bad linkcap rank in '{term}'"))?;
+                    let to = to
+                        .trim()
+                        .parse::<usize>()
+                        .map_err(|_| format!("bad linkcap rank in '{term}'"))?;
+                    sc = sc.with_linkcap(from, to, parse_factor(factor, term)?, onset);
+                }
                 ("seed", Some(arg)) => {
                     let seed = arg
                         .parse::<u64>()
@@ -353,7 +407,8 @@ impl Scenario {
                     return Err(format!(
                         "unknown scenario term '{term}' \
                          (try straggler:<rank>x<factor>[@onset], jitter:<sigma>[@onset], \
-                         link:[<boundary>x]<factor>[@onset], seed:<n>, \
+                         link:[<boundary>x]<factor>[@onset], \
+                         linkcap:<rankA>-<rankB>x<factor>[@onset], seed:<n>, \
                          crash:<rank>@<onset>, preempt:<rank>@<from>-<until>, \
                          evict-slowest@<onset>, calm)"
                     ))
@@ -380,6 +435,16 @@ impl Scenario {
                         "scenario slows boundary {b} but the pipeline has only {} \
                          boundaries",
                         stages.saturating_sub(1)
+                    ));
+                }
+            }
+        }
+        for lc in &self.linkcaps {
+            for rank in [lc.from, lc.to] {
+                if rank >= ranks {
+                    return Err(format!(
+                        "scenario scales link capacity for rank {rank} but the pipeline \
+                         has {ranks} ranks"
                     ));
                 }
             }
@@ -421,7 +486,26 @@ impl Scenario {
         self.jitter_sigma == 0.0
             && self.stragglers.iter().all(|s| s.factor == 1.0)
             && self.links.iter().all(|l| l.factor == 1.0)
+            && self.linkcaps.iter().all(|l| l.factor == 1.0)
             && self.faults.is_empty()
+    }
+
+    /// Whether any capacity-scaling term ever takes effect — such terms
+    /// need an active `--net` topology to have links to scale, and the
+    /// runner rejects them otherwise.
+    pub fn has_linkcaps(&self) -> bool {
+        self.linkcaps.iter().any(|l| l.factor != 1.0)
+    }
+
+    /// Visit the capacity terms active at step `t` as `(from, to,
+    /// factor)` route scalings; the caller maps routes onto topology
+    /// links (`NetworkModel::path`) and multiplies capacities.
+    pub fn active_linkcaps(&self, t: usize, mut f: impl FnMut(usize, usize, f64)) {
+        for lc in &self.linkcaps {
+            if t >= lc.onset && lc.factor != 1.0 {
+                f(lc.from, lc.to, lc.factor);
+            }
+        }
     }
 
     /// Whether any whole-rank fault events are scheduled — fault runs
@@ -594,6 +678,43 @@ mod tests {
         // The global term stacks once its onset passes.
         assert_eq!(sc.stage_link_factor(1, 10), 6.0);
         assert_eq!(sc.stage_link_factor(3, 10), 2.0);
+    }
+
+    #[test]
+    fn linkcap_terms_parse_gate_and_validate() {
+        let sc = Scenario::parse("linkcap:0-3x0.5@200").unwrap();
+        assert_eq!(
+            sc.linkcaps,
+            vec![LinkCap { from: 0, to: 3, factor: 0.5, onset: 200 }]
+        );
+        assert!(sc.has_linkcaps());
+        assert!(!sc.is_identity());
+        assert_eq!(sc.to_string(), "linkcap:0-3x0.5@200");
+        // Identity factor: parses, but perturbs nothing.
+        let unity = Scenario::parse("linkcap:0-1x1.0").unwrap();
+        assert!(unity.is_identity());
+        assert!(!unity.has_linkcaps());
+        // Onset gating through the visitor.
+        let mut seen = Vec::new();
+        sc.active_linkcaps(199, |a, b, f| seen.push((a, b, f)));
+        assert!(seen.is_empty());
+        sc.active_linkcaps(200, |a, b, f| seen.push((a, b, f)));
+        assert_eq!(seen, vec![(0, 3, 0.5)]);
+        // Rank bounds come from the fleet size.
+        assert!(sc.validate(4, 4).is_ok());
+        assert!(sc.validate(3, 3).is_err());
+        // Malformed shapes name the offence.
+        for (bad, needle) in [
+            ("linkcap:0x0.5", "wants linkcap:<rankA>-<rankB>x<factor>"),
+            ("linkcap:0-1", "wants linkcap:<rankA>-<rankB>x<factor>"),
+            ("linkcap:a-1x0.5", "bad linkcap rank"),
+            ("linkcap:0-bx0.5", "bad linkcap rank"),
+            ("linkcap:0-1x0", "bad factor"),
+            ("linkcap:0-1x0.5@x", "bad onset step"),
+        ] {
+            let err = Scenario::parse(bad).expect_err(bad);
+            assert!(err.contains(needle), "'{bad}': error '{err}' lacks '{needle}'");
+        }
     }
 
     #[test]

@@ -193,6 +193,29 @@ impl CostModel {
         }
     }
 
+    /// Re-charge communication to the network fabric: replace the
+    /// node-charged `comm` with per-boundary `p2p` link costs (typically
+    /// [`NetworkModel::expected_seconds`](crate::net::NetworkModel::expected_seconds)
+    /// under the topology's steady-state link loads). Every action loses
+    /// its `comm[s]` share and the DAG edges crossing the `s ↔ s+1`
+    /// boundaries gain `p2p[s]` instead; the compute decomposition is
+    /// untouched. `p2p` must hold `stages − 1` boundary costs.
+    pub fn with_network_comm(mut self, p2p: Vec<f64>) -> CostModel {
+        assert_eq!(
+            p2p.len(),
+            self.stages - 1,
+            "p2p must cover the {} stage boundaries",
+            self.stages - 1
+        );
+        assert!(
+            p2p.iter().all(|c| c.is_finite() && *c >= 0.0),
+            "p2p entries must be finite and ≥ 0"
+        );
+        self.comm = vec![0.0; self.stages];
+        self.p2p = p2p;
+        self
+    }
+
     /// Attach per-stage memory accounting (consumed by
     /// [`MemoryModel::required_ratios`] and the fig16 bench).
     pub fn with_memory(mut self, memory: MemoryModel) -> CostModel {
@@ -481,6 +504,35 @@ mod tests {
                 assert_eq!(hi.to_bits(), zhi.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn network_comm_moves_charge_from_nodes_to_edges() {
+        let (_, _, cm) = model_8b();
+        assert!(!cm.has_p2p());
+        let before = cm.bounds(Action::f(0, 1));
+        let comm = cm.stage_comm(1);
+        assert!(comm > 0.0, "analytic preset charges nodes");
+        let net = cm.clone().with_network_comm(vec![0.25, 0.5, 0.75]);
+        // Nodes no longer pay communication…
+        assert_eq!(net.stage_comm(1), 0.0);
+        let after = net.bounds(Action::f(0, 1));
+        assert!((after.0 - (before.0 - comm)).abs() < 1e-12);
+        // …the boundaries do.
+        assert!(net.has_p2p());
+        assert_eq!(net.p2p(0, 1), 0.25);
+        assert_eq!(net.p2p(2, 1), 0.5);
+        assert_eq!(net.p2p(3, 2), 0.75);
+        // Compute decomposition untouched.
+        assert_eq!(net.stage_fwd(2), cm.stage_fwd(2));
+        assert_eq!(net.stage_wgrad(2), cm.stage_wgrad(2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn network_comm_rejects_bad_boundary_count() {
+        let (_, _, cm) = model_8b();
+        let _ = cm.with_network_comm(vec![0.1, 0.2]); // 4 stages ⇒ 3 boundaries
     }
 
     #[test]

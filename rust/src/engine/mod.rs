@@ -142,6 +142,7 @@ pub fn train(cfg: &EngineConfig) -> Result<TrainReport> {
         apf: cfg.apf.clone(),
         auto: cfg.auto.clone(),
         stage_floor: None,
+        edge_comm: None,
     };
     let mut controller = factory.build(cfg.method, &schedule, &layout);
     let lr = LrSchedule::cosine(cfg.base_lr, cfg.phases.t_warmup, cfg.steps);

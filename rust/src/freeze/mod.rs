@@ -187,6 +187,14 @@ pub struct ControllerFactory {
     /// metric-only baselines are memory-blind — exactly the gap the
     /// memory-aware LP closes.
     pub stage_floor: Option<Vec<f64>>,
+    /// Per-CSR-edge communication split `(e0, traffic)` in seconds,
+    /// ordered like [`PipelineDag::cross_rank_edge_map`](crate::graph::PipelineDag::cross_rank_edge_map):
+    /// `e0` is the fixed latency floor, `traffic` the serialization time
+    /// of the *unfrozen* gradient payload. The TimelyFreeze family feeds
+    /// both into the LP (`with_edge_costs` + `with_edge_traffic`) so the
+    /// plan sees that freezing a sender shrinks its gradient messages on
+    /// a contended fabric. `None` keeps the network-blind LP bitwise.
+    pub edge_comm: Option<(Vec<f64>, Vec<f64>)>,
 }
 
 impl ControllerFactory {
@@ -205,6 +213,7 @@ impl ControllerFactory {
         let timely = || {
             let mut tf = TimelyFreeze::new(timely_cfg, schedule, layout.clone());
             tf.set_stage_floor(self.stage_floor.clone());
+            tf.set_edge_comm(self.edge_comm.clone());
             tf
         };
         match method {
@@ -265,6 +274,7 @@ mod tests {
             apf: ApfConfig::default(),
             auto: AutoFreezeConfig::default(),
             stage_floor: Some(vec![floor; 4]),
+            edge_comm: None,
         };
         let mut c = factory.build(FreezeMethod::TimelyFreeze, &schedule, &layout);
         // Drive warm-up + monitoring with synthetic timings (forward

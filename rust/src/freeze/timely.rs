@@ -80,6 +80,12 @@ pub struct TimelyFreeze {
     /// its cost model instead, so monitored durations carry it already
     /// and setting this too would double-charge.
     recompute_surcharge: Option<Vec<f64>>,
+    /// Per-CSR-edge communication split `(e0, traffic)` fed to the LP
+    /// as `with_edge_costs` + `with_edge_traffic`: each cross-rank edge
+    /// costs `e0 + traffic·(1 − r_sender)` seconds, so the plan knows
+    /// freezing a sender shrinks its gradient messages on a shared
+    /// fabric. `None` keeps the network-blind problem bitwise.
+    edge_comm: Option<(Vec<f64>, Vec<f64>)>,
     /// Observed-execution cost model distilled by the event engine
     /// ([`ProfileRecorder`](crate::cost::ProfileRecorder) →
     /// [`CostProfile`](crate::cost::CostProfile)); when set, LP bounds
@@ -123,6 +129,7 @@ impl TimelyFreeze {
             solver: FreezeLpSolver::new(),
             stage_floor: None,
             recompute_surcharge: None,
+            edge_comm: None,
             observed: None,
             inflight,
             scratch_w_min: Vec::new(),
@@ -298,6 +305,22 @@ impl TimelyFreeze {
         self.recompute_surcharge.as_deref()
     }
 
+    /// Set (or clear) the per-CSR-edge communication split `(e0,
+    /// traffic)` the LP prices cross-rank edges with (see
+    /// [`FreezeLpInput::with_edge_traffic`]). Both vectors follow
+    /// [`PipelineDag::cross_rank_edge_map`](crate::graph::PipelineDag::cross_rank_edge_map)
+    /// edge order. A pair whose traffic vector is all-zero is kept —
+    /// the `e0` part still prices fixed latency. Takes effect at the
+    /// next LP solve.
+    pub fn set_edge_comm(&mut self, edge_comm: Option<(Vec<f64>, Vec<f64>)>) {
+        self.edge_comm = edge_comm;
+    }
+
+    /// The active per-edge communication split, if any.
+    pub fn edge_comm(&self) -> Option<(&[f64], &[f64])> {
+        self.edge_comm.as_ref().map(|(e0, tr)| (e0.as_slice(), tr.as_slice()))
+    }
+
     /// The pipeline DAG the controller plans over.
     pub fn pdag(&self) -> &PipelineDag {
         &self.pdag
@@ -390,6 +413,9 @@ impl TimelyFreeze {
         }
         if let Some(sur) = self.recompute_surcharge.as_deref() {
             input = input.with_recompute(sur);
+        }
+        if let Some((e0, tr)) = self.edge_comm.as_ref() {
+            input = input.with_edge_costs(e0.as_slice()).with_edge_traffic(tr.as_slice());
         }
         match self.solver.solve(&input) {
             Ok(sol) => {

@@ -38,6 +38,8 @@ pub mod lp;
 pub mod metrics;
 /// Timing-sample collection (the engine's monitoring phase).
 pub mod monitor;
+/// Contention-aware network fabric: topologies, fair sharing, link costs.
+pub mod net;
 /// Layer → stage partition heuristics.
 pub mod partition;
 /// The four pipeline schedules (GPipe, 1F1B, Interleaved, ZBV).

@@ -15,13 +15,24 @@
 //! so that r_i = δ_i (w_max_i − w_i) is the linearized freeze ratio
 //! (eq. 4).
 //!
-//! Three optional extensions beyond the paper's formulation, all exactly
+//! Four optional extensions beyond the paper's formulation, all exactly
 //! zero-cost when absent:
 //!
 //! * **edge costs** `e_ij` — P2P communication charged to cross-rank DAG
 //!   edges (heterogeneous-interconnect studies). Supplied in CSR edge
 //!   order via [`FreezeLpInput::with_edge_costs`]; when `None`, the
 //!   precedence rows are bit-identical to the pre-refactor build.
+//! * **edge traffic slopes** `g_ij` — contention-aware communication:
+//!   the edge cost becomes *load-dependent*, `e_ij(r_u) = e0_ij + g_ij ·
+//!   (1 − r_u)`, where `r_u` is the sending node's freeze ratio and
+//!   `g_ij` is the expected serialization seconds of the edge's full
+//!   payload on a shared fabric (`NetworkModel::expected_seconds`).
+//!   Freezing the sender shrinks its gradient payload and with it the
+//!   shared-link term. Substituting `r_u = δ_u (w_max_u − w_u)` keeps
+//!   the rows linear: `P_j − P_i − (1 + g_ij δ_u) w_u ≥ e0_ij + g_ij (1
+//!   − δ_u w_max_u)`. Supplied via [`FreezeLpInput::with_edge_traffic`];
+//!   `None` (or all-zero slopes) is bit-identical to the constant-cost
+//!   rows.
 //! * **per-stage freeze-ratio floors** `r_min_s` — the memory-pressure
 //!   constraint [5]: stage `s` must freeze at least an `r_min_s` average
 //!   ratio so its gradient/optimizer state fits the device budget
@@ -84,6 +95,12 @@ pub struct FreezeLpInput<'a> {
     /// [`PipelineDag::p2p_edge_costs`]. `None` ⇒ free edges,
     /// bit-identical to the pre-refactor precedence rows.
     pub edge_costs: Option<&'a [f64]>,
+    /// Optional per-edge traffic slopes in CSR edge order (len ==
+    /// `pdag.csr.edge_count()`): `g_ij` seconds of extra serialization
+    /// when the sending node freezes nothing, scaling down linearly
+    /// with the sender's freeze ratio (see the module docs). `None` ⇒
+    /// constant edge costs, bit-identical to the traffic-free rows.
+    pub edge_traffic: Option<&'a [f64]>,
     /// Optional per-stage recompute surcharge seconds (len ==
     /// `pdag.stages`, typically
     /// [`CostModel::recompute_surcharges_for`](crate::cost::CostModel::recompute_surcharges_for)):
@@ -110,6 +127,7 @@ impl<'a> FreezeLpInput<'a> {
             lambda,
             r_min: None,
             edge_costs: None,
+            edge_traffic: None,
             recompute: None,
         }
     }
@@ -123,6 +141,15 @@ impl<'a> FreezeLpInput<'a> {
     /// Charge P2P communication to DAG edges (CSR edge order).
     pub fn with_edge_costs(mut self, edge_costs: &'a [f64]) -> FreezeLpInput<'a> {
         self.edge_costs = Some(edge_costs);
+        self
+    }
+
+    /// Make edge costs load-dependent: edge `i→j` costs `e0_ij + g_ij ·
+    /// (1 − r_i)` seconds, so freezing the sender relaxes the shared
+    /// fabric terms (CSR edge order; composes with
+    /// [`FreezeLpInput::with_edge_costs`] supplying the `e0` part).
+    pub fn with_edge_traffic(mut self, edge_traffic: &'a [f64]) -> FreezeLpInput<'a> {
+        self.edge_traffic = Some(edge_traffic);
         self
     }
 
@@ -265,6 +292,14 @@ pub enum FreezeLpError {
         /// Expected length (CSR edge count).
         want: usize,
     },
+    /// The edge-traffic vector is malformed (wrong length or a negative
+    /// / non-finite entry).
+    BadEdgeTraffic {
+        /// Supplied length.
+        got: usize,
+        /// Expected length (CSR edge count).
+        want: usize,
+    },
     /// The recompute-surcharge vector is malformed (wrong length or a
     /// negative / non-finite entry).
     BadRecompute {
@@ -298,6 +333,11 @@ impl std::fmt::Display for FreezeLpError {
             FreezeLpError::BadEdgeCosts { got, want } => {
                 write!(f, "edge cost length {got} does not match CSR edge count {want}")
             }
+            FreezeLpError::BadEdgeTraffic { got, want } => write!(
+                f,
+                "edge traffic length {got} does not match CSR edge count {want} \
+                 (or an entry is negative / non-finite)"
+            ),
             FreezeLpError::BadRecompute { got, want } => write!(
                 f,
                 "recompute surcharge length {got} does not match stage count {want} \
@@ -568,17 +608,32 @@ impl Skeleton {
                 built.lp.upper[wi] = w_max[i];
             }
         }
-        // Precedence-row RHS (rows 0..E in u-major edge order).
+        // Precedence rows (rows 0..E in u-major edge order): RHS always,
+        // plus the `w_u` coefficient when a traffic slope makes the edge
+        // cost load-dependent (same expressions and branch structure as
+        // `build_problem`, so the rewrite is bit-identical to a rebuild;
+        // the simplex layer's row fingerprint notices coefficient drift
+        // and drops to the warm rung automatically).
         let mut row = 0usize;
         let mut eidx = 0usize;
         for u in 0..n {
             for _ in &pdag.dag.succs[u] {
                 let ec = input.edge_costs.map_or(0.0, |e| e[eidx]);
+                let tr = input.edge_traffic.map(|g| g[eidx]);
                 eidx += 1;
-                built.lp.rows[row].rhs = match built.w_var[u] {
-                    Some(_) => ec,
-                    None => w_max[u] + ec,
-                };
+                let r = &mut built.lp.rows[row];
+                match (built.w_var[u], tr) {
+                    (Some(_), None) => {
+                        r.coeffs[2].1 = -1.0;
+                        r.rhs = ec;
+                    }
+                    (Some(_), Some(g)) => {
+                        r.coeffs[2].1 = -(1.0 + g * built.delta[u]);
+                        r.rhs = ec + g * (1.0 - built.delta[u] * w_max[u]);
+                    }
+                    (None, None) => r.rhs = w_max[u] + ec,
+                    (None, Some(g)) => r.rhs = w_max[u] + ec + g,
+                }
                 row += 1;
             }
         }
@@ -634,11 +689,27 @@ impl Skeleton {
         let ratios: Vec<f64> = (0..n)
             .map(|i| (self.built.delta[i] * (w_max[i] - w[i])).clamp(0.0, 1.0))
             .collect();
-        let ec = input.edge_costs;
-        let start_times = self.env_w.refresh(&w, ec).to_vec();
+        let (start_times, p_d_max, p_d_min) = match input.edge_traffic {
+            None => {
+                let ec = input.edge_costs;
+                let start_times = self.env_w.refresh(&w, ec).to_vec();
+                let p_d_max = self.env_max.refresh(w_max, ec)[pdag.dest];
+                let p_d_min = self.env_min.refresh(w_min, ec)[pdag.dest];
+                (start_times, p_d_max, p_d_min)
+            }
+            Some(tr) => {
+                // Realized load-dependent edge costs per envelope:
+                // chosen ratios, no freezing (full payload), and full
+                // freezing (freezable senders drop to e0).
+                let (cw, cmax, cmin) =
+                    realized_edge_costs(input, &self.built, &ratios, w_min, w_max, tr);
+                let start_times = self.env_w.refresh(&w, Some(cw.as_slice())).to_vec();
+                let p_d_max = self.env_max.refresh(w_max, Some(cmax.as_slice()))[pdag.dest];
+                let p_d_min = self.env_min.refresh(w_min, Some(cmin.as_slice()))[pdag.dest];
+                (start_times, p_d_max, p_d_min)
+            }
+        };
         let batch_time = start_times[pdag.dest];
-        let p_d_max = self.env_max.refresh(w_max, ec)[pdag.dest];
-        let p_d_min = self.env_min.refresh(w_min, ec)[pdag.dest];
         FreezeSolution {
             ratios,
             w,
@@ -776,6 +847,12 @@ fn validate(input: &FreezeLpInput) -> Result<(), FreezeLpError> {
             return Err(FreezeLpError::BadEdgeCosts { got: ec.len(), want });
         }
     }
+    if let Some(g) = input.edge_traffic {
+        let want = pdag.csr.edge_count();
+        if g.len() != want || g.iter().any(|c| !c.is_finite() || *c < 0.0) {
+            return Err(FreezeLpError::BadEdgeTraffic { got: g.len(), want });
+        }
+    }
     Ok(())
 }
 
@@ -859,22 +936,38 @@ fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
     // [1] precedence: P_j − P_i − w_i ≥ e_ij (w_i constant when fixed).
     // Edges iterate u-major over the deduplicated adjacency — the same
     // CSR edge order `p2p_edge_costs` produces, so `eidx` indexes
-    // `input.edge_costs` directly.
+    // `input.edge_costs` / `input.edge_traffic` directly. With a traffic
+    // slope the edge cost is load-dependent, `e0 + g·(1 − r_u)`;
+    // substituting `r_u = δ_u (w_max_u − w_u)` folds it into the row as
+    // `P_j − P_i − (1 + g δ_u) w_u ≥ e0 + g (1 − δ_u w_max_u)` (the
+    // `None` branch keeps the traffic-free expressions bit-identical).
     let mut eidx = 0usize;
     for u in 0..n {
         for &v in &pdag.dag.succs[u] {
             let ec = input.edge_costs.map_or(0.0, |e| e[eidx]);
+            let tr = input.edge_traffic.map(|g| g[eidx]);
             eidx += 1;
-            match w_var[u] {
-                Some(wu) => lp.add_row(
+            match (w_var[u], tr) {
+                (Some(wu), None) => lp.add_row(
                     vec![(p_var[v], 1.0), (p_var[u], -1.0), (wu, -1.0)],
                     Cmp::Ge,
                     ec,
                 ),
-                None => lp.add_row(
+                (Some(wu), Some(g)) => lp.add_row(
+                    vec![(p_var[v], 1.0), (p_var[u], -1.0), (wu, -(1.0 + g * delta[u]))],
+                    Cmp::Ge,
+                    ec + g * (1.0 - delta[u] * w_max[u]),
+                ),
+                (None, None) => lp.add_row(
                     vec![(p_var[v], 1.0), (p_var[u], -1.0)],
                     Cmp::Ge,
                     w_max[u] + ec,
+                ),
+                // Unfreezable sender: r_u = 0, full payload always.
+                (None, Some(g)) => lp.add_row(
+                    vec![(p_var[v], 1.0), (p_var[u], -1.0)],
+                    Cmp::Ge,
+                    w_max[u] + ec + g,
                 ),
             }
         }
@@ -898,6 +991,39 @@ fn build_problem(input: &FreezeLpInput) -> Result<BuiltLp, FreezeLpError> {
     }
 
     Ok(BuiltLp { lp, w_var, delta, w_min_eff, w_max_eff })
+}
+
+/// Realized per-edge costs under load-dependent traffic, one vector per
+/// envelope (u-major CSR edge order, matching the precedence rows):
+/// `e0 + g·(1 − r_u)` for the chosen ratios, `e0 + g` for the
+/// no-freezing envelope, and `e0 + g·(1 − r_full_u)` for full freezing
+/// (freezable senders drop to `e0`; unfreezable senders keep `e0 + g`).
+fn realized_edge_costs(
+    input: &FreezeLpInput,
+    built: &BuiltLp,
+    ratios: &[f64],
+    w_min: &[f64],
+    w_max: &[f64],
+    tr: &[f64],
+) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let pdag = input.pdag;
+    let count = pdag.csr.edge_count();
+    let mut cw = vec![0.0; count];
+    let mut cmax = vec![0.0; count];
+    let mut cmin = vec![0.0; count];
+    let mut eidx = 0usize;
+    for u in 0..pdag.len() {
+        for _ in &pdag.dag.succs[u] {
+            let e0 = input.edge_costs.map_or(0.0, |e| e[eidx]);
+            let g = tr[eidx];
+            let full = (built.delta[u] * (w_max[u] - w_min[u])).clamp(0.0, 1.0);
+            cw[eidx] = e0 + g * (1.0 - ratios[u]);
+            cmax[eidx] = e0 + g;
+            cmin[eidx] = e0 + g * (1.0 - full);
+            eidx += 1;
+        }
+    }
+    (cw, cmax, cmin)
 }
 
 fn extract_solution(
@@ -925,17 +1051,26 @@ fn extract_solution(
     // off the DAG's cached CSR: no clone, one scratch buffer for the
     // envelopes. With edge costs, the same sweeps charge e_ij so the
     // reported times match the precedence rows the LP optimized.
-    let sweep = |weights: &[f64], out: &mut Vec<f64>| match input.edge_costs {
+    let realized = input
+        .edge_traffic
+        .map(|tr| realized_edge_costs(input, built, &ratios, w_min, w_max, tr));
+    let sweep = |weights: &[f64], ec: Option<&[f64]>, out: &mut Vec<f64>| match ec {
         None => pdag.csr.start_times_into(weights, out),
         Some(ec) => pdag.csr.start_times_with_edges_into(weights, ec, out),
     };
+    let (ec_w, ec_max, ec_min) = match &realized {
+        None => (input.edge_costs, input.edge_costs, input.edge_costs),
+        Some((cw, cmax, cmin)) => {
+            (Some(cw.as_slice()), Some(cmax.as_slice()), Some(cmin.as_slice()))
+        }
+    };
     let mut start_times = Vec::new();
-    sweep(&w, &mut start_times);
+    sweep(&w, ec_w, &mut start_times);
     let batch_time = start_times[pdag.dest];
     let mut scratch = Vec::new();
-    sweep(w_max, &mut scratch);
+    sweep(w_max, ec_max, &mut scratch);
     let p_d_max = scratch[pdag.dest];
-    sweep(w_min, &mut scratch);
+    sweep(w_min, ec_min, &mut scratch);
     let p_d_min = scratch[pdag.dest];
 
     FreezeSolution {
@@ -1424,5 +1559,129 @@ mod tests {
         .unwrap();
         assert_eq!(same.batch_time, free.batch_time);
         assert_eq!(same.ratios, free.ratios);
+    }
+
+    #[test]
+    fn zero_edge_traffic_is_bit_identical() {
+        let (g, w_min, w_max) = setup(ScheduleKind::OneFOneB, 4, 4, 0.5);
+        let ec = g.p2p_edge_costs(|_, _| 0.4);
+        let base = solve_freeze_lp(
+            &FreezeLpInput::new(&g, &w_min, &w_max, 0.8, DEFAULT_LAMBDA).with_edge_costs(&ec),
+        )
+        .unwrap();
+        let zeros = vec![0.0; g.csr.edge_count()];
+        let same = solve_freeze_lp(
+            &FreezeLpInput::new(&g, &w_min, &w_max, 0.8, DEFAULT_LAMBDA)
+                .with_edge_costs(&ec)
+                .with_edge_traffic(&zeros),
+        )
+        .unwrap();
+        assert_eq!(same.batch_time.to_bits(), base.batch_time.to_bits());
+        assert_eq!(same.p_d_max.to_bits(), base.p_d_max.to_bits());
+        assert_eq!(same.p_d_min.to_bits(), base.p_d_min.to_bits());
+        assert_eq!(same.ratios, base.ratios);
+        assert_eq!(same.w, base.w);
+        assert_eq!(same.iterations, base.iterations);
+    }
+
+    #[test]
+    fn edge_traffic_lets_freezing_cut_comm() {
+        // Backward compute barely shrinks under freezing (range 0.1) but
+        // every cross-rank gradient edge pays a large load-dependent
+        // serialization term. A constant-cost solve must pay the full
+        // `e0 + g` on every edge; the traffic-aware solve freezes the
+        // senders and realizes far cheaper communication.
+        let (g, w_min, w_max) = setup(ScheduleKind::GPipe, 4, 4, 0.95);
+        let e0 = g.p2p_edge_costs(|_, _| 0.1);
+        let tr = g.cross_rank_edge_map(
+            |a, _| if a.kind.freezable() { 5.0 } else { 0.0 },
+            0.0,
+        );
+        let full: Vec<f64> = e0.iter().zip(&tr).map(|(a, b)| a + b).collect();
+        let naive = solve_freeze_lp(
+            &FreezeLpInput::new(&g, &w_min, &w_max, 0.6, DEFAULT_LAMBDA)
+                .with_edge_costs(&full),
+        )
+        .unwrap();
+        let aware = solve_freeze_lp(
+            &FreezeLpInput::new(&g, &w_min, &w_max, 0.6, DEFAULT_LAMBDA)
+                .with_edge_costs(&e0)
+                .with_edge_traffic(&tr),
+        )
+        .unwrap();
+        // Same no-freezing envelope (traffic at r = 0 is the full cost).
+        assert!((aware.p_d_max - naive.p_d_max).abs() < 1e-9);
+        // Freezing now cuts comm, so the optimum drops well below the
+        // constant-cost optimum (g = 5.0 ≫ the 0.1 compute range).
+        assert!(
+            aware.batch_time < naive.batch_time - 1.0,
+            "aware {} vs naive {}",
+            aware.batch_time,
+            naive.batch_time
+        );
+        // Budgets still hold.
+        for (s, set) in g.freezable_by_stage().iter().enumerate() {
+            if set.is_empty() {
+                continue;
+            }
+            let avg: f64 = set.iter().map(|&i| aware.ratios[i]).sum::<f64>() / set.len() as f64;
+            assert!(avg <= 0.6 + 1e-6, "stage {s} over budget: {avg}");
+        }
+        // The reported time matches an edge-aware sweep under the
+        // realized (ratio-scaled) edge costs.
+        let mut realized = vec![0.0; g.csr.edge_count()];
+        let mut eidx = 0usize;
+        for u in 0..g.len() {
+            for _ in &g.dag.succs[u] {
+                realized[eidx] = e0[eidx] + tr[eidx] * (1.0 - aware.ratios[u]);
+                eidx += 1;
+            }
+        }
+        assert!(
+            (aware.batch_time - g.batch_time_with_edges(&aware.w, &realized)).abs() < 1e-6,
+            "LP optimum must match the realized-cost sweep"
+        );
+    }
+
+    #[test]
+    fn edge_traffic_keeps_warm_start_valid() {
+        // Toggling the traffic term rewrites precedence-row *matrix*
+        // coefficients, which the persistent simplex must notice (row
+        // fingerprint) and still land on the cold optimum.
+        let (g, w_min, w_max) = setup(ScheduleKind::OneFOneB, 4, 8, 0.5);
+        let e0 = g.p2p_edge_costs(|_, _| 0.2);
+        let tr = g.cross_rank_edge_map(
+            |a, _| if a.kind.freezable() { 1.5 } else { 0.0 },
+            0.0,
+        );
+        let mut solver = FreezeLpSolver::new();
+        for round in 0..4 {
+            let mut input =
+                FreezeLpInput::new(&g, &w_min, &w_max, 0.7, DEFAULT_LAMBDA).with_edge_costs(&e0);
+            if round % 2 == 1 {
+                input = input.with_edge_traffic(&tr);
+            }
+            let warm = solver.solve(&input).unwrap();
+            let cold = solve_freeze_lp(&input).unwrap();
+            assert!(
+                (warm.batch_time - cold.batch_time).abs() < 1e-6,
+                "round {round}: warm {} vs cold {}",
+                warm.batch_time,
+                cold.batch_time
+            );
+            assert!(solver.has_warm_basis());
+        }
+    }
+
+    #[test]
+    fn rejects_bad_edge_traffic_vectors() {
+        let (g, w_min, w_max) = setup(ScheduleKind::GPipe, 2, 2, 0.5);
+        let short = [0.0; 3];
+        let bad = FreezeLpInput::new(&g, &w_min, &w_max, 0.5, 1e-4).with_edge_traffic(&short);
+        assert!(matches!(solve_freeze_lp(&bad), Err(FreezeLpError::BadEdgeTraffic { .. })));
+        let mut neg = vec![0.0; g.csr.edge_count()];
+        neg[0] = -1.0;
+        let bad = FreezeLpInput::new(&g, &w_min, &w_max, 0.5, 1e-4).with_edge_traffic(&neg);
+        assert!(matches!(solve_freeze_lp(&bad), Err(FreezeLpError::BadEdgeTraffic { .. })));
     }
 }

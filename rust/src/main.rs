@@ -34,6 +34,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "rank-mem", takes_value: true, help: "per-rank device memory in GB for mixed clusters, e.g. 48,48,24,48 (with --mem-budget)" },
         FlagSpec { name: "recompute", takes_value: true, help: "activation recompute policy: off|full|auto|<fraction>; auto covers memory deficits beyond r_max by re-running forwards" },
         FlagSpec { name: "scenario", takes_value: true, help: "runtime dynamics and faults, e.g. straggler:1x1.5@300,jitter:0.05 or crash:2@500 (see docs)" },
+        FlagSpec { name: "net", takes_value: true, help: "network topology: an inline spec (uniform | island:<size>x<bw>,spine:<bw>[,lat:<s>]) or a TOML file with a [network] section" },
         FlagSpec { name: "elastic", takes_value: false, help: "recover from rank faults elastically (shorthand for --recovery elastic)" },
         FlagSpec { name: "recovery", takes_value: true, help: "fault recovery strategy: elastic | restart (from-scratch baseline)" },
         FlagSpec { name: "ckpt-interval", takes_value: true, help: "microbatch checkpoint cadence for elastic recovery (0 = step boundaries only)" },
@@ -134,6 +135,20 @@ fn build_sim_config(args: &Args) -> Result<ExperimentConfig, String> {
     if let Some(spec) = args.flag("scenario") {
         cfg.scenario = Some(timelyfreeze::config::Scenario::parse(spec)?);
     }
+    if let Some(spec) = args.flag("net") {
+        // A value naming a readable file is a topology TOML; anything
+        // else parses as an inline spec.
+        cfg.net = Some(match std::fs::read_to_string(spec) {
+            Ok(text) => {
+                let doc = timelyfreeze::util::toml::TomlDoc::parse(&text)
+                    .map_err(|e| format!("parsing {spec}: {e}"))?;
+                timelyfreeze::net::Topology::from_toml(&doc)
+                    .map_err(|e| format!("in {spec}: {e}"))?
+                    .ok_or_else(|| format!("{spec} has no [network] section"))?
+            }
+            Err(_) => timelyfreeze::net::Topology::parse(spec)?,
+        });
+    }
     if args.flag_bool("elastic") {
         cfg.recovery = Some(timelyfreeze::config::RecoveryStrategy::Elastic);
     }
@@ -221,6 +236,9 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     );
     if let Some(sc) = &cfg.scenario {
         println!("  scenario        {sc}");
+    }
+    if let Some(topo) = &cfg.net {
+        println!("  network         {}", topo.label());
     }
     let thpt = if args.flag_bool("steady") { r.steady_throughput } else { r.throughput };
     println!("  throughput      {:>10.0} tokens/s", thpt);
@@ -426,7 +444,7 @@ fn cmd_lp(args: &Args) -> Result<(), String> {
     // order's DAG, exactly the one the simulator would execute.
     let world =
         sim::resolve_world(&cfg, timelyfreeze::partition::PartitionMethod::Parameter);
-    let sim::ResolvedWorld { cfg, schedule, layout, cost } = world;
+    let sim::ResolvedWorld { cfg, schedule, layout, cost, net } = world;
     let pdag = PipelineDag::from_schedule(&schedule);
     let w_min = pdag.weights(|a| cost.bounds(a).0);
     let w_max = pdag.weights(|a| cost.bounds(a).1);
@@ -445,6 +463,20 @@ fn cmd_lp(args: &Args) -> Result<(), String> {
     }
     if let Some(sur) = &surcharge {
         input = input.with_recompute(sur);
+    }
+    // Under a network fabric, price cross-rank edges exactly as the
+    // simulator's controller would: the contention-aware (e0, traffic)
+    // split for the event executor, constant expected costs otherwise.
+    let edge_comm = net.as_ref().map(|nm| {
+        let pricing = if cfg.exec == timelyfreeze::config::ExecMode::Event {
+            sim::NetLpPricing::Contended
+        } else {
+            sim::NetLpPricing::Expected
+        };
+        sim::net_edge_comm(nm, &pdag, &schedule, &cfg, pricing)
+    });
+    if let Some((e0, traffic)) = &edge_comm {
+        input = input.with_edge_costs(e0).with_edge_traffic(traffic);
     }
     let sol = lp::solve_freeze_lp(&input).map_err(|e| e.to_string())?;
     println!(

@@ -1,0 +1,363 @@
+//! Max-min fair-sharing throughput model for shared links.
+//!
+//! Concurrent transfers on a link split its bandwidth by progressive
+//! water-filling: repeatedly find the most contended finite link, give
+//! every transfer crossing it an equal share of the link's remaining
+//! capacity, fix those transfers, and subtract their share from every
+//! other link they cross. Rates are re-solved on every arrival and
+//! departure; the solution is the unique max-min fair allocation, so it
+//! does not depend on iteration order — but all iteration here is in
+//! deterministic (id, link) order anyway, keeping contended runs
+//! bit-reproducible.
+//!
+//! The discrete-event engine drives this through three calls: `begin`
+//! when a producer finishes and its payload enters the fabric,
+//! `predictions` to queue epoch-stamped completion events, and
+//! `complete` when a still-current prediction pops. Every state change
+//! bumps `epoch`, so completion events queued before the change are
+//! recognized as stale and skipped (lazy deletion).
+
+/// One in-flight transfer.
+#[derive(Debug, Clone)]
+struct Xfer {
+    /// Bytes still to move.
+    remaining: f64,
+    /// Current fair-share rate in bytes/s (always > 0 while live).
+    rate: f64,
+    /// Link ids this transfer crosses (at least one finite link).
+    path: Vec<usize>,
+    /// Caller payload (the engine stores the DAG edge id here).
+    tag: u64,
+    /// False once completed; slots are recycled through a free list.
+    live: bool,
+}
+
+/// Execution-side shared-link fabric (see the module docs).
+///
+/// Transfers whose path has no finite-capacity link are *not* admitted:
+/// [`FairShareFabric::begin`] returns `None` and the caller delivers
+/// the message after plain latency, exactly like the pre-network
+/// fixed-delay path. This is what makes infinite-capacity topologies
+/// bit-identical to fixed-delay runs.
+#[derive(Debug, Clone, Default)]
+pub struct FairShareFabric {
+    caps: Vec<f64>,
+    now: f64,
+    epoch: u64,
+    xfers: Vec<Xfer>,
+    free: Vec<usize>,
+    /// Live transfer ids in insertion order.
+    active: Vec<usize>,
+    // Water-filling scratch, kept to avoid per-event allocation.
+    rem_cap: Vec<f64>,
+    load: Vec<usize>,
+}
+
+impl FairShareFabric {
+    /// An empty fabric; call [`FairShareFabric::reset`] before use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install link capacities and drop all state. Call once per
+    /// simulated step (capacities may change under `linkcap` terms).
+    pub fn reset(&mut self, caps: &[f64]) {
+        self.caps.clear();
+        self.caps.extend_from_slice(caps);
+        self.now = 0.0;
+        self.epoch = 0;
+        self.xfers.clear();
+        self.free.clear();
+        self.active.clear();
+    }
+
+    /// True when no transfer is in flight.
+    pub fn idle(&self) -> bool {
+        self.active.is_empty()
+    }
+
+    /// The current epoch; bumped on every arrival/departure.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Admit `bytes` over `path` at time `t`. Returns the transfer id,
+    /// or `None` when the transfer is instantaneous (zero bytes, empty
+    /// path, or only infinite-capacity links) and the caller should
+    /// deliver it after plain latency.
+    pub fn begin(&mut self, t: f64, bytes: f64, path: &[usize], tag: u64) -> Option<usize> {
+        debug_assert!(bytes.is_finite() && bytes >= 0.0, "transfer of {bytes} bytes");
+        let constrained = path.iter().any(|&l| self.caps[l].is_finite());
+        if bytes <= 0.0 || !constrained {
+            return None;
+        }
+        self.advance(t);
+        let xfer = Xfer {
+            remaining: bytes,
+            rate: 0.0,
+            path: path.to_vec(),
+            tag,
+            live: true,
+        };
+        let id = match self.free.pop() {
+            Some(id) => {
+                self.xfers[id] = xfer;
+                id
+            }
+            None => {
+                self.xfers.push(xfer);
+                self.xfers.len() - 1
+            }
+        };
+        self.active.push(id);
+        self.recompute();
+        Some(id)
+    }
+
+    /// Finish transfer `id` at time `t` and return its tag. Only call
+    /// for a prediction that [`FairShareFabric::is_due`] accepts.
+    pub fn complete(&mut self, t: f64, id: usize) -> u64 {
+        self.advance(t);
+        debug_assert!(self.xfers[id].live, "completing a dead transfer");
+        self.xfers[id].live = false;
+        self.active.retain(|&a| a != id);
+        self.free.push(id);
+        let tag = self.xfers[id].tag;
+        self.recompute();
+        tag
+    }
+
+    /// Whether a queued completion event is still current.
+    pub fn is_due(&self, id: usize, epoch: u64) -> bool {
+        epoch == self.epoch && id < self.xfers.len() && self.xfers[id].live
+    }
+
+    /// Visit predicted completion times for every live transfer as
+    /// `(id, epoch, due_time)`. Call after each `begin`/`complete` to
+    /// queue fresh predictions; earlier ones are lazily skipped.
+    pub fn predictions(&self, mut f: impl FnMut(usize, u64, f64)) {
+        for &id in &self.active {
+            let x = &self.xfers[id];
+            debug_assert!(x.rate > 0.0, "live transfer with no rate");
+            let due = self.now + (x.remaining / x.rate).max(0.0);
+            f(id, self.epoch, due);
+        }
+    }
+
+    /// Sum of current rates crossing `link` (test probe for the
+    /// fair-share conservation property: never exceeds the capacity).
+    pub fn link_allocation(&self, link: usize) -> f64 {
+        self.active
+            .iter()
+            .map(|&id| &self.xfers[id])
+            .filter(|x| x.path.contains(&link))
+            .map(|x| x.rate)
+            .sum()
+    }
+
+    /// Number of links the fabric was reset with.
+    pub fn link_count(&self) -> usize {
+        self.caps.len()
+    }
+
+    /// Integrate transferred bytes up to `t`.
+    fn advance(&mut self, t: f64) {
+        debug_assert!(t >= self.now - 1e-9, "fabric time moved backwards: {t} < {}", self.now);
+        let dt = t - self.now;
+        if dt > 0.0 {
+            for &id in &self.active {
+                let x = &mut self.xfers[id];
+                x.remaining = (x.remaining - x.rate * dt).max(0.0);
+            }
+        }
+        self.now = if t > self.now { t } else { self.now };
+    }
+
+    /// Re-solve max-min fair rates for all live transfers.
+    fn recompute(&mut self) {
+        self.epoch += 1;
+        let links = self.caps.len();
+        self.rem_cap.clear();
+        self.rem_cap.extend_from_slice(&self.caps);
+        self.load.clear();
+        self.load.resize(links, 0);
+        for &id in &self.active {
+            self.xfers[id].rate = -1.0; // unfixed marker
+            for &l in &self.xfers[id].path {
+                self.load[l] += 1;
+            }
+        }
+        let mut unfixed = self.active.len();
+        while unfixed > 0 {
+            // Bottleneck link: the smallest per-transfer share among
+            // loaded finite links (ties to the smallest link id).
+            let mut best: Option<(f64, usize)> = None;
+            for l in 0..links {
+                if self.load[l] == 0 || !self.rem_cap[l].is_finite() {
+                    continue;
+                }
+                let share = self.rem_cap[l] / self.load[l] as f64;
+                if best.map_or(true, |(s, _)| share < s) {
+                    best = Some((share, l));
+                }
+            }
+            let Some((share, bneck)) = best else {
+                // Only possible if a live transfer crosses no finite
+                // link, which `begin` rejects.
+                unreachable!("unfixed transfers but no loaded finite link");
+            };
+            let share = share.max(0.0);
+            for i in 0..self.active.len() {
+                let id = self.active[i];
+                let x = &self.xfers[id];
+                if x.rate >= 0.0 || !x.path.contains(&bneck) {
+                    continue;
+                }
+                self.xfers[id].rate = share;
+                for j in 0..self.xfers[id].path.len() {
+                    let l = self.xfers[id].path[j];
+                    self.load[l] -= 1;
+                    if self.rem_cap[l].is_finite() {
+                        self.rem_cap[l] = (self.rem_cap[l] - share).max(0.0);
+                    }
+                }
+                unfixed -= 1;
+            }
+        }
+        // A link driven to exactly zero remaining capacity can hand out
+        // a zero share; keep rates positive (and predicted due times
+        // finite) with a slow trickle proportional to the payload.
+        for &id in &self.active {
+            let x = &mut self.xfers[id];
+            if x.rate <= 0.0 {
+                x.rate = (x.remaining / 1e12).max(f64::MIN_POSITIVE);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn due_of(fabric: &FairShareFabric, want: usize) -> f64 {
+        let mut due = f64::NAN;
+        fabric.predictions(|id, _, t| {
+            if id == want {
+                due = t;
+            }
+        });
+        assert!(!due.is_nan(), "transfer {want} has no prediction");
+        due
+    }
+
+    #[test]
+    fn single_transfer_gets_the_full_link() {
+        let mut f = FairShareFabric::new();
+        f.reset(&[100.0]);
+        let id = f.begin(0.0, 50.0, &[0], 7).unwrap();
+        assert_eq!(due_of(&f, id), 0.5);
+        assert_eq!(f.complete(0.5, id), 7);
+        assert!(f.idle());
+    }
+
+    #[test]
+    fn concurrent_transfers_split_the_link() {
+        let mut f = FairShareFabric::new();
+        f.reset(&[100.0]);
+        let a = f.begin(0.0, 100.0, &[0], 0).unwrap();
+        // Alone, `a` would finish at t=1. At t=0.5 a second transfer
+        // arrives; the remaining 50 bytes now move at 50 B/s.
+        let b = f.begin(0.5, 50.0, &[0], 1).unwrap();
+        assert_eq!(due_of(&f, a), 1.5);
+        assert_eq!(due_of(&f, b), 1.5);
+        assert_eq!(f.link_allocation(0), 100.0);
+        // `a` departs: `b`'s remaining bytes speed back up.
+        f.complete(1.5, a);
+        assert!(f.idle() || due_of(&f, b) >= 1.5);
+    }
+
+    #[test]
+    fn max_min_gives_the_bottleneck_flows_equal_shares() {
+        // Two links: link 0 cap 100 shared by x and y; link 1 cap 30
+        // crossed only by y. Max-min: y gets 30, x gets 70.
+        let mut f = FairShareFabric::new();
+        f.reset(&[100.0, 30.0]);
+        let x = f.begin(0.0, 700.0, &[0], 0).unwrap();
+        let y = f.begin(0.0, 300.0, &[0, 1], 1).unwrap();
+        assert_eq!(due_of(&f, x), 10.0, "x rate 70 B/s");
+        assert_eq!(due_of(&f, y), 10.0, "y rate 30 B/s");
+        assert_eq!(f.link_allocation(0), 100.0);
+        assert_eq!(f.link_allocation(1), 30.0);
+    }
+
+    #[test]
+    fn infinite_only_paths_are_not_admitted() {
+        let mut f = FairShareFabric::new();
+        f.reset(&[f64::INFINITY, 100.0]);
+        assert!(f.begin(0.0, 1e9, &[0], 0).is_none(), "infinite link only");
+        assert!(f.begin(0.0, 0.0, &[1], 0).is_none(), "zero bytes");
+        assert!(f.begin(0.0, 1.0, &[], 0).is_none(), "empty path");
+        assert!(f.begin(0.0, 1.0, &[1], 0).is_some(), "finite link admits");
+    }
+
+    #[test]
+    fn epochs_invalidate_stale_predictions() {
+        let mut f = FairShareFabric::new();
+        f.reset(&[100.0]);
+        let a = f.begin(0.0, 100.0, &[0], 0).unwrap();
+        let mut stale = Vec::new();
+        f.predictions(|id, ep, t| stale.push((id, ep, t)));
+        let _b = f.begin(0.5, 50.0, &[0], 1).unwrap();
+        for (id, ep, _) in &stale {
+            assert!(!f.is_due(*id, *ep), "pre-arrival prediction must go stale");
+        }
+        let mut fresh = Vec::new();
+        f.predictions(|id, ep, t| fresh.push((id, ep, t)));
+        assert!(fresh.iter().any(|&(id, ep, _)| id == a && f.is_due(id, ep)));
+    }
+
+    #[test]
+    fn slots_are_recycled_deterministically() {
+        let mut f = FairShareFabric::new();
+        f.reset(&[10.0]);
+        let a = f.begin(0.0, 10.0, &[0], 0).unwrap();
+        f.complete(1.0, a);
+        let b = f.begin(1.0, 10.0, &[0], 1).unwrap();
+        assert_eq!(a, b, "free list reuses the slot");
+        let mut g = FairShareFabric::new();
+        g.reset(&[10.0]);
+        let a2 = g.begin(0.0, 10.0, &[0], 0).unwrap();
+        g.complete(1.0, a2);
+        let b2 = g.begin(1.0, 10.0, &[0], 1).unwrap();
+        assert_eq!((a, b), (a2, b2), "identical drive → identical ids");
+    }
+
+    #[test]
+    fn conservation_holds_under_churn() {
+        let mut f = FairShareFabric::new();
+        let caps = [50.0, 20.0, f64::INFINITY];
+        f.reset(&caps);
+        let paths: [&[usize]; 4] = [&[0], &[0, 1], &[1, 2], &[0, 2]];
+        let mut live = Vec::new();
+        let mut t = 0.0;
+        for k in 0..16 {
+            t += 0.1;
+            if k % 3 == 2 && !live.is_empty() {
+                let id = live.remove(0);
+                // Complete early (before its predicted due) — allowed.
+                f.complete(t, id);
+            } else if let Some(id) = f.begin(t, 5.0 + k as f64, paths[k % 4], k as u64) {
+                live.push(id);
+            }
+            for (l, cap) in caps.iter().enumerate() {
+                if cap.is_finite() {
+                    assert!(
+                        f.link_allocation(l) <= cap * (1.0 + 1e-9),
+                        "link {l} over capacity at t={t}"
+                    );
+                }
+            }
+        }
+    }
+}

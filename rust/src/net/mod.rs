@@ -1,0 +1,564 @@
+//! Contention-aware network fabric: hierarchical topologies, max-min
+//! fair-sharing throughput, and the planning-side expected link costs.
+//!
+//! Three pieces live here:
+//!
+//! * [`Topology`] — the user-facing description (`--net`): either
+//!   `uniform` (today's fixed-delay edges on an infinite-capacity
+//!   fabric — the network layer is fully disengaged and runs are
+//!   bit-identical to a config with no `--net` at all), or
+//!   `hierarchical` with fast per-island links (NVLink-class) joined by
+//!   a slower spine (IB-class). Parse/Display round-trip like
+//!   [`crate::config::Scenario`]; a TOML form (`[network]`) is accepted
+//!   from `--net topo.toml` and `--config` files.
+//! * [`NetworkModel`] — the resolved planning view for a fleet of `R`
+//!   ranks: link capacities, rank→island routing, and *expected*
+//!   per-transfer costs under static fair sharing (each link's capacity
+//!   divided by the number of pipeline boundaries routed over it).
+//!   These feed [`crate::cost::CostModel`] as P2P edge costs and the
+//!   freeze LP as per-edge traffic slopes, so freezing a stage —
+//!   which shrinks its gradient payload — visibly relaxes the shared
+//!   spine terms (constraint [5]'s comm envelopes become
+//!   load-dependent).
+//! * [`FairShareFabric`] — the execution-side throughput model (dslab
+//!   `network`/`throughput-model` style): concurrent transfers on a
+//!   link split its bandwidth by progressive (max-min) water-filling,
+//!   and completion times are re-solved on every arrival/departure.
+//!   The discrete-event engine prices P2P sends through it via
+//!   epoch-versioned `NetDue` events.
+
+pub mod fabric;
+
+pub use fabric::FairShareFabric;
+
+use std::fmt;
+
+use crate::util::toml::TomlDoc;
+
+/// Spelled capacity for an infinite-bandwidth link in specs and TOML.
+const INF_SPELLING: &str = "inf";
+
+/// The topology shape behind a [`Topology`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TopologyKind {
+    /// Infinite-capacity fabric: the network layer is disengaged and
+    /// every P2P edge keeps its fixed-delay cost. Bit-identical to not
+    /// passing `--net` at all (guarded by `tests/network_contention.rs`).
+    Uniform,
+    /// Islands of `island_size` consecutive ranks joined by a spine.
+    /// Intra-island transfers cross only the island link; inter-island
+    /// transfers cross source island, spine, and destination island.
+    Hierarchical {
+        /// Ranks per island (island `i` holds ranks `i*s..(i+1)*s`).
+        island_size: usize,
+        /// Per-island link bandwidth in bytes/s (`f64::INFINITY` allowed).
+        island_bw: f64,
+        /// Spine bandwidth in bytes/s (`f64::INFINITY` allowed).
+        spine_bw: f64,
+        /// Per-message latency in seconds (paid once per transfer).
+        latency: f64,
+    },
+}
+
+/// A network topology: parseable spec, display label, and validation.
+///
+/// Specs use the same mini-language style as scenarios:
+///
+/// ```text
+/// uniform
+/// island:<size>x<bw>,spine:<bw>[,lat:<seconds>]
+/// ```
+///
+/// Bandwidths are bytes/s and accept `inf`. `Display` prints the label
+/// (the original spec for parsed topologies), so parse → Display →
+/// parse round-trips exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    label: String,
+    /// The resolved shape.
+    pub kind: TopologyKind,
+}
+
+impl Topology {
+    /// The infinite-capacity passthrough topology.
+    pub fn uniform() -> Self {
+        Topology { label: "uniform".to_string(), kind: TopologyKind::Uniform }
+    }
+
+    /// A hierarchical topology with canonical label.
+    pub fn hierarchical(island_size: usize, island_bw: f64, spine_bw: f64, latency: f64) -> Self {
+        let kind = TopologyKind::Hierarchical { island_size, island_bw, spine_bw, latency };
+        let mut t = Topology { label: String::new(), kind };
+        t.label = t.canonical_spec();
+        t
+    }
+
+    /// The topology's display label (the spec it was parsed from).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// True when the network layer is disengaged (no capacity to model).
+    pub fn is_uniform(&self) -> bool {
+        matches!(self.kind, TopologyKind::Uniform)
+    }
+
+    /// Canonical spec string (what `hierarchical()` uses as its label).
+    pub fn canonical_spec(&self) -> String {
+        match self.kind {
+            TopologyKind::Uniform => "uniform".to_string(),
+            TopologyKind::Hierarchical { island_size, island_bw, spine_bw, latency } => {
+                let mut s = format!(
+                    "island:{island_size}x{},spine:{}",
+                    fmt_bw(island_bw),
+                    fmt_bw(spine_bw)
+                );
+                if latency != 0.0 {
+                    s.push_str(&format!(",lat:{latency}"));
+                }
+                s
+            }
+        }
+    }
+
+    /// Parse a topology spec (see the type-level grammar).
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let trimmed = spec.trim();
+        if trimmed.is_empty() {
+            return Err("empty topology spec".to_string());
+        }
+        if trimmed == "uniform" {
+            let mut t = Topology::uniform();
+            t.label = trimmed.to_string();
+            return Ok(t);
+        }
+        let mut island: Option<(usize, f64)> = None;
+        let mut spine: Option<f64> = None;
+        let mut latency = 0.0;
+        for term in trimmed.split(',') {
+            let term = term.trim();
+            if term.is_empty() {
+                continue;
+            }
+            let (head, rest) = match term.split_once(':') {
+                Some((h, r)) => (h, r),
+                None => (term, ""),
+            };
+            match head {
+                "island" => {
+                    let (size_s, bw_s) = rest.split_once('x').ok_or_else(|| {
+                        format!("island term '{term}' wants island:<size>x<bandwidth>")
+                    })?;
+                    let size: usize = size_s
+                        .parse()
+                        .map_err(|_| format!("bad island size in '{term}'"))?;
+                    let bw = parse_bw(bw_s, term)?;
+                    island = Some((size, bw));
+                }
+                "spine" => spine = Some(parse_bw(rest, term)?),
+                "lat" => {
+                    latency = rest
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|x| x.is_finite() && *x >= 0.0)
+                        .ok_or_else(|| format!("bad latency in '{term}'"))?;
+                }
+                _ => {
+                    return Err(format!(
+                        "unknown topology term '{term}' (try uniform, \
+                         island:<size>x<bw>, spine:<bw>, lat:<seconds>)"
+                    ));
+                }
+            }
+        }
+        let (island_size, island_bw) =
+            island.ok_or_else(|| format!("topology '{trimmed}' is missing an island term"))?;
+        let spine_bw =
+            spine.ok_or_else(|| format!("topology '{trimmed}' is missing a spine term"))?;
+        let mut t = Topology::hierarchical(island_size, island_bw, spine_bw, latency);
+        t.label = trimmed.to_string();
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// Parse the `[network]` section of a TOML document. Returns
+    /// `Ok(None)` when the document has no such section.
+    pub fn from_toml(doc: &TomlDoc) -> Result<Option<Self>, String> {
+        let mode = match doc.get_str("network.mode") {
+            Some(m) => m,
+            None => {
+                if doc.keys_under("network").is_empty() {
+                    return Ok(None);
+                }
+                return Err("[network] section is missing mode = \"uniform\"|\"hierarchical\""
+                    .to_string());
+            }
+        };
+        match mode {
+            "uniform" => Ok(Some(Topology::uniform())),
+            "hierarchical" => {
+                let island_size = doc
+                    .get_usize("network.island_size")
+                    .ok_or("[network] hierarchical mode wants island_size = <ranks>")?;
+                let island_bw = toml_bw(doc, "network.island_bandwidth")?;
+                let spine_bw = toml_bw(doc, "network.spine_bandwidth")?;
+                let latency = doc.get_f64("network.latency").unwrap_or(0.0);
+                let t = Topology::hierarchical(island_size, island_bw, spine_bw, latency);
+                t.validate()?;
+                Ok(Some(t))
+            }
+            other => Err(format!("[network] mode '{other}' is neither uniform nor hierarchical")),
+        }
+    }
+
+    /// Emit the canonical `[network]` TOML section. `from_toml` on the
+    /// output reproduces `self` up to the label (which is canonical).
+    pub fn to_toml(&self) -> String {
+        match self.kind {
+            TopologyKind::Uniform => "[network]\nmode = \"uniform\"\n".to_string(),
+            TopologyKind::Hierarchical { island_size, island_bw, spine_bw, latency } => {
+                let mut s = String::from("[network]\nmode = \"hierarchical\"\n");
+                s.push_str(&format!("island_size = {island_size}\n"));
+                s.push_str(&format!("island_bandwidth = {}\n", fmt_bw_toml(island_bw)));
+                s.push_str(&format!("spine_bandwidth = {}\n", fmt_bw_toml(spine_bw)));
+                s.push_str(&format!("latency = {latency:?}\n"));
+                s
+            }
+        }
+    }
+
+    /// Shape checks: positive bandwidths (infinite allowed), island
+    /// size ≥ 1, finite non-negative latency.
+    pub fn validate(&self) -> Result<(), String> {
+        match self.kind {
+            TopologyKind::Uniform => Ok(()),
+            TopologyKind::Hierarchical { island_size, island_bw, spine_bw, latency } => {
+                if island_size == 0 {
+                    return Err("island size must be >= 1".to_string());
+                }
+                for (name, bw) in [("island", island_bw), ("spine", spine_bw)] {
+                    if bw.is_nan() || bw <= 0.0 {
+                        return Err(format!("{name} bandwidth must be positive (or inf)"));
+                    }
+                }
+                if !latency.is_finite() || latency < 0.0 {
+                    return Err("latency must be finite and >= 0".to_string());
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label)
+    }
+}
+
+fn fmt_bw(bw: f64) -> String {
+    if bw.is_infinite() {
+        INF_SPELLING.to_string()
+    } else {
+        format!("{bw}")
+    }
+}
+
+fn fmt_bw_toml(bw: f64) -> String {
+    if bw.is_infinite() {
+        format!("\"{INF_SPELLING}\"")
+    } else {
+        format!("{bw:?}")
+    }
+}
+
+fn parse_bw(s: &str, term: &str) -> Result<f64, String> {
+    if s == INF_SPELLING {
+        return Ok(f64::INFINITY);
+    }
+    s.parse::<f64>()
+        .ok()
+        .filter(|x| !x.is_nan() && *x > 0.0)
+        .ok_or_else(|| format!("bad bandwidth in '{term}' (want bytes/s or inf)"))
+}
+
+fn toml_bw(doc: &TomlDoc, key: &str) -> Result<f64, String> {
+    if let Some(s) = doc.get_str(key) {
+        if s == INF_SPELLING {
+            return Ok(f64::INFINITY);
+        }
+        return s
+            .parse::<f64>()
+            .ok()
+            .filter(|x| !x.is_nan() && *x > 0.0)
+            .ok_or_else(|| format!("{key} = \"{s}\" is not a bandwidth (bytes/s or \"inf\")"));
+    }
+    doc.get_f64(key)
+        .filter(|x| !x.is_nan() && *x > 0.0)
+        .ok_or_else(|| format!("[network] hierarchical mode wants {key} = <bytes/s>"))
+}
+
+/// The resolved planning view of a hierarchical topology over `ranks`
+/// ranks: one link per island plus the spine (the last link id).
+///
+/// `NetworkModel::new` returns `None` for [`TopologyKind::Uniform`] —
+/// callers treat an absent model as "network disengaged" so the uniform
+/// path stays bit-identical to pre-network builds.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    ranks: usize,
+    island_size: usize,
+    latency: f64,
+    /// Link capacities, islands first, spine last.
+    caps: Vec<f64>,
+}
+
+impl NetworkModel {
+    /// Resolve a topology for a fleet. `None` when uniform.
+    pub fn new(topo: &Topology, ranks: usize) -> Option<Self> {
+        match topo.kind {
+            TopologyKind::Uniform => None,
+            TopologyKind::Hierarchical { island_size, island_bw, spine_bw, latency } => {
+                assert!(ranks > 0, "network model over an empty fleet");
+                let islands = ranks.div_ceil(island_size);
+                let mut caps = vec![island_bw; islands];
+                caps.push(spine_bw);
+                Some(NetworkModel { ranks, island_size, latency, caps })
+            }
+        }
+    }
+
+    /// Number of links (islands + spine).
+    pub fn link_count(&self) -> usize {
+        self.caps.len()
+    }
+
+    /// Link capacities in bytes/s, islands first, spine last.
+    pub fn caps(&self) -> &[f64] {
+        &self.caps
+    }
+
+    /// Per-message latency in seconds.
+    pub fn latency(&self) -> f64 {
+        self.latency
+    }
+
+    /// The spine's link id.
+    pub fn spine(&self) -> usize {
+        self.caps.len() - 1
+    }
+
+    /// Which island hosts a rank.
+    pub fn island_of(&self, rank: usize) -> usize {
+        assert!(rank < self.ranks, "rank {rank} outside fleet of {}", self.ranks);
+        rank / self.island_size
+    }
+
+    /// The links a transfer from `a` to `b` crosses, in route order.
+    /// Empty for `a == b` (no network hop). Same-island transfers cross
+    /// only the island link; inter-island transfers cross source
+    /// island, spine, destination island.
+    pub fn path(&self, a: usize, b: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(3);
+        self.path_into(a, b, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`NetworkModel::path`].
+    pub fn path_into(&self, a: usize, b: usize, out: &mut Vec<usize>) {
+        out.clear();
+        if a == b {
+            return;
+        }
+        let (ia, ib) = (self.island_of(a), self.island_of(b));
+        if ia == ib {
+            out.push(ia);
+        } else {
+            out.push(ia);
+            out.push(self.spine());
+            out.push(ib);
+        }
+    }
+
+    /// Per-link load: how many of the given rank pairs route over each
+    /// link, floored at 1 so dividing by it never inflates bandwidth.
+    pub fn link_loads(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        let mut count = vec![0usize; self.link_count()];
+        let mut path = Vec::with_capacity(3);
+        for &(a, b) in pairs {
+            self.path_into(a, b, &mut path);
+            for &l in &path {
+                count[l] += 1;
+            }
+        }
+        count.iter().map(|&c| c.max(1) as f64).collect()
+    }
+
+    /// Serialization seconds for `bytes` from `a` to `b` on a dedicated
+    /// (contention-free) fabric: latency + bytes over the path's
+    /// bottleneck capacity. Zero when `a == b`.
+    pub fn dedicated_seconds(&self, bytes: f64, a: usize, b: usize) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        let mut path = Vec::with_capacity(3);
+        self.path_into(a, b, &mut path);
+        self.latency + bytes / bottleneck(&self.caps, &path, None)
+    }
+
+    /// Expected serialization seconds under static fair sharing: each
+    /// link's capacity is split across `loads` concurrent boundary
+    /// flows (from [`NetworkModel::link_loads`]). Zero when `a == b`.
+    pub fn expected_seconds(&self, bytes: f64, a: usize, b: usize, loads: &[f64]) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        let mut path = Vec::with_capacity(3);
+        self.path_into(a, b, &mut path);
+        self.latency + bytes / bottleneck(&self.caps, &path, Some(loads))
+    }
+}
+
+/// Bottleneck effective bandwidth over `path`: min of `cap/load`.
+/// Returns infinity when every link on the path is infinite.
+fn bottleneck(caps: &[f64], path: &[usize], loads: Option<&[f64]>) -> f64 {
+    let mut bw = f64::INFINITY;
+    for &l in path {
+        let eff = match loads {
+            Some(ld) => caps[l] / ld[l],
+            None => caps[l],
+        };
+        if eff < bw {
+            bw = eff;
+        }
+    }
+    bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_round_trips_and_resolves_to_none() {
+        let t = Topology::parse("uniform").unwrap();
+        assert!(t.is_uniform());
+        assert_eq!(t.to_string(), "uniform");
+        assert_eq!(Topology::parse(&t.to_string()).unwrap(), t);
+        assert!(NetworkModel::new(&t, 8).is_none());
+    }
+
+    #[test]
+    fn hierarchical_specs_round_trip() {
+        for spec in [
+            "island:4x600000000000,spine:100000000000",
+            "island:2x1e12,spine:5e10,lat:0.000002",
+            "island:1xinf,spine:16000000000",
+            "island:8xinf,spine:inf",
+        ] {
+            let t = Topology::parse(spec).unwrap();
+            assert_eq!(t.to_string(), spec, "label preserves the original spec");
+            let again = Topology::parse(&t.to_string()).unwrap();
+            assert_eq!(again, t, "parse(Display) round-trips for {spec}");
+            // The canonical spec also round-trips (modulo label).
+            let canon = Topology::parse(&t.canonical_spec()).unwrap();
+            assert_eq!(canon.kind, t.kind, "canonical spec keeps the shape for {spec}");
+        }
+    }
+
+    #[test]
+    fn toml_round_trips() {
+        for t in [
+            Topology::uniform(),
+            Topology::hierarchical(4, 6.0e11, 1.0e11, 2.0e-6),
+            Topology::hierarchical(2, f64::INFINITY, 1.6e10, 0.0),
+            Topology::hierarchical(8, 1.25e11, f64::INFINITY, 0.0),
+        ] {
+            let toml = t.to_toml();
+            let doc = TomlDoc::parse(&toml).unwrap();
+            let back = Topology::from_toml(&doc).unwrap().unwrap();
+            assert_eq!(back.kind, t.kind, "TOML round-trip keeps the shape:\n{toml}");
+        }
+    }
+
+    #[test]
+    fn from_toml_is_none_without_a_network_section() {
+        let doc = TomlDoc::parse("[experiment]\nranks = 4\n").unwrap();
+        assert!(Topology::from_toml(&doc).unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_specs_name_the_offence() {
+        for (spec, needle) in [
+            ("", "empty"),
+            ("island:4", "island:<size>x<bandwidth>"),
+            ("island:ax1e9,spine:1e9", "island size"),
+            ("island:4x-3,spine:1e9", "bandwidth"),
+            ("island:4xnan,spine:1e9", "bandwidth"),
+            ("island:4x1e9", "missing a spine"),
+            ("spine:1e9", "missing an island"),
+            ("island:4x1e9,spine:1e9,lat:-1", "latency"),
+            ("island:0x1e9,spine:1e9", "island size must be >= 1"),
+            ("mesh:4", "unknown topology term"),
+        ] {
+            let err = Topology::parse(spec).unwrap_err();
+            assert!(err.contains(needle), "error for '{spec}' should mention '{needle}': {err}");
+        }
+    }
+
+    #[test]
+    fn malformed_toml_names_the_offence() {
+        for (toml, needle) in [
+            ("[network]\nisland_size = 4\n", "mode"),
+            ("[network]\nmode = \"ring\"\n", "neither uniform nor hierarchical"),
+            ("[network]\nmode = \"hierarchical\"\n", "island_size"),
+            (
+                "[network]\nmode = \"hierarchical\"\nisland_size = 4\nisland_bandwidth = \"fast\"\nspine_bandwidth = 1e9\n",
+                "not a bandwidth",
+            ),
+        ] {
+            let doc = TomlDoc::parse(toml).unwrap();
+            let err = Topology::from_toml(&doc).unwrap_err();
+            assert!(err.contains(needle), "error for {toml:?} should mention '{needle}': {err}");
+        }
+    }
+
+    #[test]
+    fn paths_follow_the_island_spine_island_route() {
+        let t = Topology::hierarchical(2, 6.0e11, 1.0e11, 0.0);
+        let nm = NetworkModel::new(&t, 6).unwrap();
+        assert_eq!(nm.link_count(), 4, "three islands + spine");
+        assert_eq!(nm.spine(), 3);
+        assert_eq!(nm.path(0, 0), Vec::<usize>::new());
+        assert_eq!(nm.path(0, 1), vec![0], "same island: island link only");
+        assert_eq!(nm.path(1, 2), vec![0, 3, 1], "cross island: src, spine, dst");
+        assert_eq!(nm.path(5, 0), vec![2, 3, 0]);
+    }
+
+    #[test]
+    fn expected_costs_divide_capacity_by_load() {
+        let t = Topology::hierarchical(2, f64::INFINITY, 100.0, 0.5);
+        let nm = NetworkModel::new(&t, 4).unwrap();
+        // Boundaries 0-1 (same island), 1-2 (spine), plus a second
+        // spine crosser to double the load.
+        let pairs = [(0, 1), (1, 2), (3, 0)];
+        let loads = nm.link_loads(&pairs);
+        assert_eq!(loads[nm.spine()], 2.0);
+        // Dedicated: 0.5 + 100/100 = 1.5; expected halves the spine.
+        assert_eq!(nm.dedicated_seconds(100.0, 1, 2), 1.5);
+        assert_eq!(nm.expected_seconds(100.0, 1, 2, &loads), 2.5);
+        // Same-island path over infinite links: latency only.
+        assert_eq!(nm.expected_seconds(100.0, 0, 1, &loads), 0.5);
+        // Same rank: free.
+        assert_eq!(nm.expected_seconds(100.0, 2, 2, &loads), 0.0);
+    }
+
+    #[test]
+    fn infinite_capacity_is_latency_only() {
+        let t = Topology::hierarchical(2, f64::INFINITY, f64::INFINITY, 0.25);
+        let nm = NetworkModel::new(&t, 4).unwrap();
+        let loads = nm.link_loads(&[(1, 2)]);
+        assert_eq!(nm.dedicated_seconds(1e12, 1, 2), 0.25);
+        assert_eq!(nm.expected_seconds(1e12, 1, 2, &loads), 0.25);
+    }
+}

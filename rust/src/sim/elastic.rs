@@ -113,7 +113,7 @@ impl World {
         // initial build did (deterministic: the rebuilt world replays
         // bit-identically on a fixed seed). Fixed kinds take the
         // verbatim pre-synthesis construction path.
-        let runner::ResolvedWorld { cfg: sub, schedule, layout, mut cost } =
+        let runner::ResolvedWorld { cfg: sub, schedule, layout, mut cost, net } =
             runner::resolve_world(&sub, partition);
         let pdag = PipelineDag::from_schedule(&schedule);
         // Memory floors against the *surviving* devices: heterogeneous
@@ -136,6 +136,18 @@ impl World {
         if let Some(rho) = &plan.recompute {
             cost = cost.with_recompute_fractions(rho);
         }
+        let base_delays: Option<Vec<f64>> = cost
+            .has_p2p()
+            .then(|| pdag.p2p_edge_costs(|a, b| cost.p2p(a, b)));
+        // Under a `--net` topology the survivor world's boundary costs
+        // are the *rebuilt* fabric's expected link times (resolve_world
+        // re-derived the network model over `fleet.len()` ranks). The
+        // fault path executes with those constant expected delays — no
+        // live fabric here — so the LP prices edges as constants too.
+        let edge_comm = match (&net, &base_delays) {
+            (Some(_), Some(d)) => Some((d.clone(), vec![0.0; d.len()])),
+            _ => None,
+        };
         let factory = ControllerFactory {
             phases: sub.phases,
             r_max: sub.r_max,
@@ -143,6 +155,7 @@ impl World {
             apf: sub.apf.clone(),
             auto: sub.auto.clone(),
             stage_floor: plan.floor.clone(),
+            edge_comm,
         };
         let controller = factory.build(sub.method, &schedule, &layout);
         let engine = EventEngine::new(&pdag, &schedule);
@@ -153,9 +166,6 @@ impl World {
             .into_iter()
             .filter(|a| a.kind.freezable())
             .collect();
-        let base_delays: Option<Vec<f64>> = cost
-            .has_p2p()
-            .then(|| pdag.p2p_edge_costs(|a, b| cost.p2p(a, b)));
         let edge_boundary = runner::edge_boundaries(&pdag);
         let delays_scratch = base_delays.clone().unwrap_or_default();
         let zero_delays = vec![0.0f64; pdag.dag.edge_count()];
@@ -365,6 +375,16 @@ pub fn run_faulted(
         .ok_or_else(|| SimError::InvalidScenario("fault run needs a scenario".to_string()))?;
     sc.validate(cfg.ranks, cfg.stages())
         .map_err(SimError::InvalidScenario)?;
+    // The fault path executes with constant expected link costs (no live
+    // fair-sharing fabric), so capacity scalings have nothing to act on.
+    if sc.has_linkcaps() {
+        return Err(SimError::InvalidScenario(format!(
+            "scenario '{sc}' combines linkcap terms with rank faults; the \
+             fault-recovery path prices links by expected cost and has no \
+             fabric capacities to scale — model link pressure with \
+             link:<boundary>x<factor> instead"
+        )));
+    }
     let elastic = strategy == RecoveryStrategy::Elastic;
 
     // Fault timeline, onset-ordered (stable: equal onsets keep spec

@@ -68,6 +68,7 @@ pub use queue::EventQueue;
 
 use crate::graph::dag::{Csr, Frontier};
 use crate::graph::pipeline::PipelineDag;
+use crate::net::FairShareFabric;
 use crate::schedule::Schedule;
 
 /// Events of one batch execution.
@@ -84,9 +85,24 @@ enum Event {
         /// Completing node id.
         node: usize,
     },
+    /// A fabric transfer's predicted completion (only queued by
+    /// [`EventEngine::execute_contended`]). Stale once the fabric's
+    /// epoch moves past `epoch` — checked on pop, skipped if so.
+    NetDue {
+        /// Fabric transfer id.
+        xfer: usize,
+        /// Fabric epoch the prediction was made under.
+        epoch: u64,
+    },
     /// The victim rank dies (only queued by
     /// [`EventEngine::execute_with_fault`]).
     Fault,
+}
+
+/// Queue one epoch-stamped completion event per live fabric transfer
+/// (free function so the queue and the fabric borrow independently).
+fn queue_net_predictions(queue: &mut EventQueue<Event>, fabric: &FairShareFabric) {
+    fabric.predictions(|id, ep, due| queue.push(due, Event::NetDue { xfer: id, epoch: ep }));
 }
 
 /// Outcome of [`EventEngine::execute_with_fault`]: which nodes beat the
@@ -241,7 +257,9 @@ impl EventEngine {
                         self.node_ready(to, self.ready_at[to], weights);
                     }
                 }
-                Event::Fault => unreachable!("fault event on the normal path"),
+                Event::Fault | Event::NetDue { .. } => {
+                    unreachable!("fault/net event on the normal path")
+                }
             }
         }
         assert_eq!(
@@ -326,11 +344,117 @@ impl EventEngine {
                         self.node_ready(to, self.ready_at[to], weights);
                     }
                 }
+                Event::NetDue { .. } => unreachable!("net event on the fault path"),
             }
         }
         let cancelled = n - self.executed;
         self.dead_rank = None;
         FaultOutcome { fault_time, drain_time, completed, cancelled }
+    }
+
+    /// Execute one batch with cross-rank payloads serialized through a
+    /// shared-link fabric. Per CSR edge `e`:
+    ///
+    /// * `edge_delays[e]` is the **fixed latency** of the edge (zero for
+    ///   same-rank edges);
+    /// * `edge_bytes[e]` is the payload size handed to the fabric;
+    /// * `edge_paths[e]` lists the fabric link ids the payload crosses
+    ///   (empty for same-rank edges).
+    ///
+    /// When the fabric declines a transfer (zero bytes, empty path, or
+    /// infinite-capacity links only) the arrival is queued at
+    /// `finish + edge_delays[e]` — exactly the [`EventEngine::execute`]
+    /// path, which is what keeps infinite-capacity topologies
+    /// bit-identical to fixed-delay runs. Admitted transfers complete
+    /// when the fabric's max-min fair schedule says so (re-solved on
+    /// every arrival/departure via epoch-stamped predictions), and the
+    /// arrival is queued at `completion + edge_delays[e]`.
+    ///
+    /// `fabric` must be freshly [`reset`](FairShareFabric::reset) with
+    /// the topology's (possibly scenario-scaled) link capacities.
+    pub fn execute_contended(
+        &mut self,
+        weights: &[f64],
+        edge_delays: &[f64],
+        edge_bytes: &[f64],
+        edge_paths: &[Vec<usize>],
+        fabric: &mut FairShareFabric,
+    ) -> f64 {
+        let n = self.csr.len();
+        assert_eq!(weights.len(), n, "one weight per node");
+        let ne = self.csr.edge_count();
+        assert_eq!(edge_delays.len(), ne, "one delay per CSR edge");
+        assert_eq!(edge_bytes.len(), ne, "one payload size per CSR edge");
+        assert_eq!(edge_paths.len(), ne, "one link path per CSR edge");
+        assert!(fabric.idle(), "fabric must be reset before a contended run");
+        self.reset_run_state(n);
+
+        let sources: Vec<usize> = self.frontier.sources().collect();
+        for v in sources {
+            self.node_ready(v, 0.0, weights);
+        }
+
+        while let Some((t, ev)) = self.queue.pop() {
+            match ev {
+                Event::Finish { node } => {
+                    self.executed += 1;
+                    if let Some(rank) = self.owner[node] {
+                        let r = &mut self.ranks[rank];
+                        debug_assert_eq!(
+                            r.order[r.cursor], node,
+                            "out-of-order finish on rank {rank}"
+                        );
+                        r.cursor += 1;
+                        r.idle = true;
+                        r.free_at = t;
+                    }
+                    let mut entered = false;
+                    for e in self.csr.edge_range(node) {
+                        let v = self.csr.edge_dst(e);
+                        match fabric.begin(t, edge_bytes[e], &edge_paths[e], e as u64) {
+                            // Declined: plain fixed-latency delivery.
+                            None => self.queue.push(t + edge_delays[e], Event::Arrive { to: v }),
+                            Some(_) => entered = true,
+                        }
+                    }
+                    if entered {
+                        // One prediction pass after all of this node's
+                        // payloads are in (each begin re-solves rates,
+                        // staling anything queued mid-loop).
+                        queue_net_predictions(&mut self.queue, fabric);
+                    }
+                    if let Some(rank) = self.owner[node] {
+                        self.try_dispatch(rank, weights);
+                    }
+                }
+                Event::NetDue { xfer, epoch } => {
+                    if !fabric.is_due(xfer, epoch) {
+                        continue; // stale prediction — lazily deleted
+                    }
+                    let e = fabric.complete(t, xfer) as usize;
+                    let v = self.csr.edge_dst(e);
+                    self.queue.push(t + edge_delays[e], Event::Arrive { to: v });
+                    // Departure sped up the remaining transfers.
+                    queue_net_predictions(&mut self.queue, fabric);
+                }
+                Event::Arrive { to } => {
+                    if t > self.ready_at[to] {
+                        self.ready_at[to] = t;
+                    }
+                    if self.frontier.satisfy(to) {
+                        self.node_ready(to, self.ready_at[to], weights);
+                    }
+                }
+                Event::Fault => unreachable!("fault event on the contended path"),
+            }
+        }
+        assert_eq!(
+            self.executed, n,
+            "batch deadlocked: {} of {n} nodes executed",
+            self.executed
+        );
+        debug_assert!(fabric.idle(), "transfers left in flight past the sink");
+        self.starts[self.dest]
     }
 
     /// Reset all per-run buffers ahead of an execution.
@@ -498,6 +622,75 @@ mod tests {
         assert_eq!(2.0 * t1, t2);
         let t1_again = engine.execute(&w1, &zeros);
         assert_eq!(t1.to_bits(), t1_again.to_bits());
+    }
+
+    #[test]
+    fn contended_run_with_no_finite_link_is_bit_identical_to_execute() {
+        // An infinite-capacity fabric declines every transfer, so the
+        // contended loop must reproduce the plain fixed-delay execution
+        // bit for bit — the uniform-topology equivalence contract.
+        for kind in ScheduleKind::all() {
+            let (pdag, mut engine) = engine_for(kind, 4, 6);
+            let w = pdag.weights(|_| 1.0);
+            let delays = pdag.p2p_edge_costs(|a, b| 0.1 * (1 + a.min(b)) as f64);
+            let bytes: Vec<f64> = delays.iter().map(|&d| if d > 0.0 { 1e6 } else { 0.0 }).collect();
+            let paths: Vec<Vec<usize>> =
+                delays.iter().map(|&d| if d > 0.0 { vec![0] } else { Vec::new() }).collect();
+            let plain = engine.execute(&w, &delays);
+            let plain_starts = engine.starts().to_vec();
+            let mut fabric = FairShareFabric::new();
+            fabric.reset(&[f64::INFINITY]);
+            let net = engine.execute_contended(&w, &delays, &bytes, &paths, &mut fabric);
+            assert_eq!(net.to_bits(), plain.to_bits(), "{}", kind.name());
+            assert_eq!(engine.starts(), &plain_starts[..], "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn shared_link_contention_is_no_faster_than_dedicated_and_deterministic() {
+        let (pdag, mut engine) = engine_for(ScheduleKind::GPipe, 4, 8);
+        let w = pdag.weights(|_| 1.0);
+        // Every adjacent cross-rank edge pushes 100 B over one shared
+        // 100 B/s link: a dedicated link would serialize each payload in
+        // exactly 1 s, so the fair-shared makespan can only be ≥ that.
+        let mask = pdag.p2p_edge_costs(|_, _| 1.0);
+        let bytes: Vec<f64> = mask.iter().map(|&m| 100.0 * m).collect();
+        let paths: Vec<Vec<usize>> =
+            mask.iter().map(|&m| if m > 0.0 { vec![0] } else { Vec::new() }).collect();
+        let zeros = vec![0.0; pdag.dag.edge_count()];
+        let dedicated = engine.execute(&w, &mask);
+        let mut fabric = FairShareFabric::new();
+        fabric.reset(&[100.0]);
+        let contended = engine.execute_contended(&w, &zeros, &bytes, &paths, &mut fabric);
+        assert!(
+            contended >= dedicated - 1e-9,
+            "sharing cannot beat dedicated links: {contended} < {dedicated}"
+        );
+        // And well above the communication-free makespan.
+        assert!(contended > engine.execute(&w, &zeros) + 1.0);
+        // Bit-identical replay (fabric is drained, reset restores t=0).
+        fabric.reset(&[100.0]);
+        let again = engine.execute_contended(&w, &zeros, &bytes, &paths, &mut fabric);
+        assert_eq!(again.to_bits(), contended.to_bits());
+    }
+
+    #[test]
+    fn raising_the_shared_capacity_never_slows_the_batch() {
+        let (pdag, mut engine) = engine_for(ScheduleKind::OneFOneB, 4, 6);
+        let w = pdag.weights(|_| 1.0);
+        let mask = pdag.p2p_edge_costs(|_, _| 1.0);
+        let bytes: Vec<f64> = mask.iter().map(|&m| 50.0 * m).collect();
+        let paths: Vec<Vec<usize>> =
+            mask.iter().map(|&m| if m > 0.0 { vec![0] } else { Vec::new() }).collect();
+        let zeros = vec![0.0; pdag.dag.edge_count()];
+        let mut fabric = FairShareFabric::new();
+        let mut prev = f64::INFINITY;
+        for cap in [25.0, 50.0, 100.0, 400.0] {
+            fabric.reset(&[cap]);
+            let t = engine.execute_contended(&w, &zeros, &bytes, &paths, &mut fabric);
+            assert!(t <= prev + 1e-9, "cap {cap} slowed the batch: {t} > {prev}");
+            prev = t;
+        }
     }
 
     #[test]

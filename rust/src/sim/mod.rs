@@ -18,6 +18,7 @@ pub use convergence::{layer_curvature, progress_to_accuracy, ConvergenceSim};
 pub use elastic::run_faulted;
 pub use engine::EventEngine;
 pub use runner::{
-    build_layout, resolve_world, run, run_with_partition, shadow_memo_stats, BackwardSample,
-    GanttBlock, ResolvedWorld, SimError, SimResult, TrajPoint, SHADOW_MEMO_CAP,
+    build_layout, net_edge_comm, resolve_world, run, run_with_partition, shadow_memo_stats,
+    BackwardSample, GanttBlock, NetLpPricing, ResolvedWorld, SimError, SimResult, TrajPoint,
+    SHADOW_MEMO_CAP,
 };

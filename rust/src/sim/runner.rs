@@ -30,8 +30,9 @@
 
 use crate::config::{ExecMode, ExperimentConfig, Scenario};
 use crate::cost::{memory_plan_for, peak_inflight, CostModel, ProfileRecorder};
-use crate::freeze::{select_frozen_units_into, ControllerFactory, ModelLayout};
+use crate::freeze::{select_frozen_units_into, ControllerFactory, FreezePlan, ModelLayout};
 use crate::graph::pipeline::{BatchEvaluator, Node, PipelineDag};
+use crate::net::{FairShareFabric, NetworkModel};
 use crate::partition::{LayerProfile, PartitionMethod};
 use crate::schedule::Schedule;
 use crate::sim::convergence::{progress_to_accuracy, ConvergenceSim};
@@ -283,8 +284,14 @@ pub struct ResolvedWorld {
     pub schedule: Schedule,
     /// Model layout partitioned over `schedule.stages` virtual stages.
     pub layout: ModelLayout,
-    /// Cost model at `schedule.stages` stages.
+    /// Cost model at `schedule.stages` stages. When a hierarchical
+    /// `--net` topology is configured, its boundary P2P costs are the
+    /// load-aware expected link times ([`CostModel::with_network_comm`]).
     pub cost: CostModel,
+    /// Resolved network model of the configured topology; `None` when no
+    /// `--net` is set or the topology is `uniform` (the pre-network
+    /// fixed-delay path, kept bit-identical).
+    pub net: Option<NetworkModel>,
 }
 
 /// Resolve a config to its executed world (see [`ResolvedWorld`]).
@@ -312,7 +319,8 @@ pub fn resolve_world(cfg: &ExperimentConfig, partition: PartitionMethod) -> Reso
             cfg.microbatch_size,
             cfg.seq_len,
         );
-        return ResolvedWorld { cfg: cfg.clone(), schedule, layout, cost };
+        let (cost, net) = apply_network(cfg, &schedule, cost);
+        return ResolvedWorld { cfg: cfg.clone(), schedule, layout, cost, net };
     }
     let flat_layout = build_layout_for_stages(cfg, partition, cfg.ranks);
     let flat_cost = CostModel::new(
@@ -351,7 +359,207 @@ pub fn resolve_world(cfg: &ExperimentConfig, partition: PartitionMethod) -> Reso
     } else {
         (chunked_layout, chunked_cost)
     };
-    ResolvedWorld { cfg: rcfg, schedule, layout, cost }
+    // The synthesizer's portfolio scores candidates on the node-charged
+    // cost models; the winner is then re-priced for the fabric. (Network
+    // pressure does not feed back into shape selection — a documented
+    // approximation.)
+    let (cost, net) = apply_network(&rcfg, &schedule, cost);
+    ResolvedWorld { cfg: rcfg, schedule, layout, cost, net }
+}
+
+/// Apply the configured `--net` topology to a resolved (schedule, cost)
+/// pair: every stage-boundary P2P cost becomes the load-aware expected
+/// link time of the message between the hosting ranks
+/// ([`NetworkModel::expected_seconds`] over the boundary traffic
+/// pattern), node-charged communication moves onto the edges
+/// ([`CostModel::with_network_comm`]), and the resolved model is
+/// returned for the contended executor. No topology — or a `uniform`
+/// one — returns the cost model untouched, which is the bit-identity
+/// contract with pre-network builds.
+pub(crate) fn apply_network(
+    cfg: &ExperimentConfig,
+    schedule: &Schedule,
+    cost: CostModel,
+) -> (CostModel, Option<NetworkModel>) {
+    let Some(nm) = cfg.net.as_ref().and_then(|t| NetworkModel::new(t, schedule.ranks)) else {
+        return (cost, None);
+    };
+    let bytes = cfg.model.boundary_bytes(cfg.microbatch_size, cfg.seq_len);
+    let ros = &schedule.rank_of_stage;
+    let loads = nm.link_loads(&boundary_rank_pairs(schedule));
+    let p2p: Vec<f64> = (0..schedule.stages.saturating_sub(1))
+        .map(|b| nm.expected_seconds(bytes, ros[b], ros[b + 1], &loads))
+        .collect();
+    (cost.with_network_comm(p2p), Some(nm))
+}
+
+/// The rank pairs of every rank-crossing stage boundary — the boundary
+/// traffic pattern whose per-link crossing counts
+/// ([`NetworkModel::link_loads`]) drive expected link times. Same-rank
+/// boundaries (a chunked schedule's V turn) carry no network traffic
+/// and are excluded.
+fn boundary_rank_pairs(schedule: &Schedule) -> Vec<(usize, usize)> {
+    let ros = &schedule.rank_of_stage;
+    (0..schedule.stages.saturating_sub(1))
+        .filter(|&b| ros[b] != ros[b + 1])
+        .map(|b| (ros[b], ros[b + 1]))
+        .collect()
+}
+
+/// How [`net_edge_comm`] prices cross-rank edges for the freeze LP.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetLpPricing {
+    /// Event executor under the fabric: freezable senders split into a
+    /// fixed latency floor plus the serialization share freezing can
+    /// shrink — the contention-aware plan.
+    Contended,
+    /// Analytic executor: constant load-aware expected cost per edge
+    /// (execution charges it regardless of freezing).
+    Expected,
+    /// Contention-blind baseline: constant dedicated-link cost, as if
+    /// every transfer had the fabric to itself — the strawman
+    /// `benches/fig18_contention.rs` re-evaluates under contention.
+    Dedicated,
+}
+
+/// The LP's per-CSR-edge communication split under a network model:
+/// `(e0, traffic)`, where a cross-rank edge costs `e0 + traffic·(1 −
+/// r_sender)` seconds in the LP's precedence rows (see
+/// [`FreezeLpInput::with_edge_traffic`](crate::lp::FreezeLpInput::with_edge_traffic)).
+/// Only [`NetLpPricing::Contended`] produces nonzero traffic terms;
+/// the other pricings are constant-cost.
+pub fn net_edge_comm(
+    nm: &NetworkModel,
+    pdag: &PipelineDag,
+    schedule: &Schedule,
+    cfg: &ExperimentConfig,
+    pricing: NetLpPricing,
+) -> (Vec<f64>, Vec<f64>) {
+    let bytes = cfg.model.boundary_bytes(cfg.microbatch_size, cfg.seq_len);
+    let ros = &schedule.rank_of_stage;
+    let loads = nm.link_loads(&boundary_rank_pairs(schedule));
+    let split = pdag.cross_rank_edge_map(
+        |a, b| {
+            let (ra, rb) = (ros[a.stage], ros[b.stage]);
+            match pricing {
+                NetLpPricing::Dedicated => (nm.dedicated_seconds(bytes, ra, rb), 0.0),
+                NetLpPricing::Expected => (nm.expected_seconds(bytes, ra, rb, &loads), 0.0),
+                NetLpPricing::Contended => {
+                    let e = nm.expected_seconds(bytes, ra, rb, &loads);
+                    if a.kind.freezable() {
+                        (nm.latency(), (e - nm.latency()).max(0.0))
+                    } else {
+                        (e, 0.0)
+                    }
+                }
+            }
+        },
+        (0.0, 0.0),
+    );
+    split.into_iter().unzip()
+}
+
+/// Per-run state of the contended executor (event mode under a
+/// hierarchical `--net` topology): per-CSR-edge routing, payloads and
+/// latencies, the fair-sharing fabric, and reusable per-step scratch.
+struct NetState {
+    nm: NetworkModel,
+    /// Per-edge fixed message latency (cross-rank edges; 0 elsewhere).
+    lat0: Vec<f64>,
+    /// Per-edge unfrozen payload bytes (cross-rank edges; 0 elsewhere).
+    bytes0: Vec<f64>,
+    /// Per-edge link route; empty for off-fabric edges, which the engine
+    /// delivers at the fixed latency alone.
+    paths: Vec<Vec<usize>>,
+    /// Freezable sender of each edge — its plan ratio shrinks the
+    /// gradient payload that step.
+    senders: Vec<Option<Action>>,
+    fabric: FairShareFabric,
+    /// Per-step scratch: scenario-scaled link capacities.
+    caps: Vec<f64>,
+    /// Per-step scratch: freeze-shrunk payloads.
+    bytes: Vec<f64>,
+    /// Per-step scratch: scenario-scaled latencies.
+    lat: Vec<f64>,
+    route: Vec<usize>,
+}
+
+impl NetState {
+    fn build(
+        nm: NetworkModel,
+        pdag: &PipelineDag,
+        schedule: &Schedule,
+        cfg: &ExperimentConfig,
+    ) -> NetState {
+        let payload = cfg.model.boundary_bytes(cfg.microbatch_size, cfg.seq_len);
+        let ros = &schedule.rank_of_stage;
+        let lat0 = pdag.cross_rank_edge_map(|_, _| nm.latency(), 0.0);
+        let bytes0 = pdag.cross_rank_edge_map(|_, _| payload, 0.0);
+        let paths =
+            pdag.cross_rank_edge_map(|a, b| nm.path(ros[a.stage], ros[b.stage]), Vec::new());
+        let senders = pdag.cross_rank_edge_map(|a, _| a.kind.freezable().then_some(a), None);
+        let caps = nm.caps().to_vec();
+        NetState {
+            bytes: bytes0.clone(),
+            lat: lat0.clone(),
+            lat0,
+            bytes0,
+            paths,
+            senders,
+            fabric: FairShareFabric::new(),
+            caps,
+            route: Vec::with_capacity(3),
+            nm,
+        }
+    }
+
+    /// Refresh the per-step scratch — freeze-shrunk payloads, scenario
+    /// capacity and latency scalings — and reset the fabric on the
+    /// scaled capacities, ready for one contended batch.
+    fn prepare(
+        &mut self,
+        plan: &FreezePlan,
+        scenario: Option<&Scenario>,
+        edge_boundary: &[Option<usize>],
+        t: usize,
+    ) {
+        self.caps.copy_from_slice(self.nm.caps());
+        self.lat.copy_from_slice(&self.lat0);
+        for (e, s) in self.senders.iter().enumerate() {
+            self.bytes[e] = match s {
+                Some(a) => self.bytes0[e] * (1.0 - plan.ratio_of(a)),
+                None => self.bytes0[e],
+            };
+        }
+        if let Some(sc) = scenario {
+            // `link:` terms scale message *time* — on the fabric that is
+            // the fixed latency share; serialization responds to
+            // `linkcap:` capacity scalings instead.
+            for (e, b) in edge_boundary.iter().enumerate() {
+                if let Some(b) = b {
+                    self.lat[e] = self.lat0[e] * sc.edge_link_factor(*b, t);
+                }
+            }
+            let (nm, caps, route) = (&self.nm, &mut self.caps, &mut self.route);
+            sc.active_linkcaps(t, |from, to, factor| {
+                nm.path_into(from, to, route);
+                for &l in route.iter() {
+                    caps[l] *= factor;
+                }
+            });
+        }
+        self.fabric.reset(&self.caps);
+    }
+
+    /// Reset the scratch to the undisturbed reference world (full
+    /// payloads, nominal capacities and latencies) — the no-freezing
+    /// Gantt replay.
+    fn reset_reference(&mut self) {
+        self.caps.copy_from_slice(self.nm.caps());
+        self.bytes.copy_from_slice(&self.bytes0);
+        self.lat.copy_from_slice(&self.lat0);
+        self.fabric.reset(&self.caps);
+    }
 }
 
 /// The executor a run drives batches through: the discrete-event engine
@@ -557,7 +765,7 @@ pub fn run_with_partition(
     // schedule. For fixed kinds the resolved config is a verbatim clone
     // and this path is bit-identical to the pre-synthesis construction.
     let world = resolve_world(cfg, partition);
-    let ResolvedWorld { cfg: rcfg, schedule, layout, mut cost } = world;
+    let ResolvedWorld { cfg: rcfg, schedule, layout, mut cost, net } = world;
     let cfg = &rcfg;
     let pdag = PipelineDag::from_schedule(&schedule);
     // Memory-constrained runs: resolve the budget + recompute policy to
@@ -580,10 +788,38 @@ pub fn run_with_partition(
         Some(sc) => {
             sc.validate(cfg.ranks, cfg.stages())
                 .map_err(SimError::InvalidScenario)?;
+            // `linkcap:` terms scale shared-fabric capacities: they need
+            // a hierarchical topology (capacities to scale) and the
+            // event executor (the fair-sharing fabric lives there).
+            if sc.has_linkcaps() {
+                if net.is_none() {
+                    return Err(SimError::InvalidScenario(format!(
+                        "scenario '{sc}' has linkcap terms but no network fabric is \
+                         configured; pass a hierarchical --net topology"
+                    )));
+                }
+                if cfg.exec != ExecMode::Event {
+                    return Err(SimError::InvalidScenario(format!(
+                        "scenario '{sc}' has linkcap terms, which need the event \
+                         executor; the analytic sweep has no fabric to contend"
+                    )));
+                }
+            }
             (!sc.is_identity()).then_some(sc)
         }
         None => None,
     };
+    let contended = cfg.exec == ExecMode::Event;
+    let pricing = if cfg.net_blind_lp {
+        NetLpPricing::Dedicated
+    } else if contended {
+        NetLpPricing::Contended
+    } else {
+        NetLpPricing::Expected
+    };
+    let edge_comm = net
+        .as_ref()
+        .map(|nm| net_edge_comm(nm, &pdag, &schedule, cfg, pricing));
     let factory = ControllerFactory {
         phases: cfg.phases,
         r_max: cfg.r_max,
@@ -591,6 +827,7 @@ pub fn run_with_partition(
         apf: cfg.apf.clone(),
         auto: cfg.auto.clone(),
         stage_floor,
+        edge_comm,
     };
     let mut controller = factory.build(cfg.method, &schedule, &layout);
     // Optimizer tail: zero for the analytic presets, nonzero only for
@@ -653,6 +890,13 @@ pub fn run_with_partition(
     // engine by default, analytic sweep in fast mode), the per-microbatch
     // freeze masks, and the per-action selection scratch.
     let mut exec = Exec::build(cfg.exec, &pdag, &schedule);
+    // Contended execution: event mode under a hierarchical topology
+    // routes every cross-rank message through the fair-sharing fabric
+    // instead of fixed per-edge delays.
+    let mut net_state: Option<NetState> = match (&net, contended) {
+        (Some(nm), true) => Some(NetState::build(nm.clone(), &pdag, &schedule, cfg)),
+        _ => None,
+    };
     let num_units = layout.num_units();
     let mut masks: Vec<Vec<bool>> = vec![vec![false; num_units]; cfg.microbatches];
     let mut sel: Vec<bool> = Vec::with_capacity(num_units);
@@ -692,33 +936,39 @@ pub fn run_with_partition(
             };
         }
         // ---- runtime dynamics: perturb the sampled durations ----
-        let delays = match scenario {
-            None => base_delays.as_deref(),
-            Some(sc) => {
-                for (id, act) in node_actions.iter().enumerate() {
-                    if let Some(a) = act {
-                        let rank_f = sc.rank_factor(pdag.rank_of_node[id], t);
-                        let link_f = sc.stage_link_factor(a.stage, t);
-                        // Only kinds whose duration charges node comm
-                        // carry a comm share (W-actions never do — see
-                        // CostModel::bounds); and when both factors
-                        // agree (in particular pre-onset, both 1.0) the
-                        // whole duration scales as one product, keeping
-                        // undisturbed steps bit-exact.
-                        let d = if rank_f == link_f {
-                            weights[id] * rank_f
-                        } else {
-                            let comm = match a.kind {
-                                crate::types::ActionKind::BackwardWgrad => 0.0,
-                                _ => cost.stage_comm(a.stage),
-                            };
-                            let compute = (weights[id] - comm).max(0.0);
-                            compute * rank_f + comm * link_f
+        if let Some(sc) = scenario {
+            for (id, act) in node_actions.iter().enumerate() {
+                if let Some(a) = act {
+                    let rank_f = sc.rank_factor(pdag.rank_of_node[id], t);
+                    let link_f = sc.stage_link_factor(a.stage, t);
+                    // Only kinds whose duration charges node comm
+                    // carry a comm share (W-actions never do — see
+                    // CostModel::bounds); and when both factors
+                    // agree (in particular pre-onset, both 1.0) the
+                    // whole duration scales as one product, keeping
+                    // undisturbed steps bit-exact.
+                    let d = if rank_f == link_f {
+                        weights[id] * rank_f
+                    } else {
+                        let comm = match a.kind {
+                            crate::types::ActionKind::BackwardWgrad => 0.0,
+                            _ => cost.stage_comm(a.stage),
                         };
-                        weights[id] = d * sc.jitter_mult(cfg.seed, t, id);
-                    }
+                        let compute = (weights[id] - comm).max(0.0);
+                        compute * rank_f + comm * link_f
+                    };
+                    weights[id] = d * sc.jitter_mult(cfg.seed, t, id);
                 }
-                match &base_delays {
+            }
+        }
+        let step_time = if let (Some(ns), Exec::Event(engine)) = (&mut net_state, &mut exec) {
+            ns.prepare(&plan, scenario, &edge_boundary, t);
+            engine.execute_contended(&weights, &ns.lat, &ns.bytes, &ns.paths, &mut ns.fabric)
+                + opt_tail
+        } else {
+            let delays = match scenario {
+                None => base_delays.as_deref(),
+                Some(sc) => match &base_delays {
                     None => None,
                     Some(base) => {
                         for (e, &b) in base.iter().enumerate() {
@@ -729,10 +979,10 @@ pub fn run_with_partition(
                         }
                         Some(delays_scratch.as_slice())
                     }
-                }
-            }
+                },
+            };
+            exec.batch_time(&weights, delays, &zero_delays) + opt_tail
         };
-        let step_time = exec.batch_time(&weights, delays, &zero_delays) + opt_tail;
         total_time += step_time;
         if t > cfg.phases.t_freeze {
             steady_time += step_time;
@@ -849,19 +1099,34 @@ pub fn run_with_partition(
     // ---- Gantt charts (event-sourced: starts come from the executor) ----
     // The no-freezing chart is the undisturbed reference world; the
     // final chart replays the last step's realized durations and (under
-    // a scenario) its scaled link delays.
-    let final_delays: Option<&[f64]> = match (&base_delays, scenario) {
-        (None, _) => None,
-        (Some(b), None) => Some(b.as_slice()),
-        (Some(_), Some(_)) => Some(delays_scratch.as_slice()),
-    };
+    // a scenario) its scaled link delays — or, on the contended path,
+    // the last step's shrunk payloads and scaled capacities.
     let w_nofreeze = pdag.weights(|a| cost.duration(a, 0.0));
-    let starts_nofreeze =
-        exec.start_times(&pdag, &w_nofreeze, base_delays.as_deref(), &zero_delays);
+    let (starts_nofreeze, starts_final) =
+        if let (Some(ns), Exec::Event(engine)) = (&mut net_state, &mut exec) {
+            // Final chart first: the scratch still holds the last step's
+            // payloads/capacities/latencies; only the fabric needs a
+            // fresh start.
+            ns.fabric.reset(&ns.caps);
+            engine.execute_contended(&last_weights, &ns.lat, &ns.bytes, &ns.paths, &mut ns.fabric);
+            let sf = engine.starts().to_vec();
+            ns.reset_reference();
+            engine.execute_contended(&w_nofreeze, &ns.lat, &ns.bytes, &ns.paths, &mut ns.fabric);
+            (engine.starts().to_vec(), sf)
+        } else {
+            let final_delays: Option<&[f64]> = match (&base_delays, scenario) {
+                (None, _) => None,
+                (Some(b), None) => Some(b.as_slice()),
+                (Some(_), Some(_)) => Some(delays_scratch.as_slice()),
+            };
+            let sn =
+                exec.start_times(&pdag, &w_nofreeze, base_delays.as_deref(), &zero_delays);
+            let sf = exec.start_times(&pdag, &last_weights, final_delays, &zero_delays);
+            (sn, sf)
+        };
     let gantt_nofreeze =
         gantt(&pdag, &starts_nofreeze, &w_nofreeze, &vec![0.0; pdag.len()]);
     let batch_time_nofreeze = starts_nofreeze[pdag.dest] + opt_tail;
-    let starts_final = exec.start_times(&pdag, &last_weights, final_delays, &zero_delays);
     let gantt_final = gantt(&pdag, &starts_final, &last_weights, &last_plan_ratios);
     let batch_time_final = starts_final[pdag.dest] + opt_tail;
     let bubble_fraction =
@@ -1305,6 +1570,60 @@ mod tests {
         // And the run is reproducible wholesale.
         let again = run(&cfg).unwrap();
         assert_eq!(event.throughput.to_bits(), again.throughput.to_bits());
+    }
+
+    /// `linkcap:` terms act on the fair-sharing fabric: without a
+    /// hierarchical topology (or under the analytic executor) they are
+    /// clean errors, and with both they run.
+    #[test]
+    fn linkcap_scenarios_demand_a_fabric() {
+        use crate::config::Scenario;
+        use crate::net::Topology;
+        let mut cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+        cfg.scenario = Some(Scenario::parse("linkcap:0-1x0.5@40").unwrap());
+        assert!(matches!(run(&cfg), Err(SimError::InvalidScenario(_))));
+        cfg.net = Some(Topology::parse("island:2x1e9,spine:2e8,lat:0.0005").unwrap());
+        cfg.exec = ExecMode::Analytic;
+        assert!(matches!(run(&cfg), Err(SimError::InvalidScenario(_))));
+        cfg.exec = ExecMode::Event;
+        let r = run(&cfg).unwrap();
+        assert!(r.throughput.is_finite() && r.throughput > 0.0);
+    }
+
+    /// A hierarchical topology with infinite bandwidth degenerates to
+    /// fixed per-message latency: the contended event executor and the
+    /// analytic sweep (expected costs = latency exactly) must agree
+    /// bitwise, and a `uniform` topology must be bit-identical to no
+    /// topology at all.
+    #[test]
+    fn degenerate_topologies_keep_executor_bit_identity() {
+        use crate::net::Topology;
+        let mut cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+        cfg.net = Some(Topology::parse("island:2xinf,spine:inf,lat:0.001").unwrap());
+        let event = run(&cfg).unwrap();
+        let mut fast = cfg.clone();
+        fast.exec = ExecMode::Analytic;
+        let fast = run(&fast).unwrap();
+        assert_eq!(event.throughput.to_bits(), fast.throughput.to_bits());
+        assert_eq!(event.batch_time_final.to_bits(), fast.batch_time_final.to_bits());
+        for (a, b) in event.gantt_final.iter().zip(&fast.gantt_final) {
+            assert_eq!(a.start.to_bits(), b.start.to_bits());
+        }
+        // Latency is not free: doubling it strictly lengthens the batch
+        // (every pipeline critical path crosses at least one boundary).
+        let mut slow_cfg = cfg.clone();
+        slow_cfg.net = Some(Topology::parse("island:2xinf,spine:inf,lat:0.002").unwrap());
+        let slow = run(&slow_cfg).unwrap();
+        assert!(slow.batch_time_nofreeze > event.batch_time_nofreeze);
+        // `uniform` disengages the fabric entirely.
+        let mut plain_cfg = cfg.clone();
+        plain_cfg.net = None;
+        let plain = run(&plain_cfg).unwrap();
+        let mut uni = plain_cfg.clone();
+        uni.net = Some(Topology::uniform());
+        let uni = run(&uni).unwrap();
+        assert_eq!(uni.throughput.to_bits(), plain.throughput.to_bits());
+        assert_eq!(uni.accuracy.to_bits(), plain.accuracy.to_bits());
     }
 
     #[test]

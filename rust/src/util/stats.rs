@@ -35,12 +35,18 @@ pub fn max(xs: &[f64]) -> f64 {
 }
 
 /// Percentile via linear interpolation on the sorted sample, `q ∈ [0,100]`.
+///
+/// Hardened for the replan-latency summaries (fig17's per-replan
+/// p50/p95 path, which may see zero or one replan, and NaN from a
+/// degenerate timer): returns 0.0 for an empty slice, the sole value
+/// for a single-element slice, and ignores NaN samples rather than
+/// panicking in the sort comparator.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
+    let mut s: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if s.is_empty() {
         return 0.0;
     }
-    let mut s: Vec<f64> = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let q = q.clamp(0.0, 100.0) / 100.0;
     let pos = q * (s.len() - 1) as f64;
     let lo = pos.floor() as usize;
@@ -56,6 +62,43 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
 /// Median (50th percentile).
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
+}
+
+/// One-shot distribution summary (count, mean, min/max, p50/p95).
+///
+/// All fields are clean values for any input: an empty sample yields
+/// all-zero (not ±inf min/max, not NaN), a single sample yields that
+/// sample everywhere, and NaN entries are dropped before ranking.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Summary {
+    /// Number of (non-NaN) samples.
+    pub n: usize,
+    /// Arithmetic mean (0.0 when empty).
+    pub mean: f64,
+    /// Smallest sample (0.0 when empty).
+    pub min: f64,
+    /// Largest sample (0.0 when empty).
+    pub max: f64,
+    /// Median (0.0 when empty).
+    pub p50: f64,
+    /// 95th percentile (0.0 when empty).
+    pub p95: f64,
+}
+
+/// Summarize a sample; see [`Summary`] for the empty/degenerate rules.
+pub fn summary(xs: &[f64]) -> Summary {
+    let clean: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if clean.is_empty() {
+        return Summary::default();
+    }
+    Summary {
+        n: clean.len(),
+        mean: mean(&clean),
+        min: min(&clean),
+        max: max(&clean),
+        p50: percentile(&clean, 50.0),
+        p95: percentile(&clean, 95.0),
+    }
 }
 
 /// Ordinary least squares fit `y ≈ slope·x + intercept`.
@@ -223,6 +266,45 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(variance(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(summary(&[]), Summary::default());
+    }
+
+    #[test]
+    fn single_element_summaries_return_the_element() {
+        // fig17's per-replan path with exactly one replan.
+        let xs = [0.125];
+        for q in [0.0, 50.0, 95.0, 100.0] {
+            assert_eq!(percentile(&xs, q), 0.125);
+        }
+        let s = summary(&xs);
+        assert_eq!(s.n, 1);
+        assert_eq!((s.mean, s.min, s.max, s.p50, s.p95), (0.125, 0.125, 0.125, 0.125, 0.125));
+    }
+
+    #[test]
+    fn nan_samples_are_dropped_not_panicked_on() {
+        let xs = [3.0, f64::NAN, 1.0, 2.0, f64::NAN];
+        assert_eq!(median(&xs), 2.0);
+        assert_eq!(percentile(&xs, 100.0), 3.0);
+        let s = summary(&xs);
+        assert_eq!(s.n, 3);
+        assert_eq!((s.min, s.max), (1.0, 3.0));
+        // All-NaN degrades to the empty-sample summary.
+        assert_eq!(summary(&[f64::NAN, f64::NAN]), Summary::default());
+        assert_eq!(percentile(&[f64::NAN], 50.0), 0.0);
+    }
+
+    #[test]
+    fn summary_of_a_spread_sample() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = summary(&xs);
+        assert_eq!(s.n, 100);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.mean, 50.5);
+        assert_eq!(s.p50, 50.5);
+        assert!((s.p95 - 95.05).abs() < 1e-9);
     }
 
     #[test]

@@ -10,6 +10,7 @@ mod common;
 
 use common::quick_paced;
 use timelyfreeze::config::{ExperimentConfig, RecoveryStrategy, Scenario};
+use timelyfreeze::net::Topology;
 use timelyfreeze::sim;
 use timelyfreeze::types::{FreezeMethod, ScheduleKind};
 
@@ -218,6 +219,76 @@ fn synthesized_elastic_retains_fixed_schedule_throughput() {
         synth.throughput,
         restart.throughput
     );
+}
+
+/// Elastic recovery on a network fabric: after a crash the rebuilt
+/// world resolves a fresh topology over the survivor fleet (islands are
+/// re-cut over 3 ranks), the run completes with the usual accounting,
+/// the whole thing is bit-reproducible — and the fabric is genuinely
+/// engaged on both sides of the fault, which shows up as strictly lower
+/// throughput than the same faulted run without `--net`.
+#[test]
+fn elastic_recovery_rebuilds_the_topology_over_survivors() {
+    let mut cfg = fault_cfg("crash:1@40", RecoveryStrategy::Elastic);
+    cfg.net = Some(Topology::parse("island:2x4e9,spine:1e9,lat:0.0002").unwrap());
+    let a = sim::run(&cfg).unwrap();
+    assert_eq!(a.faults, 1);
+    assert_eq!(a.final_ranks, cfg.ranks - 1);
+    assert!(a.throughput > 0.0 && a.throughput.is_finite());
+    let b = sim::run(&cfg).unwrap();
+    assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+    assert_eq!(a.lost_microbatches, b.lost_microbatches);
+    assert_eq!(a.recovery_time_s.to_bits(), b.recovery_time_s.to_bits());
+    let unwired = sim::run(&fault_cfg("crash:1@40", RecoveryStrategy::Elastic)).unwrap();
+    assert!(
+        a.throughput < unwired.throughput,
+        "a 1e9 B/s spine should slow the faulted run: {} vs {}",
+        a.throughput,
+        unwired.throughput
+    );
+}
+
+/// On a constrained fabric the recovery-strategy ordering still holds:
+/// elastic repartitioning beats restart-from-scratch on throughput,
+/// under both fixed and synthesized schedules.
+#[test]
+fn elastic_beats_restart_on_a_contended_fabric() {
+    let topo = Topology::parse("island:2x4e9,spine:1e9,lat:0.0002").unwrap();
+    for kind in [ScheduleKind::OneFOneB, ScheduleKind::Synthesized] {
+        let mut elastic_cfg = fault_cfg("crash:1@30", RecoveryStrategy::Elastic);
+        elastic_cfg.schedule = kind;
+        elastic_cfg.net = Some(topo.clone());
+        let mut restart_cfg = fault_cfg("crash:1@30", RecoveryStrategy::Restart);
+        restart_cfg.schedule = kind;
+        restart_cfg.net = Some(topo.clone());
+        let elastic = sim::run(&elastic_cfg).unwrap();
+        let restart = sim::run(&restart_cfg).unwrap();
+        assert_eq!(elastic.final_ranks, restart.final_ranks, "{}", kind.name());
+        assert!(
+            elastic.throughput > restart.throughput,
+            "{}: elastic {} must beat restart {}",
+            kind.name(),
+            elastic.throughput,
+            restart.throughput
+        );
+    }
+}
+
+/// Capacity terms and rank faults do not compose: the fault path prices
+/// communication by expected cost (there is no per-step fabric to
+/// scale), so the combination is rejected up front with a pointer at
+/// the `link:` alternative.
+#[test]
+fn linkcap_with_faults_is_rejected() {
+    let mut cfg = fault_cfg("crash:1@40,linkcap:0-1x0.5", RecoveryStrategy::Elastic);
+    cfg.net = Some(Topology::parse("island:2x4e9,spine:1e9").unwrap());
+    match sim::run(&cfg) {
+        Err(sim::SimError::InvalidScenario(msg)) => {
+            assert!(msg.contains("link:"), "message should name the alternative: {msg}");
+        }
+        other => panic!("expected InvalidScenario, got {other:?}"),
+    }
 }
 
 /// Multi-fault timelines compose: a crash followed by a preemption of a

@@ -1,0 +1,322 @@
+//! The shared-link network fabric's contracts, tested through the
+//! public API:
+//!
+//! 1. **Disengagement** — a `uniform` topology (and a hierarchical one
+//!    whose links are all infinite) leaves every run bit-identical to a
+//!    config with no `--net` at all, across all four schedules and both
+//!    executors.
+//! 2. **Fair sharing** — the max-min water-filling allocation conserves
+//!    capacity (no link over-allocated, a lone finite link saturated
+//!    while busy) and is work-conserving on a single link, under
+//!    randomized churn.
+//! 3. **Determinism** — contended runs under a seeded dynamics scenario
+//!    (including `linkcap` capacity cuts) are bit-reproducible, and a
+//!    different seed realizes differently.
+//! 4. **Direction** — more spine bandwidth never slows a run, capacity
+//!    cuts bite, and identity (`x1`) cuts are ignored.
+
+mod common;
+
+use common::prop::{check, usize_in};
+use common::quick_paced;
+use timelyfreeze::config::{ExecMode, ExperimentConfig, Scenario};
+use timelyfreeze::net::{FairShareFabric, Topology};
+use timelyfreeze::sim::{self, SimError, SimResult};
+use timelyfreeze::types::{FreezeMethod, ScheduleKind};
+use timelyfreeze::util::rng::Rng;
+
+fn quick(method: FreezeMethod, schedule: ScheduleKind) -> ExperimentConfig {
+    quick_paced("llama-1b", method, schedule, 120, (10, 30, 50))
+}
+
+fn assert_bit_identical(a: &SimResult, b: &SimResult, what: &str) {
+    assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "{what}: throughput");
+    assert_eq!(
+        a.batch_time_final.to_bits(),
+        b.batch_time_final.to_bits(),
+        "{what}: batch_time_final"
+    );
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{what}: accuracy");
+    assert_eq!(a.gantt_final.len(), b.gantt_final.len(), "{what}: gantt length");
+    for (x, y) in a.gantt_final.iter().zip(&b.gantt_final) {
+        assert_eq!(x.start.to_bits(), y.start.to_bits(), "{what}: gantt start");
+    }
+}
+
+/// Acceptance criterion: `--net uniform` engages nothing — every
+/// schedule × executor × method combination reproduces the no-network
+/// run bit-for-bit.
+#[test]
+fn uniform_topology_is_bit_identical_to_no_network() {
+    for kind in ScheduleKind::all() {
+        for exec in [ExecMode::Event, ExecMode::Analytic] {
+            let mut bare = quick(FreezeMethod::TimelyFreeze, kind);
+            bare.exec = exec;
+            let mut wired = bare.clone();
+            wired.net = Some(Topology::uniform());
+            let a = sim::run(&bare).unwrap();
+            let b = sim::run(&wired).unwrap();
+            assert_bit_identical(&a, &b, &format!("{} {exec:?}", kind.name()));
+        }
+    }
+}
+
+/// A hierarchical topology whose links are all infinite engages the
+/// fabric machinery (latency re-pricing included) but admits no
+/// transfer, so the event executor stays bit-identical to the analytic
+/// sweep on every schedule.
+#[test]
+fn infinite_capacity_fabric_keeps_executors_bit_identical() {
+    let topo = Topology::parse("island:2xinf,spine:inf,lat:0.0005").unwrap();
+    for kind in ScheduleKind::all() {
+        let mut event_cfg = quick(FreezeMethod::TimelyFreeze, kind);
+        event_cfg.net = Some(topo.clone());
+        let mut fast_cfg = event_cfg.clone();
+        fast_cfg.exec = ExecMode::Analytic;
+        let event = sim::run(&event_cfg).unwrap();
+        let fast = sim::run(&fast_cfg).unwrap();
+        assert_bit_identical(&event, &fast, kind.name());
+    }
+}
+
+/// Randomized churn on a multi-link fabric: no finite link is ever
+/// allocated past its capacity, and completions drain the fabric.
+#[test]
+fn fair_share_never_overallocates_a_link() {
+    check("fair-share conservation", 60, |rng| {
+        let links = usize_in(rng, 1, 5);
+        let caps: Vec<f64> = (0..links)
+            .map(|_| if rng.bernoulli(0.25) { f64::INFINITY } else { rng.range_f64(10.0, 500.0) })
+            .collect();
+        let mut fabric = FairShareFabric::new();
+        fabric.reset(&caps);
+        let mut live: Vec<usize> = Vec::new();
+        let mut t = 0.0;
+        for k in 0..40u64 {
+            t += rng.range_f64(0.01, 0.5);
+            if rng.bernoulli(0.35) && !live.is_empty() {
+                let victim = usize_in(rng, 0, live.len() - 1);
+                fabric.complete(t, live.swap_remove(victim));
+            } else {
+                let hops = usize_in(rng, 1, links);
+                let start = usize_in(rng, 0, links - hops);
+                let path: Vec<usize> = (start..start + hops).collect();
+                if let Some(id) = fabric.begin(t, rng.range_f64(1.0, 1000.0), &path, k) {
+                    live.push(id);
+                }
+            }
+            for (l, cap) in caps.iter().enumerate() {
+                if cap.is_finite() {
+                    let alloc = fabric.link_allocation(l);
+                    if alloc > cap * (1.0 + 1e-9) {
+                        return Err(format!("link {l} allocated {alloc} of {cap} at t={t}"));
+                    }
+                }
+            }
+        }
+        for id in live.drain(..) {
+            t += 1.0;
+            fabric.complete(t, id);
+        }
+        if !fabric.idle() {
+            return Err("fabric not idle after completing every transfer".to_string());
+        }
+        Ok(())
+    });
+}
+
+/// A lone finite link is saturated whenever at least one transfer is in
+/// flight, and processor sharing on it is work-conserving: however
+/// arrivals interleave, the last byte leaves at (total bytes)/capacity
+/// after the link first went busy (it never idles mid-test).
+#[test]
+fn fair_share_is_work_conserving_on_a_single_link() {
+    check("single-link work conservation", 60, |rng| {
+        let cap = rng.range_f64(5.0, 200.0);
+        let mut fabric = FairShareFabric::new();
+        fabric.reset(&[cap]);
+        let n = usize_in(rng, 1, 6);
+        let mut total = 0.0;
+        for k in 0..n {
+            // All arrivals at t=0: the link never idles until drained.
+            let bytes = rng.range_f64(1.0, 50.0);
+            total += bytes;
+            fabric.begin(0.0, bytes, &[0], k as u64).expect("finite link admits");
+            let alloc = fabric.link_allocation(0);
+            if (alloc - cap).abs() > cap * 1e-9 {
+                return Err(format!("busy link allocates {alloc}, capacity {cap}"));
+            }
+        }
+        // Event loop: pop the earliest still-current prediction until
+        // the fabric drains; the makespan must equal total/cap.
+        let mut makespan = 0.0;
+        while !fabric.idle() {
+            let mut next: Option<(f64, usize, u64)> = None;
+            fabric.predictions(|id, ep, due| {
+                if next.map_or(true, |(t, _, _)| due < t) {
+                    next = Some((due, id, ep));
+                }
+            });
+            let (due, id, ep) = next.expect("busy fabric must predict completions");
+            if !fabric.is_due(id, ep) {
+                return Err("fresh prediction already stale".to_string());
+            }
+            fabric.complete(due, id);
+            makespan = due;
+        }
+        let want = total / cap;
+        if (makespan - want).abs() > want * 1e-6 {
+            return Err(format!("makespan {makespan} != total/cap {want}"));
+        }
+        Ok(())
+    });
+}
+
+/// The same contended run twice is bit-identical; a different scenario
+/// seed realizes differently. The scenario mixes compute dynamics with
+/// a mid-run `linkcap` capacity cut so the whole perturbation surface
+/// is under the determinism contract.
+#[test]
+fn contended_runs_are_seed_deterministic() {
+    let scenario = common::dynamic_scenario(11).with_linkcap(0, 3, 0.5, 60);
+    let mut cfg = quick(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+    cfg.net = Some(Topology::parse("island:2x4e9,spine:8e8,lat:0.0002").unwrap());
+    cfg.scenario = Some(scenario.clone());
+    let a = sim::run(&cfg).unwrap();
+    let b = sim::run(&cfg).unwrap();
+    assert_bit_identical(&a, &b, "same seed");
+    for (p, q) in a.trajectory.iter().zip(&b.trajectory) {
+        assert_eq!(p.step_time.to_bits(), q.step_time.to_bits());
+    }
+    let mut other = cfg.clone();
+    other.scenario = Some(scenario.with_seed(12));
+    let c = sim::run(&other).unwrap();
+    assert_ne!(a.throughput.to_bits(), c.throughput.to_bits(), "seed must matter");
+}
+
+/// Raising spine bandwidth (with everything else fixed) never slows a
+/// run down, and a constrained spine really is slower than an
+/// unconstrained one.
+#[test]
+fn more_spine_bandwidth_never_hurts() {
+    let mut last: Option<(String, f64)> = None;
+    for spine in ["2e8", "2e9", "inf"] {
+        let mut cfg = quick(FreezeMethod::NoFreezing, ScheduleKind::GPipe);
+        cfg.net = Some(Topology::parse(&format!("island:2x1e10,spine:{spine},lat:0.0001")).unwrap());
+        let res = sim::run(&cfg).unwrap();
+        if let Some((prev_spine, prev)) = &last {
+            assert!(
+                res.throughput >= *prev,
+                "spine {spine} ({}) slower than spine {prev_spine} ({prev})",
+                res.throughput
+            );
+        }
+        last = Some((spine.to_string(), res.throughput));
+    }
+    // And the constrained end of the sweep is *strictly* slower: the
+    // fabric genuinely bites at 2e8 B/s under ~34 MB boundary payloads.
+    let mut tight = quick(FreezeMethod::NoFreezing, ScheduleKind::GPipe);
+    tight.net = Some(Topology::parse("island:2x1e10,spine:2e8,lat:0.0001").unwrap());
+    let mut open = tight.clone();
+    open.net = Some(Topology::parse("island:2x1e10,spine:inf,lat:0.0001").unwrap());
+    let slow = sim::run(&tight).unwrap();
+    let fast = sim::run(&open).unwrap();
+    assert!(
+        slow.throughput < fast.throughput * 0.95,
+        "a 2e8 B/s spine should visibly hurt: {} vs {}",
+        slow.throughput,
+        fast.throughput
+    );
+}
+
+/// Capacity cuts bite from their onset; identity (`x1`) cuts leave the
+/// run bit-identical to no scenario at all.
+#[test]
+fn linkcap_cuts_bite_and_identity_cuts_do_not() {
+    let mut base = quick(FreezeMethod::NoFreezing, ScheduleKind::OneFOneB);
+    base.net = Some(Topology::parse("island:2x2e9,spine:1e9,lat:0.0001").unwrap());
+    let calm = sim::run(&base).unwrap();
+
+    let mut cut = base.clone();
+    cut.scenario = Some(Scenario::calm().with_linkcap(1, 2, 0.25, 0));
+    let cut_run = sim::run(&cut).unwrap();
+    assert!(
+        cut_run.throughput < calm.throughput,
+        "quartering the 1→2 route's capacity did nothing: {} vs {}",
+        cut_run.throughput,
+        calm.throughput
+    );
+
+    let mut identity = base.clone();
+    identity.scenario = Some(Scenario::calm().with_linkcap(1, 2, 1.0, 0));
+    let id_run = sim::run(&identity).unwrap();
+    assert_bit_identical(&calm, &id_run, "identity linkcap");
+}
+
+/// `linkcap` terms need links to scale: without `--net` (or with the
+/// analytic executor, which has no fabric) the run is rejected up
+/// front with an actionable error.
+#[test]
+fn linkcap_without_a_fabric_is_rejected() {
+    let scenario = Scenario::parse("linkcap:0-1x0.5@10").unwrap();
+
+    let mut bare = quick(FreezeMethod::TimelyFreeze, ScheduleKind::GPipe);
+    bare.scenario = Some(scenario.clone());
+    match sim::run(&bare) {
+        Err(SimError::InvalidScenario(msg)) => {
+            assert!(msg.contains("--net"), "error should point at --net: {msg}")
+        }
+        other => panic!("expected InvalidScenario without --net, got {other:?}"),
+    }
+
+    let mut analytic = bare.clone();
+    analytic.net = Some(Topology::parse("island:2x1e9,spine:1e9").unwrap());
+    analytic.exec = ExecMode::Analytic;
+    match sim::run(&analytic) {
+        Err(SimError::InvalidScenario(msg)) => {
+            assert!(msg.contains("event"), "error should point at the event executor: {msg}")
+        }
+        other => panic!("expected InvalidScenario under Analytic, got {other:?}"),
+    }
+
+    let mut ok = analytic.clone();
+    ok.exec = ExecMode::Event;
+    sim::run(&ok).expect("event executor + fabric accepts linkcap scenarios");
+}
+
+/// Determinism of the fabric itself: identical drive sequences produce
+/// identical predictions, ids, and allocations (the engine's contended
+/// runs inherit bit-reproducibility from this).
+#[test]
+fn identical_fabric_drives_are_bit_identical() {
+    let drive = |fabric: &mut FairShareFabric| {
+        let mut rng = Rng::seed_from_u64(0xFA_B21C);
+        fabric.reset(&[100.0, 40.0, f64::INFINITY]);
+        let paths: [&[usize]; 3] = [&[0], &[0, 1], &[1, 2]];
+        let mut live = Vec::new();
+        let mut trace = Vec::new();
+        let mut t = 0.0;
+        for k in 0..24u64 {
+            t += rng.range_f64(0.05, 0.3);
+            if rng.bernoulli(0.4) && !live.is_empty() {
+                let id = live.remove(0);
+                trace.push(fabric.complete(t, id) as f64);
+            } else if let Some(id) =
+                fabric.begin(t, rng.range_f64(1.0, 80.0), paths[k as usize % 3], k)
+            {
+                live.push(id);
+            }
+            fabric.predictions(|id, ep, due| trace.push(id as f64 + ep as f64 + due));
+            for l in 0..fabric.link_count() {
+                trace.push(fabric.link_allocation(l));
+            }
+        }
+        trace
+    };
+    let a = drive(&mut FairShareFabric::new());
+    let b = drive(&mut FairShareFabric::new());
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}

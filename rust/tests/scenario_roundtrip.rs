@@ -1,12 +1,17 @@
-//! Direct coverage of the scenario mini-language parser
-//! (`config/scenario.rs`): parse → `Display` → parse round-trips, the
-//! randomized spec generator, and the exact error messages malformed
-//! specs produce.
+//! Direct coverage of the two user-facing mini-languages: the scenario
+//! parser (`config/scenario.rs`) and the network-topology parser
+//! (`net/mod.rs`). Both obey the same contract — parse → `Display` →
+//! parse round-trips exactly, randomized specs survive the string
+//! form, and malformed specs are rejected with messages naming the
+//! offending term.
 
 mod common;
 
 use common::prop::{check, usize_in};
-use timelyfreeze::config::{FaultEvent, FaultKind, LinkSlowdown, Scenario, Straggler};
+use timelyfreeze::config::{FaultEvent, FaultKind, LinkCap, LinkSlowdown, Scenario, Straggler};
+use timelyfreeze::net::Topology;
+use timelyfreeze::util::rng::Rng;
+use timelyfreeze::util::toml::TomlDoc;
 
 /// Every spec the docs advertise round-trips: parse → Display → parse
 /// lands on an identical scenario (label included — Display *is* the
@@ -30,6 +35,9 @@ fn documented_specs_round_trip() {
         "evict-slowest@400",
         "crash:3@200,preempt:1@300-450,evict-slowest@800",
         "straggler:1x2.0@10,crash:2@500,seed:9",
+        "linkcap:0-1x0.5",
+        "linkcap:0-3x0.5@200",
+        "straggler:1x1.5,linkcap:2-0x0.25@40,seed:3",
     ] {
         let parsed = Scenario::parse(spec).unwrap_or_else(|e| panic!("'{spec}': {e}"));
         let displayed = parsed.to_string();
@@ -72,6 +80,14 @@ fn prop_random_specs_round_trip() {
                 terms.push(format!("link:{factor}@{onset}"));
                 expect = expect.with_link(None, factor, onset);
             }
+        }
+        for _ in 0..usize_in(rng, 0, 2) {
+            let from = usize_in(rng, 0, 7);
+            let to = usize_in(rng, 0, 7);
+            let factor = (rng.range_f64(0.05, 1.5) * 100.0).round() / 100.0;
+            let onset = usize_in(rng, 0, 400);
+            terms.push(format!("linkcap:{from}-{to}x{factor}@{onset}"));
+            expect = expect.with_linkcap(from, to, factor, onset);
         }
         for _ in 0..usize_in(rng, 0, 2) {
             let onset = usize_in(rng, 0, 900);
@@ -137,6 +153,17 @@ fn parsed_terms_populate_the_right_fields() {
     );
     assert_eq!(sc.faults[0].named_rank(), Some(2));
     assert_eq!(sc.faults[2].named_rank(), None);
+    // Capacity terms populate `linkcaps` and flag the fabric need.
+    let sc = Scenario::parse("linkcap:0-3x0.5@200,linkcap:1-2x1.0").unwrap();
+    assert_eq!(
+        sc.linkcaps,
+        vec![
+            LinkCap { from: 0, to: 3, factor: 0.5, onset: 200 },
+            LinkCap { from: 1, to: 2, factor: 1.0, onset: 0 },
+        ]
+    );
+    assert!(sc.has_linkcaps(), "a non-identity capacity term needs a fabric");
+    assert!(!Scenario::parse("linkcap:1-2x1.0").unwrap().has_linkcaps(), "x1 is inert");
     // An empty spec (or stray commas) is calm.
     let calm = Scenario::parse(" , ,calm, ").unwrap();
     assert!(calm.is_identity());
@@ -171,6 +198,12 @@ fn malformed_specs_name_the_offence() {
         ("preempt:1@50-50", "must end after it begins"),
         ("evict-slowest", "wants evict-slowest@<onset>"),
         ("evict-slowest@x", "bad onset step in 'evict-slowest@x'"),
+        ("linkcap:0-1", "wants linkcap:<rankA>-<rankB>x<factor>[@onset]"),
+        ("linkcap:01x0.5", "wants linkcap:<rankA>-<rankB>x<factor>[@onset]"),
+        ("linkcap:a-1x0.5", "bad linkcap rank in 'linkcap:a-1x0.5'"),
+        ("linkcap:0-bx0.5", "bad linkcap rank in 'linkcap:0-bx0.5'"),
+        ("linkcap:0-1x0", "bad factor in 'linkcap:0-1x0'"),
+        ("linkcap:0-1x0.5@x", "bad onset step"),
     ] {
         let err = Scenario::parse(spec).expect_err(spec);
         assert!(
@@ -183,6 +216,7 @@ fn malformed_specs_name_the_offence() {
     for fragment in [
         "straggler:<rank>x<factor>[@onset]",
         "jitter:<sigma>[@onset]",
+        "linkcap:<rankA>-<rankB>x<factor>[@onset]",
         "seed:<n>",
         "crash:<rank>@<onset>",
         "preempt:<rank>@<from>-<until>",
@@ -190,4 +224,89 @@ fn malformed_specs_name_the_offence() {
     ] {
         assert!(err.contains(fragment), "grammar hint missing '{fragment}': {err}");
     }
+}
+
+/// Random bandwidth/latency draw for topology round-trips. Rust's
+/// shortest-round-trip float formatting guarantees any f64 survives
+/// `format!` → `parse` exactly, so no rounding is needed.
+fn random_bw(rng: &mut Rng) -> f64 {
+    if rng.bernoulli(0.2) {
+        f64::INFINITY
+    } else {
+        rng.range_f64(1e6, 1e12)
+    }
+}
+
+/// Randomized topology round-trip, through both string forms: the
+/// canonical spec (parse → Display → parse) and the `[network]` TOML
+/// section (`to_toml` → `from_toml`).
+#[test]
+fn prop_random_topologies_round_trip() {
+    check("topology round-trip", 60, |rng| {
+        let t = Topology::hierarchical(
+            usize_in(rng, 1, 8),
+            random_bw(rng),
+            random_bw(rng),
+            if rng.bernoulli(0.3) { 0.0 } else { rng.range_f64(1e-7, 0.01) },
+        );
+        let spec = t.canonical_spec();
+        let parsed = Topology::parse(&spec).map_err(|e| format!("'{spec}': {e}"))?;
+        if parsed.kind != t.kind {
+            return Err(format!("'{spec}': parsed {:?}, built {:?}", parsed.kind, t.kind));
+        }
+        // Display echoes the spec it was parsed from, so a second
+        // round-trip is exact including the label.
+        let again = Topology::parse(&parsed.to_string()).map_err(|e| e.to_string())?;
+        if again != parsed {
+            return Err(format!("'{spec}': Display round-trip diverged"));
+        }
+        let toml = t.to_toml();
+        let doc = TomlDoc::parse(&toml).map_err(|e| format!("{toml}: {e}"))?;
+        let back = Topology::from_toml(&doc)
+            .map_err(|e| format!("{toml}: {e}"))?
+            .ok_or_else(|| format!("{toml}: no [network] section found"))?;
+        if back.kind != t.kind {
+            return Err(format!("TOML round-trip diverged:\n{toml}"));
+        }
+        Ok(())
+    });
+}
+
+/// Documented topology specs round-trip through Display with the label
+/// preserved verbatim, and malformed ones name the offence — the
+/// integration-level mirror of the `net` module's unit contract, plus
+/// the uniform/TOML corners the CLI exercises.
+#[test]
+fn topology_specs_round_trip_and_reject() {
+    for spec in [
+        "uniform",
+        "island:4x600000000000,spine:100000000000",
+        "island:2x1e12,spine:5e10,lat:0.000002",
+        "island:1xinf,spine:16000000000",
+        "island:8xinf,spine:inf",
+    ] {
+        let t = Topology::parse(spec).unwrap_or_else(|e| panic!("'{spec}': {e}"));
+        assert_eq!(t.to_string(), spec, "Display must echo the spec");
+        assert_eq!(Topology::parse(&t.to_string()).unwrap(), t, "'{spec}' did not round-trip");
+    }
+    for (spec, needle) in [
+        ("", "empty"),
+        ("island:4", "island:<size>x<bandwidth>"),
+        ("island:4x1e9", "missing a spine"),
+        ("spine:1e9", "missing an island"),
+        ("island:0x1e9,spine:1e9", "island size must be >= 1"),
+        ("island:4x0,spine:1e9", "bandwidth"),
+        ("island:4x1e9,spine:1e9,lat:-1", "latency"),
+        ("mesh:4", "unknown topology term"),
+    ] {
+        let err = Topology::parse(spec).expect_err(spec);
+        assert!(err.contains(needle), "'{spec}': error '{err}' does not mention '{needle}'");
+    }
+    // TOML: a document without [network] resolves to None; a malformed
+    // one names the missing key.
+    let none = Topology::from_toml(&TomlDoc::parse("[experiment]\nranks = 4\n").unwrap()).unwrap();
+    assert!(none.is_none());
+    let err = Topology::from_toml(&TomlDoc::parse("[network]\nmode = \"hierarchical\"\n").unwrap())
+        .unwrap_err();
+    assert!(err.contains("island_size"), "{err}");
 }

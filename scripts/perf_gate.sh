@@ -12,12 +12,13 @@
 # output file over it. Benchmarks present in only one of the two files
 # are ignored (suites may grow): the PR 5 additions
 # (lp_resolve_incremental/1f1b_8x16, replan_loop/llama1b), the PR 7
-# schedule-synthesis bench (synthesize/1f1b_8x16), and the PR 8 sparse
+# schedule-synthesis bench (synthesize/1f1b_8x16), the PR 8 sparse
 # revised-simplex benches (lp_sparse_vs_dense/1f1b_8x16,
 # lp_sparse_vs_dense/synth_16x64, lp_dense_oracle/1f1b_8x16,
-# lp_bound_flip/box_512) land in the recorded trajectory immediately
-# but stay outside the ±20% gate until the baseline is re-armed with a
-# file that contains them.
+# lp_bound_flip/box_512), and the PR 9 network benches
+# (net_fair_share/burst_24x3links, contended_sim_run/llama1b_100steps)
+# land in the recorded trajectory immediately but stay outside the ±20%
+# gate until the baseline is re-armed with a file that contains them.
 #
 # Env:
 #   TF_PERF_GATE_TOLERANCE   regression threshold, default 0.20
@@ -55,6 +56,9 @@ TF_BENCH_JSON="$OUT_JSON" cargo bench --bench perf_micro
 
 echo "== fig17 dynamics (quick smoke: replanning must not lose to static) =="
 TF_BENCH_QUICK=1 cargo bench --bench fig17_dynamics
+
+echo "== fig18 contention (quick smoke: aware plan must beat the blind plan somewhere) =="
+TF_BENCH_QUICK=1 cargo bench --bench fig18_contention
 
 echo "== fig19 elasticity (quick smoke: elastic recovery must beat restart) =="
 TF_BENCH_QUICK=1 cargo bench --bench fig19_elasticity
