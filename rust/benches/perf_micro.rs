@@ -336,6 +336,83 @@ fn main() {
         std::hint::black_box(sim::run(&cfg).expect("feasible config").throughput);
     }));
 
+    // The same event run with the divergence watchdog armed but calm:
+    // its per-step cost is one planned/realized per-rank sum plus two
+    // EWMA folds, so the entry must track sim_run/llama1b_100steps
+    // within noise (target < 1% overhead; the gate below is loose
+    // enough not to flake on shared runners, and perf_gate.sh pins the
+    // entry against its own baseline).
+    {
+        let mut wd_cfg = cfg.clone();
+        wd_cfg.exec = timelyfreeze::config::ExecMode::Event;
+        wd_cfg.watchdog = Some(3.0);
+        let r = bench_auto("watchdog_overhead/llama1b", 2.0, || {
+            let res = sim::run(&wd_cfg).expect("feasible config");
+            std::hint::black_box(res.throughput);
+        });
+        let ratio = r.mean_s / sim_mean;
+        println!("watchdog armed/unarmed mean ratio: {ratio:.4} (target < 1.01)");
+        record(r);
+        assert!(
+            ratio < 1.10,
+            "an armed-but-calm watchdog cost {:.1}% over the plain event run",
+            (ratio - 1.0) * 100.0
+        );
+        // Armed but calm means exactly that: no triggers on this run.
+        let res = sim::run(&wd_cfg).expect("feasible config");
+        assert!(res.watchdog_triggers.is_empty(), "{:?}", res.watchdog_triggers);
+    }
+
+    // The degraded-mode ladder's failure path: a stage floor above
+    // r_max makes every solve fail FloorExceedsBudget, so each round
+    // pays the failed LP attempt plus ladder bookkeeping (cause
+    // formatting, capped event log). This path runs *inside* the step
+    // loop whenever the world turns infeasible, so it has to stay at
+    // replan-loop cost, not blow up on the error branch.
+    {
+        use timelyfreeze::cost::{CostProfile, StageProfile};
+        use timelyfreeze::freeze::{
+            Controller, DegradationRung, ModelLayout, PhaseConfig, TimelyFreeze,
+            TimelyFreezeConfig,
+        };
+        use timelyfreeze::types::ActionKind;
+        let sched = Schedule::build(ScheduleKind::OneFOneB, 4, 8, 1);
+        let layout = ModelLayout::uniform(8, 4, 1000, 4);
+        let tf_cfg = TimelyFreezeConfig {
+            phases: PhaseConfig::new(10, 30, 50),
+            r_max: 0.8,
+            lambda: 1e-4,
+        };
+        let mut tf = TimelyFreeze::new(tf_cfg, &sched, layout);
+        for t in 1..=30 {
+            let plan = tf.plan(t);
+            for a in sched.all_actions() {
+                let dur = match a.kind {
+                    ActionKind::Forward => 1.0,
+                    _ => 2.0 - plan.ratio_of(&a) * 1.2,
+                };
+                tf.record_time(t, a, dur);
+            }
+        }
+        tf.plan(31); // first LP solve (cold), outside the timed loop
+        tf.set_stage_floor(Some(vec![0.9; 4]));
+        let profile = CostProfile::profiled(
+            (0..4).map(|_| StageProfile::compute(1.0, 0.8, 1.2)).collect(),
+        );
+        record(bench_auto("degraded_replan/ladder_exhaust", 0.5, || {
+            tf.replan_with_profile(&profile);
+            std::hint::black_box(Controller::replan_failures(&tf));
+        }));
+        assert!(Controller::replan_failures(&tf) >= 3, "every replan must have failed");
+        let report = tf.degradation();
+        assert_eq!(report.worst(), Some(DegradationRung::SafeMode));
+        assert!(
+            report.len() <= timelyfreeze::freeze::timely::DEGRADATION_LOG_CAP,
+            "the event log must stay capped, got {}",
+            report.len()
+        );
+    }
+
     // Max-min fair sharing in isolation: admit a burst of island- and
     // spine-crossing transfers, then drain the fabric event by event —
     // the per-step network work of the contended executor, without the

@@ -6,7 +6,9 @@ pub mod presets;
 pub mod scenario;
 
 pub use presets::{GpuPreset, ModelFamily, ModelPreset};
-pub use scenario::{FaultEvent, FaultKind, LinkCap, LinkSlowdown, Scenario, Straggler};
+pub use scenario::{
+    Burst, FaultEvent, FaultKind, LinkCap, LinkSlowdown, Ramp, Scenario, Squeeze, Straggler,
+};
 
 use crate::cost::RecomputePolicy;
 use crate::freeze::{ApfConfig, AutoFreezeConfig, PhaseConfig};
@@ -20,6 +22,13 @@ pub enum ExecMode {
     /// P2P messages, event-sourced Gantt data. The default.
     #[default]
     Event,
+    /// The event engine in bounded work-conserving mode: a rank whose
+    /// planned head is blocked on a late P2P arrival may pull the next
+    /// data-ready action of the same stage instead of idling
+    /// ([`EventEngine::execute_flex`](crate::sim::engine::EventEngine::execute_flex)).
+    /// Deviates from the planned order, so it is *not* covered by the
+    /// bit-identity contract.
+    EventWc,
     /// The analytic fast path: one longest-path sweep per step
     /// (bit-identical to the event engine when no dynamics are active).
     Analytic,
@@ -30,6 +39,7 @@ impl ExecMode {
     pub fn parse(s: &str) -> Option<ExecMode> {
         match s.to_ascii_lowercase().as_str() {
             "event" | "engine" | "des" => Some(ExecMode::Event),
+            "event-wc" | "eventwc" | "wc" => Some(ExecMode::EventWc),
             "analytic" | "fast" | "sweep" => Some(ExecMode::Analytic),
             _ => None,
         }
@@ -39,8 +49,15 @@ impl ExecMode {
     pub fn name(self) -> &'static str {
         match self {
             ExecMode::Event => "event",
+            ExecMode::EventWc => "event-wc",
             ExecMode::Analytic => "analytic",
         }
+    }
+
+    /// Whether batches run through the discrete-event engine (either
+    /// dispatch discipline) rather than the analytic sweep.
+    pub fn is_event(self) -> bool {
+        matches!(self, ExecMode::Event | ExecMode::EventWc)
     }
 }
 
@@ -148,8 +165,17 @@ pub struct ExperimentConfig {
     /// family re-solves the warm-started LP against it. `0` ⇒ the plan
     /// stays static after `T_m` (the paper's Algorithm 1).
     pub replan_interval: usize,
-    /// Which executor runs batches (event-driven or analytic sweep).
+    /// Which executor runs batches (event-driven, work-conserving
+    /// event-driven, or analytic sweep).
     pub exec: ExecMode,
+    /// Divergence-watchdog threshold in sigmas (`--watchdog <sigma>`):
+    /// when any rank's EWMA of realized-vs-planned slack stays beyond
+    /// `sigma` standard deviations of the calm baseline, the watchdog
+    /// fires an event-driven replan ahead of the fixed
+    /// `replan_interval` cadence ([`sim::watchdog`](crate::sim)).
+    /// `None` ⇒ disabled (fixed-interval-only replanning, the pre-
+    /// watchdog behaviour, bit-identical to older builds).
+    pub watchdog: Option<f64>,
     /// Reaction to whole-rank fault events in the scenario. `None` with
     /// a faulting scenario is a configuration error
     /// ([`SimError::RankLost`](crate::sim::SimError)): the user must
@@ -244,6 +270,7 @@ impl ExperimentConfig {
             scenario: None,
             replan_interval: 0,
             exec: ExecMode::Event,
+            watchdog: None,
             recovery: None,
             ckpt_interval: 0,
             net: None,
@@ -333,7 +360,7 @@ impl ExperimentConfig {
     /// optional): `experiment.{schedule, method, ranks, chunks,
     /// microbatches, microbatch_size, seq_len, steps, r_max, seed,
     /// timing_noise, memory_budget, rank_memory_gb, recompute, scenario,
-    /// replan_interval, exec, recovery, ckpt_interval, net}`,
+    /// replan_interval, exec, watchdog, recovery, ckpt_interval, net}`,
     /// `phases.{warmup, monitor, freeze}`,
     /// a `[network]` topology section
     /// ([`Topology::from_toml`](crate::net::Topology::from_toml)),
@@ -342,8 +369,9 @@ impl ExperimentConfig {
     /// array of per-rank GB capacities; `recompute` is
     /// `"off" | "full" | "auto"` or a uniform fraction
     /// ([`RecomputePolicy::parse`]); `scenario` uses the
-    /// [`Scenario::parse`] mini-language; `exec` is `event` or
-    /// `analytic`; `recovery` is `elastic` or `restart`.
+    /// [`Scenario::parse`] mini-language; `exec` is `event`,
+    /// `event-wc`, or `analytic`; `watchdog` is a positive sigma
+    /// threshold (0 disables); `recovery` is `elastic` or `restart`.
     pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<(), String> {
         if let Some(s) = doc.get_str("experiment.schedule") {
             self.schedule =
@@ -410,6 +438,12 @@ impl ExperimentConfig {
         if let Some(s) = doc.get_str("experiment.exec") {
             self.exec =
                 ExecMode::parse(s).ok_or_else(|| format!("unknown exec mode '{s}'"))?;
+        }
+        if let Some(v) = doc.get_f64("experiment.watchdog") {
+            if v < 0.0 || !v.is_finite() {
+                return Err(format!("watchdog sigma {v} must be a finite value ≥ 0"));
+            }
+            self.watchdog = (v > 0.0).then_some(v);
         }
         if let Some(s) = doc.get_str("experiment.recovery") {
             self.recovery = Some(
@@ -529,6 +563,37 @@ mod tests {
         assert!(cfg.apply_toml(&doc).is_err());
         let doc = TomlDoc::parse("[experiment]\nrank_memory_gb = [48.0, -1.0]").unwrap();
         assert!(cfg.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn toml_sets_watchdog_and_wc_exec() {
+        let mut cfg = ExperimentConfig::paper_preset("llama-1b").unwrap();
+        assert_eq!(cfg.watchdog, None);
+        let doc = TomlDoc::parse(
+            "[experiment]\nwatchdog = 3.0\nexec = \"event-wc\"\n\
+             scenario = \"ramp:1x2.0@200-400,burst:0.1@100-150\"",
+        )
+        .unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.watchdog, Some(3.0));
+        assert_eq!(cfg.exec, ExecMode::EventWc);
+        let sc = cfg.scenario.as_ref().unwrap();
+        assert_eq!(sc.ramps.len(), 1);
+        assert_eq!(sc.bursts.len(), 1);
+        assert!(sc.has_dynamics());
+        // 0 disables; negatives are clean errors.
+        let doc = TomlDoc::parse("[experiment]\nwatchdog = 0.0").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.watchdog, None);
+        let doc = TomlDoc::parse("[experiment]\nwatchdog = -1.0").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
+        // Round-trip names and aliases.
+        assert_eq!(ExecMode::parse("event-wc"), Some(ExecMode::EventWc));
+        assert_eq!(ExecMode::parse("wc"), Some(ExecMode::EventWc));
+        assert_eq!(ExecMode::EventWc.name(), "event-wc");
+        assert!(ExecMode::EventWc.is_event());
+        assert!(ExecMode::Event.is_event());
+        assert!(!ExecMode::Analytic.is_event());
     }
 
     #[test]

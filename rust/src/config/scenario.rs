@@ -17,6 +17,19 @@
 //!   every link (node-charged comm and all P2P edges) or on one stage
 //!   boundary's P2P link.
 //!
+//! Two further dynamics vary **within** a batch rather than per step:
+//! a **ramp** (`ramp:<rank>x<factor>@<from>-<until>`) is a transient
+//! straggler whose multiplier climbs linearly from 1 at the window
+//! start to the full factor at the window midpoint and decays back to
+//! 1 — and a **burst** (`burst:<sigma>@<from>-<until>`) is jitter
+//! active only inside its window. Both are sampled *per action start*
+//! by the event executor (at the continuous step coordinate
+//! `step + fraction-of-batch-elapsed`), not frozen per batch, so an
+//! action launched late in a boundary step sees a different multiplier
+//! than one launched early. They therefore require `--exec event`; the
+//! runner rejects them on the analytic path, which has no per-action
+//! start times to sample at.
+//!
 //! All randomness derives from `(scenario seed ⊕ run seed, step, node)`
 //! counters, never from event order, so a fixed seed makes scenario
 //! runs fully deterministic and the event-driven executor stays
@@ -35,6 +48,13 @@
 //! link:0x4.0@100           boundary 0↔1 4× slower from step 100
 //! linkcap:0-1x0.5@200      links routing rank 0 → 1 at half capacity
 //!                          from step 200 (needs a `--net` topology)
+//! ramp:1x2.0@200-400       rank 1 ramps to 2.0× at step 300 and back
+//!                          (transient straggler; needs `--exec event`)
+//! burst:0.2@100-150        σ = 0.2 jitter during steps 100..150 only
+//!                          (needs `--exec event`)
+//! squeeze:0.5@300          memory budget halves from step 300, so
+//!                          replans may turn infeasible (degradation
+//!                          ladder territory)
 //! seed:7                   scenario RNG stream
 //! crash:2@500              rank 2 fails permanently at step 500
 //! preempt:1@300-450        rank 1 is preempted for steps 300..450
@@ -101,6 +121,65 @@ pub struct LinkCap {
     pub onset: usize,
 }
 
+/// A transient straggler (`ramp:<rank>x<factor>@<from>-<until>`): the
+/// rank's compute multiplier climbs linearly from 1 at `from` to
+/// `factor` at the window midpoint, then decays linearly back to 1 at
+/// `until` — a triangular profile sampled per action start by the
+/// event executor (see [`Ramp::factor_at`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Ramp {
+    /// The affected GPU rank.
+    pub rank: usize,
+    /// Peak compute-time multiplier, reached at the window midpoint.
+    pub factor: f64,
+    /// First step of the transient window.
+    pub from: usize,
+    /// First step past the transient window.
+    pub until: usize,
+}
+
+impl Ramp {
+    /// The multiplier at continuous step coordinate `u` (step units;
+    /// the event executor passes `step + fraction-of-batch-elapsed`).
+    /// 1 outside `[from, until)`; inside, a triangular interpolation
+    /// peaking at `factor` at the window midpoint.
+    pub fn factor_at(&self, u: f64) -> f64 {
+        let (a, b) = (self.from as f64, self.until as f64);
+        if u < a || u >= b {
+            return 1.0;
+        }
+        let x = (u - a) / (b - a);
+        let tri = 1.0 - (2.0 * x - 1.0).abs();
+        1.0 + (self.factor - 1.0) * tri
+    }
+}
+
+/// Windowed per-action jitter (`burst:<sigma>@<from>-<until>`): extra
+/// multiplicative noise of stddev `sigma`, applied only to actions
+/// whose continuous start coordinate falls inside `[from, until)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Burst {
+    /// Stddev of the multiplicative jitter inside the window.
+    pub sigma: f64,
+    /// First step of the burst window.
+    pub from: usize,
+    /// First step past the burst window.
+    pub until: usize,
+}
+
+/// A memory-budget squeeze (`squeeze:<factor>@<onset>`): the device
+/// memory budget is scaled by `factor` from `onset`, tightening the
+/// per-stage freeze floors at the next replan — and possibly past
+/// feasibility, exercising the degradation ladder
+/// (`freeze/timely.rs`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Squeeze {
+    /// Budget multiplier (< 1 ⇒ less memory).
+    pub factor: f64,
+    /// First step the squeeze applies to.
+    pub onset: usize,
+}
+
 /// What a [`FaultEvent`] does to its victim.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum FaultKind {
@@ -157,6 +236,14 @@ pub struct Scenario {
     pub links: Vec<LinkSlowdown>,
     /// Fabric-capacity changes (require an active `--net` topology).
     pub linkcaps: Vec<LinkCap>,
+    /// Transient stragglers, sampled per action start (need the event
+    /// executor).
+    pub ramps: Vec<Ramp>,
+    /// Windowed jitter bursts, sampled per action start (need the
+    /// event executor).
+    pub bursts: Vec<Burst>,
+    /// Memory-budget squeezes, applied at replan boundaries.
+    pub squeezes: Vec<Squeeze>,
     /// Whole-rank fault events (crash, preempt, evict-slowest).
     pub faults: Vec<FaultEvent>,
     /// Scenario RNG stream, xor-folded with the run seed.
@@ -172,6 +259,9 @@ impl Default for Scenario {
             jitter_onset: 0,
             links: Vec::new(),
             linkcaps: Vec::new(),
+            ramps: Vec::new(),
+            bursts: Vec::new(),
+            squeezes: Vec::new(),
             faults: Vec::new(),
             seed: 0,
         }
@@ -238,6 +328,39 @@ impl Scenario {
     pub fn with_linkcap(mut self, from: usize, to: usize, factor: f64, onset: usize) -> Scenario {
         assert!(factor > 0.0 && factor.is_finite(), "linkcap factor must be positive");
         self.linkcaps.push(LinkCap { from, to, factor, onset });
+        self
+    }
+
+    /// A transient straggler: `rank` ramps linearly to `factor`× at
+    /// the midpoint of `from..until` and back (the
+    /// `ramp:<rank>x<factor>@<from>-<until>` term).
+    pub fn transient(rank: usize, factor: f64, from: usize, until: usize) -> Scenario {
+        Scenario::calm()
+            .with_ramp(rank, factor, from, until)
+            .relabel(&format!("ramp:{rank}x{factor}@{from}-{until}"))
+    }
+
+    /// Add a transient (triangular) straggler over `from..until`.
+    pub fn with_ramp(mut self, rank: usize, factor: f64, from: usize, until: usize) -> Scenario {
+        assert!(factor > 0.0 && factor.is_finite(), "ramp factor must be positive");
+        assert!(until > from, "ramp window must end after it begins");
+        self.ramps.push(Ramp { rank, factor, from, until });
+        self
+    }
+
+    /// Add a windowed jitter burst over `from..until`.
+    pub fn with_burst(mut self, sigma: f64, from: usize, until: usize) -> Scenario {
+        assert!(sigma >= 0.0 && sigma.is_finite(), "burst sigma must be ≥ 0");
+        assert!(until > from, "burst window must end after it begins");
+        self.bursts.push(Burst { sigma, from, until });
+        self
+    }
+
+    /// Add a memory-budget squeeze: the budget is scaled by `factor`
+    /// from `onset` on, re-evaluated at each replan boundary.
+    pub fn with_squeeze(mut self, factor: f64, onset: usize) -> Scenario {
+        assert!(factor > 0.0 && factor.is_finite(), "squeeze factor must be positive");
+        self.squeezes.push(Squeeze { factor, onset });
         self
     }
 
@@ -346,6 +469,37 @@ impl Scenario {
                         .map_err(|_| format!("bad linkcap rank in '{term}'"))?;
                     sc = sc.with_linkcap(from, to, parse_factor(factor, term)?, onset);
                 }
+                ("ramp", Some(arg)) => {
+                    let shape =
+                        || format!("ramp term '{term}' wants ramp:<rank>x<factor>@<from>-<until>");
+                    let (body, window) = arg.split_once('@').ok_or_else(shape)?;
+                    let (rank, factor) = body.split_once('x').ok_or_else(shape)?;
+                    let rank = rank
+                        .trim()
+                        .parse::<usize>()
+                        .map_err(|_| format!("bad ramp rank in '{term}'"))?;
+                    let factor = parse_factor(factor, term)?;
+                    let (from, until) = parse_window(window, term)?;
+                    sc = sc.with_ramp(rank, factor, from, until);
+                }
+                ("burst", Some(arg)) => {
+                    let shape =
+                        || format!("burst term '{term}' wants burst:<sigma>@<from>-<until>");
+                    let (body, window) = arg.split_once('@').ok_or_else(shape)?;
+                    let sigma = body
+                        .trim()
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|s| *s >= 0.0 && s.is_finite())
+                        .ok_or_else(|| format!("bad burst sigma in '{term}'"))?;
+                    let (from, until) = parse_window(window, term)?;
+                    sc = sc.with_burst(sigma, from, until);
+                }
+                ("squeeze", Some(arg)) => {
+                    let (body, onset) = split_onset(arg)?;
+                    let factor = parse_factor(body, term)?;
+                    sc = sc.with_squeeze(factor, onset);
+                }
                 ("seed", Some(arg)) => {
                     let seed = arg
                         .parse::<u64>()
@@ -408,8 +562,11 @@ impl Scenario {
                         "unknown scenario term '{term}' \
                          (try straggler:<rank>x<factor>[@onset], jitter:<sigma>[@onset], \
                          link:[<boundary>x]<factor>[@onset], \
-                         linkcap:<rankA>-<rankB>x<factor>[@onset], seed:<n>, \
-                         crash:<rank>@<onset>, preempt:<rank>@<from>-<until>, \
+                         linkcap:<rankA>-<rankB>x<factor>[@onset], \
+                         ramp:<rank>x<factor>@<from>-<until>, \
+                         burst:<sigma>@<from>-<until>, squeeze:<factor>[@onset], \
+                         seed:<n>, crash:<rank>@<onset>, \
+                         preempt:<rank>@<from>-<until>, \
                          evict-slowest@<onset>, calm)"
                     ))
                 }
@@ -447,6 +604,14 @@ impl Scenario {
                          has {ranks} ranks"
                     ));
                 }
+            }
+        }
+        for r in &self.ramps {
+            if r.rank >= ranks {
+                return Err(format!(
+                    "scenario ramps rank {} but the pipeline has {ranks} ranks",
+                    r.rank
+                ));
             }
         }
         let mut crashed: Vec<usize> = Vec::new();
@@ -487,7 +652,36 @@ impl Scenario {
             && self.stragglers.iter().all(|s| s.factor == 1.0)
             && self.links.iter().all(|l| l.factor == 1.0)
             && self.linkcaps.iter().all(|l| l.factor == 1.0)
+            && self.ramps.iter().all(|r| r.factor == 1.0)
+            && self.bursts.iter().all(|b| b.sigma == 0.0)
+            && self.squeezes.iter().all(|s| s.factor == 1.0)
             && self.faults.is_empty()
+    }
+
+    /// Whether any within-batch term (`ramp`/`burst`) ever perturbs an
+    /// action — such terms are sampled per action start and need the
+    /// event executor; the runner rejects them on the analytic path.
+    pub fn has_dynamics(&self) -> bool {
+        self.ramps.iter().any(|r| r.factor != 1.0)
+            || self.bursts.iter().any(|b| b.sigma != 0.0)
+    }
+
+    /// The memory-budget multiplier in effect at step `t` (product of
+    /// active squeezes; 1 when none are active).
+    pub fn squeeze_factor(&self, t: usize) -> f64 {
+        self.squeezes
+            .iter()
+            .filter(|s| t >= s.onset)
+            .map(|s| s.factor)
+            .product()
+    }
+
+    /// Whether any memory-squeeze term ever takes effect — such terms
+    /// shrink the memory budget at replan boundaries and need an active
+    /// `--mem-budget` to have a budget to shrink; the runner rejects
+    /// them otherwise.
+    pub fn has_squeezes(&self) -> bool {
+        self.squeezes.iter().any(|s| s.factor != 1.0)
     }
 
     /// Whether any capacity-scaling term ever takes effect — such terms
@@ -579,6 +773,58 @@ impl Scenario {
             .derive(t as u64, node as u64);
         (1.0 + self.jitter_sigma * rng.normal()).max(0.05)
     }
+
+    /// Transient-straggler multiplier of `rank` at continuous step
+    /// coordinate `u` (product of active ramps; see
+    /// [`Ramp::factor_at`]).
+    pub fn ramp_factor(&self, rank: usize, u: f64) -> f64 {
+        self.ramps
+            .iter()
+            .filter(|r| r.rank == rank)
+            .map(|r| r.factor_at(u))
+            .product()
+    }
+
+    /// The effective burst stddev at continuous step coordinate `u`
+    /// (sum of the sigmas of all windows containing `u`).
+    pub fn burst_sigma(&self, u: f64) -> f64 {
+        self.bursts
+            .iter()
+            .filter(|b| u >= b.from as f64 && u < (b.until as f64))
+            .map(|b| b.sigma)
+            .sum()
+    }
+
+    /// Windowed-jitter sample for the action `(step, node)` starting at
+    /// continuous coordinate `u`. The draw is counter-derived from
+    /// `(step, node)` exactly like [`Scenario::jitter_mult`] (a
+    /// distinct salt keeps the two streams independent), but gated by
+    /// `u`, so only actions that actually start inside a burst window
+    /// are perturbed.
+    pub fn burst_mult(&self, run_seed: u64, t: usize, node: usize, u: f64) -> f64 {
+        let sigma = self.burst_sigma(u);
+        if sigma == 0.0 {
+            return 1.0;
+        }
+        let mut rng = Rng::seed_from_u64(self.seed ^ run_seed ^ 0xB0B5_7E11)
+            .derive(t as u64, node as u64);
+        (1.0 + sigma * rng.normal()).max(0.05)
+    }
+
+    /// The combined within-batch multiplier the event executor applies
+    /// at dispatch: ramps on the action's rank × the windowed burst
+    /// draw, both evaluated at the action's continuous start
+    /// coordinate `u = step + fraction-of-batch-elapsed`.
+    pub fn dynamics_mult(
+        &self,
+        run_seed: u64,
+        t: usize,
+        node: usize,
+        rank: usize,
+        u: f64,
+    ) -> f64 {
+        self.ramp_factor(rank, u) * self.burst_mult(run_seed, t, node, u)
+    }
 }
 
 fn split_onset(arg: &str) -> Result<(&str, usize), String> {
@@ -592,6 +838,24 @@ fn split_onset(arg: &str) -> Result<(&str, usize), String> {
             Ok((body, onset))
         }
     }
+}
+
+fn parse_window(s: &str, term: &str) -> Result<(usize, usize), String> {
+    let (from, until) = s
+        .split_once('-')
+        .ok_or_else(|| format!("bad window in '{term}' (wants @<from>-<until>)"))?;
+    let from = from
+        .trim()
+        .parse::<usize>()
+        .map_err(|_| format!("bad onset step in '{term}'"))?;
+    let until = until
+        .trim()
+        .parse::<usize>()
+        .map_err(|_| format!("bad window end in '{term}'"))?;
+    if until <= from {
+        return Err(format!("window in '{term}' must end after it begins"));
+    }
+    Ok((from, until))
 }
 
 fn parse_factor(s: &str, term: &str) -> Result<f64, String> {
@@ -711,6 +975,100 @@ mod tests {
             ("linkcap:0-bx0.5", "bad linkcap rank"),
             ("linkcap:0-1x0", "bad factor"),
             ("linkcap:0-1x0.5@x", "bad onset step"),
+        ] {
+            let err = Scenario::parse(bad).expect_err(bad);
+            assert!(err.contains(needle), "'{bad}': error '{err}' lacks '{needle}'");
+        }
+    }
+
+    #[test]
+    fn ramp_terms_parse_interpolate_and_validate() {
+        let sc = Scenario::parse("ramp:1x3.0@100-200").unwrap();
+        assert_eq!(sc.ramps, vec![Ramp { rank: 1, factor: 3.0, from: 100, until: 200 }]);
+        assert!(sc.has_dynamics());
+        assert!(!sc.is_identity());
+        assert_eq!(sc.to_string(), "ramp:1x3.0@100-200");
+        // Triangular profile: 1 at the edges, the full factor at the
+        // midpoint, linear in between, 1 outside the window.
+        assert_eq!(sc.ramp_factor(1, 99.9), 1.0);
+        assert_eq!(sc.ramp_factor(1, 100.0), 1.0);
+        assert_eq!(sc.ramp_factor(1, 150.0), 3.0);
+        assert!((sc.ramp_factor(1, 125.0) - 2.0).abs() < 1e-12);
+        assert!((sc.ramp_factor(1, 175.0) - 2.0).abs() < 1e-12);
+        assert_eq!(sc.ramp_factor(1, 200.0), 1.0);
+        // Other ranks are untouched.
+        assert_eq!(sc.ramp_factor(0, 150.0), 1.0);
+        // Identity factor parses but perturbs nothing.
+        assert!(Scenario::parse("ramp:0x1.0@0-10").unwrap().is_identity());
+        assert!(!Scenario::parse("ramp:0x1.0@0-10").unwrap().has_dynamics());
+        // Rank bounds come from the fleet size.
+        assert!(sc.validate(2, 2).is_ok());
+        assert!(sc.validate(1, 1).is_err());
+        // The preset matches the parsed form (labels aside: `{}`
+        // renders 3.0 as "3").
+        assert_eq!(Scenario::transient(1, 3.0, 100, 200).ramps, sc.ramps);
+    }
+
+    #[test]
+    fn burst_terms_parse_window_and_sample() {
+        let sc = Scenario::parse("burst:0.2@100-150").unwrap();
+        assert_eq!(sc.bursts, vec![Burst { sigma: 0.2, from: 100, until: 150 }]);
+        assert!(sc.has_dynamics());
+        assert!(!sc.is_identity());
+        assert_eq!(sc.to_string(), "burst:0.2@100-150");
+        assert_eq!(sc.burst_sigma(99.9), 0.0);
+        assert_eq!(sc.burst_sigma(100.0), 0.2);
+        assert_eq!(sc.burst_sigma(149.9), 0.2);
+        assert_eq!(sc.burst_sigma(150.0), 0.0);
+        // Outside the window the multiplier is exactly 1; inside it is
+        // deterministic per (step, node) and independent of the jitter
+        // stream.
+        assert_eq!(sc.burst_mult(42, 99, 0, 99.5), 1.0);
+        let a = sc.burst_mult(42, 120, 7, 120.5);
+        assert_eq!(a, sc.burst_mult(42, 120, 7, 120.5));
+        assert!(a > 0.0);
+        assert_ne!(a, 1.0);
+        assert_ne!(a, sc.burst_mult(42, 121, 7, 121.5));
+        assert_ne!(a, sc.burst_mult(42, 120, 8, 120.5));
+        let jit = Scenario::jittery(0.2);
+        assert_ne!(a, jit.jitter_mult(42, 120, 7));
+        // Zero-sigma bursts parse but perturb nothing.
+        assert!(Scenario::parse("burst:0.0@0-10").unwrap().is_identity());
+        // Overlapping windows stack their sigmas.
+        let two = Scenario::calm().with_burst(0.1, 0, 100).with_burst(0.2, 50, 100);
+        assert!((two.burst_sigma(75.0) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn squeeze_terms_parse_and_gate() {
+        let sc = Scenario::parse("squeeze:0.5@300").unwrap();
+        assert_eq!(sc.squeezes, vec![Squeeze { factor: 0.5, onset: 300 }]);
+        assert!(!sc.is_identity());
+        assert!(!sc.has_dynamics(), "squeeze is a replan-time hook, not a per-action term");
+        assert_eq!(sc.squeeze_factor(299), 1.0);
+        assert_eq!(sc.squeeze_factor(300), 0.5);
+        // Stacked squeezes multiply; identity factor perturbs nothing.
+        let two = Scenario::calm().with_squeeze(0.5, 10).with_squeeze(0.5, 20);
+        assert_eq!(two.squeeze_factor(20), 0.25);
+        assert!(Scenario::parse("squeeze:1.0").unwrap().is_identity());
+    }
+
+    #[test]
+    fn malformed_dynamics_terms_name_the_offence() {
+        for (bad, needle) in [
+            ("ramp:1x2.0", "wants ramp:<rank>x<factor>@<from>-<until>"),
+            ("ramp:2.0@0-10", "wants ramp:<rank>x<factor>@<from>-<until>"),
+            ("ramp:ax2.0@0-10", "bad ramp rank"),
+            ("ramp:1x0@0-10", "bad factor"),
+            ("ramp:1x2.0@10", "bad window"),
+            ("ramp:1x2.0@a-10", "bad onset step"),
+            ("ramp:1x2.0@0-b", "bad window end"),
+            ("ramp:1x2.0@10-10", "must end after it begins"),
+            ("burst:0.1", "wants burst:<sigma>@<from>-<until>"),
+            ("burst:-0.1@0-10", "bad burst sigma"),
+            ("burst:0.1@10-5", "must end after it begins"),
+            ("squeeze:0@10", "bad factor"),
+            ("squeeze:0.5@x", "bad onset step"),
         ] {
             let err = Scenario::parse(bad).expect_err(bad);
             assert!(err.contains(needle), "'{bad}': error '{err}' lacks '{needle}'");

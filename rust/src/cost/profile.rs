@@ -194,6 +194,13 @@ impl FreezableFit {
     /// otherwise by scaling `prior`'s decomposition to the observed
     /// mean (exact for the multiplicative perturbations the scenarios
     /// inject: a straggler slows dgrad and wgrad alike).
+    ///
+    /// The estimate is hardened against degenerate windows: the split is
+    /// always clamped non-negative and ordered (`0 ≤ wgrad ≤ hi`), a fit
+    /// whose slope comes out positive (duration *growing* with freezing
+    /// — unphysical, i.e. noise-dominated) falls back to the prior
+    /// scaling, and a window poisoned by non-finite observations falls
+    /// back to the prior's bounds outright.
     fn estimate(&self, s: usize, prior: &CostModel) -> Option<(f64, f64)> {
         let kind = self.kind?;
         let (n, mx, my) = (self.n, self.sx / self.n, self.sy / self.n);
@@ -205,17 +212,43 @@ impl FreezableFit {
         // fallback is the better estimator there.
         if sxx_c > 1e-3 * n {
             let slope = sxy_c / sxx_c;
-            let wgrad = (-slope).max(0.0);
-            let hi = my + wgrad * mx;
-            return Some((hi, wgrad.min(hi)));
+            if slope.is_finite() && slope <= 0.0 {
+                let wgrad = -slope;
+                return Some(clamp_split(my + wgrad * mx, wgrad));
+            }
+            // Positive or non-finite slope: ill-conditioned fit, fall
+            // through to the prior-scale estimator.
         }
         let probe = Action { kind, mb: 0, stage: s };
+        let (lo_p, hi_p) = prior.bounds(probe);
+        if !my.is_finite() || my < 0.0 {
+            // The window itself is poisoned (NaN/∞ observations): the
+            // prior's unscaled decomposition is the only sane estimate.
+            return Some(clamp_split(hi_p, hi_p - lo_p));
+        }
         let expected = prior.duration(probe, mx);
         let scale = if expected > 0.0 { my / expected } else { 1.0 };
-        let (lo_p, hi_p) = prior.bounds(probe);
         let wgrad = ((hi_p - lo_p) * scale).max(0.0);
-        let hi = my + wgrad * mx;
-        Some((hi, wgrad.min(hi)))
+        Some(clamp_split(my + wgrad * mx, wgrad))
+    }
+}
+
+/// Sanitize an estimated `(hi, wgrad)` split: both finite, `hi ≥ 0`,
+/// and `0 ≤ wgrad ≤ hi`, so downstream LP bounds are always ordered.
+fn clamp_split(hi: f64, wgrad: f64) -> (f64, f64) {
+    let hi = if hi.is_finite() { hi.max(0.0) } else { 0.0 };
+    let wgrad = if wgrad.is_finite() { wgrad.clamp(0.0, hi) } else { 0.0 };
+    (hi, wgrad)
+}
+
+/// An observed per-stage mean that is usable as a cost entry; anything
+/// non-finite or negative falls back to the prior's value for the
+/// stage, so one poisoned sample cannot corrupt a whole replan.
+fn sane(v: f64, fallback: f64) -> f64 {
+    if v.is_finite() && v >= 0.0 {
+        v
+    } else {
+        fallback
     }
 }
 
@@ -317,9 +350,9 @@ impl ProfileRecorder {
                 }
             };
             rows.push(StageProfile {
-                fwd: fs / fn_,
-                dgrad,
-                wgrad,
+                fwd: sane(fs / fn_, prior.stage_fwd(s)),
+                dgrad: sane(dgrad, prior.stage_dgrad(s)),
+                wgrad: sane(wgrad, prior.stage_wgrad(s)),
                 optimizer: 0.0,
                 link: 0.0,
             });
@@ -445,6 +478,76 @@ mod tests {
         let model = rec.to_profile(&prior).unwrap().to_model(2);
         assert!((model.stage_dgrad(0) - 1.3).abs() < 1e-9);
         assert!((model.stage_wgrad(0) - 0.9).abs() < 1e-9);
+    }
+
+    /// A constant-afr window (every backward at one ratio) has zero
+    /// spread regardless of sample count; the fallback must keep the
+    /// split ordered and scale the prior exactly.
+    #[test]
+    fn recorder_constant_afr_window_stays_ordered() {
+        let prior = CostProfile::uniform(1.0, 1.3, 0.9, 0.0).to_model(2);
+        let mut rec = ProfileRecorder::new(2);
+        for s in 0..2 {
+            for _ in 0..16 {
+                rec.record(Action::f(0, s), 0.0, 1.0);
+                let afr = 0.6;
+                rec.record(Action::b(0, s), afr, 2.0 * prior.duration(Action::b(0, s), afr));
+            }
+        }
+        let model = rec.to_profile(&prior).unwrap().to_model(2);
+        for s in 0..2 {
+            assert!((model.stage_dgrad(s) - 2.0 * 1.3).abs() < 1e-9);
+            assert!((model.stage_wgrad(s) - 2.0 * 0.9).abs() < 1e-9);
+            assert!(model.stage_wgrad(s) >= 0.0);
+            assert!(model.stage_dgrad(s) >= 0.0);
+        }
+    }
+
+    /// Adversarial noise that makes duration *grow* with the freeze
+    /// ratio (a positive OLS slope — unphysical) must not zero out the
+    /// split; the estimator falls back to scaling the prior instead.
+    #[test]
+    fn recorder_positive_slope_falls_back_to_prior() {
+        let prior = CostProfile::uniform(1.0, 1.3, 0.9, 0.0).to_model(1);
+        let mut rec = ProfileRecorder::new(1);
+        for afr in [0.0, 0.25, 0.5, 0.75] {
+            rec.record(Action::f(0, 0), 0.0, 1.0);
+            // Duration increases with afr: slope is firmly positive.
+            rec.record(Action::b(0, 0), afr, 1.3 + afr * 0.5);
+        }
+        let model = rec.to_profile(&prior).unwrap().to_model(1);
+        assert!(model.stage_wgrad(0) > 0.0, "fallback keeps the stage freezable");
+        assert!(model.stage_wgrad(0).is_finite() && model.stage_dgrad(0).is_finite());
+        assert!(model.stage_dgrad(0) >= 0.0);
+        // The split stays bounded by the observed afr=0 cost.
+        let (lo, hi) = model.bounds(Action::b(0, 0));
+        assert!(0.0 <= lo && lo <= hi, "bounds ordered: {lo} {hi}");
+    }
+
+    /// Poisoned observations (NaN / infinite durations) never leak into
+    /// the distilled table — every row clamps finite and non-negative,
+    /// falling back to the prior's per-stage values.
+    #[test]
+    fn recorder_non_finite_samples_do_not_poison_profile() {
+        let prior = CostProfile::uniform(1.0, 1.3, 0.9, 0.0).to_model(2);
+        let mut rec = ProfileRecorder::new(2);
+        for s in 0..2 {
+            rec.record(Action::f(0, s), 0.0, if s == 0 { f64::NAN } else { 1.0 });
+            rec.record(Action::b(0, s), 0.3, if s == 1 { f64::INFINITY } else { 1.8 });
+            rec.record(Action::f(0, s), 0.0, 1.0);
+            rec.record(Action::b(0, s), 0.3, 1.8);
+        }
+        let model = rec.to_profile(&prior).unwrap().to_model(2);
+        for s in 0..2 {
+            for v in [model.stage_fwd(s), model.stage_dgrad(s), model.stage_wgrad(s)] {
+                assert!(v.is_finite() && v >= 0.0, "stage {s}: {v}");
+            }
+            let (lo, hi) = model.bounds(Action::b(0, s));
+            assert!(lo.is_finite() && hi.is_finite() && 0.0 <= lo && lo <= hi);
+        }
+        // The poisoned stages fall back to the prior's values.
+        assert!((model.stage_fwd(0) - prior.stage_fwd(0)).abs() < 1e-9);
+        assert!((model.stage_wgrad(1) - prior.stage_wgrad(1)).abs() < 1e-9);
     }
 
     #[test]

@@ -93,12 +93,20 @@ impl Controller for Hybrid {
         self.timely.replan_with_profile(profile);
     }
 
+    fn set_stage_floor(&mut self, floor: Option<Vec<f64>>) {
+        self.timely.set_stage_floor(floor);
+    }
+
     fn planned_batch_time(&self) -> Option<f64> {
         Controller::planned_batch_time(&self.timely)
     }
 
     fn replan_failures(&self) -> usize {
         Controller::replan_failures(&self.timely)
+    }
+
+    fn degradation(&self) -> Option<&crate::freeze::DegradationReport> {
+        Controller::degradation(&self.timely)
     }
 
     fn replan_with_model(&mut self, cost: &crate::cost::CostModel) {

@@ -113,6 +113,98 @@ impl FreezePlan {
     }
 }
 
+/// Which rung of the degraded-mode ladder a failed replan landed on.
+/// Ordered by severity: reusing the last feasible plan is the mildest
+/// response, dropping to no-freeze safe mode the most drastic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DegradationRung {
+    /// First consecutive failure with a feasible plan installed: keep
+    /// executing that plan unchanged — it is still valid for the world
+    /// it was solved in.
+    ReuseLastPlan,
+    /// Sustained failure: replace `r*` with the memory floor clamped
+    /// into `[0, r_max]` — the cheapest ratios that still fit the
+    /// device budget, with no optimality claim.
+    HeuristicFloor,
+    /// Ladder exhausted (or no floor to clamp to): freeze nothing until
+    /// a solve succeeds again. Slow but always safe.
+    SafeMode,
+}
+
+impl DegradationRung {
+    /// Stable lower-case name for reports and JSON output.
+    pub fn name(self) -> &'static str {
+        match self {
+            DegradationRung::ReuseLastPlan => "reuse-last-plan",
+            DegradationRung::HeuristicFloor => "heuristic-floor",
+            DegradationRung::SafeMode => "safe-mode",
+        }
+    }
+}
+
+/// One failed replan and how the controller degraded around it.
+#[derive(Clone, Debug)]
+pub struct DegradationEvent {
+    /// Training step at which the failed replan was attempted (0 when
+    /// the controller was driven outside a stepped run).
+    pub step: usize,
+    /// Human-readable cause — the LP error, memory infeasibility, or
+    /// whatever made the solve impossible.
+    pub cause: String,
+    /// Which rung of the solver's own fallback ladder the failing
+    /// attempt last reported (`None` before any solve completed).
+    pub solve_path: Option<crate::lp::SolvePath>,
+    /// The degraded-mode rung the controller fell to.
+    pub rung: DegradationRung,
+}
+
+/// Structured record of every degraded-mode episode of a run — the
+/// replacement for the bare `replan_failures` counter. Populated by the
+/// TimelyFreeze family, carried through
+/// [`SimResult`](crate::sim::SimResult), and printed under
+/// `TF_BENCH_JSON`.
+#[derive(Clone, Debug, Default)]
+pub struct DegradationReport {
+    /// Failed replans in attempt order. The TimelyFreeze family caps
+    /// this log at [`timely::DEGRADATION_LOG_CAP`] entries so a run
+    /// that never recovers cannot grow it unboundedly; the
+    /// `replan_failures` counter keeps the full tally.
+    pub events: Vec<DegradationEvent>,
+}
+
+impl DegradationReport {
+    /// No degraded-mode episode occurred.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Number of failed replans recorded.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The most severe rung any failure reached (`None` when clean).
+    pub fn worst(&self) -> Option<DegradationRung> {
+        self.events.iter().map(|e| e.rung).max()
+    }
+
+    /// One-line summary for CLI warnings:
+    /// `3 failed replans (worst rung: safe-mode), first at step 120: <cause>`.
+    pub fn summary(&self) -> String {
+        match (self.events.first(), self.worst()) {
+            (Some(first), Some(worst)) => format!(
+                "{} failed replan{} (worst rung: {}), first at step {}: {}",
+                self.events.len(),
+                if self.events.len() == 1 { "" } else { "s" },
+                worst.name(),
+                first.step,
+                first.cause
+            ),
+            _ => "no degraded-mode episodes".to_string(),
+        }
+    }
+}
+
 /// Common interface of all freezing methods.
 pub trait Controller: Send {
     /// Which method this controller implements.
@@ -142,6 +234,14 @@ pub trait Controller: Send {
     /// metric-only baselines have no plan to revise and ignore it.
     fn replan_with_profile(&mut self, _profile: &crate::cost::CostProfile) {}
 
+    /// Replace the per-stage memory floor mid-run — the runner's
+    /// `squeeze:` scenario hook tightens it at replan boundaries when
+    /// the simulated memory budget shrinks. A floor the LP cannot
+    /// satisfy makes the next re-solve fail into the degraded-mode
+    /// ladder rather than crash. Metric-only baselines have no floor
+    /// and ignore it.
+    fn set_stage_floor(&mut self, _floor: Option<Vec<f64>>) {}
+
     /// The batch time the current plan expects (`P_d*` of the last LP
     /// solve); `None` for controllers without a planning model. Paired
     /// with realized step times, this is the planned-vs-realized gap the
@@ -151,11 +251,18 @@ pub trait Controller: Send {
     }
 
     /// Replanning attempts whose LP fallback ladder exhausted without a
-    /// feasible solution. The controller keeps executing its last
-    /// feasible plan in that case (graceful degradation); this counter
-    /// surfaces how often it had to.
+    /// feasible solution. The controller degrades through the ladder of
+    /// [`DegradationRung`]s in that case; this counter surfaces how
+    /// often it had to.
     fn replan_failures(&self) -> usize {
         0
+    }
+
+    /// The structured degraded-mode record, if the controller keeps one
+    /// (TimelyFreeze family). `None` for metric-only baselines, which
+    /// have no plan that can fail.
+    fn degradation(&self) -> Option<&DegradationReport> {
+        None
     }
 
     /// Re-solve the plan directly against a [`CostModel`] — the elastic

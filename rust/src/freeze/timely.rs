@@ -20,13 +20,21 @@
 
 use crate::cost::{peak_inflight, CostModel};
 use crate::freeze::layout::ModelLayout;
-use crate::freeze::{Controller, FreezePlan, PhaseConfig};
+use crate::freeze::{
+    Controller, DegradationEvent, DegradationReport, DegradationRung, FreezePlan, PhaseConfig,
+};
 use crate::graph::pipeline::{Node, PipelineDag};
 use crate::lp::{FreezeLpInput, FreezeLpSolver, FreezeSolution};
 use crate::schedule::Schedule;
 use crate::types::{Action, FreezeMethod};
 use crate::util::stats::Accum;
 use std::collections::BTreeMap;
+
+/// Ceiling on recorded [`DegradationEvent`]s per controller. A run that
+/// never recovers fails one replan per attempt indefinitely; only an
+/// episode's first descents are informative, so the structured log
+/// stops growing here while `replan_failures` keeps the full tally.
+pub const DEGRADATION_LOG_CAP: usize = 256;
 
 /// Tunables of the TimelyFreeze controller.
 #[derive(Clone, Copy, Debug)]
@@ -99,10 +107,19 @@ pub struct TimelyFreeze {
     /// LP solve.
     scratch_w_min: Vec<f64>,
     scratch_w_max: Vec<f64>,
-    /// Solve attempts whose LP fallback ladder exhausted while a
-    /// feasible plan was already installed; the controller kept that
-    /// plan (graceful degradation) instead of disabling freezing.
+    /// Solve attempts whose LP fallback ladder exhausted; the
+    /// controller fell down the degraded-mode ladder
+    /// ([`DegradationRung`]) instead of crashing.
     replan_failures: usize,
+    /// Consecutive failed solves since the last success — the index
+    /// into the degraded-mode ladder. Reset to zero by any successful
+    /// solve.
+    consecutive_failures: usize,
+    /// Structured record of every degraded-mode episode.
+    degradation: DegradationReport,
+    /// Latest training step seen via `plan` / `record_time`, stamped
+    /// onto degradation events (replan entry points carry no step).
+    cur_step: usize,
     #[allow(dead_code)]
     layout: ModelLayout,
 }
@@ -135,6 +152,9 @@ impl TimelyFreeze {
             scratch_w_min: Vec::new(),
             scratch_w_max: Vec::new(),
             replan_failures: 0,
+            consecutive_failures: 0,
+            degradation: DegradationReport::default(),
+            cur_step: 0,
             layout,
         }
     }
@@ -429,29 +449,84 @@ impl TimelyFreeze {
                 }
                 self.expected = Some(expected);
                 self.solution = Some(sol);
+                self.consecutive_failures = 0;
             }
-            Err(e) => {
-                if self.solution.is_some() {
-                    // Graceful degradation: a mid-run replan whose
-                    // fallback ladder exhausted keeps executing the last
-                    // feasible plan — dropping to freeze-nothing would
-                    // discard a solution that is still valid for the
-                    // world it was solved in.
-                    self.replan_failures += 1;
-                    eprintln!(
-                        "timelyfreeze: LP failed ({e}); keeping last feasible plan \
-                         (failure #{})",
-                        self.replan_failures
-                    );
-                } else {
-                    // No feasible plan has ever existed — fail safe:
-                    // freeze nothing rather than crash training.
-                    eprintln!("timelyfreeze: LP failed ({e}); disabling freezing");
-                    self.expected = Some(BTreeMap::new());
-                    self.solution = None;
+            Err(e) => self.degrade(format!("{e}")),
+        }
+    }
+
+    /// Fall one rung down the degraded-mode ladder after a failed solve
+    /// (*reuse-last-plan → floor-clamped heuristic ratios → no-freeze
+    /// safe mode*), recording a structured [`DegradationEvent`]. The
+    /// next successful solve restores normal planning and resets the
+    /// ladder; the event log is append-only for the life of the run,
+    /// capped at [`DEGRADATION_LOG_CAP`] entries (the failure counters
+    /// keep counting past the cap).
+    fn degrade(&mut self, cause: String) {
+        self.replan_failures += 1;
+        self.consecutive_failures += 1;
+        // A failure with no feasible plan installed has nothing to
+        // reuse: it enters the ladder one rung down.
+        let depth = if self.solution.is_some() {
+            self.consecutive_failures
+        } else {
+            self.consecutive_failures + 1
+        };
+        let rung = match depth {
+            1 => DegradationRung::ReuseLastPlan,
+            2 if self.stage_floor.is_some() => DegradationRung::HeuristicFloor,
+            _ => DegradationRung::SafeMode,
+        };
+        match rung {
+            DegradationRung::ReuseLastPlan => {
+                // The last feasible plan is still valid for the world
+                // it was solved in; keep executing it unchanged.
+            }
+            DegradationRung::HeuristicFloor => {
+                // No optimality claim: every freezable action gets its
+                // stage's memory floor, clamped into [0, r_max] — the
+                // cheapest ratios that still fit the device budget.
+                let floor = self.stage_floor.as_deref().unwrap();
+                let mut expected = BTreeMap::new();
+                for a in &self.freezable {
+                    expected.insert(*a, floor[a.stage].clamp(0.0, self.cfg.r_max));
                 }
+                self.expected = Some(expected);
+                // The stale LP solution no longer describes the plan;
+                // planned_batch_time must not report it.
+                self.solution = None;
+            }
+            DegradationRung::SafeMode => {
+                self.expected = Some(BTreeMap::new());
+                self.solution = None;
             }
         }
+        // Rate-limit the console warning: a run stuck in safe mode can
+        // fail one replan per interval (or watchdog trigger) for
+        // thousands of steps, and every failure past the ladder's last
+        // rung carries no new information. Each episode prints its
+        // first three descents; the counters keep the full tally.
+        if self.consecutive_failures <= 3 {
+            eprintln!(
+                "timelyfreeze: LP failed at step {} ({cause}); degrading to {} (failure #{})",
+                self.cur_step,
+                rung.name(),
+                self.replan_failures
+            );
+        }
+        if self.degradation.events.len() < DEGRADATION_LOG_CAP {
+            self.degradation.events.push(DegradationEvent {
+                step: self.cur_step,
+                cause,
+                solve_path: self.solver.last_solve_path(),
+                rung,
+            });
+        }
+    }
+
+    /// The structured degraded-mode record of this controller.
+    pub fn degradation(&self) -> &DegradationReport {
+        &self.degradation
     }
 }
 
@@ -461,6 +536,7 @@ impl Controller for TimelyFreeze {
     }
 
     fn plan(&mut self, t: usize) -> FreezePlan {
+        self.cur_step = self.cur_step.max(t);
         match self.phase(t) {
             Phase::Warmup | Phase::MonitorUpper => FreezePlan::none(),
             Phase::MonitorLower => {
@@ -489,6 +565,7 @@ impl Controller for TimelyFreeze {
     }
 
     fn record_time(&mut self, t: usize, action: Action, duration: f64) {
+        self.cur_step = self.cur_step.max(t);
         match self.phase(t) {
             Phase::MonitorUpper => {
                 self.upper.entry(action).or_insert_with(Accum::new).push(duration);
@@ -508,12 +585,20 @@ impl Controller for TimelyFreeze {
         TimelyFreeze::replan_with_profile(self, profile);
     }
 
+    fn set_stage_floor(&mut self, floor: Option<Vec<f64>>) {
+        TimelyFreeze::set_stage_floor(self, floor);
+    }
+
     fn planned_batch_time(&self) -> Option<f64> {
         self.solution.as_ref().map(|s| s.batch_time)
     }
 
     fn replan_failures(&self) -> usize {
         self.replan_failures
+    }
+
+    fn degradation(&self) -> Option<&DegradationReport> {
+        Some(&self.degradation)
     }
 
     fn replan_with_model(&mut self, cost: &crate::cost::CostModel) {
@@ -783,6 +868,71 @@ mod tests {
         tf.replan(None);
         assert_eq!(Controller::replan_failures(&tf), 2);
         assert!(tf.solution().is_some());
+    }
+
+    #[test]
+    fn degradation_ladder_descends_and_recovers() {
+        let (mut tf, schedule) = make(0.8);
+        drive_monitoring(&mut tf, &schedule);
+        tf.plan(31);
+        assert!(tf.degradation().is_empty());
+        // An infeasible floor makes every solve fail; consecutive
+        // failures walk the ladder one rung at a time.
+        tf.set_stage_floor(Some(vec![0.9; 4]));
+        tf.replan(None); // #1: reuse last plan
+        assert!(tf.solution().is_some());
+        assert!(tf.plan(40).afr.values().any(|&r| r > 0.0));
+        tf.replan(None); // #2: heuristic floor, clamped to r_max
+        assert!(tf.solution().is_none(), "stale LP solution must not be reported");
+        let exp = tf.expected_ratios().unwrap();
+        assert!(!exp.is_empty());
+        assert!(exp.values().all(|&r| (r - 0.8).abs() < 1e-12), "floor 0.9 clamps to r_max");
+        tf.replan(None); // #3: safe mode
+        assert!(tf.expected_ratios().unwrap().is_empty());
+        assert!(tf.plan(60).afr.is_empty(), "safe mode freezes nothing");
+        let rungs: Vec<_> = tf.degradation().events.iter().map(|e| e.rung).collect();
+        assert_eq!(
+            rungs,
+            vec![
+                DegradationRung::ReuseLastPlan,
+                DegradationRung::HeuristicFloor,
+                DegradationRung::SafeMode
+            ]
+        );
+        assert_eq!(tf.degradation().worst(), Some(DegradationRung::SafeMode));
+        assert!(tf.degradation().events.iter().all(|e| !e.cause.is_empty()));
+        assert!(tf.degradation().events.iter().all(|e| e.step >= 31));
+        assert!(tf.degradation().summary().contains("safe-mode"));
+        // A feasible solve restores normal planning; the event log is
+        // append-only and the ladder resets.
+        tf.set_stage_floor(None);
+        tf.replan(None);
+        assert!(tf.solution().is_some());
+        assert!(tf.plan(61).afr.values().any(|&r| r > 0.0));
+        assert_eq!(tf.degradation().len(), 3);
+        assert_eq!(Controller::replan_failures(&tf), 3);
+        // The next failure starts over at the mildest rung.
+        tf.set_stage_floor(Some(vec![0.9; 4]));
+        tf.replan(None);
+        assert_eq!(tf.degradation().events[3].rung, DegradationRung::ReuseLastPlan);
+    }
+
+    #[test]
+    fn first_failure_without_plan_skips_reuse_rung() {
+        // A failure before any feasible plan exists has nothing to
+        // reuse: the ladder enters at the heuristic-floor rung (floor
+        // present) and the expected ratios are the clamped floor.
+        let (mut tf, _schedule) = make(0.8);
+        tf.set_stage_floor(Some(vec![0.9; 4]));
+        tf.replan(None);
+        assert_eq!(tf.degradation().events[0].rung, DegradationRung::HeuristicFloor);
+        let exp = tf.expected_ratios().unwrap();
+        assert!(exp.values().all(|&r| (r - 0.8).abs() < 1e-12));
+        // A second consecutive failure still without a plan exhausts
+        // the ladder: safe mode, nothing frozen.
+        tf.replan(None);
+        assert_eq!(tf.degradation().events[1].rung, DegradationRung::SafeMode);
+        assert!(tf.expected_ratios().unwrap().is_empty());
     }
 
     #[test]

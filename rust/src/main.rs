@@ -39,7 +39,8 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "recovery", takes_value: true, help: "fault recovery strategy: elastic | restart (from-scratch baseline)" },
         FlagSpec { name: "ckpt-interval", takes_value: true, help: "microbatch checkpoint cadence for elastic recovery (0 = step boundaries only)" },
         FlagSpec { name: "replan", takes_value: true, help: "online replanning cadence in steps (0 = static plan)" },
-        FlagSpec { name: "exec", takes_value: true, help: "executor: event (discrete-event engine) | analytic (fast sweep)" },
+        FlagSpec { name: "watchdog", takes_value: true, help: "divergence watchdog threshold in sigmas; fires an event-driven replan on sustained realized-vs-planned divergence" },
+        FlagSpec { name: "exec", takes_value: true, help: "executor: event (discrete-event engine) | event-wc (bounded work-conserving dispatch) | analytic (fast sweep)" },
         FlagSpec { name: "seed", takes_value: true, help: "random seed" },
         FlagSpec { name: "ranks", takes_value: true, help: "pipeline ranks (GPUs)" },
         FlagSpec { name: "microbatches", takes_value: true, help: "microbatches per step" },
@@ -164,9 +165,15 @@ fn build_sim_config(args: &Args) -> Result<ExperimentConfig, String> {
     if let Some(v) = args.flag_usize("replan")? {
         cfg.replan_interval = v;
     }
+    if let Some(v) = args.flag_f64("watchdog")? {
+        if !(v > 0.0) || !v.is_finite() {
+            return Err(format!("watchdog sigma {v} must be positive and finite"));
+        }
+        cfg.watchdog = Some(v);
+    }
     if let Some(s) = args.flag("exec") {
         cfg.exec = timelyfreeze::config::ExecMode::parse(s)
-            .ok_or_else(|| format!("bad exec mode '{s}' (event|analytic)"))?;
+            .ok_or_else(|| format!("bad exec mode '{s}' (event|event-wc|analytic)"))?;
     }
     if let Some(v) = args.flag_u64("seed")? {
         cfg.seed = v;
@@ -260,6 +267,20 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
             "  planned P_d*    {:>10.4} s ({} replans)",
             planned, r.replans
         );
+    }
+    if !r.watchdog_triggers.is_empty() {
+        let shown: Vec<String> =
+            r.watchdog_triggers.iter().take(6).map(|t| t.to_string()).collect();
+        let more = r.watchdog_triggers.len().saturating_sub(shown.len());
+        let tail = if more > 0 { format!(" (+{more} more)") } else { String::new() };
+        println!(
+            "  watchdog        {:>10} trigger(s) at steps {}{tail}",
+            r.watchdog_triggers.len(),
+            shown.join(", ")
+        );
+    }
+    if !r.degradation.is_empty() {
+        println!("  warning: {}", r.degradation.summary());
     }
     if let Some(rho) = &r.recompute {
         println!(
@@ -468,7 +489,7 @@ fn cmd_lp(args: &Args) -> Result<(), String> {
     // simulator's controller would: the contention-aware (e0, traffic)
     // split for the event executor, constant expected costs otherwise.
     let edge_comm = net.as_ref().map(|nm| {
-        let pricing = if cfg.exec == timelyfreeze::config::ExecMode::Event {
+        let pricing = if cfg.exec.is_event() {
             sim::NetLpPricing::Contended
         } else {
             sim::NetLpPricing::Expected

@@ -835,6 +835,10 @@ pub fn run_faulted(
         replan_latency_s: Vec::new(),
         recompute: world.recompute.clone(),
         replan_failures: world.controller.replan_failures(),
+        degradation: world.controller.degradation().cloned().unwrap_or_default(),
+        // The elastic path replans structurally (repartition) rather
+        // than on divergence; the watchdog rides the plain step loop.
+        watchdog_triggers: Vec::new(),
         faults: faults_fired,
         lost_microbatches,
         recovery_time_s,

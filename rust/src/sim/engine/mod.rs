@@ -70,6 +70,7 @@ use crate::graph::dag::{Csr, Frontier};
 use crate::graph::pipeline::PipelineDag;
 use crate::net::FairShareFabric;
 use crate::schedule::Schedule;
+use crate::types::{Action, ActionKind};
 
 /// Events of one batch execution.
 #[derive(Clone, Copy, Debug)]
@@ -97,6 +98,37 @@ enum Event {
     /// The victim rank dies (only queued by
     /// [`EventEngine::execute_with_fault`]).
     Fault,
+}
+
+/// Whether `u → v` is a rules 2–3 precedence edge of the batch DAG —
+/// a true data/ordering dependency, as opposed to a rule-4 edge that
+/// merely encodes the planned device order. The work-conserving
+/// executor mode may relax rule-4-only edges (run a rank's actions out
+/// of planned order) but never these (see
+/// [`structural_edges`](crate::graph::pipeline::structural_edges),
+/// whose pairwise form this mirrors).
+fn is_data_dep(u: Action, v: Action) -> bool {
+    use ActionKind::*;
+    // Rule 2a: microbatch order within a stage.
+    if v.kind == u.kind && v.stage == u.stage && v.mb == u.mb + 1 {
+        return true;
+    }
+    match u.kind {
+        Forward => {
+            (v.kind == Forward && v.mb == u.mb && v.stage == u.stage + 1)
+                || ((v.kind == Backward || v.kind == BackwardDgrad)
+                    && v.mb == u.mb
+                    && v.stage == u.stage)
+        }
+        Backward => {
+            v.kind == Backward && v.mb == u.mb && u.stage > 0 && v.stage == u.stage - 1
+        }
+        BackwardDgrad => {
+            (v.kind == BackwardDgrad && v.mb == u.mb && u.stage > 0 && v.stage == u.stage - 1)
+                || (v.kind == BackwardWgrad && v.mb == u.mb && v.stage == u.stage)
+        }
+        BackwardWgrad => false,
+    }
 }
 
 /// Queue one epoch-stamped completion event per live fabric transfer
@@ -166,6 +198,29 @@ pub struct EventEngine {
     /// Rank killed by the current faulted execution (`None` on the
     /// normal path and before the fault fires).
     dead_rank: Option<usize>,
+    /// Per-CSR-edge flag: `true` for rules 1–3 precedence edges (data
+    /// dependencies plus the abstract source/dest wiring), `false` for
+    /// pure rule-4 device-order edges — the ones the flex path may
+    /// relax.
+    edge_is_data: Vec<bool>,
+    /// Incoming data-edge count per node.
+    data_indeg: Vec<u32>,
+    /// Unarrived data edges per node (flex runs only).
+    data_unmet: Vec<u32>,
+    /// Finished flags (flex runs only).
+    done: Vec<bool>,
+    /// Virtual stage per node (`usize::MAX` for source/dest) — the
+    /// work-conserving pull is restricted to the blocked head's stage.
+    node_stage: Vec<usize>,
+    /// Realized per-node durations of the last [`EventEngine::execute_flex`]
+    /// run — `weights[v] · dynamics(v, start)`, the quantity observers
+    /// (profile recorder, watchdog) must see instead of the pre-dynamics
+    /// weights.
+    durs: Vec<f64>,
+    /// The schedule this engine replays — kept as the
+    /// [`Schedule::check_legal`] oracle for the work-conserving mode's
+    /// realized orders (debug builds assert them legal).
+    sched: Schedule,
 }
 
 impl EventEngine {
@@ -193,6 +248,30 @@ impl EventEngine {
         }
         let csr = pdag.csr.clone();
         let frontier = Frontier::new(&csr);
+        // Classify every edge once: rules 1–3 precedence vs pure rule-4
+        // device order (dedup at build time can merge the two, so a
+        // data edge stays data even when rule 4 also implies it).
+        let mut edge_is_data = vec![false; csr.edge_count()];
+        let mut data_indeg = vec![0u32; n];
+        let mut node_stage = vec![usize::MAX; n];
+        for id in 0..n {
+            if let Some(a) = pdag.node_action(id) {
+                node_stage[id] = a.stage;
+            }
+        }
+        for u in 0..n {
+            for e in csr.edge_range(u) {
+                let v = csr.edge_dst(e);
+                let data = match (pdag.node_action(u), pdag.node_action(v)) {
+                    (None, _) | (_, None) => true,
+                    (Some(a), Some(b)) => is_data_dep(a, b),
+                };
+                edge_is_data[e] = data;
+                if data {
+                    data_indeg[v] += 1;
+                }
+            }
+        }
         // Worst case per batch: one Finish per node plus one Arrive per
         // edge — size the heap once so `execute`'s `clear()` never
         // reallocates across steps.
@@ -208,6 +287,13 @@ impl EventEngine {
             starts: vec![0.0; n],
             executed: 0,
             dead_rank: None,
+            edge_is_data,
+            data_indeg,
+            data_unmet: vec![0; n],
+            done: vec![false; n],
+            node_stage,
+            durs: vec![0.0; n],
+            sched: schedule.clone(),
         }
     }
 
@@ -269,6 +355,195 @@ impl EventEngine {
         );
         // Destination has zero weight: its start *is* the batch time.
         self.starts[self.dest]
+    }
+
+    /// Execute one batch with **per-action-start dynamics** and an
+    /// optional **work-conserving** dispatch mode — a separate loop, so
+    /// the bit-identity contract of [`EventEngine::execute`] cannot
+    /// regress.
+    ///
+    /// `dynamics(node, start)` returns the multiplier applied to
+    /// `weights[node]` for an action dispatched at simulated instant
+    /// `start` — this is where within-batch scenario terms
+    /// (`ramp`/`burst`, see
+    /// [`Scenario::dynamics_mult`](crate::config::Scenario::dynamics_mult))
+    /// are sampled *per action start* rather than frozen per batch. An
+    /// identity closure with `work_conserving = false` reproduces
+    /// [`EventEngine::execute`] bit for bit: readiness here counts only
+    /// rules 1–3 precedence edges, but for an in-order head the rank's
+    /// `free_at` already dominates every same-rank rule-4 arrival, and
+    /// `f64::max` is exact, so the dispatch instants agree exactly
+    /// (pinned by this module's tests).
+    ///
+    /// With `work_conserving = true`, a rank whose planned head is
+    /// blocked (typically on a late P2P arrival) pulls the *first*
+    /// later action in its own planned order that (a) has every rules
+    /// 1–3 dependency satisfied and (b) belongs to the blocked head's
+    /// virtual stage — the bounded deviation that absorbs transient
+    /// arrival skew without letting the executor wander from the plan
+    /// (Zero Bubble's dgrad/wgrad flexibility). Only rule-4 *order*
+    /// edges are ever relaxed; debug builds re-check the realized
+    /// per-rank orders with [`Schedule::check_legal`].
+    pub fn execute_flex(
+        &mut self,
+        weights: &[f64],
+        edge_delays: &[f64],
+        work_conserving: bool,
+        mut dynamics: impl FnMut(usize, f64) -> f64,
+    ) -> f64 {
+        let n = self.csr.len();
+        assert_eq!(weights.len(), n, "one weight per node");
+        assert_eq!(
+            edge_delays.len(),
+            self.csr.edge_count(),
+            "one delay per CSR edge"
+        );
+        self.reset_run_state(n);
+        self.data_unmet[..n].copy_from_slice(&self.data_indeg);
+        self.done[..n].fill(false);
+        self.durs[..n].fill(0.0);
+        let mut realized: Vec<Vec<Action>> = if cfg!(debug_assertions) && work_conserving {
+            vec![Vec::new(); self.ranks.len()]
+        } else {
+            Vec::new()
+        };
+
+        // Bootstrap: nodes with no rules 1–3 dependency are ready at 0.
+        for v in 0..n {
+            if self.data_unmet[v] == 0 {
+                self.flex_node_ready(v, weights, &mut dynamics, work_conserving, &mut realized);
+            }
+        }
+        while let Some((t, ev)) = self.queue.pop() {
+            match ev {
+                Event::Finish { node } => {
+                    self.executed += 1;
+                    self.done[node] = true;
+                    if let Some(rank) = self.owner[node] {
+                        let done = &self.done;
+                        let r = &mut self.ranks[rank];
+                        r.idle = true;
+                        r.free_at = t;
+                        while r.cursor < r.order.len() && done[r.order[r.cursor]] {
+                            r.cursor += 1;
+                        }
+                    }
+                    for e in self.csr.edge_range(node) {
+                        if self.edge_is_data[e] {
+                            let v = self.csr.edge_dst(e);
+                            self.queue.push(t + edge_delays[e], Event::Arrive { to: v });
+                        }
+                    }
+                    if let Some(rank) = self.owner[node] {
+                        self.flex_dispatch(rank, weights, &mut dynamics, work_conserving, &mut realized);
+                    }
+                }
+                Event::Arrive { to } => {
+                    if t > self.ready_at[to] {
+                        self.ready_at[to] = t;
+                    }
+                    debug_assert!(self.data_unmet[to] > 0, "spurious arrival at node {to}");
+                    self.data_unmet[to] -= 1;
+                    if self.data_unmet[to] == 0 {
+                        self.flex_node_ready(to, weights, &mut dynamics, work_conserving, &mut realized);
+                    }
+                }
+                Event::Fault | Event::NetDue { .. } => {
+                    unreachable!("fault/net event on the flex path")
+                }
+            }
+        }
+        assert_eq!(
+            self.executed, n,
+            "batch deadlocked: {} of {n} nodes executed",
+            self.executed
+        );
+        if cfg!(debug_assertions) && work_conserving {
+            let check = Schedule { orders: realized, ..self.sched.clone() };
+            debug_assert!(
+                check.check_legal().is_ok(),
+                "work-conserving execution realized an illegal order: {:?}",
+                check.check_legal()
+            );
+        }
+        self.starts[self.dest]
+    }
+
+    /// All rules 1–3 dependencies of `v` are satisfied: dispatch it if
+    /// it is an unowned (source/dest) node, or poke its rank (flex path
+    /// counterpart of [`EventEngine::node_ready`]).
+    fn flex_node_ready(
+        &mut self,
+        v: usize,
+        weights: &[f64],
+        dynamics: &mut impl FnMut(usize, f64) -> f64,
+        work_conserving: bool,
+        realized: &mut Vec<Vec<Action>>,
+    ) {
+        match self.owner[v] {
+            None => {
+                debug_assert_eq!(weights[v], 0.0, "abstract node {v} must be weightless");
+                self.starts[v] = self.ready_at[v];
+                self.queue.push(self.ready_at[v], Event::Finish { node: v });
+            }
+            Some(rank) => self.flex_dispatch(rank, weights, dynamics, work_conserving, realized),
+        }
+    }
+
+    /// Flex-path dispatch: run the planned head if its rules 1–3
+    /// dependencies have arrived; otherwise (work-conserving mode only)
+    /// pull the first later data-ready action of the head's stage.
+    fn flex_dispatch(
+        &mut self,
+        rank: usize,
+        weights: &[f64],
+        dynamics: &mut impl FnMut(usize, f64) -> f64,
+        work_conserving: bool,
+        realized: &mut Vec<Vec<Action>>,
+    ) {
+        let pick = {
+            let r = &self.ranks[rank];
+            if !r.idle || r.cursor >= r.order.len() {
+                return;
+            }
+            let head = r.order[r.cursor];
+            if self.data_unmet[head] == 0 {
+                Some(head)
+            } else if work_conserving {
+                let stage = self.node_stage[head];
+                r.order[r.cursor + 1..]
+                    .iter()
+                    .copied()
+                    .find(|&v| {
+                        !self.done[v] && self.data_unmet[v] == 0 && self.node_stage[v] == stage
+                    })
+            } else {
+                None
+            }
+        };
+        let Some(v) = pick else { return };
+        let r = &mut self.ranks[rank];
+        let start = r.free_at.max(self.ready_at[v]);
+        r.idle = false;
+        self.starts[v] = start;
+        let dur = weights[v] * dynamics(v, start);
+        debug_assert!(dur >= 0.0 && dur.is_finite(), "bad dynamic duration for node {v}");
+        self.durs[v] = dur;
+        if cfg!(debug_assertions) && work_conserving {
+            realized[rank].push(self.node_action_of(v));
+        }
+        self.queue.push(start + dur, Event::Finish { node: v });
+    }
+
+    /// The action a node id replays (flex legality bookkeeping; panics
+    /// on abstract nodes, which are never rank-dispatched).
+    fn node_action_of(&self, v: usize) -> Action {
+        for (rank, r) in self.ranks.iter().enumerate() {
+            if let Some(pos) = r.order.iter().position(|&id| id == v) {
+                return self.sched.orders[rank][pos];
+            }
+        }
+        unreachable!("node {v} not owned by any rank")
     }
 
     /// Execute one batch with rank `victim` dying at simulated instant
@@ -475,6 +750,13 @@ impl EventEngine {
     /// Start times of the last [`EventEngine::execute`] run, node-aligned.
     pub fn starts(&self) -> &[f64] {
         &self.starts
+    }
+
+    /// Realized per-node durations of the last
+    /// [`EventEngine::execute_flex`] run (dynamics multipliers applied),
+    /// node-aligned. Zero for abstract nodes.
+    pub fn realized_durations(&self) -> &[f64] {
+        &self.durs
     }
 
     /// All dependencies of `v` are satisfied as of `ready`: dispatch it
@@ -690,6 +972,117 @@ mod tests {
             let t = engine.execute_contended(&w, &zeros, &bytes, &paths, &mut fabric);
             assert!(t <= prev + 1e-9, "cap {cap} slowed the batch: {t} > {prev}");
             prev = t;
+        }
+    }
+
+    #[test]
+    fn flex_identity_is_bit_identical_to_execute() {
+        // Identity dynamics + in-order dispatch must reproduce the
+        // plain path bit for bit, on every schedule, with and without
+        // edge delays — the zero-dynamics contract of `execute_flex`.
+        for kind in ScheduleKind::all() {
+            let (pdag, mut engine) = engine_for(kind, 4, 6);
+            let w = pdag.weights(|a| if a.kind.freezable() { 1.7 } else { 1.0 });
+            for delays in [
+                vec![0.0; pdag.dag.edge_count()],
+                pdag.p2p_edge_costs(|a, b| 0.1 * (1 + a.min(b)) as f64),
+            ] {
+                let plain = engine.execute(&w, &delays);
+                let plain_starts = engine.starts().to_vec();
+                let flex = engine.execute_flex(&w, &delays, false, |_, _| 1.0);
+                assert_eq!(flex.to_bits(), plain.to_bits(), "{}", kind.name());
+                assert_eq!(engine.starts(), &plain_starts[..], "{}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn flex_dynamics_sample_at_action_starts() {
+        // A multiplier that kicks in halfway through the batch slows
+        // only the actions dispatched after that instant — and the
+        // closure really is called with each action's start time.
+        let (pdag, mut engine) = engine_for(ScheduleKind::OneFOneB, 4, 6);
+        let w = pdag.weights(|_| 1.0);
+        let zeros = vec![0.0; pdag.dag.edge_count()];
+        let base = engine.execute(&w, &zeros);
+        let mut seen = Vec::new();
+        let slowed = engine.execute_flex(&w, &zeros, false, |node, start| {
+            seen.push((node, start));
+            if start >= base / 2.0 {
+                2.0
+            } else {
+                1.0
+            }
+        });
+        assert!(slowed > base, "late-batch slowdown must stretch the makespan");
+        assert!(slowed < 2.0 * base, "early actions ran unperturbed");
+        // The closure saw every owned action exactly once, at its
+        // realized dispatch instant.
+        let owned = (0..pdag.len()).filter(|&id| pdag.node_action(id).is_some()).count();
+        assert_eq!(seen.len(), owned);
+        for &(node, start) in &seen {
+            assert_eq!(engine.starts()[node], start);
+            // Realized durations carry the sampled multiplier.
+            let mult = if start >= base / 2.0 { 2.0 } else { 1.0 };
+            assert_eq!(engine.realized_durations()[node], w[node] * mult);
+        }
+        // Determinism: bit-identical replay.
+        let again = engine.execute_flex(&w, &zeros, false, |_, start| {
+            if start >= base / 2.0 {
+                2.0
+            } else {
+                1.0
+            }
+        });
+        assert_eq!(again.to_bits(), slowed.to_bits());
+    }
+
+    #[test]
+    fn work_conserving_pull_absorbs_a_late_arrival() {
+        // Stretch one cross-rank edge so a planned head waits on a late
+        // P2P arrival: the work-conserving mode may pull a later
+        // same-stage data-ready action into the gap, so it can never be
+        // slower than in-order dispatch under the same delays — and on
+        // some schedule of the sweep it must be strictly faster.
+        let mut improved = false;
+        for kind in ScheduleKind::all() {
+            let (pdag, mut engine) = engine_for(kind, 4, 8);
+            let w = pdag.weights(|_| 1.0);
+            let delays = pdag.p2p_edge_costs(|a, b| if a.min(b) == 1 { 6.0 } else { 0.1 });
+            let inorder = engine.execute_flex(&w, &delays, false, |_, _| 1.0);
+            let wc = engine.execute_flex(&w, &delays, true, |_, _| 1.0);
+            // Greedy pulls admit small Graham-style anomalies (a pull
+            // can delay a head whose arrival lands just after), so the
+            // universal claim is a loose sanity bound; the win claim is
+            // that at least one schedule gets strictly faster.
+            assert!(
+                wc <= inorder * 1.25 + 1e-9,
+                "{}: wc blew up vs in-order ({wc} vs {inorder})",
+                kind.name()
+            );
+            if wc < inorder - 1e-9 {
+                improved = true;
+            }
+            // Deterministic replay.
+            let again = engine.execute_flex(&w, &delays, true, |_, _| 1.0);
+            assert_eq!(again.to_bits(), wc.to_bits(), "{}", kind.name());
+            // And the engine still runs the plain path afterwards.
+            engine.execute(&w, &delays);
+        }
+        assert!(improved, "no schedule benefited from the work-conserving pull");
+    }
+
+    #[test]
+    fn work_conserving_without_blocking_matches_in_order() {
+        // With zero edge delays no head is ever blocked on an arrival,
+        // so the pull never fires and wc is bit-identical to in-order.
+        for kind in ScheduleKind::all() {
+            let (pdag, mut engine) = engine_for(kind, 4, 6);
+            let w = pdag.weights(|_| 1.0);
+            let zeros = vec![0.0; pdag.dag.edge_count()];
+            let inorder = engine.execute_flex(&w, &zeros, false, |_, _| 1.0);
+            let wc = engine.execute_flex(&w, &zeros, true, |_, _| 1.0);
+            assert_eq!(wc.to_bits(), inorder.to_bits(), "{}", kind.name());
         }
     }
 

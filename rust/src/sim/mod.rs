@@ -12,6 +12,7 @@ pub mod convergence;
 pub mod elastic;
 pub mod engine;
 pub mod runner;
+pub mod watchdog;
 
 pub use crate::cost::CostModel;
 pub use convergence::{layer_curvature, progress_to_accuracy, ConvergenceSim};
@@ -22,3 +23,4 @@ pub use runner::{
     BackwardSample, GanttBlock, NetLpPricing, ResolvedWorld, SimError, SimResult, TrajPoint,
     SHADOW_MEMO_CAP,
 };
+pub use watchdog::{Watchdog, WatchdogConfig};

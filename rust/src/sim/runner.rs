@@ -37,6 +37,7 @@ use crate::partition::{LayerProfile, PartitionMethod};
 use crate::schedule::Schedule;
 use crate::sim::convergence::{progress_to_accuracy, ConvergenceSim};
 use crate::sim::engine::EventEngine;
+use crate::sim::watchdog::{Watchdog, WatchdogConfig};
 use crate::types::{Action, FreezeMethod, ScheduleKind};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
@@ -53,6 +54,9 @@ pub enum SimError {
     /// The scenario names ranks or stage boundaries the pipeline does
     /// not have.
     InvalidScenario(String),
+    /// The config combines knobs that cannot execute together (e.g. the
+    /// work-conserving executor under a contended network fabric).
+    InvalidConfig(String),
     /// The scenario kills ranks but the config picked no
     /// [`RecoveryStrategy`](crate::config::RecoveryStrategy) — the run
     /// cannot decide on the user's behalf whether to shrink or restart.
@@ -68,6 +72,7 @@ impl std::fmt::Display for SimError {
         match self {
             SimError::InfeasibleMemoryBudget(msg) => write!(f, "{msg}"),
             SimError::InvalidScenario(msg) => write!(f, "invalid scenario: {msg}"),
+            SimError::InvalidConfig(msg) => write!(f, "{msg}"),
             SimError::RankLost(msg) => write!(f, "{msg}"),
             SimError::RecoveryInfeasible(msg) => write!(f, "{msg}"),
         }
@@ -171,10 +176,19 @@ pub struct SimResult {
     /// [`memory_plan_for`](crate::cost::memory_plan_for)); `None` ⇒ no
     /// recomputation.
     pub recompute: Option<Vec<f64>>,
-    /// Replans whose LP fallback ladder exhausted while a feasible plan
-    /// was already installed; the controller kept that plan (graceful
-    /// degradation) rather than disabling freezing.
+    /// Replans whose LP fallback ladder exhausted. The controller fell
+    /// down the degraded-mode ladder (reuse-last-plan → heuristic floor
+    /// → no-freeze safe mode) rather than crashing; `degradation` has
+    /// the per-failure record.
     pub replan_failures: usize,
+    /// Structured record of every degraded-mode episode: one
+    /// [`DegradationEvent`](crate::freeze::DegradationEvent) per failed
+    /// replan, with its step, cause, LP solve path, and the ladder rung
+    /// the controller fell to. Empty on a clean run.
+    pub degradation: crate::freeze::DegradationReport,
+    /// Steps at which the divergence watchdog fired (empty when
+    /// `--watchdog` is off). Deterministic for a fixed seed.
+    pub watchdog_triggers: Vec<usize>,
     /// Whole-rank fault events the run absorbed (crashes, preemptions,
     /// evictions). Zero on the fault-free path.
     pub faults: usize,
@@ -573,7 +587,7 @@ enum Exec {
 impl Exec {
     fn build(mode: ExecMode, pdag: &PipelineDag, schedule: &Schedule) -> Exec {
         match mode {
-            ExecMode::Event => Exec::Event(EventEngine::new(pdag, schedule)),
+            ExecMode::Event | ExecMode::EventWc => Exec::Event(EventEngine::new(pdag, schedule)),
             ExecMode::Analytic => Exec::Analytic(pdag.evaluator()),
         }
     }
@@ -805,10 +819,56 @@ pub fn run_with_partition(
                     )));
                 }
             }
+            // `ramp`/`burst` terms perturb durations *within* a batch:
+            // their multipliers are sampled at each action's dispatch
+            // instant, which only the event-family executors have. The
+            // contended fabric keeps its own execution loop, so dynamics
+            // are confined to the fixed-delay event path for now.
+            if sc.has_dynamics() {
+                if !cfg.exec.is_event() {
+                    return Err(SimError::InvalidScenario(format!(
+                        "scenario '{sc}' has ramp/burst within-batch dynamics, \
+                         which need an event-family executor (--exec event or \
+                         event-wc); the analytic sweep has no dispatch instants \
+                         to sample them at"
+                    )));
+                }
+                if net.is_some() {
+                    return Err(SimError::InvalidScenario(format!(
+                        "scenario '{sc}' has ramp/burst within-batch dynamics, \
+                         which run on the fixed-delay event path and cannot yet \
+                         drive the contended fabric of a hierarchical --net \
+                         topology; drop the fabric or the dynamics terms"
+                    )));
+                }
+            }
+            // `squeeze:` terms shrink the memory budget at replan
+            // boundaries — they need a budget to shrink.
+            if sc.has_squeezes() && cfg.memory_budget.is_none() {
+                return Err(SimError::InvalidScenario(format!(
+                    "scenario '{sc}' has squeeze terms but no memory budget is \
+                     active; pass --mem-budget to give them a budget to shrink"
+                )));
+            }
             (!sc.is_identity()).then_some(sc)
         }
         None => None,
     };
+    // The flexible dispatch path: taken for within-batch dynamics
+    // (multipliers sampled at action starts) and for the bounded
+    // work-conserving executor. Both are event-engine features; the
+    // contended fabric keeps its own loop, so the combination with a
+    // hierarchical topology is rejected rather than silently repriced.
+    let dynamic = scenario.is_some_and(|sc| sc.has_dynamics());
+    let use_flex = cfg.exec == ExecMode::EventWc || dynamic;
+    if cfg.exec == ExecMode::EventWc && net.is_some() {
+        return Err(SimError::InvalidConfig(
+            "--exec event-wc runs on the fixed-delay event path and cannot drive \
+             the contended fabric of a hierarchical --net topology; use --exec \
+             event or a uniform topology"
+                .to_string(),
+        ));
+    }
     let contended = cfg.exec == ExecMode::Event;
     let pricing = if cfg.net_blind_lp {
         NetLpPricing::Dedicated
@@ -911,15 +971,41 @@ pub fn run_with_partition(
     let mut delays_scratch: Vec<f64> = base_delays.clone().unwrap_or_default();
     let zero_delays = vec![0.0f64; pdag.dag.edge_count()];
     // Observed-profile capture for online replanning (window resets at
-    // every replan so each plan reflects the current regime).
-    let replanning = cfg.replan_interval > 0
-        && matches!(
-            cfg.method,
-            FreezeMethod::TimelyFreeze | FreezeMethod::TimelyApf | FreezeMethod::TimelyAuto
-        );
+    // every replan so each plan reflects the current regime). The fixed
+    // interval and the divergence watchdog are alternative triggers for
+    // the same replan machinery; either one alone enables it.
+    let timely_family = matches!(
+        cfg.method,
+        FreezeMethod::TimelyFreeze | FreezeMethod::TimelyApf | FreezeMethod::TimelyAuto
+    );
+    let replanning = (cfg.replan_interval > 0 || cfg.watchdog.is_some()) && timely_family;
     let mut recorder = ProfileRecorder::new(schedule.stages);
     let mut replans = 0usize;
     let mut replan_latency_s: Vec<f64> = Vec::new();
+    // Divergence watchdog (`--watchdog <sigma>`): compares each rank's
+    // realized per-step work against what the active plan priced it at,
+    // and fires an event-driven replan on sustained divergence. Never
+    // constructed when the flag is off, so the default path is untouched.
+    let mut watchdog = cfg
+        .watchdog
+        .filter(|_| timely_family)
+        .map(|sigma| Watchdog::new(schedule.ranks, WatchdogConfig::new(sigma)));
+    let mut wd_planned = vec![0.0f64; schedule.ranks];
+    let mut wd_realized = vec![0.0f64; schedule.ranks];
+    // Memory squeezes tighten the controller's floor at replan
+    // boundaries; recompute the plan only when the factor changes.
+    let mut last_squeeze = 1.0f64;
+    // Continuous within-batch time coordinate for `ramp`/`burst`
+    // sampling: an action starting at time `s` of step `t` sits at
+    // `u = t + s/horizon`, where `horizon` is the undisturbed no-freeze
+    // batch time (freezing shortens batches, so `s/horizon` stays ≤ 1
+    // in practice and is clamped regardless).
+    let horizon0 = if dynamic {
+        let w0 = pdag.weights(|a| cost.duration(a, 0.0));
+        pdag.evaluator().batch_time(&w0).max(1e-12)
+    } else {
+        1.0
+    };
 
     for t in 1..=cfg.steps {
         let plan = controller.plan(t);
@@ -981,12 +1067,61 @@ pub fn run_with_partition(
                     }
                 },
             };
-            exec.batch_time(&weights, delays, &zero_delays) + opt_tail
+            if use_flex {
+                // Flexible dispatch: within-batch dynamics sample their
+                // multiplier at each action's realized start, and
+                // `--exec event-wc` pulls later same-stage data-ready
+                // work into head-of-line stalls. Identity dynamics plus
+                // in-order dispatch is bit-identical to `execute`.
+                let Exec::Event(engine) = &mut exec else {
+                    unreachable!("flex execution is gated on an event-family executor")
+                };
+                let seed = cfg.seed;
+                let ranks = &pdag.rank_of_node;
+                let mk = engine.execute_flex(
+                    &weights,
+                    delays.unwrap_or(&zero_delays),
+                    cfg.exec == ExecMode::EventWc,
+                    |node, start| match scenario {
+                        Some(sc) if dynamic => {
+                            let u = t as f64 + (start / horizon0).min(1.0);
+                            sc.dynamics_mult(seed, t, node, ranks[node], u)
+                        }
+                        _ => 1.0,
+                    },
+                );
+                mk + opt_tail
+            } else {
+                exec.batch_time(&weights, delays, &zero_delays) + opt_tail
+            }
         };
+        if use_flex {
+            // Everything downstream — the profile recorder, the
+            // controller's monitors, the watchdog, Figure 15 samples,
+            // the final Gantt replay — sees the durations the executor
+            // actually charged, dynamics included.
+            if let Exec::Event(engine) = &exec {
+                weights.copy_from_slice(engine.realized_durations());
+            }
+        }
         total_time += step_time;
         if t > cfg.phases.t_freeze {
             steady_time += step_time;
             steady_steps += 1;
+        }
+        // ---- divergence watchdog: realized-vs-planned slack ----
+        let mut watchdog_due = false;
+        if let Some(wd) = watchdog.as_mut() {
+            wd_planned.fill(0.0);
+            wd_realized.fill(0.0);
+            for (id, act) in node_actions.iter().enumerate() {
+                if let Some(a) = act {
+                    let r = pdag.rank_of_node[id];
+                    wd_planned[r] += cost.duration(*a, plan.ratio_of(a));
+                    wd_realized[r] += weights[id];
+                }
+            }
+            watchdog_due = wd.observe_step(t, &wd_realized, &wd_planned);
         }
         // ---- observed-profile capture + online replanning ----
         if replanning {
@@ -995,15 +1130,35 @@ pub fn run_with_partition(
                     recorder.record(*a, plan.ratio_of(a), weights[id]);
                 }
             }
-            if t > cfg.phases.t_monitor
-                && t < cfg.steps
-                && (t - cfg.phases.t_monitor) % cfg.replan_interval == 0
-            {
+            let interval_due = cfg.replan_interval > 0
+                && (t - cfg.phases.t_monitor) % cfg.replan_interval == 0;
+            if t > cfg.phases.t_monitor && t < cfg.steps && (interval_due || watchdog_due) {
+                // An active memory squeeze tightens the floor the next
+                // solve must honour — and may make it unsatisfiable, in
+                // which case the controller's degraded-mode ladder owns
+                // the outcome instead of the run crashing.
+                if let Some(sc) = scenario {
+                    let f = sc.squeeze_factor(t);
+                    if f != last_squeeze {
+                        last_squeeze = f;
+                        controller.set_stage_floor(squeezed_floor(
+                            cfg,
+                            &layout.layer_stage,
+                            &schedule,
+                            f,
+                        ));
+                    }
+                }
                 let t0 = std::time::Instant::now();
                 if let Some(profile) = recorder.to_profile(&cost) {
                     controller.replan_with_profile(&profile);
                     replans += 1;
                     replan_latency_s.push(t0.elapsed().as_secs_f64());
+                    // The plan the watchdog measures slack against just
+                    // changed; restart its filters.
+                    if let Some(wd) = watchdog.as_mut() {
+                        wd.rearm(t);
+                    }
                 }
                 recorder.reset();
             }
@@ -1121,7 +1276,25 @@ pub fn run_with_partition(
             };
             let sn =
                 exec.start_times(&pdag, &w_nofreeze, base_delays.as_deref(), &zero_delays);
-            let sf = exec.start_times(&pdag, &last_weights, final_delays, &zero_delays);
+            let sf = if use_flex {
+                // Replay the final step under flexible dispatch:
+                // `last_weights` already holds realized (dynamics-baked)
+                // durations, so identity multipliers reproduce the last
+                // step's event sequence — including work-conserving
+                // pulls — exactly.
+                let Exec::Event(engine) = &mut exec else {
+                    unreachable!("flex execution is gated on an event-family executor")
+                };
+                engine.execute_flex(
+                    &last_weights,
+                    final_delays.unwrap_or(&zero_delays),
+                    cfg.exec == ExecMode::EventWc,
+                    |_, _| 1.0,
+                );
+                engine.starts().to_vec()
+            } else {
+                exec.start_times(&pdag, &last_weights, final_delays, &zero_delays)
+            };
             (sn, sf)
         };
     let gantt_nofreeze =
@@ -1183,6 +1356,11 @@ pub fn run_with_partition(
         replan_latency_s,
         recompute: plan.recompute,
         replan_failures: controller.replan_failures(),
+        degradation: controller.degradation().cloned().unwrap_or_default(),
+        watchdog_triggers: watchdog
+            .as_ref()
+            .map(|wd| wd.triggers().to_vec())
+            .unwrap_or_default(),
         faults: 0,
         lost_microbatches: 0,
         recovery_time_s: 0.0,
@@ -1190,6 +1368,27 @@ pub fn run_with_partition(
         bubble_fraction,
         peak_inflight: peak_inflight(&schedule),
     })
+}
+
+/// The per-stage freeze-ratio floor after a scenario memory squeeze
+/// multiplied the configured budget by `factor`. A squeezed budget so
+/// tight it cannot be satisfied even fully frozen — or whose floor
+/// exceeds `r_max` — maps to an all-ones floor: the controller's next
+/// LP solve then fails `FloorExceedsBudget` and walks the degraded-mode
+/// ladder instead of the run crashing. (Recompute fractions are fixed
+/// at run start; only the floor is re-derived here.)
+fn squeezed_floor(
+    cfg: &ExperimentConfig,
+    layer_stage: &[usize],
+    schedule: &Schedule,
+    factor: f64,
+) -> Option<Vec<f64>> {
+    let mut scfg = cfg.clone();
+    scfg.memory_budget = cfg.memory_budget.map(|b| (b * factor).clamp(1e-9, 1.0));
+    match memory_plan_for(&scfg, layer_stage, schedule) {
+        Ok(plan) => plan.floor,
+        Err(_) => Some(vec![1.0; cfg.stages()]),
+    }
 }
 
 /// Bubble fraction of one executed batch: the idle share of the
@@ -1588,6 +1787,156 @@ mod tests {
         cfg.exec = ExecMode::Event;
         let r = run(&cfg).unwrap();
         assert!(r.throughput.is_finite() && r.throughput > 0.0);
+    }
+
+    /// `ramp`/`burst` terms sample multipliers at action dispatch
+    /// instants: the analytic sweep has none (clean error), and the
+    /// contended fabric keeps its own loop (clean error too).
+    #[test]
+    fn dynamics_scenarios_demand_the_event_path() {
+        use crate::config::Scenario;
+        use crate::net::Topology;
+        let mut cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+        cfg.scenario = Some(Scenario::transient(1, 2.0, 40, 80));
+        cfg.exec = ExecMode::Analytic;
+        assert!(matches!(run(&cfg), Err(SimError::InvalidScenario(_))));
+        cfg.exec = ExecMode::Event;
+        cfg.net = Some(Topology::parse("island:2x1e9,spine:2e8,lat:0.0005").unwrap());
+        assert!(matches!(run(&cfg), Err(SimError::InvalidScenario(_))));
+        cfg.net = None;
+        let r = run(&cfg).unwrap();
+        assert!(r.throughput.is_finite() && r.throughput > 0.0);
+        // And the work-conserving executor under a contended fabric is a
+        // config conflict, scenario or not.
+        let mut cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+        cfg.exec = ExecMode::EventWc;
+        cfg.net = Some(Topology::parse("island:2x1e9,spine:2e8,lat:0.0005").unwrap());
+        assert!(matches!(run(&cfg), Err(SimError::InvalidConfig(_))));
+    }
+
+    /// A transient straggler inside a batch slows the run relative to
+    /// calm; once it passes, throughput is back (the trajectory's last
+    /// samples match the calm run's). Deterministic: same seed ⇒ same
+    /// realized floats.
+    #[test]
+    fn ramp_scenario_perturbs_then_recovers() {
+        use crate::config::Scenario;
+        let mut cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+        cfg.timing_noise = 0.0;
+        let calm = {
+            let mut c = cfg.clone();
+            c.scenario = None;
+            run(&c).unwrap()
+        };
+        cfg.scenario = Some(Scenario::transient(1, 3.0, 60, 100));
+        let r = run(&cfg).unwrap();
+        assert!(
+            r.throughput < calm.throughput,
+            "transient straggler must cost something: {} vs {}",
+            r.throughput,
+            calm.throughput
+        );
+        // Steps before the window are untouched…
+        let pre = |res: &SimResult| -> Vec<u64> {
+            res.trajectory
+                .iter()
+                .filter(|p| p.step < 60)
+                .map(|p| p.step_time.to_bits())
+                .collect()
+        };
+        assert_eq!(pre(&calm), pre(&r));
+        // …and after it closes the perturbation is gone.
+        let last = r.trajectory.last().unwrap();
+        let calm_last = calm.trajectory.last().unwrap();
+        assert_eq!(last.step_time.to_bits(), calm_last.step_time.to_bits());
+        // Reproducible wholesale.
+        let again = run(&cfg).unwrap();
+        assert_eq!(r.throughput.to_bits(), again.throughput.to_bits());
+    }
+
+    /// `--exec event-wc` without blockable heads degenerates gracefully:
+    /// the reference (no-freeze, in-order) world is bit-identical to the
+    /// plain event run, and realized throughput stays in a sane band of
+    /// it (work-conserving pulls may help or — Graham anomalies — hurt,
+    /// but not wildly).
+    #[test]
+    fn event_wc_runs_and_stays_near_inorder() {
+        let cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+        let inorder = run(&cfg).unwrap();
+        let mut wc_cfg = cfg.clone();
+        wc_cfg.exec = ExecMode::EventWc;
+        let wc = run(&wc_cfg).unwrap();
+        assert_eq!(
+            inorder.batch_time_nofreeze.to_bits(),
+            wc.batch_time_nofreeze.to_bits(),
+            "the no-freeze reference replay is in-order on both paths"
+        );
+        assert!(
+            wc.throughput > inorder.throughput * 0.75
+                && wc.throughput < inorder.throughput * 1.3,
+            "wc throughput {} strayed from in-order {}",
+            wc.throughput,
+            inorder.throughput
+        );
+        // Gantt legality: no two blocks on one rank overlap under
+        // work-conserving dispatch either.
+        for rank in 0..4 {
+            let mut blocks: Vec<&GanttBlock> =
+                wc.gantt_final.iter().filter(|b| b.rank == rank).collect();
+            blocks.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+            for pair in blocks.windows(2) {
+                assert!(
+                    pair[0].start + pair[0].duration <= pair[1].start + 1e-9,
+                    "wc overlap on rank {rank}"
+                );
+            }
+        }
+    }
+
+    /// The divergence watchdog turns a transient mid-run straggler into
+    /// an event-driven replan: triggers fire shortly after onset, the
+    /// replan counter moves without any fixed interval, and the whole
+    /// thing is deterministic for a fixed seed.
+    #[test]
+    fn watchdog_fires_on_transient_and_is_deterministic() {
+        use crate::config::Scenario;
+        let mut cfg = quick_cfg(FreezeMethod::TimelyFreeze, ScheduleKind::OneFOneB);
+        cfg.timing_noise = 0.0;
+        cfg.scenario = Some(Scenario::transient(1, 3.0, 60, 100));
+        // No watchdog, no interval: static plan, no triggers recorded.
+        let static_plan = run(&cfg).unwrap();
+        assert_eq!(static_plan.replans, 0);
+        assert!(static_plan.watchdog_triggers.is_empty());
+        // Watchdog only (interval stays 0): it must both fire and replan.
+        let mut wd_cfg = cfg.clone();
+        wd_cfg.watchdog = Some(3.0);
+        let wd = run(&wd_cfg).unwrap();
+        assert!(
+            !wd.watchdog_triggers.is_empty(),
+            "transient divergence must trigger the watchdog"
+        );
+        assert!(wd.replans >= 1, "watchdog triggers must drive replans");
+        let first = wd.watchdog_triggers[0];
+        assert!(
+            (60..110).contains(&first),
+            "first trigger {first} should closely follow the ramp onset at 60"
+        );
+        let again = run(&wd_cfg).unwrap();
+        assert_eq!(wd.watchdog_triggers, again.watchdog_triggers);
+        assert_eq!(wd.throughput.to_bits(), again.throughput.to_bits());
+        // A calm run with the watchdog armed never fires it — and stays
+        // bit-identical to the no-watchdog run, because an untriggered
+        // watchdog replans nothing.
+        let mut calm_wd = cfg.clone();
+        calm_wd.scenario = None;
+        calm_wd.watchdog = Some(3.0);
+        let calm_wd = run(&calm_wd).unwrap();
+        let mut calm = cfg.clone();
+        calm.scenario = None;
+        let calm = run(&calm).unwrap();
+        assert!(calm_wd.watchdog_triggers.is_empty(), "calm run fired the watchdog");
+        assert_eq!(calm_wd.replans, 0);
+        assert_eq!(calm.throughput.to_bits(), calm_wd.throughput.to_bits());
     }
 
     /// A hierarchical topology with infinite bandwidth degenerates to

@@ -1,0 +1,284 @@
+//! Divergence watchdog: an event-driven replan trigger that watches the
+//! realized-vs-planned slack of every completed step and fires when the
+//! divergence is *sustained* — the reactive complement to the fixed
+//! `--replan N` cadence, which can leave a transient straggler eroding
+//! throughput for hundreds of steps before the next scheduled re-solve
+//! notices.
+//!
+//! ## Signal
+//!
+//! Per step the runner hands the watchdog one per-rank pair of sums over
+//! that rank's completed actions: the **realized** durations the
+//! executor charged (dynamics, jitter, and noise included) and the
+//! **planned** durations the active freeze plan priced them at
+//! (`cost.duration(a, afr)`). The per-rank relative gap
+//! `g_r = realized_r / planned_r − 1` feeds two exponentially weighted
+//! filters per rank:
+//!
+//! * a **fast** EWMA (α = 0.3) tracking the current divergence, and
+//! * a **slow** mean/variance pair (α = 0.05) tracking the plan's
+//!   steady-state baseline — timing noise, known stragglers the last
+//!   replan already priced in, systematic model error.
+//!
+//! The watchdog fires when any rank's fast estimate departs from its
+//! slow baseline by more than `sigma` baseline standard deviations
+//! (floored at [`Watchdog::ABS_FLOOR`] so noiseless runs still have a
+//! meaningful scale). Because the comparison is *change-point* shaped —
+//! fast vs slow, not fast vs zero — a persistent offset the planner has
+//! already absorbed stops firing once the slow filter catches up, which
+//! is exactly the anti-thrash behaviour the cooldown backstops.
+//!
+//! ## Determinism
+//!
+//! The watchdog is a pure fold over its observation stream: no clocks,
+//! no RNG, no event-order sensitivity. Fixed seed ⇒ bit-identical
+//! trigger steps (`tests/watchdog.rs` pins this). A run with the
+//! watchdog disabled never constructs one, so the zero-dynamics
+//! bit-identity contract of the runner is untouched.
+
+/// Tunables of the divergence watchdog. [`WatchdogConfig::new`] maps the
+/// CLI's single `--watchdog <sigma>` knob onto the defaults.
+#[derive(Clone, Copy, Debug)]
+pub struct WatchdogConfig {
+    /// Trigger threshold, in baseline standard deviations.
+    pub sigma: f64,
+    /// Fast-filter smoothing factor (current divergence).
+    pub alpha_fast: f64,
+    /// Slow-filter smoothing factor (baseline mean/variance).
+    pub alpha_slow: f64,
+    /// Minimum steps between watchdog-triggered replans — the LP
+    /// anti-thrash guard. Also the warm-up: no trigger fires until this
+    /// many steps have been observed since (re)arming.
+    pub cooldown: usize,
+}
+
+impl WatchdogConfig {
+    /// Config for a `--watchdog <sigma>` run: α_fast 0.3, α_slow 0.05,
+    /// cooldown 10 steps.
+    pub fn new(sigma: f64) -> WatchdogConfig {
+        WatchdogConfig { sigma, alpha_fast: 0.3, alpha_slow: 0.05, cooldown: 10 }
+    }
+}
+
+/// Per-rank EWMA state (see the module docs for the two-timescale
+/// design).
+#[derive(Clone, Copy, Debug, Default)]
+struct RankState {
+    fast: f64,
+    slow_mean: f64,
+    slow_var: f64,
+    /// Observations folded in since the last (re)arm.
+    samples: usize,
+}
+
+/// The divergence watchdog (see the module docs).
+#[derive(Clone, Debug)]
+pub struct Watchdog {
+    cfg: WatchdogConfig,
+    ranks: Vec<RankState>,
+    /// Step of the last trigger or re-arm (cooldown reference).
+    armed_at: usize,
+    /// Steps at which the watchdog fired, in order.
+    triggers: Vec<usize>,
+}
+
+impl Watchdog {
+    /// Noise-scale floor: a perfectly calm baseline (zero observed
+    /// variance) still demands at least `sigma · 2%` sustained relative
+    /// divergence before firing.
+    pub const ABS_FLOOR: f64 = 0.02;
+
+    /// Build the watchdog over `ranks` executors.
+    pub fn new(ranks: usize, cfg: WatchdogConfig) -> Watchdog {
+        assert!(cfg.sigma > 0.0, "watchdog sigma must be positive");
+        Watchdog {
+            cfg,
+            ranks: vec![RankState::default(); ranks],
+            armed_at: 0,
+            triggers: Vec::new(),
+        }
+    }
+
+    /// Fold in one completed step's per-rank realized/planned duration
+    /// sums and report whether a replan should fire now. `realized` and
+    /// `planned` are rank-aligned; ranks whose planned work is zero this
+    /// step are skipped.
+    ///
+    /// The caller is expected to [`Watchdog::rearm`] after *any* replan
+    /// (watchdog- or interval-triggered): the plan the slack is measured
+    /// against just changed, so the filters restart from the first
+    /// post-replan observation.
+    pub fn observe_step(&mut self, t: usize, realized: &[f64], planned: &[f64]) -> bool {
+        debug_assert_eq!(realized.len(), self.ranks.len());
+        debug_assert_eq!(planned.len(), self.ranks.len());
+        let mut fire = false;
+        for (r, st) in self.ranks.iter_mut().enumerate() {
+            if planned[r] <= 0.0 {
+                continue;
+            }
+            let g = realized[r] / planned[r] - 1.0;
+            if st.samples == 0 {
+                // Seed both filters on the first observation so the
+                // fast-vs-slow gap starts at zero instead of comparing
+                // against an arbitrary origin.
+                st.fast = g;
+                st.slow_mean = g;
+                st.slow_var = 0.0;
+            } else {
+                st.fast += self.cfg.alpha_fast * (g - st.fast);
+                // Huberized baseline update: clamp the innovation to
+                // ±2 current scales, so a genuine change point moves
+                // the fast filter long before it can inflate the slow
+                // baseline's variance and mask itself.
+                let scale0 = st.slow_var.sqrt().max(Self::ABS_FLOOR);
+                let d = (g - st.slow_mean).clamp(-2.0 * scale0, 2.0 * scale0);
+                st.slow_mean += self.cfg.alpha_slow * d;
+                st.slow_var += self.cfg.alpha_slow * (d * d - st.slow_var);
+            }
+            st.samples += 1;
+            let scale = st.slow_var.sqrt().max(Self::ABS_FLOOR);
+            if st.samples > self.cfg.cooldown
+                && (st.fast - st.slow_mean).abs() > self.cfg.sigma * scale
+            {
+                fire = true;
+            }
+        }
+        if fire && t >= self.armed_at + self.cfg.cooldown {
+            self.triggers.push(t);
+            self.rearm(t);
+            return true;
+        }
+        false
+    }
+
+    /// Reset the filters and the cooldown reference — called after any
+    /// replan, because the planned world the slack is measured against
+    /// just changed.
+    pub fn rearm(&mut self, t: usize) {
+        self.armed_at = t;
+        for st in &mut self.ranks {
+            *st = RankState::default();
+        }
+    }
+
+    /// Rebuild the watchdog over a different executor count — the
+    /// elastic recovery path re-creates the monitor over the surviving
+    /// fleet, keeping the trigger history.
+    pub fn resize(&mut self, ranks: usize, t: usize) {
+        self.ranks = vec![RankState::default(); ranks];
+        self.armed_at = t;
+    }
+
+    /// Steps at which the watchdog fired, in order.
+    pub fn triggers(&self) -> &[usize] {
+        &self.triggers
+    }
+
+    /// The configured threshold.
+    pub fn sigma(&self) -> f64 {
+        self.cfg.sigma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drive(wd: &mut Watchdog, steps: std::ops::Range<usize>, gap: f64) -> Vec<usize> {
+        let mut fired = Vec::new();
+        for t in steps {
+            let realized = [1.0 + gap, 1.0];
+            let planned = [1.0, 1.0];
+            if wd.observe_step(t, &realized, &planned) {
+                fired.push(t);
+            }
+        }
+        fired
+    }
+
+    #[test]
+    fn calm_stream_never_fires() {
+        let mut wd = Watchdog::new(2, WatchdogConfig::new(3.0));
+        assert!(drive(&mut wd, 1..200, 0.0).is_empty());
+        assert!(wd.triggers().is_empty());
+    }
+
+    #[test]
+    fn sustained_divergence_fires_once_then_baseline_absorbs_it() {
+        let mut wd = Watchdog::new(2, WatchdogConfig::new(3.0));
+        // Calm prefix establishes the baseline…
+        assert!(drive(&mut wd, 1..40, 0.0).is_empty());
+        // …then a persistent 50% straggler appears on rank 0.
+        let fired = drive(&mut wd, 40..200, 0.5);
+        assert!(!fired.is_empty(), "sustained divergence must fire");
+        // The caller rearms on trigger (observe_step does it), and the
+        // post-trigger baseline *is* the straggler world — so the same
+        // offset does not fire forever.
+        assert!(fired.len() <= 3, "watchdog thrash: fired at {fired:?}");
+        // First trigger comes promptly: within a couple of cooldowns.
+        assert!(fired[0] < 40 + 25, "slow trigger: {}", fired[0]);
+    }
+
+    #[test]
+    fn cooldown_spaces_triggers() {
+        let cfg = WatchdogConfig::new(1.0);
+        let mut wd = Watchdog::new(1, cfg);
+        // An alternating signal that would fire constantly without the
+        // cooldown: every trigger rearms, so consecutive triggers are at
+        // least `cooldown` steps apart.
+        let mut fired = Vec::new();
+        for t in 1..300 {
+            let gap = if (t / 15) % 2 == 0 { 0.0 } else { 1.0 };
+            if wd.observe_step(t, &[1.0 + gap], &[1.0]) {
+                fired.push(t);
+            }
+        }
+        for pair in fired.windows(2) {
+            assert!(pair[1] - pair[0] >= cfg.cooldown, "cooldown violated: {fired:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_trigger_times() {
+        let run = || {
+            let mut wd = Watchdog::new(3, WatchdogConfig::new(2.0));
+            let mut fired = Vec::new();
+            for t in 1..400 {
+                // A deterministic pseudo-signal with a mid-run shift.
+                let wob = 0.01 * ((t * 7919) % 13) as f64;
+                let shift = if t > 150 { 0.4 } else { 0.0 };
+                let realized = [1.0 + wob + shift, 1.0 + wob, 1.0];
+                if wd.observe_step(t, &realized, &[1.0, 1.0, 1.0]) {
+                    fired.push(t);
+                }
+            }
+            fired
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn zero_planned_ranks_are_skipped() {
+        let mut wd = Watchdog::new(2, WatchdogConfig::new(2.0));
+        for t in 1..100 {
+            // Rank 1 reports no planned work; its garbage realized sum
+            // must not fire or poison the filters.
+            assert!(!wd.observe_step(t, &[1.0, 123.0], &[1.0, 0.0]));
+        }
+    }
+
+    #[test]
+    fn resize_rebuilds_over_survivors() {
+        let mut wd = Watchdog::new(4, WatchdogConfig::new(2.0));
+        drive(&mut wd, 1..50, 0.0);
+        wd.resize(3, 50);
+        // Post-resize observations are over the new fleet arity.
+        for t in 51..80 {
+            assert!(!wd.observe_step(t, &[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0]));
+        }
+        assert!(wd.triggers().is_empty());
+    }
+}

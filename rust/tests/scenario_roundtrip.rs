@@ -8,7 +8,9 @@
 mod common;
 
 use common::prop::{check, usize_in};
-use timelyfreeze::config::{FaultEvent, FaultKind, LinkCap, LinkSlowdown, Scenario, Straggler};
+use timelyfreeze::config::{
+    Burst, FaultEvent, FaultKind, LinkCap, LinkSlowdown, Ramp, Scenario, Squeeze, Straggler,
+};
 use timelyfreeze::net::Topology;
 use timelyfreeze::util::rng::Rng;
 use timelyfreeze::util::toml::TomlDoc;
@@ -38,6 +40,11 @@ fn documented_specs_round_trip() {
         "linkcap:0-1x0.5",
         "linkcap:0-3x0.5@200",
         "straggler:1x1.5,linkcap:2-0x0.25@40,seed:3",
+        "ramp:1x2.0@200-400",
+        "burst:0.2@100-150",
+        "squeeze:0.5@300",
+        "squeeze:0.5",
+        "ramp:1x2.5@100-200,burst:0.1@100-200,squeeze:0.5@150,seed:3",
     ] {
         let parsed = Scenario::parse(spec).unwrap_or_else(|e| panic!("'{spec}': {e}"));
         let displayed = parsed.to_string();
@@ -109,6 +116,27 @@ fn prop_random_specs_round_trip() {
                 }
             }
         }
+        for _ in 0..usize_in(rng, 0, 2) {
+            let rank = usize_in(rng, 0, 7);
+            let factor = (rng.range_f64(1.1, 4.0) * 100.0).round() / 100.0;
+            let from = usize_in(rng, 0, 300);
+            let until = from + usize_in(rng, 1, 200);
+            terms.push(format!("ramp:{rank}x{factor}@{from}-{until}"));
+            expect = expect.with_ramp(rank, factor, from, until);
+        }
+        if rng.bernoulli(0.4) {
+            let sigma = (rng.range_f64(0.01, 0.5) * 1000.0).round() / 1000.0;
+            let from = usize_in(rng, 0, 300);
+            let until = from + usize_in(rng, 1, 200);
+            terms.push(format!("burst:{sigma}@{from}-{until}"));
+            expect = expect.with_burst(sigma, from, until);
+        }
+        if rng.bernoulli(0.4) {
+            let factor = (rng.range_f64(0.05, 1.5) * 100.0).round() / 100.0;
+            let onset = usize_in(rng, 0, 500);
+            terms.push(format!("squeeze:{factor}@{onset}"));
+            expect = expect.with_squeeze(factor, onset);
+        }
         if rng.bernoulli(0.5) {
             let seed = rng.next_below(1 << 20);
             terms.push(format!("seed:{seed}"));
@@ -164,6 +192,18 @@ fn parsed_terms_populate_the_right_fields() {
     );
     assert!(sc.has_linkcaps(), "a non-identity capacity term needs a fabric");
     assert!(!Scenario::parse("linkcap:1-2x1.0").unwrap().has_linkcaps(), "x1 is inert");
+    // Within-batch dynamics and squeezes land in their own lists.
+    let sc = Scenario::parse("ramp:1x2.5@100-200,burst:0.15@120-180,squeeze:0.5@150").unwrap();
+    assert_eq!(sc.ramps, vec![Ramp { rank: 1, factor: 2.5, from: 100, until: 200 }]);
+    assert_eq!(sc.bursts, vec![Burst { sigma: 0.15, from: 120, until: 180 }]);
+    assert_eq!(sc.squeezes, vec![Squeeze { factor: 0.5, onset: 150 }]);
+    assert!(sc.has_dynamics(), "ramp/burst are within-batch dynamics");
+    assert!(sc.has_squeezes(), "a non-identity squeeze is a replan-time hook");
+    // Identity factors keep the spec inert on both axes.
+    let inert = Scenario::parse("ramp:1x1.0@100-200,burst:0.0@120-180,squeeze:1.0@150").unwrap();
+    assert!(!inert.has_dynamics());
+    assert!(!inert.has_squeezes());
+    assert!(inert.is_identity());
     // An empty spec (or stray commas) is calm.
     let calm = Scenario::parse(" , ,calm, ").unwrap();
     assert!(calm.is_identity());
@@ -204,6 +244,22 @@ fn malformed_specs_name_the_offence() {
         ("linkcap:0-bx0.5", "bad linkcap rank in 'linkcap:0-bx0.5'"),
         ("linkcap:0-1x0", "bad factor in 'linkcap:0-1x0'"),
         ("linkcap:0-1x0.5@x", "bad onset step"),
+        ("ramp:1x2.0", "wants ramp:<rank>x<factor>@<from>-<until>"),
+        ("ramp:1@100-200", "wants ramp:<rank>x<factor>@<from>-<until>"),
+        ("ramp:ax2@100-200", "bad ramp rank in 'ramp:ax2@100-200'"),
+        ("ramp:1x0@100-200", "bad factor in 'ramp:1x0@100-200'"),
+        ("ramp:1x2@150", "bad window in 'ramp:1x2@150'"),
+        ("ramp:1x2@x-200", "bad onset step in 'ramp:1x2@x-200'"),
+        ("ramp:1x2@100-y", "bad window end in 'ramp:1x2@100-y'"),
+        ("ramp:1x2@200-100", "must end after it begins"),
+        ("ramp:1x2@100-100", "must end after it begins"),
+        ("burst:0.1", "wants burst:<sigma>@<from>-<until>"),
+        ("burst:-0.1@100-200", "bad burst sigma in 'burst:-0.1@100-200'"),
+        ("burst:lots@100-200", "bad burst sigma in 'burst:lots@100-200'"),
+        ("burst:0.1@100-50", "must end after it begins"),
+        ("squeeze:0@10", "bad factor in 'squeeze:0@10'"),
+        ("squeeze:-0.5", "bad factor in 'squeeze:-0.5'"),
+        ("squeeze:0.5@x", "bad onset step"),
     ] {
         let err = Scenario::parse(spec).expect_err(spec);
         assert!(
@@ -217,6 +273,9 @@ fn malformed_specs_name_the_offence() {
         "straggler:<rank>x<factor>[@onset]",
         "jitter:<sigma>[@onset]",
         "linkcap:<rankA>-<rankB>x<factor>[@onset]",
+        "ramp:<rank>x<factor>@<from>-<until>",
+        "burst:<sigma>@<from>-<until>",
+        "squeeze:<factor>[@onset]",
         "seed:<n>",
         "crash:<rank>@<onset>",
         "preempt:<rank>@<from>-<until>",

@@ -1,0 +1,179 @@
+//! Integration coverage of the runtime-robustness layer: the
+//! divergence watchdog (`--watchdog`), within-batch dynamics terms
+//! (`ramp:`/`burst:`), the bounded work-conserving executor
+//! (`--exec event-wc`), and the degraded-mode ladder a failed replan
+//! descends (reuse-last-plan → heuristic-floor → safe-mode). The
+//! headline guarantee under test: a run whose replans become infeasible
+//! mid-flight *completes* with a populated [`DegradationReport`]
+//! instead of returning an error.
+
+mod common;
+
+use common::quick_paced;
+use timelyfreeze::config::{ExecMode, Scenario};
+use timelyfreeze::freeze::DegradationRung;
+use timelyfreeze::sim;
+use timelyfreeze::types::{FreezeMethod, ScheduleKind};
+
+fn base_cfg() -> timelyfreeze::config::ExperimentConfig {
+    let mut cfg = quick_paced(
+        "llama-1b",
+        FreezeMethod::TimelyFreeze,
+        ScheduleKind::OneFOneB,
+        160,
+        (12, 36, 60),
+    );
+    cfg.timing_noise = 0.0;
+    cfg
+}
+
+/// A mid-run memory squeeze that makes every subsequent replan
+/// infeasible must not kill the run: the controller walks the
+/// degraded-mode ladder rung by rung — reuse-last-plan first, then the
+/// floor-clamped heuristic, then safe mode — and the run completes with
+/// the episode recorded in `SimResult::degradation`.
+#[test]
+fn infeasible_squeeze_degrades_through_the_ladder_and_completes() {
+    let mut cfg = base_cfg();
+    cfg.memory_budget = Some(1.0);
+    cfg.replan_interval = 10;
+    // Budget collapses to 2% of capacity at step 80: not even a fully
+    // frozen pipeline fits, so the squeezed floor pins every stage at
+    // 1.0 > r_max and each replan's LP fails FloorExceedsBudget.
+    cfg.scenario = Some(Scenario::calm().with_squeeze(0.02, 80));
+    let r = sim::run(&cfg).expect("degraded-mode runs must complete, not error");
+    assert!(r.throughput.is_finite() && r.throughput > 0.0);
+    assert_eq!(r.progress, 1.0, "the run must reach its final step");
+    let d = &r.degradation;
+    assert!(
+        d.len() >= 3,
+        "replans every 10 steps after the squeeze must fail repeatedly, got {}",
+        d.len()
+    );
+    assert_eq!(r.replan_failures, d.len(), "counter and report must agree");
+    // The ladder descends in order on consecutive failures.
+    assert_eq!(d.events[0].rung, DegradationRung::ReuseLastPlan, "{:?}", d.events[0]);
+    assert_eq!(d.events[1].rung, DegradationRung::HeuristicFloor, "{:?}", d.events[1]);
+    assert_eq!(d.worst(), Some(DegradationRung::SafeMode));
+    // Every event is attributed: a step inside the squeezed regime and
+    // a human-readable cause.
+    let mut prev = 0usize;
+    for e in &d.events {
+        assert!(e.step >= 80, "failure before the squeeze onset: {e:?}");
+        assert!(e.step >= prev, "events out of order: {e:?}");
+        assert!(!e.cause.is_empty(), "missing cause: {e:?}");
+        prev = e.step;
+    }
+    assert!(
+        d.summary().contains("safe-mode"),
+        "summary should name the worst rung: {}",
+        d.summary()
+    );
+    // Successful replans before the squeeze still counted as replans.
+    assert!(r.replans >= 1, "pre-squeeze interval replans should succeed");
+}
+
+/// The public `--watchdog` surface end to end, driven through the
+/// scenario *parser* (`ramp:` spec): a transient straggler trips the
+/// monitor shortly after onset, the triggers drive replans, and the
+/// whole run — triggers included — reproduces bit-identically.
+#[test]
+fn watchdog_triggers_are_reported_and_deterministic() {
+    let mut cfg = base_cfg();
+    cfg.scenario = Some(Scenario::parse("ramp:1x3@80-120").unwrap());
+    cfg.watchdog = Some(3.0);
+    let a = sim::run(&cfg).unwrap();
+    assert!(!a.watchdog_triggers.is_empty(), "the transient must trip the watchdog");
+    let first = a.watchdog_triggers[0];
+    assert!(
+        (80..130).contains(&first),
+        "first trigger {first} should closely follow the ramp onset at 80"
+    );
+    assert!(a.replans >= 1, "triggers must drive replans");
+    let b = sim::run(&cfg).unwrap();
+    assert_eq!(a.watchdog_triggers, b.watchdog_triggers);
+    assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+    assert_eq!(a.trajectory.len(), b.trajectory.len());
+    for (pa, pb) in a.trajectory.iter().zip(&b.trajectory) {
+        assert_eq!(pa.step_time.to_bits(), pb.step_time.to_bits());
+    }
+}
+
+/// An armed watchdog on an undisturbed run is free: no triggers, no
+/// replans, no degradation, and the result is bit-identical to the same
+/// run without the flag — the zero-dynamics acceptance bar. Runs with
+/// the preset's stationary 2% timing noise, which the two-timescale
+/// filter must absorb without firing at 3σ.
+#[test]
+fn calm_armed_watchdog_is_bit_identical_to_unarmed() {
+    let mut cfg = quick_paced(
+        "llama-1b",
+        FreezeMethod::TimelyFreeze,
+        ScheduleKind::OneFOneB,
+        160,
+        (12, 36, 60),
+    );
+    let unarmed = sim::run(&cfg).unwrap();
+    cfg.watchdog = Some(3.0);
+    let armed = sim::run(&cfg).unwrap();
+    assert!(armed.watchdog_triggers.is_empty(), "{:?}", armed.watchdog_triggers);
+    assert_eq!(armed.replans, 0);
+    assert!(armed.degradation.is_empty());
+    assert_eq!(armed.throughput.to_bits(), unarmed.throughput.to_bits());
+    assert_eq!(armed.batch_time_final.to_bits(), unarmed.batch_time_final.to_bits());
+    assert_eq!(armed.accuracy.to_bits(), unarmed.accuracy.to_bits());
+}
+
+/// The full robustness stack in one run: work-conserving dispatch,
+/// a composed ramp+burst window, and an armed watchdog. The run must
+/// complete deterministically with sane accounting.
+#[test]
+fn event_wc_with_dynamics_and_watchdog_completes_deterministically() {
+    let mut cfg = base_cfg();
+    cfg.exec = ExecMode::EventWc;
+    cfg.scenario = Some(Scenario::parse("ramp:1x2.5@80-120,burst:0.15@80-120").unwrap());
+    cfg.watchdog = Some(3.0);
+    let a = sim::run(&cfg).unwrap();
+    assert!(a.throughput.is_finite() && a.throughput > 0.0);
+    assert_eq!(a.progress, 1.0);
+    let b = sim::run(&cfg).unwrap();
+    assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+    assert_eq!(a.watchdog_triggers, b.watchdog_triggers);
+    assert_eq!(a.replans, b.replans);
+    // The WC executor must not be wildly off the in-order event path on
+    // the same disturbed world (bounded dispatch, same work).
+    let mut inorder = cfg.clone();
+    inorder.exec = ExecMode::Event;
+    let io = sim::run(&inorder).unwrap();
+    assert!(
+        a.throughput > io.throughput * 0.7 && a.throughput < io.throughput * 1.4,
+        "event-wc {} vs event {}",
+        a.throughput,
+        io.throughput
+    );
+}
+
+/// Squeeze terms are replan-time hooks: without a memory budget (or
+/// without the event path for ramp/burst) the config is rejected up
+/// front with a pointer at the missing flag, not silently ignored.
+#[test]
+fn robustness_gating_errors_are_actionable() {
+    let mut cfg = base_cfg();
+    cfg.scenario = Some(Scenario::calm().with_squeeze(0.5, 40));
+    match sim::run(&cfg) {
+        Err(sim::SimError::InvalidScenario(msg)) => {
+            assert!(msg.contains("--mem-budget"), "should name the flag: {msg}");
+        }
+        other => panic!("expected InvalidScenario, got {other:?}"),
+    }
+    let mut cfg = base_cfg();
+    cfg.exec = ExecMode::Analytic;
+    cfg.scenario = Some(Scenario::parse("ramp:1x2@40-80").unwrap());
+    match sim::run(&cfg) {
+        Err(sim::SimError::InvalidScenario(msg)) => {
+            assert!(msg.contains("event"), "should point at the event path: {msg}");
+        }
+        other => panic!("expected InvalidScenario, got {other:?}"),
+    }
+}

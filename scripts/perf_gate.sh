@@ -15,10 +15,12 @@
 # schedule-synthesis bench (synthesize/1f1b_8x16), the PR 8 sparse
 # revised-simplex benches (lp_sparse_vs_dense/1f1b_8x16,
 # lp_sparse_vs_dense/synth_16x64, lp_dense_oracle/1f1b_8x16,
-# lp_bound_flip/box_512), and the PR 9 network benches
-# (net_fair_share/burst_24x3links, contended_sim_run/llama1b_100steps)
-# land in the recorded trajectory immediately but stay outside the ±20%
-# gate until the baseline is re-armed with a file that contains them.
+# lp_bound_flip/box_512), the PR 9 network benches
+# (net_fair_share/burst_24x3links, contended_sim_run/llama1b_100steps),
+# and the PR 10 robustness benches (watchdog_overhead/llama1b,
+# degraded_replan/ladder_exhaust) land in the recorded trajectory
+# immediately but stay outside the ±20% gate until the baseline is
+# re-armed with a file that contains them.
 #
 # Env:
 #   TF_PERF_GATE_TOLERANCE   regression threshold, default 0.20
@@ -62,6 +64,9 @@ TF_BENCH_QUICK=1 cargo bench --bench fig18_contention
 
 echo "== fig19 elasticity (quick smoke: elastic recovery must beat restart) =="
 TF_BENCH_QUICK=1 cargo bench --bench fig19_elasticity
+
+echo "== fig20 watchdog (quick smoke: transient runs complete under every mode) =="
+TF_BENCH_QUICK=1 cargo bench --bench fig20_watchdog
 
 echo "== fig7–13 synth column (quick smoke: synthesized ≤ best fixed schedule) =="
 TF_BENCH_QUICK=1 cargo bench --bench fig7to13_schedules
